@@ -1,0 +1,46 @@
+//! §0.4 / Theorem 1 — the cost of delayed updates, measured.
+//!
+//! Builds the adversarial duplicate-τ stream (each instance shown τ
+//! times consecutively) and an IID stream of the same size, runs
+//! Algorithm 2 at several delays, and prints regret against the batch
+//! least-squares optimum. Adversarial regret grows ≈ √τ; IID regret
+//! pays only an additive burn-in.
+//!
+//! Run: `cargo run --release --example delay_regret`
+
+use pol::data::synth::{AdversarialDupGen, RcvLikeGen, SynthConfig};
+use pol::eval::regret::delayed_regret;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+
+fn main() {
+    let base = SynthConfig {
+        instances: 4_096,
+        features: 48,
+        density: 6,
+        hash_bits: 7,
+        noise: 0.0,
+        seed: 5,
+    };
+    let iid = RcvLikeGen::new(base.clone()).generate();
+    println!("{:>6} {:>14} {:>14} {:>14}", "tau", "adversarial", "adv/sqrt(tau)", "iid");
+    for tau in [1usize, 4, 16, 64] {
+        let adv = AdversarialDupGen::new(base.clone(), tau).generate();
+        let lr = LrSchedule::delayed_adversarial(1.0, 1.0, tau as f64);
+        let r_adv = delayed_regret(&adv, Loss::Squared, lr, tau);
+        let r_iid = delayed_regret(&iid, Loss::Squared, lr, tau);
+        println!(
+            "{:>6} {:>14.1} {:>14.1} {:>14.1}",
+            tau,
+            r_adv,
+            r_adv / (tau as f64).sqrt(),
+            r_iid
+        );
+    }
+    println!();
+    println!(
+        "Theorem 1: adversarial regret is O(sqrt(tau T)) — the normalized \
+         column stays roughly flat while raw regret grows; the IID column \
+         grows far slower (Theorem 2's additive-tau regime)."
+    );
+}

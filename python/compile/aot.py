@@ -1,0 +1,196 @@
+"""AOT: lower the L2 step functions to HLO *text* artifacts for rust.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects with
+`proto.id() <= INT_MAX`. The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Each artifact is a fixed-shape variant; `manifest.json` records the
+signature so the rust `runtime::Registry` can pick the right executable
+and validate buffer shapes at load time.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Idempotent: the Makefile only reruns this when python sources change.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def variants():
+    """(name, fn, example_args, signature) for every artifact.
+
+    Shapes chosen to match the rust runtime defaults (see
+    rust/src/runtime/registry.rs): hashed shard dims 1024/4096, online
+    sweep batch 64, CG minibatch 256 (paper uses 1024; scaled with the
+    datasets), master fan-in 8 (the paper's max shard count).
+    """
+    out = []
+
+    for loss in ("sq", "log"):
+        for d in (1024, 4096):
+            b = 64
+            name = f"shard_step_{loss}_{d}x{b}"
+            fn = lambda X, y, w, eta, loss=loss: model.shard_step(
+                X, y, w, eta, loss=loss
+            )
+            out.append(
+                (
+                    name,
+                    fn,
+                    (spec(b, d), spec(b), spec(d), spec()),
+                    {
+                        "op": "shard_step",
+                        "loss": loss,
+                        "d": d,
+                        "b": b,
+                        "inputs": ["X[b,d]", "y[b]", "w[d]", "eta[]"],
+                        "outputs": ["yhat[b]", "w_out[d]"],
+                    },
+                )
+            )
+
+    for loss in ("sq", "log"):
+        for d in (1024, 4096):
+            b = 256
+            name = f"cg_step_{loss}_{d}x{b}"
+            fn = lambda X, y, w, gp, dp, loss=loss: model.cg_step(
+                X, y, w, gp, dp, loss=loss
+            )
+            out.append(
+                (
+                    name,
+                    fn,
+                    (spec(b, d), spec(b), spec(d), spec(d), spec(d)),
+                    {
+                        "op": "cg_step",
+                        "loss": loss,
+                        "d": d,
+                        "b": b,
+                        "inputs": ["X[b,d]", "y[b]", "w[d]", "g_prev[d]",
+                                   "d_prev[d]"],
+                        "outputs": ["w_next[d]", "g[d]", "d[d]", "alpha[]",
+                                    "beta[]"],
+                    },
+                )
+            )
+
+    for k in (8,):
+        b = 64
+        for clip in (False, True):
+            name = f"master_step_{k}x{b}" + ("_clip" if clip else "")
+            fn = lambda P, y, v, eta, clip=clip: model.master_step(
+                P, y, v, eta, loss="sq", clip01=clip
+            )
+            out.append(
+                (
+                    name,
+                    fn,
+                    (spec(b, k), spec(b), spec(k + 1), spec()),
+                    {
+                        "op": "master_step",
+                        "loss": "sq",
+                        "k": k,
+                        "b": b,
+                        "clip01": clip,
+                        "inputs": ["P[b,k]", "y[b]", "v[k+1]", "eta[]"],
+                        "outputs": ["yhat[b]", "v_out[k+1]", "gsc[b]"],
+                    },
+                )
+            )
+
+    # fused two-layer sweep: the end-to-end Fig 0.4 step as one module
+    k, d, b = 8, 1024, 64
+    name = f"two_layer_{k}x{d}x{b}"
+    fn = lambda X, y, W, v, eta: model.two_layer_sweep(
+        X, y, W, v, eta, k=k, loss="sq", clip01=True
+    )
+    out.append(
+        (
+            name,
+            fn,
+            (spec(b, d), spec(b), spec(k, d // k), spec(k + 1), spec()),
+            {
+                "op": "two_layer",
+                "loss": "sq",
+                "k": k,
+                "d": d,
+                "b": b,
+                "inputs": ["X[b,d]", "y[b]", "W[k,d/k]", "v[k+1]", "eta[]"],
+                "outputs": ["yhat[b]", "W_out[k,d/k]", "v_out[k+1]",
+                            "P[b,k]"],
+            },
+        )
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example, sig in variants():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = sig
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # flat TSV for the rust Registry (no JSON parser needed on that side):
+    # name \t op \t loss \t d \t b \t k \t clip01
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for name in sorted(manifest):
+            sig = manifest[name]
+            f.write(
+                "\t".join(
+                    [
+                        name,
+                        sig["op"],
+                        sig.get("loss", "sq"),
+                        str(sig.get("d", 0)),
+                        str(sig.get("b", 0)),
+                        str(sig.get("k", 0)),
+                        "1" if sig.get("clip01") else "0",
+                    ]
+                )
+                + "\n"
+            )
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: master-node online sweep (Fig 0.2 / Fig 0.4 step (d)).
+
+The master treats the k subordinate predictions (optionally clipped to
+[0,1] — the Fig 0.5(b) calibration effect) plus one constant feature as
+its own feature vector and learns online, exactly like a leaf node but in
+k+1 dimensions. It also emits, per instance, the loss gradient w.r.t. its
+prediction — the feedback message sent back down the tree for the global
+update rules (§0.6).
+
+Same sequential-grid structure as shard_step: grid=(b,), master weights
+pinned in a VMEM-resident output block. VMEM: (k+1)*8 + b*8 bytes — tiny;
+this node is latency-, not compute-bound, matching the paper.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dloss(loss, yhat, y):
+    if loss == "sq":
+        return yhat - y
+    return -y / (1.0 + jnp.exp(y * yhat))
+
+
+def _kernel(p_ref, y_ref, eta_ref, v_in_ref, yhat_ref, gsc_ref, v_out_ref,
+            *, loss, clip01):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        v_out_ref[...] = v_in_ref[...]
+
+    p = p_ref[0, :]
+    if clip01:
+        p = jnp.clip(p, 0.0, 1.0)
+    # constant feature: v[-1]
+    v = v_out_ref[...]
+    yhat = jnp.dot(p, v[:-1]) + v[-1]
+    yhat_ref[0] = yhat
+    gsc = _dloss(loss, yhat, y_ref[0])
+    gsc_ref[0] = gsc
+    pc = jnp.concatenate([p, jnp.ones((1,), p.dtype)])
+    v_out_ref[...] = v - eta_ref[0] * gsc * pc
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "clip01"))
+def master_step(P, y, v, eta, loss="sq", clip01=False):
+    """Pallas master sweep. Returns (yhat[b], v_out[k+1], gsc[b]).
+
+    Matches ref.master_step (which returns (yhat, v_out, gsc))."""
+    b, k = P.shape
+    assert v.shape == (k + 1,)
+    eta_v = jnp.broadcast_to(jnp.asarray(eta, P.dtype), (1,))
+    yhat, gsc, v_out = pl.pallas_call(
+        functools.partial(_kernel, loss=loss, clip01=clip01),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda t: (t, 0)),
+            pl.BlockSpec((1,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+            pl.BlockSpec((k + 1,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (t,)),
+            pl.BlockSpec((k + 1,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), P.dtype),
+            jax.ShapeDtypeStruct((b,), P.dtype),
+            jax.ShapeDtypeStruct((k + 1,), P.dtype),
+        ],
+        interpret=True,
+    )(P, y, eta_v, v)
+    return yhat, v_out, gsc

@@ -1,0 +1,138 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float assoc.) reference
+here. pytest + hypothesis compare kernel output to these on swept shapes,
+dtypes, and data. The references are also what the L2 model (`model.py`)
+uses for pieces that need no kernel.
+
+Notation follows the paper (Algorithms 1/2, §0.6.5):
+  X : [b, d]  dense (hashed) minibatch of feature vectors
+  y : [b]     labels
+  w : [d]     node weight vector
+  eta         learning rate for this step
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- losses
+# dloss/dyhat and d2loss/dyhat2 for the losses the paper uses.
+
+
+def squared_dloss(yhat, y):
+    """ell(yhat, y) = 0.5 (yhat - y)^2  ->  ell' = yhat - y."""
+    return yhat - y
+
+
+def squared_d2loss(yhat, y):
+    return jnp.ones_like(yhat)
+
+
+def logistic_dloss(yhat, y):
+    """ell(yhat, y) = log(1 + exp(-y yhat)), y in {-1, +1}."""
+    return -y / (1.0 + jnp.exp(y * yhat))
+
+
+def logistic_d2loss(yhat, y):
+    s = 1.0 / (1.0 + jnp.exp(-y * yhat))
+    return s * (1.0 - s) * y * y
+
+
+_DLOSS = {"sq": squared_dloss, "log": logistic_dloss}
+_D2LOSS = {"sq": squared_d2loss, "log": logistic_d2loss}
+
+
+# ------------------------------------------------------------ shard step
+def shard_step(X, y, w, eta, loss="sq"):
+    """Sequential online GD sweep over a minibatch (Algorithm 1).
+
+    Processes the b rows *in order*, updating w after each row — this is
+    the semantics of the paper's online learner, so the kernel must
+    reproduce the sequential dependency, not a batched gradient.
+
+    Returns (yhat[b], w_out[d]): per-row predictions made *before* each
+    update (progressive validation convention, Blum et al. 1999), and the
+    final weights.
+    """
+    dloss = _DLOSS[loss]
+
+    def body(w, xy):
+        x, yt = xy
+        yhat = jnp.dot(x, w)
+        g = dloss(yhat, yt)
+        w = w - eta * g * x
+        return w, yhat
+
+    w_out, yhats = jax.lax.scan(body, w, (X, y))
+    return yhats, w_out
+
+
+def batch_grad(X, y, w, loss="sq"):
+    """Minibatch gradient at fixed w (§0.6.4):  g = sum_t ell'_t x_t."""
+    yhat = X @ w
+    return X.T @ _DLOSS[loss](yhat, y)
+
+
+def predict(X, w):
+    return X @ w
+
+
+# ---------------------------------------------------------------- CG step
+def cg_step_full(X, y, w, g_prev, d_prev, loss="sq", eps=1e-12):
+    """One minibatch nonlinear-CG step (§0.6.5), full state in/out.
+
+    g_t    = sum_tau dloss(w.x_tau, y_tau) x_tau          (minibatch grad)
+    beta_t = max(0, <g_t, g_t - g_{t-1}> / ||g_{t-1}||^2) (Polak-Ribiere)
+    d_t    = -g_t + beta_t d_{t-1}
+    alpha_t = -<g_t, d_t> / <d_t, H_t d_t>,
+      <d_t, H_t d_t> = sum_tau ell''_tau <d_t, x_tau>^2   (paper's trick)
+    w_{t+1} = w_t + alpha_t d_t
+
+    Returns (w_next, g_t, d_t, alpha_t, beta_t).
+    First call: pass g_prev = 0, d_prev = 0 -> beta = 0 (plain GD step).
+    """
+    yhat = X @ w
+    g = X.T @ _DLOSS[loss](yhat, y)
+    gp_sq = jnp.dot(g_prev, g_prev)
+    beta = jnp.where(
+        gp_sq > eps,
+        jnp.maximum(0.0, jnp.dot(g, g - g_prev) / (gp_sq + eps)),
+        0.0,
+    )
+    d = -g + beta * d_prev
+    ell2 = _D2LOSS[loss](yhat, y)
+    dHd = jnp.sum(ell2 * (X @ d) ** 2)
+    # step-size safeguard, identical to the rust implementations
+    alpha = jnp.where(dHd > eps, -jnp.dot(g, d) / (dHd + eps), 0.0)
+    alpha = jnp.clip(alpha, -50.0, 50.0)
+    w_next = w + alpha * d
+    return w_next, g, d, alpha, beta
+
+
+# ------------------------------------------------------------ master step
+def master_step(P, y, v, eta, loss="sq", clip01=False):
+    """Master node (Fig 0.2/0.4): treat k subordinate predictions as
+    features (plus a constant feature, index k) and learn online.
+
+    P : [b, k] subordinate predictions; optionally thresholded to [0,1]
+        before use (the Fig 0.5(b) calibration effect).
+    v : [k+1]  master weights (last = bias/constant feature).
+    Returns (yhat[b], v_out, grads[b]) where grads[b] is dloss/dyhat per
+    row — the feedback the master sends back down (§0.6.3).
+    """
+    if clip01:
+        P = jnp.clip(P, 0.0, 1.0)
+    dloss = _DLOSS[loss]
+    ones = jnp.ones((P.shape[0], 1), P.dtype)
+    Pc = jnp.concatenate([P, ones], axis=1)
+
+    def body(v, py):
+        p, yt = py
+        yhat = jnp.dot(p, v)
+        gsc = dloss(yhat, yt)
+        v = v - eta * gsc * p
+        return v, (yhat, gsc)
+
+    v_out, (yhats, gscs) = jax.lax.scan(body, v, (Pc, y))
+    return yhats, v_out, gscs

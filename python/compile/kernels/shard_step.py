@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: sequential online-GD sweep over a minibatch.
+
+This is the per-node hot spot of the paper's feature-shard architecture
+(§0.5.2, Fig 0.4 step (c)): a node holds a (hashed) weight vector for its
+feature shard and, for each arriving instance, predicts then updates
+(Algorithm 1). The sequential cross-instance dependency is essential —
+progressive validation (Blum et al. 1999) requires each prediction to be
+made with the weights *before* that instance's update — so the kernel
+cannot be a batched gradient.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper keeps each
+feature shard's weights resident in a core's cache; here the shard weights
+live in VMEM for the whole sweep. The Pallas grid iterates over instances
+(grid iterations are sequential on TPU, so VMEM state carries across
+steps), the weight block is the full shard (BlockSpec index_map pinned to
+block 0 so it stays resident), and each step is a [1,d]x[d] contraction
+that feeds the MXU/VPU. VMEM footprint per step = d*(4+4) B (w + x row)
++ b*4 B (yhat) — e.g. d=4096: ~33 KB, far under the ~16 MB budget.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU perf is estimated structurally in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dloss(loss, yhat, y):
+    if loss == "sq":
+        return yhat - y
+    # logistic, y in {-1,+1}
+    return -y / (1.0 + jnp.exp(y * yhat))
+
+
+def _kernel(x_ref, y_ref, eta_ref, w_in_ref, yhat_ref, w_out_ref, *, loss):
+    """One grid step = one instance.
+
+    x_ref     : [1, d]  this instance's dense (hashed) features
+    y_ref     : [1]     label
+    eta_ref   : [1]     learning rate for this sweep
+    w_in_ref  : [d]     initial shard weights (read once, at t = 0)
+    yhat_ref  : [1]     progressive-validation prediction (pre-update)
+    w_out_ref : [d]     shard weights — pinned output block, resident in
+                        VMEM across the (sequential) grid, carries state
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        w_out_ref[...] = w_in_ref[...]
+
+    x = x_ref[0, :]
+    w = w_out_ref[...]
+    yhat = jnp.dot(x, w)
+    yhat_ref[0] = yhat
+    g = _dloss(loss, yhat, y_ref[0])
+    w_out_ref[...] = w - eta_ref[0] * g * x
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def shard_step(X, y, w, eta, loss="sq"):
+    """Pallas sweep. Returns (yhat[b], w_out[d]). Matches ref.shard_step."""
+    b, d = X.shape
+    eta_v = jnp.broadcast_to(jnp.asarray(eta, X.dtype), (1,))
+    grid = (b,)
+    yhat, w_out = pl.pallas_call(
+        functools.partial(_kernel, loss=loss),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t: (t, 0)),   # row t of X
+            pl.BlockSpec((1,), lambda t: (t,)),        # y_t
+            pl.BlockSpec((1,), lambda t: (0,)),        # eta (pinned)
+            pl.BlockSpec((d,), lambda t: (0,)),        # w (pinned, resident)
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda t: (t,)),        # yhat_t
+            pl.BlockSpec((d,), lambda t: (0,)),        # w (pinned, carries)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), X.dtype),
+            jax.ShapeDtypeStruct((d,), X.dtype),
+        ],
+        interpret=True,
+    )(X, y, eta_v, w)
+    return yhat, w_out

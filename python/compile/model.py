@@ -1,0 +1,77 @@
+"""L2: the paper's model — a feature-sharded linear architecture (Fig 0.4).
+
+This module composes the L1 kernels into the jittable step functions that
+`aot.py` lowers to HLO artifacts for the rust runtime:
+
+  * shard_step    — per-node online GD sweep over a dense hashed minibatch
+                    (Fig 0.4 step (c); kernels/shard_step.py)
+  * master_step   — master combine/calibrate sweep (step (d);
+                    kernels/master_step.py)
+  * cg_step       — minibatch nonlinear-CG update (§0.6.5;
+                    kernels/cg_step.py)
+  * two_layer_sweep — full architecture sweep: k shards then master; used
+                    by python tests and lowered as a fused artifact
+
+Python is build-time only. The rust coordinator (L3) loads the lowered
+HLO and drives these steps from its event loop; it never imports this.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cg_step import cg_step_full as _cg_step
+from .kernels.master_step import master_step as _master_step
+from .kernels.shard_step import shard_step as _shard_step
+
+# Re-export the kernel entry points under their model-level names.
+shard_step = _shard_step
+master_step = _master_step
+cg_step = _cg_step
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "clip01", "k"))
+def two_layer_sweep(X, y, W, v, eta, *, k, loss="sq", clip01=True):
+    """One synchronous sweep of the full two-layer architecture (Fig 0.4).
+
+    X   : [b, d]   dense hashed minibatch (full feature vector)
+    y   : [b]      labels
+    W   : [k, ds]  per-shard weights, ds = d // k (feature shards are
+                   contiguous slices here; the rust coordinator uses
+                   hash-partitioning — equivalent up to permutation)
+    v   : [k+1]    master weights (+ constant feature)
+    eta : scalar   learning rate (shared; rust varies it per node)
+
+    Returns (yhat_master[b], W_out, v_out, P[b,k]).
+
+    Local-rule semantics (§0.5.2): every shard sweeps independently with
+    its own progressive predictions; the master then sweeps over the
+    matrix of shard predictions. This is exactly the paper's no-delay
+    local training, where the master sees each prediction *before* the
+    shard's update for that instance is visible to anyone else — shard t
+    processed instance i before the master does, but the master only
+    consumes p_i which was computed pre-update, preserving progressive
+    validation semantics at both layers.
+    """
+    b, d = X.shape
+    ds = d // k
+    assert W.shape == (k, ds) and v.shape == (k + 1,)
+
+    def one_shard(w_s, X_s):
+        yhat, w_out = _shard_step(X_s, y, w_s, eta, loss=loss)
+        return yhat, w_out
+
+    # vmap over shards would break pallas sequential-grid semantics in
+    # interpret mode; a python loop over the static k unrolls cleanly and
+    # XLA fuses the k independent sweeps.
+    preds = []
+    W_out = []
+    for s in range(k):
+        X_s = jax.lax.dynamic_slice_in_dim(X, s * ds, ds, axis=1)
+        p_s, w_s = one_shard(W[s], X_s)
+        preds.append(p_s)
+        W_out.append(w_s)
+    P = jnp.stack(preds, axis=1)                      # [b, k]
+    yhat, v_out, _gsc = _master_step(P, y, v, eta, loss=loss, clip01=clip01)
+    return yhat, jnp.stack(W_out, axis=0), v_out, P

@@ -1,0 +1,177 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes, dtypes-compatible magnitudes, losses, and data;
+every Pallas kernel must match the pure-jnp oracle in ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cg_step import cg_step_full
+from compile.kernels.master_step import master_step
+from compile.kernels.shard_step import shard_step
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _data(seed, b, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(b, d)) * scale, jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=(b,))), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d,)) * 0.01, jnp.float32)
+    return X, y, w
+
+
+# --------------------------------------------------------------- shard_step
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 24),
+    d=st.integers(1, 48),
+    loss=st.sampled_from(["sq", "log"]),
+    eta=st.floats(1e-4, 0.5),
+)
+def test_shard_step_matches_ref(seed, b, d, loss, eta):
+    X, y, w = _data(seed, b, d)
+    yh_k, w_k = shard_step(X, y, w, eta, loss=loss)
+    yh_r, w_r = ref.shard_step(X, y, w, eta, loss=loss)
+    np.testing.assert_allclose(yh_k, yh_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(w_k, w_r, atol=1e-4, rtol=1e-4)
+
+
+def test_shard_step_sequential_not_batched():
+    """The kernel must be a *sequential* sweep: on duplicated instances the
+    second prediction must differ from the first (batched gradients would
+    predict identically). This is the Algorithm-1 semantics the paper's
+    delay analysis (§0.4) is about."""
+    X = jnp.ones((2, 4), jnp.float32)
+    y = jnp.ones((2,), jnp.float32)
+    w = jnp.zeros((4,), jnp.float32)
+    yh, _ = shard_step(X, y, w, 0.1)
+    assert float(yh[0]) == 0.0
+    assert float(yh[1]) != 0.0  # saw the first update
+
+
+def test_shard_step_zero_eta_identity():
+    X, y, w = _data(7, 8, 16)
+    _, w_out = shard_step(X, y, w, 0.0)
+    np.testing.assert_allclose(w_out, w, atol=0)
+
+
+@given(seed=st.integers(0, 1000))
+def test_shard_step_progressive_prediction_is_preupdate(seed):
+    """yhat[t] must equal <w_t, x_t> with w_t from the first t-1 rows."""
+    X, y, w = _data(seed, 6, 8)
+    yh, _ = shard_step(X, y, w, 0.05)
+    wt = np.asarray(w, np.float64).copy()
+    for t in range(6):
+        expect = float(np.dot(np.asarray(X[t], np.float64), wt))
+        assert abs(float(yh[t]) - expect) < 1e-3
+        wt -= 0.05 * (expect - float(y[t])) * np.asarray(X[t], np.float64)
+
+
+# ------------------------------------------------------------------ cg_step
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 24),
+    d=st.integers(1, 48),
+    loss=st.sampled_from(["sq", "log"]),
+)
+def test_cg_step_matches_ref_first_step(seed, b, d, loss):
+    X, y, w = _data(seed, b, d)
+    z = jnp.zeros_like(w)
+    out_k = cg_step_full(X, y, w, z, z, loss=loss)
+    out_r = ref.cg_step_full(X, y, w, z, z, loss=loss)
+    for a, b_ in zip(out_k, out_r):
+        np.testing.assert_allclose(a, b_, atol=2e-3, rtol=2e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1), loss=st.sampled_from(["sq", "log"]))
+def test_cg_step_matches_ref_chained(seed, loss):
+    X, y, w = _data(seed, 16, 32)
+    z = jnp.zeros_like(w)
+    wk, gk, dk, _, _ = cg_step_full(X, y, w, z, z, loss=loss)
+    wr, gr, dr, _, _ = ref.cg_step_full(X, y, w, z, z, loss=loss)
+    out_k = cg_step_full(X, y, wk, gk, dk, loss=loss)
+    out_r = ref.cg_step_full(X, y, wr, gr, dr, loss=loss)
+    for a, b_ in zip(out_k, out_r):
+        np.testing.assert_allclose(a, b_, atol=5e-3, rtol=5e-3)
+
+
+def test_cg_first_step_is_gradient_descent():
+    """With g_prev = d_prev = 0, beta must be 0 and d = -g (§0.6.5: 'beta_t
+    = 0 effectively reverts back to gradient descent')."""
+    X, y, w = _data(3, 8, 16)
+    z = jnp.zeros_like(w)
+    _, g, d, _, beta = cg_step_full(X, y, w, z, z)
+    assert float(beta) == 0.0
+    np.testing.assert_allclose(d, -g, atol=1e-6)
+
+
+def test_cg_beta_nonnegative():
+    """PR+ clamp: beta >= 0 always (Gilbert & Nocedal 1992)."""
+    for seed in range(20):
+        X, y, w = _data(seed, 12, 8)
+        z = jnp.zeros_like(w)
+        wn, g, d, _, _ = cg_step_full(X, y, w, z, z)
+        _, _, _, _, beta = cg_step_full(X, y, wn, g, d)
+        assert float(beta) >= 0.0
+
+
+def test_cg_exact_on_quadratic_converges():
+    """On a well-conditioned least-squares problem, full-batch CG must
+    reduce loss monotonically-ish and reach near-zero gradient in <= 3d
+    steps (nonlinear CG on a quadratic = linear CG)."""
+    rng = np.random.default_rng(0)
+    d = 8
+    X = jnp.asarray(rng.normal(size=(64, d)), jnp.float32)
+    w_star = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y = X @ w_star
+    w = jnp.zeros((d,), jnp.float32)
+    g = jnp.zeros_like(w)
+    dd = jnp.zeros_like(w)
+    for _ in range(3 * d):
+        w, g, dd, _, _ = cg_step_full(X, y, w, g, dd)
+    assert float(jnp.mean((X @ w - y) ** 2)) < 1e-3
+
+
+# -------------------------------------------------------------- master_step
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 24),
+    k=st.integers(1, 9),
+    clip=st.booleans(),
+    loss=st.sampled_from(["sq", "log"]),
+)
+def test_master_step_matches_ref(seed, b, k, clip, loss):
+    rng = np.random.default_rng(seed)
+    P = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=(b,))), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(k + 1,)) * 0.01, jnp.float32)
+    out_k = master_step(P, y, v, 0.1, loss=loss, clip01=clip)
+    out_r = ref.master_step(P, y, v, 0.1, loss=loss, clip01=clip)
+    for a, b_ in zip(out_k, out_r):
+        np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4)
+
+
+def test_master_clip_calibration_effect():
+    """Fig 0.5(b): with predictions thresholded to [0,1] and a constant
+    feature, the master's calibration improves squared loss over raw
+    out-of-range subordinate predictions."""
+    rng = np.random.default_rng(42)
+    b = 512
+    # subordinate predictions: right sign but badly scaled/offset
+    y = jnp.asarray(rng.integers(0, 2, size=(b,)), jnp.float32)
+    # in-range but compressed around 0.5: clipping alone cannot fix this,
+    # the master's affine calibration (scale + constant feature) must.
+    P = 0.5 + (np.asarray(y)[:, None] - 0.5) * 0.2 + rng.normal(size=(b, 1)) * 0.02
+    P = jnp.asarray(P, jnp.float32)
+    v = jnp.zeros((2,), jnp.float32)
+    yh, _, _ = master_step(P, y, v, 0.2, clip01=True)
+    raw_loss = float(jnp.mean((jnp.clip(P[:, 0], 0, 1) - y) ** 2))
+    # progressive loss of the calibrating master over the 2nd half:
+    cal_loss = float(jnp.mean((yh[b // 2:] - y[b // 2:]) ** 2))
+    assert cal_loss < raw_loss

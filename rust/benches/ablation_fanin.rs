@@ -1,0 +1,83 @@
+//! Ablation — fan-in vs depth (§0.5.2): "each internal node may incur
+//! delay proportional to its fan-in, so reducing fan-in is desirable;
+//! however, this comes at the cost of increased depth and thus
+//! prediction latency. Therefore, in practice the actual architecture
+//! that is deployed may be somewhere in between the binary tree and the
+//! two-layer scheme."
+//!
+//! For 16 leaves we sweep fan-in ∈ {2, 4, 8, 16}: per-node aggregation
+//! delay (∝ fan-in), tree depth (hops of network latency), the combined
+//! per-instance prediction latency under the gigabit link model, and
+//! the learned accuracy of the local rule at each topology.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::net::LinkSpec;
+use pol::topology::Topology;
+
+fn main() {
+    let leaves = 16usize;
+    let link = LinkSpec::gigabit();
+    // per-message cost on a link + per-child aggregation work
+    let hop = link.latency_s + link.per_packet_s;
+    let per_child_s = 2e-6;
+
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: 6_000 * common::scale(),
+        features: 4_000,
+        density: 40,
+        hash_bits: 15,
+        ..Default::default()
+    })
+    .generate();
+
+    common::header("ablation — fan-in vs depth (16 leaves)");
+    println!(
+        "{:>7} {:>6} {:>7} {:>12} {:>10} {:>10}",
+        "fan-in", "depth", "nodes", "latency-us", "prog-acc", "test-acc"
+    );
+    for fanin in [2usize, 4, 8, 16] {
+        let topo = Topology::KAry { leaves, fanin };
+        let graph = topo.build();
+        // prediction latency: depth hops, each hop = wire + aggregation
+        // proportional to the fan-in at that level
+        let latency = graph.height() as f64 * hop
+            + graph.height() as f64 * per_child_s * fanin as f64;
+        let cfg = RunConfig {
+            topology: topo,
+            rule: UpdateRule::Local,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 10.0),
+            clip01: false,
+            tau: 0,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg.clone(), ds.dim);
+        let (train, test) = ds.clone().split_test(0.2);
+        let rep = c.train(&train);
+        let (_, acc) = pol::metrics::test_metrics(
+            cfg.loss,
+            |x| c.predict(x),
+            &test.instances,
+        );
+        println!(
+            "{:>7} {:>6} {:>7} {:>12.1} {:>10.4} {:>10.4}",
+            fanin,
+            graph.height(),
+            graph.num_nodes(),
+            latency * 1e6,
+            rep.progressive.accuracy(),
+            acc
+        );
+    }
+    println!(
+        "(paper: low fan-in -> low per-node delay but more hops; the \
+         deployed point sits between binary tree and two-layer)"
+    );
+}

@@ -1,0 +1,64 @@
+//! Shared helpers for the bench harnesses (no criterion in this
+//! environment; each bench is a standalone binary printing the paper's
+//! table/figure as text rows, plus wall-clock timings where meaningful).
+
+#![allow(dead_code)]
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::topology::Topology;
+
+/// Benches honour POL_BENCH_SCALE (default 1): instance counts multiply
+/// by it, so `POL_BENCH_SCALE=10 cargo bench` runs closer to paper scale.
+pub fn scale() -> usize {
+    std::env::var("POL_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+pub fn header(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Train a tree rule and report (test accuracy, progressive loss).
+/// Searches a small lr grid per the paper's §0.7 methodology.
+pub fn eval_rule(
+    ds: &Dataset,
+    rule: UpdateRule,
+    workers: usize,
+    passes: usize,
+    tau: u64,
+) -> (f64, f64) {
+    let mut best = (0.0f64, f64::INFINITY);
+    for lambda in [0.25, 2.0, 8.0] {
+        let cfg = RunConfig {
+            topology: Topology::TwoLayer { shards: workers },
+            rule,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(lambda, 10.0),
+            master_lr: None,
+            tau,
+            clip01: false,
+            bias: true,
+            passes,
+            seed: 1,
+        };
+        let mut c = Coordinator::new(cfg.clone(), ds.dim);
+        let (train, test) = ds.clone().split_test(0.2);
+        c.train(&train);
+        let (loss, acc) = pol::metrics::test_metrics(
+            cfg.loss,
+            |x| c.predict(x),
+            &test.instances,
+        );
+        if acc > best.0 {
+            best = (acc, loss);
+        }
+    }
+    best
+}

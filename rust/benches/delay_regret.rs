@@ -1,0 +1,51 @@
+//! Theorem 1 — regret growth under delay.
+//!
+//! Adversarial duplicate-τ streams: Reg(τ) should grow ≈ √τ (the paper's
+//! O(√(τT)) bound is tight on this construction). IID streams: delay
+//! costs only an additive burn-in (Theorem 2 / the "slow learners are
+//! fast" regime).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::data::synth::{AdversarialDupGen, RcvLikeGen, SynthConfig};
+use pol::eval::regret::delayed_regret;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+
+fn main() {
+    let n = 8_192 * common::scale();
+    let base = SynthConfig {
+        instances: n,
+        features: 48,
+        density: 6,
+        hash_bits: 7,
+        noise: 0.0,
+        seed: 5,
+    };
+    common::header("Theorem 1 — regret vs delay τ");
+    println!(
+        "{:>6} {:>14} {:>12} {:>14} {:>12}",
+        "tau", "adv-regret", "adv/sqrt(τ)", "iid-regret", "iid-τ/T"
+    );
+    let iid = RcvLikeGen::new(base.clone()).generate();
+    for tau in [1usize, 4, 16, 64, 256] {
+        let adv = AdversarialDupGen::new(base.clone(), tau).generate();
+        // Theorem-1 rate for each τ
+        let lr = LrSchedule::delayed_adversarial(1.0, 1.0, tau as f64);
+        let r_adv = delayed_regret(&adv, Loss::Squared, lr, tau);
+        let r_iid = delayed_regret(&iid, Loss::Squared, lr, tau);
+        println!(
+            "{:>6} {:>14.1} {:>12.1} {:>14.1} {:>12.4}",
+            tau,
+            r_adv,
+            r_adv / (tau as f64).sqrt(),
+            r_iid,
+            tau as f64 / n as f64,
+        );
+    }
+    println!(
+        "(paper shape: adv-regret grows ~sqrt(tau) — the normalized column \
+         should be roughly flat; iid-regret grows much slower than adv)"
+    );
+}

@@ -1,0 +1,50 @@
+//! Figure 0.6, rows 3–4 — test accuracy vs number of passes (1..16) at
+//! 1 worker and at 16 workers, same rule set.
+//!
+//! Paper shape: performance improves with passes; the worker-count gap
+//! narrows with more passes; global-only methods are worker-invariant.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::config::UpdateRule;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+
+fn main() {
+    let n = 4_000 * common::scale();
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: n,
+        features: 4_000,
+        density: 40,
+        hash_bits: 15,
+        ..Default::default()
+    })
+    .generate();
+    let rules: [(&str, UpdateRule); 6] = [
+        ("local", UpdateRule::Local),
+        ("backprop", UpdateRule::Backprop { multiplier: 1.0 }),
+        ("backprop-x8", UpdateRule::Backprop { multiplier: 8.0 }),
+        ("minibatch-1k", UpdateRule::Minibatch { batch: 1024 }),
+        ("cg-1k", UpdateRule::Cg { batch: 1024 }),
+        ("sgd", UpdateRule::Sgd),
+    ];
+    for workers in [1usize, 16] {
+        common::header(&format!(
+            "Figure 0.6 — test accuracy vs passes (rcv-like, {workers} workers)"
+        ));
+        print!("{:<14}", "rule");
+        for p in [1usize, 2, 4, 8, 16] {
+            print!(" {:>8}", format!("p={p}"));
+        }
+        println!();
+        for (rname, rule) in rules {
+            print!("{rname:<14}");
+            for p in [1usize, 2, 4, 8, 16] {
+                let w = if rule.worker_invariant() { 1 } else { workers };
+                let (acc, _) = common::eval_rule(&ds, rule, w, p, 256);
+                print!(" {acc:>8.4}");
+            }
+            println!();
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Figure 0.6, rows 1–2 — test accuracy vs number of workers (1..16)
+//! for Local / Backprop / Backprop x8 / Minibatch / CG / SGD on the
+//! RCV1-like and Webspam-like tasks, at 1 pass and at 16 passes.
+//!
+//! Paper shape: local & global tree rules degrade with workers (milder
+//! for backprop, mildest with multiple passes); SGD/Minibatch/CG are
+//! worker-invariant; SGD >= CG >= Minibatch.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::config::UpdateRule;
+use pol::data::synth::{RcvLikeGen, SynthConfig, WebspamLikeGen};
+
+fn main() {
+    let n = 5_000 * common::scale();
+    let datasets = [
+        (
+            "rcv-like",
+            RcvLikeGen::new(SynthConfig {
+                instances: n,
+                features: 4_000,
+                density: 40,
+                hash_bits: 15,
+                ..Default::default()
+            })
+            .generate(),
+        ),
+        (
+            "webspam-like",
+            WebspamLikeGen::new(SynthConfig {
+                instances: n,
+                features: 6_000,
+                density: 60,
+                hash_bits: 15,
+                ..Default::default()
+            })
+            .generate(),
+        ),
+    ];
+    let rules: [(&str, UpdateRule); 6] = [
+        ("local", UpdateRule::Local),
+        ("backprop", UpdateRule::Backprop { multiplier: 1.0 }),
+        ("backprop-x8", UpdateRule::Backprop { multiplier: 8.0 }),
+        ("minibatch-1k", UpdateRule::Minibatch { batch: 1024 }),
+        ("cg-1k", UpdateRule::Cg { batch: 1024 }),
+        ("sgd", UpdateRule::Sgd),
+    ];
+    for (dname, ds) in &datasets {
+        for passes in [1usize, 16] {
+            common::header(&format!(
+                "Figure 0.6 — test accuracy vs workers ({dname}, {passes} pass)"
+            ));
+            print!("{:<14}", "rule");
+            for w in [1usize, 2, 4, 8, 16] {
+                print!(" {:>8}", format!("w={w}"));
+            }
+            println!();
+            for (rname, rule) in rules {
+                print!("{rname:<14}");
+                let mut cached = None;
+                for w in [1usize, 2, 4, 8, 16] {
+                    // global-only rules: identical math at any worker
+                    // count — compute once and repeat the value
+                    let acc = if rule.worker_invariant() {
+                        *cached.get_or_insert_with(|| {
+                            common::eval_rule(ds, rule, 1, passes, 256).0
+                        })
+                    } else {
+                        common::eval_rule(ds, rule, w, passes, 256).0
+                    };
+                    print!(" {acc:>8.4}");
+                }
+                println!();
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Micro-benchmarks of the L3 hot paths (the perf-pass §Perf targets):
+//! sparse dot / saxpy, feature split, schedule iteration, lazy-CG step,
+//! and the coordinator per-instance cost.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::linalg::{sparse_dot, sparse_saxpy};
+use pol::rng::Rng;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<34} {:>12.1} ns/iter", per * 1e9);
+}
+
+fn main() {
+    common::header("hot paths (ns/iter)");
+    let mut rng = Rng::new(1);
+    let dim = 1 << 18;
+    let mut w = vec![0.0f32; dim];
+    let x: Vec<(u32, f32)> = (0..100)
+        .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+        .collect();
+
+    bench("sparse_dot (nnz=100, dim=2^18)", 2_000_000, || {
+        std::hint::black_box(sparse_dot(&w, std::hint::black_box(&x)));
+    });
+    bench("sparse_saxpy (nnz=100)", 2_000_000, || {
+        sparse_saxpy(&mut w, 1e-9, std::hint::black_box(&x));
+    });
+
+    let sharder = pol::sharding::feature::FeatureSharder::hash(8);
+    let inst = pol::data::instance::Instance::new(1.0, x.clone());
+    let mut bufs: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 8];
+    bench("feature split_into (nnz=100, k=8)", 1_000_000, || {
+        sharder.split_into(std::hint::black_box(&inst), &mut bufs);
+    });
+
+    let sched = pol::coordinator::schedule::DelaySchedule::new(1024);
+    bench("schedule 10k ops", 10_000, || {
+        let mut n = 0u64;
+        for op in sched.ops(5_000) {
+            n += matches!(op, pol::coordinator::schedule::Op::Local(_)) as u64;
+        }
+        std::hint::black_box(n);
+    });
+
+    // lazy CG step vs dense CG step at dim 2^18, batch 64, nnz 20
+    use pol::coordinator::cg::{DenseCg, LazyCg};
+    use pol::loss::Loss;
+    let batch: Vec<(Vec<(u32, f32)>, f64)> = (0..64)
+        .map(|_| {
+            let xx: Vec<(u32, f32)> = (0..20)
+                .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+                .collect();
+            (xx, 1.0)
+        })
+        .collect();
+    let refs: Vec<(&[(u32, f32)], f64)> =
+        batch.iter().map(|(x, y)| (x.as_slice(), *y)).collect();
+    let mut lazy = LazyCg::new(dim, Loss::Squared);
+    bench("lazy CG step (b=64, dim=2^18)", 3_000, || {
+        lazy.step(std::hint::black_box(&refs));
+    });
+    let mut dense = DenseCg::new(dim, Loss::Squared);
+    bench("dense CG step (b=64, dim=2^18)", 100, || {
+        dense.step(std::hint::black_box(&refs));
+    });
+
+    // end-to-end coordinator per-instance cost
+    use pol::config::{RunConfig, UpdateRule};
+    use pol::coordinator::Coordinator;
+    let ds = pol::data::synth::RcvLikeGen::new(pol::data::synth::SynthConfig {
+        instances: 5_000,
+        features: 4_000,
+        density: 40,
+        hash_bits: 15,
+        ..Default::default()
+    })
+    .generate();
+    for rule in [
+        UpdateRule::Local,
+        UpdateRule::Backprop { multiplier: 1.0 },
+    ] {
+        let cfg = RunConfig {
+            rule,
+            loss: Loss::Logistic,
+            clip01: false,
+            tau: 256,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        let t = std::time::Instant::now();
+        let rep = c.train(&ds);
+        println!(
+            "coordinator {:<22} {:>12.1} ns/instance",
+            format!("({})", rule.name()),
+            t.elapsed().as_secs_f64() / rep.instances as f64 * 1e9
+        );
+    }
+}

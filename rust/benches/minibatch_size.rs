@@ -1,0 +1,70 @@
+//! §0.6.4 — "for simple gradient descent, the optimal minibatch size is
+//! b = 1": progressive loss and test accuracy across batch sizes, plus
+//! the same sweep for minibatch CG (where larger batches are usable).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+
+fn main() {
+    let n = 16_000 * common::scale();
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: n,
+        features: 4_000,
+        density: 40,
+        hash_bits: 15,
+        ..Default::default()
+    })
+    .generate();
+    common::header("§0.6.4 — minibatch size sweep (plain GD vs CG)");
+    println!(
+        "{:>7} {:>12} {:>12} {:>12} {:>12}",
+        "batch", "gd-loss", "gd-acc", "cg-loss", "cg-acc"
+    );
+    for batch in [1usize, 4, 16, 64, 256, 1024] {
+        let mut best_gd = (f64::INFINITY, 0.0);
+        for lambda in [0.5, 2.0, 8.0] {
+            let cfg = RunConfig {
+                rule: UpdateRule::Minibatch { batch },
+                loss: Loss::Logistic,
+                lr: LrSchedule::inv_sqrt(lambda, 10.0),
+                clip01: false,
+                ..Default::default()
+            };
+            let rep = pol::coordinator::minibatch::train(&cfg, &ds, batch);
+            if rep.progressive.mean_loss() < best_gd.0 {
+                best_gd = (rep.progressive.mean_loss(), rep.progressive.accuracy());
+            }
+        }
+        let cfg = RunConfig {
+            rule: UpdateRule::Cg { batch },
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(1.0, 1.0),
+            clip01: false,
+            ..Default::default()
+        };
+        let rep_cg = pol::coordinator::cg::train(&cfg, &ds, batch);
+        let cg_loss = rep_cg.progressive.mean_loss();
+        println!(
+            "{:>7} {:>12.5} {:>12.4} {:>12} {:>12.4}",
+            batch,
+            best_gd.0,
+            best_gd.1,
+            if cg_loss > 10.0 {
+                "diverged".to_string()
+            } else {
+                format!("{cg_loss:.5}")
+            },
+            rep_cg.progressive.accuracy(),
+        );
+    }
+    println!(
+        "(paper: GD monotonically worse with b — SGD b=1 dominates; CG is \
+         only sensible at large b, matching the paper's choice of 1024 and \
+         its remark that small batches cannot be parallelized efficiently)"
+    );
+}

@@ -1,0 +1,46 @@
+//! Table 0.1 — "Description of data sets in global experiments":
+//!   RCV1   780K × 23K      Webspam  300K × 50K
+//! Regenerates the table from the synthetic stand-ins (DESIGN.md §3),
+//! scaled by POL_BENCH_SCALE (1/20 of paper scale by default).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::data::synth::{RcvLikeGen, SynthConfig, WebspamLikeGen};
+
+fn main() {
+    common::header("Table 0.1 — dataset description (synthetic stand-ins)");
+    let scale = common::scale();
+    let rows = [
+        ("RCV1-like", 780_000 / 20 * scale, 23_000),
+        ("Webspam-like", 300_000 / 20 * scale, 50_000),
+    ];
+    println!(
+        "{:<14} {:>10} {:>9} {:>13} {:>9} {:>9}",
+        "dataset", "instances", "features", "nnz-total", "nnz/inst", "gen-s"
+    );
+    for (name, n, vocab) in rows {
+        let cfg = SynthConfig {
+            instances: n,
+            features: vocab,
+            density: if vocab > 30_000 { 150 } else { 75 },
+            ..Default::default()
+        };
+        let t = std::time::Instant::now();
+        let ds = if name.starts_with("RCV") {
+            RcvLikeGen::new(cfg).generate()
+        } else {
+            WebspamLikeGen::new(cfg).generate()
+        };
+        println!(
+            "{:<14} {:>10} {:>9} {:>13} {:>9.1} {:>9.2}",
+            name,
+            ds.len(),
+            vocab,
+            ds.total_features(),
+            ds.mean_features(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+    println!("(paper shapes: RCV1 780K x 23K, Webspam 300K x 50K)");
+}

@@ -1,0 +1,92 @@
+//! §0.2 — streaming throughput: parse + learn features/second, and the
+//! binary cache speedup over re-parsing text (the VW design points the
+//! paper credits: cache format, learning-while-loading).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pol::data::parser::{Parser, ParserConfig};
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::hashing::FeatureHasher;
+use pol::learner::sgd::Sgd;
+use pol::learner::OnlineLearner;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+
+fn main() {
+    let n = 30_000 * common::scale();
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: n,
+        features: 23_000,
+        density: 75,
+        ..Default::default()
+    })
+    .generate();
+    let total_features = ds.total_features();
+
+    common::header("§0.2 — streaming throughput");
+
+    // 1. learn-only over in-memory instances
+    let mut sgd = Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(1.0, 1.0));
+    let t = std::time::Instant::now();
+    for inst in ds.iter() {
+        let _ = sgd.predict(&inst.features);
+        sgd.learn(&inst.features, inst.label);
+    }
+    let learn_s = t.elapsed().as_secs_f64();
+
+    // 2. text parse + learn (the no-cache path)
+    let text: String = ds
+        .iter()
+        .map(|inst| {
+            let feats: Vec<String> = inst
+                .features
+                .iter()
+                .map(|&(i, v)| format!("{i}:{v}"))
+                .collect();
+            format!("{} |f {}\n", inst.label, feats.join(" "))
+        })
+        .collect();
+    let mut parser = Parser::new(FeatureHasher::new(18), ParserConfig::default());
+    let mut sgd2 = Sgd::new(1 << 18, Loss::Logistic, LrSchedule::inv_sqrt(1.0, 1.0));
+    let t = std::time::Instant::now();
+    for line in text.lines() {
+        if let Ok(inst) = parser.parse_line(line) {
+            let _ = sgd2.predict(&inst.features);
+            sgd2.learn(&inst.features, inst.label);
+        }
+    }
+    let parse_learn_s = t.elapsed().as_secs_f64();
+
+    // 3. cache write once, then cache read + learn (the VW fast path)
+    let mut buf = Vec::new();
+    pol::data::cache::write_cache(&ds, &mut buf).unwrap();
+    let t = std::time::Instant::now();
+    let back = pol::data::cache::read_cache(&mut buf.as_slice(), "c").unwrap();
+    let mut sgd3 = Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(1.0, 1.0));
+    for inst in back.iter() {
+        let _ = sgd3.predict(&inst.features);
+        sgd3.learn(&inst.features, inst.label);
+    }
+    let cache_learn_s = t.elapsed().as_secs_f64();
+
+    println!("{:<22} {:>12} {:>16}", "path", "wall-s", "features/s");
+    for (name, secs) in [
+        ("learn-only", learn_s),
+        ("text-parse+learn", parse_learn_s),
+        ("cache-read+learn", cache_learn_s),
+    ] {
+        println!(
+            "{:<22} {:>12.3} {:>16.2e}",
+            name,
+            secs,
+            total_features as f64 / secs
+        );
+    }
+    println!(
+        "cache speedup over text parse: {:.2}x  (cache bytes/feature: {:.1})",
+        parse_learn_s / cache_learn_s,
+        buf.len() as f64 / total_features as f64
+    );
+    println!("(paper: VW streams ~1e8 features/s with cache + async parse)");
+}

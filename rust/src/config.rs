@@ -1,0 +1,235 @@
+//! Run configuration: the knobs of every experiment, parsable from a
+//! simple `key = value` config file and/or CLI `--key value` overrides.
+//!
+//! (The environment ships no serde/toml; the format below is the
+//! flat-key subset of TOML, which covers everything the launcher needs.)
+
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+use crate::topology::Topology;
+
+/// Which update rule the coordinator runs (§0.5.2 local + the §0.6
+/// global family + the centralized baselines of §0.7).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateRule {
+    /// §0.5.2 no-delay local training.
+    Local,
+    /// §0.6.1 delayed global update (no local training).
+    DelayedGlobal,
+    /// §0.6.2 corrective update (local now, corrected at t+τ).
+    Corrective,
+    /// §0.6.3 delayed backpropagation; `multiplier` scales the upstream
+    /// gradient ("Backprop x8" in Figure 0.6).
+    Backprop { multiplier: f64 },
+    /// §0.6.4 minibatch gradient descent (global-only; worker count only
+    /// affects where features live, not the math).
+    Minibatch { batch: usize },
+    /// §0.6.5 minibatch nonlinear conjugate gradient.
+    Cg { batch: usize },
+    /// Centralized SGD — minibatch with b = 1 (the Figure 0.6 baseline).
+    Sgd,
+}
+
+impl UpdateRule {
+    pub fn parse(s: &str) -> Option<UpdateRule> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        match name {
+            "local" => Some(UpdateRule::Local),
+            "delayed-global" | "delayed_global" => Some(UpdateRule::DelayedGlobal),
+            "corrective" => Some(UpdateRule::Corrective),
+            "backprop" => Some(UpdateRule::Backprop {
+                multiplier: arg.and_then(|a| a.parse().ok()).unwrap_or(1.0),
+            }),
+            "minibatch" => Some(UpdateRule::Minibatch {
+                batch: arg.and_then(|a| a.parse().ok()).unwrap_or(1024),
+            }),
+            "cg" => Some(UpdateRule::Cg {
+                batch: arg.and_then(|a| a.parse().ok()).unwrap_or(1024),
+            }),
+            "sgd" => Some(UpdateRule::Sgd),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            UpdateRule::Local => "local".into(),
+            UpdateRule::DelayedGlobal => "delayed-global".into(),
+            UpdateRule::Corrective => "corrective".into(),
+            UpdateRule::Backprop { multiplier } if *multiplier == 1.0 => {
+                "backprop".into()
+            }
+            UpdateRule::Backprop { multiplier } => format!("backprop:{multiplier}"),
+            UpdateRule::Minibatch { batch } => format!("minibatch:{batch}"),
+            UpdateRule::Cg { batch } => format!("cg:{batch}"),
+            UpdateRule::Sgd => "sgd".into(),
+        }
+    }
+
+    /// Global-only methods are invariant to the worker count (Fig 0.6:
+    /// "SGD, Minibatch, and CG are not affected by the number of
+    /// workers").
+    pub fn worker_invariant(&self) -> bool {
+        matches!(
+            self,
+            UpdateRule::Minibatch { .. } | UpdateRule::Cg { .. } | UpdateRule::Sgd
+        )
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub topology: Topology,
+    pub rule: UpdateRule,
+    pub loss: Loss,
+    pub lr: LrSchedule,
+    /// Learning-rate schedule for internal (combiner) nodes; defaults to
+    /// `lr`. The master's feature space is tiny (k predictions + bias),
+    /// so the paper's per-algorithm lr search effectively gives it its
+    /// own, much larger rate.
+    pub master_lr: Option<LrSchedule>,
+    /// Logical update delay τ (§0.6.6; the paper uses 1024).
+    pub tau: u64,
+    /// Clip subordinate predictions to [0,1] before the master consumes
+    /// them (Fig 0.5(b) calibration; only sensible for [0,1] labels).
+    pub clip01: bool,
+    /// Give internal nodes a constant (bias) input feature. The paper's
+    /// experimental final output node has one ("one (default) constant
+    /// feature"); the Proposition 3/4 analysis assumes none.
+    pub bias: bool,
+    pub passes: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            topology: Topology::TwoLayer { shards: 4 },
+            rule: UpdateRule::Local,
+            loss: Loss::Squared,
+            lr: LrSchedule::inv_sqrt(0.5, 1.0),
+            master_lr: None,
+            tau: 1024,
+            clip01: true,
+            bias: true,
+            passes: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key = value` lines (flat-TOML subset). Unknown keys error.
+    pub fn from_str_cfg(text: &str) -> Result<RunConfig, String> {
+        let mut cfg = RunConfig::default();
+        let mut lambda = None;
+        let mut t0 = None;
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", no + 1))?;
+            let (k, v) = (k.trim(), v.trim().trim_matches('"'));
+            match k {
+                "shards" | "workers" => {
+                    let n: usize =
+                        v.parse().map_err(|_| format!("bad {k}: {v}"))?;
+                    cfg.topology = Topology::TwoLayer { shards: n };
+                }
+                "topology" => {
+                    cfg.topology = match (v, cfg.topology.leaves()) {
+                        ("two-layer", n) => Topology::TwoLayer { shards: n },
+                        ("binary-tree", n) => Topology::BinaryTree { leaves: n },
+                        _ => return Err(format!("bad topology: {v}")),
+                    };
+                }
+                "rule" => {
+                    cfg.rule = UpdateRule::parse(v)
+                        .ok_or_else(|| format!("bad rule: {v}"))?;
+                }
+                "loss" => {
+                    cfg.loss =
+                        Loss::parse(v).ok_or_else(|| format!("bad loss: {v}"))?;
+                }
+                "lambda" => {
+                    lambda = Some(v.parse().map_err(|_| format!("bad lambda"))?)
+                }
+                "t0" => t0 = Some(v.parse().map_err(|_| format!("bad t0"))?),
+                "tau" => cfg.tau = v.parse().map_err(|_| format!("bad tau"))?,
+                "clip01" => cfg.clip01 = v == "true",
+                "bias" => cfg.bias = v == "true",
+                "passes" => {
+                    cfg.passes = v.parse().map_err(|_| format!("bad passes"))?
+                }
+                "seed" => cfg.seed = v.parse().map_err(|_| format!("bad seed"))?,
+                _ => return Err(format!("unknown key: {k}")),
+            }
+        }
+        if lambda.is_some() || t0.is_some() {
+            cfg.lr = LrSchedule::inv_sqrt(lambda.unwrap_or(0.5), t0.unwrap_or(1.0));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_parse_roundtrip() {
+        for r in [
+            UpdateRule::Local,
+            UpdateRule::DelayedGlobal,
+            UpdateRule::Corrective,
+            UpdateRule::Backprop { multiplier: 8.0 },
+            UpdateRule::Minibatch { batch: 256 },
+            UpdateRule::Cg { batch: 1024 },
+            UpdateRule::Sgd,
+        ] {
+            assert_eq!(UpdateRule::parse(&r.name()), Some(r));
+        }
+    }
+
+    #[test]
+    fn config_from_text() {
+        let cfg = RunConfig::from_str_cfg(
+            "shards = 8\nrule = backprop:8\nloss = logistic\nlambda = 2.0\nt0 = 100\ntau = 512\npasses = 4\n# comment\nseed = 7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, Topology::TwoLayer { shards: 8 });
+        assert_eq!(cfg.rule, UpdateRule::Backprop { multiplier: 8.0 });
+        assert_eq!(cfg.loss, Loss::Logistic);
+        assert_eq!(cfg.tau, 512);
+        assert_eq!(cfg.passes, 4);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.lr, LrSchedule::inv_sqrt(2.0, 100.0));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_str_cfg("nope = 1").is_err());
+    }
+
+    #[test]
+    fn binary_tree_topology() {
+        let cfg =
+            RunConfig::from_str_cfg("workers = 8\ntopology = binary-tree").unwrap();
+        assert_eq!(cfg.topology, Topology::BinaryTree { leaves: 8 });
+    }
+
+    #[test]
+    fn worker_invariance() {
+        assert!(UpdateRule::Sgd.worker_invariant());
+        assert!(UpdateRule::Cg { batch: 4 }.worker_invariant());
+        assert!(!UpdateRule::Local.worker_invariant());
+        assert!(!(UpdateRule::Backprop { multiplier: 1.0 }).worker_invariant());
+    }
+}

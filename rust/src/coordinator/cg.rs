@@ -1,0 +1,509 @@
+//! §0.6.5 — minibatch nonlinear conjugate gradient with lazy sparse
+//! updates.
+//!
+//! Nonlinear CG (Polak–Ribière with the Gilbert–Nocedal max{0,·} clamp)
+//! over minibatch gradients, with the exact step size
+//! α_t = −⟨g_t, d_t⟩ / Σ_τ ℓ″_τ ⟨d_t, x_τ⟩² (the cheap ⟨d, H d⟩ for
+//! decomposable losses).
+//!
+//! The naive update `w += α d` touches two *dense* vectors per batch.
+//! The paper's trick makes every operation sparse: within a "phase"
+//! (a run of β ≠ 0; β = 0 restarts CG), an untouched coordinate's
+//! direction only decays geometrically, d_{i,τ} = d_{i,t₀}·B_τ/B_{t₀}
+//! with B_t the running product of β's, so its cumulative weight motion
+//! is d_{i,t₀}/B_{t₀}·(A_t − A_{τ−1}) with A_t = Σ_s α_s B_s. We store
+//! per-coordinate (d, A-at-touch, B-at-touch, phase) and catch
+//! coordinates up only when the current minibatch touches them (or when
+//! a prediction reads them). [`DenseCg`] is the O(d)-per-step reference;
+//! `rust/tests/` proves the two bit-agree (to fp tolerance) on random
+//! streams.
+
+use crate::config::RunConfig;
+use crate::coordinator::TrainReport;
+use crate::data::Dataset;
+use crate::linalg::SparseFeat;
+use crate::loss::Loss;
+use crate::metrics::ProgressiveValidator;
+
+const EPS: f64 = 1e-12;
+/// Step-size safeguard: with tiny minibatches the exact quadratic step
+/// α = −⟨g,d⟩/⟨d,Hd⟩ can be arbitrarily large when the sampled curvature
+/// is near zero (saturated logistic ℓ″ → 0). All implementations (dense,
+/// lazy, and the L1 kernel) clamp identically so they stay bit-equal.
+pub const ALPHA_MAX: f64 = 50.0;
+
+/// Dense reference implementation (kept for tests/benches; O(d) per
+/// batch).
+pub struct DenseCg {
+    pub w: Vec<f64>,
+    g_prev: Vec<f64>,
+    d_prev: Vec<f64>,
+    loss: Loss,
+}
+
+impl DenseCg {
+    pub fn new(dim: usize, loss: Loss) -> Self {
+        DenseCg {
+            w: vec![0.0; dim],
+            g_prev: vec![0.0; dim],
+            d_prev: vec![0.0; dim],
+            loss,
+        }
+    }
+
+    pub fn predict(&self, x: &[SparseFeat]) -> f64 {
+        x.iter().map(|&(i, v)| self.w[i as usize] * v as f64).sum()
+    }
+
+    /// One CG step on a minibatch. Returns (α, β).
+    pub fn step(&mut self, batch: &[(&[SparseFeat], f64)]) -> (f64, f64) {
+        let dim = self.w.len();
+        let mut g = vec![0.0f64; dim];
+        let mut scales = Vec::with_capacity(batch.len());
+        for &(x, y) in batch {
+            let yhat = self.predict(x);
+            let gs = self.loss.dloss(yhat, y);
+            let hs = self.loss.d2loss(yhat, y);
+            scales.push((gs, hs));
+            for &(i, v) in x {
+                g[i as usize] += gs * v as f64;
+            }
+        }
+        let gp_sq: f64 = self.g_prev.iter().map(|a| a * a).sum();
+        let beta = if gp_sq > EPS {
+            let num: f64 = g
+                .iter()
+                .zip(&self.g_prev)
+                .map(|(a, b)| a * (a - b))
+                .sum();
+            (num / gp_sq).max(0.0)
+        } else {
+            0.0
+        };
+        let d: Vec<f64> = g
+            .iter()
+            .zip(&self.d_prev)
+            .map(|(gi, di)| -gi + beta * di)
+            .collect();
+        let mut dhd = 0.0;
+        for (&(x, _), &(_, hs)) in batch.iter().zip(&scales) {
+            let dx: f64 = x.iter().map(|&(i, v)| d[i as usize] * v as f64).sum();
+            dhd += hs * dx * dx;
+        }
+        let gd: f64 = g.iter().zip(&d).map(|(a, b)| a * b).sum();
+        let alpha =
+            if dhd > EPS { (-gd / dhd).clamp(-ALPHA_MAX, ALPHA_MAX) } else { 0.0 };
+        for i in 0..dim {
+            self.w[i] += alpha * d[i];
+        }
+        self.g_prev = g;
+        self.d_prev = d;
+        (alpha, beta)
+    }
+}
+
+/// Lazy sparse CG — the paper's timestamped representation.
+pub struct LazyCg {
+    /// Weight values, current through each coordinate's `a_at` point.
+    w: Vec<f64>,
+    /// Direction value at the coordinate's last touch.
+    d_val: Vec<f64>,
+    /// A_t at the coordinate's last touch (A_τ in the paper's formula —
+    /// the catch-up adds (A_now − A_τ)/B_τ · d_τ).
+    a_at: Vec<f64>,
+    /// B_t at the coordinate's last touch.
+    b_at: Vec<f64>,
+    /// Phase id at the coordinate's last touch (u32::MAX = never).
+    phase_of: Vec<u32>,
+    /// Current phase; β = 0 starts a new one ("effectively restarts").
+    phase: u32,
+    /// Σ_s α_s B_s within the current phase.
+    a: f64,
+    /// Π_s β_s within the current phase (B at current step).
+    b: f64,
+    /// Final A of each completed phase.
+    a_end: Vec<f64>,
+    /// Previous minibatch gradient (sparse) and its norm².
+    g_prev: Vec<(u32, f64)>,
+    g_prev_sq: f64,
+    loss: Loss,
+    /// Scratch for building the current gradient.
+    slot: std::collections::HashMap<u32, usize>,
+}
+
+impl LazyCg {
+    pub fn new(dim: usize, loss: Loss) -> Self {
+        LazyCg {
+            w: vec![0.0; dim],
+            d_val: vec![0.0; dim],
+            a_at: vec![0.0; dim],
+            b_at: vec![1.0; dim],
+            phase_of: vec![u32::MAX; dim],
+            phase: 0,
+            a: 0.0,
+            b: 1.0,
+            a_end: Vec::new(),
+            g_prev: Vec::new(),
+            g_prev_sq: 0.0,
+            loss,
+            slot: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Catch coordinate `i` up to the current (A, phase) point.
+    #[inline]
+    fn refresh(&mut self, i: usize) {
+        let p = self.phase_of[i];
+        if p == u32::MAX || self.d_val[i] == 0.0 {
+            return;
+        }
+        let a_stop = if p == self.phase {
+            self.a
+        } else {
+            // direction died at the end of its phase (the reset step's
+            // d = −g has zero at untouched coordinates)
+            self.a_end[p as usize]
+        };
+        let delta = (a_stop - self.a_at[i]) / self.b_at[i] * self.d_val[i];
+        if delta != 0.0 {
+            self.w[i] += delta;
+        }
+        self.a_at[i] = a_stop;
+        if p != self.phase {
+            // fully drained; direction is zero in the current phase
+            self.d_val[i] = 0.0;
+            self.phase_of[i] = self.phase;
+            self.a_at[i] = self.a;
+            self.b_at[i] = self.b;
+        }
+    }
+
+    /// Up-to-date weight read (refreshes lazily).
+    #[inline]
+    pub fn weight(&mut self, i: u32) -> f64 {
+        self.refresh(i as usize);
+        self.w[i as usize]
+    }
+
+    pub fn predict(&mut self, x: &[SparseFeat]) -> f64 {
+        let mut acc = 0.0;
+        for &(i, v) in x {
+            acc += self.weight(i) * v as f64;
+        }
+        acc
+    }
+
+    /// One CG step on a minibatch. Returns (α, β). All work is
+    /// O(batch-support), never O(dim).
+    pub fn step(&mut self, batch: &[(&[SparseFeat], f64)]) -> (f64, f64) {
+        // --- gradient over the batch support (touch = refresh first) ---
+        let mut g: Vec<(u32, f64)> = Vec::new();
+        self.slot.clear();
+        let mut scales = Vec::with_capacity(batch.len());
+        for &(x, y) in batch {
+            let yhat = self.predict(x);
+            let gs = self.loss.dloss(yhat, y);
+            let hs = self.loss.d2loss(yhat, y);
+            scales.push((gs, hs));
+            for &(i, v) in x {
+                match self.slot.entry(i) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        g[*e.get()].1 += gs * v as f64;
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(g.len());
+                        g.push((i, gs * v as f64));
+                    }
+                }
+            }
+        }
+        // --- β (Polak–Ribière over sparse prev gradient) ---
+        let mut g_sq = 0.0;
+        for &(_, gv) in &g {
+            g_sq += gv * gv;
+        }
+        let beta = if self.g_prev_sq > EPS {
+            let prev: std::collections::HashMap<u32, f64> =
+                self.g_prev.iter().cloned().collect();
+            let mut dot_cur_prev = 0.0;
+            for &(i, gv) in &g {
+                if let Some(&pv) = prev.get(&i) {
+                    dot_cur_prev += gv * pv;
+                }
+            }
+            ((g_sq - dot_cur_prev) / self.g_prev_sq).max(0.0)
+        } else {
+            0.0
+        };
+
+        if beta == 0.0 {
+            // phase restart: record the old phase's final A
+            self.a_end.push(self.a);
+            debug_assert_eq!(self.a_end.len() as u32 - 1, self.phase);
+            self.phase += 1;
+            // a_end is indexed by phase id: pad so a_end[p] is valid for
+            // every completed phase
+            while self.a_end.len() < self.phase as usize {
+                self.a_end.push(self.a);
+            }
+            self.a = 0.0;
+            self.b = 1.0;
+        } else {
+            self.b *= beta;
+            // numerical guard: if B drifts out of range, materialize the
+            // affected representation by rescaling (rare; exactness
+            // preserved because all per-coordinate state rescales by the
+            // same factor)
+            if !(1e-120..=1e120).contains(&self.b.abs()) {
+                let scale = self.b;
+                for i in 0..self.w.len() {
+                    if self.phase_of[i] == self.phase {
+                        self.b_at[i] /= scale;
+                        // d stored at touch; A entries rescale too
+                        self.a_at[i] /= scale;
+                    }
+                }
+                self.a /= scale;
+                self.b = 1.0;
+            }
+        }
+
+        // --- new direction on the touched support ---
+        // (coordinates already refreshed by predict(); untouched coords
+        // keep decaying implicitly)
+        let mut d_cur: Vec<(u32, f64)> = Vec::with_capacity(g.len());
+        for &(i, gv) in &g {
+            let iu = i as usize;
+            self.refresh(iu);
+            let d_old = if self.phase_of[iu] == self.phase {
+                // decayed old direction: d_old · B_{t-1}/B_touch; note
+                // self.b already includes β_t, so B_{t-1} = b/β
+                self.d_val[iu] * (self.b / beta.max(EPS)) / self.b_at[iu]
+            } else {
+                0.0
+            };
+            let d_new = -gv + if beta > 0.0 { beta * d_old } else { 0.0 };
+            d_cur.push((i, d_new));
+        }
+
+        // --- α via the decomposable-Hessian trick ---
+        let dmap: std::collections::HashMap<u32, f64> =
+            d_cur.iter().cloned().collect();
+        let mut dhd = 0.0;
+        for (&(x, _), &(_, hs)) in batch.iter().zip(&scales) {
+            let dx: f64 =
+                x.iter().map(|&(i, v)| dmap[&i] * v as f64).sum();
+            dhd += hs * dx * dx;
+        }
+        let mut gd = 0.0;
+        for &(i, gv) in &g {
+            gd += gv * dmap[&i];
+        }
+        let alpha =
+            if dhd > EPS { (-gd / dhd).clamp(-ALPHA_MAX, ALPHA_MAX) } else { 0.0 };
+
+        // --- advance the global clocks, then write touched coords ---
+        self.a += alpha * self.b;
+        for &(i, dv) in &d_cur {
+            let iu = i as usize;
+            self.w[iu] += alpha * dv;
+            self.d_val[iu] = dv;
+            self.a_at[iu] = self.a;
+            self.b_at[iu] = self.b;
+            self.phase_of[iu] = self.phase;
+        }
+        self.g_prev = g;
+        self.g_prev_sq = g_sq;
+        (alpha, beta)
+    }
+
+    /// Materialize the full weight vector (refresh everything).
+    pub fn into_weights(mut self) -> Vec<f64> {
+        for i in 0..self.w.len() {
+            self.refresh(i);
+        }
+        self.w
+    }
+}
+
+/// Train with the lazy CG on minibatches of `batch` examples.
+pub fn train(cfg: &RunConfig, ds: &Dataset, batch: usize) -> TrainReport {
+    let (report, _w) = train_weights(cfg, ds, batch);
+    report
+}
+
+pub fn train_weights(
+    cfg: &RunConfig,
+    ds: &Dataset,
+    batch: usize,
+) -> (TrainReport, Vec<f64>) {
+    let batch = batch.max(1);
+    let start = std::time::Instant::now();
+    let mut cgl = LazyCg::new(ds.dim, cfg.loss);
+    let mut progressive = ProgressiveValidator::with_loss(cfg.loss);
+    let mut buf: Vec<(&[SparseFeat], f64)> = Vec::with_capacity(batch);
+    let mut total = 0u64;
+    for inst in ds.passes(cfg.passes) {
+        let yhat = cgl.predict(&inst.features);
+        progressive.observe(yhat, inst.label);
+        buf.push((&inst.features, inst.label));
+        total += 1;
+        if buf.len() == batch {
+            cgl.step(&buf);
+            buf.clear();
+        }
+    }
+    if !buf.is_empty() {
+        cgl.step(&buf);
+    }
+    let report = TrainReport {
+        progressive: progressive.clone(),
+        shard_progressive: progressive,
+        instances: total,
+        elapsed: start.elapsed(),
+    };
+    (report, cgl.into_weights())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_batches(
+        dim: usize,
+        batches: usize,
+        bsize: usize,
+        seed: u64,
+    ) -> Vec<Vec<(Vec<SparseFeat>, f64)>> {
+        let mut rng = Rng::new(seed);
+        let w_true: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        (0..batches)
+            .map(|_| {
+                (0..bsize)
+                    .map(|_| {
+                        let nnz = 1 + rng.below(6) as usize;
+                        let x: Vec<SparseFeat> = (0..nnz)
+                            .map(|_| {
+                                (rng.below(dim as u64) as u32, rng.normal() as f32)
+                            })
+                            .collect();
+                        let y: f64 = x
+                            .iter()
+                            .map(|&(i, v)| w_true[i as usize] * v as f64)
+                            .sum::<f64>()
+                            + 0.05 * rng.normal();
+                        (x, y)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lazy_matches_dense() {
+        let dim = 32;
+        let data = rand_batches(dim, 40, 8, 3);
+        let mut dense = DenseCg::new(dim, Loss::Squared);
+        let mut lazy = LazyCg::new(dim, Loss::Squared);
+        for batch in &data {
+            let refs: Vec<(&[SparseFeat], f64)> =
+                batch.iter().map(|(x, y)| (x.as_slice(), *y)).collect();
+            let (ad, bd) = dense.step(&refs);
+            let (al, bl) = lazy.step(&refs);
+            assert!((ad - al).abs() < 1e-7 * (1.0 + ad.abs()), "alpha {ad} {al}");
+            assert!((bd - bl).abs() < 1e-7 * (1.0 + bd.abs()), "beta {bd} {bl}");
+        }
+        let wl = lazy.into_weights();
+        for (a, b) in dense.w.iter().zip(&wl) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lazy_matches_dense_logistic() {
+        let dim = 16;
+        let mut data = rand_batches(dim, 30, 4, 9);
+        for batch in &mut data {
+            for (_, y) in batch.iter_mut() {
+                *y = if *y >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        let mut dense = DenseCg::new(dim, Loss::Logistic);
+        let mut lazy = LazyCg::new(dim, Loss::Logistic);
+        for batch in &data {
+            let refs: Vec<(&[SparseFeat], f64)> =
+                batch.iter().map(|(x, y)| (x.as_slice(), *y)).collect();
+            dense.step(&refs);
+            lazy.step(&refs);
+        }
+        let wl = lazy.into_weights();
+        for (a, b) in dense.w.iter().zip(&wl) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // full-batch CG on a least-squares problem: near-exact in ≤ dim
+        // steps (linear CG behaviour)
+        let dim = 8;
+        let data = rand_batches(dim, 1, 256, 5);
+        let refs: Vec<(&[SparseFeat], f64)> =
+            data[0].iter().map(|(x, y)| (x.as_slice(), *y)).collect();
+        let mut cg = DenseCg::new(dim, Loss::Squared);
+        for _ in 0..3 * dim {
+            cg.step(&refs);
+        }
+        let mse: f64 = refs
+            .iter()
+            .map(|&(x, y)| {
+                let p: f64 =
+                    x.iter().map(|&(i, v)| cg.w[i as usize] * v as f64).sum();
+                (p - y) * (p - y)
+            })
+            .sum::<f64>()
+            / refs.len() as f64;
+        assert!(mse < 0.01, "mse {mse}");
+    }
+
+    #[test]
+    fn first_step_is_gradient_descent() {
+        let dim = 8;
+        let data = rand_batches(dim, 1, 16, 7);
+        let refs: Vec<(&[SparseFeat], f64)> =
+            data[0].iter().map(|(x, y)| (x.as_slice(), *y)).collect();
+        let mut cg = LazyCg::new(dim, Loss::Squared);
+        let (_, beta) = cg.step(&refs);
+        assert_eq!(beta, 0.0);
+    }
+
+    #[test]
+    fn cg_beats_minibatch_gd_same_batch() {
+        // §0.6.5's motivation: on minibatches, CG >> plain minibatch GD
+        use crate::config::{RunConfig, UpdateRule};
+        use crate::data::synth::{RcvLikeGen, SynthConfig};
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 8_000,
+            features: 400,
+            density: 15,
+            hash_bits: 12,
+            ..Default::default()
+        })
+        .generate();
+        let cfg = RunConfig {
+            rule: UpdateRule::Cg { batch: 256 },
+            loss: Loss::Logistic,
+            lr: crate::lr::LrSchedule::inv_sqrt(1.0, 1.0),
+            ..Default::default()
+        };
+        let r_cg = train(&cfg, &ds, 256);
+        let r_mb = crate::coordinator::minibatch::train(&cfg, &ds, 256);
+        assert!(
+            r_cg.progressive.accuracy() > r_mb.progressive.accuracy(),
+            "cg {} mb {}",
+            r_cg.progressive.accuracy(),
+            r_mb.progressive.accuracy()
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Wire messages of the multinode architecture.
+//!
+//! These are the payloads the threaded executor and the virtual-time
+//! model account for. Sizes mirror the paper's observation that only "a
+//! few bytes per instance" travel each link: predictions and gradients
+//! are single floats plus a header; only the initial shard fan-out
+//! carries feature payloads.
+
+use crate::linalg::SparseFeat;
+
+/// Subordinate → master: a prediction for instance `t` (label piggybacked
+/// from the sharder with one designated subordinate, per §0.5.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictionMsg {
+    pub t: u64,
+    pub node: usize,
+    pub pred: f64,
+    /// Piggybacked label (only one subordinate per master carries it).
+    pub label: Option<f64>,
+}
+
+/// Master → subordinate: feedback for instance `t` (§0.6): the meaning
+/// of `gscale` depends on the update rule (final-prediction loss
+/// gradient, corrective difference, or chain-rule product).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeedbackMsg {
+    pub t: u64,
+    pub gscale: f64,
+}
+
+/// Sharder → leaf: the feature shard of instance `t` (Fig 0.4 step (b)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardMsg {
+    pub t: u64,
+    pub label: f64,
+    pub features: Vec<SparseFeat>,
+}
+
+/// Wire sizes (bytes) for the virtual-time model.
+impl PredictionMsg {
+    pub fn wire_size(&self) -> usize {
+        crate::net::wire::prediction() + if self.label.is_some() { 8 } else { 0 }
+    }
+}
+
+impl FeedbackMsg {
+    pub fn wire_size(&self) -> usize {
+        crate::net::wire::prediction()
+    }
+}
+
+impl ShardMsg {
+    pub fn wire_size(&self) -> usize {
+        crate::net::wire::shard_features(self.features.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_small() {
+        let m = PredictionMsg { t: 0, node: 1, pred: 0.5, label: None };
+        assert!(m.wire_size() < 64);
+        let with_label = PredictionMsg { label: Some(1.0), ..m };
+        assert!(with_label.wire_size() > m.wire_size());
+    }
+
+    #[test]
+    fn shard_scales_with_nnz() {
+        let small = ShardMsg { t: 0, label: 1.0, features: vec![(0, 1.0); 10] };
+        let big = ShardMsg { t: 0, label: 1.0, features: vec![(0, 1.0); 100] };
+        assert!(big.wire_size() > 5 * small.wire_size());
+    }
+}

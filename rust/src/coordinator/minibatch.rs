@@ -1,0 +1,175 @@
+//! §0.6.4 — minibatch gradient descent over feature shards.
+//!
+//! On a feature-shard system the minibatch methods are *global-only*:
+//! each worker holds a slice of w, computes partial inner products, the
+//! master sums them into predictions, and after b examples every worker
+//! applies the summed gradient restricted to its own coordinates. The
+//! *math* is therefore identical to centralized minibatch GD on the full
+//! weight vector — which is why Fig 0.6 shows these methods invariant to
+//! worker count — so this trainer computes the centralized form, and the
+//! worker decomposition only matters for the timing model and the
+//! bandwidth argument (a few bytes per example per link, vs whole
+//! gradients for instance-shard minibatch, as §0.6.4 argues).
+//!
+//! With b = 1 this is exactly the paper's centralized "SGD" baseline.
+
+use crate::config::RunConfig;
+use crate::coordinator::TrainReport;
+use crate::data::Dataset;
+use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
+use crate::metrics::ProgressiveValidator;
+
+/// Train with minibatch size `batch`; returns the standard report.
+pub fn train(cfg: &RunConfig, ds: &Dataset, batch: usize) -> TrainReport {
+    let (report, _w) = train_weights(cfg, ds, batch);
+    report
+}
+
+/// As [`train`] but also returns the final weights (for test evaluation).
+pub fn train_weights(
+    cfg: &RunConfig,
+    ds: &Dataset,
+    batch: usize,
+) -> (TrainReport, Vec<f32>) {
+    let batch = batch.max(1);
+    let start = std::time::Instant::now();
+    let mut w = vec![0.0f32; ds.dim];
+    let mut progressive = ProgressiveValidator::with_loss(cfg.loss);
+    // accumulated minibatch gradient, kept sparse
+    let mut grad: Vec<(u32, f64)> = Vec::new();
+    let mut slot: std::collections::HashMap<u32, usize> =
+        std::collections::HashMap::new();
+    let mut in_batch = 0usize;
+    let mut updates = 0u64;
+    let mut total = 0u64;
+    for inst in ds.passes(cfg.passes) {
+        let yhat = sparse_dot(&w, &inst.features);
+        progressive.observe(yhat, inst.label);
+        let g = cfg.loss.dloss(yhat, inst.label);
+        if g != 0.0 {
+            for &(i, v) in &inst.features {
+                match slot.entry(i) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        grad[*e.get()].1 += g * v as f64;
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(grad.len());
+                        grad.push((i, g * v as f64));
+                    }
+                }
+            }
+        }
+        in_batch += 1;
+        total += 1;
+        if in_batch == batch {
+            updates += 1;
+            // one update per batch at the batch clock; gradient averaged
+            // so the schedule's scale is comparable across batch sizes
+            let eta = cfg.lr.eta(updates) / batch as f64;
+            apply(&mut w, &grad, eta);
+            grad.clear();
+            slot.clear();
+            in_batch = 0;
+        }
+    }
+    if in_batch > 0 {
+        updates += 1;
+        let eta = cfg.lr.eta(updates) / in_batch as f64;
+        apply(&mut w, &grad, eta);
+    }
+    let report = TrainReport {
+        progressive: progressive.clone(),
+        shard_progressive: progressive,
+        instances: total,
+        elapsed: start.elapsed(),
+    };
+    (report, w)
+}
+
+fn apply(w: &mut [f32], grad: &[(u32, f64)], eta: f64) {
+    let sparse: Vec<SparseFeat> =
+        grad.iter().map(|&(i, gv)| (i, gv as f32)).collect();
+    sparse_saxpy(w, -eta, &sparse);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::UpdateRule;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+    use crate::loss::Loss;
+    use crate::lr::LrSchedule;
+    use crate::topology::Topology;
+
+    fn cfg() -> RunConfig {
+        RunConfig {
+            topology: Topology::TwoLayer { shards: 4 },
+            rule: UpdateRule::Sgd,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(4.0, 1.0),
+            master_lr: None,
+            tau: 0,
+            clip01: false,
+            bias: true,
+            passes: 1,
+            seed: 1,
+        }
+    }
+
+    fn ds() -> Dataset {
+        RcvLikeGen::new(SynthConfig {
+            instances: 4_000,
+            features: 400,
+            density: 15,
+            hash_bits: 12,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    #[test]
+    fn batch_one_equals_sgd_learner() {
+        use crate::learner::OnlineLearner;
+        let d = ds();
+        let (_, w) = train_weights(&cfg(), &d, 1);
+        let mut sgd = crate::learner::sgd::Sgd::new(
+            d.dim,
+            Loss::Logistic,
+            LrSchedule::inv_sqrt(4.0, 1.0),
+        );
+        for inst in d.iter() {
+            sgd.learn(&inst.features, inst.label);
+        }
+        for (a, b) in w.iter().zip(sgd.weights()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn large_batch_worse_than_b1() {
+        // §0.6.4: "the optimal minibatch size is b = 1" for plain GD
+        let d = ds();
+        let r1 = train(&cfg(), &d, 1);
+        let r1024 = train(&cfg(), &d, 1024);
+        assert!(
+            r1.progressive.mean_loss() < r1024.progressive.mean_loss(),
+            "b1 {} b1024 {}",
+            r1.progressive.mean_loss(),
+            r1024.progressive.mean_loss()
+        );
+    }
+
+    #[test]
+    fn learns_at_moderate_batch() {
+        let d = ds();
+        let r = train(&cfg(), &d, 16);
+        assert!(r.progressive.accuracy() > 0.6, "{}", r.progressive.accuracy());
+    }
+
+    #[test]
+    fn trailing_partial_batch_applied() {
+        let d = ds();
+        let (_, w_full) = train_weights(&cfg(), &d, 4096); // > n: one flush
+        assert!(w_full.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,569 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! Runs a [`Topology`] of [`NodeLearner`]s over a dataset under one of
+//! the §0.5/§0.6 update rules, with the deterministic τ-delay schedule
+//! of §0.6.6. The tree rules (Local / DelayedGlobal / Corrective /
+//! Backprop) execute here; the global-only centralized rules
+//! (Minibatch / CG / SGD) dispatch to [`minibatch`] and [`cg`]; the
+//! §0.5.1 real-thread multicore path lives in [`multicore`].
+//!
+//! Everything is single-threaded and deterministic by construction: the
+//! same config and dataset produce bit-identical weights (a proptest
+//! invariant in `rust/tests/`). Wall-clock parallel behaviour is modeled
+//! by [`timing`] (virtual clock over [`crate::net::SimNetwork`]) and
+//! measured for real by [`multicore`].
+
+pub mod cg;
+pub mod messages;
+pub mod minibatch;
+pub mod multicore;
+pub mod schedule;
+pub mod timing;
+
+use std::collections::VecDeque;
+
+use crate::config::{RunConfig, UpdateRule};
+use crate::data::Dataset;
+use crate::learner::node::NodeLearner;
+use crate::linalg::SparseFeat;
+use crate::metrics::ProgressiveValidator;
+use crate::sharding::feature::FeatureSharder;
+use crate::topology::NodeGraph;
+use schedule::{DelaySchedule, Op};
+
+/// Per-instance state held while waiting for the master's feedback.
+#[derive(Clone, Debug)]
+struct Pending {
+    label: f64,
+    /// Input vector of every node at prediction time: hashed features
+    /// for leaves, (child-rank, child-pred) + bias for internal nodes.
+    inputs: Vec<Vec<SparseFeat>>,
+    /// Pre-clip prediction of every node.
+    preds: Vec<f64>,
+    /// Local gradient scale each node applied at Local time (0 if none).
+    local_g: Vec<f64>,
+    final_pred: f64,
+}
+
+/// Outcome of a coordinator run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Progressive validation at the final output node.
+    pub progressive: ProgressiveValidator,
+    /// Average progressive validation across feature shards *without*
+    /// master aggregation (the Fig 0.5(a) series).
+    pub shard_progressive: ProgressiveValidator,
+    /// Instances processed (all passes).
+    pub instances: u64,
+    /// Wall-clock of the (single-threaded) logical run.
+    pub elapsed: std::time::Duration,
+}
+
+/// The multinode feature-sharding coordinator.
+pub struct Coordinator {
+    pub cfg: RunConfig,
+    graph: NodeGraph,
+    sharder: FeatureSharder,
+    nodes: Vec<NodeLearner>,
+    pending: VecDeque<Pending>,
+    /// Scratch: per-leaf feature buffers reused across instances.
+    leaf_bufs: Vec<Vec<SparseFeat>>,
+    /// Weights of a centralized rule (Minibatch/CG/SGD) after training —
+    /// those rules own a single flat weight vector, not the node tree.
+    central_w: Option<Vec<f32>>,
+    /// Recycled [`Pending`] records (perf: the feedback rules would
+    /// otherwise allocate ~n vectors per instance).
+    pool: Vec<Pending>,
+    /// Scratch per-node predictions for the allocation-free local path.
+    scratch_preds: Vec<f64>,
+    /// Scratch input vector for internal nodes on the local path.
+    scratch_x: Vec<SparseFeat>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: RunConfig, dim: usize) -> Self {
+        let graph = cfg.topology.build();
+        let sharder = FeatureSharder::hash(graph.leaves);
+        let nodes = (0..graph.num_nodes())
+            .map(|id| {
+                let node_dim = if graph.is_leaf(id) {
+                    dim
+                } else {
+                    graph.children[id].len() + cfg.bias as usize
+                };
+                let lr = if graph.is_leaf(id) {
+                    cfg.lr
+                } else {
+                    cfg.master_lr.unwrap_or(cfg.lr)
+                };
+                NodeLearner::new(id, node_dim, cfg.loss, lr)
+            })
+            .collect();
+        let leaves = graph.leaves;
+        Coordinator {
+            cfg,
+            graph,
+            sharder,
+            nodes,
+            pending: VecDeque::new(),
+            leaf_bufs: vec![Vec::new(); leaves],
+            central_w: None,
+            pool: Vec::new(),
+            scratch_preds: Vec::new(),
+            scratch_x: Vec::new(),
+        }
+    }
+
+    /// Pass a prediction upward, optionally clipped to [0,1]
+    /// (Fig 0.5(b): "this output prediction is then thresholded to the
+    /// interval [0,1] ... and passed to a final prediction node").
+    #[inline]
+    fn upward(&self, p: f64) -> f64 {
+        if self.cfg.clip01 {
+            p.clamp(0.0, 1.0)
+        } else {
+            p
+        }
+    }
+
+    /// Allocation-free forward + local-learn sweep (the Local rule's hot
+    /// path: no feedback phase, so nothing needs to outlive the call).
+    /// Per-node predictions are left in `self.scratch_preds`.
+    fn forward_local(&mut self, features: &[SparseFeat], label: f64) -> f64 {
+        let n = self.graph.num_nodes();
+        self.scratch_preds.clear();
+        self.scratch_preds.resize(n, 0.0);
+        self.sharder.split_features_into(features, &mut self.leaf_bufs);
+        for leaf in 0..self.graph.leaves {
+            let x = std::mem::take(&mut self.leaf_bufs[leaf]);
+            let (pre, _g) = self.nodes[leaf].local_learn(&x, label);
+            self.scratch_preds[leaf] = pre;
+            self.leaf_bufs[leaf] = x; // hand the buffer back
+        }
+        for id in self.graph.leaves..n {
+            let mut x = std::mem::take(&mut self.scratch_x);
+            x.clear();
+            let kids = &self.graph.children[id];
+            for (rank, &c) in kids.iter().enumerate() {
+                x.push((rank as u32, self.upward(self.scratch_preds[c]) as f32));
+            }
+            if self.cfg.bias {
+                x.push((kids.len() as u32, 1.0));
+            }
+            let (pre, _g) = self.nodes[id].local_learn(&x, label);
+            self.scratch_preds[id] = pre;
+            self.scratch_x = x;
+        }
+        self.scratch_preds[self.graph.root]
+    }
+
+    /// Forward sweep for one instance: returns the filled [`Pending`]
+    /// plus the average-of-leaves prediction record. Reuses pooled
+    /// [`Pending`] buffers (returned by [`Self::feedback`]).
+    fn forward(&mut self, features: &[SparseFeat], label: f64) -> Pending {
+        let n = self.graph.num_nodes();
+        let recycled = self.pool.pop();
+        let (mut inputs, mut preds, mut local_g) = match recycled {
+            Some(mut p) => {
+                for v in &mut p.inputs {
+                    v.clear();
+                }
+                p.inputs.reverse(); // pop() below consumes from the back
+                p.preds.clear();
+                p.local_g.clear();
+                (p.inputs, p.preds, p.local_g)
+            }
+            None => (Vec::with_capacity(n), Vec::new(), Vec::new()),
+        };
+        let mut recycled_bufs = std::mem::take(&mut inputs);
+        preds.resize(n, 0.0);
+        local_g.resize(n, 0.0);
+        let mut inputs: Vec<Vec<SparseFeat>> = Vec::with_capacity(n);
+        let mut next_buf = move || recycled_bufs.pop().unwrap_or_default();
+        let do_local = matches!(
+            self.cfg.rule,
+            UpdateRule::Local | UpdateRule::Corrective | UpdateRule::Backprop { .. }
+        );
+        // §0.6.3: backprop sends the prediction made with the *updated*
+        // weights; Local/Corrective send the pre-update prediction.
+        let predict_after_update =
+            matches!(self.cfg.rule, UpdateRule::Backprop { .. });
+
+        // leaves (no feature clone: split straight from the slice)
+        self.sharder.split_features_into(features, &mut self.leaf_bufs);
+        for leaf in 0..self.graph.leaves {
+            // swap the filled buffer out, leaving a recycled one with
+            // retained capacity for the next instance's split
+            let mut x = next_buf();
+            std::mem::swap(&mut x, &mut self.leaf_bufs[leaf]);
+            let p;
+            if do_local {
+                let (pre, g) = self.nodes[leaf].local_learn(&x, label);
+                local_g[leaf] = g;
+                p = if predict_after_update {
+                    self.nodes[leaf].predict(&x)
+                } else {
+                    pre
+                };
+            } else {
+                p = self.nodes[leaf].predict(&x);
+            }
+            preds[leaf] = p;
+            inputs.push(x);
+        }
+        // internal nodes, bottom-up (children have smaller ids)
+        for id in self.graph.leaves..n {
+            let kids = &self.graph.children[id];
+            let mut x = next_buf();
+            x.reserve(kids.len() + 1);
+            for (rank, &c) in kids.iter().enumerate() {
+                x.push((rank as u32, self.upward(preds[c]) as f32));
+            }
+            if self.cfg.bias {
+                x.push((kids.len() as u32, 1.0)); // constant feature
+            }
+            let p;
+            if do_local {
+                let (pre, g) = self.nodes[id].local_learn(&x, label);
+                local_g[id] = g;
+                p = if predict_after_update {
+                    self.nodes[id].predict(&x)
+                } else {
+                    pre
+                };
+            } else {
+                p = self.nodes[id].predict(&x);
+            }
+            preds[id] = p;
+            inputs.push(x);
+        }
+        let final_pred = preds[self.graph.root];
+        Pending { label, inputs, preds, local_g, final_pred }
+    }
+
+    /// Apply the master's feedback for one pending instance (§0.6 rules).
+    /// The drained record's buffers go back to the pool.
+    fn feedback(&mut self, p: Pending) {
+        self.feedback_inner(&p);
+        self.pool.push(p);
+    }
+
+    fn feedback_inner(&mut self, p: &Pending) {
+        let root = self.graph.root;
+        let g_final = self.nodes[root].dloss_at(p.final_pred, p.label);
+        match self.cfg.rule {
+            UpdateRule::Local => {} // no global phase
+            UpdateRule::DelayedGlobal => {
+                // §0.6.1: every node updates as if it had made the final
+                // prediction itself.
+                for id in 0..self.graph.num_nodes() {
+                    self.nodes[id].gradient_step(&p.inputs[id], g_final);
+                }
+            }
+            UpdateRule::Corrective => {
+                // §0.6.2: replace the earlier local gradient with the
+                // global one: apply (g_global − g_local).
+                for id in 0..self.graph.num_nodes() {
+                    self.nodes[id]
+                        .gradient_step(&p.inputs[id], g_final - p.local_g[id]);
+                }
+            }
+            UpdateRule::Backprop { multiplier } => {
+                // §0.6.3: chain rule down the tree. feedback[id] is
+                // dℓ/d(pred_id) · multiplier at the root.
+                let n = self.graph.num_nodes();
+                let mut fb = vec![0.0f64; n];
+                fb[root] = multiplier * g_final;
+                for id in (self.graph.leaves..n).rev() {
+                    let g_up = fb[id];
+                    if g_up == 0.0 {
+                        continue;
+                    }
+                    // weight grad w.r.t. this node's own weights
+                    self.nodes[id].gradient_step(&p.inputs[id], g_up);
+                    // propagate to children: dℓ/dp_c = g_up · w_{id,c} ·
+                    // 1{clip pass-through}
+                    let kids = self.graph.children[id].clone();
+                    for (rank, &c) in kids.iter().enumerate() {
+                        let w = self.nodes[id].weights()[rank] as f64;
+                        let pass = if self.cfg.clip01 {
+                            let pc = p.preds[c];
+                            if (0.0..=1.0).contains(&pc) {
+                                1.0
+                            } else {
+                                0.0
+                            }
+                        } else {
+                            1.0
+                        };
+                        fb[c] = g_up * w * pass;
+                    }
+                }
+                for leaf in 0..self.graph.leaves {
+                    if fb[leaf] != 0.0 {
+                        self.nodes[leaf].gradient_step(&p.inputs[leaf], fb[leaf]);
+                    }
+                }
+            }
+            // centralized rules never reach the tree path
+            UpdateRule::Minibatch { .. } | UpdateRule::Cg { .. } | UpdateRule::Sgd => {
+                unreachable!("centralized rules use their own trainers")
+            }
+        }
+    }
+
+    /// Predict with the current weights (no learning) — test-set path.
+    pub fn predict(&self, features: &[SparseFeat]) -> f64 {
+        if let Some(w) = &self.central_w {
+            return crate::linalg::sparse_dot(w, features);
+        }
+        let mut preds = vec![0.0f64; self.graph.num_nodes()];
+        let mut parts: Vec<Vec<SparseFeat>> = vec![Vec::new(); self.graph.leaves];
+        let inst = crate::data::instance::Instance::new(0.0, features.to_vec());
+        self.sharder.split_into(&inst, &mut parts);
+        for leaf in 0..self.graph.leaves {
+            preds[leaf] = self.nodes[leaf].predict(&parts[leaf]);
+        }
+        for id in self.graph.leaves..self.graph.num_nodes() {
+            let kids = &self.graph.children[id];
+            let mut x: Vec<SparseFeat> = Vec::with_capacity(kids.len() + 1);
+            for (rank, &c) in kids.iter().enumerate() {
+                x.push((rank as u32, self.upward(preds[c]) as f32));
+            }
+            if self.cfg.bias {
+                x.push((kids.len() as u32, 1.0));
+            }
+            preds[id] = self.nodes[id].predict(&x);
+        }
+        preds[self.graph.root]
+    }
+
+    /// Run the full τ-scheduled training over the dataset (with
+    /// `cfg.passes` passes). Centralized rules dispatch out.
+    pub fn train(&mut self, ds: &Dataset) -> TrainReport {
+        match self.cfg.rule {
+            UpdateRule::Minibatch { batch } => {
+                let (rep, w) = minibatch::train_weights(&self.cfg, ds, batch);
+                self.central_w = Some(w);
+                return rep;
+            }
+            UpdateRule::Sgd => {
+                let (rep, w) = minibatch::train_weights(&self.cfg, ds, 1);
+                self.central_w = Some(w);
+                return rep;
+            }
+            UpdateRule::Cg { batch } => {
+                let (rep, w) = cg::train_weights(&self.cfg, ds, batch);
+                self.central_w =
+                    Some(w.into_iter().map(|x| x as f32).collect());
+                return rep;
+            }
+            _ => {}
+        }
+        let start = std::time::Instant::now();
+        let mut progressive = ProgressiveValidator::with_loss(self.cfg.loss);
+        let mut shard_pv = ProgressiveValidator::with_loss(self.cfg.loss);
+        let total = (ds.len() * self.cfg.passes) as u64;
+        let tau = if self.cfg.rule == UpdateRule::Local { 0 } else { self.cfg.tau };
+        let sched = DelaySchedule::new(tau);
+        let instances: Vec<&crate::data::instance::Instance> =
+            ds.passes(self.cfg.passes).collect();
+        for op in sched.ops(total) {
+            match op {
+                Op::Local(t) => {
+                    let inst = instances[t as usize];
+                    if self.cfg.rule == UpdateRule::Local {
+                        // allocation-free path: no feedback phase
+                        let final_pred =
+                            self.forward_local(&inst.features, inst.label);
+                        progressive.observe(final_pred, inst.label);
+                        for leaf in 0..self.graph.leaves {
+                            shard_pv.observe(self.scratch_preds[leaf], inst.label);
+                        }
+                    } else {
+                        let pend = self.forward(&inst.features, inst.label);
+                        progressive.observe(pend.final_pred, inst.label);
+                        for leaf in 0..self.graph.leaves {
+                            shard_pv.observe(pend.preds[leaf], inst.label);
+                        }
+                        self.pending.push_back(pend);
+                    }
+                }
+                Op::Global(_) => {
+                    if self.cfg.rule != UpdateRule::Local {
+                        let pend =
+                            self.pending.pop_front().expect("schedule invariant");
+                        self.feedback(pend);
+                    }
+                }
+            }
+        }
+        TrainReport {
+            progressive,
+            shard_progressive: shard_pv,
+            instances: total,
+            elapsed: start.elapsed(),
+        }
+    }
+
+    pub fn graph(&self) -> &NodeGraph {
+        &self.graph
+    }
+
+    pub fn nodes(&self) -> &[NodeLearner] {
+        &self.nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+    use crate::loss::Loss;
+    use crate::lr::LrSchedule;
+    use crate::topology::Topology;
+
+    fn small_ds() -> Dataset {
+        RcvLikeGen::new(SynthConfig {
+            instances: 3_000,
+            features: 400,
+            density: 15,
+            hash_bits: 12,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    fn cfg(rule: UpdateRule, shards: usize) -> RunConfig {
+        RunConfig {
+            topology: Topology::TwoLayer { shards },
+            rule,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(4.0, 1.0),
+            master_lr: None,
+            tau: 64,
+            clip01: false,
+            bias: true,
+            passes: 1,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn local_rule_learns() {
+        let ds = small_ds();
+        let mut c = Coordinator::new(cfg(UpdateRule::Local, 4), ds.dim);
+        let rep = c.train(&ds);
+        assert!(rep.progressive.accuracy() > 0.62, "{}", rep.progressive.accuracy());
+    }
+
+    #[test]
+    fn backprop_rule_learns() {
+        let ds = small_ds();
+        let mut c =
+            Coordinator::new(cfg(UpdateRule::Backprop { multiplier: 1.0 }, 4), ds.dim);
+        let rep = c.train(&ds);
+        assert!(rep.progressive.accuracy() > 0.6, "{}", rep.progressive.accuracy());
+    }
+
+    #[test]
+    fn deterministic_same_seed() {
+        let ds = small_ds();
+        let run = || {
+            let mut c = Coordinator::new(
+                cfg(UpdateRule::Backprop { multiplier: 2.0 }, 4),
+                ds.dim,
+            );
+            let rep = c.train(&ds);
+            (rep.progressive.mean_loss(), c.nodes[0].weights()[0])
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn single_shard_local_equals_single_node_sgd_at_leaf() {
+        // shard count 1: the leaf sees every feature, so its progressive
+        // predictions must equal a plain SGD run (Fig 0.5: "the solution
+        // on that shard is identical to the single node solution").
+        use crate::learner::OnlineLearner;
+        let ds = small_ds();
+        let mut c = Coordinator::new(cfg(UpdateRule::Local, 1), ds.dim);
+        let mut sgd = crate::learner::sgd::Sgd::new(
+            ds.dim,
+            Loss::Logistic,
+            LrSchedule::inv_sqrt(4.0, 1.0),
+        );
+        let mut sgd_preds = Vec::new();
+        for inst in ds.iter() {
+            sgd_preds.push(sgd.predict(&inst.features));
+            sgd.learn(&inst.features, inst.label);
+        }
+        let _ = c.train(&ds);
+        // re-run forward over a fresh coordinator to capture leaf preds
+        let mut c2 = Coordinator::new(cfg(UpdateRule::Local, 1), ds.dim);
+        let mut leaf_preds = Vec::new();
+        for inst in ds.iter() {
+            let p = c2.forward(&inst.features, inst.label);
+            leaf_preds.push(p.preds[0]);
+        }
+        for (a, b) in leaf_preds.iter().zip(&sgd_preds) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tree_rules_all_run() {
+        let ds = small_ds();
+        for rule in [
+            UpdateRule::Local,
+            UpdateRule::DelayedGlobal,
+            UpdateRule::Corrective,
+            UpdateRule::Backprop { multiplier: 8.0 },
+        ] {
+            let mut c = Coordinator::new(cfg(rule, 4), ds.dim);
+            let rep = c.train(&ds);
+            assert_eq!(rep.instances, 3_000);
+            assert!(rep.progressive.mean_loss().is_finite(), "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn binary_tree_topology_runs() {
+        let ds = small_ds();
+        let mut config = cfg(UpdateRule::Local, 8);
+        config.topology = Topology::BinaryTree { leaves: 8 };
+        let mut c = Coordinator::new(config, ds.dim);
+        let rep = c.train(&ds);
+        assert!(rep.progressive.accuracy() > 0.55);
+    }
+
+    #[test]
+    fn multipass_improves() {
+        let ds = small_ds();
+        let mut c1 = Coordinator::new(cfg(UpdateRule::Local, 8), ds.dim);
+        let r1 = c1.train(&ds);
+        let mut c16 = {
+            let mut config = cfg(UpdateRule::Local, 8);
+            config.passes = 8;
+            Coordinator::new(config, ds.dim)
+        };
+        let r16 = c16.train(&ds);
+        // accuracy over the final pass is what improves; progressive over
+        // all passes still should not be worse
+        assert!(r16.progressive.accuracy() >= r1.progressive.accuracy() - 0.02);
+    }
+
+    #[test]
+    fn predict_consistent_with_training_state() {
+        let ds = small_ds();
+        let mut c = Coordinator::new(cfg(UpdateRule::Local, 4), ds.dim);
+        c.train(&ds);
+        let (test_loss, acc) = crate::metrics::test_metrics(
+            Loss::Logistic,
+            |x| c.predict(x),
+            &ds.instances[..500],
+        );
+        assert!(test_loss.is_finite());
+        assert!(acc > 0.6, "acc {acc}");
+    }
+}

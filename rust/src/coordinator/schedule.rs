@@ -1,0 +1,167 @@
+//! The §0.6.6 deterministic delay schedule.
+//!
+//! Physical delay varies per instance and per node, which would make
+//! learned weights irreproducible. The paper's implementation instead
+//! imposes a fixed logical delay: "the subordinate node switches between
+//! local training on new instances and global training on old instances
+//! in a round robin fashion, after an initial period of local training
+//! only, that maintains τ = 1024 ... It would also wait for instances to
+//! become available if doing otherwise would cause τ < 1024, unless the
+//! node is processing the last 1024 instances in the training set."
+//!
+//! [`DelaySchedule::ops`] materializes exactly that order as a sequence
+//! of [`Op`]s over a stream of `total` instances: local ops for
+//! t = 0..τ, then alternating Local(t)/Global(t−τ), then the trailing τ
+//! globals. Every coordinator rule consumes this iterator, so all rules
+//! share the identical, reproducible interleaving.
+
+/// One scheduled operation at a subordinate node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Process new instance `t`: predict, send prediction up, maybe
+    /// local-train.
+    Local(u64),
+    /// Apply the master's feedback for instance `t` (received τ later).
+    Global(u64),
+}
+
+/// Deterministic τ-delay round-robin schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct DelaySchedule {
+    pub tau: u64,
+}
+
+impl DelaySchedule {
+    /// The paper's default: τ = 1024, half the node's 2048-instance
+    /// buffer ("a maximum latency of 2048 instances is allowed").
+    pub const PAPER_TAU: u64 = 1024;
+
+    pub fn new(tau: u64) -> Self {
+        DelaySchedule { tau }
+    }
+
+    /// The exact operation order for a stream of `total` instances.
+    pub fn ops(&self, total: u64) -> impl Iterator<Item = Op> {
+        let tau = self.tau.min(total);
+        let head = (0..tau).map(Op::Local);
+        let body = (tau..total).flat_map(move |t| {
+            [Op::Local(t), Op::Global(t - tau)]
+        });
+        let tail = (total.saturating_sub(tau)..total).map(Op::Global);
+        head.chain(body).chain(tail)
+    }
+
+    /// Number of ops the schedule will produce.
+    pub fn len(&self, total: u64) -> u64 {
+        2 * total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_schedule_exact() {
+        let s = DelaySchedule::new(2);
+        let ops: Vec<Op> = s.ops(5).collect();
+        assert_eq!(
+            ops,
+            vec![
+                Op::Local(0),
+                Op::Local(1),
+                Op::Local(2),
+                Op::Global(0),
+                Op::Local(3),
+                Op::Global(1),
+                Op::Local(4),
+                Op::Global(2),
+                Op::Global(3),
+                Op::Global(4),
+            ]
+        );
+    }
+
+    #[test]
+    fn every_instance_once_each_way() {
+        let s = DelaySchedule::new(7);
+        let ops: Vec<Op> = s.ops(100).collect();
+        let locals: Vec<u64> = ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Local(t) => Some(*t),
+                _ => None,
+            })
+            .collect();
+        let globals: Vec<u64> = ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Global(t) => Some(*t),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(locals, (0..100).collect::<Vec<_>>());
+        assert_eq!(globals, (0..100).collect::<Vec<_>>());
+        assert_eq!(ops.len() as u64, s.len(100));
+    }
+
+    #[test]
+    fn delay_is_exactly_tau() {
+        // between Local(t) and Global(t) there are exactly τ Local ops
+        // strictly after Local(t) — i.e. τ new instances are processed
+        // before t's feedback lands (except in the tail).
+        let tau = 5u64;
+        let s = DelaySchedule::new(tau);
+        let ops: Vec<Op> = s.ops(50).collect();
+        for t in 0..(50 - tau) {
+            let li = ops.iter().position(|&o| o == Op::Local(t)).unwrap();
+            let gi = ops.iter().position(|&o| o == Op::Global(t)).unwrap();
+            let between = ops[li + 1..gi]
+                .iter()
+                .filter(|o| matches!(o, Op::Local(_)))
+                .count() as u64;
+            assert_eq!(between, tau, "t={t}");
+        }
+    }
+
+    #[test]
+    fn global_never_precedes_local() {
+        let s = DelaySchedule::new(16);
+        let mut seen = std::collections::HashSet::new();
+        for op in s.ops(200) {
+            match op {
+                Op::Local(t) => {
+                    seen.insert(t);
+                }
+                Op::Global(t) => assert!(seen.contains(&t)),
+            }
+        }
+    }
+
+    #[test]
+    fn tau_zero_interleaves_immediately() {
+        let s = DelaySchedule::new(0);
+        let ops: Vec<Op> = s.ops(3).collect();
+        assert_eq!(
+            ops,
+            vec![
+                Op::Local(0),
+                Op::Global(0),
+                Op::Local(1),
+                Op::Global(1),
+                Op::Local(2),
+                Op::Global(2),
+            ]
+        );
+    }
+
+    #[test]
+    fn tau_larger_than_stream() {
+        let s = DelaySchedule::new(1000);
+        let ops: Vec<Op> = s.ops(10).collect();
+        assert_eq!(ops.len(), 20);
+        // all locals first, then all globals
+        assert!(ops[..10].iter().all(|o| matches!(o, Op::Local(_))));
+        assert!(ops[10..].iter().all(|o| matches!(o, Op::Global(_))));
+    }
+}

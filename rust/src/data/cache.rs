@@ -1,0 +1,211 @@
+//! Binary cache format for parsed datasets.
+//!
+//! The paper (§0.2) credits VW's speed partly to "a good choice of cache
+//! format": parse the text once, then stream a compact binary encoding
+//! on every subsequent pass. Ours is a simple length-prefixed record
+//! stream with varint-delta feature indices — the same idea.
+//!
+//! Layout:
+//! ```text
+//! magic "POLC" | u32 version | u64 dim | u64 count
+//! per record: f64 label | f32 weight | u64 tag | u32 nfeat
+//!             nfeat × (varint delta-index, f32 value)
+//! ```
+
+use std::io::{self, Read, Write};
+
+use crate::data::instance::Instance;
+use crate::data::Dataset;
+
+const MAGIC: &[u8; 4] = b"POLC";
+const VERSION: u32 = 1;
+
+fn write_varint(mut v: u64, out: &mut impl Write) -> io::Result<()> {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.write_all(&[b])?;
+            return Ok(());
+        }
+        out.write_all(&[b | 0x80])?;
+    }
+}
+
+fn read_varint(inp: &mut impl Read) -> io::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0;
+    loop {
+        let mut b = [0u8; 1];
+        inp.read_exact(&mut b)?;
+        v |= ((b[0] & 0x7f) as u64) << shift;
+        if b[0] & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "varint"));
+        }
+    }
+}
+
+/// Serialize a dataset to the cache format.
+pub fn write_cache(ds: &Dataset, out: &mut impl Write) -> io::Result<()> {
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&(ds.dim as u64).to_le_bytes())?;
+    out.write_all(&(ds.len() as u64).to_le_bytes())?;
+    let mut sorted: Vec<(u32, f32)> = Vec::new();
+    for inst in &ds.instances {
+        out.write_all(&inst.label.to_le_bytes())?;
+        out.write_all(&inst.weight.to_le_bytes())?;
+        out.write_all(&inst.tag.to_le_bytes())?;
+        out.write_all(&(inst.features.len() as u32).to_le_bytes())?;
+        sorted.clear();
+        sorted.extend_from_slice(&inst.features);
+        sorted.sort_unstable_by_key(|&(i, _)| i);
+        let mut prev = 0u64;
+        for &(i, v) in &sorted {
+            write_varint(i as u64 - prev, out)?;
+            out.write_all(&v.to_le_bytes())?;
+            prev = i as u64;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a cache stream.
+pub fn read_cache(inp: &mut impl Read, name: &str) -> io::Result<Dataset> {
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    inp.read_exact(&mut u32b)?;
+    if u32::from_le_bytes(u32b) != VERSION {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad version"));
+    }
+    inp.read_exact(&mut u64b)?;
+    let dim = u64::from_le_bytes(u64b) as usize;
+    inp.read_exact(&mut u64b)?;
+    let count = u64::from_le_bytes(u64b);
+    let mut ds = Dataset::new(name, dim);
+    ds.instances.reserve(count as usize);
+    let mut f32b = [0u8; 4];
+    for _ in 0..count {
+        inp.read_exact(&mut u64b)?;
+        let label = f64::from_le_bytes(u64b);
+        inp.read_exact(&mut f32b)?;
+        let weight = f32::from_le_bytes(f32b);
+        inp.read_exact(&mut u64b)?;
+        let tag = u64::from_le_bytes(u64b);
+        inp.read_exact(&mut u32b)?;
+        let nfeat = u32::from_le_bytes(u32b) as usize;
+        let mut features = Vec::with_capacity(nfeat);
+        let mut prev = 0u64;
+        for _ in 0..nfeat {
+            let delta = read_varint(inp)?;
+            prev += delta;
+            inp.read_exact(&mut f32b)?;
+            features.push((prev as u32, f32::from_le_bytes(f32b)));
+        }
+        ds.instances.push(Instance { label, weight, features, tag });
+    }
+    Ok(ds)
+}
+
+/// Write to / read from a file path.
+pub fn save(ds: &Dataset, path: &std::path::Path) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_cache(ds, &mut f)
+}
+
+pub fn load(path: &std::path::Path, name: &str) -> io::Result<Dataset> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    read_cache(&mut f, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn make_ds(n: usize) -> Dataset {
+        let mut rng = Rng::new(1);
+        let mut ds = Dataset::new("c", 1 << 16);
+        for t in 0..n {
+            let k = 1 + rng.below(20) as usize;
+            let features = (0..k)
+                .map(|_| (rng.below(1 << 16) as u32, rng.normal() as f32))
+                .collect();
+            ds.instances.push(Instance {
+                label: rng.below(2) as f64,
+                weight: 1.0,
+                features,
+                tag: t as u64,
+            });
+        }
+        ds
+    }
+
+    #[test]
+    fn roundtrip_preserves_sorted_features() {
+        let ds = make_ds(200);
+        let mut buf = Vec::new();
+        write_cache(&ds, &mut buf).unwrap();
+        let back = read_cache(&mut buf.as_slice(), "c").unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.dim, ds.dim);
+        for (a, b) in ds.instances.iter().zip(&back.instances) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.tag, b.tag);
+            let mut fa = a.features.clone();
+            fa.sort_unstable_by_key(|&(i, _)| i);
+            assert_eq!(fa, b.features);
+        }
+    }
+
+    #[test]
+    fn cache_smaller_than_naive() {
+        // delta-varint beats fixed u32 indices on sorted sparse rows
+        let ds = make_ds(500);
+        let mut buf = Vec::new();
+        write_cache(&ds, &mut buf).unwrap();
+        let naive: usize = ds
+            .instances
+            .iter()
+            .map(|i| 8 + 4 + 8 + 4 + i.features.len() * 8)
+            .sum();
+        assert!(buf.len() < naive, "{} !< {}", buf.len(), naive);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = b"XXXX".to_vec();
+        buf.extend_from_slice(&[0u8; 32]);
+        assert!(read_cache(&mut buf.as_slice(), "x").is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX / 2] {
+            let mut buf = Vec::new();
+            write_varint(v, &mut buf).unwrap();
+            assert_eq!(read_varint(&mut buf.as_slice()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = make_ds(50);
+        let dir = std::env::temp_dir().join("pol_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.polc");
+        save(&ds, &path).unwrap();
+        let back = load(&path, "t").unwrap();
+        assert_eq!(back.len(), 50);
+        std::fs::remove_file(&path).ok();
+    }
+}

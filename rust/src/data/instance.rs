@@ -1,0 +1,72 @@
+//! The labeled-instance type flowing through every learner and node.
+
+use crate::linalg::SparseFeat;
+
+/// A labeled, hashed, sparse instance.
+///
+/// `features` carry *hashed* indices into a `2^bits` weight table, values
+/// already multiplied by the hashing sign. The label convention depends
+/// on the loss: `[0,1]` for squared (click prediction), `{-1,+1}` for
+/// logistic/hinge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Instance {
+    pub label: f64,
+    /// Importance weight (1.0 for all paper experiments).
+    pub weight: f32,
+    /// Sorted-by-index not required; duplicates allowed (they add).
+    pub features: Vec<SparseFeat>,
+    /// Stable id for delay bookkeeping and deterministic tracing.
+    pub tag: u64,
+}
+
+impl Instance {
+    pub fn new(label: f64, features: Vec<SparseFeat>) -> Self {
+        Instance { label, weight: 1.0, features, tag: 0 }
+    }
+
+    pub fn with_tag(mut self, tag: u64) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    /// Restrict to the features a shard owns (indices for which `keep`
+    /// returns true) — Fig 0.4 step (b).
+    pub fn project(&self, keep: impl Fn(u32) -> bool) -> Instance {
+        Instance {
+            label: self.label,
+            weight: self.weight,
+            features: self
+                .features
+                .iter()
+                .copied()
+                .filter(|&(i, _)| keep(i))
+                .collect(),
+            tag: self.tag,
+        }
+    }
+
+    /// L2 norm of the feature vector.
+    pub fn norm(&self) -> f64 {
+        crate::linalg::sparse_norm_sq(&self.features).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn project_keeps_subset() {
+        let inst = Instance::new(1.0, vec![(0, 1.0), (3, 2.0), (5, -1.0)]);
+        let p = inst.project(|i| i >= 3);
+        assert_eq!(p.features, vec![(3, 2.0), (5, -1.0)]);
+        assert_eq!(p.label, 1.0);
+        assert_eq!(p.tag, inst.tag);
+    }
+
+    #[test]
+    fn norm_basic() {
+        let inst = Instance::new(0.0, vec![(0, 3.0), (1, 4.0)]);
+        assert!((inst.norm() - 5.0).abs() < 1e-12);
+    }
+}

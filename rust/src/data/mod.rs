@@ -1,0 +1,120 @@
+//! Data pipeline: instance format, VW-style text parser, binary cache,
+//! and synthetic dataset generators (the paper's datasets are either
+//! proprietary or hardware-gated; DESIGN.md §3 documents the
+//! substitutions).
+
+pub mod cache;
+pub mod instance;
+pub mod parser;
+pub mod synth;
+
+use instance::Instance;
+
+/// An in-memory dataset plus the metadata learners need.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Hashed feature-space size (weight-table length learners allocate).
+    pub dim: usize,
+    pub instances: Vec<Instance>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, dim: usize) -> Self {
+        Dataset { name: name.into(), dim, instances: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Instance> {
+        self.instances.iter()
+    }
+
+    /// Split off the last `frac` fraction as a test set (time-ordered
+    /// split — the natural choice for online data).
+    pub fn split_test(mut self, frac: f64) -> (Dataset, Dataset) {
+        let n = self.instances.len();
+        let cut = ((n as f64) * (1.0 - frac)).round() as usize;
+        let test_insts = self.instances.split_off(cut.min(n));
+        let test = Dataset {
+            name: format!("{}-test", self.name),
+            dim: self.dim,
+            instances: test_insts,
+        };
+        self.name = format!("{}-train", self.name);
+        (self, test)
+    }
+
+    /// Total non-zero feature count (the paper sizes datasets this way:
+    /// "60M total (non-unique) features").
+    pub fn total_features(&self) -> u64 {
+        self.instances.iter().map(|i| i.features.len() as u64).sum()
+    }
+
+    /// Mean features per instance.
+    pub fn mean_features(&self) -> f64 {
+        if self.instances.is_empty() {
+            0.0
+        } else {
+            self.total_features() as f64 / self.len() as f64
+        }
+    }
+
+    /// Deterministically shuffle instance order.
+    pub fn shuffle(&mut self, rng: &mut crate::rng::Rng) {
+        rng.shuffle(&mut self.instances);
+    }
+
+    /// Repeat the dataset for multi-pass training (Fig 0.6 rows 3–4).
+    pub fn passes(&self, n: usize) -> impl Iterator<Item = &Instance> {
+        std::iter::repeat_with(move || self.instances.iter())
+            .take(n)
+            .flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::instance::Instance;
+
+    fn tiny() -> Dataset {
+        let mut ds = Dataset::new("t", 8);
+        for i in 0..10 {
+            ds.instances.push(Instance {
+                label: (i % 2) as f64,
+                weight: 1.0,
+                features: vec![(i as u32 % 8, 1.0)],
+                tag: i as u64,
+            });
+        }
+        ds
+    }
+
+    #[test]
+    fn split_test_sizes() {
+        let (tr, te) = tiny().split_test(0.3);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+        assert_eq!(te.instances[0].tag, 7);
+    }
+
+    #[test]
+    fn passes_iterates_n_times() {
+        let ds = tiny();
+        assert_eq!(ds.passes(3).count(), 30);
+    }
+
+    #[test]
+    fn feature_counts() {
+        let ds = tiny();
+        assert_eq!(ds.total_features(), 10);
+        assert!((ds.mean_features() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,268 @@
+//! VW-style text-format parser.
+//!
+//! Grammar (subset of Vowpal Wabbit's input format, enough for real
+//! datasets in that format):
+//!
+//! ```text
+//! <label> [<importance>] ['<tag>] |<ns>[:<scale>] f[:v] f[:v] ... |<ns2> ...
+//! ```
+//!
+//! Example: `1 0.5 'id42 |user age:0.31 premium |ad sports id77`
+//!
+//! Features are hashed with [`FeatureHasher`] per namespace. Quadratic
+//! (outer-product) namespaces à la `-q ua` are generated on the fly —
+//! the paper's §0.2 interaction features — via [`ParserConfig::quadratic`].
+
+use crate::data::instance::Instance;
+use crate::hashing::FeatureHasher;
+use crate::linalg::SparseFeat;
+
+#[derive(Clone, Debug, Default)]
+pub struct ParserConfig {
+    /// Pairs of namespace initials to cross, e.g. `[('u','a')]` for
+    /// VW's `-q ua` (user×ad outer-product features).
+    pub quadratic: Vec<(char, char)>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ParseError {
+    #[error("empty line")]
+    Empty,
+    #[error("bad label: {0}")]
+    BadLabel(String),
+    #[error("bad feature value: {0}")]
+    BadValue(String),
+}
+
+pub struct Parser {
+    hasher: FeatureHasher,
+    config: ParserConfig,
+    line_no: u64,
+}
+
+impl Parser {
+    pub fn new(hasher: FeatureHasher, config: ParserConfig) -> Self {
+        Parser { hasher, config, line_no: 0 }
+    }
+
+    /// Parse one line into a hashed instance.
+    pub fn parse_line(&mut self, line: &str) -> Result<Instance, ParseError> {
+        self.line_no += 1;
+        let line = line.trim();
+        if line.is_empty() {
+            return Err(ParseError::Empty);
+        }
+        let (head, rest) = match line.find('|') {
+            Some(p) => (&line[..p], &line[p..]),
+            None => (line, ""),
+        };
+
+        // head: label [importance] ['tag]
+        let mut label = 0.0;
+        let mut weight = 1.0f32;
+        let mut tag = self.line_no;
+        let mut saw_label = false;
+        for tok in head.split_whitespace() {
+            if let Some(t) = tok.strip_prefix('\'') {
+                // numeric tags kept; others hashed for stability
+                tag = t
+                    .parse::<u64>()
+                    .unwrap_or_else(|_| crate::hashing::murmur3_32(t.as_bytes(), 0) as u64);
+            } else if !saw_label {
+                label = tok
+                    .parse::<f64>()
+                    .map_err(|_| ParseError::BadLabel(tok.into()))?;
+                saw_label = true;
+            } else {
+                weight = tok
+                    .parse::<f32>()
+                    .map_err(|_| ParseError::BadValue(tok.into()))?;
+            }
+        }
+        if !saw_label {
+            return Err(ParseError::BadLabel(head.into()));
+        }
+
+        // namespace sections
+        let mut features: Vec<SparseFeat> = Vec::new();
+        // per-namespace-initial hashed indices, for quadratic expansion
+        let mut by_initial: Vec<(char, Vec<u32>)> = Vec::new();
+        for section in rest.split('|').skip(1) {
+            let mut toks = section.split_whitespace();
+            let (ns_name, ns_scale) = match toks.next() {
+                // "|ns" or "|ns:2.0" or "| f" (anonymous namespace: the
+                // first token is a feature if the section starts with a
+                // space — VW semantics; we approximate by treating a
+                // token containing ':' with a numeric tail OR any token
+                // as namespace only when the raw section doesn't start
+                // with whitespace)
+                Some(first) if !section.starts_with(char::is_whitespace) => {
+                    let (n, s) = split_scale(first);
+                    (n.to_string(), s)
+                }
+                Some(first) => {
+                    // anonymous namespace; `first` is a feature
+                    let seed = self.hasher.namespace_seed(b" ");
+                    push_feature(&self.hasher, seed, first, 1.0, &mut features)?;
+                    (" ".to_string(), 1.0)
+                }
+                None => (" ".to_string(), 1.0),
+            };
+            let seed = self.hasher.namespace_seed(ns_name.as_bytes());
+            let initial = ns_name.chars().next().unwrap_or(' ');
+            let start = features.len();
+            for tok in toks {
+                push_feature(&self.hasher, seed, tok, ns_scale, &mut features)?;
+            }
+            if self.config.quadratic.iter().any(|&(a, b)| a == initial || b == initial)
+            {
+                let idxs: Vec<u32> =
+                    features[start..].iter().map(|&(i, _)| i).collect();
+                match by_initial.iter_mut().find(|(c, _)| *c == initial) {
+                    Some((_, v)) => v.extend(idxs),
+                    None => by_initial.push((initial, idxs)),
+                }
+            }
+        }
+
+        // quadratic (outer-product) expansion, never read from disk (§0.2)
+        for &(a, b) in &self.config.quadratic {
+            let left = by_initial.iter().find(|(c, _)| *c == a);
+            let right = by_initial.iter().find(|(c, _)| *c == b);
+            if let (Some((_, ls)), Some((_, rs))) = (left, right) {
+                for &li in ls {
+                    for &ri in rs {
+                        let (idx, sign) = self.hasher.hash_pair(li, ri);
+                        features.push((idx, sign));
+                    }
+                }
+            }
+        }
+
+        Ok(Instance { label, weight, features, tag })
+    }
+
+    /// Parse a whole reader into a dataset, skipping malformed lines.
+    pub fn parse_all(
+        &mut self,
+        text: &str,
+        name: &str,
+    ) -> crate::data::Dataset {
+        let mut ds = crate::data::Dataset::new(name, self.hasher.table_size());
+        for line in text.lines() {
+            if let Ok(inst) = self.parse_line(line) {
+                ds.instances.push(inst);
+            }
+        }
+        ds
+    }
+}
+
+fn split_scale(tok: &str) -> (&str, f32) {
+    match tok.rsplit_once(':') {
+        Some((name, s)) => match s.parse::<f32>() {
+            Ok(v) => (name, v),
+            Err(_) => (tok, 1.0),
+        },
+        None => (tok, 1.0),
+    }
+}
+
+fn push_feature(
+    hasher: &FeatureHasher,
+    seed: u32,
+    tok: &str,
+    scale: f32,
+    out: &mut Vec<SparseFeat>,
+) -> Result<(), ParseError> {
+    let (name, value) = match tok.rsplit_once(':') {
+        Some((n, v)) => (
+            n,
+            v.parse::<f32>().map_err(|_| ParseError::BadValue(tok.into()))?,
+        ),
+        None => (tok, 1.0),
+    };
+    let (idx, sign) = hasher.hash(seed, name.as_bytes());
+    out.push((idx, sign * value * scale));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new(FeatureHasher::new(18), ParserConfig::default())
+    }
+
+    #[test]
+    fn basic_line() {
+        let mut p = parser();
+        let inst = p.parse_line("1 |f a b:2.5 c").unwrap();
+        assert_eq!(inst.label, 1.0);
+        assert_eq!(inst.features.len(), 3);
+        assert_eq!(inst.features[1].1, 2.5);
+    }
+
+    #[test]
+    fn importance_and_tag() {
+        let mut p = parser();
+        let inst = p.parse_line("-1 0.25 '77 |x q").unwrap();
+        assert_eq!(inst.label, -1.0);
+        assert_eq!(inst.weight, 0.25);
+        assert_eq!(inst.tag, 77);
+    }
+
+    #[test]
+    fn namespace_scale() {
+        let mut p = parser();
+        let inst = p.parse_line("0 |ns:2 a:3").unwrap();
+        assert_eq!(inst.features[0].1, 6.0);
+    }
+
+    #[test]
+    fn namespaces_hash_differently() {
+        let mut p = parser();
+        let a = p.parse_line("1 |user x").unwrap();
+        let b = p.parse_line("1 |ad x").unwrap();
+        assert_ne!(a.features[0].0, b.features[0].0);
+    }
+
+    #[test]
+    fn quadratic_expansion() {
+        let mut p = Parser::new(
+            FeatureHasher::new(18),
+            ParserConfig { quadratic: vec![('u', 'a')] },
+        );
+        let inst = p.parse_line("1 |user x y |ad z").unwrap();
+        // 3 base features + 2×1 cross features
+        assert_eq!(inst.features.len(), 5);
+    }
+
+    #[test]
+    fn bad_label_rejected() {
+        let mut p = parser();
+        assert!(matches!(
+            p.parse_line("abc |f x"),
+            Err(ParseError::BadLabel(_))
+        ));
+        assert_eq!(p.parse_line(""), Err(ParseError::Empty));
+    }
+
+    #[test]
+    fn parse_all_skips_bad_lines() {
+        let mut p = parser();
+        let ds = p.parse_all("1 |f a\nbroken\n0 |f b\n", "t");
+        assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn same_line_same_hashes() {
+        let mut p1 = parser();
+        let mut p2 = parser();
+        assert_eq!(
+            p1.parse_line("1 |f a b c").unwrap().features,
+            p2.parse_line("1 |f a b c").unwrap().features
+        );
+    }
+}

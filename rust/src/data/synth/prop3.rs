@@ -1,0 +1,108 @@
+//! Proposition 3's exact 4-point distribution: the binary-tree
+//! architecture can represent the least-squares predictor but Naïve
+//! Bayes cannot.
+//!
+//! | point | x1 | x2 | x3  |  y |
+//! |-------|----|----|-----|----|
+//! | 1     | +1 | +1 | −1/2| +1 |
+//! | 2     | +1 | −1 | −1  | −1 |
+//! | 3     | −1 | −1 | −1/2| +1 |
+//! | 4     | −1 | +1 | +1  | +1 |
+//!
+//! Paper: Naïve Bayes yields w = (−1/2, 1/2, 2/5) with MSE 0.8; the tree
+//! learns the extra layer weights, ultimately (−3/2, 3/2, −2) with zero
+//! MSE. Our tests in `rust/tests/test_propositions.rs` verify both
+//! numbers exactly.
+
+/// The four (x, y) points, uniformly distributed.
+pub const POINTS: [([f64; 3], f64); 4] = [
+    ([1.0, 1.0, -0.5], 1.0),
+    ([1.0, -1.0, -1.0], -1.0),
+    ([-1.0, -1.0, -0.5], 1.0),
+    ([-1.0, 1.0, 1.0], 1.0),
+];
+
+/// Naïve Bayes weights the paper states: (−1/2, 1/2, 2/5).
+pub const NAIVE_BAYES_W: [f64; 3] = [-0.5, 0.5, 0.4];
+
+/// Naïve Bayes MSE the paper states.
+pub const NAIVE_BAYES_MSE: f64 = 0.8;
+
+/// Final overall weight vector of the tree architecture: (−3/2, 3/2, −2).
+pub const TREE_W: [f64; 3] = [-1.5, 1.5, -2.0];
+
+/// Dimension of the feature space.
+pub const DIM: usize = 3;
+
+/// As a cyclically-repeating dataset of `n` instances (dense features at
+/// indices 0..3).
+pub fn dataset(n: usize) -> crate::data::Dataset {
+    let mut ds = crate::data::Dataset::new("prop3", DIM);
+    for t in 0..n {
+        let (x, y) = POINTS[t % 4];
+        ds.instances.push(crate::data::instance::Instance {
+            label: y,
+            weight: 1.0,
+            features: x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i as u32, v as f32))
+                .collect(),
+            tag: t as u64,
+        });
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_bayes_weights_are_per_feature_least_squares() {
+        // w_i^(0) = b_i / Σ_ii  (paper §0.5.2)
+        for i in 0..3 {
+            let b: f64 = POINTS.iter().map(|(x, y)| x[i] * y).sum::<f64>() / 4.0;
+            let s: f64 = POINTS.iter().map(|(x, _)| x[i] * x[i]).sum::<f64>() / 4.0;
+            assert!(
+                (b / s - NAIVE_BAYES_W[i]).abs() < 1e-12,
+                "feature {i}: {} vs {}",
+                b / s,
+                NAIVE_BAYES_W[i]
+            );
+        }
+    }
+
+    #[test]
+    fn naive_bayes_mse_is_point_eight() {
+        let mse: f64 = POINTS
+            .iter()
+            .map(|(x, y)| {
+                let p: f64 = x.iter().zip(&NAIVE_BAYES_W).map(|(a, b)| a * b).sum();
+                (p - y) * (p - y)
+            })
+            .sum::<f64>()
+            / 4.0;
+        assert!((mse - NAIVE_BAYES_MSE).abs() < 1e-12, "mse {mse}");
+    }
+
+    #[test]
+    fn tree_weights_have_zero_mse() {
+        let mse: f64 = POINTS
+            .iter()
+            .map(|(x, y)| {
+                let p: f64 = x.iter().zip(&TREE_W).map(|(a, b)| a * b).sum();
+                (p - y) * (p - y)
+            })
+            .sum::<f64>()
+            / 4.0;
+        assert!(mse < 1e-12, "mse {mse}");
+    }
+
+    #[test]
+    fn dataset_cycles() {
+        let ds = dataset(8);
+        assert_eq!(ds.instances[0].label, ds.instances[4].label);
+        assert_eq!(ds.instances[1].features, ds.instances[5].features);
+    }
+}

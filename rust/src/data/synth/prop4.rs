@@ -1,0 +1,91 @@
+//! Proposition 4's exact 4-point distribution: *neither* the binary tree
+//! nor Naïve Bayes can represent the least-squares predictor.
+//!
+//! | point | x1 | x2 | x3 |  y |
+//! |-------|----|----|----|----|
+//! | 1     | +1 | −1 | −1 | −1 |
+//! | 2     | −1 | +1 | −1 | −1 |
+//! | 3     | +1 | +1 | −1 | +1 |
+//! | 4     | +1 | +1 | −1 | +1 |
+//!
+//! The optimal linear predictor is w* = (1, 1, 1) with zero error; x3 is
+//! *individually* uncorrelated with y, so any local rule assigns it zero
+//! weight and incurs squared error ≥ 1/2. §0.6 fixes this with global
+//! updates — the delayed-backprop experiments use exactly this structure.
+
+/// The four (x, y) points, uniformly distributed.
+pub const POINTS: [([f64; 3], f64); 4] = [
+    ([1.0, -1.0, -1.0], -1.0),
+    ([-1.0, 1.0, -1.0], -1.0),
+    ([1.0, 1.0, -1.0], 1.0),
+    ([1.0, 1.0, -1.0], 1.0),
+];
+
+/// The all-ones optimal least-squares predictor the paper states.
+pub const OPTIMAL_W: [f64; 3] = [1.0, 1.0, 1.0];
+
+/// Lower bound on the squared error of any predictor with w3 = 0.
+pub const LOCAL_MSE_LOWER_BOUND: f64 = 0.5;
+
+pub const DIM: usize = 3;
+
+/// As a cyclically-repeating dataset of `n` instances.
+pub fn dataset(n: usize) -> crate::data::Dataset {
+    let mut ds = crate::data::Dataset::new("prop4", DIM);
+    for t in 0..n {
+        let (x, y) = POINTS[t % 4];
+        ds.instances.push(crate::data::instance::Instance {
+            label: y,
+            weight: 1.0,
+            features: x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i as u32, v as f32))
+                .collect(),
+            tag: t as u64,
+        });
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_w_has_zero_error() {
+        for (x, y) in POINTS {
+            let p: f64 = x.iter().zip(&OPTIMAL_W).map(|(a, b)| a * b).sum();
+            assert!((p - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn x3_uncorrelated_with_y() {
+        let b3: f64 = POINTS.iter().map(|(x, y)| x[2] * y).sum();
+        assert_eq!(b3, 0.0);
+    }
+
+    #[test]
+    fn any_zero_w3_predictor_mse_at_least_half() {
+        // brute-force grid over (w1, w2): min MSE with w3 = 0 is 1/2
+        let mut best = f64::INFINITY;
+        let steps = 200;
+        for i in 0..=steps {
+            for j in 0..=steps {
+                let w1 = -2.0 + 4.0 * i as f64 / steps as f64;
+                let w2 = -2.0 + 4.0 * j as f64 / steps as f64;
+                let mse: f64 = POINTS
+                    .iter()
+                    .map(|(x, y)| {
+                        let p = w1 * x[0] + w2 * x[1];
+                        (p - y) * (p - y)
+                    })
+                    .sum::<f64>()
+                    / 4.0;
+                best = best.min(mse);
+            }
+        }
+        assert!(best >= LOCAL_MSE_LOWER_BOUND - 1e-9, "best {best}");
+    }
+}

@@ -1,0 +1,5 @@
+//! Evaluation: offline policy evaluation (the §0.5.3 ad task) and regret
+//! against the batch least-squares optimum (the Theorem-1 experiments).
+
+pub mod policy;
+pub mod regret;

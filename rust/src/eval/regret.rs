@@ -1,0 +1,166 @@
+//! Regret against the best fixed linear predictor (eq. 0.1):
+//!
+//! Reg[W] = Σ_t [ℓ(ŷ_t, y_t) − ℓ(ŷ*_t, y_t)] where ŷ*_t = ⟨x_t, w*⟩ and
+//! w* = argmin Σ ℓ(⟨w, x_t⟩, y_t), computed in hindsight.
+//!
+//! For squared loss, w* = Σ⁻¹b via the normal equations
+//! ([`crate::linalg::LeastSquares`]); this powers the Theorem-1
+//! delay-regret experiments (`benches/delay_regret.rs`), which check the
+//! *growth shape* O(√(τT)) rather than the constant.
+
+use crate::data::Dataset;
+use crate::linalg::LeastSquares;
+use crate::loss::Loss;
+
+/// Hindsight-optimal squared-loss predictor over a dataset with a small
+/// dense feature space (dim = `ds.dim` must be modest: the solver is
+/// O(dim³)).
+pub fn best_fixed_weights(ds: &Dataset, ridge: f64) -> Vec<f64> {
+    let mut ls = LeastSquares::new(ds.dim);
+    for inst in ds.iter() {
+        ls.observe_sparse(&inst.features, inst.label);
+    }
+    ls.solve(ridge).unwrap_or_else(|| vec![0.0; ds.dim])
+}
+
+/// Cumulative regret of a recorded prediction sequence against w*.
+pub fn regret(
+    ds: &Dataset,
+    predictions: &[f64],
+    loss: Loss,
+    w_star: &[f64],
+) -> f64 {
+    assert_eq!(predictions.len(), ds.len());
+    let mut reg = 0.0;
+    for (inst, &yhat) in ds.iter().zip(predictions) {
+        let ystar: f64 = inst
+            .features
+            .iter()
+            .map(|&(i, v)| w_star[i as usize] * v as f64)
+            .sum();
+        reg += loss.value(yhat, inst.label) - loss.value(ystar, inst.label);
+    }
+    reg
+}
+
+/// Run a learner closure over the dataset recording pre-update
+/// predictions, then compute its regret. The closure receives
+/// (features, label) and returns the pre-update prediction.
+pub fn run_and_regret(
+    ds: &Dataset,
+    loss: Loss,
+    ridge: f64,
+    mut step: impl FnMut(&[(u32, f32)], f64) -> f64,
+) -> (f64, Vec<f64>) {
+    let preds: Vec<f64> =
+        ds.iter().map(|inst| step(&inst.features, inst.label)).collect();
+    let w_star = best_fixed_weights(ds, ridge);
+    (regret(ds, &preds, loss, &w_star), preds)
+}
+
+/// Convenience: regret of plain SGD (Algorithm 1).
+pub fn sgd_regret(
+    ds: &Dataset,
+    loss: Loss,
+    lr: crate::lr::LrSchedule,
+) -> f64 {
+    let mut sgd = crate::learner::sgd::Sgd::new(ds.dim, loss, lr);
+    use crate::learner::OnlineLearner;
+    let (reg, _) = run_and_regret(ds, loss, 1e-9, |x, y| {
+        let yhat = sgd.predict(x);
+        sgd.learn(x, y);
+        yhat
+    });
+    reg
+}
+
+/// Convenience: regret of delayed SGD (Algorithm 2) with delay τ.
+pub fn delayed_regret(
+    ds: &Dataset,
+    loss: Loss,
+    lr: crate::lr::LrSchedule,
+    tau: usize,
+) -> f64 {
+    let mut d = crate::learner::delayed::DelayedSgd::new(ds.dim, loss, lr, tau);
+    let (reg, _) = run_and_regret(ds, loss, 1e-9, |x, y| d.round(x, y));
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::instance::Instance;
+    use crate::lr::LrSchedule;
+    use crate::rng::Rng;
+
+    /// Dense low-dim dataset where w* is exactly recoverable.
+    fn dense_ds(n: usize, dim: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let w_true: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let mut ds = Dataset::new("dense", dim);
+        for t in 0..n {
+            let x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let y: f64 =
+                x.iter().zip(&w_true).map(|(a, b)| a * b).sum::<f64>()
+                    + 0.1 * rng.normal();
+            ds.instances.push(Instance {
+                label: y,
+                weight: 1.0,
+                features: x
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (i as u32, v as f32))
+                    .collect(),
+                tag: t as u64,
+            });
+        }
+        ds
+    }
+
+    #[test]
+    fn best_fixed_recovers_planted() {
+        let ds = dense_ds(2000, 4, 1);
+        let w = best_fixed_weights(&ds, 1e-9);
+        // regret of the best-fixed predictor against itself is zero
+        let preds: Vec<f64> = ds
+            .iter()
+            .map(|i| {
+                i.features
+                    .iter()
+                    .map(|&(j, v)| w[j as usize] * v as f64)
+                    .sum()
+            })
+            .collect();
+        let r = regret(&ds, &preds, Loss::Squared, &w);
+        assert!(r.abs() < 1e-6, "r {r}");
+    }
+
+    #[test]
+    fn sgd_regret_sublinear() {
+        // Reg(T)/T must shrink as T grows (O(√T) for bounded gradients)
+        let short = dense_ds(500, 4, 2);
+        let long = dense_ds(5_000, 4, 2);
+        let lr = LrSchedule::inv_sqrt(0.1, 10.0);
+        let r_short = sgd_regret(&short, Loss::Squared, lr) / 500.0;
+        let r_long = sgd_regret(&long, Loss::Squared, lr) / 5_000.0;
+        assert!(r_long < r_short, "short {r_short} long {r_long}");
+    }
+
+    #[test]
+    fn delay_increases_regret_on_adversarial() {
+        use crate::data::synth::{AdversarialDupGen, SynthConfig};
+        let cfg = SynthConfig {
+            instances: 4_000,
+            features: 64,
+            density: 8,
+            hash_bits: 8,
+            noise: 0.0,
+            seed: 3,
+        };
+        let ds = AdversarialDupGen::new(cfg, 16).generate();
+        let lr = LrSchedule::inv_sqrt(0.25, 10.0);
+        let r0 = delayed_regret(&ds, Loss::Squared, lr, 0);
+        let r16 = delayed_regret(&ds, Loss::Squared, lr, 16);
+        assert!(r16 > r0, "r0 {r0} r16 {r16}");
+    }
+}

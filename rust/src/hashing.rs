@@ -1,0 +1,237 @@
+//! Feature hashing (Shi et al. 2009; Weinberger et al. 2009).
+//!
+//! VW-style: every feature name (optionally namespaced) is hashed with
+//! MurmurHash3 (x86_32) into a `2^bits`-sized weight table; collisions
+//! are absorbed by learning. A signed variant flips the feature value's
+//! sign by one hash bit, making the hashed inner product an unbiased
+//! estimate of the original (Weinberger et al.).
+
+/// MurmurHash3 x86_32 — byte-exact port of the reference implementation
+/// (the same family VW uses for feature hashing).
+pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xcc9e2d51;
+    const C2: u32 = 0x1b873593;
+    let mut h1 = seed;
+    let n_blocks = data.len() / 4;
+    for i in 0..n_blocks {
+        let b = &data[i * 4..i * 4 + 4];
+        let mut k1 = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xe6546b64);
+    }
+    let tail = &data[n_blocks * 4..];
+    let mut k1: u32 = 0;
+    if tail.len() >= 3 {
+        k1 ^= (tail[2] as u32) << 16;
+    }
+    if tail.len() >= 2 {
+        k1 ^= (tail[1] as u32) << 8;
+    }
+    if !tail.is_empty() {
+        k1 ^= tail[0] as u32;
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+    }
+    h1 ^= data.len() as u32;
+    h1 ^= h1 >> 16;
+    h1 = h1.wrapping_mul(0x85ebca6b);
+    h1 ^= h1 >> 13;
+    h1 = h1.wrapping_mul(0xc2b2ae35);
+    h1 ^= h1 >> 16;
+    h1
+}
+
+/// Hashes (namespace, feature-name) pairs into a `2^bits` weight space.
+#[derive(Clone, Debug)]
+pub struct FeatureHasher {
+    bits: u32,
+    mask: u32,
+    signed: bool,
+}
+
+impl FeatureHasher {
+    /// `bits` in [1, 31]; the paper's experiments use 24 (`2^24 ≈ 16M`).
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=31).contains(&bits), "bits must be in 1..=31");
+        FeatureHasher { bits, mask: (1u32 << bits) - 1, signed: false }
+    }
+
+    /// Enable the sign-bit trick (unbiased hashed inner products).
+    pub fn signed(mut self) -> Self {
+        self.signed = true;
+        self
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Size of the hashed weight table.
+    pub fn table_size(&self) -> usize {
+        1usize << self.bits
+    }
+
+    /// Hash a raw feature name within a namespace seed.
+    /// Returns (index, sign) — sign is ±1.0, always +1.0 when unsigned.
+    #[inline]
+    pub fn hash(&self, namespace_seed: u32, name: &[u8]) -> (u32, f32) {
+        let h = murmur3_32(name, namespace_seed);
+        let idx = h & self.mask;
+        let sign = if self.signed {
+            if (h >> self.bits) & 1 == 1 {
+                -1.0
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        (idx, sign)
+    }
+
+    /// Namespace seed from a namespace name (VW hashes the namespace and
+    /// uses it to seed feature hashes, so equal names in different
+    /// namespaces land in different slots).
+    pub fn namespace_seed(&self, ns: &[u8]) -> u32 {
+        murmur3_32(ns, 0)
+    }
+
+    /// Hash an already-numeric feature id (synthetic data fast path).
+    #[inline]
+    pub fn hash_id(&self, namespace_seed: u32, id: u64) -> (u32, f32) {
+        self.hash(namespace_seed, &id.to_le_bytes())
+    }
+
+    /// Outer-product (quadratic) feature of two hashed indices — the
+    /// paper's on-the-fly `(query,result)` interaction features (§0.2):
+    /// never materialized on disk, generated during parsing.
+    #[inline]
+    pub fn hash_pair(&self, a: u32, b: u32) -> (u32, f32) {
+        // VW uses h(a)*magic + h(b); any mixing works, murmur the concat.
+        let mut buf = [0u8; 8];
+        buf[..4].copy_from_slice(&a.to_le_bytes());
+        buf[4..].copy_from_slice(&b.to_le_bytes());
+        self.hash(0x9747b28c, &buf)
+    }
+}
+
+/// Collision statistics for a hashed dataset — used by `pol inspect` to
+/// pick the table size (the paper: 2^24 "large enough such that a larger
+/// number of weights do not substantially improve results").
+#[derive(Debug, Default, Clone)]
+pub struct CollisionStats {
+    pub unique_inputs: usize,
+    pub occupied_slots: usize,
+    pub collided_inputs: usize,
+}
+
+impl CollisionStats {
+    pub fn compute(hasher: &FeatureHasher, ids: impl Iterator<Item = u64>) -> Self {
+        let mut first: Vec<u64> = vec![u64::MAX; hasher.table_size()];
+        let mut stats = CollisionStats::default();
+        let mut seen = std::collections::HashSet::new();
+        for id in ids {
+            if !seen.insert(id) {
+                continue;
+            }
+            stats.unique_inputs += 1;
+            let (slot, _) = hasher.hash_id(0, id);
+            let cur = &mut first[slot as usize];
+            if *cur == u64::MAX {
+                *cur = id;
+                stats.occupied_slots += 1;
+            } else if *cur != id {
+                stats.collided_inputs += 1;
+            }
+        }
+        stats
+    }
+
+    /// Fraction of unique inputs that collided with an earlier one.
+    pub fn collision_rate(&self) -> f64 {
+        if self.unique_inputs == 0 {
+            0.0
+        } else {
+            self.collided_inputs as f64 / self.unique_inputs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn murmur3_reference_vectors() {
+        // Published test vectors for MurmurHash3 x86_32.
+        assert_eq!(murmur3_32(b"", 0), 0);
+        assert_eq!(murmur3_32(b"", 1), 0x514E28B7);
+        assert_eq!(murmur3_32(b"test", 0x9747b28c), 0x704b81dc);
+        assert_eq!(murmur3_32(b"Hello, world!", 0x9747b28c), 0x24884CBA);
+        assert_eq!(murmur3_32(b"The quick brown fox jumps over the lazy dog", 0x9747b28c), 0x2FA826CD);
+    }
+
+    #[test]
+    fn hash_within_table() {
+        let h = FeatureHasher::new(18);
+        for i in 0..10_000u64 {
+            let (idx, sign) = h.hash_id(7, i);
+            assert!((idx as usize) < h.table_size());
+            assert_eq!(sign, 1.0);
+        }
+    }
+
+    #[test]
+    fn signed_hash_has_both_signs() {
+        let h = FeatureHasher::new(18).signed();
+        let mut pos = 0;
+        let mut neg = 0;
+        for i in 0..10_000u64 {
+            let (_, s) = h.hash_id(7, i);
+            if s > 0.0 {
+                pos += 1;
+            } else {
+                neg += 1;
+            }
+        }
+        assert!(pos > 4000 && neg > 4000, "pos {pos} neg {neg}");
+    }
+
+    #[test]
+    fn namespaces_separate() {
+        let h = FeatureHasher::new(24);
+        let ns1 = h.namespace_seed(b"user");
+        let ns2 = h.namespace_seed(b"ad");
+        let (a, _) = h.hash(ns1, b"feature_1");
+        let (b, _) = h.hash(ns2, b"feature_1");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic() {
+        let h = FeatureHasher::new(20);
+        assert_eq!(h.hash(1, b"x"), h.hash(1, b"x"));
+        assert_eq!(h.hash_pair(3, 4), h.hash_pair(3, 4));
+    }
+
+    #[test]
+    fn collision_rate_small_when_table_large() {
+        let h = FeatureHasher::new(22);
+        let stats = CollisionStats::compute(&h, 0..10_000u64);
+        assert!(stats.collision_rate() < 0.01, "{}", stats.collision_rate());
+        assert_eq!(stats.unique_inputs, 10_000);
+    }
+
+    #[test]
+    fn collision_rate_high_when_table_tiny() {
+        let h = FeatureHasher::new(8); // 256 slots, 10k inputs
+        let stats = CollisionStats::compute(&h, 0..10_000u64);
+        assert!(stats.collision_rate() > 0.9);
+    }
+}

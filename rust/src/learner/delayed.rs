@@ -1,0 +1,168 @@
+//! Algorithm 2 — delayed gradient descent.
+//!
+//! The update applied at time t uses the gradient computed at time t−τ:
+//! a ring buffer holds the τ pending (features, gradient-scale) pairs.
+//! The paper initializes the buffer with gradients of ℓ(0, 0) on zero
+//! instances — with our losses those gradients are zero, so the first τ
+//! updates are no-ops, exactly as in Algorithm 2.
+//!
+//! This is the reference implementation for the Theorem-1 delay-regret
+//! experiments (`benches/delay_regret.rs`): adversarial duplicate-τ
+//! streams degrade as √τ, IID streams pay only an additive burn-in.
+
+use std::collections::VecDeque;
+
+use crate::learner::OnlineLearner;
+use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+
+/// Delayed gradient descent (Algorithm 2) with delay τ.
+#[derive(Clone, Debug)]
+pub struct DelayedSgd {
+    pub w: Vec<f32>,
+    pub loss: Loss,
+    pub lr: LrSchedule,
+    tau: usize,
+    /// Pending (features, gradient-scale) computed but not yet applied.
+    pending: VecDeque<(Vec<SparseFeat>, f64)>,
+    t: u64,
+}
+
+impl DelayedSgd {
+    pub fn new(dim: usize, loss: Loss, lr: LrSchedule, tau: usize) -> Self {
+        let mut pending = VecDeque::with_capacity(tau + 1);
+        // Algorithm 2 line 2: x_1..x_τ = 0 with gradients of ℓ(0,0) —
+        // zero-feature instances contribute zero updates.
+        for _ in 0..tau {
+            pending.push_back((Vec::new(), 0.0));
+        }
+        DelayedSgd { w: vec![0.0; dim], loss, lr, tau, pending, t: 0 }
+    }
+
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    /// Process one instance: compute the gradient *now*, apply the
+    /// gradient from τ steps ago. Returns the (pre-update) prediction.
+    pub fn round(&mut self, x: &[SparseFeat], y: f64) -> f64 {
+        let yhat = sparse_dot(&self.w, x);
+        let g = self.loss.dloss(yhat, y);
+        self.pending.push_back((x.to_vec(), g));
+        // apply g_{t-τ}
+        let (old_x, old_g) = self.pending.pop_front().expect("ring non-empty");
+        self.t += 1;
+        let eta = self.lr.eta(self.t);
+        if old_g != 0.0 {
+            sparse_saxpy(&mut self.w, -eta * old_g, &old_x);
+        }
+        yhat
+    }
+
+    /// Flush remaining pending gradients (end of stream).
+    pub fn flush(&mut self) {
+        while let Some((x, g)) = self.pending.pop_front() {
+            self.t += 1;
+            let eta = self.lr.eta(self.t);
+            if g != 0.0 {
+                sparse_saxpy(&mut self.w, -eta * g, &x);
+            }
+        }
+    }
+}
+
+impl OnlineLearner for DelayedSgd {
+    fn predict(&self, x: &[SparseFeat]) -> f64 {
+        sparse_dot(&self.w, x)
+    }
+
+    fn learn(&mut self, x: &[SparseFeat], y: f64) {
+        self.round(x, y);
+    }
+
+    fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64) {
+        self.pending.push_back((x.to_vec(), gscale));
+        let (old_x, old_g) = self.pending.pop_front().expect("ring non-empty");
+        self.t += 1;
+        let eta = self.lr.eta(self.t);
+        if old_g != 0.0 {
+            sparse_saxpy(&mut self.w, -eta * old_g, &old_x);
+        }
+    }
+
+    fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_zero_equals_sgd() {
+        let mut d = DelayedSgd::new(4, Loss::Squared, LrSchedule::constant(0.1), 0);
+        let mut s = crate::learner::sgd::Sgd::new(
+            4,
+            Loss::Squared,
+            LrSchedule::constant(0.1),
+        );
+        let xs = [
+            vec![(0u32, 1.0f32)],
+            vec![(1, -1.0), (2, 0.5)],
+            vec![(3, 2.0)],
+        ];
+        for (i, x) in xs.iter().enumerate() {
+            d.round(x, i as f64);
+            crate::learner::OnlineLearner::learn(&mut s, x, i as f64);
+        }
+        assert_eq!(d.w, s.w);
+    }
+
+    #[test]
+    fn first_tau_updates_are_noops() {
+        let mut d = DelayedSgd::new(1, Loss::Squared, LrSchedule::constant(0.5), 3);
+        for _ in 0..3 {
+            d.round(&[(0, 1.0)], 1.0);
+            // gradient from the zero-initialized buffer: no weight change
+        }
+        assert_eq!(d.w[0], 0.0);
+        d.round(&[(0, 1.0)], 1.0);
+        assert!(d.w[0] > 0.0); // first real gradient lands at t = τ+1
+    }
+
+    #[test]
+    fn delayed_is_worse_on_duplicates() {
+        // §0.4: τ duplicates of the same instance — the delayed learner
+        // cannot respond within the block, so its progressive loss is
+        // higher than the no-delay learner's.
+        let tau = 8;
+        let stream: Vec<(Vec<SparseFeat>, f64)> = (0..400)
+            .map(|i| {
+                let f = (i / tau) % 16;
+                (vec![(f as u32, 1.0f32)], if f % 2 == 0 { 1.0 } else { 0.0 })
+            })
+            .collect();
+        let run = |tau: usize| {
+            let mut d =
+                DelayedSgd::new(16, Loss::Squared, LrSchedule::constant(0.25), tau);
+            let mut loss = 0.0;
+            for (x, y) in &stream {
+                let yhat = d.round(x, *y);
+                loss += (yhat - y) * (yhat - y);
+            }
+            loss
+        };
+        assert!(run(tau) > 1.5 * run(0), "tau {} vs 0: {} vs {}", tau, run(tau), run(0));
+    }
+
+    #[test]
+    fn flush_applies_all() {
+        let mut d = DelayedSgd::new(1, Loss::Squared, LrSchedule::constant(0.1), 5);
+        d.round(&[(0, 1.0)], 1.0);
+        assert_eq!(d.w[0], 0.0);
+        d.flush();
+        assert!(d.w[0] > 0.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Online learners: Algorithm 1 (SGD), Algorithm 2 (delayed SGD), Naïve
+//! Bayes, and the per-node learner every tree position runs.
+
+pub mod delayed;
+pub mod naive_bayes;
+pub mod node;
+pub mod sgd;
+
+use crate::linalg::SparseFeat;
+
+/// The minimal online-learner interface: predict, then learn.
+///
+/// The split into two calls is deliberate — progressive validation needs
+/// the prediction *before* the update, and the coordinator's global
+/// rules (§0.6) need to interleave predictions and (delayed) updates
+/// freely.
+pub trait OnlineLearner {
+    /// ŷ = ⟨w, x⟩ with the current weights.
+    fn predict(&self, x: &[SparseFeat]) -> f64;
+
+    /// One gradient step on (x, y) at the learner's own clock.
+    fn learn(&mut self, x: &[SparseFeat], y: f64);
+
+    /// Gradient step with an externally supplied loss-gradient scale
+    /// (dℓ/dŷ) — the primitive the global update rules are built from:
+    /// `w ← w − η · gscale · x`.
+    fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64);
+
+    /// Number of `learn*` calls so far (the t in η_t).
+    fn steps(&self) -> u64;
+}

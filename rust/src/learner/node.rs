@@ -1,0 +1,116 @@
+//! The per-node learner every position in a sharding tree runs.
+//!
+//! A node is an [`Sgd`] learner plus the update entry points the §0.5/§0.6
+//! rules need: pure-local training, externally-scaled gradient steps (for
+//! delayed-global and backprop feedback), and the corrective combination.
+//! The *scheduling* of these calls lives in [`crate::coordinator`]; this
+//! type only guarantees each primitive is a correct gradient step.
+
+use crate::learner::sgd::Sgd;
+use crate::learner::OnlineLearner;
+use crate::linalg::SparseFeat;
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+
+/// A learning node in the sharded architecture (leaf, internal, or root).
+#[derive(Clone, Debug)]
+pub struct NodeLearner {
+    pub id: usize,
+    inner: Sgd,
+}
+
+impl NodeLearner {
+    pub fn new(id: usize, dim: usize, loss: Loss, lr: LrSchedule) -> Self {
+        NodeLearner { id, inner: Sgd::new(dim, loss, lr) }
+    }
+
+    #[inline]
+    pub fn predict(&self, x: &[SparseFeat]) -> f64 {
+        self.inner.predict(x)
+    }
+
+    /// Local training (§0.5.2): predict, step on own loss, return the
+    /// pre-update prediction and the local gradient scale used.
+    #[inline]
+    pub fn local_learn(&mut self, x: &[SparseFeat], y: f64) -> (f64, f64) {
+        let yhat = self.inner.predict(x);
+        let g = self.inner.loss.dloss(yhat, y);
+        self.inner.learn_with_gradient(x, g);
+        (yhat, g)
+    }
+
+    /// A gradient step with an externally supplied dℓ/dŷ scale — the
+    /// primitive behind delayed-global (§0.6.1: scale evaluated at the
+    /// *final* prediction), corrective (§0.6.2: global minus local), and
+    /// delayed-backprop (§0.6.3: upstream chain-rule product).
+    #[inline]
+    pub fn gradient_step(&mut self, x: &[SparseFeat], gscale: f64) {
+        self.inner.learn_with_gradient(x, gscale);
+    }
+
+    /// dℓ/dŷ of this node's loss at an arbitrary prediction point —
+    /// needed by the global rules which re-evaluate the loss gradient at
+    /// the system's final prediction ŷ instead of the local one.
+    #[inline]
+    pub fn dloss_at(&self, yhat: f64, y: f64) -> f64 {
+        self.inner.loss.dloss(yhat, y)
+    }
+
+    pub fn loss(&self) -> Loss {
+        self.inner.loss
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        self.inner.weights()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.inner.steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> NodeLearner {
+        NodeLearner::new(0, 4, Loss::Squared, LrSchedule::constant(0.1))
+    }
+
+    #[test]
+    fn local_learn_returns_preupdate_prediction() {
+        let mut n = node();
+        let (yhat, g) = n.local_learn(&[(0, 1.0)], 1.0);
+        assert_eq!(yhat, 0.0);
+        assert_eq!(g, -1.0); // squared loss: yhat - y
+        assert!(n.predict(&[(0, 1.0)]) > 0.0);
+    }
+
+    #[test]
+    fn gradient_step_direction() {
+        let mut n = node();
+        n.gradient_step(&[(1, 2.0)], -1.0); // negative grad -> weight up
+        assert!(n.weights()[1] > 0.0);
+        n.gradient_step(&[(1, 2.0)], 10.0); // positive grad -> weight down
+        assert!(n.weights()[1] < 0.2);
+    }
+
+    #[test]
+    fn corrective_identity() {
+        // applying (g_global - g_local) after a local step with g_local at
+        // the same eta equals a single global step at those etas:
+        // net = -η1 g_local - η2 (g_global - g_local)
+        // with constant η: net = -η g_global. Verify.
+        let x = [(0u32, 1.0f32)];
+        let mut a = node();
+        let (_, g_local) = a.local_learn(&x, 1.0);
+        let g_global = a.dloss_at(0.7, 1.0);
+        a.gradient_step(&x, g_global - g_local);
+
+        let mut b = node();
+        b.gradient_step(&x, b.dloss_at(0.7, 1.0));
+        for (wa, wb) in a.weights().iter().zip(b.weights()) {
+            assert!((wa - wb).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Algorithm 1 — online gradient descent over a hashed weight table.
+//!
+//! The centralized baseline every parallel scheme is compared to in
+//! Figure 0.6 ("SGD"), and the building block of every node learner.
+
+use crate::learner::OnlineLearner;
+use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+
+/// Online gradient descent (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub w: Vec<f32>,
+    pub loss: Loss,
+    pub lr: LrSchedule,
+    t: u64,
+}
+
+impl Sgd {
+    /// `dim` is the hashed weight-table size (2^bits).
+    pub fn new(dim: usize, loss: Loss, lr: LrSchedule) -> Self {
+        Sgd { w: vec![0.0; dim], loss, lr, t: 0 }
+    }
+
+    /// Current learning rate (η_{t+1}, i.e. for the *next* update).
+    pub fn next_eta(&self) -> f64 {
+        self.lr.eta(self.t + 1)
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Reset the step counter (used between passes when the schedule
+    /// should restart; the paper's multi-pass runs keep it running).
+    pub fn reset_clock(&mut self) {
+        self.t = 0;
+    }
+}
+
+impl OnlineLearner for Sgd {
+    #[inline]
+    fn predict(&self, x: &[SparseFeat]) -> f64 {
+        sparse_dot(&self.w, x)
+    }
+
+    #[inline]
+    fn learn(&mut self, x: &[SparseFeat], y: f64) {
+        let yhat = sparse_dot(&self.w, x);
+        let g = self.loss.dloss(yhat, y);
+        self.t += 1;
+        let eta = self.lr.eta(self.t);
+        sparse_saxpy(&mut self.w, -eta * g, x);
+    }
+
+    #[inline]
+    fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64) {
+        self.t += 1;
+        let eta = self.lr.eta(self.t);
+        sparse_saxpy(&mut self.w, -eta * gscale, x);
+    }
+
+    fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+
+    #[test]
+    fn learns_1d() {
+        // single feature, y = 2x: w must approach 2
+        let mut s = Sgd::new(1, Loss::Squared, LrSchedule::constant(0.1));
+        for _ in 0..200 {
+            s.learn(&[(0, 1.0)], 2.0);
+        }
+        assert!((s.w[0] - 2.0).abs() < 1e-3, "w {}", s.w[0]);
+    }
+
+    #[test]
+    fn prediction_is_pre_update() {
+        let mut s = Sgd::new(1, Loss::Squared, LrSchedule::constant(0.5));
+        assert_eq!(s.predict(&[(0, 1.0)]), 0.0);
+        s.learn(&[(0, 1.0)], 1.0);
+        assert!(s.predict(&[(0, 1.0)]) > 0.0);
+    }
+
+    #[test]
+    fn learn_with_gradient_matches_learn() {
+        let x = [(0u32, 1.0f32), (2, -0.5)];
+        let mut a = Sgd::new(4, Loss::Squared, LrSchedule::inv_sqrt(1.0, 1.0));
+        let mut b = a.clone();
+        a.learn(&x, 1.0);
+        let g = b.loss.dloss(b.predict(&x), 1.0);
+        b.learn_with_gradient(&x, g);
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn drives_loss_down_on_rcv_like() {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 10_000,
+            features: 500,
+            density: 20,
+            ..Default::default()
+        })
+        .generate();
+        let mut s = Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(4.0, 1.0));
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for (t, inst) in ds.iter().enumerate() {
+            let l = s.loss.value(s.predict(&inst.features), inst.label);
+            if t < 1_000 {
+                early += l;
+            } else if t >= 9_000 {
+                late += l;
+            }
+            s.learn(&inst.features, inst.label);
+        }
+        // the floor is high (5% label noise + hard tail features): check a
+        // solid relative drop and that we beat the untrained ln2 level
+        assert!(late < 0.88 * early, "early {early} late {late}");
+        assert!(late / 1_000.0 < 0.6, "late avg {}", late / 1_000.0);
+    }
+
+    #[test]
+    fn steps_count() {
+        let mut s = Sgd::new(2, Loss::Squared, LrSchedule::constant(0.1));
+        for _ in 0..7 {
+            s.learn(&[(0, 1.0)], 0.0);
+        }
+        assert_eq!(s.steps(), 7);
+    }
+}

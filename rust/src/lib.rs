@@ -1,0 +1,86 @@
+//! # pol — Parallel Online Learning
+//!
+//! A production-shaped reproduction of *"Parallel Online Learning"*
+//! (Hsu, Karampatziakis, Langford & Smola, 2011): feature-sharded online
+//! gradient descent with tree architectures, local and global update
+//! rules (delayed global, corrective, delayed backpropagation, minibatch
+//! gradient descent, minibatch nonlinear conjugate gradient), the
+//! deterministic τ-delay schedule, and the paper's full experiment suite
+//! (Figures 0.5/0.6, Table 0.1, Propositions 3/4, Theorem-1 delay-regret
+//! sweeps, the §0.5.1 multicore path).
+//!
+//! ## Three-layer architecture
+//!
+//! * **L3 (this crate)** — the coordinator: data pipeline, feature
+//!   hashing + sharding, node topologies, a simulated-network layer with
+//!   a virtual clock, every update rule, metrics, the CLI, and the
+//!   benches. Pure `std`: nodes are threads, links are `mpsc` channels
+//!   with a latency/bandwidth model.
+//! * **L2 (python/compile/model.py)** — the jax model: the per-node
+//!   online sweep, the master combine step, and the minibatch-CG step,
+//!   AOT-lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the per-node
+//!   hot spot, `interpret=True`, checked against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts via PJRT (the `xla` crate) at startup and serves them from
+//! dedicated executor threads.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pol::prelude::*;
+//!
+//! let ds = RcvLikeGen::new(SynthConfig {
+//!     instances: 10_000, features: 1_000, ..Default::default()
+//! }).generate();
+//! let mut learner = Sgd::new(1 << 18, Loss::Squared, LrSchedule::inv_sqrt(0.5, 1.0));
+//! let mut pv = ProgressiveValidator::new();
+//! for inst in ds.iter() {
+//!     let yhat = learner.predict(&inst.features);
+//!     pv.observe(yhat, inst.label);
+//!     learner.learn(&inst.features, inst.label);
+//! }
+//! println!("progressive squared loss = {}", pv.mean_loss());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hashing;
+pub mod learner;
+pub mod linalg;
+pub mod loss;
+pub mod lr;
+pub mod metrics;
+pub mod net;
+pub mod rng;
+pub mod runtime;
+pub mod sharding;
+pub mod topology;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::config::{RunConfig, UpdateRule};
+    pub use crate::coordinator::multicore::MulticoreTrainer;
+    pub use crate::coordinator::{Coordinator, TrainReport};
+    pub use crate::data::instance::Instance;
+    pub use crate::data::synth::{
+        AdDisplayGen, AdversarialDupGen, RcvLikeGen, SynthConfig,
+        WebspamLikeGen,
+    };
+    pub use crate::data::Dataset;
+    pub use crate::hashing::FeatureHasher;
+    pub use crate::learner::delayed::DelayedSgd;
+    pub use crate::learner::naive_bayes::NaiveBayes;
+    pub use crate::learner::node::NodeLearner;
+    pub use crate::learner::OnlineLearner;
+    pub use crate::learner::sgd::Sgd;
+    pub use crate::loss::Loss;
+    pub use crate::lr::LrSchedule;
+    pub use crate::metrics::ProgressiveValidator;
+    pub use crate::net::{LinkSpec, SimNetwork};
+    pub use crate::rng::Rng;
+    pub use crate::topology::Topology;
+}

@@ -1,0 +1,217 @@
+//! Sparse/dense linear-algebra primitives for the learner hot path.
+//!
+//! The per-instance inner loop of every learner is `sparse_dot` +
+//! `sparse_saxpy` over a hashed weight table; these two functions are the
+//! L3 analogue of the L1 kernel and are benchmarked in
+//! `benches/hot_paths.rs`. Dense helpers back the least-squares solver
+//! used by the regret evaluator and the Proposition 3/4 checks.
+
+/// A sparse feature: (hashed index, value). Values already carry the
+/// hashing sign.
+pub type SparseFeat = (u32, f32);
+
+/// ⟨w, x⟩ for sparse x over dense w.
+#[inline]
+pub fn sparse_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
+    let mut acc = 0.0f64;
+    for &(i, v) in x {
+        // hashed indices are always in-range by construction; use
+        // get_unchecked in release after the debug_assert.
+        debug_assert!((i as usize) < w.len());
+        acc += unsafe { *w.get_unchecked(i as usize) } as f64 * v as f64;
+    }
+    acc
+}
+
+/// w ← w + a·x for sparse x.
+#[inline]
+pub fn sparse_saxpy(w: &mut [f32], a: f64, x: &[SparseFeat]) {
+    for &(i, v) in x {
+        debug_assert!((i as usize) < w.len());
+        unsafe {
+            *w.get_unchecked_mut(i as usize) += (a * v as f64) as f32;
+        }
+    }
+}
+
+/// ‖x‖² of a sparse vector.
+#[inline]
+pub fn sparse_norm_sq(x: &[SparseFeat]) -> f64 {
+    x.iter().map(|&(_, v)| (v as f64) * (v as f64)).sum()
+}
+
+/// Dense dot.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Solve A x = b for symmetric positive (semi)definite A via Gaussian
+/// elimination with partial pivoting; A is n×n row-major. Small-n only
+/// (regret oracle / Proposition checks); returns None if singular beyond
+/// `ridge` regularization.
+pub fn solve(a: &[f64], b: &[f64], n: usize, ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = vec![0.0f64; n * (n + 1)];
+    for r in 0..n {
+        for c in 0..n {
+            m[r * (n + 1) + c] = a[r * n + c] + if r == c { ridge } else { 0.0 };
+        }
+        m[r * (n + 1) + n] = b[r];
+    }
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * (n + 1) + col].abs() > m[piv * (n + 1) + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * (n + 1) + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..=n {
+                m.swap(col * (n + 1) + c, piv * (n + 1) + c);
+            }
+        }
+        let d = m[col * (n + 1) + col];
+        for c in col..=n {
+            m[col * (n + 1) + c] /= d;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = m[r * (n + 1) + col];
+                if f != 0.0 {
+                    for c in col..=n {
+                        m[r * (n + 1) + c] -= f * m[col * (n + 1) + c];
+                    }
+                }
+            }
+        }
+    }
+    Some((0..n).map(|r| m[r * (n + 1) + n]).collect())
+}
+
+/// Least-squares weights w* = Σ⁻¹ b from instance iterators, where
+/// Σ = E[x xᵀ], b = E[x y] (the paper's §0.5.2 notation), over a *dense*
+/// feature space of dimension n. Used by the regret evaluator and the
+/// Proposition 3/4 exact checks.
+pub struct LeastSquares {
+    pub n: usize,
+    sigma: Vec<f64>, // n×n
+    b: Vec<f64>,
+    count: u64,
+}
+
+impl LeastSquares {
+    pub fn new(n: usize) -> Self {
+        LeastSquares { n, sigma: vec![0.0; n * n], b: vec![0.0; n], count: 0 }
+    }
+
+    pub fn observe_dense(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.n);
+        for i in 0..self.n {
+            if x[i] == 0.0 {
+                continue;
+            }
+            self.b[i] += x[i] * y;
+            for j in 0..self.n {
+                self.sigma[i * self.n + j] += x[i] * x[j];
+            }
+        }
+        self.count += 1;
+    }
+
+    pub fn observe_sparse(&mut self, x: &[SparseFeat], y: f64) {
+        for &(i, v) in x {
+            let i = i as usize;
+            self.b[i] += v as f64 * y;
+            for &(j, u) in x {
+                self.sigma[i * self.n + j as usize] += v as f64 * u as f64;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Solve for w*; ridge for numerical safety on degenerate data.
+    pub fn solve(&self, ridge: f64) -> Option<Vec<f64>> {
+        solve(&self.sigma, &self.b, self.n, ridge)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_dot_basic() {
+        let w = vec![1.0f32, 2.0, 3.0, 0.0];
+        let x = vec![(0u32, 2.0f32), (2, 1.0)];
+        assert_eq!(sparse_dot(&w, &x), 5.0);
+    }
+
+    #[test]
+    fn sparse_saxpy_accumulates() {
+        let mut w = vec![0.0f32; 4];
+        sparse_saxpy(&mut w, 2.0, &[(1, 1.0), (3, 0.5)]);
+        sparse_saxpy(&mut w, 1.0, &[(1, 1.0)]);
+        assert_eq!(w, vec![0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, -2.0];
+        let x = solve(&a, &b, 2, 0.0).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_general() {
+        // A = [[4,1],[1,3]], b = [1,2] -> x = [1/11, 7/11]
+        let a = vec![4.0, 1.0, 1.0, 3.0];
+        let b = vec![1.0, 2.0];
+        let x = solve(&a, &b, 2, 0.0).unwrap();
+        assert!((x[0] - 1.0 / 11.0).abs() < 1e-10);
+        assert!((x[1] - 7.0 / 11.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        let b = vec![1.0, 2.0];
+        assert!(solve(&a, &b, 2, 0.0).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_planted_weights() {
+        let mut ls = LeastSquares::new(3);
+        let w_true = [1.5, -2.0, 0.5];
+        let mut rng = crate::rng::Rng::new(4);
+        for _ in 0..500 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            let y: f64 = x.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+            ls.observe_dense(&x, y);
+        }
+        let w = ls.solve(1e-9).unwrap();
+        for (a, b) in w.iter().zip(&w_true) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_sparse_observe_agree() {
+        let mut d = LeastSquares::new(4);
+        let mut s = LeastSquares::new(4);
+        d.observe_dense(&[1.0, 0.0, 2.0, 0.0], 3.0);
+        s.observe_sparse(&[(0, 1.0), (2, 2.0)], 3.0);
+        assert_eq!(d.solve(1e-6), s.solve(1e-6));
+    }
+}

@@ -1,0 +1,185 @@
+//! Loss functions: value, first and second derivative w.r.t. the
+//! prediction, and the strong-convexity modulus used by Theorem 1's
+//! strongly-convex learning-rate schedule.
+
+/// The differentiable losses the paper trains with. Labels are in
+/// `[0, 1]` for `Squared` (ad-click / progressive-validation setting) and
+/// `{-1, +1}` for `Logistic`/`Hinge` (the RCV1/Webspam classification
+/// tasks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// ℓ(ŷ, y) = ½(ŷ − y)²
+    Squared,
+    /// ℓ(ŷ, y) = log(1 + e^{−yŷ}), y ∈ {−1, +1}
+    Logistic,
+    /// ℓ(ŷ, y) = max(0, 1 − yŷ) (subgradient; ℓ″ = 0)
+    Hinge,
+}
+
+impl Loss {
+    /// ℓ(ŷ, y)
+    #[inline]
+    pub fn value(self, yhat: f64, y: f64) -> f64 {
+        match self {
+            Loss::Squared => 0.5 * (yhat - y) * (yhat - y),
+            Loss::Logistic => {
+                let m = -y * yhat;
+                // numerically stable log1p(exp(m))
+                if m > 0.0 {
+                    m + (1.0 + (-m).exp()).ln()
+                } else {
+                    (1.0 + m.exp()).ln()
+                }
+            }
+            Loss::Hinge => (1.0 - y * yhat).max(0.0),
+        }
+    }
+
+    /// dℓ/dŷ
+    #[inline]
+    pub fn dloss(self, yhat: f64, y: f64) -> f64 {
+        match self {
+            Loss::Squared => yhat - y,
+            Loss::Logistic => -y / (1.0 + (y * yhat).exp()),
+            Loss::Hinge => {
+                if y * yhat < 1.0 {
+                    -y
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// d²ℓ/dŷ² (the Hessian diagonal factor the minibatch-CG step uses:
+    /// ⟨d, H d⟩ = Σ_τ ℓ″_τ ⟨d, x_τ⟩², §0.6.5).
+    #[inline]
+    pub fn d2loss(self, yhat: f64, y: f64) -> f64 {
+        match self {
+            Loss::Squared => 1.0,
+            Loss::Logistic => {
+                let s = 1.0 / (1.0 + (-y * yhat).exp());
+                s * (1.0 - s)
+            }
+            Loss::Hinge => 0.0,
+        }
+    }
+
+    /// Modulus of strong convexity in ŷ (c in Theorem 1); 0 when not
+    /// strongly convex.
+    #[inline]
+    pub fn convexity_modulus(self) -> f64 {
+        match self {
+            Loss::Squared => 1.0,
+            Loss::Logistic | Loss::Hinge => 0.0,
+        }
+    }
+
+    /// Classification decision from a raw prediction, matching the label
+    /// convention of the loss.
+    #[inline]
+    pub fn decide(self, yhat: f64) -> f64 {
+        match self {
+            Loss::Squared => {
+                if yhat >= 0.5 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Loss::Logistic | Loss::Hinge => {
+                if yhat >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "sq" | "squared" => Some(Loss::Squared),
+            "log" | "logistic" => Some(Loss::Logistic),
+            "hinge" => Some(Loss::Hinge),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Squared => "squared",
+            Loss::Logistic => "logistic",
+            Loss::Hinge => "hinge",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num_grad(loss: Loss, yhat: f64, y: f64) -> f64 {
+        let h = 1e-6;
+        (loss.value(yhat + h, y) - loss.value(yhat - h, y)) / (2.0 * h)
+    }
+
+    #[test]
+    fn gradients_match_numeric() {
+        for loss in [Loss::Squared, Loss::Logistic] {
+            for &(yhat, y) in &[(0.3, 1.0), (-0.7, -1.0), (2.0, 1.0), (0.0, -1.0)] {
+                let a = loss.dloss(yhat, y);
+                let n = num_grad(loss, yhat, y);
+                assert!((a - n).abs() < 1e-4, "{loss:?} {yhat} {y}: {a} vs {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn second_derivative_matches_numeric() {
+        let h = 1e-5;
+        for loss in [Loss::Squared, Loss::Logistic] {
+            for &(yhat, y) in &[(0.3, 1.0), (-0.7, -1.0), (1.5, -1.0)] {
+                let a = loss.d2loss(yhat, y);
+                let n = (loss.dloss(yhat + h, y) - loss.dloss(yhat - h, y)) / (2.0 * h);
+                assert!((a - n).abs() < 1e-4, "{loss:?}: {a} vs {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_subgradient() {
+        assert_eq!(Loss::Hinge.dloss(0.5, 1.0), -1.0);
+        assert_eq!(Loss::Hinge.dloss(1.5, 1.0), 0.0);
+        assert_eq!(Loss::Hinge.value(0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn logistic_stable_at_extremes() {
+        assert!(Loss::Logistic.value(100.0, -1.0).is_finite());
+        assert!(Loss::Logistic.value(-100.0, 1.0).is_finite());
+        assert!(Loss::Logistic.dloss(100.0, 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn squared_strongly_convex() {
+        assert_eq!(Loss::Squared.convexity_modulus(), 1.0);
+        assert_eq!(Loss::Logistic.convexity_modulus(), 0.0);
+    }
+
+    #[test]
+    fn decide_conventions() {
+        assert_eq!(Loss::Squared.decide(0.7), 1.0);
+        assert_eq!(Loss::Squared.decide(0.2), 0.0);
+        assert_eq!(Loss::Logistic.decide(0.1), 1.0);
+        assert_eq!(Loss::Logistic.decide(-0.1), -1.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for l in [Loss::Squared, Loss::Logistic, Loss::Hinge] {
+            assert_eq!(Loss::parse(l.name()), Some(l));
+        }
+        assert_eq!(Loss::parse("nope"), None);
+    }
+}

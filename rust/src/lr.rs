@@ -1,0 +1,134 @@
+//! Learning-rate schedules.
+//!
+//! The paper's experiments search schedules of the form
+//! η_t = λ / √(t + t₀) with λ ∈ {2^i}_{i=0..9}, t₀ ∈ {10^i}_{i=0..6}
+//! (§0.7), plus the delay-aware rates of Theorem 1:
+//! η_t = R/(L√(2τt)) (adversarial) and η_t = 1/(c(t−τ)) (strongly
+//! convex).
+
+/// A learning-rate schedule η_t, with t counted from 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// η_t = λ (constant)
+    Constant { lambda: f64 },
+    /// η_t = λ / √(t + t₀)  — the paper's search family (§0.7)
+    InvSqrt { lambda: f64, t0: f64 },
+    /// η_t = λ / (t + t₀)   — strongly-convex rate (Theorem 1, c folded
+    /// into λ; the τ offset folded into t₀)
+    Inv { lambda: f64, t0: f64 },
+    /// η_t = R / (L √(2 τ t)) — Theorem 1's adversarial delayed rate
+    DelayedAdversarial { r: f64, l: f64, tau: f64 },
+}
+
+impl LrSchedule {
+    pub fn constant(lambda: f64) -> Self {
+        LrSchedule::Constant { lambda }
+    }
+
+    pub fn inv_sqrt(lambda: f64, t0: f64) -> Self {
+        LrSchedule::InvSqrt { lambda, t0 }
+    }
+
+    pub fn inv(lambda: f64, t0: f64) -> Self {
+        LrSchedule::Inv { lambda, t0 }
+    }
+
+    pub fn delayed_adversarial(r: f64, l: f64, tau: f64) -> Self {
+        LrSchedule::DelayedAdversarial { r, l, tau: tau.max(1.0) }
+    }
+
+    /// η at step t (t ≥ 1).
+    #[inline]
+    pub fn eta(&self, t: u64) -> f64 {
+        let tf = t as f64;
+        match *self {
+            LrSchedule::Constant { lambda } => lambda,
+            LrSchedule::InvSqrt { lambda, t0 } => lambda / (tf + t0).sqrt(),
+            LrSchedule::Inv { lambda, t0 } => lambda / (tf + t0),
+            LrSchedule::DelayedAdversarial { r, l, tau } => {
+                r / (l * (2.0 * tau * tf).sqrt())
+            }
+        }
+    }
+
+    /// The paper's §0.7 grid: λ ∈ {2^0..2^9} × t₀ ∈ {10^0..10^6}.
+    pub fn paper_grid() -> Vec<LrSchedule> {
+        let mut out = Vec::with_capacity(70);
+        for i in 0..10 {
+            for j in 0..7 {
+                out.push(LrSchedule::inv_sqrt(
+                    (1u64 << i) as f64,
+                    10f64.powi(j),
+                ));
+            }
+        }
+        out
+    }
+
+    /// A small sub-grid for fast tests/benches (same family).
+    pub fn small_grid() -> Vec<LrSchedule> {
+        let mut out = Vec::new();
+        for &lambda in &[0.25, 1.0, 4.0] {
+            for &t0 in &[1.0, 100.0, 10_000.0] {
+                out.push(LrSchedule::inv_sqrt(lambda, t0));
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for LrSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            LrSchedule::Constant { lambda } => write!(f, "const({lambda})"),
+            LrSchedule::InvSqrt { lambda, t0 } => {
+                write!(f, "{lambda}/sqrt(t+{t0})")
+            }
+            LrSchedule::Inv { lambda, t0 } => write!(f, "{lambda}/(t+{t0})"),
+            LrSchedule::DelayedAdversarial { r, l, tau } => {
+                write!(f, "{r}/({l}*sqrt(2*{tau}*t))")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_sqrt_decreasing() {
+        let s = LrSchedule::inv_sqrt(1.0, 1.0);
+        assert!(s.eta(1) > s.eta(10));
+        assert!(s.eta(10) > s.eta(1000));
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.3);
+        assert_eq!(s.eta(1), s.eta(1_000_000));
+    }
+
+    #[test]
+    fn paper_grid_size() {
+        assert_eq!(LrSchedule::paper_grid().len(), 70);
+    }
+
+    #[test]
+    fn delayed_rate_scales_inverse_sqrt_tau() {
+        let s1 = LrSchedule::delayed_adversarial(1.0, 1.0, 1.0);
+        let s4 = LrSchedule::delayed_adversarial(1.0, 1.0, 4.0);
+        let ratio = s1.eta(100) / s4.eta(100);
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn eta_positive_finite() {
+        for s in LrSchedule::paper_grid() {
+            for t in [1u64, 7, 1_000_000] {
+                let e = s.eta(t);
+                assert!(e.is_finite() && e > 0.0);
+            }
+        }
+    }
+}

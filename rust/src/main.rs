@@ -1,0 +1,274 @@
+//! `pol` — the launcher.
+//!
+//! Subcommands:
+//!   train            run a coordinator configuration over a dataset
+//!   bench-data       generate + describe the Table 0.1 datasets
+//!   inspect          feature-hashing collision statistics
+//!   artifacts-check  load every AOT artifact and smoke-execute one
+//!
+//! Flags are `--key value`; `pol <cmd> --help` lists them. A config file
+//! (`--config path`, flat `key = value`) provides defaults that flags
+//! override.
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{AdDisplayGen, RcvLikeGen, SynthConfig, WebspamLikeGen};
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::topology::Topology;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("bench-data") => cmd_bench_data(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("artifacts-check") => cmd_artifacts_check(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print!("{}", HELP);
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+pol — Parallel Online Learning (Hsu, Karampatziakis, Langford, Smola 2011)
+
+USAGE: pol <command> [--key value ...]
+
+COMMANDS:
+  train            train a configuration
+                   --data rcv|webspam|ad   --rule local|delayed-global|
+                   corrective|backprop[:m]|minibatch[:b]|cg[:b]|sgd
+                   --workers N  --passes P  --tau T  --lambda L  --t0 T0
+                   --loss squared|logistic  --instances N  --seed S
+                   --topology two-layer|binary-tree  --config FILE
+  bench-data       generate + describe the Table 0.1 datasets
+                   [--full]  (paper-scale shapes; default is scaled down)
+  inspect          hashing collision stats   --bits B  --uniques N
+  artifacts-check  compile-check all AOT artifacts (needs `make artifacts`)
+";
+
+fn flag(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn has(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn make_dataset(name: &str, instances: usize, seed: u64) -> Dataset {
+    match name {
+        "rcv" => RcvLikeGen::new(SynthConfig {
+            instances,
+            features: 23_000,
+            density: 75,
+            seed,
+            ..Default::default()
+        })
+        .generate(),
+        "webspam" => WebspamLikeGen::new(SynthConfig {
+            instances,
+            features: 50_000,
+            density: 150,
+            seed,
+            ..Default::default()
+        })
+        .generate(),
+        "ad" => {
+            AdDisplayGen::new(pol::data::synth::ad_display::AdDisplayConfig {
+                events: instances,
+                seed,
+                ..Default::default()
+            })
+            .generate()
+            .pairwise
+        }
+        other => {
+            eprintln!("unknown dataset '{other}', using rcv");
+            make_dataset("rcv", instances, seed)
+        }
+    }
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let mut cfg = match flag(args, "--config") {
+        Some(path) => match std::fs::read_to_string(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| RunConfig::from_str_cfg(&t))
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+        None => RunConfig::default(),
+    };
+    if let Some(r) = flag(args, "--rule") {
+        match UpdateRule::parse(&r) {
+            Some(rule) => cfg.rule = rule,
+            None => {
+                eprintln!("bad --rule {r}");
+                return 2;
+            }
+        }
+    }
+    if let Some(w) = flag(args, "--workers") {
+        let n: usize = w.parse().unwrap_or(4);
+        cfg.topology = match flag(args, "--topology").as_deref() {
+            Some("binary-tree") => Topology::BinaryTree { leaves: n },
+            _ => Topology::TwoLayer { shards: n },
+        };
+    }
+    if let Some(l) = flag(args, "--loss") {
+        cfg.loss = Loss::parse(&l).unwrap_or(cfg.loss);
+    }
+    if let Some(p) = flag(args, "--passes") {
+        cfg.passes = p.parse().unwrap_or(1);
+    }
+    if let Some(t) = flag(args, "--tau") {
+        cfg.tau = t.parse().unwrap_or(1024);
+    }
+    let lambda: f64 =
+        flag(args, "--lambda").and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let t0: f64 = flag(args, "--t0").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    cfg.lr = LrSchedule::inv_sqrt(lambda, t0);
+    if let Some(s) = flag(args, "--seed") {
+        cfg.seed = s.parse().unwrap_or(42);
+    }
+    let data = flag(args, "--data").unwrap_or_else(|| "rcv".into());
+    let instances: usize =
+        flag(args, "--instances").and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    if data != "ad" && cfg.loss == Loss::Squared && cfg.clip01 {
+        // ±1-label tasks: clipping to [0,1] makes no sense
+        cfg.clip01 = false;
+    }
+
+    let ds = make_dataset(&data, instances, cfg.seed);
+    let (train, test) = ds.split_test(0.2);
+    eprintln!(
+        "dataset={} train={} test={} dim={} rule={} workers={} passes={}",
+        data,
+        train.len(),
+        test.len(),
+        train.dim,
+        cfg.rule.name(),
+        cfg.topology.leaves(),
+        cfg.passes
+    );
+    let mut coord = Coordinator::new(cfg.clone(), train.dim);
+    let report = coord.train(&train);
+    let (test_loss, test_acc) = pol::metrics::test_metrics(
+        cfg.loss,
+        |x| coord.predict(x),
+        &test.instances,
+    );
+    println!(
+        "progressive_loss={:.6} progressive_acc={:.4} test_loss={:.6} test_acc={:.4} instances={} elapsed_ms={}",
+        report.progressive.mean_loss(),
+        report.progressive.accuracy(),
+        test_loss,
+        test_acc,
+        report.instances,
+        report.elapsed.as_millis()
+    );
+    0
+}
+
+fn cmd_bench_data(args: &[String]) -> i32 {
+    let full = has(args, "--full");
+    let scale = if full { 1 } else { 100 };
+    println!("Table 0.1 — dataset shapes{}", if full { "" } else { " (1/100 scale)" });
+    println!("{:<14} {:>10} {:>10} {:>14} {:>10}", "dataset", "instances", "features", "nnz", "nnz/inst");
+    for (name, cfg) in [
+        ("RCV1-like", SynthConfig { instances: 780_000 / scale, ..SynthConfig::rcv1_full() }),
+        ("Webspam-like", SynthConfig { instances: 300_000 / scale, ..SynthConfig::webspam_full() }),
+    ] {
+        let ds = if name.starts_with("RCV") {
+            RcvLikeGen::new(cfg).generate()
+        } else {
+            WebspamLikeGen::new(cfg).generate()
+        };
+        println!(
+            "{:<14} {:>10} {:>10} {:>14} {:>10.1}",
+            name,
+            ds.len(),
+            if name.starts_with("RCV") { 23_000 } else { 50_000 },
+            ds.total_features(),
+            ds.mean_features()
+        );
+    }
+    0
+}
+
+fn cmd_inspect(args: &[String]) -> i32 {
+    let bits: u32 = flag(args, "--bits").and_then(|s| s.parse().ok()).unwrap_or(18);
+    let uniques: u64 =
+        flag(args, "--uniques").and_then(|s| s.parse().ok()).unwrap_or(100_000);
+    let hasher = pol::hashing::FeatureHasher::new(bits);
+    let stats = pol::hashing::CollisionStats::compute(&hasher, 0..uniques);
+    println!(
+        "bits={} table={} uniques={} occupied={} collided={} rate={:.4}",
+        bits,
+        hasher.table_size(),
+        stats.unique_inputs,
+        stats.occupied_slots,
+        stats.collided_inputs,
+        stats.collision_rate()
+    );
+    0
+}
+
+fn cmd_artifacts_check(args: &[String]) -> i32 {
+    let dir = flag(args, "--dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(pol::runtime::Registry::default_dir);
+    let reg = match pol::runtime::Registry::open(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    println!("{} artifacts in {:?}", reg.specs().len(), dir);
+    // smoke-execute the smallest shard_step
+    match pol::runtime::ops::ShardStepOp::new(&reg, "sq", 1) {
+        Ok(op) => {
+            let xs: Vec<Vec<(u32, f32)>> =
+                (0..op.b).map(|i| vec![((i % op.d) as u32, 1.0f32)]).collect();
+            let refs: Vec<&[(u32, f32)]> = xs.iter().map(|v| v.as_slice()).collect();
+            let ys = vec![1.0f32; op.b];
+            let mut w = vec![0.0f32; op.d];
+            match op.run_block(&refs, &ys, &mut w, 0.1) {
+                Ok(yhat) => {
+                    println!(
+                        "shard_step d={} b={}: executed, yhat[0]={}, |w|>0 slots={}",
+                        op.d,
+                        op.b,
+                        yhat[0],
+                        w.iter().filter(|&&x| x != 0.0).count()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("execute failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}

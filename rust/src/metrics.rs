@@ -1,0 +1,190 @@
+//! Metrics: progressive validation (Blum et al. 1999), test-set accuracy,
+//! throughput counters, and simple timers.
+
+use crate::loss::Loss;
+
+/// Progressive validation: average of ℓ(ŷ_t, y_t) where ŷ_t is the
+/// prediction made *just prior* to the update for instance t. The paper
+/// reports progressive squared loss throughout (§0.5.3). "When data is
+/// independent, this metric has deviations similar to the average loss
+/// computed on held-out evaluation data."
+#[derive(Clone, Debug)]
+pub struct ProgressiveValidator {
+    sum_sq: f64,
+    sum_loss: f64,
+    correct: u64,
+    n: u64,
+    loss: Loss,
+}
+
+impl Default for ProgressiveValidator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgressiveValidator {
+    pub fn new() -> Self {
+        Self::with_loss(Loss::Squared)
+    }
+
+    pub fn with_loss(loss: Loss) -> Self {
+        ProgressiveValidator { sum_sq: 0.0, sum_loss: 0.0, correct: 0, n: 0, loss }
+    }
+
+    /// Record a pre-update prediction and its label.
+    #[inline]
+    pub fn observe(&mut self, yhat: f64, y: f64) {
+        let d = yhat - y;
+        self.sum_sq += d * d;
+        self.sum_loss += self.loss.value(yhat, y);
+        if self.loss.decide(yhat) == y {
+            self.correct += 1;
+        }
+        self.n += 1;
+    }
+
+    /// Mean squared error over observed predictions.
+    pub fn mean_squared(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_sq / self.n as f64
+        }
+    }
+
+    /// Mean of the configured loss.
+    pub fn mean_loss(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_loss / self.n as f64
+        }
+    }
+
+    /// 0/1 accuracy of the loss's decision rule.
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Merge another validator (used when averaging per-shard losses for
+    /// Fig 0.5(a)).
+    pub fn merge(&mut self, other: &ProgressiveValidator) {
+        self.sum_sq += other.sum_sq;
+        self.sum_loss += other.sum_loss;
+        self.correct += other.correct;
+        self.n += other.n;
+    }
+}
+
+/// Held-out evaluation of a fixed predictor.
+pub fn test_metrics(
+    loss: Loss,
+    predict: impl Fn(&[crate::linalg::SparseFeat]) -> f64,
+    test: &[crate::data::instance::Instance],
+) -> (f64, f64) {
+    let mut sum = 0.0;
+    let mut correct = 0u64;
+    for inst in test {
+        let yhat = predict(&inst.features);
+        sum += loss.value(yhat, inst.label);
+        if loss.decide(yhat) == inst.label {
+            correct += 1;
+        }
+    }
+    let n = test.len().max(1) as f64;
+    (sum / n, correct as f64 / n)
+}
+
+/// Wall-clock + item throughput counter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: std::time::Instant,
+    pub items: u64,
+    pub features: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: std::time::Instant::now(), items: 0, features: 0 }
+    }
+
+    #[inline]
+    pub fn tick(&mut self, features: usize) {
+        self.items += 1;
+        self.features += features as u64;
+    }
+
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.start.elapsed()
+    }
+
+    pub fn items_per_sec(&self) -> f64 {
+        self.items as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn features_per_sec(&self) -> f64 {
+        self.features as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progressive_squared() {
+        let mut pv = ProgressiveValidator::new();
+        pv.observe(0.0, 1.0); // sq err 1
+        pv.observe(1.0, 1.0); // sq err 0
+        assert!((pv.mean_squared() - 0.5).abs() < 1e-12);
+        assert_eq!(pv.count(), 2);
+    }
+
+    #[test]
+    fn accuracy_squared_convention() {
+        let mut pv = ProgressiveValidator::new();
+        pv.observe(0.9, 1.0); // correct
+        pv.observe(0.1, 1.0); // wrong
+        pv.observe(0.2, 0.0); // correct
+        assert!((pv.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = ProgressiveValidator::new();
+        let mut b = ProgressiveValidator::new();
+        let mut c = ProgressiveValidator::new();
+        for (yh, y) in [(0.1, 0.0), (0.8, 1.0), (0.4, 1.0), (0.6, 0.0)] {
+            c.observe(yh, y);
+        }
+        a.observe(0.1, 0.0);
+        a.observe(0.8, 1.0);
+        b.observe(0.4, 1.0);
+        b.observe(0.6, 0.0);
+        a.merge(&b);
+        assert!((a.mean_squared() - c.mean_squared()).abs() < 1e-12);
+        assert_eq!(a.count(), c.count());
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let pv = ProgressiveValidator::new();
+        assert_eq!(pv.mean_squared(), 0.0);
+        assert_eq!(pv.accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Simulated cluster network with a virtual clock.
+//!
+//! The paper's multinode experiments run on 8-core nodes over gigabit
+//! Ethernet; their Figure 0.5 timing behaviour is shaped by two effects:
+//! (i) the no-op sharding node saturating its NIC, and (ii) many small
+//! packets wasting bandwidth ("the use of many small packets can result
+//! in substantially reduced bandwidth", §0.5.3). This environment has no
+//! cluster (repro band 0), so wall-clock multinode numbers are
+//! *simulated*: a deterministic accounting model with per-node CPU and
+//! NIC availability timestamps and per-link latency/bandwidth/per-packet
+//! overhead. The learning math is exact — only time is modeled.
+//!
+//! The model: sending `bytes` from node A occupies A's NIC for
+//! `per_packet + bytes/bandwidth` seconds (sender-side serialization),
+//! then arrives `latency` later. Computation occupies the node's CPU.
+//! All timestamps are f64 seconds of virtual time.
+
+/// Per-link characteristics.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// One-way propagation + stack latency (s).
+    pub latency_s: f64,
+    /// Usable bandwidth (bytes/s).
+    pub bandwidth_bps: f64,
+    /// Fixed per-packet overhead (s) — the small-packet killer.
+    pub per_packet_s: f64,
+}
+
+impl LinkSpec {
+    /// Gigabit Ethernet, 2010-era numbers: ~125 MB/s usable, ~100 µs
+    /// end-to-end latency, ~6 µs per-packet CPU+wire overhead (buffered
+    /// sends; syscall+interrupt cost).
+    pub fn gigabit() -> Self {
+        LinkSpec {
+            latency_s: 100e-6,
+            bandwidth_bps: 125e6,
+            per_packet_s: 6e-6,
+        }
+    }
+
+    /// Intra-box (multicore) link: shared memory, negligible but nonzero.
+    pub fn shared_memory() -> Self {
+        LinkSpec { latency_s: 100e-9, bandwidth_bps: 10e9, per_packet_s: 50e-9 }
+    }
+
+    /// Time the sender's NIC is busy transmitting `bytes`.
+    #[inline]
+    pub fn tx_time(&self, bytes: usize) -> f64 {
+        self.per_packet_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Deterministic virtual-time network over `n` nodes.
+#[derive(Clone, Debug)]
+pub struct SimNetwork {
+    link: LinkSpec,
+    /// When each node's NIC is next free to send.
+    nic_free: Vec<f64>,
+    /// When each node's CPU is next free.
+    cpu_free: Vec<f64>,
+    /// Bytes sent per node (for saturation diagnostics).
+    pub bytes_sent: Vec<u64>,
+    pub packets_sent: Vec<u64>,
+}
+
+impl SimNetwork {
+    pub fn new(nodes: usize, link: LinkSpec) -> Self {
+        SimNetwork {
+            link,
+            nic_free: vec![0.0; nodes],
+            cpu_free: vec![0.0; nodes],
+            bytes_sent: vec![0; nodes],
+            packets_sent: vec![0; nodes],
+        }
+    }
+
+    pub fn link(&self) -> LinkSpec {
+        self.link
+    }
+
+    /// Send `bytes` from `from` no earlier than `at`; returns arrival
+    /// time at the destination. Sender NIC serializes transmissions.
+    pub fn send(&mut self, from: usize, bytes: usize, at: f64) -> f64 {
+        let depart = at.max(self.nic_free[from]);
+        let tx = self.link.tx_time(bytes);
+        self.nic_free[from] = depart + tx;
+        self.bytes_sent[from] += bytes as u64;
+        self.packets_sent[from] += 1;
+        depart + tx + self.link.latency_s
+    }
+
+    /// Occupy `node`'s CPU for `seconds` starting no earlier than `at`;
+    /// returns completion time.
+    pub fn compute(&mut self, node: usize, seconds: f64, at: f64) -> f64 {
+        let start = at.max(self.cpu_free[node]);
+        self.cpu_free[node] = start + seconds;
+        start + seconds
+    }
+
+    /// The virtual time at which everything so far has drained.
+    pub fn quiescent_time(&self) -> f64 {
+        self.nic_free
+            .iter()
+            .chain(self.cpu_free.iter())
+            .cloned()
+            .fold(0.0, f64::max)
+    }
+
+    /// NIC utilization of a node given a horizon.
+    pub fn nic_busy_fraction(&self, node: usize, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        (self.bytes_sent[node] as f64 / self.link.bandwidth_bps
+            + self.packets_sent[node] as f64 * self.link.per_packet_s)
+            / horizon
+    }
+}
+
+/// Wire-size model for the messages the sharded architecture exchanges
+/// (the paper: "the bandwidth required to pass a few bytes per instance
+/// around is not prohibitive").
+pub mod wire {
+    /// A sparse feature on the wire: varint index + f32 value ≈ 7 bytes.
+    pub fn shard_features(nnz: usize) -> usize {
+        16 + 7 * nnz // header + payload
+    }
+
+    /// A prediction or gradient message: header + f32.
+    pub fn prediction() -> usize {
+        16 + 4
+    }
+
+    /// Label piggybacked with a prediction.
+    pub fn prediction_with_label() -> usize {
+        16 + 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_serializes_on_sender_nic() {
+        let mut net = SimNetwork::new(2, LinkSpec::gigabit());
+        let a1 = net.send(0, 1000, 0.0);
+        let a2 = net.send(0, 1000, 0.0);
+        assert!(a2 > a1, "second send must queue behind the first");
+        let gap = a2 - a1;
+        assert!((gap - net.link().tx_time(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_added_once() {
+        let mut net = SimNetwork::new(2, LinkSpec::gigabit());
+        let arr = net.send(0, 0, 0.0);
+        let l = net.link();
+        assert!((arr - (l.per_packet_s + l.latency_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_serializes_on_cpu() {
+        let mut net = SimNetwork::new(1, LinkSpec::gigabit());
+        let t1 = net.compute(0, 1.0, 0.0);
+        let t2 = net.compute(0, 1.0, 0.0);
+        assert_eq!(t1, 1.0);
+        assert_eq!(t2, 2.0);
+    }
+
+    #[test]
+    fn small_packets_waste_bandwidth() {
+        // same payload, many small packets vs one big: small is slower
+        let l = LinkSpec::gigabit();
+        let mut many = SimNetwork::new(1, l);
+        let mut one = SimNetwork::new(1, l);
+        let mut t_many = 0.0;
+        for _ in 0..1000 {
+            t_many = many.send(0, 100, t_many);
+        }
+        let t_one = one.send(0, 100 * 1000, 0.0);
+        assert!(t_many > 2.0 * t_one, "{t_many} vs {t_one}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut net = SimNetwork::new(3, LinkSpec::gigabit());
+            let mut t = 0.0;
+            for i in 0..100 {
+                t = net.send(i % 3, 64 + i, t * 0.5);
+                t = net.compute((i + 1) % 3, 1e-6, t);
+            }
+            t
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn quiescent_after_all_events() {
+        let mut net = SimNetwork::new(2, LinkSpec::gigabit());
+        let a = net.send(0, 1_000_000, 0.0);
+        assert!(net.quiescent_time() <= a);
+        assert!(net.quiescent_time() > 0.0);
+    }
+}

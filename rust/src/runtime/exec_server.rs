@@ -1,0 +1,165 @@
+//! A dedicated executor thread owning one compiled PJRT executable.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A tensor crossing the server boundary: shape + row-major f32 data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn scalar(v: f32) -> Self {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Self {
+        Tensor { dims: vec![data.len() as i64], data }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Tensor { dims: vec![rows as i64, cols as i64], data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<i64>().max(1) as usize
+    }
+}
+
+type Reply = Result<Vec<Tensor>>;
+type Request = (Vec<Tensor>, mpsc::Sender<Reply>);
+
+/// Handle to an executor thread serving one artifact.
+pub struct ExecServer {
+    tx: mpsc::Sender<Request>,
+    name: String,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ExecServer {
+    /// Spawn a server for the HLO-text artifact at `path`. Compilation
+    /// happens on the server thread; the first `call` observes any
+    /// compile error.
+    pub fn spawn(name: &str, path: std::path::PathBuf) -> ExecServer {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_name = format!("exec-{name}");
+        let handle = std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || serve(path, rx))
+            .expect("spawn exec server");
+        ExecServer { tx, name: name.to_string(), handle: Some(handle) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; blocks for the reply.
+    pub fn call(&self, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send((inputs, rtx))
+            .map_err(|_| anyhow!("exec server '{}' is down", self.name))?;
+        rrx.recv()
+            .map_err(|_| anyhow!("exec server '{}' dropped reply", self.name))?
+    }
+}
+
+impl Drop for ExecServer {
+    fn drop(&mut self) {
+        // closing the channel stops the serve loop
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Server loop: build client, compile once, serve until channel closes.
+fn serve(path: std::path::PathBuf, rx: mpsc::Receiver<Request>) {
+    let built = (|| -> Result<_> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok((client, exe))
+    })();
+    match built {
+        Ok((_client, exe)) => {
+            while let Ok((inputs, reply)) = rx.recv() {
+                let _ = reply.send(run_once(&exe, inputs));
+            }
+        }
+        Err(e) => {
+            // report the compile error to every caller
+            let msg = format!("{e:#}");
+            while let Ok((_, reply)) = rx.recv() {
+                let _ = reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+fn run_once(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Reply {
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            let lit = xla::Literal::vec1(&t.data);
+            if t.dims.is_empty() {
+                lit.reshape(&[]).context("scalar reshape")
+            } else {
+                lit.reshape(&t.dims).context("reshape")
+            }
+        })
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    // aot.py lowers with return_tuple=True: unpack the tuple
+    let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    parts
+        .into_iter()
+        .map(|p| {
+            let shape =
+                p.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            let data =
+                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            Ok(Tensor { dims, data })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_constructors() {
+        assert_eq!(Tensor::scalar(2.0).numel(), 1);
+        assert_eq!(Tensor::vec(vec![1.0, 2.0]).dims, vec![2]);
+        let m = Tensor::matrix(2, 3, vec![0.0; 6]);
+        assert_eq!(m.dims, vec![2, 3]);
+        assert_eq!(m.numel(), 6);
+    }
+
+    #[test]
+    fn missing_artifact_reports_error() {
+        let srv = ExecServer::spawn("nope", "/definitely/missing.hlo.txt".into());
+        let err = srv.call(vec![]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("missing.hlo.txt"), "{msg}");
+    }
+}

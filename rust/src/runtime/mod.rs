@@ -1,0 +1,22 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, built
+//! once by `make artifacts`) and execute them from the rust request
+//! path. Python never runs here.
+//!
+//! Each compiled executable is owned by a dedicated [`ExecServer`]
+//! thread — PJRT handles are not `Send`, so the client and executable
+//! are constructed *inside* the thread and requests/replies cross over
+//! `mpsc` channels carrying plain `f32` buffers. One server per
+//! artifact; the [`Registry`] maps (op, shape) → server, spawning
+//! lazily.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md).
+
+pub mod exec_server;
+pub mod ops;
+pub mod registry;
+
+pub use exec_server::ExecServer;
+pub use registry::{ArtifactSpec, Registry};

@@ -1,0 +1,300 @@
+//! Typed wrappers over the artifacts: the L2 step functions callable
+//! from the coordinator hot path.
+//!
+//! These are the *dense* (hashed-block) execution paths: a shard's
+//! weight table is padded to the artifact's `d`, instances are densified
+//! in blocks of `b`, and the AOT-compiled sweep runs on the PJRT CPU
+//! client. The pure-rust sparse path in [`crate::learner`] computes the
+//! same math; `rust/tests/test_runtime.rs` proves they agree, which is
+//! the cross-layer correctness signal for the whole stack.
+
+use anyhow::{anyhow, Result};
+
+use super::exec_server::Tensor;
+use super::registry::Registry;
+use crate::linalg::SparseFeat;
+
+/// Dense online-GD sweep over a block of `b` instances (L1 kernel
+/// `shard_step`): returns per-instance pre-update predictions and
+/// updates `w` in place.
+pub struct ShardStepOp<'r> {
+    server: std::sync::Arc<super::ExecServer>,
+    pub d: usize,
+    pub b: usize,
+    /// Reused densification buffer (perf: b×d f32 ≈ 256 KB per call
+    /// would otherwise be allocated and zeroed from scratch every block;
+    /// reusing it only pays the zeroing of touched rows).
+    dense: std::cell::RefCell<Vec<f32>>,
+    _registry: &'r Registry,
+}
+
+impl<'r> ShardStepOp<'r> {
+    pub fn new(reg: &'r Registry, loss: &str, min_d: usize) -> Result<Self> {
+        let spec = reg
+            .find_at_least("shard_step", loss, min_d)
+            .ok_or_else(|| anyhow!("no shard_step artifact with d >= {min_d}"))?
+            .clone();
+        Ok(ShardStepOp {
+            server: reg.server(&spec.name)?,
+            d: spec.d,
+            b: spec.b,
+            dense: std::cell::RefCell::new(vec![0.0; spec.b * spec.d]),
+            _registry: reg,
+        })
+    }
+
+    /// Run one block. `xs` must contain exactly `b` sparse rows whose
+    /// indices are < `d`; `w` has length `d`. Returns yhat[b].
+    pub fn run_block(
+        &self,
+        xs: &[&[SparseFeat]],
+        ys: &[f32],
+        w: &mut [f32],
+        eta: f32,
+    ) -> Result<Vec<f32>> {
+        if xs.len() != self.b || ys.len() != self.b || w.len() != self.d {
+            return Err(anyhow!(
+                "shard_step shape mismatch: got ({}, {}, {}), want ({}, {}, {})",
+                xs.len(),
+                ys.len(),
+                w.len(),
+                self.b,
+                self.b,
+                self.d
+            ));
+        }
+        let mut dense_guard = self.dense.borrow_mut();
+        // sparse re-zeroing: clear only the slots the previous block set
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut dense_guard[r * self.d..(r + 1) * self.d];
+            for &(i, v) in *x {
+                row[i as usize] += v;
+            }
+        }
+        let dense = dense_guard.clone();
+        // undo our writes for the next call (cheaper than zeroing 256 KB
+        // when rows are sparse)
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut dense_guard[r * self.d..(r + 1) * self.d];
+            for &(i, _) in *x {
+                row[i as usize] = 0.0;
+            }
+        }
+        drop(dense_guard);
+        let outs = self.server.call(vec![
+            Tensor::matrix(self.b, self.d, dense),
+            Tensor::vec(ys.to_vec()),
+            Tensor::vec(w.to_vec()),
+            Tensor::scalar(eta),
+        ])?;
+        let [yhat, w_out]: [Tensor; 2] = outs
+            .try_into()
+            .map_err(|v: Vec<Tensor>| anyhow!("expected 2 outputs, got {}", v.len()))?;
+        w.copy_from_slice(&w_out.data);
+        Ok(yhat.data)
+    }
+}
+
+/// Minibatch-CG step (L1 kernel `cg_step`): full CG state in/out.
+pub struct CgStepOp<'r> {
+    server: std::sync::Arc<super::ExecServer>,
+    pub d: usize,
+    pub b: usize,
+    /// Reused densification buffer (see [`ShardStepOp::dense`]).
+    dense: std::cell::RefCell<Vec<f32>>,
+    _registry: &'r Registry,
+}
+
+impl<'r> CgStepOp<'r> {
+    pub fn new(reg: &'r Registry, loss: &str, min_d: usize) -> Result<Self> {
+        let spec = reg
+            .find_at_least("cg_step", loss, min_d)
+            .ok_or_else(|| anyhow!("no cg_step artifact with d >= {min_d}"))?
+            .clone();
+        Ok(CgStepOp {
+            server: reg.server(&spec.name)?,
+            d: spec.d,
+            b: spec.b,
+            dense: std::cell::RefCell::new(vec![0.0; spec.b * spec.d]),
+            _registry: reg,
+        })
+    }
+
+    /// One CG step over a dense block; updates (w, g_prev, d_prev) in
+    /// place and returns (alpha, beta).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_block(
+        &self,
+        xs: &[&[SparseFeat]],
+        ys: &[f32],
+        w: &mut [f32],
+        g_prev: &mut [f32],
+        d_prev: &mut [f32],
+    ) -> Result<(f32, f32)> {
+        if xs.len() != self.b || w.len() != self.d {
+            return Err(anyhow!("cg_step shape mismatch"));
+        }
+        let mut dense_guard = self.dense.borrow_mut();
+        // sparse re-zeroing: clear only the slots the previous block set
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut dense_guard[r * self.d..(r + 1) * self.d];
+            for &(i, v) in *x {
+                row[i as usize] += v;
+            }
+        }
+        let dense = dense_guard.clone();
+        // undo our writes for the next call (cheaper than zeroing 256 KB
+        // when rows are sparse)
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut dense_guard[r * self.d..(r + 1) * self.d];
+            for &(i, _) in *x {
+                row[i as usize] = 0.0;
+            }
+        }
+        drop(dense_guard);
+        let outs = self.server.call(vec![
+            Tensor::matrix(self.b, self.d, dense),
+            Tensor::vec(ys.to_vec()),
+            Tensor::vec(w.to_vec()),
+            Tensor::vec(g_prev.to_vec()),
+            Tensor::vec(d_prev.to_vec()),
+        ])?;
+        if outs.len() != 5 {
+            return Err(anyhow!("expected 5 outputs, got {}", outs.len()));
+        }
+        w.copy_from_slice(&outs[0].data);
+        g_prev.copy_from_slice(&outs[1].data);
+        d_prev.copy_from_slice(&outs[2].data);
+        Ok((outs[3].data[0], outs[4].data[0]))
+    }
+}
+
+/// Master combine sweep (L1 kernel `master_step`).
+pub struct MasterStepOp<'r> {
+    server: std::sync::Arc<super::ExecServer>,
+    pub k: usize,
+    pub b: usize,
+    _registry: &'r Registry,
+}
+
+impl<'r> MasterStepOp<'r> {
+    pub fn new(reg: &'r Registry, k: usize, clip01: bool) -> Result<Self> {
+        let spec = reg
+            .specs()
+            .iter()
+            .find(|s| s.op == "master_step" && s.k == k && s.clip01 == clip01)
+            .ok_or_else(|| anyhow!("no master_step artifact with k = {k}"))?
+            .clone();
+        Ok(MasterStepOp {
+            server: reg.server(&spec.name)?,
+            k: spec.k,
+            b: spec.b,
+            _registry: reg,
+        })
+    }
+
+    /// One block: P is row-major [b, k]; v has length k+1. Returns
+    /// (yhat[b], gsc[b]) and updates v in place.
+    pub fn run_block(
+        &self,
+        p: &[f32],
+        ys: &[f32],
+        v: &mut [f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if p.len() != self.b * self.k || v.len() != self.k + 1 {
+            return Err(anyhow!("master_step shape mismatch"));
+        }
+        let outs = self.server.call(vec![
+            Tensor::matrix(self.b, self.k, p.to_vec()),
+            Tensor::vec(ys.to_vec()),
+            Tensor::vec(v.to_vec()),
+            Tensor::scalar(eta),
+        ])?;
+        if outs.len() != 3 {
+            return Err(anyhow!("expected 3 outputs, got {}", outs.len()));
+        }
+        v.copy_from_slice(&outs[1].data);
+        Ok((outs[0].data.clone(), outs[2].data.clone()))
+    }
+}
+
+/// Fused Fig 0.4 sweep (L2 `two_layer`): k contiguous-range feature
+/// shards + clipping master, one PJRT call per block.
+///
+/// Perf note (EXPERIMENTS.md §Perf): one fused call amortizes the
+/// per-executable dispatch overhead that dominates the separate
+/// shard_step/master_step path — ~8× end-to-end on the e2e driver.
+pub struct TwoLayerOp<'r> {
+    server: std::sync::Arc<super::ExecServer>,
+    pub k: usize,
+    pub d: usize,
+    pub b: usize,
+    dense: std::cell::RefCell<Vec<f32>>,
+    _registry: &'r Registry,
+}
+
+impl<'r> TwoLayerOp<'r> {
+    pub fn new(reg: &'r Registry) -> Result<Self> {
+        let spec = reg
+            .specs()
+            .iter()
+            .find(|s| s.op == "two_layer")
+            .ok_or_else(|| anyhow!("no two_layer artifact"))?
+            .clone();
+        Ok(TwoLayerOp {
+            server: reg.server(&spec.name)?,
+            k: spec.k,
+            d: spec.d,
+            b: spec.b,
+            dense: std::cell::RefCell::new(vec![0.0; spec.b * spec.d]),
+            _registry: reg,
+        })
+    }
+
+    /// One fused block: updates `w` ([k, d/k] row-major) and `v` ([k+1])
+    /// in place; returns (yhat_master[b], shard_preds[b*k] row-major).
+    pub fn run_block(
+        &self,
+        xs: &[&[SparseFeat]],
+        ys: &[f32],
+        w: &mut [f32],
+        v: &mut [f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if xs.len() != self.b || w.len() != self.d || v.len() != self.k + 1 {
+            return Err(anyhow!("two_layer shape mismatch"));
+        }
+        let mut dense_guard = self.dense.borrow_mut();
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut dense_guard[r * self.d..(r + 1) * self.d];
+            for &(i, val) in *x {
+                row[i as usize] += val;
+            }
+        }
+        let dense = dense_guard.clone();
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut dense_guard[r * self.d..(r + 1) * self.d];
+            for &(i, _) in *x {
+                row[i as usize] = 0.0;
+            }
+        }
+        drop(dense_guard);
+        let outs = self.server.call(vec![
+            Tensor::matrix(self.b, self.d, dense),
+            Tensor::vec(ys.to_vec()),
+            Tensor {
+                dims: vec![self.k as i64, (self.d / self.k) as i64],
+                data: w.to_vec(),
+            },
+            Tensor::vec(v.to_vec()),
+            Tensor::scalar(eta),
+        ])?;
+        if outs.len() != 4 {
+            return Err(anyhow!("expected 4 outputs, got {}", outs.len()));
+        }
+        w.copy_from_slice(&outs[1].data);
+        v.copy_from_slice(&outs[2].data);
+        Ok((outs[0].data.clone(), outs[3].data.clone()))
+    }
+}

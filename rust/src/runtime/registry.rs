@@ -1,0 +1,178 @@
+//! Artifact registry: manifest parsing + lazy [`ExecServer`] spawning.
+//!
+//! `make artifacts` writes one `*.hlo.txt` per (op, shape) variant plus
+//! `manifest.tsv` (`name \t op \t loss \t d \t b \t k \t clip01`). The
+//! registry parses the manifest, answers shape queries, and spawns one
+//! server per artifact on first use.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::exec_server::ExecServer;
+
+/// One artifact's signature, from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub op: String,
+    pub loss: String,
+    pub d: usize,
+    pub b: usize,
+    pub k: usize,
+    pub clip01: bool,
+}
+
+/// Lazily-spawning artifact registry.
+pub struct Registry {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+    servers: Mutex<HashMap<String, std::sync::Arc<ExecServer>>>,
+}
+
+impl Registry {
+    /// Default artifact directory (relative to the repo root).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("POL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("read {manifest:?} — run `make artifacts` first")
+        })?;
+        let mut specs = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 7 {
+                return Err(anyhow!("manifest line {}: bad column count", no + 1));
+            }
+            specs.push(ArtifactSpec {
+                name: cols[0].to_string(),
+                op: cols[1].to_string(),
+                loss: cols[2].to_string(),
+                d: cols[3].parse().context("d")?,
+                b: cols[4].parse().context("b")?,
+                k: cols[5].parse().context("k")?,
+                clip01: cols[6] == "1",
+            });
+        }
+        Ok(Registry { dir, specs, servers: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find a spec by op + exact shape.
+    pub fn find(
+        &self,
+        op: &str,
+        loss: &str,
+        d: usize,
+        b: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.op == op && s.loss == loss && s.d == d && s.b == b)
+    }
+
+    /// The smallest artifact of `op`/`loss` whose d ≥ `min_d` (callers
+    /// pad their hashed dim up to the artifact's).
+    pub fn find_at_least(
+        &self,
+        op: &str,
+        loss: &str,
+        min_d: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.op == op && s.loss == loss && s.d >= min_d)
+            .min_by_key(|s| s.d)
+    }
+
+    /// Get (spawning if needed) the server for an artifact name.
+    pub fn server(&self, name: &str) -> Result<std::sync::Arc<ExecServer>> {
+        if !self.specs.iter().any(|s| s.name == name) {
+            return Err(anyhow!("unknown artifact '{name}'"));
+        }
+        let mut servers = self.servers.lock().expect("registry lock");
+        if let Some(s) = servers.get(name) {
+            return Ok(std::sync::Arc::clone(s));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(anyhow!("artifact file missing: {path:?}"));
+        }
+        let srv = std::sync::Arc::new(ExecServer::spawn(name, path));
+        servers.insert(name.to_string(), std::sync::Arc::clone(&srv));
+        Ok(srv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, rows: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), rows.join("\n") + "\n").unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("pol_registry_test1");
+        write_manifest(
+            &dir,
+            &[
+                "shard_step_sq_1024x64\tshard_step\tsq\t1024\t64\t0\t0",
+                "master_step_8x64_clip\tmaster_step\tsq\t0\t64\t8\t1",
+            ],
+        );
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.specs().len(), 2);
+        let s = reg.find("shard_step", "sq", 1024, 64).unwrap();
+        assert_eq!(s.name, "shard_step_sq_1024x64");
+        assert!(reg.specs()[1].clip01);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn find_at_least_picks_smallest_fit() {
+        let dir = std::env::temp_dir().join("pol_registry_test2");
+        write_manifest(
+            &dir,
+            &[
+                "a\tshard_step\tsq\t1024\t64\t0\t0",
+                "b\tshard_step\tsq\t4096\t64\t0\t0",
+            ],
+        );
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.find_at_least("shard_step", "sq", 100).unwrap().d, 1024);
+        assert_eq!(reg.find_at_least("shard_step", "sq", 2000).unwrap().d, 4096);
+        assert!(reg.find_at_least("shard_step", "sq", 10_000).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        match Registry::open("/definitely/missing/dir") {
+            Ok(_) => panic!("expected error"),
+            Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let dir = std::env::temp_dir().join("pol_registry_test3");
+        write_manifest(&dir, &["a\tshard_step\tsq\t1024\t64\t0\t0"]);
+        let reg = Registry::open(&dir).unwrap();
+        assert!(reg.server("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

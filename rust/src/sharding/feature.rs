@@ -1,0 +1,174 @@
+//! Feature sharding (Fig 0.1 right, Fig 0.4 step (b)).
+//!
+//! Split each instance's features across n shards, replicating the label
+//! to every shard. Assignment is by hash of the feature index — stateless
+//! and namespace-oblivious, so the shard step is "completely
+//! parallelizable" as the paper notes. Contiguous-range assignment is
+//! also provided for the dense/runtime path, where shard s owns the
+//! index range [s·d/n, (s+1)·d/n).
+
+use crate::data::instance::Instance;
+use crate::linalg::SparseFeat;
+
+/// How features map to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardAssign {
+    /// shard = mix(index) mod n — balanced for arbitrary index sets.
+    Hash,
+    /// shard = index / (dim/n) — contiguous ranges (dense-block friendly).
+    Range { dim: u32 },
+}
+
+/// Splits instances into per-shard projected instances.
+#[derive(Clone, Debug)]
+pub struct FeatureSharder {
+    pub shards: usize,
+    pub assign: ShardAssign,
+}
+
+impl FeatureSharder {
+    pub fn hash(shards: usize) -> Self {
+        assert!(shards >= 1);
+        FeatureSharder { shards, assign: ShardAssign::Hash }
+    }
+
+    pub fn range(shards: usize, dim: u32) -> Self {
+        assert!(shards >= 1 && dim as usize >= shards);
+        FeatureSharder { shards, assign: ShardAssign::Range { dim } }
+    }
+
+    /// Which shard owns feature index `i`.
+    #[inline]
+    pub fn shard_of(&self, i: u32) -> usize {
+        match self.assign {
+            ShardAssign::Hash => {
+                // avalanche the index so contiguous hashed features spread
+                let mut h = i as u64;
+                h ^= h >> 16;
+                h = h.wrapping_mul(0x45d9f3b);
+                h ^= h >> 16;
+                (h % self.shards as u64) as usize
+            }
+            ShardAssign::Range { dim } => {
+                let per = dim.div_ceil(self.shards as u32);
+                ((i / per) as usize).min(self.shards - 1)
+            }
+        }
+    }
+
+    /// Split one instance into `shards` projected instances (labels and
+    /// tags replicated — Fig 0.4 step (b)).
+    pub fn split(&self, inst: &Instance) -> Vec<Instance> {
+        let mut parts: Vec<Vec<SparseFeat>> =
+            vec![Vec::with_capacity(inst.features.len() / self.shards + 1); self.shards];
+        for &(i, v) in &inst.features {
+            parts[self.shard_of(i)].push((i, v));
+        }
+        parts
+            .into_iter()
+            .map(|features| Instance {
+                label: inst.label,
+                weight: inst.weight,
+                features,
+                tag: inst.tag,
+            })
+            .collect()
+    }
+
+    /// Split into preallocated buffers (hot path; avoids the per-call
+    /// Vec-of-Vec allocation).
+    pub fn split_into(&self, inst: &Instance, out: &mut [Vec<SparseFeat>]) {
+        self.split_features_into(&inst.features, out);
+    }
+
+    /// Slice-based variant of [`Self::split_into`] — the coordinator's
+    /// per-instance path, which must not clone or wrap the features.
+    pub fn split_features_into(
+        &self,
+        features: &[SparseFeat],
+        out: &mut [Vec<SparseFeat>],
+    ) {
+        assert_eq!(out.len(), self.shards);
+        for buf in out.iter_mut() {
+            buf.clear();
+        }
+        for &(i, v) in features {
+            out[self.shard_of(i)].push((i, v));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(n: u32) -> Instance {
+        Instance::new(1.0, (0..n).map(|i| (i * 7 + 3, 1.0)).collect())
+    }
+
+    #[test]
+    fn split_partitions_features() {
+        let s = FeatureSharder::hash(4);
+        let i = inst(100);
+        let parts = s.split(&i);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.features.len()).sum();
+        assert_eq!(total, 100);
+        // disjointness: every feature appears in exactly the shard that
+        // owns it
+        for (sidx, p) in parts.iter().enumerate() {
+            for &(fi, _) in &p.features {
+                assert_eq!(s.shard_of(fi), sidx);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_replicated() {
+        let s = FeatureSharder::hash(3);
+        for p in s.split(&inst(10)) {
+            assert_eq!(p.label, 1.0);
+        }
+    }
+
+    #[test]
+    fn hash_assign_balanced() {
+        let s = FeatureSharder::hash(8);
+        let mut counts = vec![0usize; 8];
+        for i in 0..80_000u32 {
+            counts[s.shard_of(i)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 1_000.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_assign_contiguous() {
+        let s = FeatureSharder::range(4, 100);
+        assert_eq!(s.shard_of(0), 0);
+        assert_eq!(s.shard_of(24), 0);
+        assert_eq!(s.shard_of(25), 1);
+        assert_eq!(s.shard_of(99), 3);
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let s = FeatureSharder::hash(1);
+        let i = inst(10);
+        let parts = s.split(&i);
+        assert_eq!(parts[0].features, i.features);
+    }
+
+    #[test]
+    fn split_into_matches_split() {
+        let s = FeatureSharder::hash(4);
+        let i = inst(50);
+        let parts = s.split(&i);
+        let mut bufs: Vec<Vec<SparseFeat>> = vec![Vec::new(); 4];
+        s.split_into(&i, &mut bufs);
+        for (p, b) in parts.iter().zip(&bufs) {
+            assert_eq!(&p.features, b);
+        }
+    }
+}

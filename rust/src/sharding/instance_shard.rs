@@ -1,0 +1,125 @@
+//! Instance sharding (Fig 0.1 left) — the baseline the paper argues
+//! against for online learning: partition *instances* across n workers,
+//! train independently, combine by (weighted) parameter averaging.
+//!
+//! The delay factor is m/n (§0.3): information from an instance on one
+//! shard reaches the others only at the next combine. We implement the
+//! standard iterate-average scheme (Mann et al. 2009; McDonald et al.
+//! 2010): E epochs of {train each shard locally, average weights,
+//! re-broadcast}.
+
+use crate::data::Dataset;
+use crate::learner::sgd::Sgd;
+use crate::learner::OnlineLearner;
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+
+#[derive(Clone, Debug)]
+pub struct InstanceSharder {
+    pub shards: usize,
+}
+
+impl InstanceSharder {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1);
+        InstanceSharder { shards }
+    }
+
+    /// Round-robin partition of instance indices.
+    pub fn partition(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut parts = vec![Vec::with_capacity(n / self.shards + 1); self.shards];
+        for i in 0..n {
+            parts[i % self.shards].push(i);
+        }
+        parts
+    }
+
+    /// Train-with-averaging: each epoch trains every shard from the
+    /// current averaged weights, then averages. Returns the final
+    /// averaged weights.
+    pub fn train_averaged(
+        &self,
+        ds: &Dataset,
+        loss: Loss,
+        lr: LrSchedule,
+        epochs: usize,
+    ) -> Vec<f32> {
+        let parts = self.partition(ds.len());
+        let mut avg = vec![0.0f32; ds.dim];
+        for _ in 0..epochs.max(1) {
+            let mut acc = vec![0.0f64; ds.dim];
+            for part in &parts {
+                let mut learner = Sgd::new(ds.dim, loss, lr);
+                learner.w.copy_from_slice(&avg);
+                for &idx in part {
+                    let inst = &ds.instances[idx];
+                    learner.learn(&inst.features, inst.label);
+                }
+                for (a, &w) in acc.iter_mut().zip(learner.weights()) {
+                    *a += w as f64;
+                }
+            }
+            for (dst, &a) in avg.iter_mut().zip(&acc) {
+                *dst = (a / self.shards as f64) as f32;
+            }
+        }
+        avg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+
+    #[test]
+    fn partition_covers_all() {
+        let s = InstanceSharder::new(3);
+        let parts = s.partition(10);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn averaging_learns() {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 4_000,
+            features: 300,
+            density: 15,
+            ..Default::default()
+        })
+        .generate();
+        let (train, test) = ds.split_test(0.2);
+        let w = InstanceSharder::new(4).train_averaged(
+            &train,
+            Loss::Logistic,
+            LrSchedule::inv_sqrt(4.0, 1.0),
+            3,
+        );
+        let (_, acc) = crate::metrics::test_metrics(
+            Loss::Logistic,
+            |x| crate::linalg::sparse_dot(&w, x),
+            &test.instances,
+        );
+        assert!(acc > 0.65, "acc {acc}");
+    }
+
+    #[test]
+    fn single_shard_single_epoch_equals_sgd() {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 500,
+            features: 100,
+            density: 10,
+            ..Default::default()
+        })
+        .generate();
+        let s = InstanceSharder::new(1);
+        let w = s.train_averaged(&ds, Loss::Squared, LrSchedule::constant(0.05), 1);
+        let mut sgd = Sgd::new(ds.dim, Loss::Squared, LrSchedule::constant(0.05));
+        for inst in ds.iter() {
+            sgd.learn(&inst.features, inst.label);
+        }
+        assert_eq!(w, sgd.w);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data decomposition (§0.3, Figure 0.1): instance shards and feature
+//! shards.
+
+pub mod feature;
+pub mod instance_shard;
+
+pub use feature::FeatureSharder;
+pub use instance_shard::InstanceSharder;

@@ -1,0 +1,209 @@
+//! Node topologies for multinode feature sharding (§0.5.2).
+//!
+//! * [`Topology::TwoLayer`] — Figure 0.2 / Figure 0.4: k feature shards
+//!   feeding one master ("flat hierarchy", the configuration of the
+//!   paper's experiments).
+//! * [`Topology::BinaryTree`] — Figure 0.3: each leaf owns one feature
+//!   shard; each internal node combines two subordinate predictions.
+//! * [`Topology::KAry`] — the in-between the paper mentions ("somewhere
+//!   in between the binary tree and the two-layer scheme"): fan-in k.
+//!
+//! [`NodeGraph`] is the resolved structure: parent/child arrays, the
+//! leaf list (in shard order), and per-node depth. Internal node ids
+//! come after leaf ids; the root is always the last id.
+
+/// Declarative topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    TwoLayer { shards: usize },
+    BinaryTree { leaves: usize },
+    KAry { leaves: usize, fanin: usize },
+}
+
+impl Topology {
+    pub fn leaves(&self) -> usize {
+        match *self {
+            Topology::TwoLayer { shards } => shards,
+            Topology::BinaryTree { leaves } => leaves,
+            Topology::KAry { leaves, .. } => leaves,
+        }
+    }
+
+    pub fn build(&self) -> NodeGraph {
+        match *self {
+            Topology::TwoLayer { shards } => NodeGraph::karyfrom(shards, shards),
+            Topology::BinaryTree { leaves } => NodeGraph::karyfrom(leaves, 2),
+            Topology::KAry { leaves, fanin } => NodeGraph::karyfrom(leaves, fanin),
+        }
+    }
+}
+
+/// Resolved node graph. Leaves are ids `0..leaves`; internal nodes are
+/// built bottom-up layer by layer; `root` is the final combiner.
+#[derive(Clone, Debug)]
+pub struct NodeGraph {
+    pub parent: Vec<Option<usize>>,
+    pub children: Vec<Vec<usize>>,
+    pub leaves: usize,
+    pub root: usize,
+}
+
+impl NodeGraph {
+    fn karyfrom(leaves: usize, fanin: usize) -> NodeGraph {
+        assert!(leaves >= 1 && fanin >= 2 || leaves == 1);
+        let mut parent: Vec<Option<usize>> = vec![None; leaves];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); leaves];
+        let mut layer: Vec<usize> = (0..leaves).collect();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(fanin));
+            for group in layer.chunks(fanin) {
+                let id = parent.len();
+                parent.push(None);
+                children.push(group.to_vec());
+                for &c in group {
+                    parent[c] = Some(id);
+                }
+                next.push(id);
+            }
+            layer = next;
+        }
+        // single leaf: add a master above it anyway (the paper's shard
+        // count = 1 configuration still has a final output node)
+        if leaves == 1 && parent.len() == 1 {
+            parent.push(None);
+            children.push(vec![0]);
+            parent[0] = Some(1);
+        }
+        let root = parent.len() - 1;
+        NodeGraph { parent, children, leaves, root }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_leaf(&self, id: usize) -> bool {
+        id < self.leaves
+    }
+
+    /// Depth of a node (root = 0).
+    pub fn depth(&self, mut id: usize) -> usize {
+        let mut d = 0;
+        while let Some(p) = self.parent[id] {
+            id = p;
+            d += 1;
+        }
+        d
+    }
+
+    /// Height of the tree = max leaf depth — the prediction latency in
+    /// hops (the paper: O(log n) for the binary tree).
+    pub fn height(&self) -> usize {
+        (0..self.leaves).map(|l| self.depth(l)).max().unwrap_or(0)
+    }
+
+    /// Nodes in bottom-up evaluation order (children before parents) —
+    /// valid because internal ids are assigned layer by layer.
+    pub fn bottom_up(&self) -> impl Iterator<Item = usize> {
+        0..self.num_nodes()
+    }
+
+    /// Nodes in top-down (feedback) order.
+    pub fn top_down(&self) -> impl Iterator<Item = usize> {
+        (0..self.num_nodes()).rev()
+    }
+
+    /// The set of leaf descendants of a node (the S_i of §0.5.2).
+    pub fn leaf_descendants(&self, id: usize) -> Vec<usize> {
+        if self.is_leaf(id) {
+            return vec![id];
+        }
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(n) = stack.pop() {
+            if self.is_leaf(n) {
+                out.push(n);
+            } else {
+                stack.extend(&self.children[n]);
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Max fan-in over internal nodes — each internal node "may incur
+    /// delay proportional to its fan-in" (§0.5.2).
+    pub fn max_fanin(&self) -> usize {
+        self.children.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_layer_shape() {
+        let g = Topology::TwoLayer { shards: 8 }.build();
+        assert_eq!(g.num_nodes(), 9);
+        assert_eq!(g.root, 8);
+        assert_eq!(g.children[8].len(), 8);
+        assert_eq!(g.height(), 1);
+        for l in 0..8 {
+            assert_eq!(g.parent[l], Some(8));
+        }
+    }
+
+    #[test]
+    fn binary_tree_shape() {
+        let g = Topology::BinaryTree { leaves: 8 }.build();
+        // 8 + 4 + 2 + 1
+        assert_eq!(g.num_nodes(), 15);
+        assert_eq!(g.height(), 3);
+        assert_eq!(g.max_fanin(), 2);
+        assert_eq!(g.leaf_descendants(g.root), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn binary_tree_non_power_of_two() {
+        let g = Topology::BinaryTree { leaves: 5 }.build();
+        assert_eq!(g.leaves, 5);
+        // all leaves reachable from root
+        assert_eq!(g.leaf_descendants(g.root).len(), 5);
+        // bottom-up order property: children precede parents
+        for id in 0..g.num_nodes() {
+            for &c in &g.children[id] {
+                assert!(c < id);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_still_has_master() {
+        let g = Topology::TwoLayer { shards: 1 }.build();
+        assert_eq!(g.num_nodes(), 2);
+        assert_eq!(g.root, 1);
+        assert!(g.is_leaf(0));
+    }
+
+    #[test]
+    fn kary_heights() {
+        let g4 = Topology::KAry { leaves: 16, fanin: 4 }.build();
+        assert_eq!(g4.height(), 2);
+        let g2 = Topology::KAry { leaves: 16, fanin: 2 }.build();
+        assert_eq!(g2.height(), 4);
+    }
+
+    #[test]
+    fn leaf_descendants_partition() {
+        let g = Topology::BinaryTree { leaves: 8 }.build();
+        // the two children of the root partition the leaves
+        let cs = &g.children[g.root];
+        let mut all: Vec<usize> = cs
+            .iter()
+            .flat_map(|&c| g.leaf_descendants(c))
+            .collect();
+        all.sort();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,108 @@
+//! CLI smoke tests: the `pol` launcher end-to-end.
+
+use std::process::Command;
+
+fn pol() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pol"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = pol().arg("--help").output().expect("run pol");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["train", "bench-data", "inspect", "artifacts-check"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = pol().arg("frobnicate").output().expect("run pol");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn inspect_reports_collisions() {
+    let out = pol()
+        .args(["inspect", "--bits", "10", "--uniques", "2000"])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rate="), "{text}");
+}
+
+#[test]
+fn train_small_run_outputs_metrics() {
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "3000", "--rule", "local",
+            "--workers", "4", "--loss", "logistic", "--lambda", "2",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("progressive_loss="), "{text}");
+    assert!(text.contains("test_acc="), "{text}");
+}
+
+#[test]
+fn train_all_rules_run() {
+    for rule in ["local", "delayed-global", "corrective", "backprop:8",
+                 "minibatch:64", "cg:64", "sgd"] {
+        let out = pol()
+            .args([
+                "train", "--data", "rcv", "--instances", "1500", "--rule", rule,
+                "--workers", "2", "--loss", "logistic",
+            ])
+            .output()
+            .expect("run pol");
+        assert!(
+            out.status.success(),
+            "rule {rule}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+#[test]
+fn train_deterministic_output() {
+    let run = || {
+        let out = pol()
+            .args([
+                "train", "--data", "webspam", "--instances", "2000", "--rule",
+                "backprop:2", "--workers", "4", "--loss", "logistic", "--seed",
+                "9",
+            ])
+            .output()
+            .expect("run pol");
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .next()
+            .unwrap_or_default()
+            .split_whitespace()
+            .filter(|t| !t.starts_with("elapsed"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn config_file_drives_train() {
+    let dir = std::env::temp_dir().join("pol_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.cfg");
+    std::fs::write(&path, "workers = 2\nrule = local\nloss = logistic\n").unwrap();
+    let out = pol()
+        .args([
+            "train", "--config", path.to_str().unwrap(), "--data", "rcv",
+            "--instances", "1500",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success());
+    std::fs::remove_file(&path).ok();
+}

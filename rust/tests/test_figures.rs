@@ -1,0 +1,227 @@
+//! Small-scale shape checks for every paper figure claim — the cheap
+//! versions of the bench harnesses, run in CI. The benches regenerate
+//! the full tables; these tests pin the qualitative shape so a
+//! regression is caught by `cargo test`.
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig, WebspamLikeGen};
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::topology::Topology;
+
+fn rcv(n: usize) -> pol::data::Dataset {
+    RcvLikeGen::new(SynthConfig {
+        instances: n,
+        features: 800,
+        density: 25,
+        hash_bits: 13,
+        ..Default::default()
+    })
+    .generate()
+}
+
+/// Paper methodology (§0.7): each algorithm gets its own learning-rate
+/// search; report the best.
+fn run_rule(
+    ds: &pol::data::Dataset,
+    rule: UpdateRule,
+    workers: usize,
+    passes: usize,
+) -> f64 {
+    let mut best = 0.0f64;
+    for lambda in [0.5, 2.0] {
+        let cfg = RunConfig {
+            topology: Topology::TwoLayer { shards: workers },
+            rule,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(lambda, 10.0),
+            master_lr: None,
+            tau: 128,
+            clip01: false,
+            bias: true,
+            passes,
+            seed: 3,
+        };
+        let mut c = Coordinator::new(cfg.clone(), ds.dim);
+        let (train, test) = ds.clone().split_test(0.2);
+        c.train(&train);
+        let (_, acc) = pol::metrics::test_metrics(
+            cfg.loss,
+            |x| c.predict(x),
+            &test.instances,
+        );
+        best = best.max(acc);
+    }
+    best
+}
+
+/// Fig 0.6 rows 1–2: local degrades with workers; global-only methods are
+/// worker-invariant by construction.
+#[test]
+fn fig06_local_degrades_with_workers() {
+    let ds = rcv(6_000);
+    let acc1 = run_rule(&ds, UpdateRule::Local, 1, 1);
+    let acc16 = run_rule(&ds, UpdateRule::Local, 16, 1);
+    assert!(
+        acc16 < acc1 + 1e-9,
+        "local: 1 worker {acc1} vs 16 workers {acc16}"
+    );
+}
+
+#[test]
+fn fig06_sgd_beats_minibatch1024() {
+    // "Among these methods SGD dominates CG which in turn dominates
+    // minibatch" — check the ends of the chain at small scale
+    let ds = rcv(8_000);
+    let cfg = RunConfig {
+        rule: UpdateRule::Sgd,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 10.0),
+        clip01: false,
+        ..Default::default()
+    };
+    let sgd = pol::coordinator::minibatch::train(&cfg, &ds, 1);
+    let mb = pol::coordinator::minibatch::train(&cfg, &ds, 1024);
+    assert!(
+        sgd.progressive.accuracy() > mb.progressive.accuracy(),
+        "sgd {} mb {}",
+        sgd.progressive.accuracy(),
+        mb.progressive.accuracy()
+    );
+}
+
+#[test]
+fn fig06_cg_beats_minibatch_same_batch() {
+    let ds = rcv(8_000);
+    let cfg = RunConfig {
+        rule: UpdateRule::Cg { batch: 256 },
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 10.0),
+        clip01: false,
+        ..Default::default()
+    };
+    let cg = pol::coordinator::cg::train(&cfg, &ds, 256);
+    let mb = pol::coordinator::minibatch::train(&cfg, &ds, 256);
+    assert!(
+        cg.progressive.accuracy() > mb.progressive.accuracy(),
+        "cg {} mb {}",
+        cg.progressive.accuracy(),
+        mb.progressive.accuracy()
+    );
+}
+
+/// Fig 0.6 rows 3–4: more passes help the sharded local rule.
+#[test]
+fn fig06_passes_help_local_many_workers() {
+    let ds = rcv(4_000);
+    let a1 = run_rule(&ds, UpdateRule::Local, 8, 1);
+    let a8 = run_rule(&ds, UpdateRule::Local, 8, 8);
+    assert!(a8 >= a1 - 0.02, "1 pass {a1} vs 8 passes {a8}");
+}
+
+/// Fig 0.5(a): average per-shard loss degrades as shards shrink.
+#[test]
+fn fig05_shard_loss_degrades_with_count() {
+    let ds = rcv(6_000);
+    let run = |k| {
+        let cfg = RunConfig {
+            topology: Topology::TwoLayer { shards: k },
+            rule: UpdateRule::Local,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 10.0),
+            master_lr: None,
+            tau: 0,
+            clip01: false,
+            bias: true,
+            passes: 1,
+            seed: 3,
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        let rep = c.train(&ds);
+        rep.shard_progressive.mean_loss()
+    };
+    let l1 = run(1);
+    let l8 = run(8);
+    assert!(l8 > l1, "shard loss must degrade: 1 -> {l1}, 8 -> {l8}");
+}
+
+/// Fig 0.5(b): the calibrating final node improves on the raw shard
+/// predictions (the paper's "major surprise").
+#[test]
+fn fig05_final_node_improves_on_shards() {
+    use pol::data::synth::ad_display::{AdDisplayConfig, AdDisplayGen};
+    let corpus =
+        AdDisplayGen::new(AdDisplayConfig { events: 8_000, ..Default::default() })
+            .generate();
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 1 },
+        rule: UpdateRule::Local,
+        loss: Loss::Squared,
+        // an aggressive shard rate overshoots [0,1] regularly — exactly
+        // the regime where the paper's thresholding + master calibration
+        // pays (and why the composed system is not a linear predictor)
+        lr: LrSchedule::inv_sqrt(0.4, 100.0),
+        master_lr: Some(LrSchedule::inv_sqrt(0.5, 10.0)),
+        tau: 0,
+        clip01: true,
+        bias: true,
+        passes: 1,
+        seed: 3,
+    };
+    let mut c = Coordinator::new(cfg, corpus.dim);
+    let rep = c.train(&corpus.pairwise);
+    let ratio =
+        rep.progressive.mean_squared() / rep.shard_progressive.mean_squared();
+    assert!(
+        ratio < 1.0,
+        "final-node loss ratio must be < 1 at shard count 1, got {ratio}"
+    );
+}
+
+/// Theorem 1 shape: on the adversarial duplicate stream, regret grows
+/// with τ; on IID streams delay costs only an additive burn-in.
+#[test]
+fn theorem1_regret_grows_with_tau_adversarial() {
+    use pol::data::synth::AdversarialDupGen;
+    use pol::eval::regret::delayed_regret;
+    let base = SynthConfig {
+        instances: 4_096,
+        features: 48,
+        density: 6,
+        hash_bits: 7,
+        noise: 0.0,
+        seed: 5,
+    };
+    let lr = LrSchedule::inv_sqrt(0.25, 10.0);
+    let mut prev = f64::NEG_INFINITY;
+    for tau in [0usize, 8, 64] {
+        let ds = AdversarialDupGen::new(base.clone(), tau.max(1)).generate();
+        let r = delayed_regret(&ds, Loss::Squared, lr, tau);
+        assert!(
+            r > prev * 0.8,
+            "regret should grow with tau: tau={tau} r={r} prev={prev}"
+        );
+        prev = prev.max(r);
+    }
+}
+
+/// Webspam-like correlated blocks: global (backprop) beats local at high
+/// worker counts — the paper's motivation for §0.6.
+#[test]
+fn webspam_backprop_beats_local_many_workers() {
+    let ds = WebspamLikeGen::new(SynthConfig {
+        instances: 8_000,
+        features: 600,
+        density: 30,
+        hash_bits: 13,
+        ..Default::default()
+    })
+    .generate();
+    let local = run_rule(&ds, UpdateRule::Local, 16, 4);
+    let bp = run_rule(&ds, UpdateRule::Backprop { multiplier: 8.0 }, 16, 4);
+    assert!(
+        bp > local - 0.03,
+        "backprop x8 should not lose badly to local: bp {bp} local {local}"
+    );
+}

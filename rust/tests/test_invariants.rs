@@ -1,0 +1,327 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The environment ships no proptest crate, so `cases` below is a small
+//! hand-rolled equivalent: a seeded generator drives N random cases per
+//! property; on failure the panic message carries the case seed so the
+//! exact input is reproducible with `Rng::new(seed)`.
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::schedule::{DelaySchedule, Op};
+use pol::coordinator::Coordinator;
+use pol::data::instance::Instance;
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::rng::Rng;
+use pol::sharding::feature::FeatureSharder;
+use pol::topology::Topology;
+
+/// Run `n` random cases of a property, reporting the failing seed.
+fn cases(n: u64, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..n {
+        let seed = 0xC0FFEE ^ (case * 0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(e) = result {
+            panic!("property failed on case seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_dataset(rng: &mut Rng, n: usize, dim: usize) -> Dataset {
+    let mut ds = Dataset::new("prop", dim);
+    for t in 0..n {
+        let nnz = 1 + rng.below(12) as usize;
+        let features = (0..nnz)
+            .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+            .collect();
+        ds.instances.push(Instance {
+            label: if rng.bernoulli(0.5) { 1.0 } else { -1.0 },
+            weight: 1.0,
+            features,
+            tag: t as u64,
+        });
+    }
+    ds
+}
+
+fn random_rule(rng: &mut Rng) -> UpdateRule {
+    match rng.below(5) {
+        0 => UpdateRule::Local,
+        1 => UpdateRule::DelayedGlobal,
+        2 => UpdateRule::Corrective,
+        3 => UpdateRule::Backprop { multiplier: 1.0 + rng.below(8) as f64 },
+        _ => UpdateRule::Minibatch { batch: 1 + rng.below(64) as usize },
+    }
+}
+
+// ---------------------------------------------------------------- routing
+
+#[test]
+fn prop_feature_sharding_is_a_partition() {
+    cases(50, |rng| {
+        let shards = 1 + rng.below(15) as usize;
+        let sharder = FeatureSharder::hash(shards);
+        let nnz = rng.below(200) as usize;
+        let inst = Instance::new(
+            1.0,
+            (0..nnz)
+                .map(|_| (rng.below(1 << 20) as u32, rng.normal() as f32))
+                .collect(),
+        );
+        let parts = sharder.split(&inst);
+        // every feature appears exactly once, in its owning shard
+        let total: usize = parts.iter().map(|p| p.features.len()).sum();
+        assert_eq!(total, inst.features.len());
+        for (sidx, p) in parts.iter().enumerate() {
+            for &(i, _) in &p.features {
+                assert_eq!(sharder.shard_of(i), sidx);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_shard_of_stable_under_shard_count() {
+    // the same index always maps to the same shard for a fixed count
+    cases(20, |rng| {
+        for shards in [2usize, 3, 8] {
+            let s = FeatureSharder::hash(shards);
+            let i = rng.below(1 << 24) as u32;
+            assert_eq!(s.shard_of(i), s.shard_of(i));
+            assert!(s.shard_of(i) < shards);
+        }
+    });
+}
+
+// --------------------------------------------------------------- schedule
+
+#[test]
+fn prop_schedule_is_exact_tau_permutation() {
+    cases(50, |rng| {
+        let tau = rng.below(50);
+        let total = 1 + rng.below(500);
+        let sched = DelaySchedule::new(tau);
+        let mut local_seen = vec![false; total as usize];
+        let mut global_seen = vec![false; total as usize];
+        let mut locals_done = 0u64;
+        for op in sched.ops(total) {
+            match op {
+                Op::Local(t) => {
+                    assert!(!local_seen[t as usize]);
+                    local_seen[t as usize] = true;
+                    locals_done += 1;
+                }
+                Op::Global(t) => {
+                    assert!(local_seen[t as usize], "global before local");
+                    assert!(!global_seen[t as usize]);
+                    global_seen[t as usize] = true;
+                    // delay discipline: feedback for t never lands before
+                    // min(t + tau, total) locals have run
+                    assert!(locals_done >= (t + tau).min(total), "t={t}");
+                }
+            }
+        }
+        assert!(local_seen.iter().all(|&b| b));
+        assert!(global_seen.iter().all(|&b| b));
+    });
+}
+
+// ----------------------------------------------------------- determinism
+
+#[test]
+fn prop_coordinator_bit_deterministic() {
+    cases(8, |rng| {
+        let ds = random_dataset(rng, 400, 256);
+        let rule = random_rule(rng);
+        let shards = 1 + rng.below(6) as usize;
+        let tau = rng.below(32).max(1);
+        let run = || {
+            let cfg = RunConfig {
+                topology: Topology::TwoLayer { shards },
+                rule,
+                loss: Loss::Logistic,
+                lr: LrSchedule::inv_sqrt(1.0, 1.0),
+                master_lr: None,
+                tau,
+                clip01: false,
+                bias: true,
+                passes: 1,
+                seed: 7,
+            };
+            let mut c = Coordinator::new(cfg, ds.dim);
+            let rep = c.train(&ds);
+            (
+                rep.progressive.mean_loss().to_bits(),
+                rep.progressive.accuracy().to_bits(),
+            )
+        };
+        assert_eq!(run(), run(), "rule {rule:?} shards {shards}");
+    });
+}
+
+#[test]
+fn prop_multicore_weights_equal_sgd() {
+    use pol::coordinator::multicore::MulticoreTrainer;
+    use pol::learner::OnlineLearner;
+    cases(5, |rng| {
+        let ds = random_dataset(rng, 300, 128);
+        let threads = 1 + rng.below(4) as usize;
+        let lr = LrSchedule::inv_sqrt(0.5, 1.0);
+        let mt = MulticoreTrainer::new(threads, Loss::Squared, lr);
+        let (w, _, _) = mt.train(&ds);
+        let mut sgd = pol::learner::sgd::Sgd::new(ds.dim, Loss::Squared, lr);
+        for inst in ds.iter() {
+            sgd.learn(&inst.features, inst.label);
+        }
+        let max = w
+            .iter()
+            .zip(sgd.weights())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max < 1e-4, "threads={threads} max={max}");
+    });
+}
+
+// ------------------------------------------------------------- CG duality
+
+#[test]
+fn prop_lazy_cg_equals_dense_cg() {
+    use pol::coordinator::cg::{DenseCg, LazyCg};
+    cases(10, |rng| {
+        let dim = 16 + rng.below(48) as usize;
+        let mut dense = DenseCg::new(dim, Loss::Squared);
+        let mut lazy = LazyCg::new(dim, Loss::Squared);
+        let w_true: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        for _ in 0..30 {
+            let bsize = 1 + rng.below(12) as usize;
+            let batch: Vec<(Vec<(u32, f32)>, f64)> = (0..bsize)
+                .map(|_| {
+                    let nnz = 1 + rng.below(6) as usize;
+                    let x: Vec<(u32, f32)> = (0..nnz)
+                        .map(|_| {
+                            (rng.below(dim as u64) as u32, rng.normal() as f32)
+                        })
+                        .collect();
+                    let y: f64 = x
+                        .iter()
+                        .map(|&(i, v)| w_true[i as usize] * v as f64)
+                        .sum();
+                    (x, y)
+                })
+                .collect();
+            let refs: Vec<(&[(u32, f32)], f64)> =
+                batch.iter().map(|(x, y)| (x.as_slice(), *y)).collect();
+            let (ad, bd) = dense.step(&refs);
+            let (al, bl) = lazy.step(&refs);
+            assert!(
+                (ad - al).abs() < 1e-6 * (1.0 + ad.abs()),
+                "alpha {ad} vs {al}"
+            );
+            assert!(
+                (bd - bl).abs() < 1e-6 * (1.0 + bd.abs()),
+                "beta {bd} vs {bl}"
+            );
+        }
+        // final weights agree after materialization
+        let wl = lazy.into_weights();
+        for (a, b) in dense.w.iter().zip(&wl) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------- batching
+
+#[test]
+fn prop_minibatch_progressive_count_matches_stream() {
+    cases(10, |rng| {
+        let n = 100 + rng.below(400) as usize;
+        let ds = random_dataset(rng, n, 64);
+        let batch = 1 + rng.below(100) as usize;
+        let cfg = RunConfig {
+            rule: UpdateRule::Minibatch { batch },
+            loss: Loss::Logistic,
+            lr: LrSchedule::constant(0.1),
+            clip01: false,
+            ..Default::default()
+        };
+        let rep = pol::coordinator::minibatch::train(&cfg, &ds, batch);
+        assert_eq!(rep.progressive.count(), n as u64);
+        assert_eq!(rep.instances, n as u64);
+    });
+}
+
+// ------------------------------------------------------------ data/cache
+
+#[test]
+fn prop_cache_roundtrip_preserves_everything() {
+    cases(20, |rng| {
+        let n = 50 + rng.below(200) as usize;
+        let ds = random_dataset(rng, n, 1 << 12);
+        let mut buf = Vec::new();
+        pol::data::cache::write_cache(&ds, &mut buf).unwrap();
+        let back =
+            pol::data::cache::read_cache(&mut buf.as_slice(), "p").unwrap();
+        assert_eq!(back.len(), ds.len());
+        for (a, b) in ds.instances.iter().zip(&back.instances) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.tag, b.tag);
+            let mut fa = a.features.clone();
+            fa.sort_unstable_by_key(|&(i, _)| i);
+            assert_eq!(fa, b.features);
+        }
+    });
+}
+
+#[test]
+fn prop_hashing_never_out_of_range() {
+    cases(20, |rng| {
+        let bits = 4 + rng.below(20) as u32;
+        let h = pol::hashing::FeatureHasher::new(bits);
+        for _ in 0..200 {
+            let (idx, sign) = h.hash_id(rng.below(1000) as u32, rng.next_u64());
+            assert!((idx as usize) < h.table_size());
+            assert!(sign == 1.0 || sign == -1.0);
+        }
+    });
+}
+
+// ---------------------------------------------------------------- delayed
+
+#[test]
+fn prop_delayed_tau_zero_is_sgd() {
+    use pol::learner::delayed::DelayedSgd;
+    use pol::learner::OnlineLearner;
+    cases(20, |rng| {
+        let ds = random_dataset(rng, 200, 64);
+        let lr = LrSchedule::inv_sqrt(0.7, 3.0);
+        let mut d = DelayedSgd::new(ds.dim, Loss::Squared, lr, 0);
+        let mut s = pol::learner::sgd::Sgd::new(ds.dim, Loss::Squared, lr);
+        for inst in ds.iter() {
+            d.round(&inst.features, inst.label);
+            s.learn(&inst.features, inst.label);
+        }
+        assert_eq!(d.w, s.w);
+    });
+}
+
+#[test]
+fn prop_delayed_flush_applies_exactly_tau_pending() {
+    use pol::learner::delayed::DelayedSgd;
+    use pol::learner::OnlineLearner;
+    cases(20, |rng| {
+        let tau = rng.below(32) as usize;
+        let mut d =
+            DelayedSgd::new(8, Loss::Squared, LrSchedule::constant(0.1), tau);
+        let n = tau + rng.below(100) as usize;
+        for t in 0..n {
+            d.round(&[((t % 8) as u32, 1.0)], 1.0);
+        }
+        // after flush, the step clock covers the stream plus the ring
+        d.flush();
+        assert_eq!(d.steps(), (n + tau) as u64);
+    });
+}

@@ -1,0 +1,205 @@
+//! Exact reproduction of Propositions 3 and 4 (§0.5.2): the
+//! representation-power separation between Naïve Bayes, the binary-tree
+//! architecture, and the full linear predictor, on the paper's own
+//! 4-point distributions — including the paper's stated numbers
+//! (NB weights (−1/2, 1/2, 2/5), NB MSE 0.8, tree weights (−3/2, 3/2, −2),
+//! tree MSE 0, local-rule MSE ≥ 1/2 on Prop 4).
+
+use pol::data::synth::{prop3, prop4};
+use pol::learner::naive_bayes::NaiveBayes;
+use pol::learner::OnlineLearner;
+use pol::linalg::LeastSquares;
+
+/// The paper's tree for n = 3 features: leaves for x1, x2, x3; an
+/// internal node over (leaf1, leaf2); the root over (that node, leaf3).
+/// Weights are learned layer-by-layer with *exact* local least squares
+/// (the fixed point of local online training, per §0.5.2's analysis).
+fn tree_exact_weights(points: &[([f64; 3], f64)]) -> [f64; 3] {
+    // layer 0: per-feature least squares w_i = b_i / Σ_ii
+    let mut nb = NaiveBayes::new(3);
+    for (x, y) in points {
+        let f: Vec<(u32, f32)> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (i as u32, v as f32))
+            .collect();
+        nb.learn(&f, *y);
+    }
+    let w0 = [nb.weight(0), nb.weight(1), nb.weight(2)];
+    // layer 1: node over (p1, p2) = (w0_1 x1, w0_2 x2): 2-d least squares
+    let mut ls1 = LeastSquares::new(2);
+    for (x, y) in points {
+        ls1.observe_dense(&[w0[0] * x[0], w0[1] * x[1]], *y);
+    }
+    let w1 = ls1.solve(1e-12).expect("layer-1 solve");
+    // layer 2 (root): over (p12, p3): 2-d least squares
+    let mut ls2 = LeastSquares::new(2);
+    for (x, y) in points {
+        let p12 = w1[0] * w0[0] * x[0] + w1[1] * w0[1] * x[1];
+        ls2.observe_dense(&[p12, w0[2] * x[2]], *y);
+    }
+    let w2 = ls2.solve(1e-12).expect("layer-2 solve");
+    // overall linear weights: product of weights along each leaf's path
+    [
+        w0[0] * w1[0] * w2[0],
+        w0[1] * w1[1] * w2[0],
+        w0[2] * w2[1],
+    ]
+}
+
+fn mse(points: &[([f64; 3], f64)], w: &[f64; 3]) -> f64 {
+    points
+        .iter()
+        .map(|(x, y)| {
+            let p: f64 = x.iter().zip(w).map(|(a, b)| a * b).sum();
+            (p - y) * (p - y)
+        })
+        .sum::<f64>()
+        / points.len() as f64
+}
+
+#[test]
+fn prop3_naive_bayes_weights_and_mse_exact() {
+    let mut nb = NaiveBayes::new(3);
+    for (x, y) in prop3::POINTS {
+        let f: Vec<(u32, f32)> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (i as u32, v as f32))
+            .collect();
+        nb.learn(&f, y);
+    }
+    let w = [nb.weight(0), nb.weight(1), nb.weight(2)];
+    for (a, b) in w.iter().zip(&prop3::NAIVE_BAYES_W) {
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+    assert!((mse(&prop3::POINTS, &w) - prop3::NAIVE_BAYES_MSE).abs() < 1e-12);
+}
+
+#[test]
+fn prop3_tree_reaches_zero_mse_with_paper_weights() {
+    let w = tree_exact_weights(&prop3::POINTS);
+    // the paper's final weights: (−3/2, 3/2, −2)
+    for (a, b) in w.iter().zip(&prop3::TREE_W) {
+        assert!((a - b).abs() < 1e-9, "tree w {a} vs paper {b}");
+    }
+    assert!(mse(&prop3::POINTS, &w) < 1e-12);
+}
+
+#[test]
+fn prop3_online_tree_converges_to_zero_mse() {
+    // the actual coordinator (online local rule, two-layer over 3 leaves
+    // won't match the binary-tree wiring; use binary tree with 3 leaves:
+    // chunks(2) gives ((x1,x2), x3) — silently the paper's shape: node
+    // over leaves 1,2; root over (node, leaf3))
+    use pol::config::{RunConfig, UpdateRule};
+    use pol::coordinator::Coordinator;
+    use pol::loss::Loss;
+    use pol::lr::LrSchedule;
+    use pol::topology::Topology;
+    let ds = prop3::dataset(60_000);
+    let cfg = RunConfig {
+        topology: Topology::BinaryTree { leaves: 3 },
+        rule: UpdateRule::Local,
+        loss: Loss::Squared,
+        lr: LrSchedule::constant(0.05),
+        master_lr: None,
+        tau: 0,
+        clip01: false,
+        bias: false, // the Prop-3 analysis has no intercepts
+        passes: 1,
+        seed: 0,
+    };
+    let mut c = Coordinator::new(cfg, prop3::DIM);
+    c.train(&ds);
+    let final_mse: f64 = prop3::POINTS
+        .iter()
+        .map(|(x, y)| {
+            let f: Vec<(u32, f32)> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i as u32, v as f32))
+                .collect();
+            (c.predict(&f) - y).powi(2)
+        })
+        .sum::<f64>()
+        / 4.0;
+    assert!(
+        final_mse < 0.05,
+        "online tree should approach 0 MSE, got {final_mse}"
+    );
+}
+
+#[test]
+fn prop4_local_architectures_stuck_at_half() {
+    // Naïve Bayes and the exact tree both assign 0 weight to x3 and eat
+    // MSE ≥ 1/2; the full least-squares solution is exact.
+    let w_tree = tree_exact_weights(&prop4::POINTS);
+    assert!(w_tree[2].abs() < 1e-9, "x3 weight must be 0, got {}", w_tree[2]);
+    assert!(mse(&prop4::POINTS, &w_tree) >= prop4::LOCAL_MSE_LOWER_BOUND - 1e-9);
+
+    let mut ls = LeastSquares::new(3);
+    for (x, y) in prop4::POINTS {
+        ls.observe_dense(&x, y);
+    }
+    // Σ is singular here (x3 = −1 constant direction interacts); ridge
+    let w_star = ls.solve(1e-9).expect("ridge solve");
+    let m = mse(&prop4::POINTS, &[w_star[0], w_star[1], w_star[2]]);
+    assert!(m < 1e-6, "global linear must be exact, got {m}");
+}
+
+#[test]
+fn prop4_global_update_recovers_x3() {
+    // §0.6's motivation: with global feedback the node holding x3 (a
+    // constant −1 on this distribution) learns a non-zero weight and the
+    // system beats the local-rule floor of 1/2. We use the delayed
+    // global rule: it evaluates the loss gradient at the *final*
+    // prediction, which reaches leaf 3 directly. (Pure backprop cannot
+    // bootstrap here: with w3 = 0 locally and a zero path weight at the
+    // root, the chain-rule product is stuck at a saddle — one reason the
+    // paper runs backprop *on top of* local training and still found
+    // limits, §0.7.)
+    use pol::config::{RunConfig, UpdateRule};
+    use pol::coordinator::Coordinator;
+    use pol::loss::Loss;
+    use pol::lr::LrSchedule;
+    use pol::topology::Topology;
+    let mut ds = prop4::dataset(80_000);
+    // IID presentation: the cyclic order lets the online tree exploit
+    // systematic transients (root re-adapting each 4-cycle) to sneak
+    // below the fixed-point floor; random order removes that.
+    ds.shuffle(&mut pol::rng::Rng::new(9));
+    let run = |rule| {
+        let cfg = RunConfig {
+            topology: Topology::BinaryTree { leaves: 3 },
+            rule,
+            loss: Loss::Squared,
+            lr: LrSchedule::constant(0.01),
+            master_lr: None,
+            tau: 1, // minimal delay so feedback is usable
+            clip01: false,
+            bias: false, // the Prop-4 floor assumes no intercepts
+            passes: 1,
+            seed: 0,
+        };
+        let mut c = Coordinator::new(cfg, prop4::DIM);
+        c.train(&ds);
+        prop4::POINTS
+            .iter()
+            .map(|(x, y)| {
+                let f: Vec<(u32, f32)> = x
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (i as u32, v as f32))
+                    .collect();
+                (c.predict(&f) - y).powi(2)
+            })
+            .sum::<f64>()
+            / 4.0
+    };
+    let local = run(UpdateRule::Local);
+    let dg = run(UpdateRule::DelayedGlobal);
+    assert!(local > 0.4, "local must stay near the 1/2 floor, got {local}");
+    assert!(dg < 0.25, "delayed-global must break the floor, got {dg}");
+    assert!(dg < local);
+}
