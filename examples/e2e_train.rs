@@ -30,7 +30,7 @@ use pol::metrics::ProgressiveValidator;
 use pol::runtime::ops::TwoLayerOp;
 use pol::runtime::Registry;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pol::error::Result<()> {
     let reg = Registry::open(Registry::default_dir())?;
     let op = TwoLayerOp::new(&reg)?;
     let (k, d, b) = (op.k, op.d, op.b);

@@ -1,0 +1,119 @@
+//! Train-while-serve: the serving layer end-to-end.
+//!
+//! One thread trains a 4-shard feature-sharded model on a synthetic
+//! RCV1-shaped stream, publishing an immutable snapshot every 2048
+//! instances; four serving threads answer prediction requests against
+//! the latest snapshot the whole time. Readers see slightly *stale*
+//! weights — never torn ones — and every response reports how many
+//! instances behind it was (the delayed-read regime of *Slow Learners
+//! are Fast*).
+//!
+//! Afterwards the trained model is checkpointed to `.polz`, loaded
+//! back, and verified to predict bit-identically.
+//!
+//! Run: `cargo run --release --example train_while_serve`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use pol::prelude::*;
+use pol::serve::checkpoint;
+
+fn main() {
+    // 1. data: RCV1-shaped stream (labels in {-1, +1})
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: 50_000,
+        features: 23_000,
+        density: 75,
+        hash_bits: 18,
+        ..Default::default()
+    })
+    .generate();
+
+    // 2. a 4-shard two-layer architecture with the local rule
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 4 },
+        rule: UpdateRule::Local,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        clip01: false,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, ds.dim);
+
+    // 3. serving plumbing: snapshot cell + publisher (every 2048
+    //    instances) + 4 serving threads
+    let cell = SnapshotCell::new(coord.snapshot());
+    coord.set_publisher(SnapshotPublisher::new(Arc::clone(&cell), 2_048));
+    let server = PredictionServer::start(Arc::clone(&cell), 4);
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
+        let trainer = s.spawn(|| {
+            let rep = coord.train(&ds);
+            done.store(true, Ordering::Release);
+            rep
+        });
+        // request load: replay dataset rows as queries while training runs
+        for t in 0..4usize {
+            let client = server.client();
+            let done = &done;
+            let ds = &ds;
+            s.spawn(move || {
+                let mut answered = 0u64;
+                let mut last = None;
+                let mut i = t * 97;
+                while !done.load(Ordering::Acquire) {
+                    let x = ds.instances[i % ds.len()].features.clone();
+                    match client.predict(vec![x]) {
+                        Some(resp) => {
+                            answered += 1;
+                            last = Some(resp);
+                        }
+                        None => break,
+                    }
+                    i += 1;
+                }
+                if let Some(resp) = last {
+                    println!(
+                        "client {t}: {answered} requests answered; last against \
+                         snapshot v{} ({} instances behind)",
+                        resp.snapshot_version, resp.staleness
+                    );
+                }
+            });
+        }
+        let rep = trainer.join().expect("trainer thread");
+        println!(
+            "trained {} instances, progressive acc {:.4}",
+            rep.instances,
+            rep.progressive.accuracy()
+        );
+    });
+    let stats = server.shutdown();
+    println!(
+        "served {} predictions at {:.0}/s, p99 {:.1}us, max staleness {}",
+        stats.predictions,
+        stats.qps(),
+        stats.latency.quantile_ns(0.99) as f64 / 1e3,
+        stats.max_staleness
+    );
+
+    // 4. checkpoint round-trip: save, load, verify identical predictions
+    let path = std::env::temp_dir().join("train_while_serve.polz");
+    checkpoint::save_coordinator(&coord, &path).expect("save checkpoint");
+    let back = checkpoint::load(&path).expect("load checkpoint");
+    let mut max_diff = 0.0f64;
+    for inst in ds.iter().take(1_000) {
+        let a = coord.predict(&inst.features);
+        let b = back.predict(&inst.features);
+        max_diff = max_diff.max((a - b).abs());
+    }
+    println!(
+        "checkpoint round-trip: {:?} ({} bytes), max |Δpred| over 1000 rows = {max_diff:e}",
+        path,
+        std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0)
+    );
+    assert_eq!(max_diff, 0.0, "round-trip must be bit-identical");
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,127 @@
+//! serve_throughput — the train-while-serve regime measured for real:
+//! single-instance prediction QPS and p99 latency vs serving-thread
+//! count and snapshot publish cadence, while the training loop keeps
+//! running on its own thread.
+//!
+//! The trainer publishes an immutable snapshot every K instances
+//! (`SnapshotPublisher`); serving threads answer against the latest
+//! snapshot, so what this measures is exactly the delayed-read regime
+//! of *Slow Learners are Fast*: staleness (instances-behind) is
+//! reported per row, never accidental.
+//!
+//! Output columns:
+//!   cadence threads qps p50_us p99_us max_staleness train_ms
+//! `train_ms` is the wall time of the concurrent training pass; the
+//! `baseline` row shows the same pass with no serving load — their gap
+//! is the serving tax on the trainer (expected ≈ 0: readers share
+//! nothing with the trainer but one Arc swap per publish).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::serve::{PredictionServer, SnapshotCell, SnapshotPublisher};
+use pol::topology::Topology;
+
+fn dataset(n: usize) -> Dataset {
+    RcvLikeGen::new(SynthConfig {
+        instances: n,
+        features: 23_000,
+        density: 75,
+        hash_bits: 18,
+        ..Default::default()
+    })
+    .generate()
+}
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        topology: Topology::TwoLayer { shards: 4 },
+        rule: UpdateRule::Local,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        clip01: false,
+        ..Default::default()
+    }
+}
+
+/// One measured configuration: train a full pass while `threads`
+/// serving threads hammer single-instance predicts.
+fn run(ds: &Dataset, cadence: u64, threads: usize) {
+    let mut coord = Coordinator::new(cfg(), ds.dim);
+    let cell = SnapshotCell::new(coord.snapshot());
+    coord.set_publisher(SnapshotPublisher::new(Arc::clone(&cell), cadence));
+    let server = PredictionServer::start(Arc::clone(&cell), threads);
+    let done = AtomicBool::new(false);
+
+    let mut train_ms = 0u128;
+    std::thread::scope(|s| {
+        let trainer = s.spawn(|| {
+            let t0 = std::time::Instant::now();
+            coord.train(ds);
+            done.store(true, Ordering::Release);
+            t0.elapsed().as_millis()
+        });
+        for c in 0..threads {
+            let client = server.client();
+            let done = &done;
+            s.spawn(move || {
+                // cycle through dataset rows as the request stream
+                let mut i = c * 37;
+                while !done.load(Ordering::Acquire) {
+                    let x = ds.instances[i % ds.len()].features.clone();
+                    if client.predict(vec![x]).is_none() {
+                        break;
+                    }
+                    i += 1;
+                }
+            });
+        }
+        train_ms = trainer.join().expect("trainer");
+    });
+    let stats = server.shutdown();
+    println!(
+        "{:>7} {:>7} {:>9.0} {:>7.1} {:>7.1} {:>13} {:>8}",
+        cadence,
+        threads,
+        stats.qps(),
+        stats.latency.quantile_ns(0.5) as f64 / 1e3,
+        stats.latency.quantile_ns(0.99) as f64 / 1e3,
+        stats.max_staleness,
+        train_ms
+    );
+}
+
+fn main() {
+    let n = 120_000 * common::scale();
+    let ds = dataset(n);
+    println!(
+        "serve_throughput — {} instances, dim {}, 4 feature shards",
+        ds.len(),
+        ds.dim
+    );
+
+    // baseline: the same training pass with no serving load
+    let mut coord = Coordinator::new(cfg(), ds.dim);
+    let t0 = std::time::Instant::now();
+    coord.train(&ds);
+    println!("baseline train_ms={}", t0.elapsed().as_millis());
+
+    println!(
+        "{:>7} {:>7} {:>9} {:>7} {:>7} {:>13} {:>8}",
+        "cadence", "threads", "qps", "p50_us", "p99_us", "max_staleness", "train_ms"
+    );
+    for cadence in [1_024u64, 8_192] {
+        for threads in [1usize, 2, 4] {
+            run(&ds, cadence, threads);
+        }
+    }
+}

@@ -147,8 +147,38 @@ impl RunConfig {
                     cfg.topology = match (v, cfg.topology.leaves()) {
                         ("two-layer", n) => Topology::TwoLayer { shards: n },
                         ("binary-tree", n) => Topology::BinaryTree { leaves: n },
+                        ("kary", n) => Topology::KAry { leaves: n, fanin: 2 },
                         _ => return Err(format!("bad topology: {v}")),
                     };
+                }
+                "fanin" => {
+                    let fanin: usize =
+                        v.parse().map_err(|_| format!("bad fanin: {v}"))?;
+                    if fanin < 2 {
+                        return Err(format!("bad fanin: {v} (must be >= 2)"));
+                    }
+                    match cfg.topology {
+                        Topology::KAry { leaves, .. } => {
+                            cfg.topology = Topology::KAry { leaves, fanin };
+                        }
+                        _ => {
+                            return Err(
+                                "fanin requires `topology = kary` (set it \
+                                 first)"
+                                    .to_string(),
+                            )
+                        }
+                    }
+                }
+                "lr" => {
+                    cfg.lr = LrSchedule::parse_spec(v)
+                        .ok_or_else(|| format!("bad lr spec: {v}"))?;
+                }
+                "master_lr" => {
+                    cfg.master_lr = Some(
+                        LrSchedule::parse_spec(v)
+                            .ok_or_else(|| format!("bad master_lr spec: {v}"))?,
+                    );
                 }
                 "rule" => {
                     cfg.rule = UpdateRule::parse(v)
@@ -176,6 +206,37 @@ impl RunConfig {
             cfg.lr = LrSchedule::inv_sqrt(lambda.unwrap_or(0.5), t0.unwrap_or(1.0));
         }
         Ok(cfg)
+    }
+
+    /// Canonical `key = value` serialization. Round-trips through
+    /// [`Self::from_str_cfg`]; the checkpoint format stores this text
+    /// and digests it, so the emission order is fixed and every field
+    /// is explicit.
+    pub fn to_cfg_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("workers = {}\n", self.topology.leaves()));
+        match self.topology {
+            Topology::TwoLayer { .. } => out.push_str("topology = two-layer\n"),
+            Topology::BinaryTree { .. } => {
+                out.push_str("topology = binary-tree\n")
+            }
+            Topology::KAry { fanin, .. } => {
+                out.push_str("topology = kary\n");
+                out.push_str(&format!("fanin = {fanin}\n"));
+            }
+        }
+        out.push_str(&format!("rule = {}\n", self.rule.name()));
+        out.push_str(&format!("loss = {}\n", self.loss.name()));
+        out.push_str(&format!("lr = {}\n", self.lr.spec()));
+        if let Some(mlr) = self.master_lr {
+            out.push_str(&format!("master_lr = {}\n", mlr.spec()));
+        }
+        out.push_str(&format!("tau = {}\n", self.tau));
+        out.push_str(&format!("clip01 = {}\n", self.clip01));
+        out.push_str(&format!("bias = {}\n", self.bias));
+        out.push_str(&format!("passes = {}\n", self.passes));
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out
     }
 }
 
@@ -219,10 +280,57 @@ mod tests {
     }
 
     #[test]
+    fn fanin_requires_kary() {
+        assert!(RunConfig::from_str_cfg("workers = 8\nfanin = 4").is_err());
+        assert!(RunConfig::from_str_cfg(
+            "workers = 8\ntopology = kary\nfanin = 1"
+        )
+        .is_err());
+        let cfg = RunConfig::from_str_cfg(
+            "workers = 8\ntopology = kary\nfanin = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, Topology::KAry { leaves: 8, fanin: 4 });
+    }
+
+    #[test]
     fn binary_tree_topology() {
         let cfg =
             RunConfig::from_str_cfg("workers = 8\ntopology = binary-tree").unwrap();
         assert_eq!(cfg.topology, Topology::BinaryTree { leaves: 8 });
+    }
+
+    #[test]
+    fn cfg_string_roundtrip() {
+        let cfgs = [
+            RunConfig::default(),
+            RunConfig {
+                topology: Topology::KAry { leaves: 16, fanin: 4 },
+                rule: UpdateRule::Backprop { multiplier: 8.0 },
+                loss: Loss::Logistic,
+                lr: LrSchedule::constant(0.125),
+                master_lr: Some(LrSchedule::inv_sqrt(4.0, 100.0)),
+                tau: 512,
+                clip01: false,
+                bias: false,
+                passes: 3,
+                seed: 99,
+            },
+        ];
+        for cfg in cfgs {
+            let text = cfg.to_cfg_string();
+            let back = RunConfig::from_str_cfg(&text).unwrap();
+            assert_eq!(back.topology, cfg.topology, "{text}");
+            assert_eq!(back.rule, cfg.rule);
+            assert_eq!(back.loss, cfg.loss);
+            assert_eq!(back.lr, cfg.lr);
+            assert_eq!(back.master_lr, cfg.master_lr);
+            assert_eq!(back.tau, cfg.tau);
+            assert_eq!(back.clip01, cfg.clip01);
+            assert_eq!(back.bias, cfg.bias);
+            assert_eq!(back.passes, cfg.passes);
+            assert_eq!(back.seed, cfg.seed);
+        }
     }
 
     #[test]

@@ -27,6 +27,8 @@ use crate::data::Dataset;
 use crate::learner::node::NodeLearner;
 use crate::linalg::SparseFeat;
 use crate::metrics::ProgressiveValidator;
+use crate::serve::publisher::SnapshotPublisher;
+use crate::serve::snapshot::{ModelSnapshot, SnapshotModel};
 use crate::sharding::feature::FeatureSharder;
 use crate::topology::NodeGraph;
 use schedule::{DelaySchedule, Op};
@@ -78,6 +80,14 @@ pub struct Coordinator {
     scratch_preds: Vec<f64>,
     /// Scratch input vector for internal nodes on the local path.
     scratch_x: Vec<SparseFeat>,
+    /// Hashed feature-space size the leaves were built with.
+    dim: usize,
+    /// Cumulative instances learned (across `train` calls and passes) —
+    /// the training-stream position snapshots and checkpoints record.
+    trained: u64,
+    /// Optional serving hook: publishes an immutable [`ModelSnapshot`]
+    /// every K trained instances ([`crate::serve`]).
+    publisher: Option<SnapshotPublisher>,
 }
 
 impl Coordinator {
@@ -111,7 +121,134 @@ impl Coordinator {
             pool: Vec::new(),
             scratch_preds: Vec::new(),
             scratch_x: Vec::new(),
+            dim,
+            trained: 0,
+            publisher: None,
         }
+    }
+
+    /// Rebuild a tree-rule coordinator from checkpointed per-node state
+    /// (`(step clock, weights)` in node-id order). Warm start: training
+    /// may continue from here.
+    pub fn restore_tree(
+        cfg: RunConfig,
+        dim: usize,
+        nodes: Vec<(u64, Vec<f32>)>,
+        trained: u64,
+    ) -> Result<Self, String> {
+        let mut c = Coordinator::new(cfg, dim);
+        if nodes.len() != c.graph.num_nodes() {
+            return Err(format!(
+                "checkpoint holds {} node tables, topology needs {}",
+                nodes.len(),
+                c.graph.num_nodes()
+            ));
+        }
+        for (id, (steps, w)) in nodes.into_iter().enumerate() {
+            let want = c.nodes[id].weights().len();
+            if w.len() != want {
+                return Err(format!(
+                    "node {id}: table length {} != expected {want}",
+                    w.len()
+                ));
+            }
+            let (loss, lr) = (c.nodes[id].loss(), c.nodes[id].lr());
+            c.nodes[id] = NodeLearner::from_parts(id, w, loss, lr, steps);
+        }
+        c.trained = trained;
+        Ok(c)
+    }
+
+    /// Rebuild a centralized-rule (Minibatch/CG/SGD) coordinator from a
+    /// checkpointed flat weight table.
+    pub fn restore_central(
+        cfg: RunConfig,
+        dim: usize,
+        w: Vec<f32>,
+        trained: u64,
+    ) -> Result<Self, String> {
+        if w.len() != dim {
+            return Err(format!("table length {} != dim {dim}", w.len()));
+        }
+        let mut c = Coordinator::new(cfg, dim);
+        c.central_w = Some(w);
+        c.trained = trained;
+        Ok(c)
+    }
+
+    /// Hashed feature-space size of the leaves.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Cumulative instances learned across all `train` calls.
+    pub fn trained_instances(&self) -> u64 {
+        self.trained
+    }
+
+    /// Flat weights of a centralized rule after training (None for the
+    /// tree rules).
+    pub fn central_weights(&self) -> Option<&[f32]> {
+        self.central_w.as_deref()
+    }
+
+    /// Stable identity of the feature-routing function (folded into
+    /// checkpoint digests).
+    pub fn sharder_signature(&self) -> u64 {
+        self.sharder.signature()
+    }
+
+    /// Install the serving hook: publish a fresh immutable snapshot
+    /// every `publisher.every` trained instances while training runs.
+    pub fn set_publisher(&mut self, publisher: SnapshotPublisher) {
+        self.publisher = Some(publisher);
+    }
+
+    /// Remove (and return) the serving hook.
+    pub fn take_publisher(&mut self) -> Option<SnapshotPublisher> {
+        self.publisher.take()
+    }
+
+    /// Build an immutable serving snapshot of the current weights.
+    pub fn snapshot(&self) -> ModelSnapshot {
+        let digest = crate::serve::checkpoint::config_digest(
+            &self.cfg.to_cfg_string(),
+            self.dim as u64,
+            self.sharder_signature(),
+        );
+        let model = match &self.central_w {
+            Some(w) => SnapshotModel::Central { w: w.clone() },
+            None => SnapshotModel::Tree {
+                graph: self.graph.clone(),
+                sharder: self.sharder.clone(),
+                weights: self.nodes.iter().map(|n| n.weights().to_vec()).collect(),
+                clip01: self.cfg.clip01,
+                bias: self.cfg.bias,
+            },
+        };
+        ModelSnapshot {
+            version: 0,
+            trained_instances: self.trained,
+            config_digest: digest,
+            model,
+        }
+    }
+
+    /// Publisher hook, called once per trained instance: heartbeat the
+    /// stream position, and build + publish a snapshot when due. The
+    /// publisher is briefly taken out of `self` so snapshot construction
+    /// can borrow the coordinator immutably. `force` publishes
+    /// regardless of the cadence (end-of-run snapshots).
+    #[inline]
+    fn publish_if(&mut self, force: bool) {
+        if self.publisher.is_none() {
+            return;
+        }
+        let mut p = self.publisher.take().expect("publisher present");
+        if p.tick(self.trained) || force {
+            p.publish(self.snapshot());
+        }
+        self.publisher = Some(p);
     }
 
     /// Pass a prediction upward, optionally clipped to [0,1]
@@ -345,18 +482,18 @@ impl Coordinator {
             UpdateRule::Minibatch { batch } => {
                 let (rep, w) = minibatch::train_weights(&self.cfg, ds, batch);
                 self.central_w = Some(w);
-                return rep;
+                return self.finish_central(rep);
             }
             UpdateRule::Sgd => {
                 let (rep, w) = minibatch::train_weights(&self.cfg, ds, 1);
                 self.central_w = Some(w);
-                return rep;
+                return self.finish_central(rep);
             }
             UpdateRule::Cg { batch } => {
                 let (rep, w) = cg::train_weights(&self.cfg, ds, batch);
                 self.central_w =
                     Some(w.into_iter().map(|x| x as f32).collect());
-                return rep;
+                return self.finish_central(rep);
             }
             _ => {}
         }
@@ -388,6 +525,8 @@ impl Coordinator {
                         }
                         self.pending.push_back(pend);
                     }
+                    self.trained += 1;
+                    self.publish_if(false);
                 }
                 Op::Global(_) => {
                     if self.cfg.rule != UpdateRule::Local {
@@ -404,6 +543,16 @@ impl Coordinator {
             instances: total,
             elapsed: start.elapsed(),
         }
+    }
+
+    /// Shared tail of the centralized-rule dispatch: account the
+    /// instances and publish one post-training snapshot (the
+    /// centralized trainers own the loop, so mid-run cadence does not
+    /// apply to them).
+    fn finish_central(&mut self, rep: TrainReport) -> TrainReport {
+        self.trained += rep.instances;
+        self.publish_if(true);
+        rep
     }
 
     pub fn graph(&self) -> &NodeGraph {
@@ -551,6 +700,44 @@ mod tests {
         // accuracy over the final pass is what improves; progressive over
         // all passes still should not be worse
         assert!(r16.progressive.accuracy() >= r1.progressive.accuracy() - 0.02);
+    }
+
+    #[test]
+    fn trained_counter_and_publisher_cadence() {
+        use crate::serve::publisher::{SnapshotCell, SnapshotPublisher};
+        let ds = small_ds();
+        let mut c = Coordinator::new(cfg(UpdateRule::Local, 4), ds.dim);
+        let cell = SnapshotCell::new(c.snapshot());
+        c.set_publisher(SnapshotPublisher::new(std::sync::Arc::clone(&cell), 500));
+        c.train(&ds);
+        assert_eq!(c.trained_instances(), 3_000);
+        assert_eq!(cell.seq(), 6, "one publish per 500 instances");
+        assert_eq!(cell.latest_trained(), 3_000);
+        let snap = cell.load();
+        assert_eq!(snap.trained_instances, 3_000);
+        // the Local rule applies no trailing feedback, so the final
+        // published snapshot must predict exactly like the live model
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                snap.predict(&inst.features).to_bits(),
+                c.predict(&inst.features).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_matches_predict_for_feedback_rules() {
+        let ds = small_ds();
+        let mut c = Coordinator::new(cfg(UpdateRule::Corrective, 3), ds.dim);
+        c.train(&ds);
+        let snap = c.snapshot();
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                snap.predict(&inst.features).to_bits(),
+                c.predict(&inst.features).to_bits()
+            );
+        }
+        assert_eq!(snap.trained_instances, 3_000);
     }
 
     #[test]

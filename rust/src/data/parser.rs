@@ -24,15 +24,24 @@ pub struct ParserConfig {
     pub quadratic: Vec<(char, char)>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ParseError {
-    #[error("empty line")]
     Empty,
-    #[error("bad label: {0}")]
     BadLabel(String),
-    #[error("bad feature value: {0}")]
     BadValue(String),
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Empty => write!(f, "empty line"),
+            ParseError::BadLabel(s) => write!(f, "bad label: {s}"),
+            ParseError::BadValue(s) => write!(f, "bad feature value: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub struct Parser {
     hasher: FeatureHasher,

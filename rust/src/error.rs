@@ -1,0 +1,135 @@
+//! Minimal error plumbing standing in for `anyhow` (the environment
+//! ships no external crates, so the runtime and serve layers use this
+//! message-carrying error type instead).
+//!
+//! The API mirrors the `anyhow` subset the crate uses: a string-holding
+//! [`Error`], a defaulted [`Result`] alias, the [`Context`] extension
+//! trait for `Result`/`Option`, and the [`format_err!`] macro (imported
+//! `as anyhow` at call sites that were written against `anyhow!`).
+
+use std::fmt;
+
+/// A boxed, message-carrying error. Context frames are prepended
+/// `outer: inner` exactly like `anyhow`'s `{:#}` chain rendering.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context frame.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Error { msg: m }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+/// Crate-wide result alias (defaulted error type, like `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` equivalent for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context(self, c: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, c: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, c: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`-shaped constructor: `format_err!("bad {x}")` → [`Error`].
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_err_formats() {
+        let e = format_err!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_on_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "), "{e}");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn alternate_format_is_plain_message() {
+        // call sites render errors with {e:#}; our single-frame chain
+        // prints the same string either way
+        let e = format_err!("outer").context("inner-ctx");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}

@@ -47,6 +47,17 @@ pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
     h1
 }
 
+/// FNV-1a 64-bit — the checkpoint format's digest/checksum hash (stable,
+/// dependency-free, byte-order independent).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Hashes (namespace, feature-name) pairs into a `2^bits` weight space.
 #[derive(Clone, Debug)]
 pub struct FeatureHasher {
@@ -175,6 +186,14 @@ mod tests {
         assert_eq!(murmur3_32(b"test", 0x9747b28c), 0x704b81dc);
         assert_eq!(murmur3_32(b"Hello, world!", 0x9747b28c), 0x24884CBA);
         assert_eq!(murmur3_32(b"The quick brown fox jumps over the lazy dog", 0x9747b28c), 0x2FA826CD);
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

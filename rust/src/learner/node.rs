@@ -24,6 +24,22 @@ impl NodeLearner {
         NodeLearner { id, inner: Sgd::new(dim, loss, lr) }
     }
 
+    /// Reassemble a node from checkpointed state (weights + step clock)
+    /// — the `pol::serve` warm-start path.
+    pub fn from_parts(
+        id: usize,
+        w: Vec<f32>,
+        loss: Loss,
+        lr: LrSchedule,
+        t: u64,
+    ) -> Self {
+        NodeLearner { id, inner: Sgd::from_parts(w, loss, lr, t) }
+    }
+
+    pub fn lr(&self) -> LrSchedule {
+        self.inner.lr
+    }
+
     #[inline]
     pub fn predict(&self, x: &[SparseFeat]) -> f64 {
         self.inner.predict(x)

@@ -23,6 +23,14 @@ impl Sgd {
         Sgd { w: vec![0.0; dim], loss, lr, t: 0 }
     }
 
+    /// Reassemble a learner from checkpointed state (`pol::serve`
+    /// warm-start path): the weight table plus the step clock `t`, so a
+    /// restored learner continues the η_t schedule exactly where the
+    /// saved one stopped.
+    pub fn from_parts(w: Vec<f32>, loss: Loss, lr: LrSchedule, t: u64) -> Self {
+        Sgd { w, loss, lr, t }
+    }
+
     /// Current learning rate (η_{t+1}, i.e. for the *next* update).
     pub fn next_eta(&self) -> f64 {
         self.lr.eta(self.t + 1)

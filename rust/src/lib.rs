@@ -9,7 +9,7 @@
 //! (Figures 0.5/0.6, Table 0.1, Propositions 3/4, Theorem-1 delay-regret
 //! sweeps, the §0.5.1 multicore path).
 //!
-//! ## Three-layer architecture
+//! ## Three-layer architecture (+ the serving layer)
 //!
 //! * **L3 (this crate)** — the coordinator: data pipeline, feature
 //!   hashing + sharding, node topologies, a simulated-network layer with
@@ -23,8 +23,21 @@
 //!   hot spot, `interpret=True`, checked against a pure-jnp oracle.
 //!
 //! Python never runs on the request path: [`runtime`] loads the HLO
-//! artifacts via PJRT (the `xla` crate) at startup and serves them from
+//! artifacts via PJRT (the `xla` crate, behind the `pjrt` cargo
+//! feature; the default build stubs it) at startup and serves them from
 //! dedicated executor threads.
+//!
+//! On top of L3 sits **[`serve`]**, the production half: versioned
+//! `.polz` checkpoints that round-trip any trained topology
+//! bit-identically and warm-start training, plus a train-while-serve
+//! prediction server — the coordinator publishes an immutable
+//! [`serve::ModelSnapshot`] every K instances through a
+//! [`serve::SnapshotPublisher`], and N serving threads answer batched
+//! predict requests against the latest snapshot without blocking the
+//! training loop, recording instances-behind staleness, latency
+//! histograms, and QPS. See `pol checkpoint`, `pol serve`, and
+//! `pol predict` in the CLI, `benches/serve_throughput.rs`, and
+//! `examples/train_while_serve.rs`.
 //!
 //! ## Quickstart
 //!
@@ -47,6 +60,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod hashing;
 pub mod learner;
@@ -57,6 +71,7 @@ pub mod metrics;
 pub mod net;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sharding;
 pub mod topology;
 
@@ -82,5 +97,9 @@ pub mod prelude {
     pub use crate::metrics::ProgressiveValidator;
     pub use crate::net::{LinkSpec, SimNetwork};
     pub use crate::rng::Rng;
+    pub use crate::serve::{
+        ModelSnapshot, PredictClient, PredictionServer, SnapshotCell,
+        SnapshotPublisher,
+    };
     pub use crate::topology::Topology;
 }

@@ -51,6 +51,39 @@ impl LrSchedule {
         }
     }
 
+    /// Compact machine-parseable spec: `const:λ`, `invsqrt:λ:t0`,
+    /// `inv:λ:t0`, `delayed:R:L:τ`. Used by config files and the
+    /// checkpoint format; round-trips through [`Self::parse_spec`].
+    pub fn spec(&self) -> String {
+        match *self {
+            LrSchedule::Constant { lambda } => format!("const:{lambda}"),
+            LrSchedule::InvSqrt { lambda, t0 } => format!("invsqrt:{lambda}:{t0}"),
+            LrSchedule::Inv { lambda, t0 } => format!("inv:{lambda}:{t0}"),
+            LrSchedule::DelayedAdversarial { r, l, tau } => {
+                format!("delayed:{r}:{l}:{tau}")
+            }
+        }
+    }
+
+    /// Parse a [`Self::spec`] string.
+    pub fn parse_spec(s: &str) -> Option<LrSchedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize| -> Option<f64> { parts.get(i)?.parse().ok() };
+        match (parts.first().copied()?, parts.len()) {
+            ("const", 2) => Some(LrSchedule::Constant { lambda: num(1)? }),
+            ("invsqrt", 3) => {
+                Some(LrSchedule::InvSqrt { lambda: num(1)?, t0: num(2)? })
+            }
+            ("inv", 3) => Some(LrSchedule::Inv { lambda: num(1)?, t0: num(2)? }),
+            ("delayed", 4) => Some(LrSchedule::DelayedAdversarial {
+                r: num(1)?,
+                l: num(2)?,
+                tau: num(3)?,
+            }),
+            _ => None,
+        }
+    }
+
     /// The paper's §0.7 grid: λ ∈ {2^0..2^9} × t₀ ∈ {10^0..10^6}.
     pub fn paper_grid() -> Vec<LrSchedule> {
         let mut out = Vec::with_capacity(70);
@@ -120,6 +153,20 @@ mod tests {
         let s4 = LrSchedule::delayed_adversarial(1.0, 1.0, 4.0);
         let ratio = s1.eta(100) / s4.eta(100);
         assert!((ratio - 2.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn spec_roundtrip() {
+        for s in [
+            LrSchedule::constant(0.25),
+            LrSchedule::inv_sqrt(2.0, 100.0),
+            LrSchedule::inv(1.5, 7.0),
+            LrSchedule::delayed_adversarial(1.0, 2.0, 64.0),
+        ] {
+            assert_eq!(LrSchedule::parse_spec(&s.spec()), Some(s), "{}", s.spec());
+        }
+        assert_eq!(LrSchedule::parse_spec("nope"), None);
+        assert_eq!(LrSchedule::parse_spec("invsqrt:1"), None);
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train            run a coordinator configuration over a dataset
+//!   checkpoint       inspect/verify a `.polz` model checkpoint
+//!   serve            serve a checkpointed model from N threads
+//!   predict          answer predictions from stdin against a checkpoint
 //!   bench-data       generate + describe the Table 0.1 datasets
 //!   inspect          feature-hashing collision statistics
 //!   artifacts-check  load every AOT artifact and smoke-execute one
@@ -10,18 +13,26 @@
 //! (`--config path`, flat `key = value`) provides defaults that flags
 //! override.
 
+use std::sync::Arc;
+
 use pol::config::{RunConfig, UpdateRule};
 use pol::coordinator::Coordinator;
 use pol::data::synth::{AdDisplayGen, RcvLikeGen, SynthConfig, WebspamLikeGen};
 use pol::data::Dataset;
+use pol::linalg::SparseFeat;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
+use pol::rng::Rng;
+use pol::serve::{checkpoint, PredictionServer, SnapshotCell};
 use pol::topology::Topology;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("checkpoint") => cmd_checkpoint(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("predict") => cmd_predict(&args[1..]),
         Some("bench-data") => cmd_bench_data(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("artifacts-check") => cmd_artifacts_check(&args[1..]),
@@ -49,6 +60,16 @@ COMMANDS:
                    --workers N  --passes P  --tau T  --lambda L  --t0 T0
                    --loss squared|logistic  --instances N  --seed S
                    --topology two-layer|binary-tree  --config FILE
+                   --checkpoint OUT.polz  (save the trained model)
+  checkpoint       inspect + integrity-check a .polz checkpoint
+                   --model PATH
+  serve            load a checkpoint and serve it from N threads under a
+                   synthetic request load, reporting QPS / latency
+                   --model PATH  --threads N  --seconds S  --batch B
+                   --density D  --seed S
+  predict          one prediction per stdin line ('idx:val idx:val ...',
+                   pre-hashed indices) against a checkpoint
+                   --model PATH
   bench-data       generate + describe the Table 0.1 datasets
                    [--full]  (paper-scale shapes; default is scaled down)
   inspect          hashing collision stats   --bits B  --uniques N
@@ -139,10 +160,14 @@ fn cmd_train(args: &[String]) -> i32 {
     if let Some(t) = flag(args, "--tau") {
         cfg.tau = t.parse().unwrap_or(1024);
     }
-    let lambda: f64 =
-        flag(args, "--lambda").and_then(|s| s.parse().ok()).unwrap_or(0.5);
-    let t0: f64 = flag(args, "--t0").and_then(|s| s.parse().ok()).unwrap_or(1.0);
-    cfg.lr = LrSchedule::inv_sqrt(lambda, t0);
+    let lambda: Option<f64> =
+        flag(args, "--lambda").and_then(|s| s.parse().ok());
+    let t0: Option<f64> = flag(args, "--t0").and_then(|s| s.parse().ok());
+    if lambda.is_some() || t0.is_some() {
+        // flags override; otherwise the config file's `lr`/`lambda`/`t0`
+        // (or the default schedule) stands
+        cfg.lr = LrSchedule::inv_sqrt(lambda.unwrap_or(0.5), t0.unwrap_or(1.0));
+    }
     if let Some(s) = flag(args, "--seed") {
         cfg.seed = s.parse().unwrap_or(42);
     }
@@ -181,6 +206,176 @@ fn cmd_train(args: &[String]) -> i32 {
         test_acc,
         report.instances,
         report.elapsed.as_millis()
+    );
+    if let Some(path) = flag(args, "--checkpoint") {
+        let path = std::path::PathBuf::from(path);
+        match checkpoint::save_coordinator(&coord, &path) {
+            Ok(()) => eprintln!("checkpoint saved to {path:?}"),
+            Err(e) => {
+                eprintln!("checkpoint save failed: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_checkpoint(args: &[String]) -> i32 {
+    let Some(path) = flag(args, "--model") else {
+        eprintln!("checkpoint: --model PATH required");
+        return 2;
+    };
+    match checkpoint::inspect(std::path::Path::new(&path)) {
+        Ok(info) => {
+            println!(
+                "kind={} format={} dim={} tables={} params={} trained={} digest={:#018x} salt={:#018x}",
+                info.kind_name(),
+                info.format_version,
+                info.dim,
+                info.tables,
+                info.total_params,
+                info.trained_instances,
+                info.config_digest,
+                info.salt
+            );
+            for line in info.config_text.lines() {
+                println!("  {line}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("checkpoint {path}: {e}");
+            1
+        }
+    }
+}
+
+/// Parse one stdin line of `idx:val` tokens (pre-hashed feature indices).
+fn parse_features(line: &str, dim: usize) -> Result<Vec<SparseFeat>, String> {
+    let mut out = Vec::new();
+    for tok in line.split_whitespace() {
+        let (i, v) = tok
+            .split_once(':')
+            .ok_or_else(|| format!("bad token '{tok}' (want idx:val)"))?;
+        let i: u32 = i.parse().map_err(|_| format!("bad index '{i}'"))?;
+        let v: f32 = v.parse().map_err(|_| format!("bad value '{v}'"))?;
+        if i as usize >= dim {
+            return Err(format!("index {i} out of range (dim {dim})"));
+        }
+        out.push((i, v));
+    }
+    Ok(out)
+}
+
+fn cmd_predict(args: &[String]) -> i32 {
+    let Some(path) = flag(args, "--model") else {
+        eprintln!("predict: --model PATH required");
+        return 2;
+    };
+    let ckpt = match checkpoint::load(std::path::Path::new(&path)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("predict: load {path}: {e}");
+            return 1;
+        }
+    };
+    let dim = ckpt.dim();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match std::io::BufRead::read_line(
+            &mut std::io::stdin().lock(),
+            &mut line,
+        ) {
+            Ok(0) => return 0, // EOF
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("predict: stdin: {e}");
+                return 1;
+            }
+        }
+        let text = line.trim();
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        match parse_features(text, dim) {
+            Ok(x) => println!("{}", ckpt.predict(&x)),
+            Err(e) => {
+                eprintln!("predict: {e}");
+                return 2;
+            }
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let Some(path) = flag(args, "--model") else {
+        eprintln!("serve: --model PATH required");
+        return 2;
+    };
+    let threads: usize =
+        flag(args, "--threads").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seconds: f64 =
+        flag(args, "--seconds").and_then(|s| s.parse().ok()).unwrap_or(2.0);
+    let batch: usize =
+        flag(args, "--batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let density: usize =
+        flag(args, "--density").and_then(|s| s.parse().ok()).unwrap_or(75);
+    let seed: u64 = flag(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let ckpt = match checkpoint::load(std::path::Path::new(&path)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("serve: load {path}: {e}");
+            return 1;
+        }
+    };
+    let snap = ckpt.into_snapshot();
+    let dim = snap.dim().max(1);
+    eprintln!(
+        "serving {path}: dim={dim} params={} threads={threads} batch={batch} for {seconds}s",
+        snap.num_params()
+    );
+    let cell = SnapshotCell::new(snap);
+    let server = PredictionServer::start(Arc::clone(&cell), threads);
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs_f64(seconds.max(0.1));
+    // drive load from as many client threads as serving threads
+    std::thread::scope(|s| {
+        for c in 0..threads {
+            let client = server.client();
+            s.spawn(move || {
+                let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
+                while std::time::Instant::now() < deadline {
+                    let reqs: Vec<Vec<SparseFeat>> = (0..batch)
+                        .map(|_| {
+                            (0..density)
+                                .map(|_| {
+                                    (
+                                        rng.below(dim as u64) as u32,
+                                        rng.normal() as f32,
+                                    )
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    if client.predict(reqs).is_none() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    println!(
+        "threads={} requests={} predictions={} qps={:.0} p50_us={:.1} p99_us={:.1} max_us={:.1} max_staleness={}",
+        threads,
+        stats.requests,
+        stats.predictions,
+        stats.qps(),
+        stats.latency.quantile_ns(0.5) as f64 / 1e3,
+        stats.latency.quantile_ns(0.99) as f64 / 1e3,
+        stats.latency.max_ns() as f64 / 1e3,
+        stats.max_staleness
     );
     0
 }

@@ -142,6 +142,91 @@ impl Throughput {
     }
 }
 
+/// Log2-bucketed latency histogram for the serving path: bucket `i`
+/// holds samples with `floor(log2(ns)) == i`, so quantiles are exact to
+/// within a factor of 2 with zero allocation on the hot path. Cheap
+/// enough for one histogram per serving thread; [`Self::merge`] folds
+/// them for reporting.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: [0; 64], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        let bucket = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[bucket] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Upper edge (ns) of the bucket containing quantile `q` ∈ [0, 1] —
+    /// a ≤2× overestimate of the true quantile, capped at the observed
+    /// max.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let upper = if i >= 63 { u64::MAX } else { (2u64 << i) - 1 };
+                return upper.min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Fold another histogram in (per-thread → global reporting).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,5 +271,48 @@ mod tests {
         let pv = ProgressiveValidator::new();
         assert_eq!(pv.mean_squared(), 0.0);
         assert_eq!(pv.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.quantile_ns(0.5);
+        // third sample (400ns) sits in bucket [256, 511]
+        assert!((256..=511).contains(&p50), "p50 {p50}");
+        // p99 lands in the max sample's bucket, capped at observed max
+        let p99 = h.quantile_ns(0.99);
+        assert!(p99 >= 65_536 && p99 <= 100_000, "p99 {p99}");
+        assert_eq!(h.quantile_ns(1.0), 100_000);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut c = LatencyHistogram::new();
+        for (i, ns) in [10u64, 1000, 50, 7000, 320, 99].iter().enumerate() {
+            if i % 2 == 0 {
+                a.record_ns(*ns);
+            } else {
+                b.record_ns(*ns);
+            }
+            c.record_ns(*ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile_ns(0.5), c.quantile_ns(0.5));
+        assert_eq!(a.max_ns(), c.max_ns());
+        assert!((a.mean_ns() - c.mean_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.mean_ns(), 0.0);
     }
 }

@@ -2,7 +2,10 @@
 
 use std::sync::mpsc;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::error::Context;
+use crate::error::Result;
+use crate::format_err as anyhow;
 
 /// A tensor crossing the server boundary: shape + row-major f32 data.
 #[derive(Clone, Debug, PartialEq)]
@@ -80,7 +83,24 @@ impl Drop for ExecServer {
     }
 }
 
+/// Stub server loop for builds without the `pjrt` feature: the `xla`
+/// crate (and its native PJRT runtime) is unavailable in this offline
+/// environment, so every call reports a clear actionable error instead
+/// of failing to link.
+#[cfg(not(feature = "pjrt"))]
+fn serve(path: std::path::PathBuf, rx: mpsc::Receiver<Request>) {
+    let msg = format!(
+        "cannot execute artifact {path:?}: built without the `pjrt` cargo \
+         feature (the `xla` crate is unavailable offline); rebuild with \
+         `--features pjrt` on a host with the XLA toolchain"
+    );
+    while let Ok((_, reply)) = rx.recv() {
+        let _ = reply.send(Err(anyhow!("{msg}")));
+    }
+}
+
 /// Server loop: build client, compile once, serve until channel closes.
+#[cfg(feature = "pjrt")]
 fn serve(path: std::path::PathBuf, rx: mpsc::Receiver<Request>) {
     let built = (|| -> Result<_> {
         let client = xla::PjRtClient::cpu()
@@ -109,6 +129,7 @@ fn serve(path: std::path::PathBuf, rx: mpsc::Receiver<Request>) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_once(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Reply {
     let literals: Vec<xla::Literal> = inputs
         .iter()

@@ -8,7 +8,8 @@
 //! same math; `rust/tests/test_runtime.rs` proves they agree, which is
 //! the cross-layer correctness signal for the whole stack.
 
-use anyhow::{anyhow, Result};
+use crate::error::Result;
+use crate::format_err as anyhow;
 
 use super::exec_server::Tensor;
 use super::registry::Registry;

@@ -9,7 +9,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{Context, Result};
+use crate::format_err as anyhow;
 
 use super::exec_server::ExecServer;
 

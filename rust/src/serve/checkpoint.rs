@@ -1,0 +1,597 @@
+//! `.polz` — the versioned, self-describing checkpoint format.
+//!
+//! Any trained topology round-trips to disk and warm-starts: a plain
+//! [`Sgd`], a centralized (Minibatch/CG/SGD) coordinator, or a full
+//! feature-sharded node tree. The format is self-describing (the
+//! canonical config text rides along) and tamper-evident (whole-payload
+//! FNV-1a checksum + config digest), so truncated or corrupted bytes
+//! come back as [`io::Error`]s — never a panic, never a silently wrong
+//! model.
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic "POLZ" | u32 format version | u64 config digest
+//! u64 payload checksum (FNV-1a) | u64 payload length
+//! payload:
+//!   u8 kind (0 = sgd, 1 = central coordinator, 2 = tree coordinator)
+//!   u32 config-text length | config text (canonical `key = value`)
+//!   u64 dim | u64 routing salt (sharder signature; 0 for sgd/central)
+//!   u64 trained instances
+//!   u32 table count
+//!   per table: u64 step clock | u64 length | length × f32 weights
+//! ```
+//! The config digest is FNV-1a over (config text ‖ dim ‖ salt) — the
+//! serving process verifies it so a model is never served against a
+//! different hashing/sharding/topology setup than it was trained with.
+
+use std::io::{self, Read, Write};
+
+use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
+use crate::hashing::fnv1a64;
+use crate::learner::sgd::Sgd;
+use crate::learner::OnlineLearner;
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+use crate::serve::snapshot::ModelSnapshot;
+
+pub const MAGIC: &[u8; 4] = b"POLZ";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Caps keeping corrupted length fields from attempting absurd
+/// allocations before the checksum is even checked.
+const MAX_PAYLOAD: u64 = 1 << 31;
+const MAX_CFG_TEXT: u32 = 1 << 20;
+const MAX_TABLE: u64 = 1 << 31;
+const MAX_TABLES: u32 = 1 << 20;
+
+/// What a checkpoint holds, ready to use: predictors warm-start and can
+/// keep training (the step clocks are preserved).
+pub enum Checkpoint {
+    Sgd(Sgd),
+    Coordinator(Box<Coordinator>),
+}
+
+/// Parsed header + structural metadata (`pol checkpoint` inspection).
+#[derive(Clone, Debug)]
+pub struct CheckpointInfo {
+    pub format_version: u32,
+    pub kind: u8,
+    pub config_digest: u64,
+    pub dim: u64,
+    pub salt: u64,
+    pub trained_instances: u64,
+    pub tables: u32,
+    pub total_params: u64,
+    pub config_text: String,
+}
+
+impl CheckpointInfo {
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            KIND_SGD => "sgd",
+            KIND_CENTRAL => "central-coordinator",
+            KIND_TREE => "tree-coordinator",
+            _ => "unknown",
+        }
+    }
+}
+
+const KIND_SGD: u8 = 0;
+const KIND_CENTRAL: u8 = 1;
+const KIND_TREE: u8 = 2;
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Digest binding a model to its configuration *and* feature routing.
+pub fn config_digest(cfg_text: &str, dim: u64, salt: u64) -> u64 {
+    let mut bytes = cfg_text.as_bytes().to_vec();
+    bytes.extend_from_slice(&dim.to_le_bytes());
+    bytes.extend_from_slice(&salt.to_le_bytes());
+    fnv1a64(&bytes)
+}
+
+// ------------------------------------------------------------- writing
+
+fn push_table(payload: &mut Vec<u8>, steps: u64, w: &[f32]) {
+    payload.extend_from_slice(&steps.to_le_bytes());
+    payload.extend_from_slice(&(w.len() as u64).to_le_bytes());
+    for &x in w {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn build_payload(
+    kind: u8,
+    cfg_text: &str,
+    dim: u64,
+    salt: u64,
+    trained: u64,
+    tables: &[(u64, &[f32])],
+) -> Vec<u8> {
+    let wlen: usize = tables.iter().map(|(_, w)| w.len() * 4 + 16).sum();
+    let mut payload = Vec::with_capacity(1 + 4 + cfg_text.len() + 28 + wlen);
+    payload.push(kind);
+    payload.extend_from_slice(&(cfg_text.len() as u32).to_le_bytes());
+    payload.extend_from_slice(cfg_text.as_bytes());
+    payload.extend_from_slice(&dim.to_le_bytes());
+    payload.extend_from_slice(&salt.to_le_bytes());
+    payload.extend_from_slice(&trained.to_le_bytes());
+    payload.extend_from_slice(&(tables.len() as u32).to_le_bytes());
+    for &(steps, w) in tables {
+        push_table(&mut payload, steps, w);
+    }
+    payload
+}
+
+fn write_framed(
+    out: &mut impl Write,
+    cfg_text: &str,
+    dim: u64,
+    salt: u64,
+    payload: &[u8],
+) -> io::Result<()> {
+    out.write_all(MAGIC)?;
+    out.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    out.write_all(&config_digest(cfg_text, dim, salt).to_le_bytes())?;
+    out.write_all(&fnv1a64(payload).to_le_bytes())?;
+    out.write_all(&(payload.len() as u64).to_le_bytes())?;
+    out.write_all(payload)
+}
+
+/// Canonical config text of an [`Sgd`] checkpoint. One definition only:
+/// the config digest depends on byte-identical text, so writer and
+/// snapshot construction must agree.
+fn sgd_cfg_text(s: &Sgd) -> String {
+    format!("kind = sgd\nloss = {}\nlr = {}\n", s.loss.name(), s.lr.spec())
+}
+
+/// Serialize a plain [`Sgd`] learner.
+pub fn write_sgd(s: &Sgd, out: &mut impl Write) -> io::Result<()> {
+    let cfg_text = sgd_cfg_text(s);
+    let dim = s.w.len() as u64;
+    let payload = build_payload(
+        KIND_SGD,
+        &cfg_text,
+        dim,
+        0,
+        s.steps(),
+        &[(s.steps(), &s.w)],
+    );
+    write_framed(out, &cfg_text, dim, 0, &payload)
+}
+
+/// Serialize a trained [`Coordinator`] (centralized or tree).
+pub fn write_coordinator(c: &Coordinator, out: &mut impl Write) -> io::Result<()> {
+    let cfg_text = c.cfg.to_cfg_string();
+    let dim = c.dim() as u64;
+    let salt = c.sharder_signature();
+    let payload = match c.central_weights() {
+        Some(w) => build_payload(
+            KIND_CENTRAL,
+            &cfg_text,
+            dim,
+            salt,
+            c.trained_instances(),
+            &[(c.trained_instances(), w)],
+        ),
+        None => {
+            let tables: Vec<(u64, &[f32])> = c
+                .nodes()
+                .iter()
+                .map(|n| (n.steps(), n.weights()))
+                .collect();
+            build_payload(
+                KIND_TREE,
+                &cfg_text,
+                dim,
+                salt,
+                c.trained_instances(),
+                &tables,
+            )
+        }
+    };
+    write_framed(out, &cfg_text, dim, salt, &payload)
+}
+
+pub fn save_sgd(s: &Sgd, path: &std::path::Path) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_sgd(s, &mut f)?;
+    f.flush()
+}
+
+pub fn save_coordinator(c: &Coordinator, path: &std::path::Path) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_coordinator(c, &mut f)?;
+    f.flush()
+}
+
+// ------------------------------------------------------------- reading
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| bad("truncated payload"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+struct RawCheckpoint {
+    info: CheckpointInfo,
+    /// (step clock, weights) per table.
+    tables: Vec<(u64, Vec<f32>)>,
+}
+
+fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
+    let mut header = [0u8; 32];
+    inp.read_exact(&mut header)
+        .map_err(|_| bad("truncated header"))?;
+    if &header[0..4] != MAGIC {
+        return Err(bad("bad magic (not a .polz checkpoint)"));
+    }
+    let format_version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if format_version != FORMAT_VERSION {
+        return Err(bad(format!(
+            "unsupported checkpoint version {format_version}"
+        )));
+    }
+    let digest = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let checksum = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(header[24..32].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
+        return Err(bad(format!("payload length {payload_len} exceeds cap")));
+    }
+    let mut payload = Vec::new();
+    inp.take(payload_len).read_to_end(&mut payload)?;
+    if payload.len() as u64 != payload_len {
+        return Err(bad(format!(
+            "truncated payload: expected {payload_len} bytes, got {}",
+            payload.len()
+        )));
+    }
+    if fnv1a64(&payload) != checksum {
+        return Err(bad("payload checksum mismatch (corrupted checkpoint)"));
+    }
+
+    let mut cur = Cursor { buf: &payload, pos: 0 };
+    let kind = cur.u8()?;
+    if kind > KIND_TREE {
+        return Err(bad(format!("unknown checkpoint kind {kind}")));
+    }
+    let cfg_len = cur.u32()?;
+    if cfg_len > MAX_CFG_TEXT {
+        return Err(bad("config text exceeds cap"));
+    }
+    let config_text = String::from_utf8(cur.take(cfg_len as usize)?.to_vec())
+        .map_err(|_| bad("config text is not utf-8"))?;
+    let dim = cur.u64()?;
+    let salt = cur.u64()?;
+    let trained_instances = cur.u64()?;
+    if config_digest(&config_text, dim, salt) != digest {
+        return Err(bad("config digest mismatch"));
+    }
+    let ntables = cur.u32()?;
+    if ntables > MAX_TABLES {
+        return Err(bad("table count exceeds cap"));
+    }
+    let mut tables = Vec::with_capacity(ntables as usize);
+    let mut total_params = 0u64;
+    for _ in 0..ntables {
+        let steps = cur.u64()?;
+        let len = cur.u64()?;
+        if len > MAX_TABLE {
+            return Err(bad("weight table exceeds cap"));
+        }
+        let raw = cur.take(len as usize * 4)?;
+        let mut w = Vec::with_capacity(len as usize);
+        for c in raw.chunks_exact(4) {
+            w.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        total_params += len;
+        tables.push((steps, w));
+    }
+    if !cur.done() {
+        return Err(bad("trailing bytes after payload"));
+    }
+    Ok(RawCheckpoint {
+        info: CheckpointInfo {
+            format_version,
+            kind,
+            config_digest: digest,
+            dim,
+            salt,
+            trained_instances,
+            tables: ntables,
+            total_params,
+            config_text,
+        },
+        tables,
+    })
+}
+
+/// Minimal `key = value` lookup for the sgd-kind config text.
+fn cfg_lookup<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    text.lines().find_map(|line| {
+        let (k, v) = line.split_once('=')?;
+        if k.trim() == key {
+            Some(v.trim())
+        } else {
+            None
+        }
+    })
+}
+
+/// Deserialize a checkpoint from a reader.
+pub fn read(inp: &mut impl Read) -> io::Result<Checkpoint> {
+    let raw = read_raw(inp)?;
+    let info = &raw.info;
+    match info.kind {
+        KIND_SGD => {
+            let loss = cfg_lookup(&info.config_text, "loss")
+                .and_then(Loss::parse)
+                .ok_or_else(|| bad("sgd checkpoint missing loss"))?;
+            let lr = cfg_lookup(&info.config_text, "lr")
+                .and_then(LrSchedule::parse_spec)
+                .ok_or_else(|| bad("sgd checkpoint missing lr"))?;
+            let [(steps, w)] = <[_; 1]>::try_from(raw.tables)
+                .map_err(|_| bad("sgd checkpoint must hold one table"))?;
+            if w.len() as u64 != info.dim {
+                return Err(bad("sgd table length disagrees with dim"));
+            }
+            Ok(Checkpoint::Sgd(Sgd::from_parts(w, loss, lr, steps)))
+        }
+        KIND_CENTRAL => {
+            let cfg = parse_run_config(&info.config_text)?;
+            let [(_, w)] = <[_; 1]>::try_from(raw.tables)
+                .map_err(|_| bad("central checkpoint must hold one table"))?;
+            if w.len() as u64 != info.dim {
+                return Err(bad("central table length disagrees with dim"));
+            }
+            let c = Coordinator::restore_central(
+                cfg,
+                info.dim as usize,
+                w,
+                info.trained_instances,
+            )
+            .map_err(bad)?;
+            Ok(Checkpoint::Coordinator(Box::new(c)))
+        }
+        KIND_TREE => {
+            let cfg = parse_run_config(&info.config_text)?;
+            let c = Coordinator::restore_tree(
+                cfg,
+                info.dim as usize,
+                raw.tables,
+                info.trained_instances,
+            )
+            .map_err(bad)?;
+            if c.sharder_signature() != info.salt {
+                return Err(bad("sharder signature mismatch"));
+            }
+            Ok(Checkpoint::Coordinator(Box::new(c)))
+        }
+        k => Err(bad(format!("unknown checkpoint kind {k}"))),
+    }
+}
+
+fn parse_run_config(text: &str) -> io::Result<RunConfig> {
+    RunConfig::from_str_cfg(text)
+        .map_err(|e| bad(format!("bad checkpoint config: {e}")))
+}
+
+/// Load a checkpoint from a file.
+pub fn load(path: &std::path::Path) -> io::Result<Checkpoint> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    read(&mut f)
+}
+
+/// Parse structure + metadata without building the model (`pol
+/// checkpoint` inspection; still verifies checksum and digest).
+pub fn inspect(path: &std::path::Path) -> io::Result<CheckpointInfo> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    Ok(read_raw(&mut f)?.info)
+}
+
+impl Checkpoint {
+    /// The immutable serving view of this checkpoint.
+    pub fn into_snapshot(self) -> ModelSnapshot {
+        match self {
+            Checkpoint::Sgd(s) => {
+                let trained = s.steps();
+                let digest =
+                    config_digest(&sgd_cfg_text(&s), s.w.len() as u64, 0);
+                ModelSnapshot::central(s.w, trained, digest)
+            }
+            Checkpoint::Coordinator(c) => c.snapshot(),
+        }
+    }
+
+    /// Predict without consuming the checkpoint.
+    pub fn predict(&self, x: &[crate::linalg::SparseFeat]) -> f64 {
+        match self {
+            Checkpoint::Sgd(s) => s.predict(x),
+            Checkpoint::Coordinator(c) => c.predict(x),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Checkpoint::Sgd(s) => s.w.len(),
+            Checkpoint::Coordinator(c) => c.dim(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::UpdateRule;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+    use crate::topology::Topology;
+
+    fn trained_sgd() -> Sgd {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 500,
+            features: 200,
+            density: 10,
+            hash_bits: 10,
+            ..Default::default()
+        })
+        .generate();
+        let mut s = Sgd::new(
+            ds.dim,
+            Loss::Logistic,
+            LrSchedule::inv_sqrt(2.0, 10.0),
+        );
+        for inst in ds.iter() {
+            s.learn(&inst.features, inst.label);
+        }
+        s
+    }
+
+    #[test]
+    fn sgd_roundtrip_bit_identical() {
+        let s = trained_sgd();
+        let mut buf = Vec::new();
+        write_sgd(&s, &mut buf).unwrap();
+        let back = match read(&mut buf.as_slice()).unwrap() {
+            Checkpoint::Sgd(s) => s,
+            _ => panic!("wrong kind"),
+        };
+        assert_eq!(back.w, s.w);
+        assert_eq!(back.steps(), s.steps());
+        assert_eq!(back.loss, s.loss);
+        assert_eq!(back.lr, s.lr);
+    }
+
+    #[test]
+    fn tree_roundtrip_identical_predictions() {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 1_000,
+            features: 300,
+            density: 12,
+            hash_bits: 11,
+            ..Default::default()
+        })
+        .generate();
+        let cfg = RunConfig {
+            topology: Topology::TwoLayer { shards: 4 },
+            rule: UpdateRule::Backprop { multiplier: 2.0 },
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 1.0),
+            clip01: false,
+            tau: 32,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        c.train(&ds);
+        let mut buf = Vec::new();
+        write_coordinator(&c, &mut buf).unwrap();
+        let back = match read(&mut buf.as_slice()).unwrap() {
+            Checkpoint::Coordinator(c) => c,
+            _ => panic!("wrong kind"),
+        };
+        for inst in ds.iter().take(100) {
+            let a = c.predict(&inst.features);
+            let b = back.predict(&inst.features);
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(back.trained_instances(), c.trained_instances());
+    }
+
+    #[test]
+    fn central_roundtrip_identical_predictions() {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 800,
+            features: 200,
+            density: 10,
+            hash_bits: 10,
+            ..Default::default()
+        })
+        .generate();
+        let cfg = RunConfig {
+            rule: UpdateRule::Minibatch { batch: 64 },
+            loss: Loss::Logistic,
+            clip01: false,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        c.train(&ds);
+        let mut buf = Vec::new();
+        write_coordinator(&c, &mut buf).unwrap();
+        let back = read(&mut buf.as_slice()).unwrap();
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                c.predict(&inst.features).to_bits(),
+                back.predict(&inst.features).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_errors_cleanly() {
+        let s = trained_sgd();
+        let mut buf = Vec::new();
+        write_sgd(&s, &mut buf).unwrap();
+        for cut in [0, 3, 8, 31, 32, 40, buf.len() - 1] {
+            let err = read(&mut &buf[..cut]).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn corruption_detected_by_checksum() {
+        let s = trained_sgd();
+        let mut buf = Vec::new();
+        write_sgd(&s, &mut buf).unwrap();
+        // flip one byte deep in the weight payload
+        let idx = buf.len() - 5;
+        buf[idx] ^= 0x40;
+        let err = read(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn inspect_reports_meta() {
+        let s = trained_sgd();
+        let dir = std::env::temp_dir().join("pol_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.polz");
+        save_sgd(&s, &path).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.kind_name(), "sgd");
+        assert_eq!(info.dim, s.w.len() as u64);
+        assert_eq!(info.tables, 1);
+        assert_eq!(info.total_params, s.w.len() as u64);
+        assert!(info.config_text.contains("loss = logistic"));
+        std::fs::remove_file(&path).ok();
+    }
+}

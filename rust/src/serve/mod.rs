@@ -1,0 +1,57 @@
+//! The serving layer: checkpointing + a train-while-serve prediction
+//! server.
+//!
+//! The paper's feature-sharded architectures exist to keep learning
+//! *online* under heavy traffic; this module is the missing production
+//! half: persist any trained topology and answer prediction requests
+//! while training continues.
+//!
+//! * [`checkpoint`] — the versioned, self-describing `.polz` binary
+//!   format (magic + version + config digest + whole-payload checksum +
+//!   per-shard weight tables). `save`/`load` round-trips [`Sgd`]
+//!   learners, centralized coordinators, and full sharded node trees,
+//!   bit-identically, and warm-starts training (step clocks are
+//!   preserved).
+//! * [`snapshot`] — [`snapshot::ModelSnapshot`], the immutable
+//!   predictor the server swaps; self-contained (tree wiring + sharder
+//!   identity + weights) with an allocation-free predict path.
+//! * [`publisher`] — [`publisher::SnapshotCell`], the atomically
+//!   swappable holder, plus [`publisher::SnapshotPublisher`], the
+//!   coordinator hook that publishes a fresh snapshot every K trained
+//!   instances.
+//! * [`server`] — [`server::PredictionServer`], N serving threads
+//!   answering batched predict requests against the latest snapshot,
+//!   recording instances-behind staleness, latency histograms, and QPS.
+//!
+//! Readers see slightly *stale* weights, never *torn* ones — the
+//! delayed-read regime analyzed in *Slow Learners are Fast* (Langford,
+//! Smola, Zinkevich): staleness is bounded by the publish cadence and
+//! measured on every response rather than left accidental.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use pol::prelude::*;
+//!
+//! // load a checkpointed model and serve it on 4 threads
+//! let ckpt = pol::serve::checkpoint::load(std::path::Path::new("out.polz"))
+//!     .expect("load checkpoint");
+//! let cell = SnapshotCell::new(ckpt.into_snapshot());
+//! let server = PredictionServer::start(Arc::clone(&cell), 4);
+//! let client = server.client();
+//! let resp = client.predict(vec![vec![(0, 1.0)]]).unwrap();
+//! println!("pred {} (version {}, {} instances behind)",
+//!          resp.preds[0], resp.snapshot_version, resp.staleness);
+//! ```
+
+pub mod checkpoint;
+pub mod publisher;
+pub mod server;
+pub mod snapshot;
+
+#[allow(unused_imports)]
+use crate::learner::sgd::Sgd; // doc link
+
+pub use checkpoint::{Checkpoint, CheckpointInfo};
+pub use publisher::{SnapshotCell, SnapshotPublisher, SnapshotReader};
+pub use server::{PredictClient, PredictResponse, PredictionServer, ServeStats};
+pub use snapshot::{ModelSnapshot, PredictScratch, SnapshotModel};

@@ -1,0 +1,226 @@
+//! Snapshot publication: the trainer-side half of train-while-serve.
+//!
+//! A [`SnapshotCell`] holds the live model behind an atomically
+//! swappable `Arc<ModelSnapshot>`. The design is seqlock-shaped but
+//! tear-free by construction: the publisher swaps a fully-built
+//! immutable snapshot under a mutex and then bumps an atomic sequence
+//! number; readers keep a thread-local cached `Arc` ([`SnapshotReader`])
+//! and touch the mutex only when the sequence number says a newer
+//! snapshot exists. The serving fast path is therefore one atomic load
+//! per request — readers never contend with each other, and contend
+//! with the publisher only once per publish, never per request.
+//!
+//! Staleness is first-class: the trainer bumps `latest_trained` every
+//! instance, each snapshot records the stream position it was taken at,
+//! and `staleness_of` reports how many instances behind the served
+//! model is — the delay quantity bounded by the τ-analysis of *Slow
+//! Learners are Fast* / *Online Learning under Delayed Feedback*.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::serve::snapshot::ModelSnapshot;
+
+/// The swappable holder of the latest published model.
+pub struct SnapshotCell {
+    /// Publish count; also the `version` stamped on each snapshot.
+    seq: AtomicU64,
+    /// Training-stream position (instances learned so far) — advances
+    /// between publishes, so staleness is measurable at any moment.
+    latest_trained: AtomicU64,
+    slot: Mutex<Arc<ModelSnapshot>>,
+}
+
+impl SnapshotCell {
+    /// Wrap an initial snapshot (version forced to 0).
+    pub fn new(mut initial: ModelSnapshot) -> Arc<SnapshotCell> {
+        initial.version = 0;
+        let trained = initial.trained_instances;
+        Arc::new(SnapshotCell {
+            seq: AtomicU64::new(0),
+            latest_trained: AtomicU64::new(trained),
+            slot: Mutex::new(Arc::new(initial)),
+        })
+    }
+
+    /// Swap in a freshly built snapshot; returns its assigned version.
+    pub fn publish(&self, mut snap: ModelSnapshot) -> u64 {
+        let mut slot = self.slot.lock().expect("snapshot cell lock");
+        let version = self.seq.load(Ordering::Relaxed) + 1;
+        snap.version = version;
+        self.record_trained(snap.trained_instances);
+        *slot = Arc::new(snap);
+        // release-store after the slot is updated: a reader that sees
+        // the new seq will find (at least) this snapshot in the slot
+        self.seq.store(version, Ordering::Release);
+        version
+    }
+
+    /// Latest snapshot (locks; serving threads should prefer
+    /// [`SnapshotReader`], which only locks when the version changed).
+    pub fn load(&self) -> Arc<ModelSnapshot> {
+        Arc::clone(&self.slot.lock().expect("snapshot cell lock"))
+    }
+
+    /// Number of publishes so far.
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// Trainer heartbeat: record the training-stream position (monotone).
+    pub fn record_trained(&self, trained: u64) {
+        self.latest_trained.fetch_max(trained, Ordering::AcqRel);
+    }
+
+    /// Training-stream position of the most advanced trainer heartbeat.
+    pub fn latest_trained(&self) -> u64 {
+        self.latest_trained.load(Ordering::Acquire)
+    }
+
+    /// Instances-behind staleness of a snapshot right now.
+    pub fn staleness_of(&self, snap: &ModelSnapshot) -> u64 {
+        self.latest_trained().saturating_sub(snap.trained_instances)
+    }
+}
+
+/// Per-thread cached view of a [`SnapshotCell`]: the serving fast path.
+pub struct SnapshotReader {
+    cell: Arc<SnapshotCell>,
+    cached_seq: u64,
+    cached: Arc<ModelSnapshot>,
+}
+
+impl SnapshotReader {
+    pub fn new(cell: Arc<SnapshotCell>) -> Self {
+        let cached = cell.load();
+        let cached_seq = cached.version;
+        SnapshotReader { cell, cached_seq, cached }
+    }
+
+    /// The latest snapshot — one atomic load when nothing changed, one
+    /// mutex acquisition per publish otherwise. Never returns a torn
+    /// model (snapshots are immutable) and never goes backwards.
+    #[inline]
+    pub fn current(&mut self) -> &Arc<ModelSnapshot> {
+        let seq = self.cell.seq.load(Ordering::Acquire);
+        if seq != self.cached_seq {
+            let fresh = self.cell.load();
+            // monotonicity: a racing publisher can only leave a *newer*
+            // snapshot in the slot than the seq we read
+            if fresh.version >= self.cached.version {
+                self.cached = fresh;
+            }
+            self.cached_seq = seq.max(self.cached.version);
+        }
+        &self.cached
+    }
+
+    pub fn cell(&self) -> &Arc<SnapshotCell> {
+        &self.cell
+    }
+}
+
+/// The coordinator-side hook: every `every` trained instances, build an
+/// immutable snapshot and publish it while training keeps running.
+pub struct SnapshotPublisher {
+    cell: Arc<SnapshotCell>,
+    /// Publish cadence K, in trained instances.
+    pub every: u64,
+    next_at: u64,
+    published: u64,
+}
+
+impl SnapshotPublisher {
+    pub fn new(cell: Arc<SnapshotCell>, every: u64) -> Self {
+        let every = every.max(1);
+        let next_at = cell.latest_trained() + every;
+        SnapshotPublisher { cell, every, next_at, published: 0 }
+    }
+
+    pub fn cell(&self) -> &Arc<SnapshotCell> {
+        &self.cell
+    }
+
+    pub fn published(&self) -> u64 {
+        self.published
+    }
+
+    /// Trainer heartbeat after one more instance; returns whether the
+    /// cadence says a fresh snapshot is due.
+    #[inline]
+    pub fn tick(&mut self, trained: u64) -> bool {
+        self.cell.record_trained(trained);
+        trained >= self.next_at
+    }
+
+    /// Publish a freshly built snapshot and re-arm the cadence.
+    pub fn publish(&mut self, snap: ModelSnapshot) {
+        let at = snap.trained_instances;
+        self.cell.publish(snap);
+        self.published += 1;
+        self.next_at = at + self.every;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(trained: u64, val: f32) -> ModelSnapshot {
+        ModelSnapshot::central(vec![val; 8], trained, 0)
+    }
+
+    #[test]
+    fn publish_bumps_version_and_swaps() {
+        let cell = SnapshotCell::new(snap(0, 0.0));
+        assert_eq!(cell.seq(), 0);
+        let v = cell.publish(snap(100, 1.0));
+        assert_eq!(v, 1);
+        assert_eq!(cell.seq(), 1);
+        let s = cell.load();
+        assert_eq!(s.version, 1);
+        assert_eq!(s.trained_instances, 100);
+    }
+
+    #[test]
+    fn staleness_tracks_heartbeat() {
+        let cell = SnapshotCell::new(snap(0, 0.0));
+        cell.publish(snap(100, 1.0));
+        let s = cell.load();
+        assert_eq!(cell.staleness_of(&s), 0);
+        cell.record_trained(140);
+        assert_eq!(cell.staleness_of(&s), 40);
+        // heartbeats are monotone: an older report cannot move it back
+        cell.record_trained(120);
+        assert_eq!(cell.staleness_of(&s), 40);
+    }
+
+    #[test]
+    fn reader_sees_updates_and_never_regresses() {
+        let cell = SnapshotCell::new(snap(0, 0.0));
+        let mut r = SnapshotReader::new(Arc::clone(&cell));
+        assert_eq!(r.current().version, 0);
+        cell.publish(snap(50, 1.0));
+        cell.publish(snap(90, 2.0));
+        let v = r.current().version;
+        assert_eq!(v, 2);
+        assert_eq!(r.current().version, 2);
+    }
+
+    #[test]
+    fn publisher_cadence() {
+        let cell = SnapshotCell::new(snap(0, 0.0));
+        let mut p = SnapshotPublisher::new(Arc::clone(&cell), 10);
+        let mut published = Vec::new();
+        for t in 1..=35u64 {
+            if p.tick(t) {
+                p.publish(snap(t, t as f32));
+                published.push(t);
+            }
+        }
+        assert_eq!(published, vec![10, 20, 30]);
+        assert_eq!(p.published(), 3);
+        assert_eq!(cell.load().trained_instances, 30);
+        assert_eq!(cell.latest_trained(), 35);
+    }
+}

@@ -1,0 +1,274 @@
+//! The prediction server: N serving threads answering batched predict
+//! requests against the latest published snapshot while training keeps
+//! running.
+//!
+//! Requests flow over an `mpsc` queue shared by the workers; each
+//! worker holds a [`SnapshotReader`] (one atomic load per request in
+//! steady state — no locks, no contention with the trainer except one
+//! mutex touch per publish) plus private predict scratch and a private
+//! latency histogram, merged into [`ServeStats`] at shutdown. Every
+//! response carries the snapshot version it was computed against and
+//! its instances-behind staleness, so clients can *observe* the
+//! delayed-read regime instead of guessing at it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::linalg::SparseFeat;
+use crate::metrics::LatencyHistogram;
+use crate::serve::publisher::{SnapshotCell, SnapshotReader};
+use crate::serve::snapshot::PredictScratch;
+
+/// One answered batch.
+#[derive(Clone, Debug)]
+pub struct PredictResponse {
+    pub preds: Vec<f64>,
+    /// Version of the snapshot that answered this request.
+    pub snapshot_version: u64,
+    /// Instances the trainer had learned beyond that snapshot when the
+    /// request was answered.
+    pub staleness: u64,
+}
+
+type Job = (Vec<Vec<SparseFeat>>, Instant, mpsc::Sender<PredictResponse>);
+
+/// Aggregated serving metrics (merged across workers at shutdown).
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub predictions: u64,
+    /// Request latency (enqueue → reply), so queueing is included.
+    pub latency: LatencyHistogram,
+    pub max_staleness: u64,
+    pub elapsed: std::time::Duration,
+}
+
+impl ServeStats {
+    pub fn qps(&self) -> f64 {
+        self.predictions as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+struct WorkerStats {
+    requests: u64,
+    predictions: u64,
+    latency: LatencyHistogram,
+    max_staleness: u64,
+}
+
+/// Handle to a running pool of serving threads.
+pub struct PredictionServer {
+    tx: mpsc::Sender<Job>,
+    workers: Vec<std::thread::JoinHandle<WorkerStats>>,
+    started: Instant,
+    inflight_hint: Arc<AtomicU64>,
+}
+
+/// Cloneable client side of a [`PredictionServer`].
+///
+/// All clients must be dropped before [`PredictionServer::shutdown`]
+/// can drain the queue and join the workers (the queue closes when the
+/// last sender goes away).
+#[derive(Clone)]
+pub struct PredictClient {
+    tx: mpsc::Sender<Job>,
+    inflight_hint: Arc<AtomicU64>,
+}
+
+impl PredictClient {
+    /// Answer one batch; blocks for the reply.
+    pub fn predict(&self, batch: Vec<Vec<SparseFeat>>) -> Option<PredictResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        self.inflight_hint.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send((batch, Instant::now(), rtx)).is_err() {
+            self.inflight_hint.fetch_sub(1, Ordering::Relaxed);
+            return None;
+        }
+        let r = rrx.recv().ok();
+        self.inflight_hint.fetch_sub(1, Ordering::Relaxed);
+        r
+    }
+}
+
+impl PredictionServer {
+    /// Spawn `threads` serving workers over the given snapshot cell.
+    pub fn start(cell: Arc<SnapshotCell>, threads: usize) -> PredictionServer {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(threads);
+        for wid in 0..threads {
+            let rx = Arc::clone(&shared_rx);
+            let cell = Arc::clone(&cell);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-{wid}"))
+                    .spawn(move || worker_loop(cell, rx))
+                    .expect("spawn serving thread"),
+            );
+        }
+        PredictionServer {
+            tx,
+            workers,
+            started: Instant::now(),
+            inflight_hint: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn client(&self) -> PredictClient {
+        PredictClient {
+            tx: self.tx.clone(),
+            inflight_hint: Arc::clone(&self.inflight_hint),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Requests submitted but not yet answered (approximate).
+    pub fn inflight(&self) -> u64 {
+        self.inflight_hint.load(Ordering::Relaxed)
+    }
+
+    /// Close the queue, drain outstanding requests, join the workers,
+    /// and report merged stats. All [`PredictClient`]s must already be
+    /// dropped, otherwise the queue stays open and this blocks.
+    pub fn shutdown(self) -> ServeStats {
+        drop(self.tx);
+        let mut stats = ServeStats {
+            requests: 0,
+            predictions: 0,
+            latency: LatencyHistogram::new(),
+            max_staleness: 0,
+            elapsed: self.started.elapsed(),
+        };
+        for w in self.workers {
+            let ws = w.join().expect("serving thread panicked");
+            stats.requests += ws.requests;
+            stats.predictions += ws.predictions;
+            stats.latency.merge(&ws.latency);
+            stats.max_staleness = stats.max_staleness.max(ws.max_staleness);
+        }
+        stats.elapsed = self.started.elapsed();
+        stats
+    }
+}
+
+fn worker_loop(
+    cell: Arc<SnapshotCell>,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+) -> WorkerStats {
+    let mut reader = SnapshotReader::new(cell);
+    let mut scratch = PredictScratch::default();
+    let mut ws = WorkerStats {
+        requests: 0,
+        predictions: 0,
+        latency: LatencyHistogram::new(),
+        max_staleness: 0,
+    };
+    loop {
+        // hold the queue lock only for the dequeue, never while predicting
+        let job = match rx.lock().expect("serve queue lock").recv() {
+            Ok(j) => j,
+            Err(_) => break, // queue closed: server shutting down
+        };
+        let (batch, enqueued, reply) = job;
+        let snap = Arc::clone(reader.current());
+        let preds: Vec<f64> = batch
+            .iter()
+            .map(|x| snap.predict_with(x, &mut scratch))
+            .collect();
+        let staleness = reader.cell().staleness_of(&snap);
+        ws.requests += 1;
+        ws.predictions += preds.len() as u64;
+        ws.max_staleness = ws.max_staleness.max(staleness);
+        ws.latency.record(enqueued.elapsed());
+        let _ = reply.send(PredictResponse {
+            preds,
+            snapshot_version: snap.version,
+            staleness,
+        });
+    }
+    ws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::snapshot::ModelSnapshot;
+
+    fn cell_with(w: Vec<f32>) -> Arc<SnapshotCell> {
+        SnapshotCell::new(ModelSnapshot::central(w, 0, 0))
+    }
+
+    #[test]
+    fn serves_predictions() {
+        let cell = cell_with(vec![1.0, -1.0, 0.5, 0.0]);
+        let server = PredictionServer::start(Arc::clone(&cell), 2);
+        let client = server.client();
+        let resp = client
+            .predict(vec![vec![(0, 2.0)], vec![(1, 1.0), (2, 2.0)]])
+            .unwrap();
+        assert_eq!(resp.preds, vec![2.0, 0.0]);
+        assert_eq!(resp.snapshot_version, 0);
+        assert_eq!(resp.staleness, 0);
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.predictions, 2);
+        assert_eq!(stats.latency.count(), 1);
+    }
+
+    #[test]
+    fn responses_follow_published_snapshots() {
+        let cell = cell_with(vec![0.0; 4]);
+        let server = PredictionServer::start(Arc::clone(&cell), 1);
+        let client = server.client();
+        let before = client.predict(vec![vec![(0, 1.0)]]).unwrap();
+        assert_eq!(before.preds[0], 0.0);
+        cell.publish(ModelSnapshot::central(vec![3.0; 4], 100, 0));
+        let after = client.predict(vec![vec![(0, 1.0)]]).unwrap();
+        assert_eq!(after.preds[0], 3.0);
+        assert_eq!(after.snapshot_version, 1);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn staleness_reported_per_response() {
+        let cell = cell_with(vec![0.0; 4]);
+        let server = PredictionServer::start(Arc::clone(&cell), 1);
+        let client = server.client();
+        cell.publish(ModelSnapshot::central(vec![1.0; 4], 1_000, 0));
+        cell.record_trained(1_250);
+        let resp = client.predict(vec![vec![(0, 1.0)]]).unwrap();
+        assert_eq!(resp.staleness, 250);
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.max_staleness, 250);
+    }
+
+    #[test]
+    fn many_clients_many_threads() {
+        let cell = cell_with(vec![2.0; 8]);
+        let server = PredictionServer::start(Arc::clone(&cell), 4);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let client = server.client();
+                s.spawn(move || {
+                    for i in 0..200u32 {
+                        let r = client
+                            .predict(vec![vec![(i % 8, 1.0)]])
+                            .unwrap();
+                        assert_eq!(r.preds[0], 2.0);
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1_600);
+        assert!(stats.qps() > 0.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Immutable model snapshots — the unit the serving layer swaps.
+//!
+//! A [`ModelSnapshot`] captures everything needed to answer a predict
+//! request: the weight tables, the tree wiring, and the routing
+//! (sharder) identity, plus the bookkeeping the staleness metrics need
+//! (publish version and training-stream position). Snapshots are
+//! *immutable by construction*: the publisher builds a fresh one and
+//! swaps the `Arc`, so readers can never observe a half-updated model
+//! (the delayed-read regime of *Slow Learners are Fast* — readers see
+//! slightly stale weights, never torn ones).
+
+use crate::linalg::{sparse_dot, SparseFeat};
+use crate::sharding::feature::FeatureSharder;
+use crate::topology::NodeGraph;
+
+/// Bounds-checked dot for *request* features: unlike the training hot
+/// path, the serving path consumes untrusted client input, so an
+/// out-of-range index must not hit `sparse_dot`'s unchecked access —
+/// it simply contributes nothing (an unknown slot has no weight).
+#[inline]
+fn request_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
+    x.iter()
+        .map(|&(i, v)| {
+            w.get(i as usize).copied().unwrap_or(0.0) as f64 * v as f64
+        })
+        .sum()
+}
+
+/// The predictor inside a snapshot.
+#[derive(Clone, Debug)]
+pub enum SnapshotModel {
+    /// A single flat weight table (plain [`crate::learner::sgd::Sgd`] or
+    /// the centralized Minibatch/CG/SGD rules).
+    Central { w: Vec<f32> },
+    /// A feature-sharded node tree (the §0.5.2 architectures).
+    Tree {
+        graph: NodeGraph,
+        sharder: FeatureSharder,
+        /// Per-node weight tables, indexed by node id (leaves first).
+        weights: Vec<Vec<f32>>,
+        clip01: bool,
+        bias: bool,
+    },
+}
+
+/// An immutable, atomically-swappable model version.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Publish sequence number (assigned by the publisher; 0 when loaded
+    /// straight from a checkpoint).
+    pub version: u64,
+    /// Training-stream position (instances learned) when this snapshot
+    /// was taken — the baseline for instances-behind staleness.
+    pub trained_instances: u64,
+    /// Digest of the originating configuration (see
+    /// [`crate::serve::checkpoint`]); lets a server refuse snapshots
+    /// from a differently-configured trainer.
+    pub config_digest: u64,
+    pub model: SnapshotModel,
+}
+
+/// Reusable buffers for the allocation-free serving hot path.
+#[derive(Clone, Debug, Default)]
+pub struct PredictScratch {
+    preds: Vec<f64>,
+    leaf_bufs: Vec<Vec<SparseFeat>>,
+    x: Vec<SparseFeat>,
+}
+
+impl ModelSnapshot {
+    pub fn central(w: Vec<f32>, trained_instances: u64, config_digest: u64) -> Self {
+        ModelSnapshot {
+            version: 0,
+            trained_instances,
+            config_digest,
+            model: SnapshotModel::Central { w },
+        }
+    }
+
+    /// Hashed feature-space size this snapshot predicts over (the
+    /// weight-table length of the flat model / every leaf).
+    pub fn dim(&self) -> usize {
+        match &self.model {
+            SnapshotModel::Central { w } => w.len(),
+            SnapshotModel::Tree { weights, graph, .. } => {
+                weights.get(..graph.leaves).map_or(0, |ls| {
+                    ls.first().map_or(0, Vec::len)
+                })
+            }
+        }
+    }
+
+    /// Total parameters across all tables (reporting).
+    pub fn num_params(&self) -> usize {
+        match &self.model {
+            SnapshotModel::Central { w } => w.len(),
+            SnapshotModel::Tree { weights, .. } => {
+                weights.iter().map(Vec::len).sum()
+            }
+        }
+    }
+
+    /// Predict with caller-owned scratch (the serving hot path: no
+    /// allocation after the first call per thread).
+    pub fn predict_with(&self, x: &[SparseFeat], s: &mut PredictScratch) -> f64 {
+        match &self.model {
+            SnapshotModel::Central { w } => request_dot(w, x),
+            SnapshotModel::Tree { graph, sharder, weights, clip01, bias } => {
+                let n = graph.num_nodes();
+                s.preds.clear();
+                s.preds.resize(n, 0.0);
+                if s.leaf_bufs.len() != graph.leaves {
+                    s.leaf_bufs = vec![Vec::new(); graph.leaves];
+                }
+                sharder.split_features_into(x, &mut s.leaf_bufs);
+                for leaf in 0..graph.leaves {
+                    s.preds[leaf] =
+                        request_dot(&weights[leaf], &s.leaf_bufs[leaf]);
+                }
+                for id in graph.leaves..n {
+                    let kids = &graph.children[id];
+                    s.x.clear();
+                    for (rank, &c) in kids.iter().enumerate() {
+                        let p = if *clip01 {
+                            s.preds[c].clamp(0.0, 1.0)
+                        } else {
+                            s.preds[c]
+                        };
+                        s.x.push((rank as u32, p as f32));
+                    }
+                    if *bias {
+                        s.x.push((kids.len() as u32, 1.0));
+                    }
+                    s.preds[id] = sparse_dot(&weights[id], &s.x);
+                }
+                s.preds[graph.root]
+            }
+        }
+    }
+
+    /// Convenience predict (allocates scratch; use
+    /// [`Self::predict_with`] on the hot path).
+    pub fn predict(&self, x: &[SparseFeat]) -> f64 {
+        let mut s = PredictScratch::default();
+        self.predict_with(x, &mut s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn central_predicts_dot() {
+        let snap = ModelSnapshot::central(vec![1.0, 2.0, 0.0, -1.0], 10, 7);
+        assert_eq!(snap.predict(&[(0, 1.0), (1, 0.5)]), 2.0);
+        assert_eq!(snap.dim(), 4);
+        assert_eq!(snap.num_params(), 4);
+    }
+
+    #[test]
+    fn tree_predicts_through_master() {
+        // 2 leaves + master; master weights [1, 1, 0] (children + bias)
+        let graph = Topology::TwoLayer { shards: 2 }.build();
+        let sharder = FeatureSharder::hash(2);
+        // each leaf has a 4-slot table of ones: leaf pred = sum of its
+        // shard's feature values
+        let weights = vec![vec![1.0f32; 4], vec![1.0f32; 4], vec![1.0, 1.0, 0.0]];
+        let snap = ModelSnapshot {
+            version: 1,
+            trained_instances: 5,
+            config_digest: 0,
+            model: SnapshotModel::Tree {
+                graph,
+                sharder,
+                weights,
+                clip01: false,
+                bias: true,
+            },
+        };
+        // whichever shard each feature routes to, the unclipped master
+        // with unit child weights sums the leaf predictions
+        let x = [(0u32, 0.5f32), (1, 0.25), (2, 0.125)];
+        let y = snap.predict(&x);
+        assert!((y - 0.875).abs() < 1e-9, "{y}");
+        assert_eq!(snap.dim(), 4);
+        assert_eq!(snap.num_params(), 11);
+    }
+
+    #[test]
+    fn out_of_range_request_features_are_ignored() {
+        // serving consumes untrusted input: an index beyond the weight
+        // table must contribute nothing, not read out of bounds
+        let snap = ModelSnapshot::central(vec![1.0, 2.0], 0, 0);
+        assert_eq!(snap.predict(&[(0, 1.0), (u32::MAX, 5.0)]), 1.0);
+        let graph = Topology::TwoLayer { shards: 2 }.build();
+        let tree = ModelSnapshot {
+            version: 0,
+            trained_instances: 0,
+            config_digest: 0,
+            model: SnapshotModel::Tree {
+                graph,
+                sharder: FeatureSharder::hash(2),
+                weights: vec![vec![1.0; 4], vec![1.0; 4], vec![1.0, 1.0, 0.0]],
+                clip01: false,
+                bias: true,
+            },
+        };
+        let with_oob = tree.predict(&[(0, 0.5), (1_000_000, 9.0)]);
+        let without = tree.predict(&[(0, 0.5)]);
+        assert_eq!(with_oob, without);
+    }
+
+    #[test]
+    fn predict_with_reuses_scratch_consistently() {
+        let graph = Topology::BinaryTree { leaves: 4 }.build();
+        let sharder = FeatureSharder::hash(4);
+        let mut weights: Vec<Vec<f32>> = (0..graph.num_nodes())
+            .map(|id| {
+                if graph.is_leaf(id) {
+                    (0..8).map(|i| (i as f32) * 0.1).collect()
+                } else {
+                    vec![0.5; graph.children[id].len() + 1]
+                }
+            })
+            .collect();
+        weights[0][0] = -0.3;
+        let snap = ModelSnapshot {
+            version: 0,
+            trained_instances: 0,
+            config_digest: 0,
+            model: SnapshotModel::Tree {
+                graph,
+                sharder,
+                weights,
+                clip01: true,
+                bias: true,
+            },
+        };
+        let mut scratch = PredictScratch::default();
+        let x1 = [(0u32, 1.0f32), (5, -2.0)];
+        let x2 = [(3u32, 0.5f32)];
+        let a1 = snap.predict_with(&x1, &mut scratch);
+        let b1 = snap.predict_with(&x2, &mut scratch);
+        // same inputs again with dirty scratch must agree with fresh
+        assert_eq!(a1, snap.predict(&x1));
+        assert_eq!(b1, snap.predict(&x2));
+        assert_eq!(a1, snap.predict_with(&x1, &mut scratch));
+    }
+}

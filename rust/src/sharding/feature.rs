@@ -37,6 +37,18 @@ impl FeatureSharder {
         FeatureSharder { shards, assign: ShardAssign::Range { dim } }
     }
 
+    /// Stable identity of this sharder's routing function, folded into
+    /// checkpoint config digests: a serving process must split features
+    /// exactly like the training process did, so a snapshot records this
+    /// signature and loaders verify it.
+    pub fn signature(&self) -> u64 {
+        let tag = match self.assign {
+            ShardAssign::Hash => format!("hash:{}", self.shards),
+            ShardAssign::Range { dim } => format!("range:{}:{dim}", self.shards),
+        };
+        crate::hashing::fnv1a64(tag.as_bytes())
+    }
+
     /// Which shard owns feature index `i`.
     #[inline]
     pub fn shard_of(&self, i: u32) -> usize {

@@ -11,7 +11,10 @@ fn help_lists_commands() {
     let out = pol().arg("--help").output().expect("run pol");
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["train", "bench-data", "inspect", "artifacts-check"] {
+    for cmd in [
+        "train", "checkpoint", "serve", "predict", "bench-data", "inspect",
+        "artifacts-check",
+    ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
 }
@@ -88,6 +91,140 @@ fn train_deterministic_output() {
             .join(" ")
     };
     assert_eq!(run(), run());
+}
+
+#[test]
+fn train_checkpoint_then_predict_is_identical() {
+    let dir = std::env::temp_dir().join("pol_cli_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("m.polz");
+
+    // 1. train and checkpoint
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "3000", "--rule", "local",
+            "--workers", "4", "--loss", "logistic", "--seed", "5",
+            "--checkpoint", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(model.exists());
+
+    // 2. inspect: self-describing metadata, integrity verified
+    let out = pol()
+        .args(["checkpoint", "--model", model.to_str().unwrap()])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("kind=tree-coordinator"), "{text}");
+    assert!(text.contains("rule = local"), "{text}");
+
+    // 3. `pol predict` must answer exactly like the in-process model
+    let ckpt = pol::serve::checkpoint::load(&model).expect("load checkpoint");
+    let queries: Vec<Vec<(u32, f32)>> = vec![
+        vec![(5, 1.0), (17, 0.5), (100, -2.0)],
+        vec![(0, 1.0)],
+        vec![(1000, 0.25), (2000, 0.25), (3000, 0.25), (4000, 0.25)],
+        vec![(262143, 3.5)], // top of the 2^18 hashed table
+    ];
+    let expected: Vec<f64> = queries.iter().map(|q| ckpt.predict(q)).collect();
+    let stdin_text: String = queries
+        .iter()
+        .map(|q| {
+            q.iter()
+                .map(|(i, v)| format!("{i}:{v}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+                + "\n"
+        })
+        .collect();
+    use std::io::Write;
+    let mut child = pol()
+        .args(["predict", "--model", model.to_str().unwrap()])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn pol predict");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(stdin_text.as_bytes())
+        .unwrap();
+    let out = child.wait_with_output().expect("pol predict");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let got: Vec<f64> = String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(|l| l.trim().parse().expect("prediction line"))
+        .collect();
+    assert_eq!(got.len(), expected.len());
+    for (g, e) in got.iter().zip(&expected) {
+        assert_eq!(g.to_bits(), e.to_bits(), "CLI {g} vs in-process {e}");
+    }
+
+    // 4. predict rejects an out-of-range index instead of crashing
+    let mut child = pol()
+        .args(["predict", "--model", model.to_str().unwrap()])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn pol predict");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(b"999999999:1.0\n")
+        .unwrap();
+    let out = child.wait_with_output().expect("pol predict");
+    assert!(!out.status.success());
+
+    std::fs::remove_file(&model).ok();
+}
+
+#[test]
+fn serve_reports_throughput() {
+    let dir = std::env::temp_dir().join("pol_cli_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("m.polz");
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "2000", "--rule", "local",
+            "--workers", "2", "--loss", "logistic",
+            "--checkpoint", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = pol()
+        .args([
+            "serve", "--model", model.to_str().unwrap(), "--threads", "2",
+            "--seconds", "0.3",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("qps="), "{text}");
+    assert!(text.contains("p99_us="), "{text}");
+    std::fs::remove_file(&model).ok();
+}
+
+#[test]
+fn checkpoint_rejects_garbage_file() {
+    let dir = std::env::temp_dir().join("pol_cli_garbage");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("garbage.polz");
+    std::fs::write(&path, b"not a checkpoint at all").unwrap();
+    let out = pol()
+        .args(["checkpoint", "--model", path.to_str().unwrap()])
+        .output()
+        .expect("run pol");
+    assert!(!out.status.success());
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
