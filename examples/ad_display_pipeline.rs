@@ -7,11 +7,11 @@
 //! Run: `cargo run --release --example ad_display_pipeline`
 
 use pol::config::{RunConfig, UpdateRule};
-use pol::coordinator::Coordinator;
 use pol::data::synth::ad_display::{AdDisplayConfig, AdDisplayGen};
 use pol::eval::policy;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
+use pol::model::Session;
 use pol::topology::Topology;
 
 fn main() {
@@ -40,8 +40,12 @@ fn main() {
         passes: 1,
         seed: 1,
     };
-    let mut c = Coordinator::new(cfg, corpus.dim);
-    let rep = c.train(&corpus.pairwise);
+    let mut session = Session::builder()
+        .config(cfg)
+        .dim(corpus.dim)
+        .build()
+        .expect("build session");
+    let rep = session.train(&corpus.pairwise).expect("train");
     println!(
         "training: progressive squared loss {:.4} (per-shard avg {:.4}, \
          final/shard ratio {:.3})",
@@ -52,7 +56,7 @@ fn main() {
 
     // element-wise offline policy evaluation: "show the ad the model
     // scores higher"
-    let value = policy::evaluate(|f| c.predict(f), &corpus.events);
+    let value = policy::evaluate(|f| session.predict(f), &corpus.events);
     println!(
         "policy eval: estimated CTR {:.4} (logging policy {:.4}, ground \
          truth of learned policy {:.4}, matched {}/{})",

@@ -22,7 +22,6 @@
 use pol::data::synth::ad_display::{AdDisplayConfig, AdDisplayGen};
 use pol::learner::node::NodeLearner;
 use pol::learner::sgd::Sgd;
-use pol::learner::OnlineLearner;
 use pol::linalg::SparseFeat;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;

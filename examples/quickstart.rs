@@ -1,6 +1,10 @@
 //! Quickstart: train a feature-sharded online learner on a synthetic
 //! RCV1-shaped stream and print progressive + test metrics.
 //!
+//! Every architecture is built through `Session::builder()` — swapping
+//! the sharded tree for the centralized SGD baseline is the one-line
+//! `.rule(...)` change at the bottom.
+//!
 //! Run: `cargo run --release --example quickstart`
 
 use pol::prelude::*;
@@ -20,18 +24,18 @@ fn main() {
 
     // 2. a two-layer feature-sharded architecture (Fig 0.4): 4 workers,
     //    no-delay local rule (§0.5.2)
-    let cfg = RunConfig {
-        topology: Topology::TwoLayer { shards: 4 },
-        rule: UpdateRule::Local,
-        loss: Loss::Logistic,
-        lr: LrSchedule::inv_sqrt(2.0, 10.0),
-        clip01: false,
-        ..Default::default()
-    };
-    let mut coordinator = Coordinator::new(cfg.clone(), train.dim);
+    let mut session = Session::builder()
+        .dim(train.dim)
+        .topology(Topology::TwoLayer { shards: 4 })
+        .rule(UpdateRule::Local)
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(2.0, 10.0))
+        .clip01(false)
+        .build()
+        .expect("build session");
 
     // 3. train (single pass, online)
-    let report = coordinator.train(&train);
+    let report = session.train(&train).expect("train");
     println!(
         "train: {} instances, progressive loss {:.4}, progressive acc {:.4}",
         report.instances,
@@ -41,19 +45,26 @@ fn main() {
 
     // 4. evaluate on held-out data
     let (loss, acc) = pol::metrics::test_metrics(
-        cfg.loss,
-        |x| coordinator.predict(x),
+        Loss::Logistic,
+        |x| session.predict(x),
         &test.instances,
     );
     println!("test:  loss {loss:.4}, acc {acc:.4}");
 
-    // 5. compare against centralized SGD (the Fig 0.6 baseline)
-    let sgd_cfg = RunConfig { rule: UpdateRule::Sgd, ..cfg };
-    let (rep, w) =
-        pol::coordinator::minibatch::train_weights(&sgd_cfg, &train, 1);
+    // 5. compare against centralized SGD (the Fig 0.6 baseline) — same
+    //    builder, one line changed
+    let mut sgd = Session::builder()
+        .dim(train.dim)
+        .rule(UpdateRule::Sgd)
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(2.0, 10.0))
+        .clip01(false)
+        .build()
+        .expect("build sgd session");
+    let rep = sgd.train(&train).expect("train sgd");
     let (sloss, sacc) = pol::metrics::test_metrics(
-        sgd_cfg.loss,
-        |x| pol::linalg::sparse_dot(&w, x),
+        Loss::Logistic,
+        |x| sgd.predict(x),
         &test.instances,
     );
     println!(

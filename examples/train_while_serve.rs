@@ -1,15 +1,18 @@
-//! Train-while-serve: the serving layer end-to-end.
+//! Train-while-serve: the serving layer end-to-end, multi-model.
 //!
 //! One thread trains a 4-shard feature-sharded model on a synthetic
-//! RCV1-shaped stream, publishing an immutable snapshot every 2048
-//! instances; four serving threads answer prediction requests against
-//! the latest snapshot the whole time. Readers see slightly *stale*
-//! weights — never torn ones — and every response reports how many
-//! instances behind it was (the delayed-read regime of *Slow Learners
-//! are Fast*).
+//! RCV1-shaped stream — built through `Session::builder()`, publishing
+//! an immutable snapshot every 2048 instances *and* writing a `.polz`
+//! checkpoint atomically in the background every 16384 — while a
+//! prediction server answers requests the whole time. The server hosts
+//! TWO models: the live-updating tree under "live", and a frozen
+//! centralized SGD baseline under "baseline", routed by name through
+//! one `ModelRegistry`. Readers see slightly *stale* weights — never
+//! torn ones — and every response reports how many instances behind it
+//! was (the delayed-read regime of *Slow Learners are Fast*).
 //!
-//! Afterwards the trained model is checkpointed to `.polz`, loaded
-//! back, and verified to predict bit-identically.
+//! Afterwards the background checkpoint is loaded back as a
+//! `dyn Model` and verified to predict bit-identically.
 //!
 //! Run: `cargo run --release --example train_while_serve`
 
@@ -17,7 +20,6 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use pol::prelude::*;
-use pol::serve::checkpoint;
 
 fn main() {
     // 1. data: RCV1-shaped stream (labels in {-1, +1})
@@ -30,31 +32,50 @@ fn main() {
     })
     .generate();
 
-    // 2. a 4-shard two-layer architecture with the local rule
-    let cfg = RunConfig {
-        topology: Topology::TwoLayer { shards: 4 },
-        rule: UpdateRule::Local,
-        loss: Loss::Logistic,
-        lr: LrSchedule::inv_sqrt(2.0, 1.0),
-        clip01: false,
-        ..Default::default()
-    };
-    let mut coord = Coordinator::new(cfg, ds.dim);
+    // 2. the frozen baseline: a centralized SGD table, trained up front
+    let mut baseline = Session::builder()
+        .dim(ds.dim)
+        .rule(UpdateRule::Sgd)
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+        .clip01(false)
+        .build()
+        .expect("build baseline");
+    baseline.train(&ds).expect("train baseline");
 
-    // 3. serving plumbing: snapshot cell + publisher (every 2048
-    //    instances) + 4 serving threads
-    let cell = SnapshotCell::new(coord.snapshot());
-    coord.set_publisher(SnapshotPublisher::new(Arc::clone(&cell), 2_048));
-    let server = PredictionServer::start(Arc::clone(&cell), 4);
+    // 3. the live model: a 4-shard two-layer tree with the local rule,
+    //    publishing every 2048 instances and background-checkpointing
+    //    every 16384 — all wired by the builder
+    let ckpt_path = std::env::temp_dir().join("train_while_serve.polz");
+    let mut session = Session::builder()
+        .dim(ds.dim)
+        .topology(Topology::TwoLayer { shards: 4 })
+        .rule(UpdateRule::Local)
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+        .clip01(false)
+        .publish_every(2_048)
+        .checkpoint_to(&ckpt_path)
+        .checkpoint_every(16_384)
+        .build()
+        .expect("build live session");
+
+    // 4. one server, two named models
+    let registry = ModelRegistry::new();
+    registry.insert("live", Arc::clone(session.cell().expect("cell")));
+    registry
+        .insert("baseline", SnapshotCell::new(baseline.model().snapshot()));
+    let server = PredictionServer::start(Arc::clone(&registry), 4);
     let done = AtomicBool::new(false);
 
     std::thread::scope(|s| {
         let trainer = s.spawn(|| {
-            let rep = coord.train(&ds);
+            let rep = session.train(&ds).expect("train");
             done.store(true, Ordering::Release);
             rep
         });
-        // request load: replay dataset rows as queries while training runs
+        // request load: replay dataset rows as queries while training
+        // runs, alternating between the two models
         for t in 0..4usize {
             let client = server.client();
             let done = &done;
@@ -64,20 +85,23 @@ fn main() {
                 let mut last = None;
                 let mut i = t * 97;
                 while !done.load(Ordering::Acquire) {
+                    let name = if i % 2 == 0 { "live" } else { "baseline" };
                     let x = ds.instances[i % ds.len()].features.clone();
-                    match client.predict(vec![x]) {
-                        Some(resp) => {
+                    match client.predict_for(name, vec![x]) {
+                        Ok(resp) => {
                             answered += 1;
-                            last = Some(resp);
+                            if resp.model == "live" {
+                                last = Some(resp);
+                            }
                         }
-                        None => break,
+                        Err(_) => break,
                     }
                     i += 1;
                 }
                 if let Some(resp) = last {
                     println!(
-                        "client {t}: {answered} requests answered; last against \
-                         snapshot v{} ({} instances behind)",
+                        "client {t}: {answered} requests answered; last live \
+                         answer against snapshot v{} ({} instances behind)",
                         resp.snapshot_version, resp.staleness
                     );
                 }
@@ -92,28 +116,40 @@ fn main() {
     });
     let stats = server.shutdown();
     println!(
-        "served {} predictions at {:.0}/s, p99 {:.1}us, max staleness {}",
+        "served {} predictions at {:.0}/s total, p99 {:.1}us, max staleness {}",
         stats.predictions,
         stats.qps(),
         stats.latency.quantile_ns(0.99) as f64 / 1e3,
         stats.max_staleness
     );
+    for (name, ms) in &stats.per_model {
+        println!(
+            "  {name}: {} predictions, {:.0}/s, max staleness {}",
+            ms.predictions,
+            ms.qps(stats.elapsed),
+            ms.max_staleness
+        );
+    }
 
-    // 4. checkpoint round-trip: save, load, verify identical predictions
-    let path = std::env::temp_dir().join("train_while_serve.polz");
-    checkpoint::save_coordinator(&coord, &path).expect("save checkpoint");
-    let back = checkpoint::load(&path).expect("load checkpoint");
+    // 5. the checkpoint written during/after training loads back as a
+    //    dyn Model and predicts bit-identically
+    let back = pol::model::load(&ckpt_path).expect("load checkpoint");
     let mut max_diff = 0.0f64;
     for inst in ds.iter().take(1_000) {
-        let a = coord.predict(&inst.features);
+        let a = registry
+            .get("live")
+            .expect("live cell")
+            .load()
+            .predict(&inst.features);
         let b = back.predict(&inst.features);
         max_diff = max_diff.max((a - b).abs());
     }
     println!(
-        "checkpoint round-trip: {:?} ({} bytes), max |Δpred| over 1000 rows = {max_diff:e}",
-        path,
-        std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0)
+        "checkpoint round-trip ({}): {:?} ({} bytes), max |Δpred| over 1000 rows = {max_diff:e}",
+        back.kind_name(),
+        ckpt_path,
+        std::fs::metadata(&ckpt_path).map(|m| m.len()).unwrap_or(0)
     );
     assert_eq!(max_diff, 0.0, "round-trip must be bit-identical");
-    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&ckpt_path).ok();
 }

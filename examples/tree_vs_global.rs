@@ -8,12 +8,12 @@
 //! Run: `cargo run --release --example tree_vs_global`
 
 use pol::config::{RunConfig, UpdateRule};
-use pol::coordinator::Coordinator;
 use pol::data::synth::{prop3, prop4};
 use pol::learner::naive_bayes::NaiveBayes;
 use pol::learner::OnlineLearner;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
+use pol::model::Session;
 use pol::rng::Rng;
 use pol::topology::Topology;
 
@@ -59,9 +59,13 @@ fn run_tree(
         passes: 1,
         seed: 0,
     };
-    let mut c = Coordinator::new(cfg, 3);
-    c.train(&ds);
-    mse_of(|f| c.predict(f), points)
+    let mut session = Session::builder()
+        .config(cfg)
+        .dim(3)
+        .build()
+        .expect("build session");
+    session.train(&ds).expect("train");
+    mse_of(|f| session.predict(f), points)
 }
 
 fn main() {

@@ -5,10 +5,10 @@
 #![allow(dead_code)]
 
 use pol::config::{RunConfig, UpdateRule};
-use pol::coordinator::Coordinator;
 use pol::data::Dataset;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
+use pol::model::Session;
 use pol::topology::Topology;
 
 /// Benches honour POL_BENCH_SCALE (default 1): instance counts multiply
@@ -48,12 +48,16 @@ pub fn eval_rule(
             passes,
             seed: 1,
         };
-        let mut c = Coordinator::new(cfg.clone(), ds.dim);
+        let mut session = Session::builder()
+            .config(cfg.clone())
+            .dim(ds.dim)
+            .build()
+            .expect("build session");
         let (train, test) = ds.clone().split_test(0.2);
-        c.train(&train);
+        session.train(&train).expect("train");
         let (loss, acc) = pol::metrics::test_metrics(
             cfg.loss,
-            |x| c.predict(x),
+            |x| session.predict(x),
             &test.instances,
         );
         if acc > best.0 {

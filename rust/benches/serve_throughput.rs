@@ -23,12 +23,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use pol::config::{RunConfig, UpdateRule};
-use pol::coordinator::Coordinator;
 use pol::data::synth::{RcvLikeGen, SynthConfig};
 use pol::data::Dataset;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
-use pol::serve::{PredictionServer, SnapshotCell, SnapshotPublisher};
+use pol::model::Session;
+use pol::serve::PredictionServer;
 use pol::topology::Topology;
 
 fn dataset(n: usize) -> Dataset {
@@ -56,17 +56,21 @@ fn cfg() -> RunConfig {
 /// One measured configuration: train a full pass while `threads`
 /// serving threads hammer single-instance predicts.
 fn run(ds: &Dataset, cadence: u64, threads: usize) {
-    let mut coord = Coordinator::new(cfg(), ds.dim);
-    let cell = SnapshotCell::new(coord.snapshot());
-    coord.set_publisher(SnapshotPublisher::new(Arc::clone(&cell), cadence));
-    let server = PredictionServer::start(Arc::clone(&cell), threads);
+    let mut session = Session::builder()
+        .config(cfg())
+        .dim(ds.dim)
+        .publish_every(cadence)
+        .build()
+        .expect("build session");
+    let cell = Arc::clone(session.cell().expect("publishing wired"));
+    let server = PredictionServer::single(cell, threads);
     let done = AtomicBool::new(false);
 
     let mut train_ms = 0u128;
     std::thread::scope(|s| {
         let trainer = s.spawn(|| {
             let t0 = std::time::Instant::now();
-            coord.train(ds);
+            session.train(ds).expect("train");
             done.store(true, Ordering::Release);
             t0.elapsed().as_millis()
         });
@@ -110,9 +114,13 @@ fn main() {
     );
 
     // baseline: the same training pass with no serving load
-    let mut coord = Coordinator::new(cfg(), ds.dim);
+    let mut baseline = Session::builder()
+        .config(cfg())
+        .dim(ds.dim)
+        .build()
+        .expect("build baseline");
     let t0 = std::time::Instant::now();
-    coord.train(&ds);
+    baseline.train(&ds).expect("train");
     println!("baseline train_ms={}", t0.elapsed().as_millis());
 
     println!(

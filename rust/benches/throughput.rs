@@ -9,7 +9,6 @@ use pol::data::parser::{Parser, ParserConfig};
 use pol::data::synth::{RcvLikeGen, SynthConfig};
 use pol::hashing::FeatureHasher;
 use pol::learner::sgd::Sgd;
-use pol::learner::OnlineLearner;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
 

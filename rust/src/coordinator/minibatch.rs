@@ -129,7 +129,6 @@ mod tests {
 
     #[test]
     fn batch_one_equals_sgd_learner() {
-        use crate::learner::OnlineLearner;
         let d = ds();
         let (_, w) = train_weights(&cfg(), &d, 1);
         let mut sgd = crate::learner::sgd::Sgd::new(

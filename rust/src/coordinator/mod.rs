@@ -27,8 +27,12 @@ use crate::data::Dataset;
 use crate::learner::node::NodeLearner;
 use crate::linalg::SparseFeat;
 use crate::metrics::ProgressiveValidator;
+use crate::serve::checkpoint::CheckpointSink;
 use crate::serve::publisher::SnapshotPublisher;
-use crate::serve::snapshot::{ModelSnapshot, SnapshotModel};
+use crate::serve::snapshot::{
+    CentralPredictor, ModelSnapshot, PredictScratch, SnapshotPredict,
+    TreePredictor,
+};
 use crate::sharding::feature::FeatureSharder;
 use crate::topology::NodeGraph;
 use schedule::{DelaySchedule, Op};
@@ -88,6 +92,9 @@ pub struct Coordinator {
     /// Optional serving hook: publishes an immutable [`ModelSnapshot`]
     /// every K trained instances ([`crate::serve`]).
     publisher: Option<SnapshotPublisher>,
+    /// Optional durability hook: writes a `.polz` checkpoint atomically
+    /// every K trained instances ([`crate::serve::checkpoint`]).
+    ckpt_sink: Option<CheckpointSink>,
 }
 
 impl Coordinator {
@@ -124,6 +131,7 @@ impl Coordinator {
             dim,
             trained: 0,
             publisher: None,
+            ckpt_sink: None,
         }
     }
 
@@ -209,46 +217,93 @@ impl Coordinator {
         self.publisher.take()
     }
 
+    /// Install the durability hook: write a `.polz` checkpoint
+    /// atomically every `sink.every()` trained instances while training
+    /// runs. The cadence is re-armed from the current stream position.
+    pub fn set_checkpoint_sink(&mut self, mut sink: CheckpointSink) {
+        sink.arm(self.trained);
+        self.ckpt_sink = Some(sink);
+    }
+
+    /// Remove (and return) the durability hook.
+    pub fn take_checkpoint_sink(&mut self) -> Option<CheckpointSink> {
+        self.ckpt_sink.take()
+    }
+
     /// Build an immutable serving snapshot of the current weights.
+    ///
+    /// This is constructor-side dispatch over the coordinator's own
+    /// representation (flat table for the centralized rules, node tree
+    /// otherwise); everything downstream consumes the snapshot through
+    /// [`SnapshotPredict`] trait calls.
     pub fn snapshot(&self) -> ModelSnapshot {
         let digest = crate::serve::checkpoint::config_digest(
             &self.cfg.to_cfg_string(),
             self.dim as u64,
             self.sharder_signature(),
         );
-        let model = match &self.central_w {
-            Some(w) => SnapshotModel::Central { w: w.clone() },
-            None => SnapshotModel::Tree {
+        let predictor: std::sync::Arc<dyn SnapshotPredict> = match &self.central_w
+        {
+            Some(w) => std::sync::Arc::new(CentralPredictor { w: w.clone() }),
+            None => std::sync::Arc::new(TreePredictor {
                 graph: self.graph.clone(),
                 sharder: self.sharder.clone(),
                 weights: self.nodes.iter().map(|n| n.weights().to_vec()).collect(),
                 clip01: self.cfg.clip01,
                 bias: self.cfg.bias,
-            },
+            }),
         };
-        ModelSnapshot {
-            version: 0,
-            trained_instances: self.trained,
-            config_digest: digest,
-            model,
+        ModelSnapshot::from_predictor(predictor, self.trained, digest)
+    }
+
+    /// Serving/durability hooks, called once per trained instance:
+    /// heartbeat the stream position, publish a snapshot when the
+    /// publisher cadence is due, and hand a serialized checkpoint to
+    /// the sink's background writer when its cadence is due. Each hook
+    /// is briefly taken out of `self` so snapshot/checkpoint
+    /// construction can borrow the coordinator immutably. `force`
+    /// publishes regardless of cadence (end-of-run snapshots); the sink
+    /// is cadence-only — end-of-run durability is the session's final
+    /// save, so the same bytes are never written twice.
+    #[inline]
+    fn hooks_tick(&mut self, force: bool) {
+        if self.publisher.is_none() && self.ckpt_sink.is_none() {
+            return;
+        }
+        if let Some(mut p) = self.publisher.take() {
+            if p.tick(self.trained) || force {
+                p.publish(self.snapshot());
+            }
+            self.publisher = Some(p);
+        }
+        if let Some(mut s) = self.ckpt_sink.take() {
+            if s.tick(self.trained) {
+                // serialize here (the weights are only stable on this
+                // thread); the file write + fsync happen on the sink's
+                // writer thread, off the training loop
+                let mut bytes = Vec::new();
+                match crate::serve::checkpoint::write_coordinator(
+                    self, &mut bytes,
+                ) {
+                    Ok(()) => s.write_async(self.trained, bytes),
+                    Err(e) => {
+                        s.arm(self.trained);
+                        eprintln!(
+                            "background checkpoint serialization failed: {e}"
+                        );
+                    }
+                }
+            }
+            self.ckpt_sink = Some(s);
         }
     }
 
-    /// Publisher hook, called once per trained instance: heartbeat the
-    /// stream position, and build + publish a snapshot when due. The
-    /// publisher is briefly taken out of `self` so snapshot construction
-    /// can borrow the coordinator immutably. `force` publishes
-    /// regardless of the cadence (end-of-run snapshots).
-    #[inline]
-    fn publish_if(&mut self, force: bool) {
-        if self.publisher.is_none() {
-            return;
+    /// Wait for any in-flight background checkpoint write to land
+    /// (callers about to read or replace the checkpoint file).
+    pub fn flush_checkpoints(&mut self) {
+        if let Some(sink) = self.ckpt_sink.as_mut() {
+            sink.flush();
         }
-        let mut p = self.publisher.take().expect("publisher present");
-        if p.tick(self.trained) || force {
-            p.publish(self.snapshot());
-        }
-        self.publisher = Some(p);
     }
 
     /// Pass a prediction upward, optionally clipped to [0,1]
@@ -450,34 +505,155 @@ impl Coordinator {
     }
 
     /// Predict with the current weights (no learning) — test-set path.
+    /// Allocates fresh scratch; batch callers should hold a
+    /// [`PredictScratch`] and use [`Self::predict_with`].
     pub fn predict(&self, features: &[SparseFeat]) -> f64 {
+        let mut scratch = PredictScratch::default();
+        self.predict_with(features, &mut scratch)
+    }
+
+    /// Predict with caller-owned scratch (allocation-free after the
+    /// first call): the [`crate::model::Model::predict_batch`] hot path.
+    /// Tree traversal goes through the same
+    /// [`crate::serve::snapshot::tree_predict_with`] walk the serving
+    /// predictor uses, so training-side and serving-side combine
+    /// semantics cannot drift.
+    pub fn predict_with(
+        &self,
+        features: &[SparseFeat],
+        s: &mut PredictScratch,
+    ) -> f64 {
         if let Some(w) = &self.central_w {
             return crate::linalg::sparse_dot(w, features);
         }
-        let mut preds = vec![0.0f64; self.graph.num_nodes()];
-        let mut parts: Vec<Vec<SparseFeat>> = vec![Vec::new(); self.graph.leaves];
-        let inst = crate::data::instance::Instance::new(0.0, features.to_vec());
-        self.sharder.split_into(&inst, &mut parts);
-        for leaf in 0..self.graph.leaves {
-            preds[leaf] = self.nodes[leaf].predict(&parts[leaf]);
+        crate::serve::snapshot::tree_predict_with(
+            &self.graph,
+            &self.sharder,
+            self.cfg.clip01,
+            self.cfg.bias,
+            features,
+            s,
+            |id, row| self.nodes[id].predict(row),
+        )
+    }
+
+    /// Bounds-checked predict for *untrusted* request features — the
+    /// [`crate::model::Model::predict`] surface. Out-of-range feature
+    /// indices contribute nothing instead of touching memory out of
+    /// bounds (unlike [`Self::predict`], whose unchecked dot assumes
+    /// in-range training/test inputs). In-range inputs score
+    /// bit-identically to [`Self::predict`].
+    pub fn predict_request(
+        &self,
+        features: &[SparseFeat],
+        s: &mut PredictScratch,
+    ) -> f64 {
+        if let Some(w) = &self.central_w {
+            return crate::serve::snapshot::request_dot(w, features);
         }
-        for id in self.graph.leaves..self.graph.num_nodes() {
-            let kids = &self.graph.children[id];
-            let mut x: Vec<SparseFeat> = Vec::with_capacity(kids.len() + 1);
-            for (rank, &c) in kids.iter().enumerate() {
-                x.push((rank as u32, self.upward(preds[c]) as f32));
+        crate::serve::snapshot::tree_predict_with(
+            &self.graph,
+            &self.sharder,
+            self.cfg.clip01,
+            self.cfg.bias,
+            features,
+            s,
+            // leaves consume the untrusted indices; internal rows are
+            // built in-walk, so the unchecked node dot is safe there
+            |id, row| {
+                if self.graph.is_leaf(id) {
+                    crate::serve::snapshot::request_dot(
+                        self.nodes[id].weights(),
+                        row,
+                    )
+                } else {
+                    self.nodes[id].predict(row)
+                }
+            },
+        )
+    }
+
+    /// One *streaming* learning step — the [`crate::model::Model`]
+    /// entry point for callers that feed instances one at a time
+    /// instead of handing over a whole [`Dataset`]. Returns the
+    /// pre-feedback prediction for the instance (progressive
+    /// validation semantics).
+    ///
+    /// Semantics per rule family:
+    /// * **Local** — identical to the scheduled path: forward sweep +
+    ///   local updates, no feedback phase (bit-identical to
+    ///   [`Self::train`] over the same stream).
+    /// * **DelayedGlobal / Corrective / Backprop** — the τ-delay regime
+    ///   in steady state: the instance's forward pass runs now and its
+    ///   global feedback is applied once τ further instances have
+    ///   arrived. Feedback still in flight can be forced with
+    ///   [`Self::flush_feedback`].
+    /// * **Minibatch / CG / SGD** — the centralized trainers own their
+    ///   batch loops, which do not exist in streaming form; a streaming
+    ///   step degenerates to the paper's SGD baseline (b = 1) on the
+    ///   flat central table.
+    pub fn learn_one(&mut self, features: &[SparseFeat], label: f64) -> f64 {
+        let yhat = match self.cfg.rule {
+            UpdateRule::Minibatch { .. } | UpdateRule::Cg { .. } | UpdateRule::Sgd => {
+                let dim = self.dim;
+                let w =
+                    self.central_w.get_or_insert_with(|| vec![0.0f32; dim]);
+                let yhat = crate::linalg::sparse_dot(w, features);
+                let g = self.cfg.loss.dloss(yhat, label);
+                let eta = self.cfg.lr.eta(self.trained + 1);
+                crate::linalg::sparse_saxpy(w, -(eta * g), features);
+                yhat
             }
-            if self.cfg.bias {
-                x.push((kids.len() as u32, 1.0));
+            UpdateRule::Local => self.forward_local(features, label),
+            _ => {
+                let pend = self.forward(features, label);
+                let yhat = pend.final_pred;
+                self.pending.push_back(pend);
+                // instance t's feedback lands once τ further instances
+                // have arrived (the §0.6.6 steady-state delay)
+                while self.pending.len() as u64 > self.cfg.tau {
+                    let p = self.pending.pop_front().expect("pending non-empty");
+                    self.feedback(p);
+                }
+                yhat
             }
-            preds[id] = self.nodes[id].predict(&x);
+        };
+        self.trained += 1;
+        self.hooks_tick(false);
+        yhat
+    }
+
+    /// Apply every delayed global update still in flight (streaming
+    /// [`Self::learn_one`] callers, end of stream).
+    pub fn flush_feedback(&mut self) {
+        while let Some(p) = self.pending.pop_front() {
+            self.feedback(p);
         }
-        preds[self.graph.root]
     }
 
     /// Run the full τ-scheduled training over the dataset (with
     /// `cfg.passes` passes). Centralized rules dispatch out.
+    ///
+    /// The centralized trainers (Minibatch/CG/SGD) are *batch fits*:
+    /// they always optimize from zero weights over the dataset they are
+    /// given — there is no warm continuation of a previous central
+    /// table. Calling `train` on a centralized coordinator that already
+    /// holds state (a warm-started checkpoint or prior
+    /// [`Self::learn_one`] steps) therefore refits from scratch; that
+    /// is announced on stderr, and [`Self::trained_instances`] reports
+    /// the instances behind the *current* weights, never a mixed count.
     pub fn train(&mut self, ds: &Dataset) -> TrainReport {
+        if self.cfg.rule.worker_invariant()
+            && self.central_w.is_some()
+            && self.trained > 0
+        {
+            eprintln!(
+                "warning: centralized rule '{}' refits from zero weights; \
+                 discarding existing central table ({} trained instances)",
+                self.cfg.rule.name(),
+                self.trained
+            );
+        }
         match self.cfg.rule {
             UpdateRule::Minibatch { batch } => {
                 let (rep, w) = minibatch::train_weights(&self.cfg, ds, batch);
@@ -526,7 +702,7 @@ impl Coordinator {
                         self.pending.push_back(pend);
                     }
                     self.trained += 1;
-                    self.publish_if(false);
+                    self.hooks_tick(false);
                 }
                 Op::Global(_) => {
                     if self.cfg.rule != UpdateRule::Local {
@@ -536,6 +712,14 @@ impl Coordinator {
                     }
                 }
             }
+        }
+        // The schedule's trailing Global ops applied feedback *after*
+        // the last possible cadence publish (which fires during Local
+        // ops), so feedback rules must re-publish the final weights —
+        // otherwise a cell whose cadence divides the stream length
+        // would serve weights missing the last τ updates forever.
+        if self.cfg.rule != UpdateRule::Local {
+            self.hooks_tick(true);
         }
         TrainReport {
             progressive,
@@ -548,10 +732,12 @@ impl Coordinator {
     /// Shared tail of the centralized-rule dispatch: account the
     /// instances and publish one post-training snapshot (the
     /// centralized trainers own the loop, so mid-run cadence does not
-    /// apply to them).
+    /// apply to them). The counter is *assigned*, not accumulated: a
+    /// centralized fit replaces the weights wholesale, so the stream
+    /// position of the current table is exactly this run's instances.
     fn finish_central(&mut self, rep: TrainReport) -> TrainReport {
-        self.trained += rep.instances;
-        self.publish_if(true);
+        self.trained = rep.instances;
+        self.hooks_tick(true);
         rep
     }
 
@@ -634,7 +820,6 @@ mod tests {
         // shard count 1: the leaf sees every feature, so its progressive
         // predictions must equal a plain SGD run (Fig 0.5: "the solution
         // on that shard is identical to the single node solution").
-        use crate::learner::OnlineLearner;
         let ds = small_ds();
         let mut c = Coordinator::new(cfg(UpdateRule::Local, 1), ds.dim);
         let mut sgd = crate::learner::sgd::Sgd::new(

@@ -195,7 +195,6 @@ impl MulticoreTrainer {
 mod tests {
     use super::*;
     use crate::data::synth::{RcvLikeGen, SynthConfig};
-    use crate::learner::OnlineLearner;
 
     fn ds() -> Dataset {
         RcvLikeGen::new(SynthConfig {

@@ -65,7 +65,6 @@ pub fn sgd_regret(
     lr: crate::lr::LrSchedule,
 ) -> f64 {
     let mut sgd = crate::learner::sgd::Sgd::new(ds.dim, loss, lr);
-    use crate::learner::OnlineLearner;
     let (reg, _) = run_and_regret(ds, loss, 1e-9, |x, y| {
         let yhat = sgd.predict(x);
         sgd.learn(x, y);

@@ -50,8 +50,15 @@ pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
 /// FNV-1a 64-bit — the checkpoint format's digest/checksum hash (stable,
 /// dependency-free, byte-order independent).
 pub fn fnv1a64(data: &[u8]) -> u64 {
+    fnv1a64_iter(data.iter().copied())
+}
+
+/// FNV-1a 64-bit over an arbitrary byte stream — lets callers hash
+/// logically concatenated regions (e.g. a header byte ‖ a payload)
+/// without materializing the concatenation.
+pub fn fnv1a64_iter(bytes: impl IntoIterator<Item = u8>) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for &b in data {
+    for b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }

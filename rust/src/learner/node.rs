@@ -7,7 +7,6 @@
 //! type only guarantees each primitive is a correct gradient step.
 
 use crate::learner::sgd::Sgd;
-use crate::learner::OnlineLearner;
 use crate::linalg::SparseFeat;
 use crate::loss::Loss;
 use crate::lr::LrSchedule;

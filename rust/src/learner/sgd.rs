@@ -45,32 +45,58 @@ impl Sgd {
     pub fn reset_clock(&mut self) {
         self.t = 0;
     }
-}
 
-impl OnlineLearner for Sgd {
+    // The predict/learn bodies live as inherent methods (not only on
+    // the traits) so a concrete `Sgd` resolves calls unambiguously even
+    // with both `OnlineLearner` and `crate::model::Model` in scope —
+    // inherent methods win method resolution.
+
+    /// ŷ = ⟨w, x⟩ with the current weights.
     #[inline]
-    fn predict(&self, x: &[SparseFeat]) -> f64 {
+    pub fn predict(&self, x: &[SparseFeat]) -> f64 {
         sparse_dot(&self.w, x)
     }
 
+    /// One gradient step on (x, y) at the learner's own clock.
     #[inline]
-    fn learn(&mut self, x: &[SparseFeat], y: f64) {
+    pub fn learn(&mut self, x: &[SparseFeat], y: f64) {
         let yhat = sparse_dot(&self.w, x);
         let g = self.loss.dloss(yhat, y);
-        self.t += 1;
-        let eta = self.lr.eta(self.t);
-        sparse_saxpy(&mut self.w, -eta * g, x);
+        self.learn_with_gradient(x, g);
     }
 
+    /// Gradient step with an externally supplied dℓ/dŷ scale.
     #[inline]
-    fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64) {
+    pub fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64) {
         self.t += 1;
         let eta = self.lr.eta(self.t);
         sparse_saxpy(&mut self.w, -eta * gscale, x);
     }
 
-    fn steps(&self) -> u64 {
+    /// Number of `learn*` calls so far (the t in η_t).
+    pub fn steps(&self) -> u64 {
         self.t
+    }
+}
+
+impl OnlineLearner for Sgd {
+    #[inline]
+    fn predict(&self, x: &[SparseFeat]) -> f64 {
+        Sgd::predict(self, x)
+    }
+
+    #[inline]
+    fn learn(&mut self, x: &[SparseFeat], y: f64) {
+        Sgd::learn(self, x, y)
+    }
+
+    #[inline]
+    fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64) {
+        Sgd::learn_with_gradient(self, x, gscale)
+    }
+
+    fn steps(&self) -> u64 {
+        Sgd::steps(self)
     }
 }
 

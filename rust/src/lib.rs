@@ -9,6 +9,44 @@
 //! (Figures 0.5/0.6, Table 0.1, Propositions 3/4, Theorem-1 delay-regret
 //! sweeps, the §0.5.1 multicore path).
 //!
+//! ## One trait, every architecture
+//!
+//! The paper's architectures trade off delay, parallelism, and
+//! representation power; [`model`] makes swapping them a one-line
+//! change. Every trainable predictor — plain [`learner::sgd::Sgd`],
+//! centralized coordinators, full sharded trees — implements the
+//! object-safe [`model::Model`] trait (predict, scratch-reusing batch
+//! predict, streaming learn, dataset training, serving snapshots,
+//! `.polz` serialization), and [`model::Session::builder`] is the one
+//! construction path the CLI, examples, and benches use. Model-kind
+//! branching exists in exactly one place: the checkpoint codec
+//! ([`serve::checkpoint`]), where bytes become trait objects.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pol::prelude::*;
+//!
+//! let ds = RcvLikeGen::new(SynthConfig {
+//!     instances: 10_000, features: 1_000, ..Default::default()
+//! }).generate();
+//! let mut session = Session::builder()
+//!     .dim(ds.dim)
+//!     .topology(Topology::TwoLayer { shards: 4 })
+//!     .rule(UpdateRule::Local)           // ← swap architectures here
+//!     .loss(Loss::Logistic)
+//!     .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+//!     .clip01(false)
+//!     .build()
+//!     .expect("build session");
+//! let report = session.train(&ds).expect("train");
+//! println!(
+//!     "progressive loss {:.4}, acc {:.4}",
+//!     report.progressive.mean_loss(),
+//!     report.progressive.accuracy()
+//! );
+//! ```
+//!
 //! ## Three-layer architecture (+ the serving layer)
 //!
 //! * **L3 (this crate)** — the coordinator: data pipeline, feature
@@ -28,34 +66,16 @@
 //! dedicated executor threads.
 //!
 //! On top of L3 sits **[`serve`]**, the production half: versioned
-//! `.polz` checkpoints that round-trip any trained topology
-//! bit-identically and warm-start training, plus a train-while-serve
-//! prediction server — the coordinator publishes an immutable
-//! [`serve::ModelSnapshot`] every K instances through a
-//! [`serve::SnapshotPublisher`], and N serving threads answer batched
-//! predict requests against the latest snapshot without blocking the
-//! training loop, recording instances-behind staleness, latency
-//! histograms, and QPS. See `pol checkpoint`, `pol serve`, and
-//! `pol predict` in the CLI, `benches/serve_throughput.rs`, and
-//! `examples/train_while_serve.rs`.
-//!
-//! ## Quickstart
-//!
-//! ```no_run
-//! use pol::prelude::*;
-//!
-//! let ds = RcvLikeGen::new(SynthConfig {
-//!     instances: 10_000, features: 1_000, ..Default::default()
-//! }).generate();
-//! let mut learner = Sgd::new(1 << 18, Loss::Squared, LrSchedule::inv_sqrt(0.5, 1.0));
-//! let mut pv = ProgressiveValidator::new();
-//! for inst in ds.iter() {
-//!     let yhat = learner.predict(&inst.features);
-//!     pv.observe(yhat, inst.label);
-//!     learner.learn(&inst.features, inst.label);
-//! }
-//! println!("progressive squared loss = {}", pv.mean_loss());
-//! ```
+//! `.polz` checkpoints (format v2 adds zero-run compression and atomic
+//! background writes) that round-trip any trained topology
+//! bit-identically and warm-start training, plus multi-model
+//! train-while-serve — a [`serve::ModelRegistry`] of named
+//! [`serve::SnapshotCell`]s behind one [`serve::PredictionServer`], so
+//! several architectures serve side by side with per-model
+//! staleness/latency/QPS metrics while their trainers keep publishing.
+//! See `pol train --checkpoint-every`, `pol serve` (repeatable
+//! `--model name=path`), and `pol predict` in the CLI,
+//! `benches/serve_throughput.rs`, and `examples/train_while_serve.rs`.
 
 pub mod config;
 pub mod coordinator;
@@ -68,6 +88,7 @@ pub mod linalg;
 pub mod loss;
 pub mod lr;
 pub mod metrics;
+pub mod model;
 pub mod net;
 pub mod rng;
 pub mod runtime;
@@ -90,16 +111,17 @@ pub mod prelude {
     pub use crate::learner::delayed::DelayedSgd;
     pub use crate::learner::naive_bayes::NaiveBayes;
     pub use crate::learner::node::NodeLearner;
-    pub use crate::learner::OnlineLearner;
     pub use crate::learner::sgd::Sgd;
+    pub use crate::learner::OnlineLearner;
     pub use crate::loss::Loss;
     pub use crate::lr::LrSchedule;
     pub use crate::metrics::ProgressiveValidator;
+    pub use crate::model::{Model, Session, SessionBuilder};
     pub use crate::net::{LinkSpec, SimNetwork};
     pub use crate::rng::Rng;
     pub use crate::serve::{
-        ModelSnapshot, PredictClient, PredictionServer, SnapshotCell,
-        SnapshotPublisher,
+        ModelRegistry, ModelSnapshot, PredictClient, PredictionServer,
+        SnapshotCell, SnapshotPublisher,
     };
     pub use crate::topology::Topology;
 }

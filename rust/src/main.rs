@@ -1,29 +1,34 @@
 //! `pol` — the launcher.
 //!
 //! Subcommands:
-//!   train            run a coordinator configuration over a dataset
+//!   train            run a session configuration over a dataset
 //!   checkpoint       inspect/verify a `.polz` model checkpoint
-//!   serve            serve a checkpointed model from N threads
+//!   serve            serve one or more checkpointed models from N threads
 //!   predict          answer predictions from stdin against a checkpoint
 //!   bench-data       generate + describe the Table 0.1 datasets
 //!   inspect          feature-hashing collision statistics
 //!   artifacts-check  load every AOT artifact and smoke-execute one
 //!
-//! Flags are `--key value`; `pol <cmd> --help` lists them. A config file
-//! (`--config path`, flat `key = value`) provides defaults that flags
-//! override.
+//! Flags are `--key value`; `pol <cmd> --help` lists them. Unknown or
+//! misspelled flags are rejected with a non-zero exit, never silently
+//! ignored. A config file (`--config path`, flat `key = value`)
+//! provides defaults that flags override.
+//!
+//! Every subcommand works through the [`pol::model::Model`] trait —
+//! models are built by [`Session::builder`] or loaded as trait objects
+//! by [`pol::model::load`]; nothing here branches on model kind.
 
 use std::sync::Arc;
 
 use pol::config::{RunConfig, UpdateRule};
-use pol::coordinator::Coordinator;
 use pol::data::synth::{AdDisplayGen, RcvLikeGen, SynthConfig, WebspamLikeGen};
 use pol::data::Dataset;
 use pol::linalg::SparseFeat;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
+use pol::model::Session;
 use pol::rng::Rng;
-use pol::serve::{checkpoint, PredictionServer, SnapshotCell};
+use pol::serve::{checkpoint, ModelRegistry, PredictionServer, SnapshotCell};
 use pol::topology::Topology;
 
 fn main() {
@@ -37,7 +42,7 @@ fn main() {
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("artifacts-check") => cmd_artifacts_check(&args[1..]),
         Some("--help") | Some("-h") | None => {
-            print!("{}", HELP);
+            print!("{HELP}");
             0
         }
         Some(other) => {
@@ -54,19 +59,21 @@ pol — Parallel Online Learning (Hsu, Karampatziakis, Langford, Smola 2011)
 USAGE: pol <command> [--key value ...]
 
 COMMANDS:
-  train            train a configuration
+  train            train a configuration (Session::builder under the hood)
                    --data rcv|webspam|ad   --rule local|delayed-global|
                    corrective|backprop[:m]|minibatch[:b]|cg[:b]|sgd
                    --workers N  --passes P  --tau T  --lambda L  --t0 T0
                    --loss squared|logistic  --instances N  --seed S
-                   --topology two-layer|binary-tree  --config FILE
+                   --topology two-layer|binary-tree|kary  --config FILE
                    --checkpoint OUT.polz  (save the trained model)
+                   --checkpoint-every N   (background checkpoint cadence)
   checkpoint       inspect + integrity-check a .polz checkpoint
                    --model PATH
-  serve            load a checkpoint and serve it from N threads under a
-                   synthetic request load, reporting QPS / latency
-                   --model PATH  --threads N  --seconds S  --batch B
-                   --density D  --seed S
+  serve            load checkpoints and serve them from N threads under a
+                   synthetic request load, reporting per-model QPS/latency
+                   --model [NAME=]PATH  (repeatable: N models, one server)
+                   --threads N  --seconds S  --batch B  --density D
+                   --seed S
   predict          one prediction per stdin line ('idx:val idx:val ...',
                    pre-hashed indices) against a checkpoint
                    --model PATH
@@ -74,163 +81,323 @@ COMMANDS:
                    [--full]  (paper-scale shapes; default is scaled down)
   inspect          hashing collision stats   --bits B  --uniques N
   artifacts-check  compile-check all AOT artifacts (needs `make artifacts`)
+                   --dir DIR
 ";
 
-fn flag(args: &[String], key: &str) -> Option<String> {
-    args.iter()
-        .position(|a| a == key)
-        .and_then(|i| args.get(i + 1))
-        .cloned()
+/// Parsed `--key value` / `--switch` arguments for one subcommand.
+struct Flags {
+    values: Vec<(String, String)>,
+    switches: Vec<String>,
 }
 
-fn has(args: &[String], key: &str) -> bool {
-    args.iter().any(|a| a == key)
+impl Flags {
+    /// Last occurrence wins (flags override config-file defaults, later
+    /// flags override earlier ones).
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Every occurrence, in order (repeatable flags like `serve
+    /// --model`).
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.values
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
 }
 
-fn make_dataset(name: &str, instances: usize, seed: u64) -> Dataset {
+/// Strict flag parsing: every token must be a known `--flag`; unknown
+/// or misspelled flags (and stray positional arguments) are errors, not
+/// silently ignored. `--help` is accepted by every subcommand.
+fn parse_flags(
+    cmd: &str,
+    args: &[String],
+    value_keys: &[&str],
+    switch_keys: &[&str],
+) -> Result<Flags, String> {
+    let mut flags = Flags { values: Vec::new(), switches: Vec::new() };
+    let mut i = 0;
+    while i < args.len() {
+        let tok = args[i].as_str();
+        if !tok.starts_with("--") {
+            return Err(format!(
+                "{cmd}: unexpected argument '{tok}' (flags are --key value)"
+            ));
+        }
+        if tok == "--help" || switch_keys.contains(&tok) {
+            flags.switches.push(tok.to_string());
+            i += 1;
+        } else if value_keys.contains(&tok) {
+            let Some(val) = args.get(i + 1) else {
+                return Err(format!("{cmd}: flag {tok} needs a value"));
+            };
+            flags.values.push((tok.to_string(), val.clone()));
+            i += 2;
+        } else {
+            let mut known: Vec<&str> = value_keys
+                .iter()
+                .chain(switch_keys.iter())
+                .copied()
+                .collect();
+            known.sort_unstable();
+            return Err(format!(
+                "{cmd}: unknown flag '{tok}' (valid: {})",
+                known.join(", ")
+            ));
+        }
+    }
+    Ok(flags)
+}
+
+/// Strictly parse an optional flag value; a present-but-malformed value
+/// is an error, never a silent default.
+fn parsed<T: std::str::FromStr>(
+    cmd: &str,
+    flags: &Flags,
+    key: &str,
+) -> Result<Option<T>, String> {
+    match flags.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| format!("{cmd}: bad value '{v}' for {key}")),
+    }
+}
+
+fn usage_error(e: &str) -> i32 {
+    eprintln!("{e}");
+    eprintln!("run `pol --help` for usage");
+    2
+}
+
+fn make_dataset(name: &str, instances: usize, seed: u64) -> Result<Dataset, String> {
     match name {
-        "rcv" => RcvLikeGen::new(SynthConfig {
+        "rcv" => Ok(RcvLikeGen::new(SynthConfig {
             instances,
             features: 23_000,
             density: 75,
             seed,
             ..Default::default()
         })
-        .generate(),
-        "webspam" => WebspamLikeGen::new(SynthConfig {
+        .generate()),
+        "webspam" => Ok(WebspamLikeGen::new(SynthConfig {
             instances,
             features: 50_000,
             density: 150,
             seed,
             ..Default::default()
         })
-        .generate(),
-        "ad" => {
-            AdDisplayGen::new(pol::data::synth::ad_display::AdDisplayConfig {
+        .generate()),
+        "ad" => Ok(AdDisplayGen::new(
+            pol::data::synth::ad_display::AdDisplayConfig {
                 events: instances,
                 seed,
                 ..Default::default()
-            })
-            .generate()
-            .pairwise
-        }
-        other => {
-            eprintln!("unknown dataset '{other}', using rcv");
-            make_dataset("rcv", instances, seed)
-        }
+            },
+        )
+        .generate()
+        .pairwise),
+        other => Err(format!(
+            "train: unknown dataset '{other}' (valid: rcv, webspam, ad)"
+        )),
     }
 }
 
-fn cmd_train(args: &[String]) -> i32 {
-    let mut cfg = match flag(args, "--config") {
-        Some(path) => match std::fs::read_to_string(&path)
-            .map_err(|e| e.to_string())
-            .and_then(|t| RunConfig::from_str_cfg(&t))
-        {
-            Ok(c) => c,
-            Err(e) => {
-                eprintln!("config error: {e}");
-                return 2;
-            }
-        },
+fn train_config(fl: &Flags) -> Result<RunConfig, String> {
+    let mut cfg = match fl.get("--config") {
+        Some(path) => std::fs::read_to_string(path)
+            .map_err(|e| format!("train: config {path}: {e}"))
+            .and_then(|t| {
+                RunConfig::from_str_cfg(&t)
+                    .map_err(|e| format!("train: config {path}: {e}"))
+            })?,
         None => RunConfig::default(),
     };
-    if let Some(r) = flag(args, "--rule") {
-        match UpdateRule::parse(&r) {
-            Some(rule) => cfg.rule = rule,
-            None => {
-                eprintln!("bad --rule {r}");
-                return 2;
-            }
-        }
+    if let Some(r) = fl.get("--rule") {
+        cfg.rule = UpdateRule::parse(r)
+            .ok_or_else(|| format!("train: bad --rule '{r}'"))?;
     }
-    if let Some(w) = flag(args, "--workers") {
-        let n: usize = w.parse().unwrap_or(4);
-        cfg.topology = match flag(args, "--topology").as_deref() {
+    let workers: Option<usize> = parsed("train", fl, "--workers")?;
+    if workers.is_some() || fl.get("--topology").is_some() {
+        let n = workers.unwrap_or_else(|| cfg.topology.leaves());
+        // `--workers` alone resizes the configured topology without
+        // changing its kind; `--topology kary` keeps a configured fanin
+        let fanin = match cfg.topology {
+            Topology::KAry { fanin, .. } => fanin,
+            _ => 2,
+        };
+        cfg.topology = match fl.get("--topology") {
+            None => match cfg.topology {
+                Topology::TwoLayer { .. } => Topology::TwoLayer { shards: n },
+                Topology::BinaryTree { .. } => {
+                    Topology::BinaryTree { leaves: n }
+                }
+                Topology::KAry { .. } => Topology::KAry { leaves: n, fanin },
+            },
+            Some("two-layer") => Topology::TwoLayer { shards: n },
             Some("binary-tree") => Topology::BinaryTree { leaves: n },
-            _ => Topology::TwoLayer { shards: n },
+            Some("kary") => Topology::KAry { leaves: n, fanin },
+            Some(other) => {
+                return Err(format!(
+                    "train: bad --topology '{other}' (valid: two-layer, \
+                     binary-tree, kary)"
+                ))
+            }
         };
     }
-    if let Some(l) = flag(args, "--loss") {
-        cfg.loss = Loss::parse(&l).unwrap_or(cfg.loss);
+    if let Some(l) = fl.get("--loss") {
+        cfg.loss =
+            Loss::parse(l).ok_or_else(|| format!("train: bad --loss '{l}'"))?;
     }
-    if let Some(p) = flag(args, "--passes") {
-        cfg.passes = p.parse().unwrap_or(1);
+    if let Some(p) = parsed("train", fl, "--passes")? {
+        cfg.passes = p;
     }
-    if let Some(t) = flag(args, "--tau") {
-        cfg.tau = t.parse().unwrap_or(1024);
+    if let Some(t) = parsed("train", fl, "--tau")? {
+        cfg.tau = t;
     }
-    let lambda: Option<f64> =
-        flag(args, "--lambda").and_then(|s| s.parse().ok());
-    let t0: Option<f64> = flag(args, "--t0").and_then(|s| s.parse().ok());
+    let lambda: Option<f64> = parsed("train", fl, "--lambda")?;
+    let t0: Option<f64> = parsed("train", fl, "--t0")?;
     if lambda.is_some() || t0.is_some() {
         // flags override; otherwise the config file's `lr`/`lambda`/`t0`
         // (or the default schedule) stands
         cfg.lr = LrSchedule::inv_sqrt(lambda.unwrap_or(0.5), t0.unwrap_or(1.0));
     }
-    if let Some(s) = flag(args, "--seed") {
-        cfg.seed = s.parse().unwrap_or(42);
+    if let Some(s) = parsed("train", fl, "--seed")? {
+        cfg.seed = s;
     }
-    let data = flag(args, "--data").unwrap_or_else(|| "rcv".into());
-    let instances: usize =
-        flag(args, "--instances").and_then(|s| s.parse().ok()).unwrap_or(50_000);
-    if data != "ad" && cfg.loss == Loss::Squared && cfg.clip01 {
-        // ±1-label tasks: clipping to [0,1] makes no sense
-        cfg.clip01 = false;
-    }
+    Ok(cfg)
+}
 
-    let ds = make_dataset(&data, instances, cfg.seed);
-    let (train, test) = ds.split_test(0.2);
-    eprintln!(
-        "dataset={} train={} test={} dim={} rule={} workers={} passes={}",
-        data,
-        train.len(),
-        test.len(),
-        train.dim,
-        cfg.rule.name(),
-        cfg.topology.leaves(),
-        cfg.passes
-    );
-    let mut coord = Coordinator::new(cfg.clone(), train.dim);
-    let report = coord.train(&train);
-    let (test_loss, test_acc) = pol::metrics::test_metrics(
-        cfg.loss,
-        |x| coord.predict(x),
-        &test.instances,
-    );
-    println!(
-        "progressive_loss={:.6} progressive_acc={:.4} test_loss={:.6} test_acc={:.4} instances={} elapsed_ms={}",
-        report.progressive.mean_loss(),
-        report.progressive.accuracy(),
-        test_loss,
-        test_acc,
-        report.instances,
-        report.elapsed.as_millis()
-    );
-    if let Some(path) = flag(args, "--checkpoint") {
-        let path = std::path::PathBuf::from(path);
-        match checkpoint::save_coordinator(&coord, &path) {
-            Ok(()) => eprintln!("checkpoint saved to {path:?}"),
+fn cmd_train(args: &[String]) -> i32 {
+    let fl = match parse_flags(
+        "train",
+        args,
+        &[
+            "--config", "--rule", "--workers", "--topology", "--loss",
+            "--passes", "--tau", "--lambda", "--t0", "--seed", "--data",
+            "--instances", "--checkpoint", "--checkpoint-every",
+        ],
+        &[],
+    ) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let run = || -> Result<i32, String> {
+        let mut cfg = train_config(&fl)?;
+        let data = fl.get("--data").unwrap_or("rcv").to_string();
+        let instances: usize =
+            parsed("train", &fl, "--instances")?.unwrap_or(50_000);
+        if data != "ad" && cfg.loss == Loss::Squared && cfg.clip01 {
+            // ±1-label tasks: clipping to [0,1] makes no sense
+            cfg.clip01 = false;
+        }
+        let ds = make_dataset(&data, instances, cfg.seed)?;
+        let (train, test) = ds.split_test(0.2);
+        eprintln!(
+            "dataset={} train={} test={} dim={} rule={} workers={} passes={}",
+            data,
+            train.len(),
+            test.len(),
+            train.dim,
+            cfg.rule.name(),
+            cfg.topology.leaves(),
+            cfg.passes
+        );
+        let mut builder =
+            Session::builder().config(cfg.clone()).dim(train.dim);
+        if let Some(path) = fl.get("--checkpoint") {
+            builder = builder.checkpoint_to(path);
+        }
+        if let Some(every) = parsed::<u64>("train", &fl, "--checkpoint-every")? {
+            if fl.get("--checkpoint").is_none() {
+                return Err(
+                    "train: --checkpoint-every requires --checkpoint".into()
+                );
+            }
+            builder = builder.checkpoint_every(every);
+        }
+        // from here on failures are runtime errors (exit 1), not usage
+        // errors (exit 2)
+        let mut session = match builder.build() {
+            Ok(s) => s,
             Err(e) => {
-                eprintln!("checkpoint save failed: {e}");
-                return 1;
+                eprintln!("train: session build failed: {e}");
+                return Ok(1);
+            }
+        };
+        let report = match session.train(&train) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("train: checkpoint save failed: {e}");
+                return Ok(1);
+            }
+        };
+        let (test_loss, test_acc) = pol::metrics::test_metrics(
+            cfg.loss,
+            |x| session.predict(x),
+            &test.instances,
+        );
+        println!(
+            "progressive_loss={:.6} progressive_acc={:.4} test_loss={:.6} test_acc={:.4} instances={} elapsed_ms={}",
+            report.progressive.mean_loss(),
+            report.progressive.accuracy(),
+            test_loss,
+            test_acc,
+            report.instances,
+            report.elapsed.as_millis()
+        );
+        if let Some(path) = fl.get("--checkpoint") {
+            let bg = session.background_checkpoints();
+            if bg > 0 {
+                eprintln!(
+                    "checkpoint saved to {path:?} ({bg} background writes)"
+                );
+            } else {
+                eprintln!("checkpoint saved to {path:?}");
             }
         }
+        Ok(0)
+    };
+    match run() {
+        Ok(code) => code,
+        Err(e) => usage_error(&e),
     }
-    0
 }
 
 fn cmd_checkpoint(args: &[String]) -> i32 {
-    let Some(path) = flag(args, "--model") else {
-        eprintln!("checkpoint: --model PATH required");
-        return 2;
+    let fl = match parse_flags("checkpoint", args, &["--model"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
     };
-    match checkpoint::inspect(std::path::Path::new(&path)) {
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let Some(path) = fl.get("--model") else {
+        return usage_error("checkpoint: --model PATH required");
+    };
+    match checkpoint::inspect(std::path::Path::new(path)) {
         Ok(info) => {
             println!(
-                "kind={} format={} dim={} tables={} params={} trained={} digest={:#018x} salt={:#018x}",
+                "kind={} format={} encoding={} dim={} tables={} params={} trained={} digest={:#018x} salt={:#018x}",
                 info.kind_name(),
                 info.format_version,
+                info.encoding_name(),
                 info.dim,
                 info.tables,
                 info.total_params,
@@ -268,18 +435,25 @@ fn parse_features(line: &str, dim: usize) -> Result<Vec<SparseFeat>, String> {
 }
 
 fn cmd_predict(args: &[String]) -> i32 {
-    let Some(path) = flag(args, "--model") else {
-        eprintln!("predict: --model PATH required");
-        return 2;
+    let fl = match parse_flags("predict", args, &["--model"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
     };
-    let ckpt = match checkpoint::load(std::path::Path::new(&path)) {
-        Ok(c) => c,
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let Some(path) = fl.get("--model") else {
+        return usage_error("predict: --model PATH required");
+    };
+    let model = match pol::model::load(path) {
+        Ok(m) => m,
         Err(e) => {
             eprintln!("predict: load {path}: {e}");
             return 1;
         }
     };
-    let dim = ckpt.dim();
+    let dim = model.dim();
     let mut line = String::new();
     loop {
         line.clear();
@@ -299,7 +473,7 @@ fn cmd_predict(args: &[String]) -> i32 {
             continue;
         }
         match parse_features(text, dim) {
-            Ok(x) => println!("{}", ckpt.predict(&x)),
+            Ok(x) => println!("{}", model.predict(&x)),
             Err(e) => {
                 eprintln!("predict: {e}");
                 return 2;
@@ -308,80 +482,149 @@ fn cmd_predict(args: &[String]) -> i32 {
     }
 }
 
+/// `NAME=PATH` or bare `PATH` (name defaults to the file stem).
+fn model_spec(spec: &str) -> Result<(String, String), String> {
+    if let Some((name, path)) = spec.split_once('=') {
+        if name.is_empty() {
+            return Err(format!("serve: empty model name in '{spec}'"));
+        }
+        return Ok((name.to_string(), path.to_string()));
+    }
+    let name = std::path::Path::new(spec)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| format!("serve: cannot derive a model name from '{spec}'"))?;
+    Ok((name.to_string(), spec.to_string()))
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
-    let Some(path) = flag(args, "--model") else {
-        eprintln!("serve: --model PATH required");
-        return 2;
+    let fl = match parse_flags(
+        "serve",
+        args,
+        &["--model", "--threads", "--seconds", "--batch", "--density", "--seed"],
+        &[],
+    ) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
     };
-    let threads: usize =
-        flag(args, "--threads").and_then(|s| s.parse().ok()).unwrap_or(4);
-    let seconds: f64 =
-        flag(args, "--seconds").and_then(|s| s.parse().ok()).unwrap_or(2.0);
-    let batch: usize =
-        flag(args, "--batch").and_then(|s| s.parse().ok()).unwrap_or(1);
-    let density: usize =
-        flag(args, "--density").and_then(|s| s.parse().ok()).unwrap_or(75);
-    let seed: u64 = flag(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
-    let ckpt = match checkpoint::load(std::path::Path::new(&path)) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("serve: load {path}: {e}");
-            return 1;
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let run = || -> Result<i32, String> {
+        let specs = fl.get_all("--model");
+        if specs.is_empty() {
+            return Err("serve: at least one --model [NAME=]PATH required".into());
         }
-    };
-    let snap = ckpt.into_snapshot();
-    let dim = snap.dim().max(1);
-    eprintln!(
-        "serving {path}: dim={dim} params={} threads={threads} batch={batch} for {seconds}s",
-        snap.num_params()
-    );
-    let cell = SnapshotCell::new(snap);
-    let server = PredictionServer::start(Arc::clone(&cell), threads);
-    let deadline = std::time::Instant::now()
-        + std::time::Duration::from_secs_f64(seconds.max(0.1));
-    // drive load from as many client threads as serving threads
-    std::thread::scope(|s| {
-        for c in 0..threads {
-            let client = server.client();
-            s.spawn(move || {
-                let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
-                while std::time::Instant::now() < deadline {
-                    let reqs: Vec<Vec<SparseFeat>> = (0..batch)
-                        .map(|_| {
-                            (0..density)
-                                .map(|_| {
-                                    (
-                                        rng.below(dim as u64) as u32,
-                                        rng.normal() as f32,
-                                    )
-                                })
-                                .collect()
-                        })
-                        .collect();
-                    if client.predict(reqs).is_none() {
-                        break;
+        let threads: usize = parsed("serve", &fl, "--threads")?.unwrap_or(4);
+        let seconds: f64 = parsed("serve", &fl, "--seconds")?.unwrap_or(2.0);
+        let batch: usize = parsed("serve", &fl, "--batch")?.unwrap_or(1);
+        let density: usize = parsed("serve", &fl, "--density")?.unwrap_or(75);
+        let seed: u64 = parsed("serve", &fl, "--seed")?.unwrap_or(42);
+
+        // load every checkpoint as a Model trait object, snapshot it,
+        // and register it under its name
+        let registry = ModelRegistry::new();
+        let mut loaded: Vec<(String, usize)> = Vec::new(); // (name, dim)
+        for spec in specs {
+            let (name, path) = model_spec(spec)?;
+            if loaded.iter().any(|(n, _)| *n == name) {
+                return Err(format!("serve: duplicate model name '{name}'"));
+            }
+            let model = pol::model::load(&path)
+                .map_err(|e| format!("serve: load {path}: {e}"))?;
+            let snap = model.snapshot();
+            let dim = snap.dim().max(1);
+            eprintln!(
+                "model {name}: {path} kind={} dim={dim} params={} trained={}",
+                model.kind_name(),
+                snap.num_params(),
+                snap.trained_instances,
+            );
+            registry.insert(name.as_str(), SnapshotCell::new(snap));
+            loaded.push((name, dim));
+        }
+        eprintln!(
+            "serving {} model(s) on {threads} threads, batch {batch}, for {seconds}s",
+            loaded.len()
+        );
+        let server = PredictionServer::start(Arc::clone(&registry), threads);
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs_f64(seconds.max(0.1));
+        // drive load from as many client threads as serving threads,
+        // round-robining requests across the registered models
+        std::thread::scope(|s| {
+            for c in 0..threads {
+                let client = server.client();
+                let loaded = &loaded;
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
+                    let mut turn = c;
+                    while std::time::Instant::now() < deadline {
+                        let (name, dim) = &loaded[turn % loaded.len()];
+                        turn += 1;
+                        let reqs: Vec<Vec<SparseFeat>> = (0..batch)
+                            .map(|_| {
+                                (0..density)
+                                    .map(|_| {
+                                        (
+                                            rng.below(*dim as u64) as u32,
+                                            rng.normal() as f32,
+                                        )
+                                    })
+                                    .collect()
+                            })
+                            .collect();
+                        if client.predict_for(name, reqs).is_err() {
+                            break;
+                        }
                     }
-                }
-            });
+                });
+            }
+        });
+        let stats = server.shutdown();
+        println!(
+            "threads={} models={} requests={} predictions={} qps={:.0} p50_us={:.1} p99_us={:.1} max_us={:.1} max_staleness={}",
+            threads,
+            loaded.len(),
+            stats.requests,
+            stats.predictions,
+            stats.qps(),
+            stats.latency.quantile_ns(0.5) as f64 / 1e3,
+            stats.latency.quantile_ns(0.99) as f64 / 1e3,
+            stats.latency.max_ns() as f64 / 1e3,
+            stats.max_staleness
+        );
+        for (name, ms) in &stats.per_model {
+            println!(
+                "model={name} requests={} predictions={} qps={:.0} p50_us={:.1} p99_us={:.1} max_staleness={}",
+                ms.requests,
+                ms.predictions,
+                ms.qps(stats.elapsed),
+                ms.latency.quantile_ns(0.5) as f64 / 1e3,
+                ms.latency.quantile_ns(0.99) as f64 / 1e3,
+                ms.max_staleness
+            );
         }
-    });
-    let stats = server.shutdown();
-    println!(
-        "threads={} requests={} predictions={} qps={:.0} p50_us={:.1} p99_us={:.1} max_us={:.1} max_staleness={}",
-        threads,
-        stats.requests,
-        stats.predictions,
-        stats.qps(),
-        stats.latency.quantile_ns(0.5) as f64 / 1e3,
-        stats.latency.quantile_ns(0.99) as f64 / 1e3,
-        stats.latency.max_ns() as f64 / 1e3,
-        stats.max_staleness
-    );
-    0
+        Ok(0)
+    };
+    match run() {
+        Ok(code) => code,
+        Err(e) => usage_error(&e),
+    }
 }
 
 fn cmd_bench_data(args: &[String]) -> i32 {
-    let full = has(args, "--full");
+    let fl = match parse_flags("bench-data", args, &[], &["--full"]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let full = fl.has("--full");
     let scale = if full { 1 } else { 100 };
     println!("Table 0.1 — dataset shapes{}", if full { "" } else { " (1/100 scale)" });
     println!("{:<14} {:>10} {:>10} {:>14} {:>10}", "dataset", "instances", "features", "nnz", "nnz/inst");
@@ -407,25 +650,47 @@ fn cmd_bench_data(args: &[String]) -> i32 {
 }
 
 fn cmd_inspect(args: &[String]) -> i32 {
-    let bits: u32 = flag(args, "--bits").and_then(|s| s.parse().ok()).unwrap_or(18);
-    let uniques: u64 =
-        flag(args, "--uniques").and_then(|s| s.parse().ok()).unwrap_or(100_000);
-    let hasher = pol::hashing::FeatureHasher::new(bits);
-    let stats = pol::hashing::CollisionStats::compute(&hasher, 0..uniques);
-    println!(
-        "bits={} table={} uniques={} occupied={} collided={} rate={:.4}",
-        bits,
-        hasher.table_size(),
-        stats.unique_inputs,
-        stats.occupied_slots,
-        stats.collided_inputs,
-        stats.collision_rate()
-    );
-    0
+    let fl = match parse_flags("inspect", args, &["--bits", "--uniques"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let run = || -> Result<i32, String> {
+        let bits: u32 = parsed("inspect", &fl, "--bits")?.unwrap_or(18);
+        let uniques: u64 = parsed("inspect", &fl, "--uniques")?.unwrap_or(100_000);
+        let hasher = pol::hashing::FeatureHasher::new(bits);
+        let stats = pol::hashing::CollisionStats::compute(&hasher, 0..uniques);
+        println!(
+            "bits={} table={} uniques={} occupied={} collided={} rate={:.4}",
+            bits,
+            hasher.table_size(),
+            stats.unique_inputs,
+            stats.occupied_slots,
+            stats.collided_inputs,
+            stats.collision_rate()
+        );
+        Ok(0)
+    };
+    match run() {
+        Ok(code) => code,
+        Err(e) => usage_error(&e),
+    }
 }
 
 fn cmd_artifacts_check(args: &[String]) -> i32 {
-    let dir = flag(args, "--dir")
+    let fl = match parse_flags("artifacts-check", args, &["--dir"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let dir = fl
+        .get("--dir")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(pol::runtime::Registry::default_dir);
     let reg = match pol::runtime::Registry::open(&dir) {

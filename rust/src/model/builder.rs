@@ -1,0 +1,399 @@
+//! [`Session`] / [`SessionBuilder`] — the one construction path for
+//! every architecture.
+//!
+//! A session owns a boxed [`Model`] plus its serving/durability wiring:
+//! an optional [`SnapshotCell`] the model publishes into while training
+//! (train-while-serve), and an optional checkpoint path written
+//! atomically in the background and at end of training. The builder is
+//! where rule/topology/learning-rate knobs meet that wiring, so
+//! swapping a `local` two-layer run for a `backprop` binary tree — or
+//! warm-starting from a `.polz` file — is a one-line change.
+
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::{RunConfig, UpdateRule};
+use crate::coordinator::{Coordinator, TrainReport};
+use crate::data::Dataset;
+use crate::linalg::SparseFeat;
+use crate::loss::Loss;
+use crate::lr::LrSchedule;
+use crate::model::Model;
+use crate::serve::checkpoint::{self, CheckpointSink};
+use crate::serve::publisher::{SnapshotCell, SnapshotPublisher};
+use crate::topology::Topology;
+
+/// Fluent constructor for [`Session`]s. Obtain via [`Session::builder`].
+///
+/// Defaults match [`RunConfig::default`] with a `2^18` hashed feature
+/// space; every knob has a setter, or pass a whole config with
+/// [`Self::config`] (CLI/config-file flows).
+#[derive(Clone)]
+pub struct SessionBuilder {
+    cfg: RunConfig,
+    dim: usize,
+    publish_every: Option<u64>,
+    cell: Option<Arc<SnapshotCell>>,
+    checkpoint_to: Option<PathBuf>,
+    checkpoint_every: Option<u64>,
+    warm_start: Option<PathBuf>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            cfg: RunConfig::default(),
+            dim: 1 << 18,
+            publish_every: None,
+            cell: None,
+            checkpoint_to: None,
+            checkpoint_every: None,
+            warm_start: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Replace the whole run configuration (flag/config-file flows);
+    /// individual setters may still override afterwards.
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Hashed feature-space size of the leaves (default `2^18`).
+    pub fn dim(mut self, dim: usize) -> Self {
+        self.dim = dim.max(1);
+        self
+    }
+
+    /// The §0.5/§0.6 update rule.
+    pub fn rule(mut self, rule: UpdateRule) -> Self {
+        self.cfg.rule = rule;
+        self
+    }
+
+    /// Node topology (two-layer, binary tree, k-ary).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.cfg.topology = topology;
+        self
+    }
+
+    pub fn loss(mut self, loss: Loss) -> Self {
+        self.cfg.loss = loss;
+        self
+    }
+
+    /// Learning-rate schedule of the leaves.
+    pub fn lr(mut self, lr: LrSchedule) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    /// Learning-rate schedule of the internal (combiner) nodes.
+    pub fn master_lr(mut self, lr: LrSchedule) -> Self {
+        self.cfg.master_lr = Some(lr);
+        self
+    }
+
+    /// Logical update delay τ (§0.6.6).
+    pub fn tau(mut self, tau: u64) -> Self {
+        self.cfg.tau = tau;
+        self
+    }
+
+    /// Clip subordinate predictions to [0,1] before the master.
+    pub fn clip01(mut self, clip01: bool) -> Self {
+        self.cfg.clip01 = clip01;
+        self
+    }
+
+    /// Give internal nodes a constant (bias) input feature.
+    pub fn bias(mut self, bias: bool) -> Self {
+        self.cfg.bias = bias;
+        self
+    }
+
+    pub fn passes(mut self, passes: usize) -> Self {
+        self.cfg.passes = passes.max(1);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Publish an immutable serving snapshot every `every` trained
+    /// instances into the session's [`SnapshotCell`] (created on
+    /// `build` unless [`Self::publish_to`] supplied one).
+    pub fn publish_every(mut self, every: u64) -> Self {
+        self.publish_every = Some(every.max(1));
+        self
+    }
+
+    /// Publish into an existing cell (e.g. one already registered in a
+    /// [`crate::serve::ModelRegistry`]) instead of creating a new one.
+    pub fn publish_to(mut self, cell: Arc<SnapshotCell>) -> Self {
+        self.cell = Some(cell);
+        self
+    }
+
+    /// Write a `.polz` checkpoint here (atomically: temp file + rename)
+    /// at end of training — and in the background during training when
+    /// [`Self::checkpoint_every`] is also set.
+    pub fn checkpoint_to(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint_to = Some(path.into());
+        self
+    }
+
+    /// Background-checkpoint cadence, in trained instances (requires
+    /// [`Self::checkpoint_to`]).
+    pub fn checkpoint_every(mut self, every: u64) -> Self {
+        self.checkpoint_every = Some(every.max(1));
+        self
+    }
+
+    /// Warm-start from an existing `.polz` checkpoint instead of
+    /// constructing fresh zero weights. The checkpoint's own recorded
+    /// configuration wins over the builder's rule/topology/lr knobs
+    /// (a model must keep training exactly as it was trained).
+    ///
+    /// Tree-rule and plain-SGD checkpoints continue training exactly
+    /// where they stopped (step clocks preserved). Centralized
+    /// (Minibatch/CG/SGD-rule) checkpoints *serve and stream-learn*
+    /// from their weights, but a subsequent dataset `train` refits from
+    /// scratch — the batch trainers have no warm continuation; the
+    /// coordinator warns on stderr when that discards state.
+    pub fn warm_start(mut self, path: impl Into<PathBuf>) -> Self {
+        self.warm_start = Some(path.into());
+        self
+    }
+
+    /// Construct the model and wire its serving/durability hooks.
+    pub fn build(self) -> io::Result<Session> {
+        let mut model: Box<dyn Model> = match &self.warm_start {
+            Some(path) => checkpoint::load_model(path)?,
+            None => Box::new(Coordinator::new(self.cfg, self.dim)),
+        };
+        let cell = match (self.cell, self.publish_every) {
+            (cell, Some(every)) => {
+                let cell =
+                    cell.unwrap_or_else(|| SnapshotCell::new(model.snapshot()));
+                model.install_publisher(SnapshotPublisher::new(
+                    Arc::clone(&cell),
+                    every,
+                ));
+                Some(cell)
+            }
+            // a cell without a cadence gets the end-of-train publish only
+            (cell, None) => cell,
+        };
+        if self.checkpoint_every.is_some() && self.checkpoint_to.is_none() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "checkpoint_every requires checkpoint_to",
+            ));
+        }
+        let mut ckpt_writes = None;
+        if let (Some(path), Some(every)) =
+            (&self.checkpoint_to, self.checkpoint_every)
+        {
+            let sink = CheckpointSink::new(path.clone(), every);
+            let handle = sink.writes_handle();
+            if model.install_checkpoint_sink(sink) {
+                ckpt_writes = Some(handle);
+            }
+        }
+        Ok(Session {
+            model,
+            cell,
+            checkpoint_to: self.checkpoint_to,
+            ckpt_writes,
+        })
+    }
+}
+
+/// A constructed model plus its serving/durability wiring — what the
+/// CLI, examples, and benches drive instead of hand-assembled
+/// `Coordinator` + publisher + checkpoint plumbing.
+pub struct Session {
+    model: Box<dyn Model>,
+    cell: Option<Arc<SnapshotCell>>,
+    checkpoint_to: Option<PathBuf>,
+    ckpt_writes: Option<Arc<AtomicU64>>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Wrap an already-constructed model (e.g. a concrete [`crate::learner::sgd::Sgd`]
+    /// or a checkpoint loaded elsewhere) with no serving wiring.
+    pub fn from_model(model: Box<dyn Model>) -> Session {
+        Session { model, cell: None, checkpoint_to: None, ckpt_writes: None }
+    }
+
+    pub fn model(&self) -> &dyn Model {
+        &*self.model
+    }
+
+    pub fn model_mut(&mut self) -> &mut dyn Model {
+        &mut *self.model
+    }
+
+    /// The snapshot cell this session publishes into, when serving is
+    /// wired (register it in a [`crate::serve::ModelRegistry`] to serve
+    /// while training).
+    pub fn cell(&self) -> Option<&Arc<SnapshotCell>> {
+        self.cell.as_ref()
+    }
+
+    /// Successful background checkpoint writes so far.
+    pub fn background_checkpoints(&self) -> u64 {
+        self.ckpt_writes
+            .as_ref()
+            .map_or(0, |w| w.load(Ordering::Relaxed))
+    }
+
+    /// Convenience predict through the boxed model.
+    pub fn predict(&self, x: &[SparseFeat]) -> f64 {
+        self.model.predict(x)
+    }
+
+    /// Train over a dataset. Mid-run snapshot publishes and background
+    /// checkpoints fire on their cadences inside the model's own loop;
+    /// afterwards the final state is published to the cell (if the
+    /// model's last cadence publish is behind) and checkpointed to
+    /// `checkpoint_to` (if configured). A final-write failure is an
+    /// error; mid-run background write failures only log (training is
+    /// never killed by a flaky disk).
+    pub fn train(&mut self, ds: &Dataset) -> io::Result<TrainReport> {
+        let report = self.model.train_dataset(ds);
+        if let Some(cell) = &self.cell {
+            if cell.load().trained_instances < self.model.trained_instances() {
+                cell.publish(self.model.snapshot());
+            }
+        }
+        if let Some(path) = self.checkpoint_to.clone() {
+            // let any in-flight background write land before the final
+            // save replaces the file, so a stale write can never win
+            self.model.finish_checkpoints();
+            self.save(&path)?;
+        }
+        Ok(report)
+    }
+
+    /// Write the model to a `.polz` checkpoint atomically.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> io::Result<()> {
+        checkpoint::save_atomic(path.as_ref(), |out| self.model.write(out))
+    }
+
+    /// Take the model out of the session.
+    pub fn into_model(self) -> Box<dyn Model> {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+
+    fn small_ds() -> Dataset {
+        RcvLikeGen::new(SynthConfig {
+            instances: 2_000,
+            features: 300,
+            density: 12,
+            hash_bits: 11,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    fn builder_for(ds: &Dataset) -> SessionBuilder {
+        Session::builder()
+            .dim(ds.dim)
+            .topology(Topology::TwoLayer { shards: 4 })
+            .rule(UpdateRule::Local)
+            .loss(Loss::Logistic)
+            .lr(LrSchedule::inv_sqrt(4.0, 1.0))
+            .clip01(false)
+    }
+
+    #[test]
+    fn builder_trains_and_reports() {
+        let ds = small_ds();
+        let mut session = builder_for(&ds).build().unwrap();
+        let report = session.train(&ds).unwrap();
+        assert_eq!(report.instances, 2_000);
+        assert!(report.progressive.accuracy() > 0.6);
+        assert_eq!(session.model().trained_instances(), 2_000);
+    }
+
+    #[test]
+    fn checkpoint_every_requires_path() {
+        let err = Session::builder().checkpoint_every(10).build().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn publish_cadence_and_final_publish() {
+        let ds = small_ds();
+        let mut session =
+            builder_for(&ds).publish_every(500).build().unwrap();
+        let cell = Arc::clone(session.cell().expect("cell wired"));
+        session.train(&ds).unwrap();
+        // 2000 instances at cadence 500: published at 500..2000, and the
+        // final state was already the cadence publish (no duplicate)
+        assert_eq!(cell.seq(), 4);
+        assert_eq!(cell.load().trained_instances, 2_000);
+        for inst in ds.iter().take(20) {
+            assert_eq!(
+                cell.load().predict(&inst.features).to_bits(),
+                session.predict(&inst.features).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn cell_without_cadence_gets_end_of_train_publish() {
+        let ds = small_ds();
+        let cell = SnapshotCell::new(crate::serve::ModelSnapshot::central(
+            vec![0.0; 4],
+            0,
+            0,
+        ));
+        let mut session =
+            builder_for(&ds).publish_to(Arc::clone(&cell)).build().unwrap();
+        session.train(&ds).unwrap();
+        assert_eq!(cell.seq(), 1, "exactly the end-of-train publish");
+        assert_eq!(cell.load().trained_instances, 2_000);
+    }
+
+    #[test]
+    fn warm_start_resumes_from_checkpoint() {
+        let ds = small_ds();
+        let dir = std::env::temp_dir().join("pol_builder_warm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.polz");
+        let mut first = builder_for(&ds).build().unwrap();
+        first.train(&ds).unwrap();
+        first.save(&path).unwrap();
+        let expected: Vec<u64> = ds
+            .iter()
+            .take(20)
+            .map(|i| first.predict(&i.features).to_bits())
+            .collect();
+        let resumed = Session::builder().warm_start(&path).build().unwrap();
+        assert_eq!(resumed.model().trained_instances(), 2_000);
+        assert_eq!(resumed.model().kind_name(), "tree-coordinator");
+        for (inst, want) in ds.iter().take(20).zip(expected) {
+            assert_eq!(resumed.predict(&inst.features).to_bits(), want);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,445 @@
+//! `pol::model` — one [`Model`] trait for every architecture, and one
+//! construction path ([`Session::builder`]) for all of them.
+//!
+//! The paper's point is a *family* of architectures — no-sharing local
+//! training, delayed-global, corrective, delayed backprop, minibatch
+//! and minibatch-CG — trading off delay, parallelism, and
+//! representation power. Swapping one for another should be a one-line
+//! change, the way *Slow Learners are Fast* swaps delayed-update
+//! strategies behind one update interface. This module is that
+//! interface:
+//!
+//! * [`Model`] — the object-safe trait every trainable predictor
+//!   implements: plain [`Sgd`], centralized coordinators, full
+//!   feature-sharded trees. Predict (single and scratch-reusing batch),
+//!   learn (streaming), dataset training, snapshotting for the serving
+//!   layer, and `.polz` serialization — all through one vtable, so the
+//!   CLI, the [`crate::serve::PredictionServer`], and user code never
+//!   branch on model kind (only the checkpoint codec does, in
+//!   [`crate::serve::checkpoint::read_model`], where bytes become trait
+//!   objects).
+//! * [`Session`] / [`SessionBuilder`] — the fluent construction path:
+//!   rule, topology, learning rates, publish cadence, and background
+//!   checkpointing in one chain, replacing hand-wired
+//!   `Coordinator::new` + publisher + checkpoint plumbing.
+//!
+//! ```no_run
+//! use pol::prelude::*;
+//!
+//! let ds = RcvLikeGen::new(SynthConfig {
+//!     instances: 10_000, features: 1_000, ..Default::default()
+//! }).generate();
+//! let mut session = Session::builder()
+//!     .dim(ds.dim)
+//!     .rule(UpdateRule::Backprop { multiplier: 1.0 })
+//!     .topology(Topology::TwoLayer { shards: 4 })
+//!     .loss(Loss::Logistic)
+//!     .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+//!     .clip01(false)
+//!     .publish_every(2_048)
+//!     .checkpoint_to("model.polz")
+//!     .checkpoint_every(10_000)
+//!     .build()
+//!     .expect("build session");
+//! let report = session.train(&ds).expect("train");
+//! println!("progressive acc {:.4}", report.progressive.accuracy());
+//! ```
+
+mod builder;
+
+pub use builder::{Session, SessionBuilder};
+
+use std::io;
+
+use crate::coordinator::{Coordinator, TrainReport};
+use crate::data::Dataset;
+use crate::learner::sgd::Sgd;
+use crate::linalg::SparseFeat;
+use crate::metrics::ProgressiveValidator;
+use crate::serve::checkpoint::{self, CheckpointSink};
+use crate::serve::publisher::SnapshotPublisher;
+use crate::serve::snapshot::{ModelSnapshot, PredictScratch};
+
+/// Every trainable predictor in the crate, behind one object-safe
+/// interface.
+///
+/// Implementations: [`Sgd`] (the Algorithm 1 baseline) and
+/// [`Coordinator`] (the §0.5/§0.6 tree architectures *and* the
+/// centralized Minibatch/CG/SGD rules — its two internal
+/// representations stay its own business). Construct through
+/// [`Session::builder`], or deserialize any `.polz` checkpoint with
+/// [`load`]/[`read`].
+pub trait Model: Send {
+    /// ŷ for one feature vector with the current weights (no learning).
+    ///
+    /// This is the *request* surface: feature indices are treated as
+    /// untrusted, and out-of-range indices contribute nothing (they are
+    /// never allowed near the unchecked training-path dot). In-range
+    /// inputs score bit-identically to the concrete types' own
+    /// `predict` methods.
+    fn predict(&self, x: &[SparseFeat]) -> f64;
+
+    /// Score a batch into `out` with caller-owned scratch — the
+    /// allocation-free path for callers that predict in a loop.
+    fn predict_batch(
+        &self,
+        batch: &[Vec<SparseFeat>],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        let _ = scratch;
+        out.extend(batch.iter().map(|x| self.predict(x)));
+    }
+
+    /// One streaming learning step on (x, y). For delayed-feedback tree
+    /// rules this runs the forward/local phase now and applies the
+    /// global feedback τ instances later, mirroring the §0.6.6
+    /// schedule; see [`Coordinator::learn_one`] for the exact per-rule
+    /// semantics.
+    ///
+    /// Unlike [`Self::predict`], training inputs are *trusted*: feature
+    /// indices must lie within [`Self::dim`] (the training hot path
+    /// uses unchecked table access). Validate before learning from an
+    /// external stream, as the CLI's `predict` parser does.
+    fn learn(&mut self, x: &[SparseFeat], y: f64);
+
+    /// Train over a whole dataset (honouring the model's own pass count
+    /// and delay schedule) and report progressive validation.
+    fn train_dataset(&mut self, ds: &Dataset) -> TrainReport;
+
+    /// Cumulative instances learned (the training-stream position that
+    /// snapshots and checkpoints record).
+    fn trained_instances(&self) -> u64;
+
+    /// Hashed feature-space size predictions are computed over.
+    fn dim(&self) -> usize;
+
+    /// An immutable serving snapshot of the current weights
+    /// ([`crate::serve`]).
+    fn snapshot(&self) -> ModelSnapshot;
+
+    /// Serialize to the `.polz` checkpoint framing. The inverse is
+    /// [`read`] (or [`crate::serve::checkpoint::read`] when the
+    /// concrete type matters).
+    fn write(&self, out: &mut dyn io::Write) -> io::Result<()>;
+
+    /// Stable kind label for reporting (matches
+    /// [`crate::serve::checkpoint::CheckpointInfo::kind_name`]).
+    fn kind_name(&self) -> &'static str;
+
+    /// Install a snapshot-publishing hook firing every
+    /// `publisher.every` trained instances. Returns `false` when the
+    /// model has no per-instance training loop to hook (the caller then
+    /// publishes at end of training instead).
+    fn install_publisher(&mut self, publisher: SnapshotPublisher) -> bool {
+        let _ = publisher;
+        false
+    }
+
+    /// Install a background-checkpoint hook firing every `sink.every()`
+    /// trained instances. Returns `false` when unsupported (the caller
+    /// then checkpoints at end of training instead).
+    fn install_checkpoint_sink(&mut self, sink: CheckpointSink) -> bool {
+        let _ = sink;
+        false
+    }
+
+    /// Wait for any in-flight background checkpoint write to land
+    /// (call before reading or replacing the checkpoint file).
+    fn finish_checkpoints(&mut self) {}
+}
+
+/// Deserialize any `.polz` checkpoint into a [`Model`] trait object.
+pub fn read(inp: &mut dyn io::Read) -> io::Result<Box<dyn Model>> {
+    checkpoint::read_model(inp)
+}
+
+/// Load any `.polz` checkpoint file into a [`Model`] trait object.
+pub fn load(path: impl AsRef<std::path::Path>) -> io::Result<Box<dyn Model>> {
+    checkpoint::load_model(path.as_ref())
+}
+
+impl Model for Sgd {
+    fn predict(&self, x: &[SparseFeat]) -> f64 {
+        // request surface: bounds-checked (bit-identical in range)
+        crate::serve::snapshot::request_dot(&self.w, x)
+    }
+
+    fn learn(&mut self, x: &[SparseFeat], y: f64) {
+        Sgd::learn(self, x, y)
+    }
+
+    fn train_dataset(&mut self, ds: &Dataset) -> TrainReport {
+        let start = std::time::Instant::now();
+        let mut pv = ProgressiveValidator::with_loss(self.loss);
+        for inst in ds.iter() {
+            pv.observe(Sgd::predict(self, &inst.features), inst.label);
+            Sgd::learn(self, &inst.features, inst.label);
+        }
+        TrainReport {
+            // a single node is its own (only) shard
+            shard_progressive: pv.clone(),
+            progressive: pv,
+            instances: ds.len() as u64,
+            elapsed: start.elapsed(),
+        }
+    }
+
+    fn trained_instances(&self) -> u64 {
+        self.steps()
+    }
+
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn snapshot(&self) -> ModelSnapshot {
+        checkpoint::sgd_snapshot(self)
+    }
+
+    fn write(&self, out: &mut dyn io::Write) -> io::Result<()> {
+        checkpoint::write_sgd(self, out)
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+impl Model for Coordinator {
+    fn predict(&self, x: &[SparseFeat]) -> f64 {
+        let mut scratch = PredictScratch::default();
+        self.predict_request(x, &mut scratch)
+    }
+
+    fn predict_batch(
+        &self,
+        batch: &[Vec<SparseFeat>],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.extend(batch.iter().map(|x| self.predict_request(x, scratch)));
+    }
+
+    fn learn(&mut self, x: &[SparseFeat], y: f64) {
+        self.learn_one(x, y);
+    }
+
+    fn train_dataset(&mut self, ds: &Dataset) -> TrainReport {
+        self.train(ds)
+    }
+
+    fn trained_instances(&self) -> u64 {
+        Coordinator::trained_instances(self)
+    }
+
+    fn dim(&self) -> usize {
+        Coordinator::dim(self)
+    }
+
+    fn snapshot(&self) -> ModelSnapshot {
+        Coordinator::snapshot(self)
+    }
+
+    fn write(&self, out: &mut dyn io::Write) -> io::Result<()> {
+        checkpoint::write_coordinator(self, out)
+    }
+
+    fn kind_name(&self) -> &'static str {
+        if self.cfg.rule.worker_invariant() {
+            "central-coordinator"
+        } else {
+            "tree-coordinator"
+        }
+    }
+
+    fn install_publisher(&mut self, publisher: SnapshotPublisher) -> bool {
+        self.set_publisher(publisher);
+        true
+    }
+
+    fn install_checkpoint_sink(&mut self, sink: CheckpointSink) -> bool {
+        self.set_checkpoint_sink(sink);
+        true
+    }
+
+    fn finish_checkpoints(&mut self) {
+        self.flush_checkpoints();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RunConfig, UpdateRule};
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+    use crate::loss::Loss;
+    use crate::lr::LrSchedule;
+    use crate::topology::Topology;
+
+    fn small_ds() -> Dataset {
+        RcvLikeGen::new(SynthConfig {
+            instances: 1_000,
+            features: 300,
+            density: 12,
+            hash_bits: 11,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    #[test]
+    fn dyn_sgd_matches_concrete() {
+        let ds = small_ds();
+        let mut concrete =
+            Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(2.0, 1.0));
+        let mut boxed: Box<dyn Model> = Box::new(concrete.clone());
+        for inst in ds.iter() {
+            Sgd::learn(&mut concrete, &inst.features, inst.label);
+            boxed.learn(&inst.features, inst.label);
+        }
+        assert_eq!(boxed.trained_instances(), concrete.steps());
+        assert_eq!(boxed.dim(), ds.dim);
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                boxed.predict(&inst.features).to_bits(),
+                Sgd::predict(&concrete, &inst.features).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn predict_batch_matches_predict_loop() {
+        let ds = small_ds();
+        let cfg = RunConfig {
+            topology: Topology::BinaryTree { leaves: 4 },
+            rule: UpdateRule::Corrective,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 1.0),
+            clip01: false,
+            tau: 16,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        c.train(&ds);
+        let model: &dyn Model = &c;
+        let batch: Vec<Vec<crate::linalg::SparseFeat>> =
+            ds.iter().take(64).map(|i| i.features.clone()).collect();
+        let mut scratch = PredictScratch::default();
+        let mut out = Vec::new();
+        model.predict_batch(&batch, &mut scratch, &mut out);
+        assert_eq!(out.len(), batch.len());
+        for (x, got) in batch.iter().zip(&out) {
+            assert_eq!(got.to_bits(), model.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn model_write_read_roundtrips_through_trait() {
+        let ds = small_ds();
+        let mut model: Box<dyn Model> = Box::new(Coordinator::new(
+            RunConfig {
+                topology: Topology::TwoLayer { shards: 3 },
+                rule: UpdateRule::Local,
+                loss: Loss::Logistic,
+                clip01: false,
+                ..Default::default()
+            },
+            ds.dim,
+        ));
+        model.train_dataset(&ds);
+        let mut buf = Vec::new();
+        model.write(&mut buf).unwrap();
+        let back = read(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.kind_name(), "tree-coordinator");
+        assert_eq!(back.trained_instances(), model.trained_instances());
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                back.predict(&inst.features).to_bits(),
+                model.predict(&inst.features).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_learn_matches_scheduled_train_for_local_rule() {
+        let ds = small_ds();
+        let cfg = RunConfig {
+            topology: Topology::TwoLayer { shards: 4 },
+            rule: UpdateRule::Local,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(4.0, 1.0),
+            clip01: false,
+            ..Default::default()
+        };
+        let mut scheduled = Coordinator::new(cfg.clone(), ds.dim);
+        scheduled.train(&ds);
+        let mut streaming: Box<dyn Model> =
+            Box::new(Coordinator::new(cfg, ds.dim));
+        for inst in ds.iter() {
+            streaming.learn(&inst.features, inst.label);
+        }
+        assert_eq!(streaming.trained_instances(), scheduled.trained_instances());
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                streaming.predict(&inst.features).to_bits(),
+                scheduled.predict(&inst.features).to_bits(),
+                "the Local rule has no feedback phase, so streaming and \
+                 scheduled training must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_learn_applies_delayed_feedback() {
+        let ds = small_ds();
+        let cfg = RunConfig {
+            topology: Topology::TwoLayer { shards: 2 },
+            rule: UpdateRule::DelayedGlobal,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 1.0),
+            clip01: false,
+            tau: 8,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        let before = c.predict(&ds.instances[0].features);
+        assert_eq!(before, 0.0);
+        for inst in ds.iter().take(100) {
+            c.learn_one(&inst.features, inst.label);
+        }
+        // with τ = 8 and 100 instances, ≥ 92 feedback phases have run:
+        // weights must have moved even though the rule has no local phase
+        let after = c.predict(&ds.instances[0].features);
+        assert_ne!(after, 0.0);
+        c.flush_feedback();
+        assert_eq!(c.trained_instances(), 100);
+    }
+
+    #[test]
+    fn streaming_learn_on_centralized_rule_is_sgd_step() {
+        let ds = small_ds();
+        let cfg = RunConfig {
+            rule: UpdateRule::Minibatch { batch: 64 },
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 1.0),
+            clip01: false,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, ds.dim);
+        let mut sgd =
+            Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(2.0, 1.0));
+        for inst in ds.iter().take(200) {
+            c.learn_one(&inst.features, inst.label);
+            sgd.learn(&inst.features, inst.label);
+        }
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                c.predict(&inst.features).to_bits(),
+                Sgd::predict(&sgd, &inst.features).to_bits()
+            );
+        }
+    }
+}

@@ -8,45 +8,85 @@
 //! come back as [`io::Error`]s — never a panic, never a silently wrong
 //! model.
 //!
+//! This module is deliberately the **only** place in the crate that
+//! branches on model kind: everything above it — the builder, the CLI,
+//! the prediction server — works through [`crate::model::Model`] and
+//! [`crate::serve::snapshot::SnapshotPredict`] trait dispatch, and the
+//! codec's job is exactly to turn bytes into those trait objects
+//! ([`read_model`]) and back ([`crate::model::Model::write`]).
+//!
 //! Layout (all integers little-endian):
 //! ```text
-//! magic "POLZ" | u32 format version | u64 config digest
-//! u64 payload checksum (FNV-1a) | u64 payload length
+//! magic "POLZ" | u32 format version | u8 payload encoding
+//! u64 config digest | u64 payload checksum (FNV-1a over
+//! encoding byte ‖ payload) | u64 payload length
 //! payload:
 //!   u8 kind (0 = sgd, 1 = central coordinator, 2 = tree coordinator)
 //!   u32 config-text length | config text (canonical `key = value`)
 //!   u64 dim | u64 routing salt (sharder signature; 0 for sgd/central)
 //!   u64 trained instances
 //!   u32 table count
-//!   per table: u64 step clock | u64 length | length × f32 weights
+//!   per table (encoding 0, raw):
+//!     u64 step clock | u64 length | length × f32 weights
+//!   per table (encoding 1, zero-run sparse):
+//!     u64 step clock | u64 length | u32 run count
+//!     per run: u32 start | u32 count | count × f32 weights
 //! ```
+//! Online-learned weight tables over hashed feature spaces are mostly
+//! zeros (only touched slots ever move), so encoding 1 stores just the
+//! non-zero stretches; the writer picks whichever encoding is smaller
+//! for the whole file, and zeros inside a run are kept verbatim so the
+//! round-trip stays bit-identical (a `-0.0` weight has non-zero bits
+//! and is always stored explicitly). Format version 1 files (no
+//! encoding byte, raw tables, checksum over the payload alone) are
+//! still readable.
+//!
 //! The config digest is FNV-1a over (config text ‖ dim ‖ salt) — the
 //! serving process verifies it so a model is never served against a
 //! different hashing/sharding/topology setup than it was trained with.
 
 use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::coordinator::Coordinator;
-use crate::hashing::fnv1a64;
+use crate::hashing::{fnv1a64, fnv1a64_iter};
 use crate::learner::sgd::Sgd;
-use crate::learner::OnlineLearner;
 use crate::loss::Loss;
 use crate::lr::LrSchedule;
+use crate::model::Model;
 use crate::serve::snapshot::ModelSnapshot;
 
 pub const MAGIC: &[u8; 4] = b"POLZ";
-pub const FORMAT_VERSION: u32 = 1;
+pub const FORMAT_VERSION: u32 = 2;
 
-/// Caps keeping corrupted length fields from attempting absurd
-/// allocations before the checksum is even checked.
+/// Payload encodings (the byte after the format version).
+pub const ENC_RAW: u8 = 0;
+pub const ENC_SPARSE: u8 = 1;
+
+/// Caps keeping corrupted or hostile length fields from attempting
+/// absurd allocations (the checksum authenticates integrity, not
+/// intent — a crafted file can carry a valid checksum). The writer
+/// enforces the same caps, so a checkpoint that saves successfully is
+/// always loadable. `MAX_TOTAL_PARAMS` bounds the *aggregate* decoded
+/// size: the zero-run encoding legitimately expands (that is its
+/// point), but never past one `MAX_TABLE`-worth of parameters per file.
 const MAX_PAYLOAD: u64 = 1 << 31;
 const MAX_CFG_TEXT: u32 = 1 << 20;
 const MAX_TABLE: u64 = 1 << 31;
 const MAX_TABLES: u32 = 1 << 20;
+const MAX_TOTAL_PARAMS: u64 = 1 << 31;
+
+/// Zero gaps of at most this many slots are kept inline inside a run
+/// (a gap of g zeros costs 4·g bytes inline vs 8 bytes of run header).
+const RUN_MERGE_GAP: usize = 2;
 
 /// What a checkpoint holds, ready to use: predictors warm-start and can
-/// keep training (the step clocks are preserved).
+/// keep training (the step clocks are preserved). Callers that do not
+/// care about the concrete type should use [`read_model`]/[`load_model`]
+/// and stay on the [`Model`] trait.
 pub enum Checkpoint {
     Sgd(Sgd),
     Coordinator(Box<Coordinator>),
@@ -56,6 +96,7 @@ pub enum Checkpoint {
 #[derive(Clone, Debug)]
 pub struct CheckpointInfo {
     pub format_version: u32,
+    pub encoding: u8,
     pub kind: u8,
     pub config_digest: u64,
     pub dim: u64,
@@ -72,6 +113,14 @@ impl CheckpointInfo {
             KIND_SGD => "sgd",
             KIND_CENTRAL => "central-coordinator",
             KIND_TREE => "tree-coordinator",
+            _ => "unknown",
+        }
+    }
+
+    pub fn encoding_name(&self) -> &'static str {
+        match self.encoding {
+            ENC_RAW => "raw",
+            ENC_SPARSE => "zero-run",
             _ => "unknown",
         }
     }
@@ -93,16 +142,80 @@ pub fn config_digest(cfg_text: &str, dim: u64, salt: u64) -> u64 {
     fnv1a64(&bytes)
 }
 
+/// Checksum covering the encoding byte and the payload, so a flipped
+/// encoding byte is caught even though the payload bytes are intact.
+fn payload_checksum(encoding: u8, payload: &[u8]) -> u64 {
+    fnv1a64_iter(std::iter::once(encoding).chain(payload.iter().copied()))
+}
+
 // ------------------------------------------------------------- writing
 
-fn push_table(payload: &mut Vec<u8>, steps: u64, w: &[f32]) {
-    payload.extend_from_slice(&steps.to_le_bytes());
-    payload.extend_from_slice(&(w.len() as u64).to_le_bytes());
+/// Non-zero stretches of a weight table as `(start, count)` runs; zero
+/// gaps of up to [`RUN_MERGE_GAP`] slots stay inline (cheaper than a
+/// fresh run header). "Zero" means bit-pattern zero: `-0.0` is kept.
+fn sparse_runs(w: &[f32]) -> Vec<(u32, u32)> {
+    let mut runs = Vec::new();
+    let mut i = 0usize;
+    while i < w.len() {
+        if w[i].to_bits() == 0 {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut end = i + 1; // exclusive end at the last non-zero seen
+        let mut j = i + 1;
+        let mut gap = 0usize;
+        while j < w.len() {
+            if w[j].to_bits() != 0 {
+                end = j + 1;
+                gap = 0;
+            } else {
+                gap += 1;
+                if gap > RUN_MERGE_GAP {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        runs.push((start as u32, (end - start) as u32));
+        i = end;
+    }
+    runs
+}
+
+fn push_table_raw(out: &mut Vec<u8>, steps: u64, w: &[f32]) {
+    out.extend_from_slice(&steps.to_le_bytes());
+    out.extend_from_slice(&(w.len() as u64).to_le_bytes());
     for &x in w {
-        payload.extend_from_slice(&x.to_le_bytes());
+        out.extend_from_slice(&x.to_le_bytes());
     }
 }
 
+fn push_table_sparse(
+    out: &mut Vec<u8>,
+    steps: u64,
+    w: &[f32],
+    runs: &[(u32, u32)],
+) {
+    out.extend_from_slice(&steps.to_le_bytes());
+    out.extend_from_slice(&(w.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(runs.len() as u32).to_le_bytes());
+    for &(start, count) in runs {
+        out.extend_from_slice(&start.to_le_bytes());
+        out.extend_from_slice(&count.to_le_bytes());
+        for &x in &w[start as usize..(start + count) as usize] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Serialize the prelude + tables, picking the smaller table encoding
+/// for the whole file. Both encoded sizes are computed arithmetically
+/// first, so only the winning encoding is ever materialized (checkpoint
+/// writes run on the training thread). The reader's structural caps
+/// are enforced here too: a checkpoint that saves successfully is
+/// always loadable — a too-large model errors at save time instead of
+/// producing an unrecoverable file. Returns `(encoding, payload)`.
 fn build_payload(
     kind: u8,
     cfg_text: &str,
@@ -110,9 +223,40 @@ fn build_payload(
     salt: u64,
     trained: u64,
     tables: &[(u64, &[f32])],
-) -> Vec<u8> {
-    let wlen: usize = tables.iter().map(|(_, w)| w.len() * 4 + 16).sum();
-    let mut payload = Vec::with_capacity(1 + 4 + cfg_text.len() + 28 + wlen);
+) -> io::Result<(u8, Vec<u8>)> {
+    if cfg_text.len() as u32 > MAX_CFG_TEXT {
+        return Err(bad("config text exceeds the checkpoint format cap"));
+    }
+    if tables.len() as u32 > MAX_TABLES {
+        return Err(bad("table count exceeds the checkpoint format cap"));
+    }
+    let total_params: u64 = tables.iter().map(|&(_, w)| w.len() as u64).sum();
+    if tables.iter().any(|&(_, w)| w.len() as u64 > MAX_TABLE)
+        || total_params > MAX_TOTAL_PARAMS
+    {
+        return Err(bad(format!(
+            "model too large for the checkpoint format ({total_params} \
+             parameters; cap {MAX_TOTAL_PARAMS})"
+        )));
+    }
+    let runs_per_table: Vec<Vec<(u32, u32)>> =
+        tables.iter().map(|&(_, w)| sparse_runs(w)).collect();
+    let mut raw_size = 0usize;
+    let mut sparse_size = 0usize;
+    for (&(_, w), runs) in tables.iter().zip(&runs_per_table) {
+        raw_size += 16 + w.len() * 4;
+        sparse_size += 16
+            + 4
+            + runs
+                .iter()
+                .map(|&(_, count)| 8 + count as usize * 4)
+                .sum::<usize>();
+    }
+    let encoding = if sparse_size < raw_size { ENC_SPARSE } else { ENC_RAW };
+
+    let section_size = sparse_size.min(raw_size);
+    let mut payload =
+        Vec::with_capacity(1 + 4 + cfg_text.len() + 28 + section_size);
     payload.push(kind);
     payload.extend_from_slice(&(cfg_text.len() as u32).to_le_bytes());
     payload.extend_from_slice(cfg_text.as_bytes());
@@ -120,10 +264,21 @@ fn build_payload(
     payload.extend_from_slice(&salt.to_le_bytes());
     payload.extend_from_slice(&trained.to_le_bytes());
     payload.extend_from_slice(&(tables.len() as u32).to_le_bytes());
-    for &(steps, w) in tables {
-        push_table(&mut payload, steps, w);
+    for (&(steps, w), runs) in tables.iter().zip(&runs_per_table) {
+        if encoding == ENC_SPARSE {
+            push_table_sparse(&mut payload, steps, w, runs);
+        } else {
+            push_table_raw(&mut payload, steps, w);
+        }
     }
-    payload
+    if payload.len() as u64 > MAX_PAYLOAD {
+        return Err(bad(format!(
+            "model too large for the checkpoint format (payload {} bytes; \
+             cap {MAX_PAYLOAD})",
+            payload.len()
+        )));
+    }
+    Ok((encoding, payload))
 }
 
 fn write_framed(
@@ -131,12 +286,14 @@ fn write_framed(
     cfg_text: &str,
     dim: u64,
     salt: u64,
+    encoding: u8,
     payload: &[u8],
 ) -> io::Result<()> {
     out.write_all(MAGIC)?;
     out.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    out.write_all(&[encoding])?;
     out.write_all(&config_digest(cfg_text, dim, salt).to_le_bytes())?;
-    out.write_all(&fnv1a64(payload).to_le_bytes())?;
+    out.write_all(&payload_checksum(encoding, payload).to_le_bytes())?;
     out.write_all(&(payload.len() as u64).to_le_bytes())?;
     out.write_all(payload)
 }
@@ -148,19 +305,26 @@ fn sgd_cfg_text(s: &Sgd) -> String {
     format!("kind = sgd\nloss = {}\nlr = {}\n", s.loss.name(), s.lr.spec())
 }
 
+/// The immutable serving snapshot of a plain [`Sgd`] learner (digest
+/// included, so a server can verify provenance like any other model).
+pub(crate) fn sgd_snapshot(s: &Sgd) -> ModelSnapshot {
+    let digest = config_digest(&sgd_cfg_text(s), s.w.len() as u64, 0);
+    ModelSnapshot::central(s.w.clone(), s.steps(), digest)
+}
+
 /// Serialize a plain [`Sgd`] learner.
 pub fn write_sgd(s: &Sgd, out: &mut impl Write) -> io::Result<()> {
     let cfg_text = sgd_cfg_text(s);
     let dim = s.w.len() as u64;
-    let payload = build_payload(
+    let (encoding, payload) = build_payload(
         KIND_SGD,
         &cfg_text,
         dim,
         0,
         s.steps(),
         &[(s.steps(), &s.w)],
-    );
-    write_framed(out, &cfg_text, dim, 0, &payload)
+    )?;
+    write_framed(out, &cfg_text, dim, 0, encoding, &payload)
 }
 
 /// Serialize a trained [`Coordinator`] (centralized or tree).
@@ -168,7 +332,7 @@ pub fn write_coordinator(c: &Coordinator, out: &mut impl Write) -> io::Result<()
     let cfg_text = c.cfg.to_cfg_string();
     let dim = c.dim() as u64;
     let salt = c.sharder_signature();
-    let payload = match c.central_weights() {
+    let (encoding, payload) = match c.central_weights() {
         Some(w) => build_payload(
             KIND_CENTRAL,
             &cfg_text,
@@ -176,7 +340,7 @@ pub fn write_coordinator(c: &Coordinator, out: &mut impl Write) -> io::Result<()
             salt,
             c.trained_instances(),
             &[(c.trained_instances(), w)],
-        ),
+        )?,
         None => {
             let tables: Vec<(u64, &[f32])> = c
                 .nodes()
@@ -190,22 +354,157 @@ pub fn write_coordinator(c: &Coordinator, out: &mut impl Write) -> io::Result<()
                 salt,
                 c.trained_instances(),
                 &tables,
-            )
+            )?
         }
     };
-    write_framed(out, &cfg_text, dim, salt, &payload)
+    write_framed(out, &cfg_text, dim, salt, encoding, &payload)
 }
 
-pub fn save_sgd(s: &Sgd, path: &std::path::Path) -> io::Result<()> {
-    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
-    write_sgd(s, &mut f)?;
-    f.flush()
+/// Write a checkpoint atomically: serialize into `<path>.tmp`, fsync,
+/// then rename over `path`, so readers never observe a half-written
+/// file and a crash never clobbers the previous checkpoint.
+pub fn save_atomic(
+    path: &Path,
+    write_fn: impl FnOnce(&mut dyn Write) -> io::Result<()>,
+) -> io::Result<()> {
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    let result = (|| {
+        let file = std::fs::File::create(&tmp)?;
+        let mut out = io::BufWriter::new(file);
+        write_fn(&mut out)?;
+        out.flush()?;
+        out.get_ref().sync_all()?;
+        drop(out);
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
 
-pub fn save_coordinator(c: &Coordinator, path: &std::path::Path) -> io::Result<()> {
-    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
-    write_coordinator(c, &mut f)?;
-    f.flush()
+pub fn save_sgd(s: &Sgd, path: &Path) -> io::Result<()> {
+    save_atomic(path, |out| write_sgd(s, out))
+}
+
+pub fn save_coordinator(c: &Coordinator, path: &Path) -> io::Result<()> {
+    save_atomic(path, |out| write_coordinator(c, out))
+}
+
+/// Background checkpointing cadence: every `every` trained instances,
+/// the owning trainer serializes itself and hands the bytes to a
+/// writer thread that performs the atomic file write (riding the same
+/// per-instance tick the [`crate::serve::SnapshotPublisher`] uses, but
+/// keeping disk latency and `fsync` off the training loop). Install
+/// via [`crate::model::Model::install_checkpoint_sink`] or
+/// `SessionBuilder::checkpoint_every`; call [`Self::flush`] (or
+/// `Model::finish_checkpoints`) before relying on the file.
+pub struct CheckpointSink {
+    path: PathBuf,
+    every: u64,
+    next_at: u64,
+    /// Successful background writes so far (shared with
+    /// [`Self::writes_handle`] observers).
+    writes: Arc<AtomicU64>,
+    /// The in-flight background write, if any (at most one).
+    pending: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CheckpointSink {
+    pub fn new(path: impl Into<PathBuf>, every: u64) -> CheckpointSink {
+        let every = every.max(1);
+        CheckpointSink {
+            path: path.into(),
+            every,
+            next_at: every,
+            writes: Arc::new(AtomicU64::new(0)),
+            pending: None,
+        }
+    }
+
+    /// Re-arm the cadence from a training-stream position (warm starts:
+    /// first write lands `every` instances after `trained`, not at the
+    /// absolute position `every`).
+    pub fn arm(&mut self, trained: u64) {
+        self.next_at = trained + self.every;
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// Whether the cadence says a checkpoint is due at this position.
+    pub fn tick(&self, trained: u64) -> bool {
+        trained >= self.next_at
+    }
+
+    /// Successful background writes so far.
+    pub fn writes(&self) -> u64 {
+        self.writes.load(Ordering::Relaxed)
+    }
+
+    /// A live handle to the write counter (observable after the sink is
+    /// moved into a trainer).
+    pub fn writes_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.writes)
+    }
+
+    /// Write one checkpoint atomically *on the calling thread* and
+    /// re-arm the cadence. The cadence re-arms even on failure so a
+    /// persistently failing path does not retry on every instance.
+    pub fn write_with(
+        &mut self,
+        trained: u64,
+        write_fn: impl FnOnce(&mut dyn Write) -> io::Result<()>,
+    ) -> io::Result<()> {
+        self.flush();
+        self.next_at = trained + self.every;
+        save_atomic(&self.path, write_fn)?;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Hand one already-serialized checkpoint to the background writer
+    /// and re-arm the cadence. At most one write is ever in flight: a
+    /// new write first joins the previous one, so a slow disk
+    /// backpressures the cadence instead of stacking threads. Write
+    /// failures log to stderr (background durability is best-effort —
+    /// end-of-training saves go through [`save_atomic`] directly).
+    pub fn write_async(&mut self, trained: u64, bytes: Vec<u8>) {
+        self.next_at = trained + self.every;
+        self.flush();
+        let path = self.path.clone();
+        let writes = Arc::clone(&self.writes);
+        self.pending = Some(std::thread::spawn(move || {
+            match save_atomic(&path, |out| out.write_all(&bytes)) {
+                Ok(()) => {
+                    writes.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    eprintln!("background checkpoint to {path:?} failed: {e}")
+                }
+            }
+        }));
+    }
+
+    /// Wait for any in-flight background write to land.
+    pub fn flush(&mut self) {
+        if let Some(h) = self.pending.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CheckpointSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
 }
 
 // ------------------------------------------------------------- reading
@@ -239,6 +538,14 @@ impl<'a> Cursor<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    fn f32_into(&mut self, out: &mut [f32]) -> io::Result<()> {
+        let raw = self.take(out.len() * 4)?;
+        for (slot, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *slot = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+
     fn done(&self) -> bool {
         self.pos == self.buf.len()
     }
@@ -250,22 +557,81 @@ struct RawCheckpoint {
     tables: Vec<(u64, Vec<f32>)>,
 }
 
+fn read_table(
+    cur: &mut Cursor,
+    encoding: u8,
+    budget: u64,
+) -> io::Result<(u64, Vec<f32>)> {
+    let steps = cur.u64()?;
+    let len = cur.u64()?;
+    if len > MAX_TABLE || len > budget {
+        return Err(bad("weight table exceeds cap"));
+    }
+    let mut w = vec![0.0f32; len as usize];
+    match encoding {
+        ENC_RAW => cur.f32_into(&mut w)?,
+        ENC_SPARSE => {
+            let nruns = cur.u32()?;
+            if u64::from(nruns) > len {
+                return Err(bad("zero-run count exceeds table length"));
+            }
+            let mut prev_end = 0u64;
+            for _ in 0..nruns {
+                let start = u64::from(cur.u32()?);
+                let count = u64::from(cur.u32()?);
+                if count == 0 {
+                    return Err(bad("empty zero-run"));
+                }
+                if start < prev_end || start + count > len {
+                    return Err(bad("zero-run out of bounds"));
+                }
+                cur.f32_into(
+                    &mut w[start as usize..(start + count) as usize],
+                )?;
+                prev_end = start + count;
+            }
+        }
+        e => return Err(bad(format!("unknown payload encoding {e}"))),
+    }
+    Ok((steps, w))
+}
+
 fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
-    let mut header = [0u8; 32];
-    inp.read_exact(&mut header)
-        .map_err(|_| bad("truncated header"))?;
-    if &header[0..4] != MAGIC {
+    let mut head = [0u8; 8];
+    inp.read_exact(&mut head).map_err(|_| bad("truncated header"))?;
+    if &head[0..4] != MAGIC {
         return Err(bad("bad magic (not a .polz checkpoint)"));
     }
-    let format_version = u32::from_le_bytes(header[4..8].try_into().unwrap());
-    if format_version != FORMAT_VERSION {
-        return Err(bad(format!(
-            "unsupported checkpoint version {format_version}"
-        )));
+    let format_version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    // version 1: no encoding byte, raw tables, checksum over the payload
+    // alone; version 2: encoding byte after the version, checksum over
+    // (encoding ‖ payload)
+    let (encoding, digest, checksum, payload_len) = match format_version {
+        1 => {
+            let mut rest = [0u8; 24];
+            inp.read_exact(&mut rest).map_err(|_| bad("truncated header"))?;
+            (
+                ENC_RAW,
+                u64::from_le_bytes(rest[0..8].try_into().unwrap()),
+                u64::from_le_bytes(rest[8..16].try_into().unwrap()),
+                u64::from_le_bytes(rest[16..24].try_into().unwrap()),
+            )
+        }
+        2 => {
+            let mut rest = [0u8; 25];
+            inp.read_exact(&mut rest).map_err(|_| bad("truncated header"))?;
+            (
+                rest[0],
+                u64::from_le_bytes(rest[1..9].try_into().unwrap()),
+                u64::from_le_bytes(rest[9..17].try_into().unwrap()),
+                u64::from_le_bytes(rest[17..25].try_into().unwrap()),
+            )
+        }
+        v => return Err(bad(format!("unsupported checkpoint version {v}"))),
+    };
+    if encoding > ENC_SPARSE {
+        return Err(bad(format!("unknown payload encoding {encoding}")));
     }
-    let digest = u64::from_le_bytes(header[8..16].try_into().unwrap());
-    let checksum = u64::from_le_bytes(header[16..24].try_into().unwrap());
-    let payload_len = u64::from_le_bytes(header[24..32].try_into().unwrap());
     if payload_len > MAX_PAYLOAD {
         return Err(bad(format!("payload length {payload_len} exceeds cap")));
     }
@@ -277,7 +643,12 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
             payload.len()
         )));
     }
-    if fnv1a64(&payload) != checksum {
+    let expect = if format_version == 1 {
+        fnv1a64(&payload)
+    } else {
+        payload_checksum(encoding, &payload)
+    };
+    if expect != checksum {
         return Err(bad("payload checksum mismatch (corrupted checkpoint)"));
     }
 
@@ -305,17 +676,11 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
     let mut tables = Vec::with_capacity(ntables as usize);
     let mut total_params = 0u64;
     for _ in 0..ntables {
-        let steps = cur.u64()?;
-        let len = cur.u64()?;
-        if len > MAX_TABLE {
-            return Err(bad("weight table exceeds cap"));
-        }
-        let raw = cur.take(len as usize * 4)?;
-        let mut w = Vec::with_capacity(len as usize);
-        for c in raw.chunks_exact(4) {
-            w.push(f32::from_le_bytes(c.try_into().unwrap()));
-        }
-        total_params += len;
+        // pass the remaining aggregate budget down so a hostile file
+        // cannot stack many max-size sparse tables into one huge alloc
+        let (steps, w) =
+            read_table(&mut cur, encoding, MAX_TOTAL_PARAMS - total_params)?;
+        total_params += w.len() as u64;
         tables.push((steps, w));
     }
     if !cur.done() {
@@ -324,6 +689,7 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
     Ok(RawCheckpoint {
         info: CheckpointInfo {
             format_version,
+            encoding,
             kind,
             config_digest: digest,
             dim,
@@ -408,14 +774,29 @@ fn parse_run_config(text: &str) -> io::Result<RunConfig> {
 }
 
 /// Load a checkpoint from a file.
-pub fn load(path: &std::path::Path) -> io::Result<Checkpoint> {
+pub fn load(path: &Path) -> io::Result<Checkpoint> {
     let mut f = io::BufReader::new(std::fs::File::open(path)?);
     read(&mut f)
 }
 
+/// Deserialize a checkpoint straight to a [`Model`] trait object — the
+/// one place the kind byte turns into a concrete type.
+pub fn read_model(inp: &mut impl Read) -> io::Result<Box<dyn Model>> {
+    Ok(match read(inp)? {
+        Checkpoint::Sgd(s) => Box::new(s) as Box<dyn Model>,
+        Checkpoint::Coordinator(c) => c,
+    })
+}
+
+/// Load a [`Model`] trait object from a file.
+pub fn load_model(path: &Path) -> io::Result<Box<dyn Model>> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    read_model(&mut f)
+}
+
 /// Parse structure + metadata without building the model (`pol
 /// checkpoint` inspection; still verifies checksum and digest).
-pub fn inspect(path: &std::path::Path) -> io::Result<CheckpointInfo> {
+pub fn inspect(path: &Path) -> io::Result<CheckpointInfo> {
     let mut f = io::BufReader::new(std::fs::File::open(path)?);
     Ok(read_raw(&mut f)?.info)
 }
@@ -424,21 +805,25 @@ impl Checkpoint {
     /// The immutable serving view of this checkpoint.
     pub fn into_snapshot(self) -> ModelSnapshot {
         match self {
-            Checkpoint::Sgd(s) => {
-                let trained = s.steps();
-                let digest =
-                    config_digest(&sgd_cfg_text(&s), s.w.len() as u64, 0);
-                ModelSnapshot::central(s.w, trained, digest)
-            }
+            Checkpoint::Sgd(s) => sgd_snapshot(&s),
             Checkpoint::Coordinator(c) => c.snapshot(),
         }
     }
 
-    /// Predict without consuming the checkpoint.
+    /// Predict without consuming the checkpoint. Loaded models face
+    /// arbitrary caller input, so this is the bounds-checked request
+    /// surface (out-of-range indices contribute nothing; in-range
+    /// inputs score bit-identically to the training-side predict).
     pub fn predict(&self, x: &[crate::linalg::SparseFeat]) -> f64 {
         match self {
-            Checkpoint::Sgd(s) => s.predict(x),
-            Checkpoint::Coordinator(c) => c.predict(x),
+            Checkpoint::Sgd(s) => {
+                crate::serve::snapshot::request_dot(&s.w, x)
+            }
+            Checkpoint::Coordinator(c) => {
+                let mut scratch =
+                    crate::serve::snapshot::PredictScratch::default();
+                c.predict_request(x, &mut scratch)
+            }
         }
     }
 
@@ -561,7 +946,7 @@ mod tests {
         let s = trained_sgd();
         let mut buf = Vec::new();
         write_sgd(&s, &mut buf).unwrap();
-        for cut in [0, 3, 8, 31, 32, 40, buf.len() - 1] {
+        for cut in [0, 3, 8, 31, 33, 40, buf.len() - 1] {
             let err = read(&mut &buf[..cut]).unwrap_err();
             assert_eq!(err.kind(), io::ErrorKind::InvalidData, "cut {cut}: {err}");
         }
@@ -580,6 +965,127 @@ mod tests {
     }
 
     #[test]
+    fn flipped_encoding_byte_detected() {
+        let s = trained_sgd();
+        let mut buf = Vec::new();
+        write_sgd(&s, &mut buf).unwrap();
+        // byte 8 is the payload-encoding byte; the checksum covers it
+        buf[8] ^= 0x01;
+        let err = read(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn sparse_runs_shapes() {
+        assert!(sparse_runs(&[0.0; 8]).is_empty());
+        assert_eq!(sparse_runs(&[1.0, 2.0]), vec![(0, 2)]);
+        // short gaps stay inline; long gaps split runs
+        assert_eq!(sparse_runs(&[1.0, 0.0, 0.0, 2.0]), vec![(0, 4)]);
+        assert_eq!(
+            sparse_runs(&[1.0, 0.0, 0.0, 0.0, 2.0]),
+            vec![(0, 1), (4, 1)]
+        );
+        // -0.0 has a non-zero bit pattern and must be kept
+        assert_eq!(sparse_runs(&[0.0, -0.0, 0.0]), vec![(1, 1)]);
+        // trailing zeros after the last non-zero are dropped
+        assert_eq!(sparse_runs(&[0.0, 3.0, 0.0, 0.0, 0.0]), vec![(1, 1)]);
+    }
+
+    #[test]
+    fn zero_heavy_table_compresses_and_roundtrips() {
+        // a sparse online learner over a wide hashed space: almost all
+        // slots untouched
+        let mut w = vec![0.0f32; 16_384];
+        w[7] = 1.5;
+        w[8] = -0.25;
+        w[5_000] = 3.0;
+        w[16_383] = -0.0;
+        let s = Sgd::from_parts(
+            w.clone(),
+            Loss::Logistic,
+            LrSchedule::constant(0.1),
+            42,
+        );
+        let mut buf = Vec::new();
+        write_sgd(&s, &mut buf).unwrap();
+        assert!(
+            buf.len() < 16_384 * 4 / 10,
+            "zero-heavy table should compress well, got {} bytes",
+            buf.len()
+        );
+        let back = match read(&mut buf.as_slice()).unwrap() {
+            Checkpoint::Sgd(b) => b,
+            _ => panic!("wrong kind"),
+        };
+        assert_eq!(back.steps(), 42);
+        assert_eq!(back.w.len(), w.len());
+        for (a, b) in back.w.iter().zip(&w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn dense_table_falls_back_to_raw() {
+        let w: Vec<f32> = (0..512).map(|i| 0.01 * (i + 1) as f32).collect();
+        let s = Sgd::from_parts(
+            w.clone(),
+            Loss::Squared,
+            LrSchedule::constant(0.1),
+            7,
+        );
+        let mut buf = Vec::new();
+        write_sgd(&s, &mut buf).unwrap();
+        assert_eq!(buf[8], ENC_RAW, "dense tables should pick raw encoding");
+        let back = match read(&mut buf.as_slice()).unwrap() {
+            Checkpoint::Sgd(b) => b,
+            _ => panic!("wrong kind"),
+        };
+        assert_eq!(back.w, w);
+    }
+
+    #[test]
+    fn format_v1_files_still_read() {
+        // hand-write the version-1 framing (no encoding byte, raw
+        // tables, checksum over the payload alone) and read it back
+        let s = trained_sgd();
+        let cfg_text = sgd_cfg_text(&s);
+        let dim = s.w.len() as u64;
+        let mut payload = Vec::new();
+        payload.push(0u8); // kind sgd
+        payload.extend_from_slice(&(cfg_text.len() as u32).to_le_bytes());
+        payload.extend_from_slice(cfg_text.as_bytes());
+        payload.extend_from_slice(&dim.to_le_bytes());
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        payload.extend_from_slice(&s.steps().to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&s.steps().to_le_bytes());
+        payload.extend_from_slice(&(s.w.len() as u64).to_le_bytes());
+        for &x in &s.w {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(
+            &config_digest(&cfg_text, dim, 0).to_le_bytes(),
+        );
+        buf.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        let info_src = buf.clone();
+        let back = match read(&mut buf.as_slice()).unwrap() {
+            Checkpoint::Sgd(b) => b,
+            _ => panic!("wrong kind"),
+        };
+        assert_eq!(back.w, s.w);
+        assert_eq!(back.steps(), s.steps());
+        // inspect reports the old version + raw encoding
+        let raw = read_raw(&mut info_src.as_slice()).unwrap();
+        assert_eq!(raw.info.format_version, 1);
+        assert_eq!(raw.info.encoding_name(), "raw");
+    }
+
+    #[test]
     fn inspect_reports_meta() {
         let s = trained_sgd();
         let dir = std::env::temp_dir().join("pol_ckpt_test");
@@ -587,11 +1093,36 @@ mod tests {
         let path = dir.join("m.polz");
         save_sgd(&s, &path).unwrap();
         let info = inspect(&path).unwrap();
+        assert_eq!(info.format_version, FORMAT_VERSION);
         assert_eq!(info.kind_name(), "sgd");
         assert_eq!(info.dim, s.w.len() as u64);
         assert_eq!(info.tables, 1);
         assert_eq!(info.total_params, s.w.len() as u64);
         assert!(info.config_text.contains("loss = logistic"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_sink_cadence_and_atomic_write() {
+        let dir = std::env::temp_dir().join("pol_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bg.polz");
+        std::fs::remove_file(&path).ok();
+        let s = trained_sgd();
+        let mut sink = CheckpointSink::new(&path, 100);
+        let handle = sink.writes_handle();
+        assert!(!sink.tick(99));
+        assert!(sink.tick(100));
+        sink.write_with(100, |out| write_sgd(&s, out)).unwrap();
+        assert_eq!(handle.load(Ordering::Relaxed), 1);
+        assert!(!sink.tick(150), "cadence must re-arm after a write");
+        assert!(sink.tick(200));
+        // the written file is a valid checkpoint, and no .tmp remains
+        let back = load(&path).unwrap();
+        assert_eq!(back.dim(), s.w.len());
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists());
         std::fs::remove_file(&path).ok();
     }
 }

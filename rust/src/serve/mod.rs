@@ -1,27 +1,35 @@
-//! The serving layer: checkpointing + a train-while-serve prediction
-//! server.
+//! The serving layer: checkpointing + a multi-model train-while-serve
+//! prediction server.
 //!
 //! The paper's feature-sharded architectures exist to keep learning
-//! *online* under heavy traffic; this module is the missing production
-//! half: persist any trained topology and answer prediction requests
-//! while training continues.
+//! *online* under heavy traffic; this module is the production half:
+//! persist any trained topology and answer prediction requests — for
+//! several models at once — while training continues.
 //!
 //! * [`checkpoint`] — the versioned, self-describing `.polz` binary
-//!   format (magic + version + config digest + whole-payload checksum +
-//!   per-shard weight tables). `save`/`load` round-trips [`Sgd`]
-//!   learners, centralized coordinators, and full sharded node trees,
-//!   bit-identically, and warm-starts training (step clocks are
-//!   preserved).
+//!   format (magic + version + payload-encoding byte + config digest +
+//!   whole-payload checksum + per-shard weight tables, with zero-run
+//!   compression for the mostly-zero tables online learners produce).
+//!   `save*` writes atomically (temp file + rename); round-trips are
+//!   bit-identical and warm-start training (step clocks preserved);
+//!   [`checkpoint::CheckpointSink`] writes checkpoints on a cadence in
+//!   the background; [`checkpoint::read_model`] is the **only** place
+//!   in the crate that branches on model kind — it turns bytes into
+//!   [`crate::model::Model`] trait objects.
 //! * [`snapshot`] — [`snapshot::ModelSnapshot`], the immutable
-//!   predictor the server swaps; self-contained (tree wiring + sharder
-//!   identity + weights) with an allocation-free predict path.
+//!   predictor the server swaps; a [`snapshot::SnapshotPredict`] trait
+//!   object (tree wiring + sharder identity + weights behind one
+//!   vtable) with an allocation-free predict path.
 //! * [`publisher`] — [`publisher::SnapshotCell`], the atomically
 //!   swappable holder, plus [`publisher::SnapshotPublisher`], the
-//!   coordinator hook that publishes a fresh snapshot every K trained
+//!   trainer hook that publishes a fresh snapshot every K trained
 //!   instances.
+//! * [`registry`] — [`registry::ModelRegistry`], N named cells behind
+//!   one server: several architectures (a sharded tree next to a flat
+//!   SGD table) served side by side, each live-updatable.
 //! * [`server`] — [`server::PredictionServer`], N serving threads
-//!   answering batched predict requests against the latest snapshot,
-//!   recording instances-behind staleness, latency histograms, and QPS.
+//!   answering batched predict requests routed by model name, with
+//!   per-model instances-behind staleness, latency histograms, and QPS.
 //!
 //! Readers see slightly *stale* weights, never *torn* ones — the
 //! delayed-read regime analyzed in *Slow Learners are Fast* (Langford,
@@ -32,26 +40,33 @@
 //! use std::sync::Arc;
 //! use pol::prelude::*;
 //!
-//! // load a checkpointed model and serve it on 4 threads
-//! let ckpt = pol::serve::checkpoint::load(std::path::Path::new("out.polz"))
-//!     .expect("load checkpoint");
-//! let cell = SnapshotCell::new(ckpt.into_snapshot());
-//! let server = PredictionServer::start(Arc::clone(&cell), 4);
+//! // serve two checkpointed architectures from one server
+//! let registry = ModelRegistry::new();
+//! for name in ["tree", "sgd"] {
+//!     let model = pol::model::load(format!("{name}.polz")).expect("load");
+//!     registry.insert(name, SnapshotCell::new(model.snapshot()));
+//! }
+//! let server = PredictionServer::start(Arc::clone(&registry), 4);
 //! let client = server.client();
-//! let resp = client.predict(vec![vec![(0, 1.0)]]).unwrap();
-//! println!("pred {} (version {}, {} instances behind)",
-//!          resp.preds[0], resp.snapshot_version, resp.staleness);
+//! let resp = client.predict_for("tree", vec![vec![(0, 1.0)]]).unwrap();
+//! println!("{}: pred {} (version {}, {} instances behind)",
+//!          resp.model, resp.preds[0], resp.snapshot_version, resp.staleness);
 //! ```
 
 pub mod checkpoint;
 pub mod publisher;
+pub mod registry;
 pub mod server;
 pub mod snapshot;
 
-#[allow(unused_imports)]
-use crate::learner::sgd::Sgd; // doc link
-
-pub use checkpoint::{Checkpoint, CheckpointInfo};
+pub use checkpoint::{Checkpoint, CheckpointInfo, CheckpointSink};
 pub use publisher::{SnapshotCell, SnapshotPublisher, SnapshotReader};
-pub use server::{PredictClient, PredictResponse, PredictionServer, ServeStats};
-pub use snapshot::{ModelSnapshot, PredictScratch, SnapshotModel};
+pub use registry::ModelRegistry;
+pub use server::{
+    ModelStats, PredictClient, PredictError, PredictResponse,
+    PredictionServer, ServeStats, DEFAULT_MODEL,
+};
+pub use snapshot::{
+    CentralPredictor, ModelSnapshot, PredictScratch, SnapshotPredict,
+    TreePredictor,
+};

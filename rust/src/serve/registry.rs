@@ -1,0 +1,154 @@
+//! The model registry: N named models behind one prediction server.
+//!
+//! A [`ModelRegistry`] maps model names to [`SnapshotCell`]s, so one
+//! [`crate::serve::server::PredictionServer`] can host several
+//! architectures — a sharded tree next to a centralized SGD table next
+//! to a plain checkpointed learner — each independently live-updatable
+//! through its own cell, each with its own staleness/latency/QPS
+//! metrics.
+//!
+//! The registry is read-mostly: serving workers cache a
+//! [`crate::serve::SnapshotReader`] per model and only re-resolve names
+//! when the registry `version` changes (one atomic load per request in
+//! steady state, exactly like the snapshot fast path). `insert` and
+//! `remove` bump the version, which invalidates every worker cache on
+//! its next request.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::serve::publisher::SnapshotCell;
+
+/// Named [`SnapshotCell`]s behind one server.
+pub struct ModelRegistry {
+    /// Bumped on every insert/remove; serving workers re-resolve their
+    /// cached readers when it changes.
+    version: AtomicU64,
+    models: RwLock<HashMap<String, Arc<SnapshotCell>>>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry {
+            version: AtomicU64::new(0),
+            models: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// A registry holding one named model.
+    pub fn with_model(
+        name: impl Into<String>,
+        cell: Arc<SnapshotCell>,
+    ) -> Arc<ModelRegistry> {
+        let reg = ModelRegistry::new();
+        reg.insert(name, cell);
+        reg
+    }
+
+    /// Register (or replace) a model; returns the previous cell under
+    /// that name, if any.
+    pub fn insert(
+        &self,
+        name: impl Into<String>,
+        cell: Arc<SnapshotCell>,
+    ) -> Option<Arc<SnapshotCell>> {
+        let prev = self
+            .models
+            .write()
+            .expect("registry lock")
+            .insert(name.into(), cell);
+        self.version.fetch_add(1, Ordering::Release);
+        prev
+    }
+
+    /// Deregister a model; in-flight requests already resolved keep
+    /// their snapshot, new requests get an unknown-model error.
+    pub fn remove(&self, name: &str) -> Option<Arc<SnapshotCell>> {
+        let prev = self.models.write().expect("registry lock").remove(name);
+        if prev.is_some() {
+            self.version.fetch_add(1, Ordering::Release);
+        }
+        prev
+    }
+
+    /// Resolve a model name to its cell.
+    pub fn get(&self, name: &str) -> Option<Arc<SnapshotCell>> {
+        self.models.read().expect("registry lock").get(name).cloned()
+    }
+
+    /// Registered model names, sorted (stable reporting order).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .models
+            .read()
+            .expect("registry lock")
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current registry version (bumped on insert/remove).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::snapshot::ModelSnapshot;
+
+    fn cell(val: f32) -> Arc<SnapshotCell> {
+        SnapshotCell::new(ModelSnapshot::central(vec![val; 4], 0, 0))
+    }
+
+    #[test]
+    fn insert_get_remove_bump_version() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.version(), 0);
+        assert!(reg.insert("a", cell(1.0)).is_none());
+        assert_eq!(reg.version(), 1);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("b").is_none());
+        // replacing returns the old cell and bumps the version
+        assert!(reg.insert("a", cell(2.0)).is_some());
+        assert_eq!(reg.version(), 2);
+        let got = reg.get("a").unwrap().load();
+        assert_eq!(got.predict(&[(0, 1.0)]), 2.0);
+        assert!(reg.remove("a").is_some());
+        assert_eq!(reg.version(), 3);
+        // removing a missing name is a no-op
+        assert!(reg.remove("a").is_none());
+        assert_eq!(reg.version(), 3);
+    }
+
+    #[test]
+    fn names_sorted() {
+        let reg = ModelRegistry::new();
+        reg.insert("zeta", cell(0.0));
+        reg.insert("alpha", cell(0.0));
+        reg.insert("mid", cell(0.0));
+        assert_eq!(reg.names(), vec!["alpha", "mid", "zeta"]);
+    }
+
+    #[test]
+    fn with_model_seeds_one_entry() {
+        let reg = ModelRegistry::with_model("m", cell(3.0));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("m").unwrap().load().predict(&[(1, 2.0)]), 6.0);
+    }
+}

@@ -1,16 +1,24 @@
 //! The prediction server: N serving threads answering batched predict
-//! requests against the latest published snapshot while training keeps
-//! running.
+//! requests, routed by model name through a [`ModelRegistry`], while
+//! training keeps running.
 //!
 //! Requests flow over an `mpsc` queue shared by the workers; each
-//! worker holds a [`SnapshotReader`] (one atomic load per request in
-//! steady state — no locks, no contention with the trainer except one
-//! mutex touch per publish) plus private predict scratch and a private
-//! latency histogram, merged into [`ServeStats`] at shutdown. Every
-//! response carries the snapshot version it was computed against and
-//! its instances-behind staleness, so clients can *observe* the
+//! worker caches a [`SnapshotReader`] per model name (one atomic load
+//! per request in steady state — no locks, no contention with the
+//! trainers except one mutex touch per publish, and one registry
+//! re-resolve per registry change) plus private predict scratch and
+//! private per-model latency histograms, merged into [`ServeStats`] at
+//! shutdown. Every response carries the model name it was routed to,
+//! the snapshot version it was computed against, and its
+//! instances-behind staleness, so clients can *observe* the
 //! delayed-read regime instead of guessing at it.
+//!
+//! The workers never branch on model kind: scoring goes through
+//! [`crate::serve::snapshot::SnapshotPredict`] trait dispatch, so a
+//! registry can host a sharded tree next to a flat SGD table behind the
+//! same queue.
 
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -18,11 +26,18 @@ use std::time::Instant;
 use crate::linalg::SparseFeat;
 use crate::metrics::LatencyHistogram;
 use crate::serve::publisher::{SnapshotCell, SnapshotReader};
+use crate::serve::registry::ModelRegistry;
 use crate::serve::snapshot::PredictScratch;
+
+/// The model name [`PredictClient::predict`] routes to and
+/// [`PredictionServer::single`] registers.
+pub const DEFAULT_MODEL: &str = "default";
 
 /// One answered batch.
 #[derive(Clone, Debug)]
 pub struct PredictResponse {
+    /// Registry name of the model that answered.
+    pub model: String,
     pub preds: Vec<f64>,
     /// Version of the snapshot that answered this request.
     pub snapshot_version: u64,
@@ -31,7 +46,74 @@ pub struct PredictResponse {
     pub staleness: u64,
 }
 
-type Job = (Vec<Vec<SparseFeat>>, Instant, mpsc::Sender<PredictResponse>);
+/// Why a predict request failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PredictError {
+    /// No model under that name in the registry.
+    UnknownModel(String),
+    /// The server shut down before answering.
+    Closed,
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictError::UnknownModel(name) => {
+                write!(f, "unknown model '{name}'")
+            }
+            PredictError::Closed => write!(f, "prediction server closed"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+struct Job {
+    model: String,
+    batch: Vec<Vec<SparseFeat>>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<PredictResponse, PredictError>>,
+}
+
+/// Serving metrics for one model (or the whole server).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub requests: u64,
+    pub predictions: u64,
+    /// Request latency (enqueue → reply), so queueing is included.
+    pub latency: LatencyHistogram,
+    pub max_staleness: u64,
+}
+
+impl ModelStats {
+    fn new() -> ModelStats {
+        ModelStats {
+            requests: 0,
+            predictions: 0,
+            latency: LatencyHistogram::new(),
+            max_staleness: 0,
+        }
+    }
+
+    fn record(&mut self, predictions: u64, latency: std::time::Duration, staleness: u64) {
+        self.requests += 1;
+        self.predictions += predictions;
+        self.latency.record(latency);
+        self.max_staleness = self.max_staleness.max(staleness);
+    }
+
+    fn merge(&mut self, other: &ModelStats) {
+        self.requests += other.requests;
+        self.predictions += other.predictions;
+        self.latency.merge(&other.latency);
+        self.max_staleness = self.max_staleness.max(other.max_staleness);
+    }
+
+    /// Predictions per second over a serving window.
+    pub fn qps(&self, elapsed: std::time::Duration) -> f64 {
+        self.predictions as f64 / elapsed.as_secs_f64().max(1e-9)
+    }
+}
 
 /// Aggregated serving metrics (merged across workers at shutdown).
 #[derive(Clone, Debug)]
@@ -42,6 +124,8 @@ pub struct ServeStats {
     pub latency: LatencyHistogram,
     pub max_staleness: u64,
     pub elapsed: std::time::Duration,
+    /// Per-model breakdown, keyed by registry name (sorted).
+    pub per_model: BTreeMap<String, ModelStats>,
 }
 
 impl ServeStats {
@@ -51,16 +135,15 @@ impl ServeStats {
 }
 
 struct WorkerStats {
-    requests: u64,
-    predictions: u64,
-    latency: LatencyHistogram,
-    max_staleness: u64,
+    total: ModelStats,
+    per_model: HashMap<String, ModelStats>,
 }
 
 /// Handle to a running pool of serving threads.
 pub struct PredictionServer {
     tx: mpsc::Sender<Job>,
     workers: Vec<std::thread::JoinHandle<WorkerStats>>,
+    registry: Arc<ModelRegistry>,
     started: Instant,
     inflight_hint: Arc<AtomicU64>,
 }
@@ -77,43 +160,72 @@ pub struct PredictClient {
 }
 
 impl PredictClient {
-    /// Answer one batch; blocks for the reply.
-    pub fn predict(&self, batch: Vec<Vec<SparseFeat>>) -> Option<PredictResponse> {
+    /// Answer one batch against the named model; blocks for the reply.
+    pub fn predict_for(
+        &self,
+        model: &str,
+        batch: Vec<Vec<SparseFeat>>,
+    ) -> Result<PredictResponse, PredictError> {
         let (rtx, rrx) = mpsc::channel();
         self.inflight_hint.fetch_add(1, Ordering::Relaxed);
-        if self.tx.send((batch, Instant::now(), rtx)).is_err() {
-            self.inflight_hint.fetch_sub(1, Ordering::Relaxed);
-            return None;
-        }
-        let r = rrx.recv().ok();
+        let job = Job {
+            model: model.to_string(),
+            batch,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        let result = if self.tx.send(job).is_ok() {
+            match rrx.recv() {
+                Ok(r) => r,
+                Err(_) => Err(PredictError::Closed),
+            }
+        } else {
+            Err(PredictError::Closed)
+        };
         self.inflight_hint.fetch_sub(1, Ordering::Relaxed);
-        r
+        result
+    }
+
+    /// Answer one batch against the [`DEFAULT_MODEL`]; `None` when the
+    /// server is gone (single-model convenience).
+    pub fn predict(&self, batch: Vec<Vec<SparseFeat>>) -> Option<PredictResponse> {
+        self.predict_for(DEFAULT_MODEL, batch).ok()
     }
 }
 
 impl PredictionServer {
-    /// Spawn `threads` serving workers over the given snapshot cell.
-    pub fn start(cell: Arc<SnapshotCell>, threads: usize) -> PredictionServer {
+    /// Spawn `threads` serving workers over the given model registry.
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        threads: usize,
+    ) -> PredictionServer {
         let threads = threads.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let shared_rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(threads);
         for wid in 0..threads {
             let rx = Arc::clone(&shared_rx);
-            let cell = Arc::clone(&cell);
+            let registry = Arc::clone(&registry);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("serve-{wid}"))
-                    .spawn(move || worker_loop(cell, rx))
+                    .spawn(move || worker_loop(registry, rx))
                     .expect("spawn serving thread"),
             );
         }
         PredictionServer {
             tx,
             workers,
+            registry,
             started: Instant::now(),
             inflight_hint: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Spawn a server hosting one cell under [`DEFAULT_MODEL`] (the
+    /// single-model fast path; [`PredictClient::predict`] routes to it).
+    pub fn single(cell: Arc<SnapshotCell>, threads: usize) -> PredictionServer {
+        PredictionServer::start(ModelRegistry::with_model(DEFAULT_MODEL, cell), threads)
     }
 
     pub fn client(&self) -> PredictClient {
@@ -121,6 +233,12 @@ impl PredictionServer {
             tx: self.tx.clone(),
             inflight_hint: Arc::clone(&self.inflight_hint),
         }
+    }
+
+    /// The registry this server routes through; models may be added or
+    /// removed while serving.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     pub fn threads(&self) -> usize {
@@ -137,59 +255,97 @@ impl PredictionServer {
     /// dropped, otherwise the queue stays open and this blocks.
     pub fn shutdown(self) -> ServeStats {
         drop(self.tx);
-        let mut stats = ServeStats {
-            requests: 0,
-            predictions: 0,
-            latency: LatencyHistogram::new(),
-            max_staleness: 0,
-            elapsed: self.started.elapsed(),
-        };
+        let mut total = ModelStats::new();
+        let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
         for w in self.workers {
             let ws = w.join().expect("serving thread panicked");
-            stats.requests += ws.requests;
-            stats.predictions += ws.predictions;
-            stats.latency.merge(&ws.latency);
-            stats.max_staleness = stats.max_staleness.max(ws.max_staleness);
+            total.merge(&ws.total);
+            for (name, stats) in ws.per_model {
+                per_model
+                    .entry(name)
+                    .or_insert_with(ModelStats::new)
+                    .merge(&stats);
+            }
         }
-        stats.elapsed = self.started.elapsed();
-        stats
+        ServeStats {
+            requests: total.requests,
+            predictions: total.predictions,
+            latency: total.latency,
+            max_staleness: total.max_staleness,
+            elapsed: self.started.elapsed(),
+            per_model,
+        }
     }
 }
 
 fn worker_loop(
-    cell: Arc<SnapshotCell>,
+    registry: Arc<ModelRegistry>,
     rx: Arc<Mutex<mpsc::Receiver<Job>>>,
 ) -> WorkerStats {
-    let mut reader = SnapshotReader::new(cell);
-    let mut scratch = PredictScratch::default();
-    let mut ws = WorkerStats {
-        requests: 0,
-        predictions: 0,
-        latency: LatencyHistogram::new(),
-        max_staleness: 0,
-    };
+    // Per-model cache: reader + private predict scratch, so alternating
+    // traffic between models (the multi-model round-robin case) never
+    // reallocates scratch buffers. Name strings are cloned only when a
+    // model is first seen by this worker — the steady-state request
+    // path allocates nothing beyond the prediction output.
+    let mut models: HashMap<String, (SnapshotReader, PredictScratch)> =
+        HashMap::new();
+    let mut reg_version = registry.version();
+    let mut ws = WorkerStats { total: ModelStats::new(), per_model: HashMap::new() };
     loop {
         // hold the queue lock only for the dequeue, never while predicting
         let job = match rx.lock().expect("serve queue lock").recv() {
             Ok(j) => j,
             Err(_) => break, // queue closed: server shutting down
         };
-        let (batch, enqueued, reply) = job;
+        // registry changed since the last request: drop every cached
+        // reader so renames/replacements take effect
+        let v = registry.version();
+        if v != reg_version {
+            models.clear();
+            reg_version = v;
+        }
+        if !models.contains_key(&job.model) {
+            match registry.get(&job.model) {
+                Some(cell) => {
+                    models.insert(
+                        job.model.clone(),
+                        (SnapshotReader::new(cell), PredictScratch::default()),
+                    );
+                }
+                None => {
+                    ws.total.requests += 1;
+                    let _ = job
+                        .reply
+                        .send(Err(PredictError::UnknownModel(job.model)));
+                    continue;
+                }
+            }
+        }
+        let (reader, scratch) =
+            models.get_mut(&job.model).expect("cached above");
         let snap = Arc::clone(reader.current());
-        let preds: Vec<f64> = batch
+        let preds: Vec<f64> = job
+            .batch
             .iter()
-            .map(|x| snap.predict_with(x, &mut scratch))
+            .map(|x| snap.predict_with(x, scratch))
             .collect();
         let staleness = reader.cell().staleness_of(&snap);
-        ws.requests += 1;
-        ws.predictions += preds.len() as u64;
-        ws.max_staleness = ws.max_staleness.max(staleness);
-        ws.latency.record(enqueued.elapsed());
-        let _ = reply.send(PredictResponse {
+        let latency = job.enqueued.elapsed();
+        ws.total.record(preds.len() as u64, latency, staleness);
+        match ws.per_model.get_mut(&job.model) {
+            Some(ms) => ms.record(preds.len() as u64, latency, staleness),
+            None => {
+                let mut ms = ModelStats::new();
+                ms.record(preds.len() as u64, latency, staleness);
+                ws.per_model.insert(job.model.clone(), ms);
+            }
+        }
+        let _ = job.reply.send(Ok(PredictResponse {
+            model: job.model,
             preds,
             snapshot_version: snap.version,
             staleness,
-        });
+        }));
     }
     ws
 }
@@ -206,7 +362,7 @@ mod tests {
     #[test]
     fn serves_predictions() {
         let cell = cell_with(vec![1.0, -1.0, 0.5, 0.0]);
-        let server = PredictionServer::start(Arc::clone(&cell), 2);
+        let server = PredictionServer::single(Arc::clone(&cell), 2);
         let client = server.client();
         let resp = client
             .predict(vec![vec![(0, 2.0)], vec![(1, 1.0), (2, 2.0)]])
@@ -214,17 +370,20 @@ mod tests {
         assert_eq!(resp.preds, vec![2.0, 0.0]);
         assert_eq!(resp.snapshot_version, 0);
         assert_eq!(resp.staleness, 0);
+        assert_eq!(resp.model, DEFAULT_MODEL);
         drop(client);
         let stats = server.shutdown();
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.predictions, 2);
         assert_eq!(stats.latency.count(), 1);
+        assert_eq!(stats.per_model.len(), 1);
+        assert_eq!(stats.per_model[DEFAULT_MODEL].predictions, 2);
     }
 
     #[test]
     fn responses_follow_published_snapshots() {
         let cell = cell_with(vec![0.0; 4]);
-        let server = PredictionServer::start(Arc::clone(&cell), 1);
+        let server = PredictionServer::single(Arc::clone(&cell), 1);
         let client = server.client();
         let before = client.predict(vec![vec![(0, 1.0)]]).unwrap();
         assert_eq!(before.preds[0], 0.0);
@@ -239,7 +398,7 @@ mod tests {
     #[test]
     fn staleness_reported_per_response() {
         let cell = cell_with(vec![0.0; 4]);
-        let server = PredictionServer::start(Arc::clone(&cell), 1);
+        let server = PredictionServer::single(Arc::clone(&cell), 1);
         let client = server.client();
         cell.publish(ModelSnapshot::central(vec![1.0; 4], 1_000, 0));
         cell.record_trained(1_250);
@@ -253,7 +412,7 @@ mod tests {
     #[test]
     fn many_clients_many_threads() {
         let cell = cell_with(vec![2.0; 8]);
-        let server = PredictionServer::start(Arc::clone(&cell), 4);
+        let server = PredictionServer::single(Arc::clone(&cell), 4);
         std::thread::scope(|s| {
             for _ in 0..8 {
                 let client = server.client();
@@ -270,5 +429,61 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.requests, 1_600);
         assert!(stats.qps() > 0.0);
+    }
+
+    #[test]
+    fn routes_by_model_name_with_per_model_stats() {
+        let reg = ModelRegistry::new();
+        reg.insert("double", cell_with(vec![2.0; 4]));
+        reg.insert("triple", cell_with(vec![3.0; 4]));
+        let server = PredictionServer::start(Arc::clone(&reg), 2);
+        let client = server.client();
+        for _ in 0..10 {
+            let d = client.predict_for("double", vec![vec![(0, 1.0)]]).unwrap();
+            assert_eq!(d.preds[0], 2.0);
+            assert_eq!(d.model, "double");
+            let t = client
+                .predict_for("triple", vec![vec![(1, 1.0)], vec![(2, 2.0)]])
+                .unwrap();
+            assert_eq!(t.preds, vec![3.0, 6.0]);
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 20);
+        assert_eq!(stats.predictions, 30);
+        assert_eq!(stats.per_model["double"].requests, 10);
+        assert_eq!(stats.per_model["double"].predictions, 10);
+        assert_eq!(stats.per_model["triple"].predictions, 20);
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let server =
+            PredictionServer::start(ModelRegistry::new(), 1);
+        let client = server.client();
+        let err = client.predict_for("ghost", vec![vec![(0, 1.0)]]).unwrap_err();
+        assert_eq!(err, PredictError::UnknownModel("ghost".into()));
+        drop(client);
+        let stats = server.shutdown();
+        // errored requests count toward the total but no model entry
+        assert_eq!(stats.requests, 1);
+        assert!(stats.per_model.is_empty());
+    }
+
+    #[test]
+    fn models_added_while_serving_become_routable() {
+        let reg = ModelRegistry::new();
+        reg.insert("a", cell_with(vec![1.0; 4]));
+        let server = PredictionServer::start(Arc::clone(&reg), 1);
+        let client = server.client();
+        assert!(client.predict_for("b", vec![vec![(0, 1.0)]]).is_err());
+        reg.insert("b", cell_with(vec![5.0; 4]));
+        let resp = client.predict_for("b", vec![vec![(0, 1.0)]]).unwrap();
+        assert_eq!(resp.preds[0], 5.0);
+        // and a removed model stops resolving (cache invalidated)
+        reg.remove("a");
+        assert!(client.predict_for("a", vec![vec![(0, 1.0)]]).is_err());
+        drop(client);
+        server.shutdown();
     }
 }

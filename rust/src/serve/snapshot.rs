@@ -1,13 +1,21 @@
 //! Immutable model snapshots — the unit the serving layer swaps.
 //!
 //! A [`ModelSnapshot`] captures everything needed to answer a predict
-//! request: the weight tables, the tree wiring, and the routing
-//! (sharder) identity, plus the bookkeeping the staleness metrics need
-//! (publish version and training-stream position). Snapshots are
-//! *immutable by construction*: the publisher builds a fresh one and
-//! swaps the `Arc`, so readers can never observe a half-updated model
-//! (the delayed-read regime of *Slow Learners are Fast* — readers see
-//! slightly stale weights, never torn ones).
+//! request: an immutable predictor plus the bookkeeping the staleness
+//! metrics need (publish version and training-stream position).
+//! Snapshots are *immutable by construction*: the publisher builds a
+//! fresh one and swaps the `Arc`, so readers can never observe a
+//! half-updated model (the delayed-read regime of *Slow Learners are
+//! Fast* — readers see slightly stale weights, never torn ones).
+//!
+//! The predictor inside a snapshot is a [`SnapshotPredict`] trait
+//! object, not an enum: the serving path ([`crate::serve::server`]) and
+//! every caller of [`ModelSnapshot::predict`] dispatch through the
+//! trait, so adding an architecture means adding an implementation —
+//! the only place that still branches on model kind is the checkpoint
+//! codec that constructs predictors from disk.
+
+use std::sync::Arc;
 
 use crate::linalg::{sparse_dot, SparseFeat};
 use crate::sharding::feature::FeatureSharder;
@@ -17,8 +25,10 @@ use crate::topology::NodeGraph;
 /// path, the serving path consumes untrusted client input, so an
 /// out-of-range index must not hit `sparse_dot`'s unchecked access —
 /// it simply contributes nothing (an unknown slot has no weight).
+/// Bit-identical to `sparse_dot` for in-range input (same accumulation
+/// order), which the snapshot-vs-live bit-parity tests rely on.
 #[inline]
-fn request_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
+pub(crate) fn request_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
     x.iter()
         .map(|&(i, v)| {
             w.get(i as usize).copied().unwrap_or(0.0) as f64 * v as f64
@@ -26,21 +36,152 @@ fn request_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
         .sum()
 }
 
-/// The predictor inside a snapshot.
+/// Reusable buffers for the allocation-free predict hot path (shared by
+/// snapshot serving and [`crate::coordinator::Coordinator`] test-set
+/// prediction).
+#[derive(Clone, Debug, Default)]
+pub struct PredictScratch {
+    pub(crate) preds: Vec<f64>,
+    pub(crate) leaf_bufs: Vec<Vec<SparseFeat>>,
+    pub(crate) x: Vec<SparseFeat>,
+}
+
+/// The one tree-combine walk: split features to the leaves, score every
+/// node bottom-up via `node_score`, feeding internal nodes the
+/// (child-rank, optionally-clipped child prediction) rows plus the bias
+/// feature. Both [`TreePredictor`] (serving) and the live
+/// [`crate::coordinator::Coordinator`] predict through this
+/// implementation, so combine semantics cannot drift between the
+/// training side and the serving side.
+pub(crate) fn tree_predict_with(
+    graph: &NodeGraph,
+    sharder: &FeatureSharder,
+    clip01: bool,
+    bias: bool,
+    x: &[SparseFeat],
+    s: &mut PredictScratch,
+    mut node_score: impl FnMut(usize, &[SparseFeat]) -> f64,
+) -> f64 {
+    let n = graph.num_nodes();
+    s.preds.clear();
+    s.preds.resize(n, 0.0);
+    if s.leaf_bufs.len() != graph.leaves {
+        s.leaf_bufs = vec![Vec::new(); graph.leaves];
+    }
+    sharder.split_features_into(x, &mut s.leaf_bufs);
+    for leaf in 0..graph.leaves {
+        s.preds[leaf] = node_score(leaf, &s.leaf_bufs[leaf]);
+    }
+    for id in graph.leaves..n {
+        let kids = &graph.children[id];
+        s.x.clear();
+        for (rank, &c) in kids.iter().enumerate() {
+            let p = if clip01 {
+                s.preds[c].clamp(0.0, 1.0)
+            } else {
+                s.preds[c]
+            };
+            s.x.push((rank as u32, p as f32));
+        }
+        if bias {
+            s.x.push((kids.len() as u32, 1.0));
+        }
+        s.preds[id] = node_score(id, &s.x);
+    }
+    s.preds[graph.root]
+}
+
+/// The predictor inside a [`ModelSnapshot`]: one immutable, thread-safe
+/// scoring function. Implementations are architecture-specific
+/// ([`CentralPredictor`], [`TreePredictor`]); everything downstream of
+/// the checkpoint codec dispatches through this trait.
+pub trait SnapshotPredict: Send + Sync + std::fmt::Debug {
+    /// Score one request with caller-owned scratch (the serving hot
+    /// path: no allocation after the first call per thread). Request
+    /// features are untrusted: out-of-range indices contribute nothing.
+    fn predict_with(&self, x: &[SparseFeat], s: &mut PredictScratch) -> f64;
+
+    /// Hashed feature-space size this predictor scores over.
+    fn dim(&self) -> usize;
+
+    /// Total parameters across all tables (reporting).
+    fn num_params(&self) -> usize;
+
+    /// The flat weight table, if this predictor is a single table
+    /// (reporting and tests; tree predictors return `None`).
+    fn weights_flat(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+/// A single flat weight table (plain [`crate::learner::sgd::Sgd`] or
+/// the centralized Minibatch/CG/SGD rules).
 #[derive(Clone, Debug)]
-pub enum SnapshotModel {
-    /// A single flat weight table (plain [`crate::learner::sgd::Sgd`] or
-    /// the centralized Minibatch/CG/SGD rules).
-    Central { w: Vec<f32> },
-    /// A feature-sharded node tree (the §0.5.2 architectures).
-    Tree {
-        graph: NodeGraph,
-        sharder: FeatureSharder,
-        /// Per-node weight tables, indexed by node id (leaves first).
-        weights: Vec<Vec<f32>>,
-        clip01: bool,
-        bias: bool,
-    },
+pub struct CentralPredictor {
+    pub w: Vec<f32>,
+}
+
+impl SnapshotPredict for CentralPredictor {
+    #[inline]
+    fn predict_with(&self, x: &[SparseFeat], _s: &mut PredictScratch) -> f64 {
+        request_dot(&self.w, x)
+    }
+
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn num_params(&self) -> usize {
+        self.w.len()
+    }
+
+    fn weights_flat(&self) -> Option<&[f32]> {
+        Some(&self.w)
+    }
+}
+
+/// A feature-sharded node tree (the §0.5.2 architectures).
+#[derive(Clone, Debug)]
+pub struct TreePredictor {
+    pub graph: NodeGraph,
+    pub sharder: FeatureSharder,
+    /// Per-node weight tables, indexed by node id (leaves first).
+    pub weights: Vec<Vec<f32>>,
+    pub clip01: bool,
+    pub bias: bool,
+}
+
+impl SnapshotPredict for TreePredictor {
+    fn predict_with(&self, x: &[SparseFeat], s: &mut PredictScratch) -> f64 {
+        tree_predict_with(
+            &self.graph,
+            &self.sharder,
+            self.clip01,
+            self.bias,
+            x,
+            s,
+            // leaves consume untrusted request features (bounds-checked
+            // dot); internal rows are constructed in-walk, so the
+            // unchecked dot is safe there
+            |id, row| {
+                if self.graph.is_leaf(id) {
+                    request_dot(&self.weights[id], row)
+                } else {
+                    sparse_dot(&self.weights[id], row)
+                }
+            },
+        )
+    }
+
+    fn dim(&self) -> usize {
+        self.weights
+            .get(..self.graph.leaves)
+            .map_or(0, |ls| ls.first().map_or(0, Vec::len))
+    }
+
+    fn num_params(&self) -> usize {
+        self.weights.iter().map(Vec::len).sum()
+    }
 }
 
 /// An immutable, atomically-swappable model version.
@@ -56,86 +197,64 @@ pub struct ModelSnapshot {
     /// [`crate::serve::checkpoint`]); lets a server refuse snapshots
     /// from a differently-configured trainer.
     pub config_digest: u64,
-    pub model: SnapshotModel,
-}
-
-/// Reusable buffers for the allocation-free serving hot path.
-#[derive(Clone, Debug, Default)]
-pub struct PredictScratch {
-    preds: Vec<f64>,
-    leaf_bufs: Vec<Vec<SparseFeat>>,
-    x: Vec<SparseFeat>,
+    predictor: Arc<dyn SnapshotPredict>,
 }
 
 impl ModelSnapshot {
+    /// Wrap an arbitrary predictor.
+    pub fn from_predictor(
+        predictor: Arc<dyn SnapshotPredict>,
+        trained_instances: u64,
+        config_digest: u64,
+    ) -> Self {
+        ModelSnapshot { version: 0, trained_instances, config_digest, predictor }
+    }
+
+    /// A flat-table snapshot.
     pub fn central(w: Vec<f32>, trained_instances: u64, config_digest: u64) -> Self {
-        ModelSnapshot {
-            version: 0,
+        Self::from_predictor(
+            Arc::new(CentralPredictor { w }),
             trained_instances,
             config_digest,
-            model: SnapshotModel::Central { w },
-        }
+        )
+    }
+
+    /// A feature-sharded tree snapshot.
+    pub fn tree(
+        tree: TreePredictor,
+        trained_instances: u64,
+        config_digest: u64,
+    ) -> Self {
+        Self::from_predictor(Arc::new(tree), trained_instances, config_digest)
+    }
+
+    /// The predictor itself (trait object).
+    pub fn predictor(&self) -> &Arc<dyn SnapshotPredict> {
+        &self.predictor
     }
 
     /// Hashed feature-space size this snapshot predicts over (the
     /// weight-table length of the flat model / every leaf).
     pub fn dim(&self) -> usize {
-        match &self.model {
-            SnapshotModel::Central { w } => w.len(),
-            SnapshotModel::Tree { weights, graph, .. } => {
-                weights.get(..graph.leaves).map_or(0, |ls| {
-                    ls.first().map_or(0, Vec::len)
-                })
-            }
-        }
+        self.predictor.dim()
     }
 
     /// Total parameters across all tables (reporting).
     pub fn num_params(&self) -> usize {
-        match &self.model {
-            SnapshotModel::Central { w } => w.len(),
-            SnapshotModel::Tree { weights, .. } => {
-                weights.iter().map(Vec::len).sum()
-            }
-        }
+        self.predictor.num_params()
+    }
+
+    /// The flat weight table, when the snapshot holds a single-table
+    /// predictor (reporting and tests).
+    pub fn weights_flat(&self) -> Option<&[f32]> {
+        self.predictor.weights_flat()
     }
 
     /// Predict with caller-owned scratch (the serving hot path: no
     /// allocation after the first call per thread).
+    #[inline]
     pub fn predict_with(&self, x: &[SparseFeat], s: &mut PredictScratch) -> f64 {
-        match &self.model {
-            SnapshotModel::Central { w } => request_dot(w, x),
-            SnapshotModel::Tree { graph, sharder, weights, clip01, bias } => {
-                let n = graph.num_nodes();
-                s.preds.clear();
-                s.preds.resize(n, 0.0);
-                if s.leaf_bufs.len() != graph.leaves {
-                    s.leaf_bufs = vec![Vec::new(); graph.leaves];
-                }
-                sharder.split_features_into(x, &mut s.leaf_bufs);
-                for leaf in 0..graph.leaves {
-                    s.preds[leaf] =
-                        request_dot(&weights[leaf], &s.leaf_bufs[leaf]);
-                }
-                for id in graph.leaves..n {
-                    let kids = &graph.children[id];
-                    s.x.clear();
-                    for (rank, &c) in kids.iter().enumerate() {
-                        let p = if *clip01 {
-                            s.preds[c].clamp(0.0, 1.0)
-                        } else {
-                            s.preds[c]
-                        };
-                        s.x.push((rank as u32, p as f32));
-                    }
-                    if *bias {
-                        s.x.push((kids.len() as u32, 1.0));
-                    }
-                    s.preds[id] = sparse_dot(&weights[id], &s.x);
-                }
-                s.preds[graph.root]
-            }
-        }
+        self.predictor.predict_with(x, s)
     }
 
     /// Convenience predict (allocates scratch; use
@@ -157,6 +276,7 @@ mod tests {
         assert_eq!(snap.predict(&[(0, 1.0), (1, 0.5)]), 2.0);
         assert_eq!(snap.dim(), 4);
         assert_eq!(snap.num_params(), 4);
+        assert_eq!(snap.weights_flat(), Some(&[1.0f32, 2.0, 0.0, -1.0][..]));
     }
 
     #[test]
@@ -167,18 +287,11 @@ mod tests {
         // each leaf has a 4-slot table of ones: leaf pred = sum of its
         // shard's feature values
         let weights = vec![vec![1.0f32; 4], vec![1.0f32; 4], vec![1.0, 1.0, 0.0]];
-        let snap = ModelSnapshot {
-            version: 1,
-            trained_instances: 5,
-            config_digest: 0,
-            model: SnapshotModel::Tree {
-                graph,
-                sharder,
-                weights,
-                clip01: false,
-                bias: true,
-            },
-        };
+        let snap = ModelSnapshot::tree(
+            TreePredictor { graph, sharder, weights, clip01: false, bias: true },
+            5,
+            0,
+        );
         // whichever shard each feature routes to, the unclipped master
         // with unit child weights sums the leaf predictions
         let x = [(0u32, 0.5f32), (1, 0.25), (2, 0.125)];
@@ -186,6 +299,7 @@ mod tests {
         assert!((y - 0.875).abs() < 1e-9, "{y}");
         assert_eq!(snap.dim(), 4);
         assert_eq!(snap.num_params(), 11);
+        assert_eq!(snap.weights_flat(), None);
     }
 
     #[test]
@@ -195,18 +309,17 @@ mod tests {
         let snap = ModelSnapshot::central(vec![1.0, 2.0], 0, 0);
         assert_eq!(snap.predict(&[(0, 1.0), (u32::MAX, 5.0)]), 1.0);
         let graph = Topology::TwoLayer { shards: 2 }.build();
-        let tree = ModelSnapshot {
-            version: 0,
-            trained_instances: 0,
-            config_digest: 0,
-            model: SnapshotModel::Tree {
+        let tree = ModelSnapshot::tree(
+            TreePredictor {
                 graph,
                 sharder: FeatureSharder::hash(2),
                 weights: vec![vec![1.0; 4], vec![1.0; 4], vec![1.0, 1.0, 0.0]],
                 clip01: false,
                 bias: true,
             },
-        };
+            0,
+            0,
+        );
         let with_oob = tree.predict(&[(0, 0.5), (1_000_000, 9.0)]);
         let without = tree.predict(&[(0, 0.5)]);
         assert_eq!(with_oob, without);
@@ -226,18 +339,11 @@ mod tests {
             })
             .collect();
         weights[0][0] = -0.3;
-        let snap = ModelSnapshot {
-            version: 0,
-            trained_instances: 0,
-            config_digest: 0,
-            model: SnapshotModel::Tree {
-                graph,
-                sharder,
-                weights,
-                clip01: true,
-                bias: true,
-            },
-        };
+        let snap = ModelSnapshot::tree(
+            TreePredictor { graph, sharder, weights, clip01: true, bias: true },
+            0,
+            0,
+        );
         let mut scratch = PredictScratch::default();
         let x1 = [(0u32, 1.0f32), (5, -2.0)];
         let x2 = [(3u32, 0.5f32)];

@@ -10,7 +10,6 @@
 
 use crate::data::Dataset;
 use crate::learner::sgd::Sgd;
-use crate::learner::OnlineLearner;
 use crate::loss::Loss;
 use crate::lr::LrSchedule;
 

@@ -26,6 +26,57 @@ fn unknown_command_fails() {
 }
 
 #[test]
+fn unknown_flags_are_rejected_not_ignored() {
+    // a misspelled flag must fail loudly with the flag named, never
+    // silently train with defaults
+    let out = pol()
+        .args(["train", "--instancs", "100"])
+        .output()
+        .expect("run pol");
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--instancs"), "{err}");
+    assert!(err.contains("unknown flag"), "{err}");
+
+    // stray positional arguments are rejected too
+    let out = pol()
+        .args(["serve", "somefile.polz"])
+        .output()
+        .expect("run pol");
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("unexpected argument")
+    );
+
+    // a flag missing its value is an error
+    let out = pol()
+        .args(["train", "--instances"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs a value"));
+
+    // malformed values are errors, not silent defaults
+    let out = pol()
+        .args(["train", "--instances", "lots"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad value"));
+
+    // every subcommand parses strictly
+    for cmd in ["checkpoint", "serve", "predict", "bench-data", "inspect"] {
+        let out = pol()
+            .args([cmd, "--no-such-flag", "x"])
+            .output()
+            .expect("run pol");
+        assert_eq!(out.status.code(), Some(2), "{cmd}");
+    }
+}
+
+#[test]
 fn inspect_reports_collisions() {
     let out = pol()
         .args(["inspect", "--bits", "10", "--uniques", "2000"])
@@ -211,6 +262,104 @@ fn serve_reports_throughput() {
     assert!(text.contains("qps="), "{text}");
     assert!(text.contains("p99_us="), "{text}");
     std::fs::remove_file(&model).ok();
+}
+
+#[test]
+fn train_with_checkpoint_every_writes_background_checkpoints() {
+    let dir = std::env::temp_dir().join("pol_cli_bg_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("bg.polz");
+    std::fs::remove_file(&model).ok();
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "3000", "--rule", "local",
+            "--workers", "2", "--loss", "logistic",
+            "--checkpoint", model.to_str().unwrap(),
+            "--checkpoint-every", "500",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("background writes"), "{err}");
+    // the file on disk is a valid, current checkpoint
+    let out = pol()
+        .args(["checkpoint", "--model", model.to_str().unwrap()])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success());
+    // no leftover temp file from the atomic-write protocol
+    let mut tmp = model.as_os_str().to_owned();
+    tmp.push(".tmp");
+    assert!(!std::path::PathBuf::from(tmp).exists());
+    std::fs::remove_file(&model).ok();
+
+    // --checkpoint-every without --checkpoint is a usage error
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "1000",
+            "--checkpoint-every", "500",
+        ])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn serve_hosts_multiple_named_models() {
+    let dir = std::env::temp_dir().join("pol_cli_multiserve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tree = dir.join("tree.polz");
+    let central = dir.join("central.polz");
+    // two different architectures: a 4-shard tree and a centralized sgd
+    for (path, rule, workers) in
+        [(&tree, "local", "4"), (&central, "sgd", "1")]
+    {
+        let out = pol()
+            .args([
+                "train", "--data", "rcv", "--instances", "2000", "--rule",
+                rule, "--workers", workers, "--loss", "logistic",
+                "--checkpoint", path.to_str().unwrap(),
+            ])
+            .output()
+            .expect("run pol");
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let tree_spec = format!("tree={}", tree.display());
+    let central_spec = format!("central={}", central.display());
+    let out = pol()
+        .args([
+            "serve",
+            "--model", tree_spec.as_str(),
+            "--model", central_spec.as_str(),
+            "--threads", "2", "--seconds", "0.3",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("models=2"), "{text}");
+    assert!(text.contains("model=tree"), "{text}");
+    assert!(text.contains("model=central"), "{text}");
+    // both models actually answered traffic with their own metrics
+    for line in text.lines().filter(|l| l.starts_with("model=")) {
+        assert!(line.contains("qps="), "{line}");
+        assert!(line.contains("max_staleness="), "{line}");
+    }
+    // duplicate names are rejected
+    let dup_a = format!("m={}", tree.display());
+    let dup_b = format!("m={}", central.display());
+    let out = pol()
+        .args(["serve", "--model", dup_a.as_str(), "--model", dup_b.as_str()])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    std::fs::remove_file(&tree).ok();
+    std::fs::remove_file(&central).ok();
 }
 
 #[test]

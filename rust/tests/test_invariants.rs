@@ -165,7 +165,6 @@ fn prop_coordinator_bit_deterministic() {
 #[test]
 fn prop_multicore_weights_equal_sgd() {
     use pol::coordinator::multicore::MulticoreTrainer;
-    use pol::learner::OnlineLearner;
     cases(5, |rng| {
         let ds = random_dataset(rng, 300, 128);
         let threads = 1 + rng.below(4) as usize;
@@ -294,7 +293,6 @@ fn prop_hashing_never_out_of_range() {
 #[test]
 fn prop_delayed_tau_zero_is_sgd() {
     use pol::learner::delayed::DelayedSgd;
-    use pol::learner::OnlineLearner;
     cases(20, |rng| {
         let ds = random_dataset(rng, 200, 64);
         let lr = LrSchedule::inv_sqrt(0.7, 3.0);

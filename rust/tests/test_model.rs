@@ -1,0 +1,325 @@
+//! The `pol::model` API reset, end to end: builder/trait parity for
+//! every update rule, dyn-vs-concrete prediction equality, background
+//! checkpointing cadence, checkpoint compression round-trips, and
+//! multi-model serving through the registry.
+
+use std::sync::Arc;
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::data::Dataset;
+use pol::learner::sgd::Sgd;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::model::{Model, Session};
+use pol::serve::{checkpoint, ModelRegistry, PredictionServer, SnapshotCell};
+use pol::topology::Topology;
+
+fn small_ds() -> Dataset {
+    RcvLikeGen::new(SynthConfig {
+        instances: 3_000,
+        features: 400,
+        density: 15,
+        hash_bits: 12,
+        ..Default::default()
+    })
+    .generate()
+}
+
+fn cfg_for(rule: UpdateRule) -> RunConfig {
+    RunConfig {
+        topology: Topology::TwoLayer { shards: 4 },
+        rule,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(4.0, 1.0),
+        master_lr: None,
+        tau: 64,
+        clip01: false,
+        bias: true,
+        passes: 1,
+        seed: 1,
+    }
+}
+
+const ALL_RULES: [UpdateRule; 7] = [
+    UpdateRule::Local,
+    UpdateRule::DelayedGlobal,
+    UpdateRule::Corrective,
+    UpdateRule::Backprop { multiplier: 2.0 },
+    UpdateRule::Minibatch { batch: 64 },
+    UpdateRule::Cg { batch: 128 },
+    UpdateRule::Sgd,
+];
+
+/// For every update rule, a `SessionBuilder`-built model trained over a
+/// dataset is bit-identical to a hand-constructed `Coordinator` — the
+/// builder is a construction path, not a different algorithm.
+#[test]
+fn builder_output_bit_identical_to_direct_construction() {
+    let ds = small_ds();
+    for rule in ALL_RULES {
+        let cfg = cfg_for(rule);
+        let mut direct = Coordinator::new(cfg.clone(), ds.dim);
+        let direct_rep = direct.train(&ds);
+
+        let mut session = Session::builder()
+            .dim(ds.dim)
+            .rule(rule)
+            .topology(cfg.topology)
+            .loss(cfg.loss)
+            .lr(cfg.lr)
+            .tau(cfg.tau)
+            .clip01(cfg.clip01)
+            .bias(cfg.bias)
+            .seed(cfg.seed)
+            .build()
+            .expect("build session");
+        let session_rep = session.train(&ds).expect("train");
+
+        assert_eq!(
+            session_rep.progressive.mean_loss().to_bits(),
+            direct_rep.progressive.mean_loss().to_bits(),
+            "{rule:?}: progressive loss must match bitwise"
+        );
+        assert_eq!(
+            session.model().trained_instances(),
+            direct.trained_instances(),
+            "{rule:?}"
+        );
+        for inst in ds.iter().take(100) {
+            assert_eq!(
+                session.predict(&inst.features).to_bits(),
+                direct.predict(&inst.features).to_bits(),
+                "{rule:?}: predictions must match bitwise"
+            );
+        }
+        // and the serving snapshots carry the same provenance digest
+        assert_eq!(
+            session.model().snapshot().config_digest,
+            direct.snapshot().config_digest,
+            "{rule:?}"
+        );
+    }
+}
+
+/// `dyn Model` dispatch answers exactly like the concrete types.
+#[test]
+fn dyn_model_predictions_match_concrete_types() {
+    let ds = small_ds();
+    // concrete Sgd vs its boxed self
+    let mut sgd = Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(2.0, 1.0));
+    for inst in ds.iter() {
+        sgd.learn(&inst.features, inst.label);
+    }
+    let boxed: Box<dyn Model> = Box::new(sgd.clone());
+    // concrete Coordinator vs its boxed self
+    let mut coord = Coordinator::new(cfg_for(UpdateRule::Corrective), ds.dim);
+    coord.train(&ds);
+    let mut boxed_coord: Box<dyn Model> =
+        Box::new(Coordinator::new(cfg_for(UpdateRule::Corrective), ds.dim));
+    boxed_coord.train_dataset(&ds);
+    for inst in ds.iter().take(100) {
+        assert_eq!(
+            boxed.predict(&inst.features).to_bits(),
+            sgd.predict(&inst.features).to_bits()
+        );
+        assert_eq!(
+            boxed_coord.predict(&inst.features).to_bits(),
+            coord.predict(&inst.features).to_bits()
+        );
+    }
+    assert_eq!(boxed.kind_name(), "sgd");
+    assert_eq!(boxed_coord.kind_name(), "tree-coordinator");
+    assert_eq!(
+        Model::trained_instances(&sgd),
+        sgd.steps(),
+        "trait and inherent accessors agree"
+    );
+}
+
+/// `--checkpoint-every` semantics: background writes ride the training
+/// loop at the configured cadence, atomically, and the final file is a
+/// loadable model equal to the end state.
+#[test]
+fn background_checkpointing_cadence_and_final_state() {
+    let ds = small_ds();
+    let dir = std::env::temp_dir().join("pol_model_bg_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bg.polz");
+    std::fs::remove_file(&path).ok();
+
+    let mut session = Session::builder()
+        .dim(ds.dim)
+        .rule(UpdateRule::Local)
+        .topology(Topology::TwoLayer { shards: 4 })
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(4.0, 1.0))
+        .clip01(false)
+        .checkpoint_to(&path)
+        .checkpoint_every(1_000)
+        .build()
+        .expect("build");
+    session.train(&ds).expect("train");
+    // 3000 instances at cadence 1000 → background writes at 1000, 2000,
+    // 3000 (plus the unconditional end-of-train save)
+    assert_eq!(session.background_checkpoints(), 3);
+    let back = pol::model::load(&path).expect("load final checkpoint");
+    assert_eq!(back.trained_instances(), 3_000);
+    for inst in ds.iter().take(50) {
+        assert_eq!(
+            back.predict(&inst.features).to_bits(),
+            session.predict(&inst.features).to_bits()
+        );
+    }
+    // atomic write protocol leaves no temp file behind
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    assert!(!std::path::PathBuf::from(tmp).exists());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Checkpoint compression: a freshly trained model over a wide hashed
+/// space (mostly untouched slots) picks the zero-run encoding and comes
+/// back bit-identical; a dense table stays raw and also round-trips.
+#[test]
+fn checkpoint_compression_roundtrips_zero_heavy_and_dense() {
+    // zero-heavy: 2^16 hashed slots, only a few hundred instances
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: 300,
+        features: 200,
+        density: 8,
+        hash_bits: 16,
+        ..Default::default()
+    })
+    .generate();
+    let mut c = Coordinator::new(
+        RunConfig {
+            topology: Topology::TwoLayer { shards: 3 },
+            rule: UpdateRule::Local,
+            loss: Loss::Logistic,
+            clip01: false,
+            ..Default::default()
+        },
+        ds.dim,
+    );
+    c.train(&ds);
+    let mut buf = Vec::new();
+    checkpoint::write_coordinator(&c, &mut buf).unwrap();
+    let raw_size = c.nodes().iter().map(|n| n.weights().len() * 4).sum::<usize>();
+    assert!(
+        buf.len() < raw_size / 2,
+        "zero-heavy checkpoint should be < half raw ({} vs {raw_size})",
+        buf.len()
+    );
+    let back = match checkpoint::read(&mut buf.as_slice()).unwrap() {
+        checkpoint::Checkpoint::Coordinator(c) => c,
+        _ => panic!("wrong kind"),
+    };
+    for (a, b) in c.nodes().iter().zip(back.nodes()) {
+        assert_eq!(a.steps(), b.steps());
+        for (x, y) in a.weights().iter().zip(b.weights()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    // dense: every slot non-zero → raw encoding, still bit-identical
+    let w: Vec<f32> = (0..4_096).map(|i| (i as f32 - 2_048.0) * 1e-3).collect();
+    let s = Sgd::from_parts(w.clone(), Loss::Squared, LrSchedule::constant(0.1), 9);
+    let mut buf = Vec::new();
+    checkpoint::write_sgd(&s, &mut buf).unwrap();
+    assert!(buf.len() > 4_096 * 4, "dense table stays ≈ raw sized");
+    let back = match checkpoint::read(&mut buf.as_slice()).unwrap() {
+        checkpoint::Checkpoint::Sgd(b) => b,
+        _ => panic!("wrong kind"),
+    };
+    assert_eq!(back.w, w);
+}
+
+/// The acceptance scenario: two different architectures (a sharded tree
+/// and a plain SGD table) served side by side from one server, routed
+/// by name, with per-model metrics.
+#[test]
+fn two_architectures_one_server() {
+    let ds = small_ds();
+    // model 1: a feature-sharded tree via the builder
+    let mut tree = Session::builder()
+        .dim(ds.dim)
+        .rule(UpdateRule::Local)
+        .topology(Topology::TwoLayer { shards: 4 })
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(4.0, 1.0))
+        .clip01(false)
+        .build()
+        .expect("build");
+    tree.train(&ds).expect("train");
+    // model 2: the centralized baseline as a plain Sgd
+    let mut sgd = Sgd::new(ds.dim, Loss::Logistic, LrSchedule::inv_sqrt(2.0, 1.0));
+    for inst in ds.iter() {
+        sgd.learn(&inst.features, inst.label);
+    }
+    let sgd = Session::from_model(Box::new(sgd));
+
+    let registry = ModelRegistry::new();
+    registry.insert("tree", SnapshotCell::new(tree.model().snapshot()));
+    registry.insert("sgd", SnapshotCell::new(sgd.model().snapshot()));
+    let server = PredictionServer::start(Arc::clone(&registry), 2);
+    let client = server.client();
+    for inst in ds.iter().take(50) {
+        let t = client
+            .predict_for("tree", vec![inst.features.clone()])
+            .expect("tree predict");
+        assert_eq!(t.preds[0].to_bits(), tree.predict(&inst.features).to_bits());
+        let s = client
+            .predict_for("sgd", vec![inst.features.clone()])
+            .expect("sgd predict");
+        assert_eq!(s.preds[0].to_bits(), sgd.predict(&inst.features).to_bits());
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.per_model["tree"].requests, 50);
+    assert_eq!(stats.per_model["sgd"].requests, 50);
+    assert_eq!(stats.requests, 100);
+}
+
+/// Warm start through the builder: training continues from the
+/// checkpointed stream position with the checkpointed configuration.
+/// The Local rule has no cross-pass feedback interleaving, so one
+/// 2-pass session and (1 pass → checkpoint → warm-started 1 pass) must
+/// be bit-identical.
+#[test]
+fn warm_start_continues_training() {
+    let ds = small_ds();
+    let dir = std::env::temp_dir().join("pol_model_warm2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("warm.polz");
+    let builder = || {
+        Session::builder()
+            .dim(ds.dim)
+            .rule(UpdateRule::Local)
+            .topology(Topology::TwoLayer { shards: 4 })
+            .loss(Loss::Logistic)
+            .lr(LrSchedule::inv_sqrt(4.0, 1.0))
+            .clip01(false)
+    };
+
+    let mut first = builder().build().expect("build");
+    first.train(&ds).expect("train");
+    first.save(&path).expect("save");
+
+    let mut resumed = Session::builder().warm_start(&path).build().expect("warm");
+    assert_eq!(resumed.model().trained_instances(), 3_000);
+    resumed.train(&ds).expect("second pass");
+    assert_eq!(resumed.model().trained_instances(), 6_000);
+
+    let mut two_pass = builder().passes(2).build().expect("build");
+    two_pass.train(&ds).expect("train");
+    for inst in ds.iter().take(50) {
+        assert_eq!(
+            resumed.predict(&inst.features).to_bits(),
+            two_pass.predict(&inst.features).to_bits(),
+            "warm start must continue the η_t schedule exactly"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -5,7 +5,6 @@
 //!
 //! Requires `make artifacts` (skips with a notice otherwise).
 
-use pol::learner::OnlineLearner;
 use pol::linalg::SparseFeat;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;

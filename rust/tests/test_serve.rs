@@ -14,7 +14,6 @@ use pol::coordinator::Coordinator;
 use pol::data::instance::Instance;
 use pol::data::Dataset;
 use pol::learner::sgd::Sgd;
-use pol::learner::OnlineLearner;
 use pol::linalg::SparseFeat;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
@@ -235,10 +234,7 @@ fn concurrent_publish_never_tears() {
                 let mut last_trained = 0u64;
                 while !stop.load(Ordering::Acquire) {
                     let snap = reader.current();
-                    let w = match &snap.model {
-                        pol::serve::SnapshotModel::Central { w } => w,
-                        _ => unreachable!(),
-                    };
+                    let w = snap.weights_flat().expect("central snapshot");
                     let first = w[0];
                     assert!(
                         w.iter().all(|&x| x == first),
@@ -312,7 +308,7 @@ fn server_follows_live_training() {
     let mut coord = Coordinator::new(cfg, dim);
     let cell = SnapshotCell::new(coord.snapshot());
     coord.set_publisher(SnapshotPublisher::new(Arc::clone(&cell), 1_000));
-    let server = PredictionServer::start(Arc::clone(&cell), 2);
+    let server = PredictionServer::single(Arc::clone(&cell), 2);
     let done = AtomicBool::new(false);
     let max_version_seen = AtomicU64::new(0);
     std::thread::scope(|s| {
