@@ -66,3 +66,84 @@ pub fn eval_rule(
     }
     best
 }
+
+/// One measured configuration for the `--bench-json` perf-trajectory
+/// output (`BENCH_*.json` files at the repo root).
+pub struct BenchRow {
+    pub name: String,
+    pub instances_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl BenchRow {
+    pub fn new(
+        name: impl Into<String>,
+        instances_per_sec: f64,
+        p50_us: f64,
+        p99_us: f64,
+    ) -> Self {
+        BenchRow { name: name.into(), instances_per_sec, p50_us, p99_us }
+    }
+
+    /// Build a row from a count, a wall-clock, and a per-instance
+    /// latency histogram.
+    pub fn from_hist(
+        name: impl Into<String>,
+        instances: u64,
+        wall: std::time::Duration,
+        hist: &pol::metrics::LatencyHistogram,
+    ) -> Self {
+        BenchRow::new(
+            name,
+            instances as f64 / wall.as_secs_f64().max(1e-9),
+            hist.quantile_ns(0.5) as f64 / 1e3,
+            hist.quantile_ns(0.99) as f64 / 1e3,
+        )
+    }
+}
+
+/// `--bench-json <path>` from the bench binary's arguments, if given.
+pub fn bench_json_path() -> Option<std::path::PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--bench-json")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from)
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write the rows as a small self-describing JSON document when the
+/// bench was invoked with `--bench-json <path>`; no-op otherwise.
+/// Hand-rolled emitter (the crate is dependency-free); names must not
+/// contain quotes or backslashes.
+pub fn write_bench_json(bench: &str, rows: &[BenchRow]) {
+    let Some(path) = bench_json_path() else { return };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    s.push_str(&format!("  \"scale\": {},\n", scale()));
+    s.push_str("  \"rows\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"instances_per_sec\": {}, \"p50_us\": {}, \"p99_us\": {}}}{}\n",
+            row.name,
+            json_num(row.instances_per_sec),
+            json_num(row.p50_us),
+            json_num(row.p99_us),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => eprintln!("bench json written to {}", path.display()),
+        Err(e) => eprintln!("bench json write to {} failed: {e}", path.display()),
+    }
+}

@@ -11,6 +11,8 @@
 //!
 //! Output columns:
 //!   cadence threads qps p50_us p99_us max_staleness train_ms
+//! `--bench-json <path>` additionally writes machine-readable rows
+//! (name, qps, p50/p99 µs) for the `BENCH_*.json` perf trajectory.
 //! `train_ms` is the wall time of the concurrent training pass; the
 //! `baseline` row shows the same pass with no serving load — their gap
 //! is the serving tax on the trainer (expected ≈ 0: readers share
@@ -55,7 +57,7 @@ fn cfg() -> RunConfig {
 
 /// One measured configuration: train a full pass while `threads`
 /// serving threads hammer single-instance predicts.
-fn run(ds: &Dataset, cadence: u64, threads: usize) {
+fn run(ds: &Dataset, cadence: u64, threads: usize) -> common::BenchRow {
     let mut session = Session::builder()
         .config(cfg())
         .dim(ds.dim)
@@ -102,6 +104,12 @@ fn run(ds: &Dataset, cadence: u64, threads: usize) {
         stats.max_staleness,
         train_ms
     );
+    common::BenchRow::new(
+        format!("cadence{cadence}-threads{threads}"),
+        stats.qps(),
+        stats.latency.quantile_ns(0.5) as f64 / 1e3,
+        stats.latency.quantile_ns(0.99) as f64 / 1e3,
+    )
 }
 
 fn main() {
@@ -127,9 +135,11 @@ fn main() {
         "{:>7} {:>7} {:>9} {:>7} {:>7} {:>13} {:>8}",
         "cadence", "threads", "qps", "p50_us", "p99_us", "max_staleness", "train_ms"
     );
+    let mut rows = Vec::new();
     for cadence in [1_024u64, 8_192] {
         for threads in [1usize, 2, 4] {
-            run(&ds, cadence, threads);
+            rows.push(run(&ds, cadence, threads));
         }
     }
+    common::write_bench_json("serve_throughput", &rows);
 }

@@ -337,32 +337,89 @@ pub fn train_weights(
     ds: &Dataset,
     batch: usize,
 ) -> (TrainReport, Vec<f64>) {
-    let batch = batch.max(1);
-    let start = std::time::Instant::now();
-    let mut cgl = LazyCg::new(ds.dim, cfg.loss);
-    let mut progressive = ProgressiveValidator::with_loss(cfg.loss);
-    let mut buf: Vec<(&[SparseFeat], f64)> = Vec::with_capacity(batch);
-    let mut total = 0u64;
+    let mut trainer = CgTrainer::new(cfg, ds.dim, batch);
     for inst in ds.passes(cfg.passes) {
-        let yhat = cgl.predict(&inst.features);
-        progressive.observe(yhat, inst.label);
-        buf.push((&inst.features, inst.label));
-        total += 1;
-        if buf.len() == batch {
-            cgl.step(&buf);
-            buf.clear();
+        trainer.push(&inst.features, inst.label);
+    }
+    trainer.finish()
+}
+
+/// Incremental minibatch-CG trainer — the streaming form of
+/// [`train_weights`]: instances arrive one [`push`](Self::push) at a
+/// time (from a [`crate::stream::Pipeline`] or an in-memory pass — the
+/// two are bit-identical), a CG step fires per full batch, and
+/// [`finish`](Self::finish) steps the trailing partial batch. The
+/// per-instance feature buffers are recycled; each CG step assembles a
+/// small slice-view vector, in line with [`LazyCg::step`]'s own
+/// per-step gradient scratch.
+pub struct CgTrainer {
+    cgl: LazyCg,
+    batch: usize,
+    /// Owned copies of the current batch (recycled capacity).
+    bx: Vec<Vec<SparseFeat>>,
+    by: Vec<f64>,
+    filled: usize,
+    total: u64,
+    progressive: ProgressiveValidator,
+    start: std::time::Instant,
+}
+
+impl CgTrainer {
+    pub fn new(cfg: &RunConfig, dim: usize, batch: usize) -> Self {
+        CgTrainer {
+            cgl: LazyCg::new(dim, cfg.loss),
+            batch: batch.max(1),
+            bx: Vec::new(),
+            by: Vec::new(),
+            filled: 0,
+            total: 0,
+            progressive: ProgressiveValidator::with_loss(cfg.loss),
+            start: std::time::Instant::now(),
         }
     }
-    if !buf.is_empty() {
-        cgl.step(&buf);
+
+    fn step_buffered(&mut self) {
+        if self.filled == 0 {
+            return;
+        }
+        let refs: Vec<(&[SparseFeat], f64)> = self.bx[..self.filled]
+            .iter()
+            .zip(&self.by[..self.filled])
+            .map(|(x, &y)| (x.as_slice(), y))
+            .collect();
+        self.cgl.step(&refs);
+        self.filled = 0;
     }
-    let report = TrainReport {
-        progressive: progressive.clone(),
-        shard_progressive: progressive,
-        instances: total,
-        elapsed: start.elapsed(),
-    };
-    (report, cgl.into_weights())
+
+    /// Observe and buffer one instance; steps CG on a full batch.
+    pub fn push(&mut self, x: &[SparseFeat], y: f64) {
+        let yhat = self.cgl.predict(x);
+        self.progressive.observe(yhat, y);
+        if self.bx.len() <= self.filled {
+            self.bx.push(Vec::new());
+            self.by.push(0.0);
+        }
+        self.bx[self.filled].clear();
+        self.bx[self.filled].extend_from_slice(x);
+        self.by[self.filled] = y;
+        self.filled += 1;
+        self.total += 1;
+        if self.filled == self.batch {
+            self.step_buffered();
+        }
+    }
+
+    /// Step the trailing partial batch and return report + weights.
+    pub fn finish(mut self) -> (TrainReport, Vec<f64>) {
+        self.step_buffered();
+        let report = TrainReport {
+            progressive: self.progressive.clone(),
+            shard_progressive: self.progressive,
+            instances: self.total,
+            elapsed: self.start.elapsed(),
+        };
+        (report, self.cgl.into_weights())
+    }
 }
 
 #[cfg(test)]

@@ -31,59 +31,97 @@ pub fn train_weights(
     ds: &Dataset,
     batch: usize,
 ) -> (TrainReport, Vec<f32>) {
-    let batch = batch.max(1);
-    let start = std::time::Instant::now();
-    let mut w = vec![0.0f32; ds.dim];
-    let mut progressive = ProgressiveValidator::with_loss(cfg.loss);
-    // accumulated minibatch gradient, kept sparse
-    let mut grad: Vec<(u32, f64)> = Vec::new();
-    let mut slot: std::collections::HashMap<u32, usize> =
-        std::collections::HashMap::new();
-    let mut in_batch = 0usize;
-    let mut updates = 0u64;
-    let mut total = 0u64;
+    let mut trainer = MinibatchSgd::new(cfg, ds.dim, batch);
     for inst in ds.passes(cfg.passes) {
-        let yhat = sparse_dot(&w, &inst.features);
-        progressive.observe(yhat, inst.label);
-        let g = cfg.loss.dloss(yhat, inst.label);
+        trainer.push(&inst.features, inst.label);
+    }
+    trainer.finish()
+}
+
+/// Incremental minibatch trainer — the streaming form of
+/// [`train_weights`]: instances arrive one [`push`](Self::push) at a
+/// time (from a [`crate::stream::Pipeline`] or an in-memory pass — the
+/// two are bit-identical), batches flush at the batch clock, and
+/// [`finish`](Self::finish) applies the trailing partial batch.
+pub struct MinibatchSgd {
+    w: Vec<f32>,
+    loss: crate::loss::Loss,
+    lr: crate::lr::LrSchedule,
+    batch: usize,
+    /// Accumulated minibatch gradient, kept sparse.
+    grad: Vec<(u32, f64)>,
+    slot: std::collections::HashMap<u32, usize>,
+    in_batch: usize,
+    updates: u64,
+    total: u64,
+    progressive: ProgressiveValidator,
+    start: std::time::Instant,
+}
+
+impl MinibatchSgd {
+    pub fn new(cfg: &RunConfig, dim: usize, batch: usize) -> Self {
+        MinibatchSgd {
+            w: vec![0.0f32; dim],
+            loss: cfg.loss,
+            lr: cfg.lr,
+            batch: batch.max(1),
+            grad: Vec::new(),
+            slot: std::collections::HashMap::new(),
+            in_batch: 0,
+            updates: 0,
+            total: 0,
+            progressive: ProgressiveValidator::with_loss(cfg.loss),
+            start: std::time::Instant::now(),
+        }
+    }
+
+    /// Observe and absorb one instance; flushes a full batch.
+    pub fn push(&mut self, x: &[SparseFeat], y: f64) {
+        let yhat = sparse_dot(&self.w, x);
+        self.progressive.observe(yhat, y);
+        let g = self.loss.dloss(yhat, y);
         if g != 0.0 {
-            for &(i, v) in &inst.features {
-                match slot.entry(i) {
+            for &(i, v) in x {
+                match self.slot.entry(i) {
                     std::collections::hash_map::Entry::Occupied(e) => {
-                        grad[*e.get()].1 += g * v as f64;
+                        self.grad[*e.get()].1 += g * v as f64;
                     }
                     std::collections::hash_map::Entry::Vacant(e) => {
-                        e.insert(grad.len());
-                        grad.push((i, g * v as f64));
+                        e.insert(self.grad.len());
+                        self.grad.push((i, g * v as f64));
                     }
                 }
             }
         }
-        in_batch += 1;
-        total += 1;
-        if in_batch == batch {
-            updates += 1;
+        self.in_batch += 1;
+        self.total += 1;
+        if self.in_batch == self.batch {
+            self.updates += 1;
             // one update per batch at the batch clock; gradient averaged
             // so the schedule's scale is comparable across batch sizes
-            let eta = cfg.lr.eta(updates) / batch as f64;
-            apply(&mut w, &grad, eta);
-            grad.clear();
-            slot.clear();
-            in_batch = 0;
+            let eta = self.lr.eta(self.updates) / self.batch as f64;
+            apply(&mut self.w, &self.grad, eta);
+            self.grad.clear();
+            self.slot.clear();
+            self.in_batch = 0;
         }
     }
-    if in_batch > 0 {
-        updates += 1;
-        let eta = cfg.lr.eta(updates) / in_batch as f64;
-        apply(&mut w, &grad, eta);
+
+    /// Apply the trailing partial batch and return report + weights.
+    pub fn finish(mut self) -> (TrainReport, Vec<f32>) {
+        if self.in_batch > 0 {
+            self.updates += 1;
+            let eta = self.lr.eta(self.updates) / self.in_batch as f64;
+            apply(&mut self.w, &self.grad, eta);
+        }
+        let report = TrainReport {
+            progressive: self.progressive.clone(),
+            shard_progressive: self.progressive,
+            instances: self.total,
+            elapsed: self.start.elapsed(),
+        };
+        (report, self.w)
     }
-    let report = TrainReport {
-        progressive: progressive.clone(),
-        shard_progressive: progressive,
-        instances: total,
-        elapsed: start.elapsed(),
-    };
-    (report, w)
 }
 
 fn apply(w: &mut [f32], grad: &[(u32, f64)], eta: f64) {

@@ -21,6 +21,7 @@ pub mod schedule;
 pub mod timing;
 
 use std::collections::VecDeque;
+use std::io;
 
 use crate::config::{RunConfig, UpdateRule};
 use crate::data::Dataset;
@@ -34,8 +35,8 @@ use crate::serve::snapshot::{
     TreePredictor,
 };
 use crate::sharding::feature::FeatureSharder;
+use crate::stream::{InstanceSource, Pipeline, PipelineStats};
 use crate::topology::NodeGraph;
-use schedule::{DelaySchedule, Op};
 
 /// Per-instance state held while waiting for the master's feedback.
 #[derive(Clone, Debug)]
@@ -605,18 +606,7 @@ impl Coordinator {
                 yhat
             }
             UpdateRule::Local => self.forward_local(features, label),
-            _ => {
-                let pend = self.forward(features, label);
-                let yhat = pend.final_pred;
-                self.pending.push_back(pend);
-                // instance t's feedback lands once τ further instances
-                // have arrived (the §0.6.6 steady-state delay)
-                while self.pending.len() as u64 > self.cfg.tau {
-                    let p = self.pending.pop_front().expect("pending non-empty");
-                    self.feedback(p);
-                }
-                yhat
-            }
+            _ => self.tree_feedback_step(features, label, None),
         };
         self.trained += 1;
         self.hooks_tick(false);
@@ -628,6 +618,101 @@ impl Coordinator {
     pub fn flush_feedback(&mut self) {
         while let Some(p) = self.pending.pop_front() {
             self.feedback(p);
+        }
+    }
+
+    /// Announce (stderr) that a centralized batch fit is about to
+    /// discard warm state — see [`Self::train`].
+    fn warn_refit(&self) {
+        if self.cfg.rule.worker_invariant()
+            && self.central_w.is_some()
+            && self.trained > 0
+        {
+            eprintln!(
+                "warning: centralized rule '{}' refits from zero weights; \
+                 discarding existing central table ({} trained instances)",
+                self.cfg.rule.name(),
+                self.trained
+            );
+        }
+    }
+
+    /// One per-instance step of the τ-scheduled tree training — the
+    /// shared body of [`Self::train`] (in-memory iteration) and
+    /// [`Self::train_source`] (pipeline batches), so the two paths
+    /// cannot drift: streaming is bit-identical by construction.
+    ///
+    /// Equivalent to the [`schedule::DelaySchedule`] op order: local
+    /// ops for the first τ instances, then one delayed global per
+    /// local in steady state ([`Self::finish_tree_stream`] drains the
+    /// trailing τ).
+    fn stream_step(
+        &mut self,
+        features: &[SparseFeat],
+        label: f64,
+        progressive: &mut ProgressiveValidator,
+        shard_pv: &mut ProgressiveValidator,
+    ) {
+        if self.cfg.rule == UpdateRule::Local {
+            // allocation-free path: no feedback phase
+            let final_pred = self.forward_local(features, label);
+            progressive.observe(final_pred, label);
+            for leaf in 0..self.graph.leaves {
+                shard_pv.observe(self.scratch_preds[leaf], label);
+            }
+        } else {
+            self.tree_feedback_step(
+                features,
+                label,
+                Some((progressive, shard_pv)),
+            );
+        }
+        self.trained += 1;
+        self.hooks_tick(false);
+    }
+
+    /// Forward sweep + enqueue + steady-state τ-drain of the feedback
+    /// rules — the one implementation of the §0.6.6 delay semantics,
+    /// shared by [`Self::learn_one`] and [`Self::stream_step`] so the
+    /// streaming, dataset, and one-at-a-time paths cannot drift.
+    /// Returns the pre-feedback final prediction.
+    fn tree_feedback_step(
+        &mut self,
+        features: &[SparseFeat],
+        label: f64,
+        validators: Option<(
+            &mut ProgressiveValidator,
+            &mut ProgressiveValidator,
+        )>,
+    ) -> f64 {
+        let pend = self.forward(features, label);
+        let yhat = pend.final_pred;
+        if let Some((progressive, shard_pv)) = validators {
+            progressive.observe(yhat, label);
+            for leaf in 0..self.graph.leaves {
+                shard_pv.observe(pend.preds[leaf], label);
+            }
+        }
+        self.pending.push_back(pend);
+        // instance t's feedback lands once τ further instances have
+        // arrived (the §0.6.6 steady-state delay)
+        while self.pending.len() as u64 > self.cfg.tau {
+            let p = self.pending.pop_front().expect("pending non-empty");
+            self.feedback(p);
+        }
+        yhat
+    }
+
+    /// End-of-stream tail of the tree rules: apply the trailing τ
+    /// feedbacks, then re-publish. The trailing globals land *after*
+    /// the last possible cadence publish (which fires during local
+    /// steps), so feedback rules must force a final publish — otherwise
+    /// a cell whose cadence divides the stream length would serve
+    /// weights missing the last τ updates forever.
+    fn finish_tree_stream(&mut self) {
+        if self.cfg.rule != UpdateRule::Local {
+            self.flush_feedback();
+            self.hooks_tick(true);
         }
     }
 
@@ -643,17 +728,7 @@ impl Coordinator {
     /// is announced on stderr, and [`Self::trained_instances`] reports
     /// the instances behind the *current* weights, never a mixed count.
     pub fn train(&mut self, ds: &Dataset) -> TrainReport {
-        if self.cfg.rule.worker_invariant()
-            && self.central_w.is_some()
-            && self.trained > 0
-        {
-            eprintln!(
-                "warning: centralized rule '{}' refits from zero weights; \
-                 discarding existing central table ({} trained instances)",
-                self.cfg.rule.name(),
-                self.trained
-            );
-        }
+        self.warn_refit();
         match self.cfg.rule {
             UpdateRule::Minibatch { batch } => {
                 let (rep, w) = minibatch::train_weights(&self.cfg, ds, batch);
@@ -677,55 +752,125 @@ impl Coordinator {
         let mut progressive = ProgressiveValidator::with_loss(self.cfg.loss);
         let mut shard_pv = ProgressiveValidator::with_loss(self.cfg.loss);
         let total = (ds.len() * self.cfg.passes) as u64;
-        let tau = if self.cfg.rule == UpdateRule::Local { 0 } else { self.cfg.tau };
-        let sched = DelaySchedule::new(tau);
-        let instances: Vec<&crate::data::instance::Instance> =
-            ds.passes(self.cfg.passes).collect();
-        for op in sched.ops(total) {
-            match op {
-                Op::Local(t) => {
-                    let inst = instances[t as usize];
-                    if self.cfg.rule == UpdateRule::Local {
-                        // allocation-free path: no feedback phase
-                        let final_pred =
-                            self.forward_local(&inst.features, inst.label);
-                        progressive.observe(final_pred, inst.label);
-                        for leaf in 0..self.graph.leaves {
-                            shard_pv.observe(self.scratch_preds[leaf], inst.label);
-                        }
-                    } else {
-                        let pend = self.forward(&inst.features, inst.label);
-                        progressive.observe(pend.final_pred, inst.label);
-                        for leaf in 0..self.graph.leaves {
-                            shard_pv.observe(pend.preds[leaf], inst.label);
-                        }
-                        self.pending.push_back(pend);
-                    }
-                    self.trained += 1;
-                    self.hooks_tick(false);
-                }
-                Op::Global(_) => {
-                    if self.cfg.rule != UpdateRule::Local {
-                        let pend =
-                            self.pending.pop_front().expect("schedule invariant");
-                        self.feedback(pend);
-                    }
-                }
-            }
+        for inst in ds.passes(self.cfg.passes) {
+            self.stream_step(
+                &inst.features,
+                inst.label,
+                &mut progressive,
+                &mut shard_pv,
+            );
         }
-        // The schedule's trailing Global ops applied feedback *after*
-        // the last possible cadence publish (which fires during Local
-        // ops), so feedback rules must re-publish the final weights —
-        // otherwise a cell whose cadence divides the stream length
-        // would serve weights missing the last τ updates forever.
-        if self.cfg.rule != UpdateRule::Local {
-            self.hooks_tick(true);
-        }
+        self.finish_tree_stream();
         TrainReport {
             progressive,
             shard_progressive: shard_pv,
             instances: total,
             elapsed: start.elapsed(),
+        }
+    }
+
+    /// Train over an [`InstanceSource`] through the streaming
+    /// [`Pipeline`] (background parse thread, bounded recycled-batch
+    /// pool): the constant-memory path for streams larger than RAM.
+    /// Weights are **bit-identical** to [`Self::train`] over the same
+    /// data materialized in memory — the per-instance code is shared
+    /// ([`Self::stream_step`], the incremental centralized trainers)
+    /// and the pipeline preserves stream order.
+    ///
+    /// The model's own `cfg.passes` governs (the source is reset
+    /// between passes).
+    pub fn train_source(
+        &mut self,
+        source: &mut dyn InstanceSource,
+    ) -> io::Result<TrainReport> {
+        self.train_source_with(source, &Pipeline::default())
+            .map(|(rep, _)| rep)
+    }
+
+    /// As [`Self::train_source`], with explicit pipeline tuning
+    /// (batch size, pool bound); also returns the pipeline's
+    /// pool-accounting stats. `pipe.passes` and `pipe.shard` are
+    /// overridden: the coordinator's config owns the pass count, and
+    /// tree sharding happens inside the forward sweep.
+    pub fn train_source_with(
+        &mut self,
+        source: &mut dyn InstanceSource,
+        pipe: &Pipeline,
+    ) -> io::Result<(TrainReport, PipelineStats)> {
+        let mut pipe = pipe.clone();
+        pipe.passes = self.cfg.passes;
+        pipe.shard = None;
+        self.warn_refit();
+        match self.cfg.rule {
+            UpdateRule::Minibatch { .. } | UpdateRule::Sgd => {
+                let batch = match self.cfg.rule {
+                    UpdateRule::Minibatch { batch } => batch,
+                    _ => 1,
+                };
+                let mut trainer =
+                    minibatch::MinibatchSgd::new(&self.cfg, source.dim(), batch);
+                let stats = pipe.drain(source, |b| {
+                    for inst in b.iter() {
+                        trainer.push(&inst.features, inst.label);
+                    }
+                    Ok(())
+                })?;
+                let (rep, w) = trainer.finish();
+                self.central_w = Some(w);
+                Ok((self.finish_central(rep), stats))
+            }
+            UpdateRule::Cg { batch } => {
+                let mut trainer =
+                    cg::CgTrainer::new(&self.cfg, source.dim(), batch);
+                let stats = pipe.drain(source, |b| {
+                    for inst in b.iter() {
+                        trainer.push(&inst.features, inst.label);
+                    }
+                    Ok(())
+                })?;
+                let (rep, w) = trainer.finish();
+                self.central_w =
+                    Some(w.into_iter().map(|x| x as f32).collect());
+                Ok((self.finish_central(rep), stats))
+            }
+            _ => {
+                let start = std::time::Instant::now();
+                let mut progressive =
+                    ProgressiveValidator::with_loss(self.cfg.loss);
+                let mut shard_pv =
+                    ProgressiveValidator::with_loss(self.cfg.loss);
+                let mut total = 0u64;
+                let feed_result = pipe.with_feed(source, |feed| {
+                    while let Some(res) = feed.recv() {
+                        let batch = res?;
+                        for inst in batch.iter() {
+                            self.stream_step(
+                                &inst.features,
+                                inst.label,
+                                &mut progressive,
+                                &mut shard_pv,
+                            );
+                        }
+                        total += batch.len() as u64;
+                        feed.recycle(batch);
+                    }
+                    Ok(())
+                });
+                // drain the τ in-flight feedbacks even when the stream
+                // failed mid-run: every instance this coordinator counted
+                // as trained must be *fully* applied, so an error never
+                // leaves half-trained state to leak into a later train
+                // call or checkpoint
+                self.finish_tree_stream();
+                let ((), stats) = feed_result?;
+                let report = TrainReport {
+                    progressive,
+                    shard_progressive: shard_pv,
+                    instances: total,
+                    elapsed: start.elapsed(),
+                };
+                Ok((report, stats))
+            }
         }
     }
 

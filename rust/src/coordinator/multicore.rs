@@ -7,14 +7,18 @@
 //! vector product adds together the results and computes an update which
 //! is then sent to all learning threads."
 //!
-//! We reproduce exactly that synchronization structure: k learner
-//! threads, per instance each computes its shard's partial ⟨w, x⟩ into a
-//! slot, the *last arriver* (detected with an atomic counter) sums the
-//! slots, computes the loss-gradient scale, publishes it, and every
-//! thread applies the update to its own shard — so the resulting weights
-//! are *identical* to single-thread SGD (up to the paper's noted
-//! order-of-addition ambiguity, which we remove by summing slots in
-//! fixed order; hence bit-determinism).
+//! We reproduce exactly that structure — including the asynchronous
+//! parsing thread: instances arrive through the shared
+//! [`crate::stream::Pipeline`], which parses and feature-shards each
+//! batch on a dedicated producer thread (bounded recycled-batch pool,
+//! so memory stays constant on streams of any size). k learner threads
+//! then process each batch in lockstep: per instance each computes its
+//! shard's partial ⟨w, x⟩ into a slot, the *last arriver* (detected
+//! with an atomic counter) sums the slots in fixed order, computes the
+//! loss-gradient scale, publishes it, and every thread applies the
+//! update to its own shard — so the resulting weights are *identical*
+//! to single-thread SGD (the paper's order-of-addition ambiguity is
+//! removed by the fixed-order sum; hence bit-determinism).
 //!
 //! Per-instance lock-free synchronization is profitable only when there
 //! is enough per-instance work (the paper: "its usefulness is
@@ -22,8 +26,9 @@
 //! e.g. outer-product features); `benches/multicore_speedup.rs` measures
 //! the speedup curve on such instances.
 
+use std::io;
 use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::data::Dataset;
 use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
@@ -31,6 +36,7 @@ use crate::loss::Loss;
 use crate::lr::LrSchedule;
 use crate::metrics::ProgressiveValidator;
 use crate::sharding::feature::FeatureSharder;
+use crate::stream::{DatasetSource, InstanceBatch, InstanceSource, Pipeline};
 
 /// Multicore synchronous feature-sharded trainer.
 pub struct MulticoreTrainer {
@@ -62,6 +68,103 @@ impl Rendezvous {
     }
 }
 
+/// Batch handoff from the pipeline consumer to the k learner threads:
+/// one published batch at a time, round counter to wake learners,
+/// completion counter to release the batch back to the pipeline pool.
+/// The round also carries a per-instance ŷ buffer the last arriver
+/// fills, so progressive validation comes out of the rendezvous itself
+/// (no second pass over the stream).
+struct BatchRound {
+    state: Mutex<RoundState>,
+    new_round: Condvar,
+    round_done: Condvar,
+}
+
+struct RoundState {
+    round: u64,
+    batch: Option<Arc<InstanceBatch>>,
+    /// ŷ per instance of the current batch (f64 bits), written by the
+    /// last-arriving learner at each instance's rendezvous.
+    yhats: Arc<Vec<AtomicU64>>,
+    done: usize,
+    finished: bool,
+}
+
+impl BatchRound {
+    fn new() -> Self {
+        BatchRound {
+            state: Mutex::new(RoundState {
+                round: 0,
+                batch: None,
+                yhats: Arc::new(Vec::new()),
+                done: 0,
+                finished: false,
+            }),
+            new_round: Condvar::new(),
+            round_done: Condvar::new(),
+        }
+    }
+
+    /// Publish a batch to all learners and block until every learner
+    /// has processed it; returns the batch (for recycling) and the
+    /// filled ŷ buffer.
+    fn run_round(
+        &self,
+        batch: InstanceBatch,
+        k: usize,
+    ) -> (InstanceBatch, Arc<Vec<AtomicU64>>) {
+        let arc = Arc::new(batch);
+        let mut st = self.state.lock().expect("round lock");
+        if st.yhats.len() < arc.len() {
+            st.yhats =
+                Arc::new((0..arc.len()).map(|_| AtomicU64::new(0)).collect());
+        }
+        let yhats = Arc::clone(&st.yhats);
+        st.batch = Some(Arc::clone(&arc));
+        st.done = 0;
+        st.round += 1;
+        self.new_round.notify_all();
+        while st.done < k {
+            st = self.round_done.wait(st).expect("round lock");
+        }
+        st.batch = None;
+        drop(st);
+        let batch = Arc::try_unwrap(arc).expect("all learners released the batch");
+        (batch, yhats)
+    }
+
+    /// Learner side: wait for the round after `my_round`. `None` means
+    /// the stream is finished.
+    fn next_round(
+        &self,
+        my_round: u64,
+    ) -> Option<(u64, Arc<InstanceBatch>, Arc<Vec<AtomicU64>>)> {
+        let mut st = self.state.lock().expect("round lock");
+        while !st.finished && st.round == my_round {
+            st = self.new_round.wait(st).expect("round lock");
+        }
+        if st.round == my_round {
+            return None; // finished with no new round
+        }
+        let batch = Arc::clone(st.batch.as_ref().expect("published batch"));
+        Some((st.round, batch, Arc::clone(&st.yhats)))
+    }
+
+    /// Learner side: mark this round processed (after dropping the
+    /// batch Arc).
+    fn complete(&self) {
+        let mut st = self.state.lock().expect("round lock");
+        st.done += 1;
+        self.round_done.notify_all();
+    }
+
+    fn finish(&self) {
+        let mut st = self.state.lock().expect("round lock");
+        st.finished = true;
+        self.new_round.notify_all();
+    }
+}
+
 /// Fixed-point encoding for the partial dots: f64 → i64 micro-units.
 /// Atomic i64 addition would be an alternative; we store, not add, so
 /// plain bit-casts suffice and determinism is trivial.
@@ -81,90 +184,86 @@ impl MulticoreTrainer {
         MulticoreTrainer { threads, loss, lr }
     }
 
-    /// Train one pass; returns (per-shard weight slices merged,
-    /// progressive validator, wall time).
+    /// Train one pass over an in-memory dataset; returns (per-shard
+    /// weight slices merged, progressive validator, wall time). Adapter
+    /// over [`Self::train_source`].
     pub fn train(
         &self,
         ds: &Dataset,
     ) -> (Vec<f32>, ProgressiveValidator, std::time::Duration) {
+        let mut src = DatasetSource::new(ds);
+        self.train_source(&mut src)
+            .expect("in-memory sources cannot fail")
+    }
+
+    /// Train one pass over a stream. The pipeline's producer thread is
+    /// the paper's asynchronous parsing thread: it parses *and*
+    /// feature-shards each instance into pooled batches; the k learner
+    /// threads rendezvous per instance exactly as before, so weights
+    /// are bit-identical to the in-memory path (and to single-thread
+    /// SGD up to f32 summation of disjoint shards). Progressive
+    /// validation is folded from the ŷ each rendezvous's last arriver
+    /// already computed — the stream is read exactly once.
+    pub fn train_source(
+        &self,
+        source: &mut dyn InstanceSource,
+    ) -> io::Result<(Vec<f32>, ProgressiveValidator, std::time::Duration)>
+    {
         let k = self.threads;
         let sharder = FeatureSharder::hash(k);
-        // pre-shard every instance (the paper's asynchronous parsing
-        // thread, done up front)
-        let shards: Vec<Vec<Vec<SparseFeat>>> = ds
-            .iter()
-            .map(|inst| {
-                let mut bufs: Vec<Vec<SparseFeat>> = vec![Vec::new(); k];
-                sharder.split_into(inst, &mut bufs);
-                bufs
-            })
-            .collect();
-        let labels: Vec<f64> = ds.iter().map(|i| i.label).collect();
+        let dim = source.dim();
+        let loss = self.loss;
+        let lr = self.lr;
+        let pipe = Pipeline { shard: Some(sharder), ..Default::default() };
 
         let start = std::time::Instant::now();
         let rv = Arc::new(Rendezvous::new(k));
-        let loss = self.loss;
-        let lr = self.lr;
-        let n = ds.len();
-        let mut pv = ProgressiveValidator::with_loss(loss);
-        let dim = ds.dim;
-
+        let round = Arc::new(BatchRound::new());
         let mut weight_parts: Vec<Vec<f32>> = Vec::with_capacity(k);
-        let pv_ref = &mut pv;
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(k);
-            for tid in 0..k {
-                let rv = Arc::clone(&rv);
-                let shards = &shards;
-                let labels = &labels;
-                handles.push(scope.spawn(move || {
-                    let mut w = vec![0.0f32; dim];
-                    let mut my_seq = 0u64;
-                    for t in 0..n {
-                        let x = &shards[t][tid];
-                        let partial = sparse_dot(&w, x);
-                        rv.slots[tid].store(f2b(partial), Ordering::Release);
-                        let arrived =
-                            rv.arrived.fetch_add(1, Ordering::AcqRel) + 1;
-                        if arrived == k {
-                            // last finisher: reduce in fixed slot order
-                            let yhat: f64 = (0..k)
-                                .map(|s| b2f(rv.slots[s].load(Ordering::Acquire)))
-                                .sum();
-                            let g = loss.dloss(yhat, labels[t]);
-                            let eta = lr.eta(t as u64 + 1);
-                            rv.gscale
-                                .store((-eta * g).to_bits(), Ordering::Release);
-                            rv.arrived.store(0, Ordering::Release);
-                            rv.seq.fetch_add(1, Ordering::AcqRel);
-                        } else {
-                            // bounded spin, then yield: on hosts with
-                            // fewer cores than threads a pure spin-wait
-                            // livelocks the worker holding the token
-                            let mut spins = 0u32;
-                            while rv.seq.load(Ordering::Acquire) == my_seq {
-                                spins += 1;
-                                if spins > 1_000 {
-                                    std::thread::yield_now();
-                                } else {
-                                    std::hint::spin_loop();
-                                }
+        let mut pv = ProgressiveValidator::with_loss(loss);
+
+        let ((), _stats) = pipe.with_feed(source, |feed| {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(k);
+                for tid in 0..k {
+                    let rv = Arc::clone(&rv);
+                    let round = Arc::clone(&round);
+                    handles.push(scope.spawn(move || {
+                        learner_thread(tid, k, dim, loss, lr, &rv, &round)
+                    }));
+                }
+                let mut result = Ok(());
+                loop {
+                    match feed.recv() {
+                        Some(Ok(batch)) => {
+                            let (batch, yhats) = round.run_round(batch, k);
+                            for (i, inst) in batch.iter().enumerate() {
+                                pv.observe(
+                                    f64::from_bits(
+                                        yhats[i].load(Ordering::Acquire),
+                                    ),
+                                    inst.label,
+                                );
                             }
+                            feed.recycle(batch);
                         }
-                        my_seq += 1;
-                        let scale =
-                            f64::from_bits(rv.gscale.load(Ordering::Acquire));
-                        if scale != 0.0 {
-                            sparse_saxpy(&mut w, scale, x);
+                        Some(Err(e)) => {
+                            result = Err(e);
+                            break;
                         }
+                        None => break,
                     }
-                    w
-                }));
-            }
-            for h in handles {
-                weight_parts.push(h.join().expect("learner thread"));
-            }
-        });
+                }
+                round.finish();
+                for h in handles {
+                    let part = h.join().expect("learner thread");
+                    if result.is_ok() {
+                        weight_parts.push(part);
+                    }
+                }
+                result
+            })
+        })?;
         let elapsed = start.elapsed();
 
         // merge: each thread only wrote its own shard's indices, so the
@@ -175,20 +274,71 @@ impl MulticoreTrainer {
                 *dst += src;
             }
         }
-        // progressive validation replay (predictions were implicit in the
-        // threads; recompute deterministically for reporting)
-        {
-            let mut wv = vec![0.0f32; dim];
-            for (t, inst) in ds.iter().enumerate() {
-                let yhat = sparse_dot(&wv, &inst.features);
-                pv_ref.observe(yhat, inst.label);
-                let g = loss.dloss(yhat, inst.label);
-                let eta = lr.eta(t as u64 + 1);
-                sparse_saxpy(&mut wv, -eta * g, &inst.features);
+        Ok((w, pv, elapsed))
+    }
+}
+
+/// One learner thread: for every instance of every published batch,
+/// compute the partial dot over this thread's shard, rendezvous, and
+/// apply the published update to its own shard of the weights.
+fn learner_thread(
+    tid: usize,
+    k: usize,
+    dim: usize,
+    loss: Loss,
+    lr: LrSchedule,
+    rv: &Rendezvous,
+    round: &BatchRound,
+) -> Vec<f32> {
+    let mut w = vec![0.0f32; dim];
+    let mut my_seq = 0u64;
+    let mut my_round = 0u64;
+    while let Some((r, batch, yhats)) = round.next_round(my_round) {
+        my_round = r;
+        for i in 0..batch.len() {
+            let x: &[SparseFeat] = &batch.shards(i)[tid];
+            let t = batch.start_index() + i as u64;
+            let partial = sparse_dot(&w, x);
+            rv.slots[tid].store(f2b(partial), Ordering::Release);
+            let arrived = rv.arrived.fetch_add(1, Ordering::AcqRel) + 1;
+            if arrived == k {
+                // last finisher: reduce in fixed slot order
+                let yhat: f64 = (0..k)
+                    .map(|s| b2f(rv.slots[s].load(Ordering::Acquire)))
+                    .sum();
+                yhats[i].store(yhat.to_bits(), Ordering::Release);
+                let g = loss.dloss(yhat, batch.get(i).label);
+                let eta = lr.eta(t + 1);
+                rv.gscale.store((-eta * g).to_bits(), Ordering::Release);
+                rv.arrived.store(0, Ordering::Release);
+                rv.seq.fetch_add(1, Ordering::AcqRel);
+            } else {
+                // bounded spin, then yield: on hosts with fewer cores
+                // than threads a pure spin-wait livelocks the worker
+                // holding the token
+                let mut spins = 0u32;
+                while rv.seq.load(Ordering::Acquire) == my_seq {
+                    spins += 1;
+                    if spins > 1_000 {
+                        std::thread::yield_now();
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+            my_seq += 1;
+            let scale = f64::from_bits(rv.gscale.load(Ordering::Acquire));
+            if scale != 0.0 {
+                sparse_saxpy(&mut w, scale, x);
             }
         }
-        (w, pv, elapsed)
+        // release both round Arcs before signalling so the consumer can
+        // reclaim the batch for the pipeline pool
+        drop(batch);
+        drop(yhats);
+        round.complete();
     }
+    w
 }
 
 #[cfg(test)]
@@ -239,10 +389,30 @@ mod tests {
     }
 
     #[test]
+    fn streaming_source_matches_in_memory() {
+        let d = ds();
+        let lr = LrSchedule::inv_sqrt(0.5, 1.0);
+        let mt = MulticoreTrainer::new(3, Loss::Squared, lr);
+        let (w_mem, _, _) = mt.train(&d);
+        let mut src = crate::stream::RcvLikeSource::new(SynthConfig {
+            instances: 2_000,
+            features: 300,
+            density: 30,
+            hash_bits: 12,
+            ..Default::default()
+        });
+        let (w_stream, _, _) = mt.train_source(&mut src).unwrap();
+        assert_eq!(w_mem, w_stream, "streamed weights must be bit-identical");
+    }
+
+    #[test]
     fn progressive_validator_sane() {
         let d = ds();
-        let mt =
-            MulticoreTrainer::new(2, Loss::Squared, LrSchedule::inv_sqrt(0.5, 1.0));
+        let mt = MulticoreTrainer::new(
+            2,
+            Loss::Squared,
+            LrSchedule::inv_sqrt(0.5, 1.0),
+        );
         let (_, pv, _) = mt.train(&d);
         assert_eq!(pv.count(), 2_000);
         assert!(pv.mean_squared().is_finite());

@@ -74,8 +74,21 @@ pub fn write_cache(ds: &Dataset, out: &mut impl Write) -> io::Result<()> {
     Ok(())
 }
 
-/// Deserialize a cache stream.
-pub fn read_cache(inp: &mut impl Read, name: &str) -> io::Result<Dataset> {
+/// Byte length of the fixed header ([`read_header`] consumes exactly
+/// this many bytes) — where the first record begins.
+pub const HEADER_LEN: u64 = 24;
+
+/// Parsed cache header.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheHeader {
+    /// Hashed feature-space size the records index into.
+    pub dim: usize,
+    /// Number of records that follow.
+    pub count: u64,
+}
+
+/// Read and validate the cache header (magic, version, dim, count).
+pub fn read_header(inp: &mut impl Read) -> io::Result<CacheHeader> {
     let mut magic = [0u8; 4];
     inp.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -91,27 +104,48 @@ pub fn read_cache(inp: &mut impl Read, name: &str) -> io::Result<Dataset> {
     let dim = u64::from_le_bytes(u64b) as usize;
     inp.read_exact(&mut u64b)?;
     let count = u64::from_le_bytes(u64b);
-    let mut ds = Dataset::new(name, dim);
-    ds.instances.reserve(count as usize);
+    Ok(CacheHeader { dim, count })
+}
+
+/// Read one record into a reused instance (the streaming hot path:
+/// feature capacity is retained across records). Truncated input is an
+/// `UnexpectedEof` error.
+pub fn read_record_into(
+    inp: &mut impl Read,
+    inst: &mut Instance,
+) -> io::Result<()> {
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
     let mut f32b = [0u8; 4];
-    for _ in 0..count {
-        inp.read_exact(&mut u64b)?;
-        let label = f64::from_le_bytes(u64b);
+    inp.read_exact(&mut u64b)?;
+    inst.label = f64::from_le_bytes(u64b);
+    inp.read_exact(&mut f32b)?;
+    inst.weight = f32::from_le_bytes(f32b);
+    inp.read_exact(&mut u64b)?;
+    inst.tag = u64::from_le_bytes(u64b);
+    inp.read_exact(&mut u32b)?;
+    let nfeat = u32::from_le_bytes(u32b) as usize;
+    inst.features.clear();
+    inst.features.reserve(nfeat.min(1 << 20));
+    let mut prev = 0u64;
+    for _ in 0..nfeat {
+        let delta = read_varint(inp)?;
+        prev += delta;
         inp.read_exact(&mut f32b)?;
-        let weight = f32::from_le_bytes(f32b);
-        inp.read_exact(&mut u64b)?;
-        let tag = u64::from_le_bytes(u64b);
-        inp.read_exact(&mut u32b)?;
-        let nfeat = u32::from_le_bytes(u32b) as usize;
-        let mut features = Vec::with_capacity(nfeat);
-        let mut prev = 0u64;
-        for _ in 0..nfeat {
-            let delta = read_varint(inp)?;
-            prev += delta;
-            inp.read_exact(&mut f32b)?;
-            features.push((prev as u32, f32::from_le_bytes(f32b)));
-        }
-        ds.instances.push(Instance { label, weight, features, tag });
+        inst.features.push((prev as u32, f32::from_le_bytes(f32b)));
+    }
+    Ok(())
+}
+
+/// Deserialize a cache stream.
+pub fn read_cache(inp: &mut impl Read, name: &str) -> io::Result<Dataset> {
+    let header = read_header(inp)?;
+    let mut ds = Dataset::new(name, header.dim);
+    ds.instances.reserve(header.count as usize);
+    for _ in 0..header.count {
+        let mut inst = Instance::new(0.0, Vec::new());
+        read_record_into(inp, &mut inst)?;
+        ds.instances.push(inst);
     }
     Ok(ds)
 }

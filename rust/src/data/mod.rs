@@ -1,7 +1,19 @@
-//! Data pipeline: instance format, VW-style text parser, binary cache,
+//! Data formats: instance type, VW-style text parser, binary cache,
 //! and synthetic dataset generators (the paper's datasets are either
 //! proprietary or hardware-gated; DESIGN.md §3 documents the
 //! substitutions).
+//!
+//! **Ingestion happens in [`crate::stream`]**: every trainer consumes
+//! an [`crate::stream::InstanceSource`] (file, cache, generator, or
+//! in-memory dataset) through a [`crate::stream::Pipeline`] — a
+//! background parsing thread feeding a bounded pool of recycled
+//! instance batches, the paper's §0.5.1 asynchronous-parse design.
+//! [`Dataset`] remains the *materialized* form: what you get from
+//! [`crate::stream::read_all`], what `split_test` carves held-out sets
+//! from, and what [`crate::model::Session::train`] adapts back onto
+//! the streaming path via [`crate::stream::DatasetSource`]. It is no
+//! longer the only way data reaches a learner — streams larger than
+//! memory train at pool-bounded RSS with bit-identical weights.
 
 pub mod cache;
 pub mod instance;

@@ -56,6 +56,19 @@ impl Parser {
 
     /// Parse one line into a hashed instance.
     pub fn parse_line(&mut self, line: &str) -> Result<Instance, ParseError> {
+        let mut inst = Instance::new(0.0, Vec::new());
+        self.parse_line_into(line, &mut inst)?;
+        Ok(inst)
+    }
+
+    /// Parse one line into a *reused* instance (the streaming hot path:
+    /// no per-line allocation once `inst.features` has grown to the
+    /// stream's working capacity). On error `inst` is unspecified.
+    pub fn parse_line_into(
+        &mut self,
+        line: &str,
+        inst: &mut Instance,
+    ) -> Result<(), ParseError> {
         self.line_no += 1;
         let line = line.trim();
         if line.is_empty() {
@@ -92,8 +105,9 @@ impl Parser {
             return Err(ParseError::BadLabel(head.into()));
         }
 
-        // namespace sections
-        let mut features: Vec<SparseFeat> = Vec::new();
+        // namespace sections (into the caller's recycled buffer)
+        inst.features.clear();
+        let features = &mut inst.features;
         // per-namespace-initial hashed indices, for quadratic expansion
         let mut by_initial: Vec<(char, Vec<u32>)> = Vec::new();
         for section in rest.split('|').skip(1) {
@@ -112,7 +126,7 @@ impl Parser {
                 Some(first) => {
                     // anonymous namespace; `first` is a feature
                     let seed = self.hasher.namespace_seed(b" ");
-                    push_feature(&self.hasher, seed, first, 1.0, &mut features)?;
+                    push_feature(&self.hasher, seed, first, 1.0, features)?;
                     (" ".to_string(), 1.0)
                 }
                 None => (" ".to_string(), 1.0),
@@ -121,7 +135,7 @@ impl Parser {
             let initial = ns_name.chars().next().unwrap_or(' ');
             let start = features.len();
             for tok in toks {
-                push_feature(&self.hasher, seed, tok, ns_scale, &mut features)?;
+                push_feature(&self.hasher, seed, tok, ns_scale, features)?;
             }
             if self.config.quadratic.iter().any(|&(a, b)| a == initial || b == initial)
             {
@@ -148,7 +162,10 @@ impl Parser {
             }
         }
 
-        Ok(Instance { label, weight, features, tag })
+        inst.label = label;
+        inst.weight = weight;
+        inst.tag = tag;
+        Ok(())
     }
 
     /// Parse a whole reader into a dataset, skipping malformed lines.
@@ -263,6 +280,81 @@ mod tests {
         let mut p = parser();
         let ds = p.parse_all("1 |f a\nbroken\n0 |f b\n", "t");
         assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn malformed_labels_rejected() {
+        let mut p = parser();
+        for line in ["abc |f x", "1..5 |f x", "- |f x", "|f x"] {
+            assert!(
+                matches!(p.parse_line(line), Err(ParseError::BadLabel(_))),
+                "{line:?} must be a BadLabel"
+            );
+        }
+        // a malformed importance weight is a value error, not a label one
+        assert!(matches!(
+            p.parse_line("1 heavy |f x"),
+            Err(ParseError::BadValue(_))
+        ));
+    }
+
+    #[test]
+    fn empty_namespaces_are_harmless() {
+        let mut p = parser();
+        // empty named namespace, empty anonymous namespace, namespace
+        // with only a scale: all parse to an instance with no features
+        for line in ["1 |", "1 | ", "1 |f", "1 |f |g", "1 |ns:2"] {
+            let inst = p.parse_line(line).unwrap_or_else(|e| {
+                panic!("{line:?} must parse, got {e}")
+            });
+            assert!(inst.features.is_empty(), "{line:?}");
+            assert_eq!(inst.label, 1.0);
+        }
+        // an empty namespace between populated ones drops nothing: 'x'
+        // in |a, then 'b' and 'y' in the trailing anonymous namespace
+        let inst = p.parse_line("1 |a x || b y").unwrap();
+        assert_eq!(inst.features.len(), 3);
+    }
+
+    #[test]
+    fn truncated_lines_rejected_or_degrade() {
+        let mut p = parser();
+        // feature with a dangling ':' value is malformed
+        assert!(matches!(
+            p.parse_line("1 |f a:"),
+            Err(ParseError::BadValue(_))
+        ));
+        assert!(matches!(
+            p.parse_line("1 |f a:1.5e"),
+            Err(ParseError::BadValue(_))
+        ));
+        // a line cut after the label is a featureless but valid instance
+        let inst = p.parse_line("1").unwrap();
+        assert!(inst.features.is_empty());
+        // cut mid-tag: tag hashes, does not crash
+        let inst = p.parse_line("1 'x |f a").unwrap();
+        assert_eq!(inst.features.len(), 1);
+    }
+
+    #[test]
+    fn parse_line_into_reuses_buffers_and_matches() {
+        let mut p1 = parser();
+        let mut p2 = parser();
+        let mut reused = crate::data::instance::Instance::new(0.0, Vec::new());
+        for line in ["1 |f a b:2.5 c", "-1 0.25 '77 |x q", "0 |ns:2 a:3"] {
+            p1.parse_line_into(line, &mut reused).unwrap();
+            let fresh = p2.parse_line(line).unwrap();
+            assert_eq!(reused, fresh, "{line:?}");
+        }
+        // after an error, the next parse still lands cleanly
+        assert!(p1.parse_line_into("bad |f x", &mut reused).is_err());
+        p1.parse_line_into("1 |f a", &mut reused).unwrap();
+        let mut p3 = parser();
+        p3.parse_line("1 |f a b:2.5 c").unwrap();
+        p3.parse_line("-1 0.25 '77 |x q").unwrap();
+        p3.parse_line("0 |ns:2 a:3").unwrap();
+        p3.parse_line("bad |f x").ok();
+        assert_eq!(reused, p3.parse_line("1 |f a").unwrap());
     }
 
     #[test]

@@ -18,9 +18,7 @@ pub mod prop4;
 
 pub use ad_display::AdDisplayGen;
 
-use crate::data::instance::Instance;
 use crate::data::Dataset;
-use crate::rng::Rng;
 
 /// Shared knobs for the stream generators.
 #[derive(Clone, Debug)]
@@ -71,6 +69,11 @@ impl SynthConfig {
 /// RCV1-like generator: Zipf-distributed token draws (power-law document
 /// frequencies), TF-normalized values, labels from a planted sparse
 /// hyperplane over the vocabulary plus flip noise. Labels ∈ {−1, +1}.
+///
+/// This is the eager wrapper over the streaming
+/// [`crate::stream::RcvLikeSource`] (the primary implementation):
+/// `generate()` materializes the identical stream, so in-memory and
+/// streamed training see bit-identical data.
 pub struct RcvLikeGen {
     pub config: SynthConfig,
 }
@@ -81,45 +84,9 @@ impl RcvLikeGen {
     }
 
     pub fn generate(&self) -> Dataset {
-        let c = &self.config;
-        let mut rng = Rng::new(c.seed);
-        let dim = 1usize << c.hash_bits;
-        let hasher = crate::hashing::FeatureHasher::new(c.hash_bits);
-        // planted hyperplane over the vocabulary (dense: every token
-        // carries some signal, as TF-IDF features do)
-        let mut w_true = vec![0.0f64; c.features];
-        for wt in w_true.iter_mut() {
-            *wt = rng.normal();
-        }
-        let mut ds = Dataset::new("rcv-like", dim);
-        ds.instances.reserve(c.instances);
-        let mut toks: Vec<u64> = Vec::new();
-        for t in 0..c.instances {
-            // document length ~ Poisson-ish around density via geometric mix
-            let len = 1 + (c.density as f64 * (0.5 + rng.next_f64())) as usize;
-            toks.clear();
-            for _ in 0..len {
-                toks.push(rng.zipf(c.features as u64, 1.1));
-            }
-            toks.sort_unstable();
-            toks.dedup();
-            let norm = 1.0 / (toks.len() as f32).sqrt();
-            let mut margin = 0.0;
-            let features: Vec<(u32, f32)> = toks
-                .iter()
-                .map(|&tok| {
-                    margin += w_true[tok as usize] * norm as f64;
-                    let (idx, sign) = hasher.hash_id(1, tok);
-                    (idx, sign * norm)
-                })
-                .collect();
-            let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
-            if rng.bernoulli(c.noise) {
-                label = -label;
-            }
-            ds.instances.push(Instance { label, weight: 1.0, features, tag: t as u64 });
-        }
-        ds
+        let mut src = crate::stream::RcvLikeSource::new(self.config.clone());
+        crate::stream::read_all(&mut src)
+            .expect("synthetic sources cannot fail")
     }
 }
 
@@ -142,47 +109,18 @@ impl WebspamLikeGen {
         WebspamLikeGen { config, blocks: 32, rho: 0.7 }
     }
 
+    /// Materialize via the streaming
+    /// [`crate::stream::WebspamLikeSource`] (the primary
+    /// implementation), so in-memory and streamed training see
+    /// bit-identical data.
     pub fn generate(&self) -> Dataset {
-        let c = &self.config;
-        let mut rng = Rng::new(c.seed.wrapping_add(0x5EB));
-        let dim = 1usize << c.hash_bits;
-        let hasher = crate::hashing::FeatureHasher::new(c.hash_bits);
-        let block_of = |f: u64| (f % self.blocks as u64) as usize;
-        // planted weights: sign alternates *within* blocks so that local
-        // per-feature learning sees near-zero marginal correlation while
-        // the block aggregate carries signal (Prop-4 structure, scaled)
-        let mut w_true = vec![0.0f64; c.features];
-        for (f, wt) in w_true.iter_mut().enumerate() {
-            let s = if f % 2 == 0 { 1.0 } else { -1.0 };
-            *wt = s * (0.5 + rng.next_f64());
-        }
-        let mut ds = Dataset::new("webspam-like", dim);
-        ds.instances.reserve(c.instances);
-        for t in 0..c.instances {
-            let latent: Vec<f64> = (0..self.blocks).map(|_| rng.normal()).collect();
-            let len = 1 + (c.density as f64 * (0.5 + rng.next_f64())) as usize;
-            let mut margin = 0.0;
-            let mut features = Vec::with_capacity(len);
-            let mut seen = std::collections::HashSet::with_capacity(len);
-            for _ in 0..len {
-                let f = rng.zipf(c.features as u64, 1.05);
-                if !seen.insert(f) {
-                    continue;
-                }
-                let z = self.rho * latent[block_of(f)]
-                    + (1.0 - self.rho) * rng.normal();
-                let v = z as f32 * 0.3;
-                margin += w_true[f as usize] * v as f64;
-                let (idx, sign) = hasher.hash_id(2, f);
-                features.push((idx, sign * v));
-            }
-            let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
-            if rng.bernoulli(c.noise) {
-                label = -label;
-            }
-            ds.instances.push(Instance { label, weight: 1.0, features, tag: t as u64 });
-        }
-        ds
+        let mut src = crate::stream::WebspamLikeSource::with_blocks(
+            self.config.clone(),
+            self.blocks,
+            self.rho,
+        );
+        crate::stream::read_all(&mut src)
+            .expect("synthetic sources cannot fail")
     }
 }
 

@@ -22,16 +22,26 @@
 //! branching exists in exactly one place: the checkpoint codec
 //! ([`serve::checkpoint`]), where bytes become trait objects.
 //!
-//! ## Quickstart
+//! ## Quickstart — train from a stream
+//!
+//! Data enters through [`stream::InstanceSource`] — a resettable stream
+//! of instances backed by a VW-text file ([`stream::VwTextSource`]), a
+//! binary cache ([`stream::CacheSource`]), a synthetic generator
+//! ([`stream::RcvLikeSource`]), or an in-memory [`data::Dataset`]
+//! ([`stream::DatasetSource`]). A [`stream::Pipeline`] parses on a
+//! background thread into a bounded pool of recycled batches, so
+//! training memory is constant no matter how large the stream — and
+//! weights are bit-identical to the in-memory path (stream order *is*
+//! the model definition in online learning).
 //!
 //! ```no_run
 //! use pol::prelude::*;
 //!
-//! let ds = RcvLikeGen::new(SynthConfig {
-//!     instances: 10_000, features: 1_000, ..Default::default()
-//! }).generate();
+//! let source = RcvLikeSource::new(SynthConfig {
+//!     instances: 10_000_000, features: 23_000, ..Default::default()
+//! });
 //! let mut session = Session::builder()
-//!     .dim(ds.dim)
+//!     .source(source)                    // ← or VwTextSource::open(...)
 //!     .topology(Topology::TwoLayer { shards: 4 })
 //!     .rule(UpdateRule::Local)           // ← swap architectures here
 //!     .loss(Loss::Logistic)
@@ -39,13 +49,17 @@
 //!     .clip01(false)
 //!     .build()
 //!     .expect("build session");
-//! let report = session.train(&ds).expect("train");
+//! let report = session.run().expect("train");
 //! println!(
 //!     "progressive loss {:.4}, acc {:.4}",
 //!     report.progressive.mean_loss(),
 //!     report.progressive.accuracy()
 //! );
 //! ```
+//!
+//! Already-materialized data trains the same way through
+//! [`model::Session::train`] (`session.train(&ds)`), which is now a
+//! thin adapter over the same per-instance code path.
 //!
 //! ## Three-layer architecture (+ the serving layer)
 //!
@@ -94,6 +108,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod sharding;
+pub mod stream;
 pub mod topology;
 
 /// Convenience re-exports for the common API surface.
@@ -122,6 +137,10 @@ pub mod prelude {
     pub use crate::serve::{
         ModelRegistry, ModelSnapshot, PredictClient, PredictionServer,
         SnapshotCell, SnapshotPublisher,
+    };
+    pub use crate::stream::{
+        CacheSource, DatasetSource, InstanceSource, Pipeline, RcvLikeSource,
+        VwTextSource, WebspamLikeSource,
     };
     pub use crate::topology::Topology;
 }

@@ -29,6 +29,7 @@ use pol::lr::LrSchedule;
 use pol::model::Session;
 use pol::rng::Rng;
 use pol::serve::{checkpoint, ModelRegistry, PredictionServer, SnapshotCell};
+use pol::stream::InstanceSource;
 use pol::topology::Topology;
 
 fn main() {
@@ -60,7 +61,14 @@ USAGE: pol <command> [--key value ...]
 
 COMMANDS:
   train            train a configuration (Session::builder under the hood)
-                   --data rcv|webspam|ad   --rule local|delayed-global|
+                   --data rcv|webspam|ad|FILE  (a FILE — VW text or .polc
+                   binary cache, sniffed by magic — is *streamed* through
+                   the background parse pipeline at constant memory;
+                   progressive metrics only)
+                   --in-memory      (load the FILE fully instead: enables
+                   the 80/20 held-out split and test metrics)
+                   --hash-bits B    (text-file feature hashing, default 18)
+                   --rule local|delayed-global|
                    corrective|backprop[:m]|minibatch[:b]|cg[:b]|sgd
                    --workers N  --passes P  --tau T  --lambda L  --t0 T0
                    --loss squared|logistic  --instances N  --seed S
@@ -181,6 +189,56 @@ fn usage_error(e: &str) -> i32 {
     2
 }
 
+/// Detected format of a `--data` file.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SourceKind {
+    Text,
+    Cache,
+}
+
+/// `--hash-bits` is a text-parsing knob: on a `.polc` cache (whose dim
+/// comes from its header) it must be rejected, never silently ignored.
+fn reject_cache_hash_bits(
+    kind: SourceKind,
+    explicit_bits: Option<u32>,
+    data: &str,
+) -> Result<(), String> {
+    if kind == SourceKind::Cache && explicit_bits.is_some() {
+        return Err(format!(
+            "train: --hash-bits applies to VW-text files; '{data}' is a \
+             .polc cache whose dim comes from its header"
+        ));
+    }
+    Ok(())
+}
+
+/// Open a data *file* as a streaming source, sniffing the format from
+/// its magic bytes: `POLC` → binary cache, anything else → VW text
+/// hashed into `2^bits` features.
+fn open_source(
+    path: &str,
+    bits: u32,
+) -> Result<(Box<dyn InstanceSource>, SourceKind), String> {
+    use std::io::Read;
+    let mut magic = [0u8; 4];
+    let n = std::fs::File::open(path)
+        .and_then(|mut f| f.read(&mut magic))
+        .map_err(|e| format!("train: --data {path}: {e}"))?;
+    if n == 4 && &magic == b"POLC" {
+        let src = pol::stream::CacheSource::open(path)
+            .map_err(|e| format!("train: --data {path}: {e}"))?;
+        Ok((Box::new(src), SourceKind::Cache))
+    } else {
+        let src = pol::stream::VwTextSource::open(
+            path,
+            bits,
+            pol::data::parser::ParserConfig::default(),
+        )
+        .map_err(|e| format!("train: --data {path}: {e}"))?;
+        Ok((Box::new(src), SourceKind::Text))
+    }
+}
+
 fn make_dataset(name: &str, instances: usize, seed: u64) -> Result<Dataset, String> {
     match name {
         "rcv" => Ok(RcvLikeGen::new(SynthConfig {
@@ -279,6 +337,34 @@ fn train_config(fl: &Flags) -> Result<RunConfig, String> {
     Ok(cfg)
 }
 
+/// Attach `--checkpoint` / `--checkpoint-every` wiring to a builder.
+fn wire_checkpoint(
+    mut builder: pol::model::SessionBuilder,
+    fl: &Flags,
+) -> Result<pol::model::SessionBuilder, String> {
+    if let Some(path) = fl.get("--checkpoint") {
+        builder = builder.checkpoint_to(path);
+    }
+    if let Some(every) = parsed::<u64>("train", fl, "--checkpoint-every")? {
+        if fl.get("--checkpoint").is_none() {
+            return Err("train: --checkpoint-every requires --checkpoint".into());
+        }
+        builder = builder.checkpoint_every(every);
+    }
+    Ok(builder)
+}
+
+fn report_checkpoint(session: &pol::model::Session, fl: &Flags) {
+    if let Some(path) = fl.get("--checkpoint") {
+        let bg = session.background_checkpoints();
+        if bg > 0 {
+            eprintln!("checkpoint saved to {path:?} ({bg} background writes)");
+        } else {
+            eprintln!("checkpoint saved to {path:?}");
+        }
+    }
+}
+
 fn cmd_train(args: &[String]) -> i32 {
     let fl = match parse_flags(
         "train",
@@ -286,9 +372,10 @@ fn cmd_train(args: &[String]) -> i32 {
         &[
             "--config", "--rule", "--workers", "--topology", "--loss",
             "--passes", "--tau", "--lambda", "--t0", "--seed", "--data",
-            "--instances", "--checkpoint", "--checkpoint-every",
+            "--instances", "--hash-bits", "--checkpoint",
+            "--checkpoint-every",
         ],
-        &[],
+        &["--in-memory"],
     ) {
         Ok(fl) => fl,
         Err(e) => return usage_error(&e),
@@ -300,13 +387,149 @@ fn cmd_train(args: &[String]) -> i32 {
     let run = || -> Result<i32, String> {
         let mut cfg = train_config(&fl)?;
         let data = fl.get("--data").unwrap_or("rcv").to_string();
+        let builtin = matches!(data.as_str(), "rcv" | "webspam" | "ad");
+        let is_file = !builtin && std::path::Path::new(&data).exists();
+        if !builtin && !is_file {
+            return Err(format!(
+                "train: --data '{data}' is neither a builtin dataset \
+                 (rcv, webspam, ad) nor an existing file (pass a VW-text \
+                 or .polc cache path to stream it; add --in-memory to \
+                 materialize it instead)"
+            ));
+        }
+        if builtin && fl.has("--in-memory") {
+            return Err(
+                "train: --in-memory applies to --data FILE (builtin \
+                 synthetic datasets are already in memory)"
+                    .into(),
+            );
+        }
+        if builtin && fl.get("--hash-bits").is_some() {
+            return Err(
+                "train: --hash-bits applies to --data FILE text streams"
+                    .into(),
+            );
+        }
+        if is_file && fl.get("--instances").is_some() {
+            return Err(
+                "train: --instances applies to builtin synthetic datasets; \
+                 a --data FILE is streamed in full"
+                    .into(),
+            );
+        }
         let instances: usize =
             parsed("train", &fl, "--instances")?.unwrap_or(50_000);
+        let explicit_bits: Option<u32> = parsed("train", &fl, "--hash-bits")?;
+        if let Some(b) = explicit_bits {
+            // FeatureHasher asserts this range; fail as a usage error,
+            // never a panic
+            if !(1..=31).contains(&b) {
+                return Err(format!(
+                    "train: bad value '{b}' for --hash-bits (valid: 1-31)"
+                ));
+            }
+        }
+        let bits = explicit_bits.unwrap_or(18);
         if data != "ad" && cfg.loss == Loss::Squared && cfg.clip01 {
             // ±1-label tasks: clipping to [0,1] makes no sense
             cfg.clip01 = false;
         }
-        let ds = make_dataset(&data, instances, cfg.seed)?;
+
+        // a --data FILE is opened exactly once here (format sniffed,
+        // text-only flags validated); the --in-memory switch then only
+        // decides whether it streams or materializes. The flags were
+        // valid, so an unreadable/corrupt file is a runtime error
+        // (exit 1), not a usage error
+        let mut file_source = if is_file {
+            let (source, kind) = match open_source(&data, bits) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return Ok(1);
+                }
+            };
+            reject_cache_hash_bits(kind, explicit_bits, &data)?;
+            Some(source)
+        } else {
+            None
+        };
+
+        if !fl.has("--in-memory") && file_source.is_some() {
+            let mut source = file_source.take().expect("checked is_some");
+            // the default file path: stream at constant memory through
+            // the background parse pipeline (no held-out split — the
+            // stream length is unknown up front; progressive metrics
+            // are the online-learning report)
+            eprintln!(
+                "streaming dataset={} dim={} rule={} workers={} passes={} \
+                 (progressive metrics; use --in-memory for a held-out split)",
+                data,
+                source.dim(),
+                cfg.rule.name(),
+                cfg.topology.leaves(),
+                cfg.passes
+            );
+            let builder = wire_checkpoint(
+                Session::builder().config(cfg.clone()).dim(source.dim()),
+                &fl,
+            )?;
+            // from here on failures are runtime errors (exit 1)
+            let mut session = match builder.build() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("train: session build failed: {e}");
+                    return Ok(1);
+                }
+            };
+            let report = match session.train_source(source.as_mut()) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("train: streaming failed: {e}");
+                    return Ok(1);
+                }
+            };
+            if source.skipped() > 0 {
+                // the counter accumulates across passes (each pass
+                // re-reads the file); report per-pass so the number
+                // matches distinct bad lines in the file
+                let passes = cfg.passes.max(1) as u64;
+                if passes > 1 {
+                    eprintln!(
+                        "skipped {} malformed line(s) in {data} per pass \
+                         ({} line reads across {passes} passes)",
+                        source.skipped() / passes,
+                        source.skipped()
+                    );
+                } else {
+                    eprintln!(
+                        "skipped {} malformed line(s) in {data}",
+                        source.skipped()
+                    );
+                }
+            }
+            println!(
+                "progressive_loss={:.6} progressive_acc={:.4} instances={} elapsed_ms={}",
+                report.progressive.mean_loss(),
+                report.progressive.accuracy(),
+                report.instances,
+                report.elapsed.as_millis()
+            );
+            report_checkpoint(&session, &fl);
+            return Ok(0);
+        }
+
+        let ds = match file_source {
+            // --in-memory: materialize the already-opened stream, keep
+            // the classic 80/20 held-out split and test metrics
+            Some(mut source) => match pol::stream::read_all(source.as_mut()) {
+                Ok(ds) => ds,
+                Err(e) => {
+                    eprintln!("train: reading {data}: {e}");
+                    return Ok(1);
+                }
+            },
+            None => make_dataset(&data, instances, cfg.seed)?,
+        };
         let (train, test) = ds.split_test(0.2);
         eprintln!(
             "dataset={} train={} test={} dim={} rule={} workers={} passes={}",
@@ -318,19 +541,10 @@ fn cmd_train(args: &[String]) -> i32 {
             cfg.topology.leaves(),
             cfg.passes
         );
-        let mut builder =
-            Session::builder().config(cfg.clone()).dim(train.dim);
-        if let Some(path) = fl.get("--checkpoint") {
-            builder = builder.checkpoint_to(path);
-        }
-        if let Some(every) = parsed::<u64>("train", &fl, "--checkpoint-every")? {
-            if fl.get("--checkpoint").is_none() {
-                return Err(
-                    "train: --checkpoint-every requires --checkpoint".into()
-                );
-            }
-            builder = builder.checkpoint_every(every);
-        }
+        let builder = wire_checkpoint(
+            Session::builder().config(cfg.clone()).dim(train.dim),
+            &fl,
+        )?;
         // from here on failures are runtime errors (exit 1), not usage
         // errors (exit 2)
         let mut session = match builder.build() {
@@ -361,16 +575,7 @@ fn cmd_train(args: &[String]) -> i32 {
             report.instances,
             report.elapsed.as_millis()
         );
-        if let Some(path) = fl.get("--checkpoint") {
-            let bg = session.background_checkpoints();
-            if bg > 0 {
-                eprintln!(
-                    "checkpoint saved to {path:?} ({bg} background writes)"
-                );
-            } else {
-                eprintln!("checkpoint saved to {path:?}");
-            }
-        }
+        report_checkpoint(&session, &fl);
         Ok(0)
     };
     match run() {

@@ -23,36 +23,26 @@ use crate::lr::LrSchedule;
 use crate::model::Model;
 use crate::serve::checkpoint::{self, CheckpointSink};
 use crate::serve::publisher::{SnapshotCell, SnapshotPublisher};
+use crate::stream::InstanceSource;
 use crate::topology::Topology;
 
 /// Fluent constructor for [`Session`]s. Obtain via [`Session::builder`].
 ///
 /// Defaults match [`RunConfig::default`] with a `2^18` hashed feature
 /// space; every knob has a setter, or pass a whole config with
-/// [`Self::config`] (CLI/config-file flows).
-#[derive(Clone)]
+/// [`Self::config`] (CLI/config-file flows). Attach training data with
+/// [`Self::source`] (streamed; [`Session::run`] drains it) — or skip it
+/// and pass a materialized dataset to [`Session::train`].
+#[derive(Default)]
 pub struct SessionBuilder {
     cfg: RunConfig,
-    dim: usize,
+    dim: Option<usize>,
+    source: Option<Box<dyn InstanceSource>>,
     publish_every: Option<u64>,
     cell: Option<Arc<SnapshotCell>>,
     checkpoint_to: Option<PathBuf>,
     checkpoint_every: Option<u64>,
     warm_start: Option<PathBuf>,
-}
-
-impl Default for SessionBuilder {
-    fn default() -> Self {
-        SessionBuilder {
-            cfg: RunConfig::default(),
-            dim: 1 << 18,
-            publish_every: None,
-            cell: None,
-            checkpoint_to: None,
-            checkpoint_every: None,
-            warm_start: None,
-        }
-    }
 }
 
 impl SessionBuilder {
@@ -63,9 +53,25 @@ impl SessionBuilder {
         self
     }
 
-    /// Hashed feature-space size of the leaves (default `2^18`).
+    /// Hashed feature-space size of the leaves. Defaults to the
+    /// attached [`Self::source`]'s dim, or `2^18` with no source.
     pub fn dim(mut self, dim: usize) -> Self {
-        self.dim = dim.max(1);
+        self.dim = Some(dim.max(1));
+        self
+    }
+
+    /// Attach the training stream: [`Session::run`] drains it through
+    /// the background parse pipeline. Unless [`Self::dim`] is set
+    /// explicitly, the model's feature space is sized from the source.
+    pub fn source(mut self, source: impl InstanceSource + 'static) -> Self {
+        self.source = Some(Box::new(source));
+        self
+    }
+
+    /// As [`Self::source`], for an already-boxed stream (CLI flows that
+    /// pick the format at runtime).
+    pub fn boxed_source(mut self, source: Box<dyn InstanceSource>) -> Self {
+        self.source = Some(source);
         self
     }
 
@@ -174,9 +180,13 @@ impl SessionBuilder {
 
     /// Construct the model and wire its serving/durability hooks.
     pub fn build(self) -> io::Result<Session> {
+        let dim = self
+            .dim
+            .or_else(|| self.source.as_ref().map(|s| s.dim().max(1)))
+            .unwrap_or(1 << 18);
         let mut model: Box<dyn Model> = match &self.warm_start {
             Some(path) => checkpoint::load_model(path)?,
-            None => Box::new(Coordinator::new(self.cfg, self.dim)),
+            None => Box::new(Coordinator::new(self.cfg, dim)),
         };
         let cell = match (self.cell, self.publish_every) {
             (cell, Some(every)) => {
@@ -210,6 +220,7 @@ impl SessionBuilder {
         Ok(Session {
             model,
             cell,
+            source: self.source,
             checkpoint_to: self.checkpoint_to,
             ckpt_writes,
         })
@@ -222,6 +233,7 @@ impl SessionBuilder {
 pub struct Session {
     model: Box<dyn Model>,
     cell: Option<Arc<SnapshotCell>>,
+    source: Option<Box<dyn InstanceSource>>,
     checkpoint_to: Option<PathBuf>,
     ckpt_writes: Option<Arc<AtomicU64>>,
 }
@@ -234,7 +246,13 @@ impl Session {
     /// Wrap an already-constructed model (e.g. a concrete [`crate::learner::sgd::Sgd`]
     /// or a checkpoint loaded elsewhere) with no serving wiring.
     pub fn from_model(model: Box<dyn Model>) -> Session {
-        Session { model, cell: None, checkpoint_to: None, ckpt_writes: None }
+        Session {
+            model,
+            cell: None,
+            source: None,
+            checkpoint_to: None,
+            ckpt_writes: None,
+        }
     }
 
     pub fn model(&self) -> &dyn Model {
@@ -273,18 +291,54 @@ impl Session {
     /// never killed by a flaky disk).
     pub fn train(&mut self, ds: &Dataset) -> io::Result<TrainReport> {
         let report = self.model.train_dataset(ds);
+        self.after_train()?;
+        Ok(report)
+    }
+
+    /// Train over a stream through the background parse pipeline —
+    /// constant memory, bit-identical weights to [`Self::train`] on the
+    /// same data materialized. Publish/checkpoint wiring behaves
+    /// exactly as in [`Self::train`].
+    pub fn train_source(
+        &mut self,
+        source: &mut dyn InstanceSource,
+    ) -> io::Result<TrainReport> {
+        let report = self.model.train_source(source)?;
+        self.after_train()?;
+        Ok(report)
+    }
+
+    /// Drain the stream attached via [`SessionBuilder::source`]. The
+    /// source stays attached and the pipeline resets it before every
+    /// pass (including the first), so calling `run` again streams the
+    /// whole source again — another epoch of training.
+    pub fn run(&mut self) -> io::Result<TrainReport> {
+        let mut source = self.source.take().ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "no source attached (SessionBuilder::source)",
+            )
+        })?;
+        let result = self.train_source(source.as_mut());
+        self.source = Some(source);
+        result
+    }
+
+    /// End-of-training wiring shared by every train path: publish the
+    /// final weights to the cell if the last cadence publish is behind,
+    /// then write the final checkpoint after in-flight background
+    /// writes land (so a stale write can never win).
+    fn after_train(&mut self) -> io::Result<()> {
         if let Some(cell) = &self.cell {
             if cell.load().trained_instances < self.model.trained_instances() {
                 cell.publish(self.model.snapshot());
             }
         }
         if let Some(path) = self.checkpoint_to.clone() {
-            // let any in-flight background write land before the final
-            // save replaces the file, so a stale write can never win
             self.model.finish_checkpoints();
             self.save(&path)?;
         }
-        Ok(report)
+        Ok(())
     }
 
     /// Write the model to a `.polz` checkpoint atomically.
@@ -372,6 +426,76 @@ mod tests {
         session.train(&ds).unwrap();
         assert_eq!(cell.seq(), 1, "exactly the end-of-train publish");
         assert_eq!(cell.load().trained_instances, 2_000);
+    }
+
+    #[test]
+    fn source_drives_run_and_matches_in_memory_train() {
+        let cfg = SynthConfig {
+            instances: 2_000,
+            features: 300,
+            density: 12,
+            hash_bits: 11,
+            ..Default::default()
+        };
+        let ds = RcvLikeGen::new(cfg.clone()).generate();
+        let mut in_memory = builder_for(&ds).build().unwrap();
+        in_memory.train(&ds).unwrap();
+        // no explicit .dim: the feature space must be sized from the source
+        let mut streamed = Session::builder()
+            .source(crate::stream::RcvLikeSource::new(cfg))
+            .topology(Topology::TwoLayer { shards: 4 })
+            .rule(UpdateRule::Local)
+            .loss(Loss::Logistic)
+            .lr(LrSchedule::inv_sqrt(4.0, 1.0))
+            .clip01(false)
+            .build()
+            .unwrap();
+        let report = streamed.run().unwrap();
+        assert_eq!(report.instances, 2_000);
+        assert_eq!(streamed.model().dim(), ds.dim, "dim taken from source");
+        for inst in ds.iter().take(30) {
+            assert_eq!(
+                streamed.predict(&inst.features).to_bits(),
+                in_memory.predict(&inst.features).to_bits(),
+                "streamed and in-memory training must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn run_twice_streams_the_whole_source_twice() {
+        let cfg = SynthConfig {
+            instances: 500,
+            features: 200,
+            density: 8,
+            hash_bits: 10,
+            ..Default::default()
+        };
+        let mut session = Session::builder()
+            .source(crate::stream::RcvLikeSource::new(cfg))
+            .rule(UpdateRule::Local)
+            .topology(Topology::TwoLayer { shards: 2 })
+            .loss(Loss::Logistic)
+            .clip01(false)
+            .build()
+            .unwrap();
+        let first = session.run().unwrap();
+        assert_eq!(first.instances, 500);
+        let second = session.run().unwrap();
+        assert_eq!(
+            second.instances, 500,
+            "a second run must stream the whole source again, not no-op \
+             on a drained source"
+        );
+        assert_eq!(session.model().trained_instances(), 1_000);
+    }
+
+    #[test]
+    fn run_without_source_is_invalid_input() {
+        let ds = small_ds();
+        let mut session = builder_for(&ds).build().unwrap();
+        let err = session.run().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
     }
 
     #[test]

@@ -59,6 +59,7 @@ use crate::metrics::ProgressiveValidator;
 use crate::serve::checkpoint::{self, CheckpointSink};
 use crate::serve::publisher::SnapshotPublisher;
 use crate::serve::snapshot::{ModelSnapshot, PredictScratch};
+use crate::stream::{InstanceSource, Pipeline};
 
 /// Every trainable predictor in the crate, behind one object-safe
 /// interface.
@@ -105,8 +106,29 @@ pub trait Model: Send {
     fn learn(&mut self, x: &[SparseFeat], y: f64);
 
     /// Train over a whole dataset (honouring the model's own pass count
-    /// and delay schedule) and report progressive validation.
+    /// and delay schedule) and report progressive validation. A thin
+    /// adapter over the same per-instance code [`Self::train_source`]
+    /// runs — the two are bit-identical over the same data.
     fn train_dataset(&mut self, ds: &Dataset) -> TrainReport;
+
+    /// Train over an [`InstanceSource`] through the streaming
+    /// [`crate::stream::Pipeline`]: parsing runs on a background
+    /// thread into a bounded pool of recycled batches, so memory stays
+    /// constant on streams of any size, and weights are bit-identical
+    /// to [`Self::train_dataset`] on the same data loaded in memory
+    /// (stream order is part of the online-learning contract).
+    ///
+    /// The default implementation materializes the source and calls
+    /// [`Self::train_dataset`] — correct for any model, constant-memory
+    /// for none; [`Sgd`] and [`Coordinator`] override it with native
+    /// streaming loops.
+    fn train_source(
+        &mut self,
+        source: &mut dyn InstanceSource,
+    ) -> io::Result<TrainReport> {
+        let ds = crate::stream::read_all(source)?;
+        Ok(self.train_dataset(&ds))
+    }
 
     /// Cumulative instances learned (the training-stream position that
     /// snapshots and checkpoints record).
@@ -186,6 +208,29 @@ impl Model for Sgd {
         }
     }
 
+    fn train_source(
+        &mut self,
+        source: &mut dyn InstanceSource,
+    ) -> io::Result<TrainReport> {
+        let start = std::time::Instant::now();
+        let mut pv = ProgressiveValidator::with_loss(self.loss);
+        let mut total = 0u64;
+        Pipeline::default().drain(source, |batch| {
+            for inst in batch.iter() {
+                pv.observe(Sgd::predict(self, &inst.features), inst.label);
+                Sgd::learn(self, &inst.features, inst.label);
+            }
+            total += batch.len() as u64;
+            Ok(())
+        })?;
+        Ok(TrainReport {
+            shard_progressive: pv.clone(),
+            progressive: pv,
+            instances: total,
+            elapsed: start.elapsed(),
+        })
+    }
+
     fn trained_instances(&self) -> u64 {
         self.steps()
     }
@@ -229,6 +274,13 @@ impl Model for Coordinator {
 
     fn train_dataset(&mut self, ds: &Dataset) -> TrainReport {
         self.train(ds)
+    }
+
+    fn train_source(
+        &mut self,
+        source: &mut dyn InstanceSource,
+    ) -> io::Result<TrainReport> {
+        Coordinator::train_source(self, source)
     }
 
     fn trained_instances(&self) -> u64 {

@@ -1,0 +1,144 @@
+//! Streaming reader for the binary `.polc` cache — the VW fast path
+//! (§0.2: parse the text once, stream a compact binary encoding on
+//! every subsequent pass), now without materializing the dataset.
+
+use std::fs::File;
+use std::io::{self, BufReader, Seek, SeekFrom};
+use std::path::Path;
+
+use super::InstanceSource;
+use crate::data::cache::{read_header, read_record_into, HEADER_LEN};
+use crate::data::instance::Instance;
+
+/// How many file bytes each read syscall pulls in.
+const CHUNK_BYTES: usize = 256 * 1024;
+
+/// Stream a [`crate::data::cache`] file record by record.
+pub struct CacheSource {
+    reader: BufReader<File>,
+    dim: usize,
+    count: u64,
+    read: u64,
+    name: String,
+}
+
+impl CacheSource {
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        let path = path.as_ref();
+        let file = File::open(path)?;
+        let mut reader = BufReader::with_capacity(CHUNK_BYTES, file);
+        let header = read_header(&mut reader)?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("cache")
+            .to_string();
+        Ok(CacheSource {
+            reader,
+            dim: header.dim,
+            count: header.count,
+            read: 0,
+            name,
+        })
+    }
+}
+
+impl InstanceSource for CacheSource {
+    fn next_into(&mut self, inst: &mut Instance) -> io::Result<bool> {
+        if self.read >= self.count {
+            return Ok(false);
+        }
+        read_record_into(&mut self.reader, inst)?;
+        self.read += 1;
+        Ok(true)
+    }
+
+    fn reset(&mut self) -> io::Result<()> {
+        self.reader.seek(SeekFrom::Start(HEADER_LEN))?;
+        self.read = 0;
+        Ok(())
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.count)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::cache;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+    use crate::data::Dataset;
+    use crate::stream::read_all;
+
+    fn cached_ds(name: &str) -> (Dataset, std::path::PathBuf) {
+        let ds = RcvLikeGen::new(SynthConfig {
+            instances: 200,
+            features: 100,
+            density: 6,
+            hash_bits: 10,
+            ..Default::default()
+        })
+        .generate();
+        let dir = std::env::temp_dir().join("pol_stream_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        cache::save(&ds, &path).unwrap();
+        (ds, path)
+    }
+
+    #[test]
+    fn streaming_matches_read_cache() {
+        let (_, path) = cached_ds("parity.polc");
+        let mut src = CacheSource::open(&path).unwrap();
+        assert_eq!(src.len_hint(), Some(200));
+        let streamed = read_all(&mut src).unwrap();
+        let loaded = cache::load(&path, "parity").unwrap();
+        assert_eq!(streamed.instances, loaded.instances);
+        assert_eq!(streamed.dim, loaded.dim);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reset_restreams_identically() {
+        let (_, path) = cached_ds("reset.polc");
+        let mut src = CacheSource::open(&path).unwrap();
+        let first = read_all(&mut src).unwrap();
+        src.reset().unwrap();
+        let second = read_all(&mut src).unwrap();
+        assert_eq!(first.instances, second.instances);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_cache_is_an_io_error() {
+        let (_, path) = cached_ds("trunc.polc");
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = path.with_extension("cut");
+        std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+        let mut src = CacheSource::open(&cut).unwrap();
+        let err = read_all(&mut src).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cut).ok();
+    }
+
+    #[test]
+    fn garbage_header_rejected() {
+        let dir = std::env::temp_dir().join("pol_stream_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.polc");
+        std::fs::write(&path, b"not a cache").unwrap();
+        assert!(CacheSource::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,374 @@
+//! `pol::stream` — the streaming ingest pipeline.
+//!
+//! The paper's multicore architecture (§0.5.1) is "an asynchronous
+//! parsing thread which prepares instances" feeding learner threads.
+//! This module is that architecture made first-class: every trainer in
+//! the crate consumes an [`InstanceSource`] — a resettable, fallible
+//! stream of [`Instance`]s — instead of requiring a fully materialized
+//! [`Dataset`], so training is no longer capped at RAM-sized workloads
+//! and parsing overlaps learning.
+//!
+//! * [`InstanceSource`] — the one ingestion trait. Implementations:
+//!   [`DatasetSource`] (in-memory, zero behavioural change),
+//!   [`VwTextSource`] (incremental VW-text file reading — chunked
+//!   buffered reads, never a whole-file slurp), [`CacheSource`]
+//!   (the binary `.polc` cache, record at a time), and the synthetic
+//!   generators [`RcvLikeSource`] / [`WebspamLikeSource`] (bit-identical
+//!   to `RcvLikeGen`/`WebspamLikeGen`, which are now thin wrappers).
+//! * [`Pipeline`] — runs the source on a dedicated background parsing
+//!   thread into a bounded channel of *recycled* [`InstanceBatch`]es
+//!   (a fixed pool of at most `pool` batches is ever allocated; in
+//!   steady state batches circulate with zero new allocation), with
+//!   optional feature-sharding at ingest for the multicore path.
+//!
+//! Ordering is part of the online-learning contract: the pipeline is
+//! single-producer/single-consumer and batches travel FIFO, so weights
+//! after streaming are **bit-identical** to the in-memory path over the
+//! same data (`rust/tests/test_stream.rs` asserts this for every rule).
+//!
+//! ```no_run
+//! use pol::prelude::*;
+//!
+//! let mut session = Session::builder()
+//!     .source(RcvLikeSource::new(SynthConfig::default()))
+//!     .topology(Topology::TwoLayer { shards: 4 })
+//!     .rule(UpdateRule::Local)
+//!     .loss(Loss::Logistic)
+//!     .build()
+//!     .expect("build session");
+//! let report = session.run().expect("train from stream");
+//! println!("acc {:.4}", report.progressive.accuracy());
+//! ```
+
+mod cache;
+mod pipeline;
+mod synth;
+mod text;
+
+pub use cache::CacheSource;
+pub use pipeline::{Feed, Pipeline, PipelineStats};
+pub use synth::{RcvLikeSource, WebspamLikeSource};
+pub use text::VwTextSource;
+
+use std::io;
+
+use crate::data::instance::Instance;
+use crate::data::Dataset;
+use crate::linalg::SparseFeat;
+use crate::sharding::feature::FeatureSharder;
+
+/// A resettable, fallible stream of instances — the crate's one data
+/// ingestion surface.
+///
+/// Contract: [`Self::next_into`] yields instances in a fixed order that
+/// [`Self::reset`] restarts from the top; the same source streamed twice
+/// produces bit-identical instances (online learning treats stream
+/// order as part of the model definition). Implementations reuse the
+/// caller's [`Instance`] buffers, so steady-state iteration does not
+/// allocate.
+pub trait InstanceSource: Send {
+    /// Read the next instance into `inst`, reusing its buffers.
+    /// Returns `Ok(false)` at end of stream (`inst` is then
+    /// unspecified).
+    fn next_into(&mut self, inst: &mut Instance) -> io::Result<bool>;
+
+    /// Rewind to the beginning for another pass.
+    fn reset(&mut self) -> io::Result<()>;
+
+    /// Hashed feature-space size instances index into (the weight-table
+    /// length learners must allocate).
+    fn dim(&self) -> usize;
+
+    /// Total instances per pass, when cheaply known (in-memory data,
+    /// binary cache header, synthetic configs — not text files).
+    fn len_hint(&self) -> Option<u64> {
+        None
+    }
+
+    /// Human-readable stream name (dataset naming, diagnostics).
+    fn name(&self) -> &str {
+        "source"
+    }
+
+    /// Malformed records skipped so far (lenient text parsing); 0 for
+    /// formats that cannot skip.
+    fn skipped(&self) -> u64 {
+        0
+    }
+}
+
+/// Copy an instance into a reusable buffer without allocating (beyond
+/// one-time feature-capacity growth).
+pub(crate) fn copy_instance(src: &Instance, dst: &mut Instance) {
+    dst.label = src.label;
+    dst.weight = src.weight;
+    dst.tag = src.tag;
+    dst.features.clear();
+    dst.features.extend_from_slice(&src.features);
+}
+
+/// Materialize a whole source into a [`Dataset`] (the `--in-memory`
+/// fallback, and the default [`crate::model::Model::train_source`] for
+/// models without a native streaming loop). Resets the source first,
+/// so the result is always the full stream from the top — matching
+/// [`Pipeline`] semantics.
+pub fn read_all(source: &mut dyn InstanceSource) -> io::Result<Dataset> {
+    source.reset()?;
+    let mut ds = Dataset::new(source.name().to_string(), source.dim());
+    if let Some(n) = source.len_hint() {
+        ds.instances.reserve(n as usize);
+    }
+    let mut inst = Instance::new(0.0, Vec::new());
+    while source.next_into(&mut inst)? {
+        ds.instances.push(inst.clone());
+    }
+    Ok(ds)
+}
+
+/// A pooled batch of instances flowing through the [`Pipeline`].
+///
+/// Batches are recycled: the instance vector and every per-instance
+/// feature vector keep their capacity across refills, so a pipeline in
+/// steady state performs no allocation.
+#[derive(Debug, Default)]
+pub struct InstanceBatch {
+    items: Vec<Instance>,
+    len: usize,
+    /// Global index (across passes) of `items[0]` in the stream.
+    start: u64,
+    /// Per-instance per-shard feature splits, filled only when the
+    /// pipeline was configured with [`Pipeline::shard`].
+    shards: Vec<Vec<Vec<SparseFeat>>>,
+}
+
+impl InstanceBatch {
+    pub(crate) fn new() -> Self {
+        InstanceBatch::default()
+    }
+
+    /// Instances currently held.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Global stream index of the first instance in this batch.
+    pub fn start_index(&self) -> u64 {
+        self.start
+    }
+
+    pub fn get(&self, i: usize) -> &Instance {
+        &self.items[..self.len][i]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Instance> {
+        self.items[..self.len].iter()
+    }
+
+    /// Per-shard feature splits of instance `i` (empty unless the
+    /// pipeline shards at ingest).
+    pub fn shards(&self, i: usize) -> &[Vec<SparseFeat>] {
+        match self.shards.get(i) {
+            Some(bufs) => bufs,
+            None => &[],
+        }
+    }
+
+    /// Refill from `source`: up to `max` instances, splitting features
+    /// with `shard` when configured. Returns the number read (0 = end
+    /// of stream) plus any error the source hit *after* those
+    /// instances — kept separate so a mid-batch failure never discards
+    /// the instances already parsed before it.
+    pub(crate) fn fill(
+        &mut self,
+        source: &mut dyn InstanceSource,
+        max: usize,
+        shard: Option<&FeatureSharder>,
+        start: u64,
+    ) -> (usize, Option<io::Error>) {
+        self.start = start;
+        self.len = 0;
+        let mut err = None;
+        for i in 0..max {
+            if self.items.len() <= i {
+                self.items.push(Instance::new(0.0, Vec::new()));
+            }
+            match source.next_into(&mut self.items[i]) {
+                Ok(true) => self.len += 1,
+                Ok(false) => break,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(sh) = shard {
+            let k = sh.shards;
+            if self.shards.len() < self.len {
+                self.shards.resize_with(self.len, Vec::new);
+            }
+            for i in 0..self.len {
+                let bufs = &mut self.shards[i];
+                if bufs.len() != k {
+                    bufs.resize_with(k, Vec::new);
+                }
+                sh.split_features_into(&self.items[i].features, bufs);
+            }
+        }
+        (self.len, err)
+    }
+}
+
+/// Stream an in-memory [`Dataset`] — the adapter that lets every legacy
+/// `Vec<Instance>` consumer ride the streaming path unchanged. Works
+/// over an owned dataset (`DatasetSource::new(ds)`) or a borrow
+/// (`DatasetSource::new(&ds)`).
+pub struct DatasetSource<D: std::borrow::Borrow<Dataset> + Send> {
+    ds: D,
+    pos: usize,
+}
+
+impl<D: std::borrow::Borrow<Dataset> + Send> DatasetSource<D> {
+    pub fn new(ds: D) -> Self {
+        DatasetSource { ds, pos: 0 }
+    }
+}
+
+impl<D: std::borrow::Borrow<Dataset> + Send> InstanceSource for DatasetSource<D> {
+    fn next_into(&mut self, inst: &mut Instance) -> io::Result<bool> {
+        let ds = self.ds.borrow();
+        if self.pos >= ds.instances.len() {
+            return Ok(false);
+        }
+        copy_instance(&ds.instances[self.pos], inst);
+        self.pos += 1;
+        Ok(true)
+    }
+
+    fn reset(&mut self) -> io::Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.borrow().dim
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.ds.borrow().instances.len() as u64)
+    }
+
+    fn name(&self) -> &str {
+        &self.ds.borrow().name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+
+    fn small_ds() -> Dataset {
+        RcvLikeGen::new(SynthConfig {
+            instances: 300,
+            features: 100,
+            density: 6,
+            hash_bits: 10,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    #[test]
+    fn dataset_source_roundtrips() {
+        let ds = small_ds();
+        let mut src = DatasetSource::new(&ds);
+        assert_eq!(src.dim(), ds.dim);
+        assert_eq!(src.len_hint(), Some(300));
+        let back = read_all(&mut src).unwrap();
+        assert_eq!(back.instances, ds.instances);
+        assert_eq!(back.dim, ds.dim);
+    }
+
+    #[test]
+    fn dataset_source_resets() {
+        let ds = small_ds();
+        let mut src = DatasetSource::new(&ds);
+        let mut inst = Instance::new(0.0, Vec::new());
+        for _ in 0..10 {
+            assert!(src.next_into(&mut inst).unwrap());
+        }
+        src.reset().unwrap();
+        assert!(src.next_into(&mut inst).unwrap());
+        assert_eq!(inst, ds.instances[0]);
+    }
+
+    #[test]
+    fn batch_fill_reuses_capacity_and_shards() {
+        let ds = small_ds();
+        let mut src = DatasetSource::new(&ds);
+        let sharder = FeatureSharder::hash(3);
+        let mut batch = InstanceBatch::new();
+        let (n, err) = batch.fill(&mut src, 64, Some(&sharder), 0);
+        assert!(err.is_none());
+        assert_eq!(n, 64);
+        assert_eq!(batch.len(), 64);
+        assert_eq!(batch.start_index(), 0);
+        for i in 0..n {
+            let total: usize =
+                batch.shards(i).iter().map(|s| s.len()).sum();
+            assert_eq!(total, batch.get(i).features.len());
+        }
+        let (n2, err2) = batch.fill(&mut src, 64, Some(&sharder), 64);
+        assert!(err2.is_none());
+        assert_eq!(n2, 64);
+        assert_eq!(batch.get(0).tag, ds.instances[64].tag);
+    }
+
+    #[test]
+    fn batch_fill_hits_end_of_stream() {
+        let ds = small_ds();
+        let mut src = DatasetSource::new(&ds);
+        let mut batch = InstanceBatch::new();
+        assert_eq!(batch.fill(&mut src, 200, None, 0).0, 200);
+        assert_eq!(batch.fill(&mut src, 200, None, 200).0, 100);
+        assert_eq!(batch.fill(&mut src, 200, None, 300).0, 0);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn batch_fill_keeps_instances_parsed_before_an_error() {
+        struct FailAfter(u64);
+        impl InstanceSource for FailAfter {
+            fn next_into(&mut self, inst: &mut Instance) -> io::Result<bool> {
+                if self.0 == 0 {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "boom",
+                    ));
+                }
+                self.0 -= 1;
+                inst.label = 1.0;
+                inst.weight = 1.0;
+                inst.tag = self.0;
+                inst.features.clear();
+                inst.features.push((0, 1.0));
+                Ok(true)
+            }
+            fn reset(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+            fn dim(&self) -> usize {
+                4
+            }
+        }
+        let mut batch = InstanceBatch::new();
+        let (n, err) = batch.fill(&mut FailAfter(3), 64, None, 0);
+        assert_eq!(n, 3, "the records before the failure are kept");
+        assert!(err.is_some());
+        assert_eq!(batch.len(), 3);
+    }
+}

@@ -1,0 +1,332 @@
+//! The background parse/learn pipeline (§0.5.1's "asynchronous parsing
+//! thread", generalized).
+//!
+//! A [`Pipeline`] runs an [`InstanceSource`] on a dedicated producer
+//! thread, filling pooled [`InstanceBatch`]es and handing them to the
+//! consumer through a bounded channel; the consumer returns each batch
+//! for refilling. At most [`Pipeline::pool`] batches are ever allocated
+//! — in steady state the pool just circulates, so ingest is
+//! allocation-free no matter how large the stream is. Batches travel
+//! FIFO through a single producer and single consumer, so consumption
+//! order equals source order (the bit-parity contract).
+
+use std::io;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+
+use super::{InstanceBatch, InstanceSource};
+use crate::sharding::feature::FeatureSharder;
+
+/// Configuration for a streaming run: batch granularity, the batch-pool
+/// bound (the pipeline's entire instance-memory budget), pass count,
+/// and optional feature-sharding at ingest.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    /// Instances per batch (parse/learn handoff granularity).
+    pub batch_size: usize,
+    /// Maximum batches alive at once — producer-side fill, in-channel,
+    /// and consumer-side processing all draw from this one pool.
+    pub pool: usize,
+    /// Times the source is streamed end to end ([`InstanceSource::reset`]
+    /// before every pass). Honoured exactly: 0 streams nothing, like
+    /// `Dataset::passes(0)`.
+    pub passes: usize,
+    /// Split every instance's features at ingest (the multicore path:
+    /// sharding happens on the parsing thread, off the learners).
+    pub shard: Option<FeatureSharder>,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Pipeline { batch_size: 256, pool: 4, passes: 1, shard: None }
+    }
+}
+
+/// Counters a finished pipeline run reports. `batches_allocated` is the
+/// pool-accounting number the constant-memory tests assert on: it can
+/// never exceed [`Pipeline::pool`].
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineStats {
+    /// Instances streamed (all passes).
+    pub instances: u64,
+    /// Batches handed to the consumer.
+    pub batches: u64,
+    /// Distinct batches ever allocated (peak alive; bounded by the pool).
+    pub batches_allocated: usize,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    instances: AtomicU64,
+    batches: AtomicU64,
+    allocated: AtomicUsize,
+}
+
+impl StatsInner {
+    fn snapshot(&self) -> PipelineStats {
+        PipelineStats {
+            instances: self.instances.load(Ordering::Acquire),
+            batches: self.batches.load(Ordering::Acquire),
+            batches_allocated: self.allocated.load(Ordering::Acquire),
+        }
+    }
+}
+
+/// Consumer handle inside [`Pipeline::with_feed`]: receive filled
+/// batches, hand them back for refilling.
+pub struct Feed {
+    rx: Receiver<io::Result<InstanceBatch>>,
+    recycle: Sender<InstanceBatch>,
+}
+
+impl Feed {
+    /// Next batch, in stream order. `None` = stream exhausted;
+    /// `Some(Err(_))` = the source failed (the producer has stopped).
+    pub fn recv(&self) -> Option<io::Result<InstanceBatch>> {
+        self.rx.recv().ok()
+    }
+
+    /// Return a drained batch to the pool.
+    pub fn recycle(&self, batch: InstanceBatch) {
+        let _ = self.recycle.send(batch);
+    }
+}
+
+impl Pipeline {
+    /// Run `source` through the background parser and invoke `consume`
+    /// with the [`Feed`] on the calling thread. The source is reset
+    /// before every pass — including the first, so a run always streams
+    /// from the top even on a previously drained source. Dropping out
+    /// of `consume` early (including on error) shuts the producer down
+    /// cleanly.
+    pub fn with_feed<R>(
+        &self,
+        source: &mut dyn InstanceSource,
+        consume: impl FnOnce(&Feed) -> io::Result<R>,
+    ) -> io::Result<(R, PipelineStats)> {
+        let cfg = self.clone();
+        let stats = Arc::new(StatsInner::default());
+        let producer_stats = Arc::clone(&stats);
+        let (tx, rx) = std::sync::mpsc::sync_channel(self.pool.max(1));
+        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel();
+        let result = std::thread::scope(|s| {
+            let producer = s.spawn(move || {
+                produce(&cfg, source, tx, recycle_rx, &producer_stats)
+            });
+            let feed = Feed { rx, recycle: recycle_tx };
+            let r = consume(&feed);
+            // close both channels so a blocked producer unblocks
+            drop(feed);
+            producer.join().expect("pipeline parser thread panicked");
+            r
+        })?;
+        Ok((result, stats.snapshot()))
+    }
+
+    /// Drain the whole source through `f`, one batch at a time (the
+    /// single-consumer convenience over [`Self::with_feed`]).
+    pub fn drain(
+        &self,
+        source: &mut dyn InstanceSource,
+        mut f: impl FnMut(&InstanceBatch) -> io::Result<()>,
+    ) -> io::Result<PipelineStats> {
+        let ((), stats) = self.with_feed(source, |feed| {
+            while let Some(res) = feed.recv() {
+                let batch = res?;
+                f(&batch)?;
+                feed.recycle(batch);
+            }
+            Ok(())
+        })?;
+        Ok(stats)
+    }
+}
+
+/// Producer loop: fill pooled batches from the source and send them
+/// downstream. Runs on the background parsing thread; exits when the
+/// stream ends, the source errors, or the consumer goes away.
+fn produce(
+    cfg: &Pipeline,
+    source: &mut dyn InstanceSource,
+    tx: SyncSender<io::Result<InstanceBatch>>,
+    recycle: Receiver<InstanceBatch>,
+    stats: &StatsInner,
+) {
+    let pool = cfg.pool.max(1);
+    let batch_size = cfg.batch_size.max(1);
+    let mut allocated = 0usize;
+    // a batch that drained the stream mid-pass is kept for the next pass
+    let mut spare: Option<InstanceBatch> = None;
+    let mut start = 0u64;
+    // passes is honoured exactly — 0 streams nothing, matching the
+    // in-memory `Dataset::passes(0)` (bit-parity includes the degenerate
+    // configs)
+    for _pass in 0..cfg.passes {
+        // reset before *every* pass, including the first: a run always
+        // covers the whole stream from the top, so re-running a session
+        // (or reusing a drained source) trains identically instead of
+        // silently streaming nothing
+        if let Err(e) = source.reset() {
+            let _ = tx.send(Err(e));
+            return;
+        }
+        loop {
+            let mut batch = match spare.take() {
+                Some(b) => b,
+                None => match recycle.try_recv() {
+                    Ok(b) => b,
+                    Err(TryRecvError::Disconnected) => return,
+                    Err(TryRecvError::Empty) if allocated < pool => {
+                        allocated += 1;
+                        stats.allocated.store(allocated, Ordering::Release);
+                        InstanceBatch::new()
+                    }
+                    // pool exhausted: wait for the consumer to recycle
+                    Err(TryRecvError::Empty) => match recycle.recv() {
+                        Ok(b) => b,
+                        Err(_) => return,
+                    },
+                },
+            };
+            let (n, err) =
+                batch.fill(source, batch_size, cfg.shard.as_ref(), start);
+            if n > 0 {
+                // deliver the instances parsed before any error — a
+                // mid-batch failure must never discard good records
+                start += n as u64;
+                stats.instances.fetch_add(n as u64, Ordering::AcqRel);
+                stats.batches.fetch_add(1, Ordering::AcqRel);
+                if tx.send(Ok(batch)).is_err() {
+                    return; // consumer gone
+                }
+            } else if err.is_none() {
+                spare = Some(batch);
+            }
+            if let Some(e) = err {
+                let _ = tx.send(Err(e));
+                return;
+            }
+            if n == 0 {
+                break; // end of this pass
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{RcvLikeGen, SynthConfig};
+    use crate::data::Dataset;
+    use crate::stream::DatasetSource;
+
+    fn small_ds(n: usize) -> Dataset {
+        RcvLikeGen::new(SynthConfig {
+            instances: n,
+            features: 100,
+            density: 5,
+            hash_bits: 10,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    #[test]
+    fn drain_preserves_stream_order() {
+        let ds = small_ds(1_000);
+        let mut src = DatasetSource::new(&ds);
+        let pipe = Pipeline { batch_size: 64, pool: 3, ..Default::default() };
+        let mut next_tag = 0u64;
+        let stats = pipe
+            .drain(&mut src, |batch| {
+                assert_eq!(batch.start_index(), next_tag);
+                for inst in batch.iter() {
+                    assert_eq!(inst.tag, next_tag, "order must be preserved");
+                    next_tag += 1;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(next_tag, 1_000);
+        assert_eq!(stats.instances, 1_000);
+        assert!(stats.batches >= 1_000 / 64);
+    }
+
+    #[test]
+    fn pool_bound_is_respected() {
+        // a stream ≥ 10× the pool's instance capacity: the pool must
+        // still never grow past `pool` batches (constant memory)
+        let pipe = Pipeline { batch_size: 32, pool: 3, ..Default::default() };
+        let n = pipe.batch_size * pipe.pool * 10;
+        let ds = small_ds(n);
+        let mut src = DatasetSource::new(&ds);
+        let stats = pipe.drain(&mut src, |_| Ok(())).unwrap();
+        assert_eq!(stats.instances, n as u64);
+        assert!(
+            stats.batches_allocated <= pipe.pool,
+            "pipeline allocated {} batches, pool is {}",
+            stats.batches_allocated,
+            pipe.pool
+        );
+    }
+
+    #[test]
+    fn passes_concatenate_the_stream() {
+        let ds = small_ds(100);
+        let mut src = DatasetSource::new(&ds);
+        let pipe =
+            Pipeline { batch_size: 16, passes: 3, ..Default::default() };
+        let mut tags = Vec::new();
+        let stats = pipe
+            .drain(&mut src, |batch| {
+                tags.extend(batch.iter().map(|i| i.tag));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(stats.instances, 300);
+        let one_pass: Vec<u64> = (0..100).collect();
+        assert_eq!(&tags[..100], &one_pass[..]);
+        assert_eq!(&tags[100..200], &one_pass[..]);
+        assert_eq!(&tags[200..], &one_pass[..]);
+    }
+
+    #[test]
+    fn consumer_error_stops_the_producer() {
+        let ds = small_ds(10_000);
+        let mut src = DatasetSource::new(&ds);
+        let pipe = Pipeline { batch_size: 8, pool: 2, ..Default::default() };
+        let mut seen = 0u64;
+        let err = pipe
+            .drain(&mut src, |batch| {
+                seen += batch.len() as u64;
+                if seen >= 64 {
+                    return Err(io::Error::new(io::ErrorKind::Other, "stop"));
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+    }
+
+    #[test]
+    fn with_feed_returns_consumer_value() {
+        let ds = small_ds(50);
+        let mut src = DatasetSource::new(&ds);
+        let pipe = Pipeline::default();
+        let (sum, stats) = pipe
+            .with_feed(&mut src, |feed| {
+                let mut sum = 0u64;
+                while let Some(res) = feed.recv() {
+                    let batch = res?;
+                    sum += batch.len() as u64;
+                    feed.recycle(batch);
+                }
+                Ok(sum)
+            })
+            .unwrap();
+        assert_eq!(sum, 50);
+        assert_eq!(stats.instances, 50);
+        assert_eq!(stats.batches_allocated, 1);
+    }
+}

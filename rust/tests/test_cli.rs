@@ -76,6 +76,187 @@ fn unknown_flags_are_rejected_not_ignored() {
     }
 }
 
+/// Write a small VW-text training file.
+fn write_vw_file(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("pol_cli_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let mut text = String::new();
+    for i in 0..400 {
+        let label = if i % 3 == 0 { -1 } else { 1 };
+        text.push_str(&format!(
+            "{label} |f w{i} x{} y{}\n",
+            i % 7,
+            (i * 13) % 11
+        ));
+    }
+    text.push_str("not a parseable line\n");
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+#[test]
+fn train_streams_a_vw_file_by_default() {
+    let path = write_vw_file("stream.vw");
+    let out = pol()
+        .args([
+            "train", "--data", path.to_str().unwrap(), "--rule", "local",
+            "--workers", "2", "--loss", "logistic", "--hash-bits", "12",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("progressive_loss="), "{text}");
+    // streamed runs have no held-out split
+    assert!(!text.contains("test_acc="), "{text}");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("streaming dataset="), "{err}");
+    assert!(err.contains("skipped 1 malformed line"), "{err}");
+}
+
+#[test]
+fn train_file_in_memory_keeps_the_split() {
+    let path = write_vw_file("inmem.vw");
+    let out = pol()
+        .args([
+            "train", "--data", path.to_str().unwrap(), "--in-memory",
+            "--rule", "local", "--workers", "2", "--loss", "logistic",
+            "--hash-bits", "12",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("test_acc="), "{text}");
+}
+
+#[test]
+fn strict_parser_errors_name_the_streaming_flags() {
+    // an unknown flag's error lists the valid set, which must include
+    // the new streaming flags
+    let out = pol()
+        .args(["train", "--streem", "x"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--in-memory"), "{err}");
+    assert!(err.contains("--hash-bits"), "{err}");
+
+    // a dataset that is neither builtin nor a file names both options
+    let out = pol()
+        .args(["train", "--data", "/no/such/file.vw"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("neither a builtin dataset"), "{err}");
+    assert!(err.contains("--in-memory"), "{err}");
+
+    // flags that only make sense for the other mode are rejected
+    let path = write_vw_file("strictflags.vw");
+    // an out-of-range hash width is a usage error, never a panic
+    let out = pol()
+        .args([
+            "train", "--data", path.to_str().unwrap(), "--hash-bits", "40",
+        ])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--hash-bits"));
+    let out = pol()
+        .args([
+            "train", "--data", path.to_str().unwrap(), "--instances", "100",
+        ])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--instances"));
+    let out = pol()
+        .args(["train", "--data", "rcv", "--instances", "500", "--in-memory"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--in-memory"));
+}
+
+#[test]
+fn train_streams_a_polc_cache_and_rejects_hash_bits_for_it() {
+    use pol::data::synth::{RcvLikeGen, SynthConfig};
+    let dir = std::env::temp_dir().join("pol_cli_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.polc");
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: 500,
+        features: 200,
+        density: 8,
+        hash_bits: 10,
+        ..Default::default()
+    })
+    .generate();
+    pol::data::cache::save(&ds, &path).unwrap();
+
+    // the binary cache streams by default (format sniffed by magic)
+    let out = pol()
+        .args([
+            "train", "--data", path.to_str().unwrap(), "--rule", "local",
+            "--workers", "2", "--loss", "logistic",
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("progressive_loss=")
+    );
+
+    // --hash-bits is a text-file knob: on a cache (dim comes from the
+    // header) it must be rejected, never silently ignored
+    let out = pol()
+        .args([
+            "train", "--data", path.to_str().unwrap(), "--hash-bits", "12",
+        ])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--hash-bits"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn streaming_cli_is_deterministic() {
+    // same file, same config, run twice: identical metrics line.
+    // (Streamed-vs-materialized *bit-parity* is asserted at the library
+    // layer in tests/test_stream.rs; at the CLI the two modes train on
+    // different sets by design — --in-memory holds out an 80/20 split.)
+    let path = write_vw_file("twice.vw");
+    let run = || {
+        let out = pol()
+            .args([
+                "train", "--data", path.to_str().unwrap(), "--rule",
+                "corrective", "--workers", "3", "--tau", "16", "--loss",
+                "logistic", "--hash-bits", "12",
+            ])
+            .output()
+            .expect("run pol");
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout)
+            .split_whitespace()
+            .filter(|t| !t.starts_with("elapsed"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    assert_eq!(run(), run(), "streaming must be deterministic");
+}
+
 #[test]
 fn inspect_reports_collisions() {
     let out = pol()

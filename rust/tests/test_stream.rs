@@ -1,0 +1,418 @@
+//! pol::stream integration tests — the contracts the streaming refactor
+//! must keep:
+//!
+//! 1. **Bit-parity**: for every update rule and topology
+//!    `SessionBuilder` can configure, weights after `train_source(file)`
+//!    are identical to `train_dataset` on the same data loaded in
+//!    memory (stream order is part of the online-learning model
+//!    definition).
+//! 2. **Constant memory**: training on a source ≥ 10× the batch-pool
+//!    size never allocates more than `pool` batches (pool-accounting
+//!    assertion — no RSS flakiness).
+//! 3. Sources stream exactly what their eager counterparts materialize.
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::model::{Model, Session};
+use pol::stream::{
+    CacheSource, DatasetSource, InstanceSource, Pipeline, RcvLikeSource,
+    VwTextSource, WebspamLikeSource,
+};
+use pol::topology::Topology;
+
+fn tmp_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("pol_test_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small dataset with per-instance features sorted by index, so the
+/// cache round-trip (which sorts for delta encoding) is order-preserving
+/// and bitwise comparisons are meaningful.
+fn sorted_ds() -> Dataset {
+    let mut ds = RcvLikeGen::new(SynthConfig {
+        instances: 1_500,
+        features: 300,
+        density: 10,
+        hash_bits: 11,
+        ..Default::default()
+    })
+    .generate();
+    for inst in &mut ds.instances {
+        inst.features.sort_unstable_by_key(|&(i, _)| i);
+    }
+    ds
+}
+
+fn cache_file(ds: &Dataset, name: &str) -> std::path::PathBuf {
+    let path = tmp_dir().join(name);
+    pol::data::cache::save(ds, &path).unwrap();
+    path
+}
+
+/// Every (rule, topology) configuration the builder exposes. Tree rules
+/// run on every topology; centralized rules own a flat table, one
+/// topology suffices.
+fn all_configs() -> Vec<RunConfig> {
+    let tree_rules = [
+        UpdateRule::Local,
+        UpdateRule::DelayedGlobal,
+        UpdateRule::Corrective,
+        UpdateRule::Backprop { multiplier: 2.0 },
+    ];
+    let topologies = [
+        Topology::TwoLayer { shards: 4 },
+        Topology::BinaryTree { leaves: 4 },
+        Topology::KAry { leaves: 6, fanin: 3 },
+    ];
+    let mut cfgs = Vec::new();
+    for rule in tree_rules {
+        for topology in topologies {
+            cfgs.push(RunConfig {
+                topology,
+                rule,
+                loss: Loss::Logistic,
+                lr: LrSchedule::inv_sqrt(2.0, 1.0),
+                tau: 32,
+                clip01: false,
+                ..Default::default()
+            });
+        }
+    }
+    for rule in [
+        UpdateRule::Minibatch { batch: 32 },
+        UpdateRule::Cg { batch: 16 },
+        UpdateRule::Sgd,
+    ] {
+        cfgs.push(RunConfig {
+            rule,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(2.0, 1.0),
+            clip01: false,
+            ..Default::default()
+        });
+    }
+    cfgs
+}
+
+#[test]
+fn bit_parity_streaming_vs_in_memory_for_every_rule_and_topology() {
+    let ds = sorted_ds();
+    let path = cache_file(&ds, "parity.polc");
+    for cfg in all_configs() {
+        let label = format!("{:?}/{:?}", cfg.rule, cfg.topology);
+
+        let mut in_memory =
+            Session::builder().config(cfg.clone()).dim(ds.dim).build().unwrap();
+        let rep_mem = in_memory.train(&ds).unwrap();
+
+        let mut source = CacheSource::open(&path).unwrap();
+        let mut streamed =
+            Session::builder().config(cfg.clone()).dim(ds.dim).build().unwrap();
+        let rep_stream = streamed.train_source(&mut source).unwrap();
+
+        assert_eq!(rep_mem.instances, rep_stream.instances, "{label}");
+        assert_eq!(
+            rep_mem.progressive.mean_loss().to_bits(),
+            rep_stream.progressive.mean_loss().to_bits(),
+            "{label}: progressive validation must be bit-identical"
+        );
+        assert_eq!(
+            in_memory.model().trained_instances(),
+            streamed.model().trained_instances(),
+            "{label}"
+        );
+        for inst in ds.iter().take(40) {
+            assert_eq!(
+                in_memory.predict(&inst.features).to_bits(),
+                streamed.predict(&inst.features).to_bits(),
+                "{label}: weights after train_source(file) must equal \
+                 train_dataset on the same data in memory"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bit_parity_multipass_streaming() {
+    let ds = sorted_ds();
+    let path = cache_file(&ds, "parity_passes.polc");
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 3 },
+        rule: UpdateRule::Corrective,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        tau: 16,
+        clip01: false,
+        passes: 3,
+        ..Default::default()
+    };
+    let mut in_memory =
+        Session::builder().config(cfg.clone()).dim(ds.dim).build().unwrap();
+    in_memory.train(&ds).unwrap();
+    let mut source = CacheSource::open(&path).unwrap();
+    let mut streamed =
+        Session::builder().config(cfg).dim(ds.dim).build().unwrap();
+    streamed.train_source(&mut source).unwrap();
+    assert_eq!(
+        in_memory.model().trained_instances(),
+        streamed.model().trained_instances()
+    );
+    for inst in ds.iter().take(40) {
+        assert_eq!(
+            in_memory.predict(&inst.features).to_bits(),
+            streamed.predict(&inst.features).to_bits(),
+            "multi-pass streaming must reset the source identically"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bit_parity_text_file_vs_parse_all() {
+    // a VW text file trains identically whether streamed or slurped:
+    // both go through the same parser, so instances (and weights) match
+    let mut text = String::new();
+    for i in 0..800 {
+        let label = if (i * 7) % 5 < 2 { -1 } else { 1 };
+        text.push_str(&format!(
+            "{label} |u tok{} f{}:0.5 |v g{}\n",
+            i % 97,
+            i % 13,
+            (i * 3) % 41
+        ));
+    }
+    let path = tmp_dir().join("parity.vw");
+    std::fs::write(&path, &text).unwrap();
+
+    let mut parser = pol::data::parser::Parser::new(
+        pol::hashing::FeatureHasher::new(12),
+        pol::data::parser::ParserConfig::default(),
+    );
+    let ds = parser.parse_all(&text, "parity");
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 4 },
+        rule: UpdateRule::DelayedGlobal,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        tau: 24,
+        clip01: false,
+        ..Default::default()
+    };
+    let mut in_memory =
+        Session::builder().config(cfg.clone()).dim(ds.dim).build().unwrap();
+    in_memory.train(&ds).unwrap();
+
+    let mut source = VwTextSource::open(
+        &path,
+        12,
+        pol::data::parser::ParserConfig::default(),
+    )
+    .unwrap();
+    let mut streamed =
+        Session::builder().config(cfg).dim(ds.dim).build().unwrap();
+    streamed.train_source(&mut source).unwrap();
+    for inst in ds.iter().take(40) {
+        assert_eq!(
+            in_memory.predict(&inst.features).to_bits(),
+            streamed.predict(&inst.features).to_bits()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn constant_memory_pool_accounting_through_training() {
+    // source is ≥ 10× the pipeline's pool capacity in instances; the
+    // pool-accounting stats must show the pipeline never held more than
+    // `pool` batches alive
+    let pipe = Pipeline { batch_size: 64, pool: 3, ..Default::default() };
+    let total = pipe.batch_size * pipe.pool * 10;
+    let mut source = RcvLikeSource::new(SynthConfig {
+        instances: total,
+        features: 300,
+        density: 10,
+        hash_bits: 11,
+        ..Default::default()
+    });
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 4 },
+        rule: UpdateRule::Backprop { multiplier: 1.0 },
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        tau: 32,
+        clip01: false,
+        ..Default::default()
+    };
+    let mut coordinator = Coordinator::new(cfg, source.dim());
+    let (report, stats) =
+        coordinator.train_source_with(&mut source, &pipe).unwrap();
+    assert_eq!(report.instances, total as u64);
+    assert_eq!(stats.instances, total as u64);
+    assert!(
+        stats.batches_allocated <= pipe.pool,
+        "pipeline held {} batches alive, pool bound is {} \
+         (instances streamed: {})",
+        stats.batches_allocated,
+        pipe.pool,
+        stats.instances
+    );
+    assert!(stats.batches >= (total / pipe.batch_size) as u64);
+}
+
+#[test]
+fn constant_memory_holds_for_centralized_rules_too() {
+    let pipe = Pipeline { batch_size: 32, pool: 2, ..Default::default() };
+    let total = pipe.batch_size * pipe.pool * 12;
+    let mut source = RcvLikeSource::new(SynthConfig {
+        instances: total,
+        features: 200,
+        density: 8,
+        hash_bits: 10,
+        ..Default::default()
+    });
+    let cfg = RunConfig {
+        rule: UpdateRule::Minibatch { batch: 16 },
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        clip01: false,
+        ..Default::default()
+    };
+    let mut coordinator = Coordinator::new(cfg, source.dim());
+    let (_, stats) =
+        coordinator.train_source_with(&mut source, &pipe).unwrap();
+    assert!(stats.batches_allocated <= pipe.pool);
+    assert_eq!(stats.instances, total as u64);
+}
+
+#[test]
+fn synth_sources_match_eager_generators() {
+    let cfg = SynthConfig {
+        instances: 700,
+        features: 250,
+        density: 9,
+        hash_bits: 11,
+        ..Default::default()
+    };
+    let eager = RcvLikeGen::new(cfg.clone()).generate();
+    let streamed =
+        pol::stream::read_all(&mut RcvLikeSource::new(cfg.clone())).unwrap();
+    assert_eq!(eager.instances, streamed.instances);
+    assert_eq!(eager.dim, streamed.dim);
+
+    let eager_w =
+        pol::data::synth::WebspamLikeGen::new(cfg.clone()).generate();
+    let streamed_w =
+        pol::stream::read_all(&mut WebspamLikeSource::new(cfg)).unwrap();
+    assert_eq!(eager_w.instances, streamed_w.instances);
+}
+
+#[test]
+fn sgd_model_streams_bit_identically() {
+    let ds = sorted_ds();
+    let mut concrete = pol::learner::sgd::Sgd::new(
+        ds.dim,
+        Loss::Logistic,
+        LrSchedule::inv_sqrt(2.0, 1.0),
+    );
+    let mut streamed: Box<dyn Model> = Box::new(concrete.clone());
+    let rep_mem = concrete.train_dataset(&ds);
+    let mut source = DatasetSource::new(&ds);
+    let rep_stream = streamed.train_source(&mut source).unwrap();
+    assert_eq!(rep_mem.instances, rep_stream.instances);
+    assert_eq!(
+        rep_mem.progressive.mean_loss().to_bits(),
+        rep_stream.progressive.mean_loss().to_bits()
+    );
+    for inst in ds.iter().take(40) {
+        assert_eq!(
+            Model::predict(&concrete, &inst.features).to_bits(),
+            streamed.predict(&inst.features).to_bits()
+        );
+    }
+}
+
+#[test]
+fn source_errors_surface_through_training() {
+    // a strict text source with a malformed line fails the whole train
+    // with the line named — never silently truncates the stream
+    let path = tmp_dir().join("bad.vw");
+    std::fs::write(&path, "1 |f a\n1 |f b\nnot-a-label |f c\n1 |f d\n")
+        .unwrap();
+    let mut source = VwTextSource::open(
+        &path,
+        10,
+        pol::data::parser::ParserConfig::default(),
+    )
+    .unwrap()
+    .strict(true);
+    // a feedback rule with τ > stream length: the error arrives while
+    // feedbacks are still in flight
+    let mut session = Session::builder()
+        .dim(1 << 10)
+        .rule(UpdateRule::DelayedGlobal)
+        .tau(8)
+        .topology(Topology::TwoLayer { shards: 2 })
+        .loss(Loss::Logistic)
+        .clip01(false)
+        .build()
+        .unwrap();
+    let err = session.train_source(&mut source).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains(":3:"), "{err}");
+    // the failed run leaves no half-trained state: the τ in-flight
+    // feedbacks were drained, the streamed instances are counted, and
+    // training can resume cleanly
+    assert_eq!(session.model().trained_instances(), 2);
+    let ds = RcvLikeGen::new(SynthConfig {
+        instances: 200,
+        features: 100,
+        density: 6,
+        hash_bits: 10,
+        ..Default::default()
+    })
+    .generate();
+    session.train(&ds).unwrap();
+    assert_eq!(
+        session.model().trained_instances(),
+        202,
+        "a coordinator that errored mid-stream must still train cleanly"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn lenient_text_source_counts_skips_and_still_trains() {
+    let path = tmp_dir().join("lenient.vw");
+    let mut text = String::new();
+    for i in 0..300 {
+        text.push_str(&format!("{} |f a{} b{}\n", if i % 2 == 0 { 1 } else { -1 }, i % 19, i % 7));
+        if i % 50 == 0 {
+            text.push_str("garbage line\n");
+        }
+    }
+    std::fs::write(&path, &text).unwrap();
+    let mut source = VwTextSource::open(
+        &path,
+        10,
+        pol::data::parser::ParserConfig::default(),
+    )
+    .unwrap();
+    let mut session = Session::builder()
+        .dim(1 << 10)
+        .rule(UpdateRule::Local)
+        .topology(Topology::TwoLayer { shards: 2 })
+        .loss(Loss::Logistic)
+        .clip01(false)
+        .build()
+        .unwrap();
+    let report = session.train_source(&mut source).unwrap();
+    assert_eq!(report.instances, 300);
+    assert_eq!(source.skipped(), 6);
+    std::fs::remove_file(&path).ok();
+}
