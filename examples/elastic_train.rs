@@ -1,0 +1,110 @@
+//! elastic_train — the paper's parallelism/delay tradeoff as a *live*
+//! knob: one model trained at 4 workers, resumed at 8, shrunk to 2,
+//! serving predictions the whole way through.
+//!
+//! Each phase warm-starts from the previous phase's `.polz` checkpoint
+//! at a *different* worker count: `SessionBuilder::workers` migrates
+//! the model through `ShardPlan::remap` instead of erroring — every
+//! (feature, weight) pair in the leaf tables moves to its new owning
+//! shard bit-exactly, so no learned feature knowledge is lost when the
+//! fleet grows or shrinks. Between phases the freshly migrated
+//! snapshot is published into the same `SnapshotCell` the server
+//! reads, so serving never stops while the topology changes under it.
+//!
+//!     cargo run --release --example elastic_train
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use pol::prelude::*;
+
+const INSTANCES: usize = 40_000;
+
+fn phase_source() -> RcvLikeSource {
+    RcvLikeSource::new(SynthConfig {
+        instances: INSTANCES,
+        features: 23_000,
+        density: 75,
+        hash_bits: 16,
+        ..Default::default()
+    })
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join("pol_elastic_train");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let ckpt = dir.join("elastic.polz");
+    std::fs::remove_file(&ckpt).ok();
+
+    // the cell the server reads for the entire run, across all worker
+    // counts — each phase's session publishes into it
+    let cell = SnapshotCell::new(ModelSnapshot::central(vec![0.0; 1 << 16], 0, 0));
+    let server = PredictionServer::single(Arc::clone(&cell), 2);
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
+        // background query load against whatever snapshot is current
+        let client = server.client();
+        let done = &done;
+        s.spawn(move || {
+            let mut rng = Rng::new(11);
+            while !done.load(Ordering::Acquire) {
+                let x: Vec<(u32, f32)> = (0..75)
+                    .map(|_| (rng.below(1 << 16) as u32, rng.normal() as f32))
+                    .collect();
+                if client.predict(vec![x]).is_none() {
+                    break;
+                }
+            }
+        });
+
+        // three phases, three worker counts, one continuously-warm model
+        for (phase, workers) in [(1usize, 4usize), (2, 8), (3, 2)] {
+            let mut builder = Session::builder()
+                .source(phase_source())
+                .topology(Topology::TwoLayer { shards: workers })
+                .rule(UpdateRule::Local)
+                .loss(Loss::Logistic)
+                .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+                .clip01(false)
+                .workers(workers)
+                .publish_every(8_192)
+                .publish_to(Arc::clone(&cell))
+                .checkpoint_to(&ckpt);
+            if phase > 1 {
+                // warm start the previous phase's checkpoint at the NEW
+                // worker count: migrated, not rejected
+                builder = builder.warm_start(&ckpt);
+            }
+            let mut session = builder.build().expect("build session");
+            assert_eq!(session.model().workers(), workers);
+            let report = session.run().expect("train phase");
+            println!(
+                "phase {phase}: {workers} workers, {} instances this phase \
+                 ({} total), progressive acc {:.4}",
+                report.instances,
+                session.model().trained_instances(),
+                report.progressive.accuracy()
+            );
+        }
+        done.store(true, Ordering::Release);
+    });
+
+    let stats = server.shutdown();
+    println!(
+        "served {} predictions at {:.0} qps across every re-shard \
+         (p99 {:.1} µs, max staleness {} instances)",
+        stats.predictions,
+        stats.qps(),
+        stats.latency.quantile_ns(0.99) as f64 / 1e3,
+        stats.max_staleness
+    );
+    println!(
+        "final model: {} trained instances served from {} workers \
+         (snapshot seq {})",
+        cell.load().trained_instances,
+        2,
+        cell.seq()
+    );
+    std::fs::remove_file(&ckpt).ok();
+}

@@ -15,14 +15,15 @@ mod common;
 
 use pol::config::{RunConfig, UpdateRule};
 use pol::coordinator::timing::{
-    simulate_multicore_baseline, simulate_two_layer_ext, CpuModel,
+    shard_nnz_stream, simulate_multicore_baseline, simulate_two_layer_ext,
+    CpuModel,
 };
 use pol::coordinator::Coordinator;
 use pol::data::synth::ad_display::{AdDisplayConfig, AdDisplayGen};
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
 use pol::net::LinkSpec;
-use pol::sharding::feature::FeatureSharder;
+use pol::sharding::ShardPlan;
 use pol::topology::Topology;
 
 fn main() {
@@ -63,19 +64,10 @@ fn main() {
     );
     for k in 1..=8usize {
         let rep = run(&corpus.pairwise, k, corpus.dim);
-        // per-shard nnz stream for the timing model
-        let sharder = FeatureSharder::hash(k);
-        let stream: Vec<Vec<usize>> = corpus
-            .pairwise
-            .iter()
-            .map(|inst| {
-                let mut counts = vec![0usize; k];
-                for &(i, _) in &inst.features {
-                    counts[sharder.shard_of(i)] += 1;
-                }
-                counts
-            })
-            .collect();
+        // per-shard nnz stream for the timing model, routed by the
+        // same ShardPlan the real trainer would hold
+        let plan = ShardPlan::hash(k, corpus.dim);
+        let stream = shard_nnz_stream(&plan, corpus.pairwise.iter());
         let sim_a =
             simulate_two_layer_ext(&stream, cpu, link, false, wire_frac, 1.0);
         let sim_b =

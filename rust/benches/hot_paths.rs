@@ -37,11 +37,11 @@ fn main() {
         sparse_saxpy(&mut w, 1e-9, std::hint::black_box(&x));
     });
 
-    let sharder = pol::sharding::feature::FeatureSharder::hash(8);
+    let plan = pol::sharding::ShardPlan::hash(8, dim);
     let inst = pol::data::instance::Instance::new(1.0, x.clone());
     let mut bufs: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 8];
     bench("feature split_into (nnz=100, k=8)", 1_000_000, || {
-        sharder.split_into(std::hint::black_box(&inst), &mut bufs);
+        plan.split_into(std::hint::black_box(&inst), &mut bufs);
     });
 
     let sched = pol::coordinator::schedule::DelaySchedule::new(1024);

@@ -25,7 +25,7 @@ use pol::linalg::sparse_dot;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
 use pol::rng::Rng;
-use pol::sharding::feature::FeatureSharder;
+use pol::sharding::ShardPlan;
 
 // per-instance rendezvous cost model: the cache line bounces between
 // all k participants, so the cost grows with the thread count — this is
@@ -76,11 +76,11 @@ fn main() {
     );
     for threads in [1usize, 2, 4, 8] {
         // modeled: max per-shard work + per-instance sync
-        let sharder = FeatureSharder::hash(threads);
+        let plan = ShardPlan::hash(threads, ds.dim);
         let mut shard_feats = vec![0u64; threads];
         for inst in ds.iter() {
             for &(i, _) in &inst.features {
-                shard_feats[sharder.shard_of(i)] += 1;
+                shard_feats[plan.shard_of(i)] += 1;
             }
         }
         let max_work =

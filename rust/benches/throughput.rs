@@ -141,6 +141,47 @@ fn main() {
     ));
     std::fs::remove_file(&path).ok();
 
+    // 5. elastic re-sharding: migrate a trained 8-worker tree to 4 and
+    // 16 workers (ShardPlan::remap re-keys every per-leaf weight;
+    // params/s is the figure of merit, since the work is one routing
+    // lookup + move per parameter slot)
+    let mut tree = pol::coordinator::Coordinator::new(
+        pol::config::RunConfig {
+            topology: pol::topology::Topology::TwoLayer { shards: 8 },
+            rule: pol::config::UpdateRule::Local,
+            loss: Loss::Logistic,
+            lr: LrSchedule::inv_sqrt(1.0, 1.0),
+            clip01: false,
+            ..Default::default()
+        },
+        ds.dim,
+    );
+    tree.train(&ds);
+    let params: u64 = tree.nodes().iter().map(|n| n.weights().len() as u64).sum();
+    for target in [4usize, 16] {
+        let mut hist = LatencyHistogram::new();
+        let reps: u64 = 5;
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let migrated = tree.reshard(target).expect("reshard");
+            std::hint::black_box(&migrated);
+            hist.record(t0.elapsed());
+        }
+        let wall = t.elapsed();
+        rows.push(common::BenchRow::from_hist(
+            format!("reshard-8to{target}"),
+            params * reps,
+            wall,
+            &hist,
+        ));
+        println!(
+            "reshard 8 -> {target}: {:.1} Mparams/s (p50 {:.1} ms over {reps} reps)",
+            params as f64 * reps as f64 / wall.as_secs_f64() / 1e6,
+            hist.quantile_ns(0.5) as f64 / 1e6
+        );
+    }
+
     println!("{:<22} {:>12} {:>16}", "path", "wall-s", "features/s");
     for (name, secs) in [
         ("learn-only", learn_s),

@@ -141,7 +141,10 @@ impl RunConfig {
                 "shards" | "workers" => {
                     let n: usize =
                         v.parse().map_err(|_| format!("bad {k}: {v}"))?;
-                    cfg.topology = Topology::TwoLayer { shards: n };
+                    // resize without changing the configured kind (the
+                    // canonical emission order puts `workers` first, so
+                    // this also covers the historical TwoLayer default)
+                    cfg.topology = cfg.topology.with_leaves(n);
                 }
                 "topology" => {
                     cfg.topology = match (v, cfg.topology.leaves()) {

@@ -28,7 +28,9 @@ pub struct FeedbackMsg {
     pub gscale: f64,
 }
 
-/// Sharder → leaf: the feature shard of instance `t` (Fig 0.4 step (b)).
+/// Sharder → leaf: the feature shard of instance `t` (Fig 0.4 step
+/// (b); which features land in which message is decided by the
+/// [`crate::sharding::ShardPlan`], never re-derived here).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardMsg {
     pub t: u64,

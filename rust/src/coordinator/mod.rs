@@ -34,7 +34,7 @@ use crate::serve::snapshot::{
     CentralPredictor, ModelSnapshot, PredictScratch, SnapshotPredict,
     TreePredictor,
 };
-use crate::sharding::feature::FeatureSharder;
+use crate::sharding::{ShardMigration, ShardPlan};
 use crate::stream::{InstanceSource, Pipeline, PipelineStats};
 use crate::topology::NodeGraph;
 
@@ -70,7 +70,10 @@ pub struct TrainReport {
 pub struct Coordinator {
     pub cfg: RunConfig,
     graph: NodeGraph,
-    sharder: FeatureSharder,
+    /// The feature-routing authority (one hash shard per leaf) — the
+    /// same [`ShardPlan`] object the snapshot predictor and checkpoint
+    /// codec carry.
+    plan: ShardPlan,
     nodes: Vec<NodeLearner>,
     pending: VecDeque<Pending>,
     /// Scratch: per-leaf feature buffers reused across instances.
@@ -101,7 +104,7 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: RunConfig, dim: usize) -> Self {
         let graph = cfg.topology.build();
-        let sharder = FeatureSharder::hash(graph.leaves);
+        let plan = ShardPlan::for_topology(&cfg.topology, dim);
         let nodes = (0..graph.num_nodes())
             .map(|id| {
                 let node_dim = if graph.is_leaf(id) {
@@ -121,7 +124,7 @@ impl Coordinator {
         Coordinator {
             cfg,
             graph,
-            sharder,
+            plan,
             nodes,
             pending: VecDeque::new(),
             leaf_bufs: vec![Vec::new(); leaves],
@@ -185,6 +188,118 @@ impl Coordinator {
         Ok(c)
     }
 
+    /// Elastic re-sharding: the same model migrated to `workers`
+    /// shards, the paper's parallelism/delay knob turned at runtime.
+    ///
+    /// * **Centralized rules** (Minibatch/CG/SGD) are worker-invariant
+    ///   (Fig 0.6): the flat table is carried over untouched, so the
+    ///   migrated model's predictions are **bit-identical** at any
+    ///   worker count.
+    /// * **Tree rules**: the per-leaf weight tables — O(n·dim), the
+    ///   overwhelming share of the parameters — are re-keyed through
+    ///   [`ShardPlan::remap`]: every (feature, weight) pair moves to
+    ///   its new owning leaf bit-exactly, for hash and range routing
+    ///   alike, and `reshard(n→m→n)` is the identity on the leaf
+    ///   layer. The combiner nodes — O(n) parameters whose input
+    ///   dimension *is* the worker count — cannot be carried across
+    ///   counts; they are re-derived as uniform pass-throughs whose
+    ///   root applies the source tree's mean root-to-leaf gain (and
+    ///   keeps the root bias), so the migrated model predicts at the
+    ///   source scale immediately and the tiny combiner re-learns its
+    ///   fine structure within O(τ) instances of warm-start training.
+    ///   One migration canonicalizes the combiner: further re-shards
+    ///   round-trip the *entire* model byte-identically.
+    /// * `reshard(n→n)` is always an exact deep copy.
+    ///
+    /// Delayed feedback still in flight refers to the old leaf layout,
+    /// so a mid-stream model must [`Self::flush_feedback`] first.
+    pub fn reshard(&self, workers: usize) -> Result<Coordinator, String> {
+        if workers == 0 {
+            return Err("worker count must be at least 1".into());
+        }
+        if !self.pending.is_empty() {
+            return Err(format!(
+                "{} delayed feedback update(s) still in flight; call \
+                 flush_feedback() before re-sharding",
+                self.pending.len()
+            ));
+        }
+        let mut cfg = self.cfg.clone();
+        cfg.topology = cfg.topology.with_leaves(workers);
+        if let Some(w) = &self.central_w {
+            return Coordinator::restore_central(
+                cfg,
+                self.dim,
+                w.clone(),
+                self.trained,
+            );
+        }
+        if workers == self.graph.leaves {
+            let nodes = self
+                .nodes
+                .iter()
+                .map(|n| (n.steps(), n.weights().to_vec()))
+                .collect();
+            return Coordinator::restore_tree(cfg, self.dim, nodes, self.trained);
+        }
+        let migration: ShardMigration = self.plan.remap(workers);
+        let old_leaves: Vec<&[f32]> = self.nodes[..self.graph.leaves]
+            .iter()
+            .map(|n| n.weights())
+            .collect();
+        let new_leaf_tables = migration.migrate_tables(&old_leaves);
+        let leaf_steps = self.nodes[..self.graph.leaves]
+            .iter()
+            .map(|n| n.steps())
+            .max()
+            .unwrap_or(0);
+        let gain = self.mean_leaf_gain();
+        let old_root = &self.nodes[self.graph.root];
+        let root_bias = if self.cfg.bias {
+            *old_root.weights().last().expect("root has a bias slot")
+        } else {
+            0.0
+        };
+        let root_steps = old_root.steps();
+        let new_graph = cfg.topology.build();
+        let mut nodes: Vec<(u64, Vec<f32>)> = new_leaf_tables
+            .into_iter()
+            .map(|w| (leaf_steps, w))
+            .collect();
+        for id in new_graph.leaves..new_graph.num_nodes() {
+            let kids = new_graph.children[id].len();
+            let at_root = id == new_graph.root;
+            let mut w = vec![if at_root { gain } else { 1.0f32 }; kids];
+            if cfg.bias {
+                w.push(if at_root { root_bias } else { 0.0 });
+            }
+            nodes.push((root_steps, w));
+        }
+        Coordinator::restore_tree(cfg, self.dim, nodes, self.trained)
+    }
+
+    /// Mean over leaves of the product of combiner weights along the
+    /// root→leaf path — the average end-to-end gain a leaf prediction
+    /// receives (clipping ignored). The scale [`Self::reshard`] carries
+    /// into a migrated combiner.
+    fn mean_leaf_gain(&self) -> f32 {
+        let mut total = 0.0f64;
+        for leaf in 0..self.graph.leaves {
+            let mut g = 1.0f64;
+            let mut id = leaf;
+            while let Some(p) = self.graph.parent[id] {
+                let rank = self.graph.children[p]
+                    .iter()
+                    .position(|&c| c == id)
+                    .expect("node is its parent's child");
+                g *= self.nodes[p].weights()[rank] as f64;
+                id = p;
+            }
+            total += g;
+        }
+        (total / self.graph.leaves as f64) as f32
+    }
+
     /// Hashed feature-space size of the leaves.
     pub fn dim(&self) -> usize {
         self.dim
@@ -201,10 +316,15 @@ impl Coordinator {
         self.central_w.as_deref()
     }
 
-    /// Stable identity of the feature-routing function (folded into
+    /// The feature-routing plan this coordinator trains under.
+    pub fn plan(&self) -> ShardPlan {
+        self.plan
+    }
+
+    /// Stable identity of the feature-routing plan (folded into
     /// checkpoint digests).
-    pub fn sharder_signature(&self) -> u64 {
-        self.sharder.signature()
+    pub fn plan_signature(&self) -> u64 {
+        self.plan.signature()
     }
 
     /// Install the serving hook: publish a fresh immutable snapshot
@@ -241,14 +361,14 @@ impl Coordinator {
         let digest = crate::serve::checkpoint::config_digest(
             &self.cfg.to_cfg_string(),
             self.dim as u64,
-            self.sharder_signature(),
+            self.plan_signature(),
         );
         let predictor: std::sync::Arc<dyn SnapshotPredict> = match &self.central_w
         {
             Some(w) => std::sync::Arc::new(CentralPredictor { w: w.clone() }),
             None => std::sync::Arc::new(TreePredictor {
                 graph: self.graph.clone(),
-                sharder: self.sharder.clone(),
+                plan: self.plan,
                 weights: self.nodes.iter().map(|n| n.weights().to_vec()).collect(),
                 clip01: self.cfg.clip01,
                 bias: self.cfg.bias,
@@ -326,7 +446,7 @@ impl Coordinator {
         let n = self.graph.num_nodes();
         self.scratch_preds.clear();
         self.scratch_preds.resize(n, 0.0);
-        self.sharder.split_features_into(features, &mut self.leaf_bufs);
+        self.plan.split_features_into(features, &mut self.leaf_bufs);
         for leaf in 0..self.graph.leaves {
             let x = std::mem::take(&mut self.leaf_bufs[leaf]);
             let (pre, _g) = self.nodes[leaf].local_learn(&x, label);
@@ -383,7 +503,7 @@ impl Coordinator {
             matches!(self.cfg.rule, UpdateRule::Backprop { .. });
 
         // leaves (no feature clone: split straight from the slice)
-        self.sharder.split_features_into(features, &mut self.leaf_bufs);
+        self.plan.split_features_into(features, &mut self.leaf_bufs);
         for leaf in 0..self.graph.leaves {
             // swap the filled buffer out, leaving a recycled one with
             // retained capacity for the next instance's split
@@ -529,7 +649,7 @@ impl Coordinator {
         }
         crate::serve::snapshot::tree_predict_with(
             &self.graph,
-            &self.sharder,
+            &self.plan,
             self.cfg.clip01,
             self.cfg.bias,
             features,
@@ -554,7 +674,7 @@ impl Coordinator {
         }
         crate::serve::snapshot::tree_predict_with(
             &self.graph,
-            &self.sharder,
+            &self.plan,
             self.cfg.clip01,
             self.cfg.bias,
             features,

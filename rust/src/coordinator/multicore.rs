@@ -35,7 +35,7 @@ use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
 use crate::loss::Loss;
 use crate::lr::LrSchedule;
 use crate::metrics::ProgressiveValidator;
-use crate::sharding::feature::FeatureSharder;
+use crate::sharding::ShardPlan;
 use crate::stream::{DatasetSource, InstanceBatch, InstanceSource, Pipeline};
 
 /// Multicore synchronous feature-sharded trainer.
@@ -209,12 +209,59 @@ impl MulticoreTrainer {
         source: &mut dyn InstanceSource,
     ) -> io::Result<(Vec<f32>, ProgressiveValidator, std::time::Duration)>
     {
+        self.run_source(source, None, 0)
+    }
+
+    /// Resume training from previously merged weights `w0` at stream
+    /// position `t0` — with *this* trainer's worker count, which need
+    /// not match the one that produced `w0`. The flat table is
+    /// redistributed across the k learner threads through the
+    /// [`ShardPlan`] (each thread is seeded with exactly the weights of
+    /// the indices it owns — bit-exact, so no information is lost at
+    /// the seam), making the worker count an elastic knob *between
+    /// passes*: pass 1 on 4 cores, pass 2 on 8, pass 3 on 2, one
+    /// continuously-warm model throughout. `t0` continues the η clock
+    /// (pass the instances trained so far).
+    pub fn resume_source(
+        &self,
+        source: &mut dyn InstanceSource,
+        w0: &[f32],
+        t0: u64,
+    ) -> io::Result<(Vec<f32>, ProgressiveValidator, std::time::Duration)>
+    {
+        if w0.len() != source.dim() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "resume table length {} != source dim {}",
+                    w0.len(),
+                    source.dim()
+                ),
+            ));
+        }
+        self.run_source(source, Some(w0), t0)
+    }
+
+    fn run_source(
+        &self,
+        source: &mut dyn InstanceSource,
+        w0: Option<&[f32]>,
+        t0: u64,
+    ) -> io::Result<(Vec<f32>, ProgressiveValidator, std::time::Duration)>
+    {
         let k = self.threads;
-        let sharder = FeatureSharder::hash(k);
         let dim = source.dim();
+        let plan = ShardPlan::hash(k, dim);
         let loss = self.loss;
         let lr = self.lr;
-        let pipe = Pipeline { shard: Some(sharder), ..Default::default() };
+        let pipe = Pipeline { shard: Some(plan), ..Default::default() };
+
+        // warm start: each learner thread owns its plan shard of the
+        // merged table (zeros elsewhere, like its own updates leave it)
+        let mut seeds: Vec<Vec<f32>> = match w0 {
+            Some(w0) => plan.split_table(w0),
+            None => (0..k).map(|_| vec![0.0f32; dim]).collect(),
+        };
 
         let start = std::time::Instant::now();
         let rv = Arc::new(Rendezvous::new(k));
@@ -225,11 +272,11 @@ impl MulticoreTrainer {
         let ((), _stats) = pipe.with_feed(source, |feed| {
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(k);
-                for tid in 0..k {
+                for (tid, seed) in seeds.drain(..).enumerate() {
                     let rv = Arc::clone(&rv);
                     let round = Arc::clone(&round);
                     handles.push(scope.spawn(move || {
-                        learner_thread(tid, k, dim, loss, lr, &rv, &round)
+                        learner_thread(tid, k, seed, t0, loss, lr, &rv, &round)
                     }));
                 }
                 let mut result = Ok(());
@@ -266,38 +313,39 @@ impl MulticoreTrainer {
         })?;
         let elapsed = start.elapsed();
 
-        // merge: each thread only wrote its own shard's indices, so the
-        // element-wise sum reassembles the single learner's weights
-        let mut w = vec![0.0f32; dim];
-        for part in &weight_parts {
-            for (dst, &src) in w.iter_mut().zip(part) {
-                *dst += src;
-            }
-        }
+        // merge: each thread only touched the indices its plan shard
+        // owns, so owner-selection reassembles the single learner's
+        // table bit-exactly (equal to the historical element-wise sum
+        // on these plan-consistent parts, and `-0.0`-preserving)
+        let w = plan.merge_tables(&weight_parts);
         Ok((w, pv, elapsed))
     }
 }
 
 /// One learner thread: for every instance of every published batch,
 /// compute the partial dot over this thread's shard, rendezvous, and
-/// apply the published update to its own shard of the weights.
+/// apply the published update to its own shard of the weights. `w` is
+/// the thread's seed table (zeros on a cold start; its plan shard of
+/// the merged table on an elastic resume) and `t0` the stream position
+/// the learning-rate clock continues from.
+#[allow(clippy::too_many_arguments)]
 fn learner_thread(
     tid: usize,
     k: usize,
-    dim: usize,
+    mut w: Vec<f32>,
+    t0: u64,
     loss: Loss,
     lr: LrSchedule,
     rv: &Rendezvous,
     round: &BatchRound,
 ) -> Vec<f32> {
-    let mut w = vec![0.0f32; dim];
     let mut my_seq = 0u64;
     let mut my_round = 0u64;
     while let Some((r, batch, yhats)) = round.next_round(my_round) {
         my_round = r;
         for i in 0..batch.len() {
             let x: &[SparseFeat] = &batch.shards(i)[tid];
-            let t = batch.start_index() + i as u64;
+            let t = t0 + batch.start_index() + i as u64;
             let partial = sparse_dot(&w, x);
             rv.slots[tid].store(f2b(partial), Ordering::Release);
             let arrived = rv.arrived.fetch_add(1, Ordering::AcqRel) + 1;
@@ -403,6 +451,68 @@ mod tests {
         });
         let (w_stream, _, _) = mt.train_source(&mut src).unwrap();
         assert_eq!(w_mem, w_stream, "streamed weights must be bit-identical");
+    }
+
+    #[test]
+    fn resume_equals_one_continuous_run() {
+        // pass 1 + resumed pass 2 at the same worker count must be
+        // bit-identical to one run over the concatenated stream: the
+        // plan-based seeding hands each thread exactly the table its
+        // own updates would have left behind, and t0 continues the η
+        // clock
+        let d = ds();
+        let mut doubled = crate::data::Dataset::new("2x".into(), d.dim);
+        doubled.instances.extend(d.instances.iter().cloned());
+        doubled.instances.extend(d.instances.iter().cloned());
+        let lr = LrSchedule::inv_sqrt(0.5, 1.0);
+        let mt = MulticoreTrainer::new(3, Loss::Squared, lr);
+        let mut one_shot = crate::stream::DatasetSource::new(&doubled);
+        let (w_once, _, _) = mt.train_source(&mut one_shot).unwrap();
+        let (w1, _, _) = mt.train(&d);
+        let mut src = crate::stream::DatasetSource::new(&d);
+        let (w2, _, _) =
+            mt.resume_source(&mut src, &w1, d.len() as u64).unwrap();
+        assert_eq!(w_once, w2, "resume must continue bit-exactly");
+    }
+
+    #[test]
+    fn elastic_worker_count_between_passes() {
+        // pass 1 on 2 workers, pass 2 resumed on 4: the seam is a
+        // bit-exact redistribution, so the whole run stays within the
+        // usual cross-k rounding envelope of two-pass single-thread SGD
+        let d = ds();
+        let lr = LrSchedule::inv_sqrt(0.5, 1.0);
+        let (w1, _, _) =
+            MulticoreTrainer::new(2, Loss::Squared, lr).train(&d);
+        let mut src = crate::stream::DatasetSource::new(&d);
+        let (w2, _, _) = MulticoreTrainer::new(4, Loss::Squared, lr)
+            .resume_source(&mut src, &w1, d.len() as u64)
+            .unwrap();
+        let mut sgd = crate::learner::sgd::Sgd::new(d.dim, Loss::Squared, lr);
+        for _ in 0..2 {
+            for inst in d.iter() {
+                sgd.learn(&inst.features, inst.label);
+            }
+        }
+        let max_diff = w2
+            .iter()
+            .zip(sgd.weights())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "max_diff={max_diff}");
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_table() {
+        let d = ds();
+        let mt = MulticoreTrainer::new(
+            2,
+            Loss::Squared,
+            LrSchedule::constant(0.1),
+        );
+        let mut src = crate::stream::DatasetSource::new(&d);
+        let err = mt.resume_source(&mut src, &[0.0; 3], 0).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
     }
 
     #[test]

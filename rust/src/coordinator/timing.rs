@@ -16,7 +16,29 @@
 //! Node ids in the virtual cluster: 0 = sharder, 1..=k = feature shards,
 //! k+1 = master.
 
+use crate::data::instance::Instance;
 use crate::net::{wire, LinkSpec, SimNetwork};
+use crate::sharding::ShardPlan;
+
+/// Per-instance per-shard nnz counts for the simulators, derived from
+/// the same [`ShardPlan`] the real trainer holds — the simulated
+/// fan-out and the live fan-out cannot disagree about where a feature
+/// goes. Input shape matches [`simulate_two_layer`]'s `shard_nnz`.
+pub fn shard_nnz_stream<'a>(
+    plan: &ShardPlan,
+    instances: impl IntoIterator<Item = &'a Instance>,
+) -> Vec<Vec<usize>> {
+    instances
+        .into_iter()
+        .map(|inst| {
+            let mut counts = vec![0usize; plan.shards()];
+            for &(i, _) in &inst.features {
+                counts[plan.shard_of(i)] += 1;
+            }
+            counts
+        })
+        .collect()
+}
 
 /// CPU cost model for the 2010-era nodes the paper used.
 ///
@@ -202,6 +224,28 @@ mod tests {
         let with = simulate_two_layer(&stream(4, 1_000, 2_000), cpu, link, true);
         assert!(with.virtual_seconds >= without.virtual_seconds);
         assert!(with.virtual_seconds < 2.0 * without.virtual_seconds);
+    }
+
+    #[test]
+    fn shard_nnz_stream_counts_by_plan() {
+        let plan = ShardPlan::hash(3, 1024);
+        let insts: Vec<Instance> = (0..5)
+            .map(|t| {
+                Instance::new(
+                    1.0,
+                    (0..40u32).map(|i| (i * 13 + t, 0.5)).collect(),
+                )
+            })
+            .collect();
+        let stream = shard_nnz_stream(&plan, insts.iter());
+        assert_eq!(stream.len(), 5);
+        for (inst, counts) in insts.iter().zip(&stream) {
+            assert_eq!(counts.len(), 3);
+            assert_eq!(counts.iter().sum::<usize>(), inst.features.len());
+            for &(i, _) in &inst.features {
+                assert!(counts[plan.shard_of(i)] > 0);
+            }
+        }
     }
 
     #[test]

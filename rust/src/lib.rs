@@ -61,6 +61,23 @@
 //! [`model::Session::train`] (`session.train(&ds)`), which is now a
 //! thin adapter over the same per-instance code path.
 //!
+//! ## One routing authority, elastic worker counts
+//!
+//! Feature routing lives in exactly one object:
+//! [`sharding::ShardPlan`] (assignment kind, shard count, dimension,
+//! signature). The ingest pipeline, the coordinator's forward sweep,
+//! the multicore learner threads, the `.polz` codec (which serializes
+//! the plan into the v3 header), and the serving tree predictor all
+//! hold the *same* plan — no layer re-derives `shard_of`. On top of
+//! it, [`sharding::ShardPlan::remap`] makes the worker count an
+//! elastic runtime knob: a checkpoint trained at n workers
+//! warm-starts and serves at m (`SessionBuilder::workers`, the
+//! `pol reshard` CLI, `MulticoreTrainer::resume_source`) — flat
+//! centralized tables predict bit-identically at any count, and tree
+//! leaf tables are re-keyed weight-exactly (`n→m→n` is the identity).
+//! See `examples/elastic_train.rs` for the full
+//! train-4 → resume-8 → shrink-2 story under live serving.
+//!
 //! ## Three-layer architecture (+ the serving layer)
 //!
 //! * **L3 (this crate)** — the coordinator: data pipeline, feature
@@ -138,6 +155,7 @@ pub mod prelude {
         ModelRegistry, ModelSnapshot, PredictClient, PredictionServer,
         SnapshotCell, SnapshotPublisher,
     };
+    pub use crate::sharding::{ShardKind, ShardMigration, ShardPlan};
     pub use crate::stream::{
         CacheSource, DatasetSource, InstanceSource, Pipeline, RcvLikeSource,
         VwTextSource, WebspamLikeSource,

@@ -37,6 +37,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
         Some("checkpoint") => cmd_checkpoint(&args[1..]),
+        Some("reshard") => cmd_reshard(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("predict") => cmd_predict(&args[1..]),
         Some("bench-data") => cmd_bench_data(&args[1..]),
@@ -77,6 +78,10 @@ COMMANDS:
                    --checkpoint-every N   (background checkpoint cadence)
   checkpoint       inspect + integrity-check a .polz checkpoint
                    --model PATH
+  reshard          migrate a checkpoint to a different worker count
+                   (elastic re-sharding: flat tables are bit-identical
+                   at any count; tree leaf weights are re-keyed exactly)
+                   --from A.polz  --to B.polz  --workers M
   serve            load checkpoints and serve them from N threads under a
                    synthetic request load, reporting per-model QPS/latency
                    --model [NAME=]PATH  (repeatable: N models, one server)
@@ -290,19 +295,14 @@ fn train_config(fl: &Flags) -> Result<RunConfig, String> {
     if workers.is_some() || fl.get("--topology").is_some() {
         let n = workers.unwrap_or_else(|| cfg.topology.leaves());
         // `--workers` alone resizes the configured topology without
-        // changing its kind; `--topology kary` keeps a configured fanin
+        // changing its kind (Topology::with_leaves — which also keeps a
+        // configured kary fanin); `--topology` switches the kind first
         let fanin = match cfg.topology {
             Topology::KAry { fanin, .. } => fanin,
             _ => 2,
         };
-        cfg.topology = match fl.get("--topology") {
-            None => match cfg.topology {
-                Topology::TwoLayer { .. } => Topology::TwoLayer { shards: n },
-                Topology::BinaryTree { .. } => {
-                    Topology::BinaryTree { leaves: n }
-                }
-                Topology::KAry { .. } => Topology::KAry { leaves: n, fanin },
-            },
+        let base = match fl.get("--topology") {
+            None => cfg.topology,
             Some("two-layer") => Topology::TwoLayer { shards: n },
             Some("binary-tree") => Topology::BinaryTree { leaves: n },
             Some("kary") => Topology::KAry { leaves: n, fanin },
@@ -313,6 +313,7 @@ fn train_config(fl: &Flags) -> Result<RunConfig, String> {
                 ))
             }
         };
+        cfg.topology = base.with_leaves(n);
     }
     if let Some(l) = fl.get("--loss") {
         cfg.loss =
@@ -610,6 +611,13 @@ fn cmd_checkpoint(args: &[String]) -> i32 {
                 info.config_digest,
                 info.salt
             );
+            if let Some(plan) = info.plan {
+                println!(
+                    "plan: {} (signature {:#018x})",
+                    plan.describe(),
+                    plan.signature()
+                );
+            }
             for line in info.config_text.lines() {
                 println!("  {line}");
             }
@@ -620,6 +628,71 @@ fn cmd_checkpoint(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_reshard(args: &[String]) -> i32 {
+    let fl = match parse_flags(
+        "reshard",
+        args,
+        &["--from", "--to", "--workers"],
+        &[],
+    ) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let (from, to, workers) = match (
+        fl.get("--from"),
+        fl.get("--to"),
+        parsed::<usize>("reshard", &fl, "--workers"),
+    ) {
+        (Some(f), Some(t), Ok(Some(w))) if w >= 1 => (f, t, w),
+        (_, _, Err(e)) => return usage_error(&e),
+        _ => {
+            return usage_error(
+                "reshard: --from A.polz, --to B.polz and --workers M \
+                 (>= 1) are all required",
+            )
+        }
+    };
+    let model = match pol::model::load(from) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("reshard: load {from}: {e}");
+            return 1;
+        }
+    };
+    let before = model.workers();
+    let migrated = if before == workers {
+        eprintln!(
+            "reshard: {from} already runs {workers} worker(s); copying"
+        );
+        model
+    } else {
+        match model.reshard_to(workers) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("reshard: {from}: {e}");
+                return 1;
+            }
+        }
+    };
+    if let Err(e) = checkpoint::save_atomic(std::path::Path::new(to), |out| {
+        migrated.write(out)
+    }) {
+        eprintln!("reshard: save {to}: {e}");
+        return 1;
+    }
+    println!(
+        "resharded {from} ({} @ {before} workers, {} trained) -> {to} \
+         (@ {workers} workers)",
+        migrated.kind_name(),
+        migrated.trained_instances()
+    );
+    0
 }
 
 /// Parse one stdin line of `idx:val` tokens (pre-hashed feature indices).

@@ -43,6 +43,7 @@ pub struct SessionBuilder {
     checkpoint_to: Option<PathBuf>,
     checkpoint_every: Option<u64>,
     warm_start: Option<PathBuf>,
+    workers: Option<usize>,
 }
 
 impl SessionBuilder {
@@ -84,6 +85,18 @@ impl SessionBuilder {
     /// Node topology (two-layer, binary tree, k-ary).
     pub fn topology(mut self, topology: Topology) -> Self {
         self.cfg.topology = topology;
+        self
+    }
+
+    /// Worker (shard) count — the elastic parallelism knob. On a cold
+    /// build this resizes the configured topology without changing its
+    /// kind; on a [`Self::warm_start`] whose checkpoint was trained at
+    /// a different worker count, the model is *migrated*
+    /// ([`crate::sharding::ShardPlan::remap`] — leaf weights re-keyed
+    /// exactly, flat tables untouched) instead of erroring, so the same
+    /// `.polz` resumes at 2, 4, or 16 workers.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
         self
     }
 
@@ -184,9 +197,22 @@ impl SessionBuilder {
             .dim
             .or_else(|| self.source.as_ref().map(|s| s.dim().max(1)))
             .unwrap_or(1 << 18);
+        let mut cfg = self.cfg;
+        if let Some(workers) = self.workers {
+            cfg.topology = cfg.topology.with_leaves(workers);
+        }
         let mut model: Box<dyn Model> = match &self.warm_start {
-            Some(path) => checkpoint::load_model(path)?,
-            None => Box::new(Coordinator::new(self.cfg, dim)),
+            Some(path) => {
+                let model = checkpoint::load_model(path)?;
+                match self.workers {
+                    // elastic warm start: a checkpoint trained at n
+                    // workers migrates to the requested m instead of
+                    // erroring
+                    Some(m) if model.workers() != m => model.reshard_to(m)?,
+                    _ => model,
+                }
+            }
+            None => Box::new(Coordinator::new(cfg, dim)),
         };
         let cell = match (self.cell, self.publish_every) {
             (cell, Some(every)) => {
@@ -386,6 +412,14 @@ mod tests {
         assert_eq!(report.instances, 2_000);
         assert!(report.progressive.accuracy() > 0.6);
         assert_eq!(session.model().trained_instances(), 2_000);
+    }
+
+    #[test]
+    fn workers_resizes_cold_builds() {
+        let ds = small_ds();
+        let session = builder_for(&ds).workers(8).build().unwrap();
+        assert_eq!(session.model().workers(), 8);
+        assert_eq!(session.model().kind_name(), "tree-coordinator");
     }
 
     #[test]

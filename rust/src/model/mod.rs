@@ -137,6 +137,30 @@ pub trait Model: Send {
     /// Hashed feature-space size predictions are computed over.
     fn dim(&self) -> usize;
 
+    /// Worker (shard) count this model trains and serves with — the
+    /// leaf count of its [`crate::sharding::ShardPlan`]; 1 for
+    /// unsharded models.
+    fn workers(&self) -> usize {
+        1
+    }
+
+    /// Elastic re-sharding: the same model migrated to `workers`
+    /// shards (see [`Coordinator::reshard`] for the exact per-kind
+    /// guarantees — flat tables are bit-identical at any count, tree
+    /// leaf tables are re-keyed weight-exactly). The default
+    /// implementation refuses: models without a sharded representation
+    /// only "migrate" to their own worker count.
+    fn reshard_to(&self, workers: usize) -> io::Result<Box<dyn Model>> {
+        Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "a {} model has no sharded representation to migrate \
+                 to {workers} worker(s)",
+                self.kind_name()
+            ),
+        ))
+    }
+
     /// An immutable serving snapshot of the current weights
     /// ([`crate::serve`]).
     fn snapshot(&self) -> ModelSnapshot;
@@ -250,6 +274,20 @@ impl Model for Sgd {
     fn kind_name(&self) -> &'static str {
         "sgd"
     }
+
+    fn reshard_to(&self, workers: usize) -> io::Result<Box<dyn Model>> {
+        // a single node is its own (only) shard
+        if workers == 1 {
+            return Ok(Box::new(self.clone()));
+        }
+        Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "an sgd model is a single node; it cannot migrate to \
+                 {workers} worker(s) (train a sharded topology instead)"
+            ),
+        ))
+    }
 }
 
 impl Model for Coordinator {
@@ -305,6 +343,16 @@ impl Model for Coordinator {
         } else {
             "tree-coordinator"
         }
+    }
+
+    fn workers(&self) -> usize {
+        self.plan().shards()
+    }
+
+    fn reshard_to(&self, workers: usize) -> io::Result<Box<dyn Model>> {
+        Coordinator::reshard(self, workers)
+            .map(|c| Box::new(c) as Box<dyn Model>)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, e))
     }
 
     fn install_publisher(&mut self, publisher: SnapshotPublisher) -> bool {

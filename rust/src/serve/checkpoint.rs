@@ -18,8 +18,9 @@
 //! Layout (all integers little-endian):
 //! ```text
 //! magic "POLZ" | u32 format version | u8 payload encoding
+//! shard plan (u8 kind: 0 hash / 1 range / 2 none, u32 shards, u64 dim)
 //! u64 config digest | u64 payload checksum (FNV-1a over
-//! encoding byte ‖ payload) | u64 payload length
+//! encoding byte ‖ plan bytes ‖ payload) | u64 payload length
 //! payload:
 //!   u8 kind (0 = sgd, 1 = central coordinator, 2 = tree coordinator)
 //!   u32 config-text length | config text (canonical `key = value`)
@@ -37,13 +38,22 @@
 //! non-zero stretches; the writer picks whichever encoding is smaller
 //! for the whole file, and zeros inside a run are kept verbatim so the
 //! round-trip stays bit-identical (a `-0.0` weight has non-zero bits
-//! and is always stored explicitly). Format version 1 files (no
-//! encoding byte, raw tables, checksum over the payload alone) are
-//! still readable.
+//! and is always stored explicitly). Format version 3 serializes the
+//! [`ShardPlan`] into the header (kind, shard count, dim), so tools —
+//! `pol checkpoint`, `pol reshard` — can read the routing without
+//! parsing the config text; the payload layout is unchanged from v2.
+//! Version 1 files (no encoding byte, raw tables, checksum over the
+//! payload alone) and version 2 files (no header plan) are still
+//! readable.
 //!
-//! The config digest is FNV-1a over (config text ‖ dim ‖ salt) — the
-//! serving process verifies it so a model is never served against a
-//! different hashing/sharding/topology setup than it was trained with.
+//! The config digest is FNV-1a over (config text ‖ dim ‖ salt), where
+//! the salt is the plan's signature — the serving process verifies it
+//! so a model is never served against a different
+//! hashing/sharding/topology setup than it was trained with. A salt
+//! that disagrees with the plan the recorded config derives is
+//! reported as a *plan* mismatch naming both sides (kind, shards,
+//! dim), so an operator can tell "wrong worker count" from "corrupt
+//! file".
 
 use std::io::{self, Read, Write};
 use std::path::{Path, PathBuf};
@@ -58,9 +68,10 @@ use crate::loss::Loss;
 use crate::lr::LrSchedule;
 use crate::model::Model;
 use crate::serve::snapshot::ModelSnapshot;
+use crate::sharding::{plan::WIRE_LEN as PLAN_WIRE_LEN, ShardPlan};
 
 pub const MAGIC: &[u8; 4] = b"POLZ";
-pub const FORMAT_VERSION: u32 = 2;
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Payload encodings (the byte after the format version).
 pub const ENC_RAW: u8 = 0;
@@ -105,6 +116,10 @@ pub struct CheckpointInfo {
     pub tables: u32,
     pub total_params: u64,
     pub config_text: String,
+    /// The shard plan recorded in the v3 header (`None` for plain-sgd
+    /// checkpoints and for v1/v2 files, which predate the header
+    /// plan).
+    pub plan: Option<ShardPlan>,
 }
 
 impl CheckpointInfo {
@@ -142,10 +157,56 @@ pub fn config_digest(cfg_text: &str, dim: u64, salt: u64) -> u64 {
     fnv1a64(&bytes)
 }
 
-/// Checksum covering the encoding byte and the payload, so a flipped
-/// encoding byte is caught even though the payload bytes are intact.
-fn payload_checksum(encoding: u8, payload: &[u8]) -> u64 {
-    fnv1a64_iter(std::iter::once(encoding).chain(payload.iter().copied()))
+/// Checksum covering the encoding byte, the header plan bytes (v3;
+/// empty for v2), and the payload — a flipped header byte is caught
+/// even though the payload bytes are intact.
+fn payload_checksum(encoding: u8, plan_wire: &[u8], payload: &[u8]) -> u64 {
+    fnv1a64_iter(
+        std::iter::once(encoding)
+            .chain(plan_wire.iter().copied())
+            .chain(payload.iter().copied()),
+    )
+}
+
+/// Header-plan kind byte for models without a sharded representation
+/// (plain sgd).
+const PLAN_NONE: u8 = 2;
+
+fn encode_plan(plan: Option<&ShardPlan>) -> [u8; PLAN_WIRE_LEN] {
+    match plan {
+        Some(p) => p.to_wire(),
+        None => {
+            let mut none = [0u8; PLAN_WIRE_LEN];
+            none[0] = PLAN_NONE;
+            none
+        }
+    }
+}
+
+fn decode_plan(bytes: &[u8; PLAN_WIRE_LEN]) -> io::Result<Option<ShardPlan>> {
+    if bytes[0] == PLAN_NONE && bytes[1..].iter().all(|&b| b == 0) {
+        return Ok(None);
+    }
+    ShardPlan::from_wire(bytes)
+        .map(Some)
+        .ok_or_else(|| bad("malformed shard plan in checkpoint header"))
+}
+
+/// Provenance error for load-time plan comparisons: a salt (plan
+/// signature) that disagrees with the plan the recorded config derives
+/// means a different worker count or sharding scheme — not corruption
+/// (the checksum already passed) — and the error says so, naming the
+/// expected plan's kind, shard count, and dim.
+fn plan_mismatch(expected: &ShardPlan, file_salt: u64) -> io::Error {
+    bad(format!(
+        "shard-plan signature mismatch: the recorded config derives {} \
+         (signature {:#018x}), but the checkpoint was written under \
+         signature {:#018x} — a different worker count or sharding \
+         scheme, not file corruption (the checksum passed)",
+        expected.describe(),
+        expected.signature(),
+        file_salt
+    ))
 }
 
 // ------------------------------------------------------------- writing
@@ -286,14 +347,19 @@ fn write_framed(
     cfg_text: &str,
     dim: u64,
     salt: u64,
+    plan: Option<&ShardPlan>,
     encoding: u8,
     payload: &[u8],
 ) -> io::Result<()> {
+    let plan_wire = encode_plan(plan);
     out.write_all(MAGIC)?;
     out.write_all(&FORMAT_VERSION.to_le_bytes())?;
     out.write_all(&[encoding])?;
+    out.write_all(&plan_wire)?;
     out.write_all(&config_digest(cfg_text, dim, salt).to_le_bytes())?;
-    out.write_all(&payload_checksum(encoding, payload).to_le_bytes())?;
+    out.write_all(
+        &payload_checksum(encoding, &plan_wire, payload).to_le_bytes(),
+    )?;
     out.write_all(&(payload.len() as u64).to_le_bytes())?;
     out.write_all(payload)
 }
@@ -324,14 +390,15 @@ pub fn write_sgd(s: &Sgd, out: &mut impl Write) -> io::Result<()> {
         s.steps(),
         &[(s.steps(), &s.w)],
     )?;
-    write_framed(out, &cfg_text, dim, 0, encoding, &payload)
+    write_framed(out, &cfg_text, dim, 0, None, encoding, &payload)
 }
 
 /// Serialize a trained [`Coordinator`] (centralized or tree).
 pub fn write_coordinator(c: &Coordinator, out: &mut impl Write) -> io::Result<()> {
     let cfg_text = c.cfg.to_cfg_string();
     let dim = c.dim() as u64;
-    let salt = c.sharder_signature();
+    let plan = c.plan();
+    let salt = plan.signature();
     let (encoding, payload) = match c.central_weights() {
         Some(w) => build_payload(
             KIND_CENTRAL,
@@ -357,7 +424,7 @@ pub fn write_coordinator(c: &Coordinator, out: &mut impl Write) -> io::Result<()
             )?
         }
     };
-    write_framed(out, &cfg_text, dim, salt, encoding, &payload)
+    write_framed(out, &cfg_text, dim, salt, Some(&plan), encoding, &payload)
 }
 
 /// Write a checkpoint atomically: serialize into `<path>.tmp`, fsync,
@@ -605,7 +672,10 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
     let format_version = u32::from_le_bytes(head[4..8].try_into().unwrap());
     // version 1: no encoding byte, raw tables, checksum over the payload
     // alone; version 2: encoding byte after the version, checksum over
-    // (encoding ‖ payload)
+    // (encoding ‖ payload); version 3: shard plan after the encoding
+    // byte, checksum over (encoding ‖ plan ‖ payload)
+    let mut header_plan: Option<ShardPlan> = None;
+    let mut plan_wire: Vec<u8> = Vec::new();
     let (encoding, digest, checksum, payload_len) = match format_version {
         1 => {
             let mut rest = [0u8; 24];
@@ -627,6 +697,21 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
                 u64::from_le_bytes(rest[17..25].try_into().unwrap()),
             )
         }
+        3 => {
+            let mut rest = [0u8; 25 + PLAN_WIRE_LEN];
+            inp.read_exact(&mut rest).map_err(|_| bad("truncated header"))?;
+            let wire: [u8; PLAN_WIRE_LEN] =
+                rest[1..1 + PLAN_WIRE_LEN].try_into().unwrap();
+            header_plan = decode_plan(&wire)?;
+            plan_wire = wire.to_vec();
+            let p = 1 + PLAN_WIRE_LEN;
+            (
+                rest[0],
+                u64::from_le_bytes(rest[p..p + 8].try_into().unwrap()),
+                u64::from_le_bytes(rest[p + 8..p + 16].try_into().unwrap()),
+                u64::from_le_bytes(rest[p + 16..p + 24].try_into().unwrap()),
+            )
+        }
         v => return Err(bad(format!("unsupported checkpoint version {v}"))),
     };
     if encoding > ENC_SPARSE {
@@ -646,7 +731,7 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
     let expect = if format_version == 1 {
         fnv1a64(&payload)
     } else {
-        payload_checksum(encoding, &payload)
+        payload_checksum(encoding, &plan_wire, &payload)
     };
     if expect != checksum {
         return Err(bad("payload checksum mismatch (corrupted checkpoint)"));
@@ -698,6 +783,7 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
             tables: ntables,
             total_params,
             config_text,
+            plan: header_plan,
         },
         tables,
     })
@@ -715,12 +801,42 @@ fn cfg_lookup<'a>(text: &'a str, key: &str) -> Option<&'a str> {
     })
 }
 
+/// Derive the shard plan from the recorded config + dim and hold it
+/// against the file's salt and (v3) header plan. Runs *before* the
+/// model is constructed, so a wrong-worker-count file fails with a
+/// provenance error naming both plans instead of a table-shape error.
+fn verify_plan(
+    info: &CheckpointInfo,
+    cfg: &RunConfig,
+) -> io::Result<ShardPlan> {
+    let derived = ShardPlan::for_topology(&cfg.topology, info.dim as usize);
+    if derived.signature() != info.salt {
+        return Err(plan_mismatch(&derived, info.salt));
+    }
+    if let Some(header) = info.plan {
+        if header != derived {
+            return Err(bad(format!(
+                "checkpoint header plan ({}) disagrees with the plan its \
+                 recorded config derives ({})",
+                header.describe(),
+                derived.describe()
+            )));
+        }
+    }
+    Ok(derived)
+}
+
 /// Deserialize a checkpoint from a reader.
 pub fn read(inp: &mut impl Read) -> io::Result<Checkpoint> {
     let raw = read_raw(inp)?;
     let info = &raw.info;
     match info.kind {
         KIND_SGD => {
+            if info.plan.is_some() {
+                return Err(bad(
+                    "sgd checkpoint must not carry a shard plan",
+                ));
+            }
             let loss = cfg_lookup(&info.config_text, "loss")
                 .and_then(Loss::parse)
                 .ok_or_else(|| bad("sgd checkpoint missing loss"))?;
@@ -736,6 +852,7 @@ pub fn read(inp: &mut impl Read) -> io::Result<Checkpoint> {
         }
         KIND_CENTRAL => {
             let cfg = parse_run_config(&info.config_text)?;
+            verify_plan(info, &cfg)?;
             let [(_, w)] = <[_; 1]>::try_from(raw.tables)
                 .map_err(|_| bad("central checkpoint must hold one table"))?;
             if w.len() as u64 != info.dim {
@@ -752,6 +869,7 @@ pub fn read(inp: &mut impl Read) -> io::Result<Checkpoint> {
         }
         KIND_TREE => {
             let cfg = parse_run_config(&info.config_text)?;
+            verify_plan(info, &cfg)?;
             let c = Coordinator::restore_tree(
                 cfg,
                 info.dim as usize,
@@ -759,9 +877,6 @@ pub fn read(inp: &mut impl Read) -> io::Result<Checkpoint> {
                 info.trained_instances,
             )
             .map_err(bad)?;
-            if c.sharder_signature() != info.salt {
-                return Err(bad("sharder signature mismatch"));
-            }
             Ok(Checkpoint::Coordinator(Box::new(c)))
         }
         k => Err(bad(format!("unknown checkpoint kind {k}"))),

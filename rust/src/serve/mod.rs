@@ -7,19 +7,23 @@
 //! several models at once — while training continues.
 //!
 //! * [`checkpoint`] — the versioned, self-describing `.polz` binary
-//!   format (magic + version + payload-encoding byte + config digest +
+//!   format (magic + version + payload-encoding byte + the
+//!   [`crate::sharding::ShardPlan`] in the v3 header + config digest +
 //!   whole-payload checksum + per-shard weight tables, with zero-run
 //!   compression for the mostly-zero tables online learners produce).
 //!   `save*` writes atomically (temp file + rename); round-trips are
-//!   bit-identical and warm-start training (step clocks preserved);
+//!   bit-identical and warm-start training (step clocks preserved) —
+//!   at the *same or a different* worker count (`pol reshard`,
+//!   `SessionBuilder::workers`: elastic re-sharding through
+//!   [`crate::sharding::ShardPlan::remap`]);
 //!   [`checkpoint::CheckpointSink`] writes checkpoints on a cadence in
 //!   the background; [`checkpoint::read_model`] is the **only** place
 //!   in the crate that branches on model kind — it turns bytes into
 //!   [`crate::model::Model`] trait objects.
 //! * [`snapshot`] — [`snapshot::ModelSnapshot`], the immutable
 //!   predictor the server swaps; a [`snapshot::SnapshotPredict`] trait
-//!   object (tree wiring + sharder identity + weights behind one
-//!   vtable) with an allocation-free predict path.
+//!   object (tree wiring + shard plan + weights behind one vtable)
+//!   with an allocation-free predict path.
 //! * [`publisher`] — [`publisher::SnapshotCell`], the atomically
 //!   swappable holder, plus [`publisher::SnapshotPublisher`], the
 //!   trainer hook that publishes a fresh snapshot every K trained

@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use crate::linalg::{sparse_dot, SparseFeat};
-use crate::sharding::feature::FeatureSharder;
+use crate::sharding::ShardPlan;
 use crate::topology::NodeGraph;
 
 /// Bounds-checked dot for *request* features: unlike the training hot
@@ -55,7 +55,7 @@ pub struct PredictScratch {
 /// training side and the serving side.
 pub(crate) fn tree_predict_with(
     graph: &NodeGraph,
-    sharder: &FeatureSharder,
+    plan: &ShardPlan,
     clip01: bool,
     bias: bool,
     x: &[SparseFeat],
@@ -68,7 +68,7 @@ pub(crate) fn tree_predict_with(
     if s.leaf_bufs.len() != graph.leaves {
         s.leaf_bufs = vec![Vec::new(); graph.leaves];
     }
-    sharder.split_features_into(x, &mut s.leaf_bufs);
+    plan.split_features_into(x, &mut s.leaf_bufs);
     for leaf in 0..graph.leaves {
         s.preds[leaf] = node_score(leaf, &s.leaf_bufs[leaf]);
     }
@@ -144,7 +144,9 @@ impl SnapshotPredict for CentralPredictor {
 #[derive(Clone, Debug)]
 pub struct TreePredictor {
     pub graph: NodeGraph,
-    pub sharder: FeatureSharder,
+    /// The routing the leaves were trained under — the same
+    /// [`ShardPlan`] the coordinator, pipeline, and codec hold.
+    pub plan: ShardPlan,
     /// Per-node weight tables, indexed by node id (leaves first).
     pub weights: Vec<Vec<f32>>,
     pub clip01: bool,
@@ -155,7 +157,7 @@ impl SnapshotPredict for TreePredictor {
     fn predict_with(&self, x: &[SparseFeat], s: &mut PredictScratch) -> f64 {
         tree_predict_with(
             &self.graph,
-            &self.sharder,
+            &self.plan,
             self.clip01,
             self.bias,
             x,
@@ -283,12 +285,12 @@ mod tests {
     fn tree_predicts_through_master() {
         // 2 leaves + master; master weights [1, 1, 0] (children + bias)
         let graph = Topology::TwoLayer { shards: 2 }.build();
-        let sharder = FeatureSharder::hash(2);
+        let plan = ShardPlan::hash(2, 4);
         // each leaf has a 4-slot table of ones: leaf pred = sum of its
         // shard's feature values
         let weights = vec![vec![1.0f32; 4], vec![1.0f32; 4], vec![1.0, 1.0, 0.0]];
         let snap = ModelSnapshot::tree(
-            TreePredictor { graph, sharder, weights, clip01: false, bias: true },
+            TreePredictor { graph, plan, weights, clip01: false, bias: true },
             5,
             0,
         );
@@ -312,7 +314,7 @@ mod tests {
         let tree = ModelSnapshot::tree(
             TreePredictor {
                 graph,
-                sharder: FeatureSharder::hash(2),
+                plan: ShardPlan::hash(2, 4),
                 weights: vec![vec![1.0; 4], vec![1.0; 4], vec![1.0, 1.0, 0.0]],
                 clip01: false,
                 bias: true,
@@ -328,7 +330,7 @@ mod tests {
     #[test]
     fn predict_with_reuses_scratch_consistently() {
         let graph = Topology::BinaryTree { leaves: 4 }.build();
-        let sharder = FeatureSharder::hash(4);
+        let plan = ShardPlan::hash(4, 8);
         let mut weights: Vec<Vec<f32>> = (0..graph.num_nodes())
             .map(|id| {
                 if graph.is_leaf(id) {
@@ -340,7 +342,7 @@ mod tests {
             .collect();
         weights[0][0] = -0.3;
         let snap = ModelSnapshot::tree(
-            TreePredictor { graph, sharder, weights, clip01: true, bias: true },
+            TreePredictor { graph, plan, weights, clip01: true, bias: true },
             0,
             0,
         );

@@ -1,8 +1,42 @@
-//! Data decomposition (§0.3, Figure 0.1): instance shards and feature
-//! shards.
+//! `pol::sharding` — data decomposition (§0.3, Figure 0.1), with one
+//! routing authority.
+//!
+//! The paper's design space is *feature sharding*: split every
+//! instance's features across n workers and combine their predictions
+//! (Fig 0.1 right). [`ShardPlan`] is the crate's single source of truth
+//! for that routing — assignment kind (hash or range), shard count,
+//! dimension, and a stable signature — and the *same* plan object flows
+//! through every layer:
+//!
+//! * ingest — [`crate::stream::Pipeline`] optionally shards on the
+//!   background parse thread,
+//! * training — the [`crate::coordinator::Coordinator`] forward sweep
+//!   and the §0.5.1 [`crate::coordinator::multicore`] learner threads,
+//! * durability — the `.polz` codec serializes the plan into the v3
+//!   header and verifies its signature on load,
+//! * serving — [`crate::serve::snapshot::TreePredictor`] splits request
+//!   features with the checkpointed plan.
+//!
+//! No consumer re-derives `shard_of` or branches on assignment kind;
+//! they hold a plan and ask it.
+//!
+//! ## Elastic worker counts
+//!
+//! [`ShardPlan::remap`] yields a [`ShardMigration`] that re-keys
+//! per-shard weight tables between shard counts — every (feature,
+//! weight) pair moves to its new owner bit-exactly, and `n→m→n` is the
+//! identity. On top of it, `Coordinator::reshard`,
+//! `SessionBuilder::workers` (warm starts migrate instead of erroring),
+//! `MulticoreTrainer::resume_source`, and the CLI's `pol reshard`
+//! make the paper's parallelism/delay tradeoff a *runtime* knob: train
+//! at 4 workers, resume at 8, serve at 2, from the same checkpoint.
+//!
+//! [`InstanceSharder`] is the Fig 0.1 *left* baseline the paper argues
+//! against for online learning — partition instances, average
+//! parameters — kept for the comparison experiments.
 
-pub mod feature;
 pub mod instance_shard;
+pub mod plan;
 
-pub use feature::FeatureSharder;
 pub use instance_shard::InstanceSharder;
+pub use plan::{ShardKind, ShardMigration, ShardPlan};

@@ -1,0 +1,613 @@
+//! [`ShardPlan`] — the one feature-routing authority.
+//!
+//! Every layer that needs to know "which shard owns feature i" — the
+//! ingest [`crate::stream::Pipeline`], the
+//! [`crate::coordinator::Coordinator`]'s forward sweep, the §0.5.1
+//! multicore learner threads, the `.polz` checkpoint codec, and the
+//! serving [`crate::serve::snapshot::TreePredictor`] — holds a
+//! `ShardPlan` and asks it. Nothing outside this module re-derives the
+//! routing function; the plan is the single object threaded through the
+//! whole stack, so training, checkpointing, and serving can never
+//! disagree about where a feature lives.
+//!
+//! A plan owns four things:
+//! * the **assignment kind** ([`ShardKind::Hash`] — balanced for
+//!   arbitrary index sets — or [`ShardKind::Range`] — contiguous
+//!   dense-block-friendly ranges, shard s owning `[s·⌈d/n⌉, …)`),
+//! * the **shard count** (the paper's worker count n),
+//! * the **dimension** (the hashed feature space the routing covers),
+//! * a stable **signature** folded into checkpoint digests, so a model
+//!   is never served or warm-started against a different routing than
+//!   it was trained with.
+//!
+//! ## Elastic re-sharding
+//!
+//! [`ShardPlan::remap`] produces a [`ShardMigration`] between the same
+//! routing at two shard counts. Migration re-keys per-shard weight
+//! tables feature by feature — each weight moves from its old owner to
+//! its new owner, bit-exactly — so a checkpoint trained at n workers
+//! warm-starts and serves at m workers:
+//!
+//! * every (feature, weight) pair is preserved exactly, for hash and
+//!   range assignment alike;
+//! * `remap(n→m→n)` is the identity on plan-consistent tables (the
+//!   moves are a bijection per feature);
+//! * a flat (worker-invariant) table is untouched — predictions are
+//!   bit-identical at any worker count, which is exactly the paper's
+//!   Fig 0.6 observation that SGD/minibatch/CG do not depend on n.
+//!
+//! The degree of parallelism becomes a runtime knob ("Slow Learners are
+//! Fast" treats it the same way), not a constructor constant.
+
+use crate::data::instance::Instance;
+use crate::linalg::SparseFeat;
+use crate::topology::Topology;
+
+/// How a [`ShardPlan`] maps feature indices to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    /// shard = mix(index) mod n — balanced for arbitrary index sets.
+    Hash,
+    /// shard = index / ⌈dim/n⌉ — contiguous ranges (dense-block
+    /// friendly).
+    Range,
+}
+
+impl ShardKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardKind::Hash => "hash",
+            ShardKind::Range => "range",
+        }
+    }
+}
+
+/// The routing function: assignment kind + shard count + dimension,
+/// with a stable signature. See the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    kind: ShardKind,
+    shards: usize,
+    dim: usize,
+}
+
+/// FNV-1a fold of one byte (the checkpoint hash, inlined so signatures
+/// never allocate).
+#[inline]
+const fn fold_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x100000001b3)
+}
+
+#[inline]
+fn fold_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = fold_byte(h, b);
+    }
+    h
+}
+
+/// Fold the decimal digits of `v` (most significant first) — exactly
+/// the bytes `format!("{v}")` would produce, without the heap `String`.
+#[inline]
+fn fold_decimal(h: u64, v: u64) -> u64 {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    let mut v = v;
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    fold_bytes(h, &buf[i..])
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Serialized plan size in checkpoint headers (kind + shards + dim).
+pub const WIRE_LEN: usize = 13;
+
+impl ShardPlan {
+    /// Hash assignment over `shards` shards of a `dim`-sized feature
+    /// space.
+    pub fn hash(shards: usize, dim: usize) -> ShardPlan {
+        let dim = dim.clamp(1, u32::MAX as usize);
+        assert!(shards >= 1, "a plan needs at least one shard");
+        ShardPlan { kind: ShardKind::Hash, shards, dim }
+    }
+
+    /// Contiguous-range assignment: shard s owns `[s·⌈dim/n⌉, …)`.
+    /// Feature indices are `u32`, so `dim` must fit in one.
+    pub fn range(shards: usize, dim: usize) -> ShardPlan {
+        assert!(
+            shards >= 1 && dim >= shards,
+            "range plans need dim >= shards >= 1"
+        );
+        assert!(
+            dim <= u32::MAX as usize,
+            "feature indices are u32; dim must fit"
+        );
+        ShardPlan { kind: ShardKind::Range, shards, dim }
+    }
+
+    /// The plan a [`Topology`] trains under: one hash shard per leaf
+    /// (the coordinator's historical routing, kept so existing
+    /// checkpoint signatures stay valid).
+    pub fn for_topology(topology: &Topology, dim: usize) -> ShardPlan {
+        ShardPlan::hash(topology.leaves(), dim)
+    }
+
+    pub fn kind(&self) -> ShardKind {
+        self.kind
+    }
+
+    /// Worker / shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Hashed feature-space size the routing covers.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Human-readable identity for error messages and reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} sharding over {} shard(s), dim {}",
+            self.kind.name(),
+            self.shards,
+            self.dim
+        )
+    }
+
+    /// Stable identity of the routing function, folded into checkpoint
+    /// config digests: a serving or warm-starting process must split
+    /// features exactly like the training process did. Computed by
+    /// folding the fields straight into the FNV state — no per-call
+    /// allocation — and pinned by unit test to the historical digests
+    /// (`"hash:{n}"` / `"range:{n}:{dim}"`), so existing checkpoints
+    /// stay loadable. Hash signatures deliberately exclude the dim:
+    /// hash routing does not depend on it, and v1/v2 checkpoints never
+    /// recorded it.
+    pub fn signature(&self) -> u64 {
+        match self.kind {
+            ShardKind::Hash => {
+                fold_decimal(fold_bytes(FNV_OFFSET, b"hash:"), self.shards as u64)
+            }
+            ShardKind::Range => {
+                let h = fold_bytes(FNV_OFFSET, b"range:");
+                let h = fold_decimal(h, self.shards as u64);
+                let h = fold_byte(h, b':');
+                fold_decimal(h, self.dim as u64)
+            }
+        }
+    }
+
+    /// Which shard owns feature index `i`.
+    #[inline]
+    pub fn shard_of(&self, i: u32) -> usize {
+        match self.kind {
+            ShardKind::Hash => {
+                // avalanche the index so contiguous hashed features
+                // spread
+                let mut h = i as u64;
+                h ^= h >> 16;
+                h = h.wrapping_mul(0x45d9f3b);
+                h ^= h >> 16;
+                (h % self.shards as u64) as usize
+            }
+            ShardKind::Range => {
+                let per = (self.dim as u32).div_ceil(self.shards as u32);
+                ((i / per) as usize).min(self.shards - 1)
+            }
+        }
+    }
+
+    /// Split one instance into `shards` projected instances (labels and
+    /// tags replicated — Fig 0.4 step (b)).
+    pub fn split(&self, inst: &Instance) -> Vec<Instance> {
+        let mut parts: Vec<Vec<SparseFeat>> =
+            vec![
+                Vec::with_capacity(inst.features.len() / self.shards + 1);
+                self.shards
+            ];
+        for &(i, v) in &inst.features {
+            parts[self.shard_of(i)].push((i, v));
+        }
+        parts
+            .into_iter()
+            .map(|features| Instance {
+                label: inst.label,
+                weight: inst.weight,
+                features,
+                tag: inst.tag,
+            })
+            .collect()
+    }
+
+    /// Split into preallocated buffers (hot path; avoids the per-call
+    /// Vec-of-Vec allocation).
+    pub fn split_into(&self, inst: &Instance, out: &mut [Vec<SparseFeat>]) {
+        self.split_features_into(&inst.features, out);
+    }
+
+    /// Slice-based variant of [`Self::split_into`] — the coordinator's
+    /// per-instance path, which must not clone or wrap the features.
+    pub fn split_features_into(
+        &self,
+        features: &[SparseFeat],
+        out: &mut [Vec<SparseFeat>],
+    ) {
+        assert_eq!(out.len(), self.shards);
+        for buf in out.iter_mut() {
+            buf.clear();
+        }
+        for &(i, v) in features {
+            out[self.shard_of(i)].push((i, v));
+        }
+    }
+
+    /// Distribute a flat `dim`-length weight table into per-shard
+    /// tables: each shard's table holds exactly the weights of the
+    /// indices it owns, zero elsewhere. The multicore warm-start path:
+    /// seeding k learner threads from a merged table.
+    pub fn split_table(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(flat.len(), self.dim, "table length must match plan dim");
+        let mut parts = vec![vec![0.0f32; self.dim]; self.shards];
+        for (i, &w) in flat.iter().enumerate() {
+            if w.to_bits() != 0 {
+                parts[self.shard_of(i as u32)][i] = w;
+            }
+        }
+        parts
+    }
+
+    /// Reassemble a flat table from per-shard tables by owner
+    /// selection. Bit-exact (including `-0.0`), and equal to the
+    /// element-wise sum whenever the tables are plan-consistent (only
+    /// owners hold non-zero entries).
+    pub fn merge_tables<T: AsRef<[f32]>>(&self, parts: &[T]) -> Vec<f32> {
+        assert_eq!(parts.len(), self.shards, "one table per shard");
+        let mut flat = vec![0.0f32; self.dim];
+        for (i, slot) in flat.iter_mut().enumerate() {
+            *slot = parts[self.shard_of(i as u32)].as_ref()[i];
+        }
+        flat
+    }
+
+    /// Whether per-shard tables respect this plan's ownership: every
+    /// non-zero entry sits in the table of the shard that owns its
+    /// index. Migration is lossless exactly on plan-consistent tables.
+    pub fn consistent<T: AsRef<[f32]>>(&self, parts: &[T]) -> bool {
+        if parts.len() != self.shards {
+            return false;
+        }
+        parts.iter().enumerate().all(|(s, t)| {
+            let t = t.as_ref();
+            t.len() == self.dim
+                && t.iter().enumerate().all(|(i, w)| {
+                    w.to_bits() == 0 || self.shard_of(i as u32) == s
+                })
+        })
+    }
+
+    /// The migration from this plan to the same routing kind (and dim)
+    /// at `new_shards` shards — the elastic worker-count knob.
+    pub fn remap(&self, new_shards: usize) -> ShardMigration {
+        assert!(new_shards >= 1, "a plan needs at least one shard");
+        let to = match self.kind {
+            ShardKind::Hash => ShardPlan::hash(new_shards, self.dim),
+            ShardKind::Range => ShardPlan::range(new_shards, self.dim),
+        };
+        ShardMigration { from: *self, to }
+    }
+
+    /// Fixed-size header encoding for the `.polz` v3 framing
+    /// (kind byte, u32 shard count, u64 dim — little-endian).
+    pub fn to_wire(&self) -> [u8; WIRE_LEN] {
+        let mut out = [0u8; WIRE_LEN];
+        out[0] = match self.kind {
+            ShardKind::Hash => 0,
+            ShardKind::Range => 1,
+        };
+        out[1..5].copy_from_slice(&(self.shards as u32).to_le_bytes());
+        out[5..13].copy_from_slice(&(self.dim as u64).to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`Self::to_wire`]. `None` for an unknown kind byte or
+    /// field values no constructor would accept.
+    pub fn from_wire(bytes: &[u8; WIRE_LEN]) -> Option<ShardPlan> {
+        let shards = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+        let dim = u64::from_le_bytes(bytes[5..13].try_into().unwrap());
+        // feature indices are u32: a dim that cannot fit would make the
+        // range arithmetic divide by a truncated zero
+        if shards == 0 || dim == 0 || dim > u32::MAX as u64 {
+            return None;
+        }
+        let dim = dim as usize;
+        match bytes[0] {
+            0 => Some(ShardPlan::hash(shards, dim)),
+            1 if dim >= shards => Some(ShardPlan::range(shards, dim)),
+            _ => None,
+        }
+    }
+}
+
+/// An exact re-keying of per-shard weight tables between two shard
+/// counts of the same routing (see [`ShardPlan::remap`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMigration {
+    from: ShardPlan,
+    to: ShardPlan,
+}
+
+impl ShardMigration {
+    pub fn from_plan(&self) -> ShardPlan {
+        self.from
+    }
+
+    pub fn to_plan(&self) -> ShardPlan {
+        self.to
+    }
+
+    /// A no-op migration (same shard count both sides).
+    pub fn is_identity(&self) -> bool {
+        self.from == self.to
+    }
+
+    /// Re-key per-shard full-width weight tables: for every feature
+    /// index, the weight held by its old owner moves to its new owner,
+    /// bit-exactly (including `-0.0`). Entries outside a shard's
+    /// ownership are structurally zero in any plan-consistent model and
+    /// are ignored. `remap(n→m→n)` composed through this method is the
+    /// identity.
+    pub fn migrate_tables<T: AsRef<[f32]>>(&self, old: &[T]) -> Vec<Vec<f32>> {
+        assert_eq!(
+            old.len(),
+            self.from.shards,
+            "one table per source shard"
+        );
+        let dim = self.from.dim;
+        for t in old {
+            assert_eq!(t.as_ref().len(), dim, "table length must match dim");
+        }
+        let mut new = vec![vec![0.0f32; dim]; self.to.shards];
+        for i in 0..dim {
+            let w = old[self.from.shard_of(i as u32)].as_ref()[i];
+            if w.to_bits() != 0 {
+                new[self.to.shard_of(i as u32)][i] = w;
+            }
+        }
+        new
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::fnv1a64;
+
+    fn inst(n: u32) -> Instance {
+        Instance::new(1.0, (0..n).map(|i| (i * 7 + 3, 1.0)).collect())
+    }
+
+    #[test]
+    fn split_partitions_features() {
+        let s = ShardPlan::hash(4, 1024);
+        let i = inst(100);
+        let parts = s.split(&i);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.features.len()).sum();
+        assert_eq!(total, 100);
+        // disjointness: every feature appears in exactly the shard that
+        // owns it
+        for (sidx, p) in parts.iter().enumerate() {
+            for &(fi, _) in &p.features {
+                assert_eq!(s.shard_of(fi), sidx);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_replicated() {
+        let s = ShardPlan::hash(3, 1024);
+        for p in s.split(&inst(10)) {
+            assert_eq!(p.label, 1.0);
+        }
+    }
+
+    #[test]
+    fn hash_assign_balanced() {
+        let s = ShardPlan::hash(8, 80_000);
+        let mut counts = vec![0usize; 8];
+        for i in 0..80_000u32 {
+            counts[s.shard_of(i)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 1_000.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_assign_contiguous() {
+        let s = ShardPlan::range(4, 100);
+        assert_eq!(s.shard_of(0), 0);
+        assert_eq!(s.shard_of(24), 0);
+        assert_eq!(s.shard_of(25), 1);
+        assert_eq!(s.shard_of(99), 3);
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let s = ShardPlan::hash(1, 1024);
+        let i = inst(10);
+        let parts = s.split(&i);
+        assert_eq!(parts[0].features, i.features);
+    }
+
+    #[test]
+    fn split_into_matches_split() {
+        let s = ShardPlan::hash(4, 1024);
+        let i = inst(50);
+        let parts = s.split(&i);
+        let mut bufs: Vec<Vec<SparseFeat>> = vec![Vec::new(); 4];
+        s.split_into(&i, &mut bufs);
+        for (p, b) in parts.iter().zip(&bufs) {
+            assert_eq!(&p.features, b);
+        }
+    }
+
+    #[test]
+    fn signature_matches_historical_string_digest() {
+        // the signature must stay byte-compatible with the original
+        // format!-based implementation: checkpoints written before
+        // ShardPlan existed must keep loading
+        for shards in [1usize, 2, 3, 7, 8, 64] {
+            let plan = ShardPlan::hash(shards, 4096);
+            let tag = format!("hash:{shards}");
+            assert_eq!(plan.signature(), fnv1a64(tag.as_bytes()), "{tag}");
+        }
+        for (shards, dim) in [(1usize, 32usize), (4, 4096), (8, 65_536)] {
+            let plan = ShardPlan::range(shards, dim);
+            let tag = format!("range:{shards}:{dim}");
+            assert_eq!(plan.signature(), fnv1a64(tag.as_bytes()), "{tag}");
+        }
+    }
+
+    #[test]
+    fn signature_pinned_values() {
+        // literal digests, so any change to the fold (or to fnv1a64
+        // itself) that would orphan existing checkpoints fails loudly
+        assert_eq!(ShardPlan::hash(1, 999).signature(), 0x3da8d2e701217960);
+        assert_eq!(ShardPlan::hash(2, 1).signature(), 0x3da8d5e701217e79);
+        assert_eq!(ShardPlan::hash(4, 4096).signature(), 0x3da8d7e7012181df);
+        assert_eq!(ShardPlan::hash(8, 123).signature(), 0x3da8dbe7012188ab);
+        assert_eq!(ShardPlan::hash(16, 7).signature(), 0xe757b486ebe12d22);
+        assert_eq!(
+            ShardPlan::range(4, 4096).signature(),
+            0x2f1309f7693fcef9
+        );
+        assert_eq!(
+            ShardPlan::range(8, 65_536).signature(),
+            0xf2e790773c5490eb
+        );
+        assert_eq!(ShardPlan::range(1, 32).signature(), 0xd1899771c4bd96a6);
+    }
+
+    #[test]
+    fn hash_signature_ignores_dim() {
+        assert_eq!(
+            ShardPlan::hash(4, 16).signature(),
+            ShardPlan::hash(4, 1 << 20).signature()
+        );
+        assert_ne!(
+            ShardPlan::range(4, 16).signature(),
+            ShardPlan::range(4, 32).signature()
+        );
+    }
+
+    /// Plan-consistent tables with distinctive bit patterns (including
+    /// a `-0.0`).
+    fn owned_tables(plan: &ShardPlan) -> Vec<Vec<f32>> {
+        let mut t = vec![vec![0.0f32; plan.dim()]; plan.shards()];
+        for i in 0..plan.dim() {
+            let w = match i % 5 {
+                0 => 0.0,
+                1 => -0.0,
+                _ => (i as f32 + 0.5) * if i % 2 == 0 { -1.0 } else { 1.0 },
+            };
+            if w.to_bits() != 0 {
+                t[plan.shard_of(i as u32)][i] = w;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn migrate_preserves_every_feature_weight_pair() {
+        for plan in [ShardPlan::hash(5, 257), ShardPlan::range(5, 257)] {
+            let old = owned_tables(&plan);
+            let mig = plan.remap(3);
+            let new = mig.migrate_tables(&old);
+            assert!(mig.to_plan().consistent(&new));
+            for i in 0..plan.dim() {
+                let a = old[plan.shard_of(i as u32)][i];
+                let b = new[mig.to_plan().shard_of(i as u32)][i];
+                assert_eq!(a.to_bits(), b.to_bits(), "feature {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn remap_round_trip_is_identity() {
+        for kind in [ShardKind::Hash, ShardKind::Range] {
+            for (n, m) in [(1usize, 4usize), (4, 1), (3, 7), (8, 2), (5, 5)] {
+                let plan = match kind {
+                    ShardKind::Hash => ShardPlan::hash(n, 211),
+                    ShardKind::Range => ShardPlan::range(n, 211),
+                };
+                let old = owned_tables(&plan);
+                let there = plan.remap(m).migrate_tables(&old);
+                let back =
+                    plan.remap(m).to_plan().remap(n).migrate_tables(&there);
+                for (a, b) in old.iter().zip(&back) {
+                    let ab: Vec<u32> = a.iter().map(|w| w.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|w| w.to_bits()).collect();
+                    assert_eq!(ab, bb, "{kind:?} {n}->{m}->{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_and_merge_round_trip_bit_exact() {
+        let plan = ShardPlan::hash(4, 100);
+        let flat: Vec<f32> = (0..100)
+            .map(|i| match i % 4 {
+                0 => 0.0,
+                1 => -0.0,
+                _ => i as f32 - 50.5,
+            })
+            .collect();
+        let parts = plan.split_table(&flat);
+        assert!(plan.consistent(&parts));
+        let back = plan.merge_tables(&parts);
+        for (a, b) in flat.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        for plan in [
+            ShardPlan::hash(1, 1),
+            ShardPlan::hash(64, 1 << 20),
+            ShardPlan::range(8, 4096),
+        ] {
+            assert_eq!(ShardPlan::from_wire(&plan.to_wire()), Some(plan));
+        }
+        assert_eq!(ShardPlan::from_wire(&[0xFF; WIRE_LEN]), None);
+        assert_eq!(ShardPlan::from_wire(&[0u8; WIRE_LEN]), None);
+        // a dim that cannot fit a u32 feature index is rejected — it
+        // would truncate to 0 in the range arithmetic and divide by
+        // zero on the first shard_of
+        let mut too_big = ShardPlan::range(4, 4096).to_wire();
+        too_big[5..13].copy_from_slice(&(1u64 << 32).to_le_bytes());
+        assert_eq!(ShardPlan::from_wire(&too_big), None);
+    }
+
+    #[test]
+    fn consistency_detects_misplaced_weights() {
+        let plan = ShardPlan::hash(3, 30);
+        let mut t = owned_tables(&plan);
+        assert!(plan.consistent(&t));
+        // drop a weight in a non-owner table
+        let i = (0..30u32).find(|&i| plan.shard_of(i) != 0).unwrap();
+        t[0][i as usize] = 9.0;
+        assert!(!plan.consistent(&t));
+    }
+}

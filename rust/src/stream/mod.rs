@@ -55,7 +55,7 @@ use std::io;
 use crate::data::instance::Instance;
 use crate::data::Dataset;
 use crate::linalg::SparseFeat;
-use crate::sharding::feature::FeatureSharder;
+use crate::sharding::ShardPlan;
 
 /// A resettable, fallible stream of instances — the crate's one data
 /// ingestion surface.
@@ -186,7 +186,7 @@ impl InstanceBatch {
         &mut self,
         source: &mut dyn InstanceSource,
         max: usize,
-        shard: Option<&FeatureSharder>,
+        shard: Option<&ShardPlan>,
         start: u64,
     ) -> (usize, Option<io::Error>) {
         self.start = start;
@@ -206,7 +206,7 @@ impl InstanceBatch {
             }
         }
         if let Some(sh) = shard {
-            let k = sh.shards;
+            let k = sh.shards();
             if self.shards.len() < self.len {
                 self.shards.resize_with(self.len, Vec::new);
             }
@@ -310,9 +310,9 @@ mod tests {
     fn batch_fill_reuses_capacity_and_shards() {
         let ds = small_ds();
         let mut src = DatasetSource::new(&ds);
-        let sharder = FeatureSharder::hash(3);
+        let plan = ShardPlan::hash(3, ds.dim);
         let mut batch = InstanceBatch::new();
-        let (n, err) = batch.fill(&mut src, 64, Some(&sharder), 0);
+        let (n, err) = batch.fill(&mut src, 64, Some(&plan), 0);
         assert!(err.is_none());
         assert_eq!(n, 64);
         assert_eq!(batch.len(), 64);
@@ -322,7 +322,7 @@ mod tests {
                 batch.shards(i).iter().map(|s| s.len()).sum();
             assert_eq!(total, batch.get(i).features.len());
         }
-        let (n2, err2) = batch.fill(&mut src, 64, Some(&sharder), 64);
+        let (n2, err2) = batch.fill(&mut src, 64, Some(&plan), 64);
         assert!(err2.is_none());
         assert_eq!(n2, 64);
         assert_eq!(batch.get(0).tag, ds.instances[64].tag);

@@ -16,7 +16,7 @@ use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 
 use super::{InstanceBatch, InstanceSource};
-use crate::sharding::feature::FeatureSharder;
+use crate::sharding::ShardPlan;
 
 /// Configuration for a streaming run: batch granularity, the batch-pool
 /// bound (the pipeline's entire instance-memory budget), pass count,
@@ -32,9 +32,10 @@ pub struct Pipeline {
     /// before every pass). Honoured exactly: 0 streams nothing, like
     /// `Dataset::passes(0)`.
     pub passes: usize,
-    /// Split every instance's features at ingest (the multicore path:
-    /// sharding happens on the parsing thread, off the learners).
-    pub shard: Option<FeatureSharder>,
+    /// Split every instance's features at ingest with a [`ShardPlan`]
+    /// (the multicore path: sharding happens on the parsing thread, off
+    /// the learners).
+    pub shard: Option<ShardPlan>,
 }
 
 impl Default for Pipeline {

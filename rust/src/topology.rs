@@ -29,6 +29,27 @@ impl Topology {
         }
     }
 
+    /// The same topology kind resized to `leaves` workers (k-ary keeps
+    /// its fan-in). This is the one place worker-count resizing matches
+    /// on topology kind — the CLI, the session builder, and elastic
+    /// re-sharding all call it instead of branching themselves.
+    pub fn with_leaves(&self, leaves: usize) -> Topology {
+        let leaves = leaves.max(1);
+        match *self {
+            Topology::TwoLayer { .. } => Topology::TwoLayer { shards: leaves },
+            Topology::BinaryTree { .. } => Topology::BinaryTree { leaves },
+            Topology::KAry { fanin, .. } => Topology::KAry { leaves, fanin },
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Topology::TwoLayer { .. } => "two-layer",
+            Topology::BinaryTree { .. } => "binary-tree",
+            Topology::KAry { .. } => "kary",
+        }
+    }
+
     pub fn build(&self) -> NodeGraph {
         match *self {
             Topology::TwoLayer { shards } => NodeGraph::karyfrom(shards, shards),
@@ -192,6 +213,27 @@ mod tests {
         assert_eq!(g4.height(), 2);
         let g2 = Topology::KAry { leaves: 16, fanin: 2 }.build();
         assert_eq!(g2.height(), 4);
+    }
+
+    #[test]
+    fn with_leaves_keeps_kind_and_fanin() {
+        assert_eq!(
+            Topology::TwoLayer { shards: 4 }.with_leaves(9),
+            Topology::TwoLayer { shards: 9 }
+        );
+        assert_eq!(
+            Topology::BinaryTree { leaves: 8 }.with_leaves(3),
+            Topology::BinaryTree { leaves: 3 }
+        );
+        assert_eq!(
+            Topology::KAry { leaves: 16, fanin: 4 }.with_leaves(8),
+            Topology::KAry { leaves: 8, fanin: 4 }
+        );
+        // a zero request clamps to the minimum viable worker count
+        assert_eq!(
+            Topology::TwoLayer { shards: 4 }.with_leaves(0),
+            Topology::TwoLayer { shards: 1 }
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use pol::data::Dataset;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
 use pol::rng::Rng;
-use pol::sharding::feature::FeatureSharder;
+use pol::sharding::ShardPlan;
 use pol::topology::Topology;
 
 /// Run `n` random cases of a property, reporting the failing seed.
@@ -63,7 +63,7 @@ fn random_rule(rng: &mut Rng) -> UpdateRule {
 fn prop_feature_sharding_is_a_partition() {
     cases(50, |rng| {
         let shards = 1 + rng.below(15) as usize;
-        let sharder = FeatureSharder::hash(shards);
+        let plan = ShardPlan::hash(shards, 1 << 20);
         let nnz = rng.below(200) as usize;
         let inst = Instance::new(
             1.0,
@@ -71,13 +71,13 @@ fn prop_feature_sharding_is_a_partition() {
                 .map(|_| (rng.below(1 << 20) as u32, rng.normal() as f32))
                 .collect(),
         );
-        let parts = sharder.split(&inst);
+        let parts = plan.split(&inst);
         // every feature appears exactly once, in its owning shard
         let total: usize = parts.iter().map(|p| p.features.len()).sum();
         assert_eq!(total, inst.features.len());
         for (sidx, p) in parts.iter().enumerate() {
             for &(i, _) in &p.features {
-                assert_eq!(sharder.shard_of(i), sidx);
+                assert_eq!(plan.shard_of(i), sidx);
             }
         }
     });
@@ -88,7 +88,7 @@ fn prop_shard_of_stable_under_shard_count() {
     // the same index always maps to the same shard for a fixed count
     cases(20, |rng| {
         for shards in [2usize, 3, 8] {
-            let s = FeatureSharder::hash(shards);
+            let s = ShardPlan::hash(shards, 1 << 24);
             let i = rng.below(1 << 24) as u32;
             assert_eq!(s.shard_of(i), s.shard_of(i));
             assert!(s.shard_of(i) < shards);

@@ -1,0 +1,444 @@
+//! Elastic re-sharding, end to end: the [`ShardPlan`] migration
+//! guarantees at the coordinator, codec, builder, and serving layers.
+//!
+//! What is asserted (and what is mathematically possible):
+//! * centralized (worker-invariant) models predict **bit-identically**
+//!   at any worker count, and their checkpoints round-trip n→m→n
+//!   **byte-identically** — including a v2-era file;
+//! * tree models preserve **every (feature, weight) pair** across
+//!   migration (the leaf layer is n→m→n-identical bit for bit), and
+//!   one migration canonicalizes the combiner: further re-shards
+//!   round-trip the *entire* checkpoint byte-identically;
+//! * `reshard(n→n)` is an exact deep copy (bit-identical predictions);
+//! * a salt that disagrees with the plan the config derives fails with
+//!   a provenance error naming both plans, not a bare digest error.
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::model::{Model, Session};
+use pol::serve::checkpoint;
+use pol::sharding::ShardPlan;
+use pol::topology::Topology;
+
+fn small_ds() -> Dataset {
+    RcvLikeGen::new(SynthConfig {
+        instances: 900,
+        features: 300,
+        density: 12,
+        hash_bits: 10,
+        ..Default::default()
+    })
+    .generate()
+}
+
+fn cfg(rule: UpdateRule, topology: Topology) -> RunConfig {
+    RunConfig {
+        topology,
+        rule,
+        loss: Loss::Logistic,
+        lr: LrSchedule::inv_sqrt(2.0, 1.0),
+        master_lr: None,
+        tau: 32,
+        clip01: false,
+        bias: true,
+        passes: 1,
+        seed: 1,
+    }
+}
+
+fn tree_rules() -> [UpdateRule; 4] {
+    [
+        UpdateRule::Local,
+        UpdateRule::DelayedGlobal,
+        UpdateRule::Corrective,
+        UpdateRule::Backprop { multiplier: 2.0 },
+    ]
+}
+
+fn topologies() -> [Topology; 3] {
+    [
+        Topology::TwoLayer { shards: 4 },
+        Topology::BinaryTree { leaves: 4 },
+        Topology::KAry { leaves: 6, fanin: 3 },
+    ]
+}
+
+/// The per-leaf weight tables of a tree coordinator.
+fn leaf_tables(c: &Coordinator) -> Vec<&[f32]> {
+    c.nodes()[..c.graph().leaves]
+        .iter()
+        .map(|n| n.weights())
+        .collect()
+}
+
+#[test]
+fn tree_reshard_preserves_every_feature_weight_pair() {
+    let ds = small_ds();
+    for rule in tree_rules() {
+        for topology in topologies() {
+            let mut a = Coordinator::new(cfg(rule, topology), ds.dim);
+            a.train(&ds);
+            let n = a.plan().shards();
+            for m in [1usize, 2, 9] {
+                let b = a.reshard(m).expect("reshard");
+                assert_eq!(b.plan().shards(), m);
+                assert_eq!(b.trained_instances(), a.trained_instances());
+                let old = leaf_tables(&a);
+                let new = leaf_tables(&b);
+                assert!(b.plan().consistent(&new));
+                for i in 0..ds.dim {
+                    let from = a.plan().shard_of(i as u32);
+                    let to = b.plan().shard_of(i as u32);
+                    assert_eq!(
+                        old[from][i].to_bits(),
+                        new[to][i].to_bits(),
+                        "{rule:?} {topology:?} {n}->{m} feature {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tree_reshard_round_trip_restores_the_leaf_layer() {
+    let ds = small_ds();
+    for rule in tree_rules() {
+        for topology in topologies() {
+            let mut a = Coordinator::new(cfg(rule, topology), ds.dim);
+            a.train(&ds);
+            let n = a.plan().shards();
+            let c = a
+                .reshard(3)
+                .expect("n->m")
+                .reshard(n)
+                .expect("m->n");
+            for (la, lc) in leaf_tables(&a).iter().zip(leaf_tables(&c)) {
+                let ab: Vec<u32> = la.iter().map(|w| w.to_bits()).collect();
+                let cb: Vec<u32> = lc.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(ab, cb, "{rule:?} {topology:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn reshard_to_same_count_is_bit_identical() {
+    let ds = small_ds();
+    for rule in tree_rules() {
+        let mut a = Coordinator::new(
+            cfg(rule, Topology::TwoLayer { shards: 4 }),
+            ds.dim,
+        );
+        a.train(&ds);
+        let b = a.reshard(4).expect("identity reshard");
+        for inst in ds.iter().take(50) {
+            assert_eq!(
+                a.predict(&inst.features).to_bits(),
+                b.predict(&inst.features).to_bits(),
+                "{rule:?}"
+            );
+        }
+        for (na, nb) in a.nodes().iter().zip(b.nodes()) {
+            assert_eq!(na.weights(), nb.weights());
+            assert_eq!(na.steps(), nb.steps());
+        }
+    }
+}
+
+#[test]
+fn one_migration_canonicalizes_the_combiner() {
+    // after one reshard the whole checkpoint — combiner included —
+    // round-trips byte-identically through further re-shards
+    let ds = small_ds();
+    for topology in topologies() {
+        let mut a = Coordinator::new(
+            cfg(UpdateRule::Backprop { multiplier: 1.0 }, topology),
+            ds.dim,
+        );
+        a.train(&ds);
+        let n = a.plan().shards();
+        let b = a.reshard(7).expect("n->m");
+        let d = b
+            .reshard(n)
+            .expect("m->n")
+            .reshard(7)
+            .expect("n->m again");
+        let (mut bytes_b, mut bytes_d) = (Vec::new(), Vec::new());
+        checkpoint::write_coordinator(&b, &mut bytes_b).unwrap();
+        checkpoint::write_coordinator(&d, &mut bytes_d).unwrap();
+        assert_eq!(bytes_b, bytes_d, "{topology:?}");
+    }
+}
+
+#[test]
+fn central_reshard_predictions_bit_identical_any_worker_count() {
+    let ds = small_ds();
+    for rule in [
+        UpdateRule::Sgd,
+        UpdateRule::Minibatch { batch: 64 },
+        UpdateRule::Cg { batch: 128 },
+    ] {
+        for topology in topologies() {
+            let mut a = Coordinator::new(cfg(rule, topology), ds.dim);
+            a.train(&ds);
+            for m in [1usize, 3, 16] {
+                let b = a.reshard(m).expect("central reshard");
+                assert_eq!(b.plan().shards(), m);
+                for inst in ds.iter().take(50) {
+                    assert_eq!(
+                        a.predict(&inst.features).to_bits(),
+                        b.predict(&inst.features).to_bits(),
+                        "{rule:?} {topology:?} m={m}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn central_checkpoint_round_trip_is_byte_identical() {
+    let ds = small_ds();
+    let topology = Topology::TwoLayer { shards: 4 };
+    let rule = UpdateRule::Minibatch { batch: 32 };
+    let mut a = Coordinator::new(cfg(rule, topology), ds.dim);
+    a.train(&ds);
+    let mut original = Vec::new();
+    checkpoint::write_coordinator(&a, &mut original).unwrap();
+    let back = a
+        .reshard(9)
+        .expect("4->9")
+        .reshard(4)
+        .expect("9->4");
+    let mut round = Vec::new();
+    checkpoint::write_coordinator(&back, &mut round).unwrap();
+    assert_eq!(original, round, "n->m->n must restore the exact file");
+}
+
+// ------------------------------------------------- codec header layout
+
+/// v3 header field offsets (see `serve::checkpoint` module docs).
+const OFF_ENC: usize = 8;
+const OFF_PLAN: usize = 9;
+const OFF_DIGEST: usize = 22;
+const OFF_CHECKSUM: usize = 30;
+const OFF_LEN: usize = 38;
+const OFF_PAYLOAD: usize = 46;
+
+/// Re-frame a v3 checkpoint as the v2 layout (no header plan, checksum
+/// over encoding ‖ payload) — the files every pre-plan deployment
+/// still holds.
+fn reframe_as_v2(v3: &[u8]) -> Vec<u8> {
+    let enc = v3[OFF_ENC];
+    let payload = &v3[OFF_PAYLOAD..];
+    let mut out = Vec::new();
+    out.extend_from_slice(b"POLZ");
+    out.extend_from_slice(&2u32.to_le_bytes());
+    out.push(enc);
+    out.extend_from_slice(&v3[OFF_DIGEST..OFF_CHECKSUM]);
+    let checksum = pol::hashing::fnv1a64_iter(
+        std::iter::once(enc).chain(payload.iter().copied()),
+    );
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn v2_files_still_read_and_reshard_byte_identically() {
+    let ds = small_ds();
+    let mut a = Coordinator::new(
+        cfg(UpdateRule::Sgd, Topology::TwoLayer { shards: 4 }),
+        ds.dim,
+    );
+    a.train(&ds);
+    let mut v3 = Vec::new();
+    checkpoint::write_coordinator(&a, &mut v3).unwrap();
+    let v2 = reframe_as_v2(&v3);
+    let loaded = pol::model::read(&mut v2.as_slice()).expect("v2 loads");
+    assert_eq!(loaded.workers(), 4);
+    for inst in ds.iter().take(30) {
+        assert_eq!(
+            loaded.predict(&inst.features).to_bits(),
+            a.predict(&inst.features).to_bits()
+        );
+    }
+    // the acceptance round trip: a v2 file trained at n workers,
+    // migrated n->m->n, is byte-identical to the original *payload*
+    let round = loaded
+        .reshard_to(9)
+        .expect("4->9")
+        .reshard_to(4)
+        .expect("9->4");
+    let mut out = Vec::new();
+    round.write(&mut out).unwrap();
+    assert_eq!(
+        &out[OFF_PAYLOAD..],
+        &v2[33..],
+        "payload must survive v2 -> reshard -> reshard -> v3 unchanged"
+    );
+}
+
+#[test]
+fn salt_mismatch_names_both_plans_not_a_digest_error() {
+    let ds = small_ds();
+    let mut a = Coordinator::new(
+        cfg(UpdateRule::Local, Topology::TwoLayer { shards: 4 }),
+        ds.dim,
+    );
+    a.train(&ds);
+    let mut buf = Vec::new();
+    checkpoint::write_coordinator(&a, &mut buf).unwrap();
+    // rewrite the payload's salt to another plan's signature and
+    // recompute digest + checksum, simulating a file whose recorded
+    // config and recorded routing disagree (version skew / wrong
+    // worker count), while the file itself stays "valid"
+    let cfg_len =
+        u32::from_le_bytes(buf[OFF_PAYLOAD + 1..OFF_PAYLOAD + 5].try_into().unwrap())
+            as usize;
+    let salt_off = OFF_PAYLOAD + 1 + 4 + cfg_len + 8;
+    let wrong_salt = ShardPlan::hash(9, ds.dim).signature();
+    buf[salt_off..salt_off + 8].copy_from_slice(&wrong_salt.to_le_bytes());
+    let cfg_text =
+        String::from_utf8(buf[OFF_PAYLOAD + 5..OFF_PAYLOAD + 5 + cfg_len].to_vec())
+            .unwrap();
+    let digest =
+        checkpoint::config_digest(&cfg_text, ds.dim as u64, wrong_salt);
+    buf[OFF_DIGEST..OFF_CHECKSUM].copy_from_slice(&digest.to_le_bytes());
+    let checksum = pol::hashing::fnv1a64_iter(
+        std::iter::once(buf[OFF_ENC])
+            .chain(buf[OFF_PLAN..OFF_DIGEST].iter().copied())
+            .chain(buf[OFF_PAYLOAD..].iter().copied()),
+    );
+    buf[OFF_CHECKSUM..OFF_LEN].copy_from_slice(&checksum.to_le_bytes());
+
+    let err = checkpoint::read(&mut buf.as_slice()).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("shard-plan signature mismatch"),
+        "got: {msg}"
+    );
+    assert!(
+        msg.contains("hash sharding over 4 shard(s)"),
+        "the expected plan (kind, shards, dim) must be named: {msg}"
+    );
+    assert!(
+        msg.contains("not file corruption"),
+        "operators must be able to tell wrong-worker-count from \
+         corruption: {msg}"
+    );
+}
+
+// ----------------------------------------------- builder + serving path
+
+#[test]
+fn warm_start_at_a_different_worker_count_migrates() {
+    let ds = small_ds();
+    let dir = std::env::temp_dir().join("pol_elastic_warm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("elastic.polz");
+    let mut first = Session::builder()
+        .dim(ds.dim)
+        .topology(Topology::TwoLayer { shards: 4 })
+        .rule(UpdateRule::Local)
+        .loss(Loss::Logistic)
+        .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+        .clip01(false)
+        .build()
+        .unwrap();
+    first.train(&ds).unwrap();
+    first.save(&path).unwrap();
+
+    // resume the 4-worker checkpoint at 8 workers: migrated, not an
+    // error, and training continues from the recorded stream position
+    let mut grown = Session::builder()
+        .warm_start(&path)
+        .workers(8)
+        .build()
+        .expect("elastic warm start");
+    assert_eq!(grown.model().workers(), 8);
+    assert_eq!(grown.model().trained_instances(), 900);
+    let report = grown.train(&ds).unwrap();
+    assert_eq!(grown.model().trained_instances(), 1_800);
+    assert!(report.progressive.mean_loss().is_finite());
+
+    // shrink to 2 and check the serving snapshot matches the live model
+    let shrunk = grown.model().reshard_to(2).expect("8->2");
+    assert_eq!(shrunk.workers(), 2);
+    let snap = shrunk.snapshot();
+    for inst in ds.iter().take(30) {
+        assert_eq!(
+            snap.predict(&inst.features).to_bits(),
+            shrunk.predict(&inst.features).to_bits()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn warm_start_at_same_worker_count_is_untouched() {
+    let ds = small_ds();
+    let dir = std::env::temp_dir().join("pol_elastic_same");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("same.polz");
+    let mut first = Session::builder()
+        .dim(ds.dim)
+        .topology(Topology::TwoLayer { shards: 4 })
+        .rule(UpdateRule::Corrective)
+        .loss(Loss::Logistic)
+        .clip01(false)
+        .build()
+        .unwrap();
+    first.train(&ds).unwrap();
+    first.save(&path).unwrap();
+    let resumed = Session::builder()
+        .warm_start(&path)
+        .workers(4)
+        .build()
+        .unwrap();
+    for inst in ds.iter().take(30) {
+        assert_eq!(
+            resumed.predict(&inst.features).to_bits(),
+            first.predict(&inst.features).to_bits(),
+            "same-count warm start must not perturb the model"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sgd_models_refuse_multi_worker_migration() {
+    let sgd = pol::learner::sgd::Sgd::new(
+        16,
+        Loss::Squared,
+        LrSchedule::constant(0.1),
+    );
+    let model: &dyn Model = &sgd;
+    assert_eq!(model.workers(), 1);
+    assert!(model.reshard_to(1).is_ok());
+    let err = model.reshard_to(4).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+}
+
+#[test]
+fn reshard_refuses_in_flight_feedback() {
+    let ds = small_ds();
+    let mut c = Coordinator::new(
+        cfg(UpdateRule::DelayedGlobal, Topology::TwoLayer { shards: 4 }),
+        ds.dim,
+    );
+    // stream a few instances without flushing: τ=32 feedbacks in flight
+    for inst in ds.iter().take(10) {
+        c.learn_one(&inst.features, inst.label);
+    }
+    let err = c.reshard(2).unwrap_err();
+    assert!(err.contains("flush_feedback"), "got: {err}");
+    c.flush_feedback();
+    assert!(c.reshard(2).is_ok());
+}
