@@ -1,0 +1,174 @@
+//! net_train_serve — the paper's deployment shape, end to end over a
+//! real socket: a streaming trainer publishes snapshots into the
+//! serving registry while wire clients hammer the TCP front-end, and
+//! the worker count changes *live* between passes (elastic re-shard)
+//! without the socket ever going quiet.
+//!
+//! What this demonstrates:
+//! * `WireServer` serving a `ModelRegistry` over length-prefixed binary
+//!   frames — the same registry/snapshot read path the in-process
+//!   server drives, so answers are bit-identical to local serving.
+//! * The §0.5.3 small-packet lesson on the serving side: the clients
+//!   send *batched* predict frames (64 predictions amortize one
+//!   header, one checksum, one syscall each way).
+//! * Train-while-serve across a re-shard: phase 1 trains 4 workers,
+//!   phase 2 warm-starts the same model migrated to 8 — queries keep
+//!   flowing the whole time, observing snapshot versions and
+//!   instances-behind staleness as they go.
+//! * The admin plane: a client ends the run with a wire `Shutdown`
+//!   frame, and the final wire stats come from the `Stats` op.
+//!
+//!     cargo run --release --example net_train_serve
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use pol::prelude::*;
+use pol::wire::{WireClient, WireConfig, WireServer};
+
+const INSTANCES: usize = 40_000;
+const DIM: usize = 1 << 16;
+
+fn phase_source() -> RcvLikeSource {
+    RcvLikeSource::new(SynthConfig {
+        instances: INSTANCES,
+        features: 23_000,
+        density: 75,
+        hash_bits: 16,
+        ..Default::default()
+    })
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join("pol_net_train_serve");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let ckpt = dir.join("net.polz");
+    std::fs::remove_file(&ckpt).ok();
+
+    // one cell, registered under "live", read by the wire server for
+    // the whole run — each phase's session publishes into it
+    let cell =
+        SnapshotCell::new(ModelSnapshot::central(vec![0.0; DIM], 0, 0));
+    let registry = ModelRegistry::with_model("live", Arc::clone(&cell));
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        WireConfig::default(),
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+    println!("serving over TCP on {addr}");
+
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // two wire clients hammer the socket with batched frames while
+        // training runs — across the live re-shard
+        for c in 0..2u64 {
+            let done = &done;
+            s.spawn(move || {
+                let mut client =
+                    WireClient::connect(addr).expect("client connect");
+                let mut rng = Rng::new(0xC0FFEE ^ c);
+                let mut preds = Vec::new();
+                let mut batches = 0u64;
+                let mut max_version = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let batch: Vec<Vec<(u32, f32)>> = (0..64)
+                        .map(|_| {
+                            (0..75)
+                                .map(|_| {
+                                    (
+                                        rng.below(DIM as u64) as u32,
+                                        rng.normal() as f32,
+                                    )
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    match client.predict_batch_into("live", &batch, &mut preds)
+                    {
+                        Ok((version, _staleness)) => {
+                            assert!(preds.iter().all(|p| p.is_finite()));
+                            max_version = max_version.max(version);
+                            batches += 1;
+                        }
+                        Err(_) => break, // server draining
+                    }
+                }
+                println!(
+                    "client {c}: {batches} batched frames answered \
+                     (latest snapshot v{max_version})"
+                );
+            });
+        }
+
+        // two phases, two worker counts, one continuously-warm model
+        for (phase, workers) in [(1usize, 4usize), (2, 8)] {
+            let mut builder = Session::builder()
+                .source(phase_source())
+                .topology(Topology::TwoLayer { shards: workers })
+                .rule(UpdateRule::Local)
+                .loss(Loss::Logistic)
+                .lr(LrSchedule::inv_sqrt(2.0, 1.0))
+                .clip01(false)
+                .workers(workers)
+                .publish_every(8_192)
+                .publish_to(Arc::clone(&cell))
+                .checkpoint_to(&ckpt);
+            if phase > 1 {
+                // warm start at the NEW worker count: the checkpoint is
+                // migrated through ShardPlan::remap, serving never stops
+                builder = builder.warm_start(&ckpt);
+            }
+            let mut session = builder.build().expect("build session");
+            assert_eq!(session.model().workers(), workers);
+            let report = session.run().expect("train phase");
+            println!(
+                "phase {phase}: {workers} workers, {} instances this phase \
+                 ({} total), progressive acc {:.4}",
+                report.instances,
+                session.model().trained_instances(),
+                report.progressive.accuracy()
+            );
+        }
+        done.store(true, Ordering::Release);
+    });
+
+    // the admin plane ends the run: stats, then a wire shutdown
+    let mut admin = WireClient::connect(addr).expect("admin connect");
+    let stats = admin.stats().expect("stats op");
+    let live = stats
+        .models
+        .iter()
+        .find(|m| m.name == "live")
+        .expect("live model row");
+    println!(
+        "wire: {} frames in / {} out, {} bytes in / {} out, \
+         {} connections, {} decode errors",
+        stats.frames_in,
+        stats.frames_out,
+        stats.bytes_in,
+        stats.bytes_out,
+        stats.connections,
+        stats.decode_errors
+    );
+    println!(
+        "model 'live': {} requests, {} predictions, p99 {:.1} µs, \
+         max staleness {} instances",
+        live.requests,
+        live.predictions,
+        live.p99_ns as f64 / 1e3,
+        live.max_staleness
+    );
+    admin.shutdown_server().expect("shutdown op");
+    server.wait();
+    let final_stats = server.shutdown();
+    println!(
+        "drained: {} total frames answered across the re-shard \
+         (final snapshot seq {})",
+        final_stats.frames_out,
+        cell.seq()
+    );
+    assert_eq!(final_stats.decode_errors, 0);
+    std::fs::remove_file(&ckpt).ok();
+}

@@ -23,15 +23,19 @@ mod common;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use pol::config::{RunConfig, UpdateRule};
 use pol::data::synth::{RcvLikeGen, SynthConfig};
 use pol::data::Dataset;
+use pol::linalg::SparseFeat;
 use pol::loss::Loss;
 use pol::lr::LrSchedule;
-use pol::model::Session;
-use pol::serve::PredictionServer;
+use pol::metrics::LatencyHistogram;
+use pol::model::{Model, Session};
+use pol::serve::{ModelRegistry, PredictionServer, SnapshotCell};
 use pol::topology::Topology;
+use pol::wire::{WireClient, WireConfig, WireServer};
 
 fn dataset(n: usize) -> Dataset {
     RcvLikeGen::new(SynthConfig {
@@ -112,6 +116,170 @@ fn run(ds: &Dataset, cadence: u64, threads: usize) -> common::BenchRow {
     )
 }
 
+/// A frozen trained snapshot registered under "bench" — the serving
+/// side of the wire-vs-in-process comparison (training is excluded so
+/// the two paths score the identical model).
+fn frozen_registry(ds: &Dataset) -> Arc<ModelRegistry> {
+    let mut session = Session::builder()
+        .config(cfg())
+        .dim(ds.dim)
+        .build()
+        .expect("build session");
+    session.train(ds).expect("train");
+    ModelRegistry::with_model(
+        "bench",
+        SnapshotCell::new(session.model().snapshot()),
+    )
+}
+
+/// The shared load driver for the wire-vs-in-process stages: `threads`
+/// clients each send one batched request at a time until `seconds`
+/// elapse, measuring per-request latency. `make_scorer` builds each
+/// thread's scoring closure — the ONLY thing that differs between the
+/// two stages, so the request mix can never drift between them.
+/// Returns `(predictions, latency, wall)`.
+fn drive_load<S>(
+    ds: &Dataset,
+    batch: usize,
+    threads: usize,
+    seconds: f64,
+    mut make_scorer: impl FnMut(usize) -> S,
+) -> (u64, LatencyHistogram, Duration)
+where
+    S: FnMut(Vec<Vec<SparseFeat>>, &mut Vec<f64>) + Send,
+{
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    let t0 = Instant::now();
+    let mut total = 0u64;
+    let mut hist = LatencyHistogram::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|c| {
+                let mut scorer = make_scorer(c);
+                s.spawn(move || {
+                    let mut h = LatencyHistogram::new();
+                    let mut preds = Vec::new();
+                    let mut n = 0u64;
+                    let mut i = c * 37;
+                    while Instant::now() < deadline {
+                        let reqs: Vec<Vec<SparseFeat>> = (0..batch)
+                            .map(|k| {
+                                ds.instances[(i + k) % ds.len()]
+                                    .features
+                                    .clone()
+                            })
+                            .collect();
+                        i += batch;
+                        let sent = Instant::now();
+                        scorer(reqs, &mut preds);
+                        h.record(sent.elapsed());
+                        n += preds.len() as u64;
+                    }
+                    (n, h)
+                })
+            })
+            .collect();
+        for handle in handles {
+            let (n, h) = handle.join().expect("load client");
+            total += n;
+            hist.merge(&h);
+        }
+    });
+    (total, hist, t0.elapsed())
+}
+
+fn stage_row(
+    label: String,
+    total: u64,
+    hist: &LatencyHistogram,
+    elapsed: Duration,
+    frames_per_sec: Option<f64>,
+) -> common::BenchRow {
+    let qps = total as f64 / elapsed.as_secs_f64().max(1e-9);
+    let frames = match frames_per_sec {
+        Some(f) => format!("{f:.0}"),
+        None => "-".to_string(),
+    };
+    println!(
+        "{:>22} {:>9.0} {:>11} {:>7.1} {:>7.1}",
+        label,
+        qps,
+        frames,
+        hist.quantile_ns(0.5) as f64 / 1e3,
+        hist.quantile_ns(0.99) as f64 / 1e3,
+    );
+    common::BenchRow::new(
+        label,
+        qps,
+        hist.quantile_ns(0.5) as f64 / 1e3,
+        hist.quantile_ns(0.99) as f64 / 1e3,
+    )
+}
+
+/// Drive loopback TCP clients against a [`WireServer`] — one batched
+/// predict frame per request.
+fn run_wire(
+    ds: &Dataset,
+    registry: &Arc<ModelRegistry>,
+    batch: usize,
+    threads: usize,
+    seconds: f64,
+) -> common::BenchRow {
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(registry),
+        WireConfig { handlers: threads, ..Default::default() },
+    )
+    .expect("bind wire server");
+    let addr = server.local_addr();
+    let (total, hist, elapsed) = drive_load(ds, batch, threads, seconds, |_| {
+        let mut client = WireClient::connect(addr).expect("connect");
+        move |reqs: Vec<Vec<SparseFeat>>, preds: &mut Vec<f64>| {
+            client
+                .predict_batch_into("bench", &reqs, preds)
+                .expect("wire predict");
+        }
+    });
+    let stats = server.shutdown();
+    let frames = stats.frames_in as f64 / elapsed.as_secs_f64().max(1e-9);
+    stage_row(
+        format!("wire-batch{batch}-threads{threads}"),
+        total,
+        &hist,
+        elapsed,
+        Some(frames),
+    )
+}
+
+/// The in-process twin of [`run_wire`]: identical frozen snapshot,
+/// identical request stream, channel instead of socket.
+fn run_inproc(
+    ds: &Dataset,
+    registry: &Arc<ModelRegistry>,
+    batch: usize,
+    threads: usize,
+    seconds: f64,
+) -> common::BenchRow {
+    let server = PredictionServer::start(Arc::clone(registry), threads);
+    let (total, hist, elapsed) = drive_load(ds, batch, threads, seconds, |_| {
+        let client = server.client();
+        move |reqs: Vec<Vec<SparseFeat>>, preds: &mut Vec<f64>| {
+            let resp =
+                client.predict_for("bench", reqs).expect("in-process predict");
+            preds.clear();
+            preds.extend_from_slice(&resp.preds);
+        }
+    });
+    server.shutdown();
+    stage_row(
+        format!("inproc-batch{batch}-threads{threads}"),
+        total,
+        &hist,
+        elapsed,
+        None,
+    )
+}
+
 fn main() {
     let n = 120_000 * common::scale();
     let ds = dataset(n);
@@ -139,6 +307,23 @@ fn main() {
     for cadence in [1_024u64, 8_192] {
         for threads in [1usize, 2, 4] {
             rows.push(run(&ds, cadence, threads));
+        }
+    }
+
+    // wire stage: the same frozen snapshot served over loopback TCP vs
+    // in-process — the §0.5.3 small-packet effect shows up as the gap
+    // between batch=1 and batch=64 wire rows (per-frame overhead
+    // amortized), while the inproc twins bound the serialization tax
+    println!();
+    println!(
+        "{:>22} {:>9} {:>11} {:>7} {:>7}",
+        "stage", "preds/s", "frames/s", "p50_us", "p99_us"
+    );
+    let registry = frozen_registry(&ds);
+    for batch in [1usize, 64] {
+        for threads in [1usize, 2] {
+            rows.push(run_inproc(&ds, &registry, batch, threads, 1.0));
+            rows.push(run_wire(&ds, &registry, batch, threads, 1.0));
         }
     }
     common::write_bench_json("serve_throughput", &rows);

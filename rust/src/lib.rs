@@ -107,6 +107,45 @@
 //! See `pol train --checkpoint-every`, `pol serve` (repeatable
 //! `--model name=path`), and `pol predict` in the CLI,
 //! `benches/serve_throughput.rs`, and `examples/train_while_serve.rs`.
+//!
+//! ## Serving over the network
+//!
+//! **[`wire`]** turns the registry into a deployable service: a
+//! versioned length-prefixed binary protocol (magic, op code, request
+//! id, FNV checksum, strict caps — the frame layout table lives in the
+//! [`wire`] module docs), a [`wire::WireServer`] whose bounded handler
+//! pool drives the *same* registry/snapshot read path as the
+//! in-process server (answers are bit-identical by construction), and
+//! a blocking [`wire::WireClient`] with batched and pipelined predict
+//! calls — the paper's §0.5.3 small-packet lesson applied to serving:
+//! many predictions per frame, one checksum, one syscall each way.
+//! An admin plane (`Stats`, `ListModels`, `Ping`, `Shutdown`) rides
+//! the same protocol.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use pol::prelude::*;
+//!
+//! let model = pol::model::load("model.polz").expect("load");
+//! let registry =
+//!     ModelRegistry::with_model("m", SnapshotCell::new(model.snapshot()));
+//! let server = WireServer::bind(
+//!     "0.0.0.0:7878",
+//!     Arc::clone(&registry),
+//!     WireConfig::default(),
+//! )
+//! .expect("bind");
+//! let mut client = WireClient::connect("127.0.0.1:7878").expect("connect");
+//! let resp = client.predict_for("m", &[(0, 1.0)]).expect("predict");
+//! println!("{} ({} instances behind)", resp.preds[0], resp.staleness);
+//! # server.shutdown();
+//! ```
+//!
+//! At the CLI: `pol serve --model m.polz --listen 0.0.0.0:7878` serves
+//! checkpoints over TCP, `pol predict --connect HOST:7878` queries
+//! them, and `pol serve-stats --connect HOST:7878` reads the wire
+//! stats; `examples/net_train_serve.rs` runs the full
+//! train-while-serve-over-TCP story through a live re-shard.
 
 pub mod config;
 pub mod coordinator;
@@ -127,6 +166,7 @@ pub mod serve;
 pub mod sharding;
 pub mod stream;
 pub mod topology;
+pub mod wire;
 
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
@@ -161,4 +201,5 @@ pub mod prelude {
         VwTextSource, WebspamLikeSource,
     };
     pub use crate::topology::Topology;
+    pub use crate::wire::{WireClient, WireConfig, WireError, WireServer};
 }

@@ -39,6 +39,7 @@ fn main() {
         Some("checkpoint") => cmd_checkpoint(&args[1..]),
         Some("reshard") => cmd_reshard(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("serve-stats") => cmd_serve_stats(&args[1..]),
         Some("predict") => cmd_predict(&args[1..]),
         Some("bench-data") => cmd_bench_data(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
@@ -87,9 +88,20 @@ COMMANDS:
                    --model [NAME=]PATH  (repeatable: N models, one server)
                    --threads N  --seconds S  --batch B  --density D
                    --seed S
+                   --listen ADDR  (serve over TCP instead of self-load:
+                   length-prefixed binary frames, routed by model name;
+                   runs until a wire Shutdown frame, or --seconds S;
+                   --batch/--density/--seed do not apply)
+                   --no-remote-shutdown  (ignore wire Shutdown frames;
+                   only --seconds or the owning process stop the server)
+  serve-stats      query a --listen server's wire + per-model stats
+                   --connect ADDR
   predict          one prediction per stdin line ('idx:val idx:val ...',
                    pre-hashed indices) against a checkpoint
                    --model PATH
+                   --connect ADDR  (query a `pol serve --listen` server
+                   over TCP instead; --name NAME picks the model when
+                   the server hosts more than one)
   bench-data       generate + describe the Table 0.1 datasets
                    [--full]  (paper-scale shapes; default is scaled down)
   inspect          hashing collision stats   --bits B  --uniques N
@@ -712,8 +724,29 @@ fn parse_features(line: &str, dim: usize) -> Result<Vec<SparseFeat>, String> {
     Ok(out)
 }
 
+/// Resolve a `--listen`/`--connect` flag value to a socket address; a
+/// malformed or unresolvable value is a usage error naming the flag.
+fn resolve_addr(
+    cmd: &str,
+    flag: &str,
+    addr: &str,
+) -> Result<std::net::SocketAddr, String> {
+    use std::net::ToSocketAddrs;
+    addr.to_socket_addrs()
+        .map_err(|e| format!("{cmd}: bad value '{addr}' for {flag} ({e})"))?
+        .next()
+        .ok_or_else(|| {
+            format!("{cmd}: bad value '{addr}' for {flag} (no address)")
+        })
+}
+
 fn cmd_predict(args: &[String]) -> i32 {
-    let fl = match parse_flags("predict", args, &["--model"], &[]) {
+    let fl = match parse_flags(
+        "predict",
+        args,
+        &["--model", "--connect", "--name"],
+        &[],
+    ) {
         Ok(fl) => fl,
         Err(e) => return usage_error(&e),
     };
@@ -721,8 +754,27 @@ fn cmd_predict(args: &[String]) -> i32 {
         print!("{HELP}");
         return 0;
     }
+    if fl.get("--connect").is_some() && fl.get("--model").is_some() {
+        return usage_error(
+            "predict: --connect (query a remote server) and --model \
+             (load a local checkpoint) are mutually exclusive",
+        );
+    }
+    if fl.get("--name").is_some() && fl.get("--connect").is_none() {
+        return usage_error(
+            "predict: --name picks a model on a --connect server; with a \
+             local checkpoint pass --model PATH",
+        );
+    }
+    if let Some(addr) = fl.get("--connect") {
+        let sock = match resolve_addr("predict", "--connect", addr) {
+            Ok(s) => s,
+            Err(e) => return usage_error(&e),
+        };
+        return predict_over_wire(sock, &fl);
+    }
     let Some(path) = fl.get("--model") else {
-        return usage_error("predict: --model PATH required");
+        return usage_error("predict: --model PATH (or --connect ADDR) required");
     };
     let model = match pol::model::load(path) {
         Ok(m) => m,
@@ -732,6 +784,15 @@ fn cmd_predict(args: &[String]) -> i32 {
         }
     };
     let dim = model.dim();
+    predict_lines(|x| Ok(model.predict(x)), dim)
+}
+
+/// The stdin predict loop shared by the local and wire paths: one
+/// prediction per line, parse errors exit 2, scorer failures exit 1.
+fn predict_lines(
+    mut score: impl FnMut(&[SparseFeat]) -> Result<f64, String>,
+    dim: usize,
+) -> i32 {
     let mut line = String::new();
     loop {
         line.clear();
@@ -751,13 +812,133 @@ fn cmd_predict(args: &[String]) -> i32 {
             continue;
         }
         match parse_features(text, dim) {
-            Ok(x) => println!("{}", model.predict(&x)),
+            Ok(x) => match score(&x) {
+                Ok(y) => println!("{y}"),
+                Err(e) => {
+                    eprintln!("predict: {e}");
+                    return 1;
+                }
+            },
             Err(e) => {
                 eprintln!("predict: {e}");
                 return 2;
             }
         }
     }
+}
+
+fn predict_over_wire(sock: std::net::SocketAddr, fl: &Flags) -> i32 {
+    let mut client = match pol::wire::WireClient::connect(sock) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("predict: connect {sock}: {e}");
+            return 1;
+        }
+    };
+    let models = match client.list_models() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("predict: list models on {sock}: {e}");
+            return 1;
+        }
+    };
+    if models.is_empty() {
+        eprintln!("predict: server at {sock} hosts no models");
+        return 1;
+    }
+    let available =
+        models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", ");
+    let entry = match fl.get("--name") {
+        Some(name) => match models.iter().find(|m| m.name == name) {
+            Some(entry) => entry,
+            None => {
+                eprintln!(
+                    "predict: no model '{name}' on {sock} \
+                     (available: {available})"
+                );
+                return 1;
+            }
+        },
+        None if models.len() == 1 => &models[0],
+        None => {
+            return usage_error(&format!(
+                "predict: server hosts {} models; pass --name NAME \
+                 (available: {available})",
+                models.len()
+            ));
+        }
+    };
+    let name = entry.name.clone();
+    let dim = entry.dim as usize;
+    eprintln!(
+        "querying model '{name}' on {sock} (dim {dim}, snapshot v{})",
+        entry.snapshot_version
+    );
+    predict_lines(
+        move |x| match client.predict_for(&name, x) {
+            Ok(resp) => Ok(resp.preds[0]),
+            Err(e) => Err(format!("wire: {e}")),
+        },
+        dim,
+    )
+}
+
+fn cmd_serve_stats(args: &[String]) -> i32 {
+    let fl = match parse_flags("serve-stats", args, &["--connect"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let Some(addr) = fl.get("--connect") else {
+        return usage_error("serve-stats: --connect ADDR required");
+    };
+    let sock = match resolve_addr("serve-stats", "--connect", addr) {
+        Ok(s) => s,
+        Err(e) => return usage_error(&e),
+    };
+    let mut client = match pol::wire::WireClient::connect(sock) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("serve-stats: connect {sock}: {e}");
+            return 1;
+        }
+    };
+    let s = match client.stats() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve-stats: {sock}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "uptime_s={:.1} connections={} active={} frames_in={} frames_out={} \
+         bytes_in={} bytes_out={} decode_errors={}",
+        s.uptime_us as f64 / 1e6,
+        s.connections,
+        s.active_connections,
+        s.frames_in,
+        s.frames_out,
+        s.bytes_in,
+        s.bytes_out,
+        s.decode_errors
+    );
+    for m in &s.models {
+        println!(
+            "model={} requests={} predictions={} p50_us={:.1} p99_us={:.1} \
+             max_us={:.1} max_staleness={}",
+            m.name,
+            m.requests,
+            m.predictions,
+            m.p50_ns as f64 / 1e3,
+            m.p99_ns as f64 / 1e3,
+            m.max_ns as f64 / 1e3,
+            m.max_staleness
+        );
+    }
+    0
 }
 
 /// `NAME=PATH` or bare `PATH` (name defaults to the file stem).
@@ -776,12 +957,133 @@ fn model_spec(spec: &str) -> Result<(String, String), String> {
     Ok((name.to_string(), spec.to_string()))
 }
 
+/// Validate every `--model [NAME=]PATH` spec up front (bad specs and
+/// duplicate names are *usage* errors, before any file is touched).
+fn parse_model_specs(specs: &[&str]) -> Result<Vec<(String, String)>, String> {
+    let mut named: Vec<(String, String)> = Vec::new();
+    for spec in specs {
+        let (name, path) = model_spec(spec)?;
+        if name.len() > pol::wire::MAX_NAME {
+            // the wire protocol length-prefixes names with one byte;
+            // an unaddressable name is a mistake, not a model
+            let head: String = name.chars().take(16).collect();
+            return Err(format!(
+                "serve: model name '{head}...' is {} bytes (max {})",
+                name.len(),
+                pol::wire::MAX_NAME
+            ));
+        }
+        if named.iter().any(|(n, _)| *n == name) {
+            return Err(format!("serve: duplicate model name '{name}'"));
+        }
+        named.push((name, path));
+    }
+    Ok(named)
+}
+
+/// Load validated `(name, path)` pairs into a fresh registry; returns
+/// it plus `(name, dim)` in load order. Failures here are *runtime*
+/// errors (exit 1), like every other unreadable-checkpoint path.
+fn load_registry(
+    named: &[(String, String)],
+) -> Result<(Arc<ModelRegistry>, Vec<(String, usize)>), String> {
+    let registry = ModelRegistry::new();
+    let mut loaded: Vec<(String, usize)> = Vec::new(); // (name, dim)
+    for (name, path) in named {
+        let model = pol::model::load(path)
+            .map_err(|e| format!("serve: load {path}: {e}"))?;
+        let snap = model.snapshot();
+        let dim = snap.dim().max(1);
+        eprintln!(
+            "model {name}: {path} kind={} dim={dim} params={} trained={}",
+            model.kind_name(),
+            snap.num_params(),
+            snap.trained_instances,
+        );
+        registry.insert(name.as_str(), SnapshotCell::new(snap));
+        loaded.push((name.clone(), dim));
+    }
+    Ok((registry, loaded))
+}
+
+/// Serve the registry over TCP until `--seconds` elapse (when given)
+/// or a wire `Shutdown` frame arrives; then drain and report stats.
+fn serve_listen(
+    sock: std::net::SocketAddr,
+    registry: Arc<ModelRegistry>,
+    models: usize,
+    threads: usize,
+    seconds: Option<f64>,
+    allow_remote_shutdown: bool,
+) -> i32 {
+    let cfg = pol::wire::WireConfig {
+        handlers: threads,
+        allow_remote_shutdown,
+        ..Default::default()
+    };
+    let server = match pol::wire::WireServer::bind(sock, registry, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: listen {sock}: {e}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "serving {models} model(s) over TCP on {} ({threads} handler(s), {})",
+        server.local_addr(),
+        match seconds {
+            Some(s) => format!("for {s}s"),
+            None => "until a wire Shutdown frame".to_string(),
+        }
+    );
+    match seconds {
+        Some(s) => {
+            // whichever comes first: the deadline or a wire Shutdown
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs_f64(s.max(0.1));
+            while std::time::Instant::now() < deadline
+                && !server.is_draining()
+            {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+        }
+        None => server.wait(),
+    }
+    let stats = server.shutdown();
+    println!(
+        "connections={} frames_in={} frames_out={} bytes_in={} bytes_out={} \
+         decode_errors={}",
+        stats.connections,
+        stats.frames_in,
+        stats.frames_out,
+        stats.bytes_in,
+        stats.bytes_out,
+        stats.decode_errors
+    );
+    for m in &stats.models {
+        println!(
+            "model={} requests={} predictions={} p50_us={:.1} p99_us={:.1} \
+             max_staleness={}",
+            m.name,
+            m.requests,
+            m.predictions,
+            m.p50_ns as f64 / 1e3,
+            m.p99_ns as f64 / 1e3,
+            m.max_staleness
+        );
+    }
+    0
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     let fl = match parse_flags(
         "serve",
         args,
-        &["--model", "--threads", "--seconds", "--batch", "--density", "--seed"],
-        &[],
+        &[
+            "--model", "--threads", "--seconds", "--batch", "--density",
+            "--seed", "--listen",
+        ],
+        &["--no-remote-shutdown"],
     ) {
         Ok(fl) => fl,
         Err(e) => return usage_error(&e),
@@ -795,7 +1097,47 @@ fn cmd_serve(args: &[String]) -> i32 {
         if specs.is_empty() {
             return Err("serve: at least one --model [NAME=]PATH required".into());
         }
+        let named = parse_model_specs(&specs)?;
         let threads: usize = parsed("serve", &fl, "--threads")?.unwrap_or(4);
+        if let Some(addr) = fl.get("--listen") {
+            // the self-load knobs make no sense when the load comes
+            // from the network: reject them, never silently ignore
+            for flag in ["--batch", "--density", "--seed"] {
+                if fl.get(flag).is_some() {
+                    return Err(format!(
+                        "serve: {flag} drives the synthetic self-load mode \
+                         and does not apply with --listen"
+                    ));
+                }
+            }
+            let sock = resolve_addr("serve", "--listen", addr)?;
+            let seconds: Option<f64> = parsed("serve", &fl, "--seconds")?;
+            let (registry, loaded) = match load_registry(&named) {
+                Ok(r) => r,
+                Err(e) => {
+                    // flags were valid: an unreadable checkpoint is a
+                    // runtime failure, not a usage error
+                    eprintln!("{e}");
+                    return Ok(1);
+                }
+            };
+            return Ok(serve_listen(
+                sock,
+                registry,
+                loaded.len(),
+                threads,
+                seconds,
+                !fl.has("--no-remote-shutdown"),
+            ));
+        }
+        if fl.has("--no-remote-shutdown") {
+            return Err(
+                "serve: --no-remote-shutdown applies to the --listen wire \
+                 server (the synthetic self-load mode has no remote \
+                 shutdown to disable)"
+                    .into(),
+            );
+        }
         let seconds: f64 = parsed("serve", &fl, "--seconds")?.unwrap_or(2.0);
         let batch: usize = parsed("serve", &fl, "--batch")?.unwrap_or(1);
         let density: usize = parsed("serve", &fl, "--density")?.unwrap_or(75);
@@ -803,26 +1145,13 @@ fn cmd_serve(args: &[String]) -> i32 {
 
         // load every checkpoint as a Model trait object, snapshot it,
         // and register it under its name
-        let registry = ModelRegistry::new();
-        let mut loaded: Vec<(String, usize)> = Vec::new(); // (name, dim)
-        for spec in specs {
-            let (name, path) = model_spec(spec)?;
-            if loaded.iter().any(|(n, _)| *n == name) {
-                return Err(format!("serve: duplicate model name '{name}'"));
+        let (registry, loaded) = match load_registry(&named) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                return Ok(1);
             }
-            let model = pol::model::load(&path)
-                .map_err(|e| format!("serve: load {path}: {e}"))?;
-            let snap = model.snapshot();
-            let dim = snap.dim().max(1);
-            eprintln!(
-                "model {name}: {path} kind={} dim={dim} params={} trained={}",
-                model.kind_name(),
-                snap.num_params(),
-                snap.trained_instances,
-            );
-            registry.insert(name.as_str(), SnapshotCell::new(snap));
-            loaded.push((name, dim));
-        }
+        };
         eprintln!(
             "serving {} model(s) on {threads} threads, batch {batch}, for {seconds}s",
             loaded.len()

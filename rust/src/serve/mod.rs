@@ -40,6 +40,31 @@
 //! Smola, Zinkevich): staleness is bounded by the publish cadence and
 //! measured on every response rather than left accidental.
 //!
+//! # Serving over the network
+//!
+//! [`crate::wire`] lifts this registry onto a real TCP socket:
+//! `pol serve --listen ADDR` serves every registered model over a
+//! versioned, length-prefixed binary protocol, `pol predict --connect
+//! ADDR` queries it, and `pol serve-stats --connect ADDR` reads the
+//! wire-level counters. The frame envelope (little-endian):
+//!
+//! | offset | size | field    | notes                                |
+//! |--------|------|----------|--------------------------------------|
+//! | 0      | 4    | len      | body bytes; 24 ≤ len ≤ 4 MiB         |
+//! | 4      | 4    | magic    | `POLW`                               |
+//! | 8      | 2    | version  | protocol version (1)                 |
+//! | 10     | 1    | op       | Predict / PredictBatch / Stats / ListModels / Ping / Shutdown |
+//! | 11     | 1    | status   | 0 = request/ok; error code on responses |
+//! | 12     | 8    | req_id   | echoed in the response               |
+//! | 20     | n    | payload  | op-specific                          |
+//! | 20 + n | 8    | checksum | FNV-1a64 over magic..payload         |
+//!
+//! The wire handlers resolve names through the same [`ModelCache`] the
+//! in-process workers use and score against the same snapshot cells,
+//! so a model served over TCP answers bit-identically to the same
+//! snapshot queried in-process — including across registry hot-swaps
+//! and elastic re-shards (`tests/test_wire.rs` pins this).
+//!
 //! ```no_run
 //! use std::sync::Arc;
 //! use pol::prelude::*;
@@ -65,7 +90,7 @@ pub mod snapshot;
 
 pub use checkpoint::{Checkpoint, CheckpointInfo, CheckpointSink};
 pub use publisher::{SnapshotCell, SnapshotPublisher, SnapshotReader};
-pub use registry::ModelRegistry;
+pub use registry::{ModelCache, ModelRegistry};
 pub use server::{
     ModelStats, PredictClient, PredictError, PredictResponse,
     PredictionServer, ServeStats, DEFAULT_MODEL,

@@ -18,7 +18,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::serve::publisher::SnapshotCell;
+use crate::serve::publisher::{SnapshotCell, SnapshotReader};
+use crate::serve::snapshot::PredictScratch;
 
 /// Named [`SnapshotCell`]s behind one server.
 pub struct ModelRegistry {
@@ -105,6 +106,48 @@ impl ModelRegistry {
     }
 }
 
+/// Per-thread cache of resolved models: a [`SnapshotReader`] plus
+/// private predict scratch per name, invalidated wholesale when the
+/// registry version changes (so renames and replacements take effect
+/// on the next request). Both the in-process
+/// [`crate::serve::server::PredictionServer`] workers and the
+/// [`crate::wire`] connection handlers resolve through this, so the
+/// two serving paths share one fast path and cannot drift: one atomic
+/// load per steady-state request, and the name string is cloned only
+/// the first time this thread sees a model.
+pub struct ModelCache {
+    models: HashMap<String, (SnapshotReader, PredictScratch)>,
+    version: u64,
+}
+
+impl ModelCache {
+    pub fn new(registry: &ModelRegistry) -> ModelCache {
+        ModelCache { models: HashMap::new(), version: registry.version() }
+    }
+
+    /// Resolve a model name to its cached `(reader, scratch)` pair;
+    /// `None` when the registry has no model under that name.
+    pub fn resolve(
+        &mut self,
+        registry: &ModelRegistry,
+        name: &str,
+    ) -> Option<&mut (SnapshotReader, PredictScratch)> {
+        let v = registry.version();
+        if v != self.version {
+            self.models.clear();
+            self.version = v;
+        }
+        if !self.models.contains_key(name) {
+            let cell = registry.get(name)?;
+            self.models.insert(
+                name.to_string(),
+                (SnapshotReader::new(cell), PredictScratch::default()),
+            );
+        }
+        self.models.get_mut(name)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +193,26 @@ mod tests {
         let reg = ModelRegistry::with_model("m", cell(3.0));
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.get("m").unwrap().load().predict(&[(1, 2.0)]), 6.0);
+    }
+
+    #[test]
+    fn model_cache_tracks_registry_changes() {
+        let reg = ModelRegistry::with_model("a", cell(1.0));
+        let mut cache = ModelCache::new(&reg);
+        {
+            let (reader, scratch) = cache.resolve(&reg, "a").unwrap();
+            let snap = std::sync::Arc::clone(reader.current());
+            assert_eq!(snap.predict_with(&[(0, 1.0)], scratch), 1.0);
+        }
+        assert!(cache.resolve(&reg, "ghost").is_none());
+        // a replacement under the same name takes effect on the next
+        // resolve (version bump invalidates the cached reader)
+        reg.insert("a", cell(2.0));
+        let (reader, scratch) = cache.resolve(&reg, "a").unwrap();
+        let snap = std::sync::Arc::clone(reader.current());
+        assert_eq!(snap.predict_with(&[(0, 1.0)], scratch), 2.0);
+        // a removal stops resolving
+        reg.remove("a");
+        assert!(cache.resolve(&reg, "a").is_none());
     }
 }

@@ -3,12 +3,14 @@
 //! training keeps running.
 //!
 //! Requests flow over an `mpsc` queue shared by the workers; each
-//! worker caches a [`SnapshotReader`] per model name (one atomic load
+//! worker resolves names through a [`ModelCache`] (one atomic load
 //! per request in steady state — no locks, no contention with the
 //! trainers except one mutex touch per publish, and one registry
 //! re-resolve per registry change) plus private predict scratch and
 //! private per-model latency histograms, merged into [`ServeStats`] at
-//! shutdown. Every response carries the model name it was routed to,
+//! shutdown. The same cache backs the [`crate::wire`] TCP front-end,
+//! so the in-process and network serving paths share one fast path.
+//! Every response carries the model name it was routed to,
 //! the snapshot version it was computed against, and its
 //! instances-behind staleness, so clients can *observe* the
 //! delayed-read regime instead of guessing at it.
@@ -19,15 +21,14 @@
 //! same queue.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::linalg::SparseFeat;
 use crate::metrics::LatencyHistogram;
-use crate::serve::publisher::{SnapshotCell, SnapshotReader};
-use crate::serve::registry::ModelRegistry;
-use crate::serve::snapshot::PredictScratch;
+use crate::serve::publisher::SnapshotCell;
+use crate::serve::registry::{ModelCache, ModelRegistry};
 
 /// The model name [`PredictClient::predict`] routes to and
 /// [`PredictionServer::single`] registers.
@@ -51,7 +52,10 @@ pub struct PredictResponse {
 pub enum PredictError {
     /// No model under that name in the registry.
     UnknownModel(String),
-    /// The server shut down before answering.
+    /// The server shut down before answering: either the request was
+    /// submitted after [`PredictionServer::shutdown`] began, or it was
+    /// still queued when the drain finished. Never a hang — every
+    /// submitted request gets exactly one reply.
     Closed,
 }
 
@@ -86,7 +90,7 @@ pub struct ModelStats {
 }
 
 impl ModelStats {
-    fn new() -> ModelStats {
+    pub(crate) fn new() -> ModelStats {
         ModelStats {
             requests: 0,
             predictions: 0,
@@ -95,14 +99,19 @@ impl ModelStats {
         }
     }
 
-    fn record(&mut self, predictions: u64, latency: std::time::Duration, staleness: u64) {
+    pub(crate) fn record(
+        &mut self,
+        predictions: u64,
+        latency: std::time::Duration,
+        staleness: u64,
+    ) {
         self.requests += 1;
         self.predictions += predictions;
         self.latency.record(latency);
         self.max_staleness = self.max_staleness.max(staleness);
     }
 
-    fn merge(&mut self, other: &ModelStats) {
+    pub(crate) fn merge(&mut self, other: &ModelStats) {
         self.requests += other.requests;
         self.predictions += other.predictions;
         self.latency.merge(&other.latency);
@@ -142,30 +151,39 @@ struct WorkerStats {
 /// Handle to a running pool of serving threads.
 pub struct PredictionServer {
     tx: mpsc::Sender<Job>,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
     workers: Vec<std::thread::JoinHandle<WorkerStats>>,
     registry: Arc<ModelRegistry>,
     started: Instant,
     inflight_hint: Arc<AtomicU64>,
+    closed: Arc<AtomicBool>,
 }
 
 /// Cloneable client side of a [`PredictionServer`].
 ///
-/// All clients must be dropped before [`PredictionServer::shutdown`]
-/// can drain the queue and join the workers (the queue closes when the
-/// last sender goes away).
+/// Clients may outlive the server: once [`PredictionServer::shutdown`]
+/// begins, every new or still-queued request is answered with
+/// [`PredictError::Closed`] instead of blocking (the reject-after-drain
+/// contract — see [`PredictionServer::shutdown`]).
 #[derive(Clone)]
 pub struct PredictClient {
     tx: mpsc::Sender<Job>,
     inflight_hint: Arc<AtomicU64>,
+    closed: Arc<AtomicBool>,
 }
 
 impl PredictClient {
     /// Answer one batch against the named model; blocks for the reply.
+    /// During and after server shutdown this returns
+    /// [`PredictError::Closed`] — it never hangs.
     pub fn predict_for(
         &self,
         model: &str,
         batch: Vec<Vec<SparseFeat>>,
     ) -> Result<PredictResponse, PredictError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(PredictError::Closed);
+        }
         let (rtx, rrx) = mpsc::channel();
         self.inflight_hint.fetch_add(1, Ordering::Relaxed);
         let job = Job {
@@ -177,6 +195,8 @@ impl PredictClient {
         let result = if self.tx.send(job).is_ok() {
             match rrx.recv() {
                 Ok(r) => r,
+                // the drain dropped the queue with this job still in
+                // it: the reply channel closed, which is a clean reject
                 Err(_) => Err(PredictError::Closed),
             }
         } else {
@@ -202,23 +222,27 @@ impl PredictionServer {
         let threads = threads.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let shared_rx = Arc::new(Mutex::new(rx));
+        let closed = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::with_capacity(threads);
         for wid in 0..threads {
             let rx = Arc::clone(&shared_rx);
             let registry = Arc::clone(&registry);
+            let closed = Arc::clone(&closed);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("serve-{wid}"))
-                    .spawn(move || worker_loop(registry, rx))
+                    .spawn(move || worker_loop(registry, rx, closed))
                     .expect("spawn serving thread"),
             );
         }
         PredictionServer {
             tx,
+            rx: shared_rx,
             workers,
             registry,
             started: Instant::now(),
             inflight_hint: Arc::new(AtomicU64::new(0)),
+            closed,
         }
     }
 
@@ -232,6 +256,7 @@ impl PredictionServer {
         PredictClient {
             tx: self.tx.clone(),
             inflight_hint: Arc::clone(&self.inflight_hint),
+            closed: Arc::clone(&self.closed),
         }
     }
 
@@ -245,15 +270,31 @@ impl PredictionServer {
         self.workers.len()
     }
 
-    /// Requests submitted but not yet answered (approximate).
+    /// Requests submitted but not yet answered (approximate: the
+    /// counter races with submitters by design — treat it as a gauge
+    /// for monitoring, never as a synchronization primitive. The only
+    /// reliable drain barrier is [`Self::shutdown`] itself, whose
+    /// reject-after-drain contract guarantees every submitted request
+    /// is answered or cleanly rejected).
     pub fn inflight(&self) -> u64 {
         self.inflight_hint.load(Ordering::Relaxed)
     }
 
-    /// Close the queue, drain outstanding requests, join the workers,
-    /// and report merged stats. All [`PredictClient`]s must already be
-    /// dropped, otherwise the queue stays open and this blocks.
+    /// Drain and stop: mark the server closed, answer every request
+    /// already queued, join the workers, and report merged stats.
+    ///
+    /// The contract (reject-after-drain): requests submitted *before*
+    /// shutdown are answered normally; requests racing *with* shutdown
+    /// are either answered or rejected with [`PredictError::Closed`];
+    /// requests submitted *after* are rejected immediately. Clients do
+    /// not need to be dropped first, and no submitter can hang —
+    /// every queued job's reply channel is settled before this
+    /// returns, and later sends fail fast on the closed flag or the
+    /// dropped queue.
     pub fn shutdown(self) -> ServeStats {
+        // flip the flag first: new submissions fail fast while the
+        // workers finish what is already queued
+        self.closed.store(true, Ordering::Release);
         drop(self.tx);
         let mut total = ModelStats::new();
         let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
@@ -267,6 +308,14 @@ impl PredictionServer {
                     .merge(&stats);
             }
         }
+        // jobs that slipped into the queue after the workers left get
+        // a clean reject instead of a reply channel that never settles
+        let rx = self.rx.lock().expect("serve queue lock");
+        while let Ok(job) = rx.try_recv() {
+            total.requests += 1;
+            let _ = job.reply.send(Err(PredictError::Closed));
+        }
+        drop(rx);
         ServeStats {
             requests: total.requests,
             predictions: total.predictions,
@@ -281,48 +330,39 @@ impl PredictionServer {
 fn worker_loop(
     registry: Arc<ModelRegistry>,
     rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    closed: Arc<AtomicBool>,
 ) -> WorkerStats {
-    // Per-model cache: reader + private predict scratch, so alternating
+    // Per-model cache ([`ModelCache`], shared with the pol::wire
+    // handlers): reader + private predict scratch, so alternating
     // traffic between models (the multi-model round-robin case) never
-    // reallocates scratch buffers. Name strings are cloned only when a
-    // model is first seen by this worker — the steady-state request
-    // path allocates nothing beyond the prediction output.
-    let mut models: HashMap<String, (SnapshotReader, PredictScratch)> =
-        HashMap::new();
-    let mut reg_version = registry.version();
+    // reallocates scratch buffers — the steady-state request path
+    // allocates nothing beyond the prediction output.
+    let mut cache = ModelCache::new(&registry);
     let mut ws = WorkerStats { total: ModelStats::new(), per_model: HashMap::new() };
     loop {
-        // hold the queue lock only for the dequeue, never while predicting
-        let job = match rx.lock().expect("serve queue lock").recv() {
-            Ok(j) => j,
-            Err(_) => break, // queue closed: server shutting down
-        };
-        // registry changed since the last request: drop every cached
-        // reader so renames/replacements take effect
-        let v = registry.version();
-        if v != reg_version {
-            models.clear();
-            reg_version = v;
-        }
-        if !models.contains_key(&job.model) {
-            match registry.get(&job.model) {
-                Some(cell) => {
-                    models.insert(
-                        job.model.clone(),
-                        (SnapshotReader::new(cell), PredictScratch::default()),
-                    );
-                }
-                None => {
-                    ws.total.requests += 1;
-                    let _ = job
-                        .reply
-                        .send(Err(PredictError::UnknownModel(job.model)));
+        // hold the queue lock only for the dequeue, never while
+        // predicting; the timeout lets the worker notice a shutdown
+        // even while clients still hold live senders
+        let job = {
+            let guard = rx.lock().expect("serve queue lock");
+            match guard.recv_timeout(Duration::from_millis(25)) {
+                Ok(j) => j,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if closed.load(Ordering::Acquire) {
+                        break; // drained: anything queued later is
+                               // rejected by shutdown's final sweep
+                    }
                     continue;
                 }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
-        }
-        let (reader, scratch) =
-            models.get_mut(&job.model).expect("cached above");
+        };
+        let Some((reader, scratch)) = cache.resolve(&registry, &job.model)
+        else {
+            ws.total.requests += 1;
+            let _ = job.reply.send(Err(PredictError::UnknownModel(job.model)));
+            continue;
+        };
         let snap = Arc::clone(reader.current());
         let preds: Vec<f64> = job
             .batch

@@ -1,0 +1,402 @@
+//! [`WireClient`] — the blocking client half of the wire protocol.
+//!
+//! One client owns one persistent connection (connection reuse is the
+//! point: the TCP + frame overhead amortizes over every request, the
+//! paper's small-packet lesson). Requests are answered in order;
+//! [`WireClient::predict_pipelined`] overlaps many in-flight frames on
+//! the one connection and matches responses back by request id. All
+//! failures are a typed [`WireError`] — transport, framing, or a typed
+//! error frame from the server — never a hang on a well-behaved
+//! socket, never a panic.
+
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::linalg::SparseFeat;
+use crate::wire::frame::{
+    decode_models, decode_predict_response, decode_stats, put_instance,
+    put_name, put_u32, read_frame, status_name, Frame, FrameBuf, FrameError,
+    FrameWriter, ModelEntry, Op, StatsReport, MAX_BATCH, MAX_NAME, MAX_PING,
+    STATUS_OK,
+};
+
+/// Why a wire call failed.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport failure (connect, read, write).
+    Io(io::Error),
+    /// The peer sent bytes that do not decode as a valid frame.
+    Frame(FrameError),
+    /// The server answered with a typed error frame.
+    Server { status: u8, message: String },
+    /// The connection closed where a response was expected.
+    Closed,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireError::Frame(e) => write!(f, "wire protocol: {e}"),
+            WireError::Server { status, message } => write!(
+                f,
+                "server error ({}): {message}",
+                status_name(*status)
+            ),
+            WireError::Closed => write!(f, "connection closed by server"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl From<FrameError> for WireError {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Io(e) => WireError::Io(e),
+            other => WireError::Frame(other),
+        }
+    }
+}
+
+/// One answered predict call.
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    pub preds: Vec<f64>,
+    /// Version of the snapshot that answered.
+    pub snapshot_version: u64,
+    /// Instances the trainer was ahead of that snapshot.
+    pub staleness: u64,
+}
+
+/// Blocking client over one reused TCP connection (see module docs).
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    buf: FrameBuf,
+    out: FrameWriter,
+    next_id: u64,
+}
+
+impl WireClient {
+    /// Connect to a [`crate::wire::WireServer`] (or anything speaking
+    /// the frame protocol).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<WireClient, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone()?;
+        Ok(WireClient {
+            reader: BufReader::with_capacity(1 << 16, stream),
+            writer: BufWriter::with_capacity(1 << 16, write_half),
+            buf: FrameBuf::new(),
+            out: FrameWriter::new(),
+            next_id: 1,
+        })
+    }
+
+    fn check_name(model: &str) -> Result<(), WireError> {
+        if model.len() > MAX_NAME {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("model name {} bytes (cap {MAX_NAME})", model.len()),
+            )));
+        }
+        Ok(())
+    }
+
+    /// Start a request frame; returns its id.
+    fn begin(&mut self, op: Op) -> u64 {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        self.out.start(op as u8, 0, id);
+        id
+    }
+
+    /// Seal and write the frame under construction (no flush — callers
+    /// flush once per send window).
+    fn enqueue(&mut self) -> Result<(), WireError> {
+        self.out.finish_to(&mut self.writer)?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<(), WireError> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the response to `(op, req_id)`. A non-OK status becomes
+    /// [`WireError::Server`] (whatever its id: a draining server tags
+    /// its final frame with id 0); an id/op mismatch on an OK frame is
+    /// a protocol error.
+    fn recv_expect(
+        &mut self,
+        op: Op,
+        req_id: u64,
+    ) -> Result<&[u8], WireError> {
+        let frame: Frame<'_> =
+            match read_frame(&mut self.reader, &mut self.buf, None, None)? {
+                Some(f) => f,
+                None => return Err(WireError::Closed),
+            };
+        if frame.status != STATUS_OK {
+            // this request's own error frame, or a connection-wide
+            // drain notice (a draining server tags its final frame
+            // with id 0); an error frame for a *different* request is
+            // a desynced stream, not this request's answer
+            if frame.req_id == req_id || frame.req_id == 0 {
+                return Err(WireError::Server {
+                    status: frame.status,
+                    message: String::from_utf8_lossy(frame.payload)
+                        .into_owned(),
+                });
+            }
+            return Err(WireError::Frame(FrameError::BadPayload(
+                "response does not match the request id/op",
+            )));
+        }
+        if frame.op != op as u8 || frame.req_id != req_id {
+            return Err(WireError::Frame(FrameError::BadPayload(
+                "response does not match the request id/op",
+            )));
+        }
+        Ok(frame.payload)
+    }
+
+    /// Read and discard one response frame whatever its status — used
+    /// to resynchronize the connection after a mid-pipeline failure.
+    fn discard_response(&mut self) -> Result<(), WireError> {
+        match read_frame(&mut self.reader, &mut self.buf, None, None)? {
+            Some(_) => Ok(()),
+            None => Err(WireError::Closed),
+        }
+    }
+
+    /// Send one `Predict` frame (no flush, no read); returns its id.
+    fn enqueue_predict(
+        &mut self,
+        model: &str,
+        x: &[SparseFeat],
+    ) -> Result<u64, WireError> {
+        let id = self.begin(Op::Predict);
+        {
+            let p = self.out.payload();
+            put_name(p, model);
+        }
+        put_instance(self.out.payload(), x)?;
+        self.enqueue()?;
+        Ok(id)
+    }
+
+    /// Read + validate one `Predict` response (exactly one prediction —
+    /// a peer answering with another count is a protocol error, so
+    /// `preds[0]` is always safe on a returned response).
+    fn read_predict_response(
+        &mut self,
+        id: u64,
+    ) -> Result<WireResponse, WireError> {
+        let mut preds = Vec::with_capacity(1);
+        let payload = self.recv_expect(Op::Predict, id)?;
+        let (snapshot_version, staleness) =
+            decode_predict_response(payload, &mut preds)?;
+        if preds.len() != 1 {
+            return Err(WireError::Frame(FrameError::BadPayload(
+                "predict response must carry exactly one prediction",
+            )));
+        }
+        Ok(WireResponse { preds, snapshot_version, staleness })
+    }
+
+    /// Score one instance against the named model.
+    pub fn predict_for(
+        &mut self,
+        model: &str,
+        x: &[SparseFeat],
+    ) -> Result<WireResponse, WireError> {
+        Self::check_name(model)?;
+        let id = self.enqueue_predict(model, x)?;
+        self.flush()?;
+        self.read_predict_response(id)
+    }
+
+    /// Score a batch in ONE frame — the small-packet fix: n predictions
+    /// amortize one header, one checksum, one syscall each way.
+    pub fn predict_batch_for(
+        &mut self,
+        model: &str,
+        batch: &[Vec<SparseFeat>],
+    ) -> Result<WireResponse, WireError> {
+        let mut preds = Vec::with_capacity(batch.len());
+        let (snapshot_version, staleness) =
+            self.predict_batch_into(model, batch, &mut preds)?;
+        Ok(WireResponse { preds, snapshot_version, staleness })
+    }
+
+    /// [`Self::predict_batch_for`] into a caller-owned buffer — the
+    /// zero-allocation steady-state path; returns
+    /// `(snapshot_version, staleness)`.
+    pub fn predict_batch_into(
+        &mut self,
+        model: &str,
+        batch: &[Vec<SparseFeat>],
+        preds: &mut Vec<f64>,
+    ) -> Result<(u64, u64), WireError> {
+        Self::check_name(model)?;
+        if batch.len() as u64 > MAX_BATCH as u64 {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "batch of {} instances (wire cap {MAX_BATCH})",
+                    batch.len()
+                ),
+            )));
+        }
+        let id = self.begin(Op::PredictBatch);
+        {
+            let p = self.out.payload();
+            put_name(p, model);
+            put_u32(p, batch.len() as u32);
+        }
+        for x in batch {
+            put_instance(self.out.payload(), x)?;
+        }
+        self.enqueue()?;
+        self.flush()?;
+        let payload = self.recv_expect(Op::PredictBatch, id)?;
+        let meta = decode_predict_response(payload, preds)?;
+        if preds.len() != batch.len() {
+            return Err(WireError::Frame(FrameError::BadPayload(
+                "batch response prediction count does not match the request",
+            )));
+        }
+        Ok(meta)
+    }
+
+    /// In-flight frames [`Self::predict_pipelined`] keeps outstanding
+    /// before reading a response. Bounded so the responses queued
+    /// behind an arbitrarily long request stream can never fill both
+    /// peers' socket buffers and deadlock the connection.
+    pub const PIPELINE_WINDOW: usize = 32;
+
+    /// Pipelining: keep up to [`Self::PIPELINE_WINDOW`] `Predict`
+    /// frames in flight on the one connection, collecting responses in
+    /// order and checking each against its request id. Overlaps client
+    /// send, server compute, and the wire — for any number of
+    /// instances.
+    ///
+    /// On failure the *first* error is returned, and the responses
+    /// still owed to other in-flight requests are read and discarded
+    /// first, so the connection stays frame-synchronized and the
+    /// client remains usable (unless the transport itself failed).
+    pub fn predict_pipelined(
+        &mut self,
+        model: &str,
+        instances: &[Vec<SparseFeat>],
+    ) -> Result<Vec<WireResponse>, WireError> {
+        Self::check_name(model)?;
+        let mut responses = Vec::with_capacity(instances.len());
+        let mut pending = std::collections::VecDeque::new();
+        let mut error: Option<WireError> = None;
+        for x in instances {
+            if pending.len() >= Self::PIPELINE_WINDOW {
+                // drain one slot before sending more: the window
+                // bounds unread responses, so neither side's socket
+                // buffer can fill up and stall the other
+                if let Err(e) = self.flush() {
+                    error = Some(e);
+                    break;
+                }
+                let id = pending.pop_front().expect("window non-empty");
+                match self.read_predict_response(id) {
+                    Ok(r) => responses.push(r),
+                    Err(e) => {
+                        error = Some(e);
+                        break;
+                    }
+                }
+            }
+            match self.enqueue_predict(model, x) {
+                Ok(id) => pending.push_back(id),
+                Err(e) => {
+                    error = Some(e);
+                    break;
+                }
+            }
+        }
+        // flush unconditionally: every id in `pending` was enqueued,
+        // and the resync drain below can only work if those frames
+        // actually reached the server (enqueue failures never leave a
+        // partial frame behind — the frame is only written whole)
+        if let Err(e) = self.flush() {
+            error.get_or_insert(e);
+        }
+        while let Some(id) = pending.pop_front() {
+            if error.is_some() {
+                // resynchronize: consume the frames still owed so the
+                // next call on this client reads its own response
+                if self.discard_response().is_err() {
+                    break; // transport gone; nothing left to recover
+                }
+                continue;
+            }
+            match self.read_predict_response(id) {
+                Ok(r) => responses.push(r),
+                Err(e) => error = Some(e),
+            }
+        }
+        match error {
+            None => Ok(responses),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Liveness probe; the payload (≤ [`MAX_PING`] bytes) round-trips.
+    pub fn ping(&mut self, payload: &[u8]) -> Result<Vec<u8>, WireError> {
+        if payload.len() > MAX_PING {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("ping payload {} bytes (cap {MAX_PING})", payload.len()),
+            )));
+        }
+        let id = self.begin(Op::Ping);
+        self.out.payload().extend_from_slice(payload);
+        self.enqueue()?;
+        self.flush()?;
+        let echoed = self.recv_expect(Op::Ping, id)?;
+        Ok(echoed.to_vec())
+    }
+
+    /// Admin: wire-level + per-model serving stats.
+    pub fn stats(&mut self) -> Result<StatsReport, WireError> {
+        let id = self.begin(Op::Stats);
+        self.enqueue()?;
+        self.flush()?;
+        let payload = self.recv_expect(Op::Stats, id)?;
+        Ok(decode_stats(payload)?)
+    }
+
+    /// Admin: the registry's current models.
+    pub fn list_models(&mut self) -> Result<Vec<ModelEntry>, WireError> {
+        let id = self.begin(Op::ListModels);
+        self.enqueue()?;
+        self.flush()?;
+        let payload = self.recv_expect(Op::ListModels, id)?;
+        Ok(decode_models(payload)?)
+    }
+
+    /// Admin: ask the server to drain and stop. `Ok` means the server
+    /// acknowledged and is draining; servers with remote shutdown
+    /// disabled answer with a [`WireError::Server`] forbidden status.
+    pub fn shutdown_server(&mut self) -> Result<(), WireError> {
+        let id = self.begin(Op::Shutdown);
+        self.enqueue()?;
+        self.flush()?;
+        self.recv_expect(Op::Shutdown, id)?;
+        Ok(())
+    }
+}

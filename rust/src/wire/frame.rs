@@ -1,0 +1,1098 @@
+//! The `pol` wire frame: a versioned, length-prefixed, checksummed
+//! binary envelope — the paper's small-packet lesson ("the use of many
+//! small packets can result in substantially reduced bandwidth",
+//! §0.5.3) applied to serving: many predictions batch into ONE frame.
+//!
+//! Layout (all integers little-endian):
+//!
+//! | offset   | size | field    | notes                                |
+//! |----------|------|----------|--------------------------------------|
+//! | 0        | 4    | len      | bytes after this field (24 ≤ len ≤ 4 MiB) |
+//! | 4        | 4    | magic    | `POLW`                               |
+//! | 8        | 2    | version  | [`PROTO_VERSION`]                    |
+//! | 10       | 1    | op       | [`Op`]                               |
+//! | 11       | 1    | status   | 0 on requests; [`STATUS_OK`]/error on responses |
+//! | 12       | 8    | req_id   | echoed verbatim in the response      |
+//! | 20       | n    | payload  | op-specific                          |
+//! | 20 + n   | 8    | checksum | FNV-1a64 over magic..payload         |
+//!
+//! Every cap is enforced *before* the corresponding allocation: a
+//! hostile length prefix beyond [`MAX_FRAME`] is rejected after reading
+//! four bytes, and every count inside a payload (batch size, features
+//! per instance, name length) is validated against both its cap and the
+//! bytes actually present — the decoder never allocates proportionally
+//! to an attacker-chosen number, only to bytes actually received (and
+//! those are capped at one frame). This mirrors the `.polz` codec
+//! discipline in [`crate::serve::checkpoint`] and reuses the same
+//! [`crate::hashing::fnv1a64`] checksum.
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::hashing::fnv1a64;
+use crate::linalg::SparseFeat;
+
+/// Frame magic: `POLW` ("parallel online learning, wire").
+pub const MAGIC: [u8; 4] = *b"POLW";
+
+/// Protocol version; peers speaking another version are rejected.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Body bytes of an empty-payload frame: 16-byte header + 8 checksum.
+pub const MIN_FRAME: u32 = 24;
+
+/// Hard cap on the length prefix (body bytes): one frame can never make
+/// the peer allocate more than this.
+pub const MAX_FRAME: u32 = 1 << 22;
+
+/// Instances per `PredictBatch` frame.
+pub const MAX_BATCH: u32 = 4_096;
+
+/// Sparse features per instance.
+pub const MAX_FEATURES: u32 = 1 << 16;
+
+/// Model-name bytes (names are length-prefixed with one byte).
+pub const MAX_NAME: usize = 255;
+
+/// Ping echo-payload bytes.
+pub const MAX_PING: usize = 4_096;
+
+/// Response status: success.
+pub const STATUS_OK: u8 = 0;
+/// Response status: payload did not parse for its op.
+pub const STATUS_BAD_FRAME: u8 = 1;
+/// Response status: op byte not in [`Op`].
+pub const STATUS_UNKNOWN_OP: u8 = 2;
+/// Response status: no model registered under the requested name.
+pub const STATUS_UNKNOWN_MODEL: u8 = 3;
+/// Response status: a payload count exceeded its cap.
+pub const STATUS_TOO_LARGE: u8 = 4;
+/// Response status: server is draining; retry against another replica.
+pub const STATUS_SHUTTING_DOWN: u8 = 5;
+/// Response status: op understood but not permitted (e.g. `Shutdown`
+/// on a server that disabled remote shutdown).
+pub const STATUS_FORBIDDEN: u8 = 6;
+
+/// Human-readable name for a response status code.
+pub fn status_name(status: u8) -> &'static str {
+    match status {
+        STATUS_OK => "ok",
+        STATUS_BAD_FRAME => "bad frame",
+        STATUS_UNKNOWN_OP => "unknown op",
+        STATUS_UNKNOWN_MODEL => "unknown model",
+        STATUS_TOO_LARGE => "over cap",
+        STATUS_SHUTTING_DOWN => "shutting down",
+        STATUS_FORBIDDEN => "forbidden",
+        _ => "unknown status",
+    }
+}
+
+/// Operation codes. Requests carry one of these; the response echoes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Score one instance: `name | nnz:u32 | nnz × (idx:u32, val:f32)`.
+    Predict = 1,
+    /// Score many instances in one frame:
+    /// `name | count:u32 | count × instance`.
+    PredictBatch = 2,
+    /// Admin: wire-level + per-model serving stats (empty payload).
+    Stats = 3,
+    /// Admin: registered models with dim/version/params (empty payload).
+    ListModels = 4,
+    /// Liveness probe; the payload (≤ [`MAX_PING`] bytes) is echoed.
+    Ping = 5,
+    /// Admin: acknowledge, then gracefully drain the server.
+    Shutdown = 6,
+}
+
+impl Op {
+    pub fn from_u8(op: u8) -> Option<Op> {
+        match op {
+            1 => Some(Op::Predict),
+            2 => Some(Op::PredictBatch),
+            3 => Some(Op::Stats),
+            4 => Some(Op::ListModels),
+            5 => Some(Op::Ping),
+            6 => Some(Op::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// Why a frame failed to decode. Framing-level corruption (bad length,
+/// magic, version, checksum, truncation) means the byte stream can no
+/// longer be trusted and the connection should close; payload-level
+/// errors are answerable with a typed error frame.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Transport failure while reading/writing.
+    Io(io::Error),
+    /// Declared body length outside `[MIN_FRAME, MAX_FRAME]` — rejected
+    /// before any allocation.
+    BadLength { len: u32 },
+    /// First four body bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Peer speaks a different protocol version.
+    BadVersion(u16),
+    /// FNV-1a64 over the body did not match the trailing checksum.
+    ChecksumMismatch,
+    /// Stream ended (or the peer stalled) mid-frame.
+    Truncated,
+    /// The payload did not parse for its op.
+    BadPayload(&'static str),
+    /// A count in the payload exceeded its cap.
+    OverCap(&'static str),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "wire i/o: {e}"),
+            FrameError::BadLength { len } => write!(
+                f,
+                "bad frame length {len} (valid: {MIN_FRAME}..={MAX_FRAME})"
+            ),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?} (want {MAGIC:02x?})")
+            }
+            FrameError::BadVersion(v) => {
+                write!(f, "protocol version {v} (this peer speaks {PROTO_VERSION})")
+            }
+            FrameError::ChecksumMismatch => write!(f, "frame checksum mismatch"),
+            FrameError::Truncated => write!(f, "truncated frame"),
+            FrameError::BadPayload(what) => write!(f, "bad payload: {what}"),
+            FrameError::OverCap(what) => write!(f, "over cap: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+// ---- little-endian scalar helpers -----------------------------------
+
+pub(crate) fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed (one byte) string; caller enforces [`MAX_NAME`]
+/// (the client bounds request names up front, and the admin encoders
+/// filter out unrepresentable registry names), so the `as u8` below
+/// can never wrap into a desynced frame.
+pub(crate) fn put_name(out: &mut Vec<u8>, name: &str) {
+    debug_assert!(name.len() <= MAX_NAME);
+    out.push(name.len() as u8);
+    out.extend_from_slice(name.as_bytes());
+}
+
+/// Bounds-checked payload cursor: every `take_*` validates against the
+/// bytes actually present before touching them, so a lying count can
+/// never read past the frame or trigger an oversized allocation.
+pub(crate) struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len()
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if n > self.b.len() {
+            return Err(FrameError::Truncated);
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32, FrameError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_name(&mut self) -> Result<&'a str, FrameError> {
+        let len = self.take_u8()? as usize;
+        std::str::from_utf8(self.take(len)?)
+            .map_err(|_| FrameError::BadPayload("model name is not UTF-8"))
+    }
+
+    pub fn finish(self) -> Result<(), FrameError> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(FrameError::BadPayload("trailing bytes after payload"))
+        }
+    }
+}
+
+// ---- frame encode ---------------------------------------------------
+
+/// Reusable frame builder: `start`, append payload bytes through
+/// [`FrameWriter::payload`], then [`FrameWriter::finish_to`] — which
+/// seals the checksum and writes `len | body` in one buffered write.
+/// Steady state allocates nothing (the body buffer is recycled).
+pub struct FrameWriter {
+    body: Vec<u8>,
+}
+
+impl FrameWriter {
+    pub fn new() -> FrameWriter {
+        FrameWriter { body: Vec::with_capacity(256) }
+    }
+
+    /// Begin a frame; any previous contents are discarded.
+    pub fn start(&mut self, op: u8, status: u8, req_id: u64) {
+        self.body.clear();
+        self.body.extend_from_slice(&MAGIC);
+        put_u16(&mut self.body, PROTO_VERSION);
+        self.body.push(op);
+        self.body.push(status);
+        put_u64(&mut self.body, req_id);
+    }
+
+    /// The payload under construction (append with the `put_*` helpers).
+    pub fn payload(&mut self) -> &mut Vec<u8> {
+        &mut self.body
+    }
+
+    /// Seal the checksum and write the frame; returns bytes written.
+    /// Fails (before writing anything) if the payload grew past
+    /// [`MAX_FRAME`] — the writer enforces the reader's cap, so a frame
+    /// that sends is always receivable.
+    pub fn finish_to(&mut self, out: &mut impl Write) -> io::Result<usize> {
+        let sum = fnv1a64(&self.body);
+        put_u64(&mut self.body, sum);
+        let len = self.body.len() as u64;
+        if len > MAX_FRAME as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("frame body {len} bytes exceeds cap {MAX_FRAME}"),
+            ));
+        }
+        out.write_all(&(len as u32).to_le_bytes())?;
+        out.write_all(&self.body)?;
+        Ok(4 + self.body.len())
+    }
+}
+
+impl Default for FrameWriter {
+    fn default() -> Self {
+        FrameWriter::new()
+    }
+}
+
+// ---- frame decode ---------------------------------------------------
+
+/// One decoded frame, borrowing the connection's reusable buffer.
+#[derive(Debug)]
+pub struct Frame<'a> {
+    /// Raw op byte (map through [`Op::from_u8`]; unknown ops get a
+    /// typed error response rather than a decode failure).
+    pub op: u8,
+    pub status: u8,
+    pub req_id: u64,
+    pub payload: &'a [u8],
+    /// Wire size of this frame including the length prefix.
+    pub wire_bytes: usize,
+}
+
+/// Reusable receive buffer; its capacity is bounded by [`MAX_FRAME`].
+pub struct FrameBuf {
+    body: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn new() -> FrameBuf {
+        FrameBuf { body: Vec::with_capacity(256) }
+    }
+}
+
+impl Default for FrameBuf {
+    fn default() -> Self {
+        FrameBuf::new()
+    }
+}
+
+/// Read exactly `buf.len()` bytes. `Ok(false)` means the stream ended
+/// cleanly before the first byte (only meaningful for the length
+/// prefix); a timeout checks `stop` and `deadline` and either keeps
+/// waiting or bails out — with `Ok(false)` at a frame boundary (drain
+/// or idle expiry is a clean close), [`FrameError::Truncated`]
+/// mid-read (a peer that stalls inside a frame is indistinguishable
+/// from a truncating one).
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    stop: Option<&AtomicBool>,
+    deadline: Option<std::time::Instant>,
+    at_boundary: bool,
+) -> Result<bool, FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 && at_boundary {
+                    Ok(false) // clean close between frames
+                } else {
+                    Err(FrameError::Truncated)
+                };
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) && stop.is_some() =>
+            {
+                let drain =
+                    stop.is_some_and(|s| s.load(Ordering::Acquire));
+                let expired = deadline
+                    .is_some_and(|d| std::time::Instant::now() >= d);
+                if drain || expired {
+                    return if got == 0 && at_boundary {
+                        Ok(false) // draining/idle: close between frames
+                    } else {
+                        Err(FrameError::Truncated)
+                    };
+                }
+                // timeout with no drain and no expiry: keep waiting
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read and validate one frame into `buf`. `Ok(None)` is a clean close
+/// (EOF between frames, `stop` set while idle, or `idle_deadline`
+/// passed while idle — the slow-loris guard: a peer that holds a
+/// connection without sending a frame is disconnected at the
+/// deadline). Length, magic, version, and checksum are all verified
+/// here; the length cap is checked *before* the body buffer grows, so
+/// a hostile length prefix can never force an allocation.
+pub fn read_frame<'a>(
+    r: &mut impl Read,
+    buf: &'a mut FrameBuf,
+    stop: Option<&AtomicBool>,
+    idle_deadline: Option<std::time::Instant>,
+) -> Result<Option<Frame<'a>>, FrameError> {
+    let mut len4 = [0u8; 4];
+    if !read_full(r, &mut len4, stop, idle_deadline, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4);
+    if !(MIN_FRAME..=MAX_FRAME).contains(&len) {
+        return Err(FrameError::BadLength { len });
+    }
+    buf.body.resize(len as usize, 0);
+    if !read_full(r, &mut buf.body, stop, idle_deadline, false)? {
+        return Err(FrameError::Truncated);
+    }
+    let body = &buf.body[..];
+    let (content, sum_bytes) = body.split_at(body.len() - 8);
+    let sum = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    if fnv1a64(content) != sum {
+        return Err(FrameError::ChecksumMismatch);
+    }
+    if content[0..4] != MAGIC {
+        return Err(FrameError::BadMagic(content[0..4].try_into().unwrap()));
+    }
+    let version = u16::from_le_bytes(content[4..6].try_into().unwrap());
+    if version != PROTO_VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    Ok(Some(Frame {
+        op: content[6],
+        status: content[7],
+        req_id: u64::from_le_bytes(content[8..16].try_into().unwrap()),
+        payload: &content[16..],
+        wire_bytes: 4 + len as usize,
+    }))
+}
+
+// ---- predict payloads -----------------------------------------------
+
+/// Append one instance (`nnz | nnz × (idx, val)`) to a payload.
+/// Errors if the instance exceeds [`MAX_FEATURES`].
+pub fn put_instance(out: &mut Vec<u8>, x: &[SparseFeat]) -> io::Result<()> {
+    if x.len() as u64 > MAX_FEATURES as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "instance has {} features (wire cap {MAX_FEATURES})",
+                x.len()
+            ),
+        ));
+    }
+    put_u32(out, x.len() as u32);
+    for &(i, v) in x {
+        put_u32(out, i);
+        put_f32(out, v);
+    }
+    Ok(())
+}
+
+/// Features a recycled instance buffer keeps capacity for between
+/// frames. Typical instances sit far below this (the synthetic
+/// workloads run ~75–150 nnz), so the steady-state decode path still
+/// allocates nothing — but a burst of [`MAX_FEATURES`]-sized instances
+/// can no longer pin `MAX_BATCH × MAX_FEATURES × 8` bytes (≈ 2 GiB)
+/// of scratch for a connection's lifetime: retained capacity is
+/// bounded at `MAX_BATCH × RETAINED_FEATURES × 8` ≈ 8 MiB.
+const RETAINED_FEATURES: usize = 256;
+
+/// Decoded-request scratch: instance buffers recycled across frames
+/// (capacity retention bounded by [`RETAINED_FEATURES`] per slot), so
+/// the steady-state decode path allocates nothing.
+#[derive(Default)]
+pub struct BatchScratch {
+    instances: Vec<Vec<SparseFeat>>,
+    used: usize,
+}
+
+impl BatchScratch {
+    /// The instances decoded by the last
+    /// [`decode_predict_request`] call.
+    pub fn batch(&self) -> &[Vec<SparseFeat>] {
+        &self.instances[..self.used]
+    }
+
+    /// Give back capacity left by previous frames' oversized
+    /// instances — the hostile-peer memory-retention bound (see
+    /// [`RETAINED_FEATURES`]). Called at the start of every decode, so
+    /// only the *current* frame's actual content can ever exceed the
+    /// retained bound, and only until the next frame arrives.
+    fn reclaim(&mut self) {
+        for slot in &mut self.instances {
+            if slot.capacity() > RETAINED_FEATURES {
+                slot.clear();
+                slot.shrink_to(RETAINED_FEATURES);
+            }
+        }
+    }
+
+    fn next_mut(&mut self) -> &mut Vec<SparseFeat> {
+        if self.used == self.instances.len() {
+            self.instances.push(Vec::new());
+        }
+        self.used += 1;
+        let slot = &mut self.instances[self.used - 1];
+        slot.clear();
+        slot
+    }
+}
+
+fn take_instance_into(
+    cur: &mut Cur<'_>,
+    out: &mut Vec<SparseFeat>,
+) -> Result<(), FrameError> {
+    let nnz = cur.take_u32()?;
+    if nnz > MAX_FEATURES {
+        return Err(FrameError::OverCap("features per instance"));
+    }
+    // 8 bytes per feature must actually be present before reserving
+    if (nnz as usize) * 8 > cur.remaining() {
+        return Err(FrameError::Truncated);
+    }
+    out.reserve(nnz as usize);
+    for _ in 0..nnz {
+        let i = cur.take_u32()?;
+        let v = cur.take_f32()?;
+        out.push((i, v));
+    }
+    Ok(())
+}
+
+/// Decode a [`Op::Predict`] / [`Op::PredictBatch`] payload into the
+/// recycled scratch; returns the target model name (borrowed from the
+/// frame buffer).
+pub fn decode_predict_request<'a>(
+    op: Op,
+    payload: &'a [u8],
+    scratch: &mut BatchScratch,
+) -> Result<&'a str, FrameError> {
+    scratch.used = 0;
+    scratch.reclaim();
+    let mut cur = Cur::new(payload);
+    let name = cur.take_name()?;
+    let count = match op {
+        Op::Predict => 1,
+        Op::PredictBatch => {
+            let count = cur.take_u32()?;
+            if count > MAX_BATCH {
+                return Err(FrameError::OverCap("batch size"));
+            }
+            // an empty batch is well-formed (responds with zero preds);
+            // each instance needs at least its nnz word
+            if (count as usize) * 4 > cur.remaining() {
+                return Err(FrameError::Truncated);
+            }
+            count
+        }
+        _ => return Err(FrameError::BadPayload("not a predict op")),
+    };
+    for _ in 0..count {
+        take_instance_into(&mut cur, scratch.next_mut())?;
+    }
+    cur.finish()?;
+    Ok(name)
+}
+
+/// Encode a predict response payload:
+/// `count:u32 | count × pred:f64 | snapshot_version:u64 | staleness:u64`.
+pub fn put_predict_response(
+    out: &mut Vec<u8>,
+    preds: &[f64],
+    snapshot_version: u64,
+    staleness: u64,
+) {
+    put_u32(out, preds.len() as u32);
+    for &p in preds {
+        put_f64(out, p);
+    }
+    put_u64(out, snapshot_version);
+    put_u64(out, staleness);
+}
+
+/// Decode a predict response into `preds` (cleared first); returns
+/// `(snapshot_version, staleness)`.
+pub fn decode_predict_response(
+    payload: &[u8],
+    preds: &mut Vec<f64>,
+) -> Result<(u64, u64), FrameError> {
+    preds.clear();
+    let mut cur = Cur::new(payload);
+    let count = cur.take_u32()?;
+    if count > MAX_BATCH {
+        return Err(FrameError::OverCap("batch size"));
+    }
+    if (count as usize) * 8 > cur.remaining() {
+        return Err(FrameError::Truncated);
+    }
+    preds.reserve(count as usize);
+    for _ in 0..count {
+        preds.push(cur.take_f64()?);
+    }
+    let version = cur.take_u64()?;
+    let staleness = cur.take_u64()?;
+    cur.finish()?;
+    Ok((version, staleness))
+}
+
+// ---- admin payloads -------------------------------------------------
+
+/// Per-model serving stats as reported over the wire (quantiles are
+/// pre-derived from the server's [`crate::metrics::LatencyHistogram`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelStatsReport {
+    pub name: String,
+    pub requests: u64,
+    pub predictions: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub max_staleness: u64,
+}
+
+/// Wire-level stats as reported by the [`Op::Stats`] admin op.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsReport {
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub decode_errors: u64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    pub active_connections: u64,
+    pub uptime_us: u64,
+    pub models: Vec<ModelStatsReport>,
+}
+
+/// A name the one-byte length prefix can carry. Longer registry names
+/// cannot be addressed by any request frame either (request names are
+/// capped the same way), so the admin encoders omit such entries
+/// instead of emitting a desynced frame.
+fn wire_named<T>(items: &[T], name: impl Fn(&T) -> &str) -> Vec<&T> {
+    items.iter().filter(|m| name(m).len() <= MAX_NAME).collect()
+}
+
+pub fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
+    put_u64(out, s.bytes_in);
+    put_u64(out, s.bytes_out);
+    put_u64(out, s.frames_in);
+    put_u64(out, s.frames_out);
+    put_u64(out, s.decode_errors);
+    put_u64(out, s.connections);
+    put_u64(out, s.active_connections);
+    put_u64(out, s.uptime_us);
+    let models = wire_named(&s.models, |m| &m.name);
+    put_u32(out, models.len() as u32);
+    for m in models {
+        put_name(out, &m.name);
+        put_u64(out, m.requests);
+        put_u64(out, m.predictions);
+        put_u64(out, m.p50_ns);
+        put_u64(out, m.p99_ns);
+        put_u64(out, m.max_ns);
+        put_u64(out, m.max_staleness);
+    }
+}
+
+pub fn decode_stats(payload: &[u8]) -> Result<StatsReport, FrameError> {
+    let mut cur = Cur::new(payload);
+    let mut s = StatsReport {
+        bytes_in: cur.take_u64()?,
+        bytes_out: cur.take_u64()?,
+        frames_in: cur.take_u64()?,
+        frames_out: cur.take_u64()?,
+        decode_errors: cur.take_u64()?,
+        connections: cur.take_u64()?,
+        active_connections: cur.take_u64()?,
+        uptime_us: cur.take_u64()?,
+        models: Vec::new(),
+    };
+    let count = cur.take_u32()?;
+    // name prefix + six u64 counters per entry must be present
+    if (count as usize) * (1 + 48) > cur.remaining() {
+        return Err(FrameError::Truncated);
+    }
+    for _ in 0..count {
+        let name = cur.take_name()?.to_string();
+        s.models.push(ModelStatsReport {
+            name,
+            requests: cur.take_u64()?,
+            predictions: cur.take_u64()?,
+            p50_ns: cur.take_u64()?,
+            p99_ns: cur.take_u64()?,
+            max_ns: cur.take_u64()?,
+            max_staleness: cur.take_u64()?,
+        });
+    }
+    cur.finish()?;
+    Ok(s)
+}
+
+/// One registry entry as reported by the [`Op::ListModels`] admin op.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dim: u64,
+    pub params: u64,
+    pub snapshot_version: u64,
+    pub trained_instances: u64,
+}
+
+pub fn put_models(out: &mut Vec<u8>, models: &[ModelEntry]) {
+    let models = wire_named(models, |m| &m.name);
+    put_u32(out, models.len() as u32);
+    for m in models {
+        put_name(out, &m.name);
+        put_u64(out, m.dim);
+        put_u64(out, m.params);
+        put_u64(out, m.snapshot_version);
+        put_u64(out, m.trained_instances);
+    }
+}
+
+pub fn decode_models(payload: &[u8]) -> Result<Vec<ModelEntry>, FrameError> {
+    let mut cur = Cur::new(payload);
+    let count = cur.take_u32()?;
+    if (count as usize) * (1 + 32) > cur.remaining() {
+        return Err(FrameError::Truncated);
+    }
+    let mut models = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let name = cur.take_name()?.to_string();
+        models.push(ModelEntry {
+            name,
+            dim: cur.take_u64()?,
+            params: cur.take_u64()?,
+            snapshot_version: cur.take_u64()?,
+            trained_instances: cur.take_u64()?,
+        });
+    }
+    cur.finish()?;
+    Ok(models)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(op: u8, status: u8, req_id: u64, payload: &[u8]) -> Vec<u8> {
+        let mut w = FrameWriter::new();
+        w.start(op, status, req_id);
+        w.payload().extend_from_slice(payload);
+        let mut out = Vec::new();
+        let n = w.finish_to(&mut out).unwrap();
+        assert_eq!(n, out.len());
+        out
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let bytes = round_trip(Op::Ping as u8, STATUS_OK, 42, b"hello");
+        let mut buf = FrameBuf::new();
+        let f = read_frame(&mut bytes.as_slice(), &mut buf, None, None)
+            .unwrap()
+            .unwrap();
+        assert_eq!(f.op, Op::Ping as u8);
+        assert_eq!(f.status, STATUS_OK);
+        assert_eq!(f.req_id, 42);
+        assert_eq!(f.payload, b"hello");
+        assert_eq!(f.wire_bytes, bytes.len());
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean_close() {
+        let mut buf = FrameBuf::new();
+        let got = read_frame(&mut (&[][..]), &mut buf, None, None).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let bytes = round_trip(Op::Ping as u8, STATUS_OK, 1, b"abc");
+        for cut in 1..bytes.len() {
+            let mut buf = FrameBuf::new();
+            let err = read_frame(&mut &bytes[..cut], &mut buf, None, None);
+            assert!(
+                matches!(err, Err(FrameError::Truncated)),
+                "cut at {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        // a 4 GiB claim must fail after four bytes, not allocate
+        let mut bytes = (u32::MAX).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 64]);
+        let mut buf = FrameBuf::new();
+        let err = read_frame(&mut bytes.as_slice(), &mut buf, None, None);
+        assert!(matches!(
+            err,
+            Err(FrameError::BadLength { len: u32::MAX })
+        ));
+        // the receive buffer never grew toward the claimed 4 GiB
+        assert!(buf.body.capacity() <= 256, "{}", buf.body.capacity());
+        // under-length frames are rejected the same way
+        let mut tiny = 8u32.to_le_bytes().to_vec();
+        tiny.extend_from_slice(&[0u8; 8]);
+        let mut buf = FrameBuf::new();
+        assert!(matches!(
+            read_frame(&mut tiny.as_slice(), &mut buf, None, None),
+            Err(FrameError::BadLength { len: 8 })
+        ));
+    }
+
+    #[test]
+    fn bad_magic_version_checksum_rejected() {
+        let good = round_trip(Op::Stats as u8, STATUS_OK, 7, b"");
+        // flip a payload-region byte: checksum catches it
+        let mut corrupt = good.clone();
+        let last = corrupt.len() - 9; // inside req_id
+        corrupt[last] ^= 0xFF;
+        let mut buf = FrameBuf::new();
+        assert!(matches!(
+            read_frame(&mut corrupt.as_slice(), &mut buf, None, None),
+            Err(FrameError::ChecksumMismatch)
+        ));
+        // checksum valid but magic wrong
+        let mut w = FrameWriter::new();
+        w.start(Op::Stats as u8, STATUS_OK, 7);
+        w.body[0] = b'X';
+        let mut bytes = Vec::new();
+        w.finish_to(&mut bytes).unwrap();
+        let mut buf = FrameBuf::new();
+        assert!(matches!(
+            read_frame(&mut bytes.as_slice(), &mut buf, None, None),
+            Err(FrameError::BadMagic(_))
+        ));
+        // checksum valid but version unknown
+        let mut w = FrameWriter::new();
+        w.start(Op::Stats as u8, STATUS_OK, 7);
+        w.body[4] = 0xEE;
+        w.body[5] = 0xEE;
+        let mut bytes = Vec::new();
+        w.finish_to(&mut bytes).unwrap();
+        let mut buf = FrameBuf::new();
+        assert!(matches!(
+            read_frame(&mut bytes.as_slice(), &mut buf, None, None),
+            Err(FrameError::BadVersion(0xEEEE))
+        ));
+    }
+
+    #[test]
+    fn predict_payload_round_trips() {
+        let x1: Vec<SparseFeat> = vec![(0, 1.5), (7, -2.0)];
+        let x2: Vec<SparseFeat> = vec![(3, 0.25)];
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_u32(&mut payload, 2);
+        put_instance(&mut payload, &x1).unwrap();
+        put_instance(&mut payload, &x2).unwrap();
+        let mut scratch = BatchScratch::default();
+        let name =
+            decode_predict_request(Op::PredictBatch, &payload, &mut scratch)
+                .unwrap();
+        assert_eq!(name, "m");
+        assert_eq!(scratch.batch(), &[x1.clone(), x2]);
+        // single-predict framing: no count word
+        let mut payload = Vec::new();
+        put_name(&mut payload, "solo");
+        put_instance(&mut payload, &x1).unwrap();
+        let name = decode_predict_request(Op::Predict, &payload, &mut scratch)
+            .unwrap();
+        assert_eq!(name, "solo");
+        assert_eq!(scratch.batch(), &[x1]);
+    }
+
+    #[test]
+    fn lying_counts_fail_before_allocating() {
+        // batch count says 4096 instances but only a few bytes follow
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_u32(&mut payload, MAX_BATCH);
+        put_u32(&mut payload, 0);
+        let mut scratch = BatchScratch::default();
+        assert!(matches!(
+            decode_predict_request(Op::PredictBatch, &payload, &mut scratch),
+            Err(FrameError::Truncated)
+        ));
+        assert_eq!(scratch.instances.capacity(), 0);
+        // over-cap batch count is its own typed error
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_u32(&mut payload, MAX_BATCH + 1);
+        assert!(matches!(
+            decode_predict_request(Op::PredictBatch, &payload, &mut scratch),
+            Err(FrameError::OverCap("batch size"))
+        ));
+        // nnz over cap
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_u32(&mut payload, MAX_FEATURES + 1);
+        assert!(matches!(
+            decode_predict_request(Op::Predict, &payload, &mut scratch),
+            Err(FrameError::OverCap("features per instance"))
+        ));
+        // nnz claims more features than bytes present
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_u32(&mut payload, 1000);
+        put_u32(&mut payload, 1);
+        put_f32(&mut payload, 1.0);
+        assert!(matches!(
+            decode_predict_request(Op::Predict, &payload, &mut scratch),
+            Err(FrameError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn oversized_scratch_capacity_is_not_retained_across_frames() {
+        // one max-size instance must not pin its buffer forever: the
+        // next frame's reuse shrinks the slot back under the bound
+        let big: Vec<SparseFeat> =
+            (0..MAX_FEATURES).map(|i| (i, 1.0)).collect();
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_instance(&mut payload, &big).unwrap();
+        let mut scratch = BatchScratch::default();
+        decode_predict_request(Op::Predict, &payload, &mut scratch).unwrap();
+        assert_eq!(scratch.batch()[0].len(), MAX_FEATURES as usize);
+
+        let mut small = Vec::new();
+        put_name(&mut small, "m");
+        put_instance(&mut small, &[(0, 1.0)]).unwrap();
+        decode_predict_request(Op::Predict, &small, &mut scratch).unwrap();
+        assert_eq!(scratch.batch(), &[vec![(0u32, 1.0f32)]]);
+        // shrink_to may leave a little allocator slack, but nothing
+        // near the max-size instance that came before
+        assert!(
+            scratch.instances[0].capacity() <= 2 * RETAINED_FEATURES,
+            "retained {} features of capacity",
+            scratch.instances[0].capacity()
+        );
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut payload = Vec::new();
+        put_name(&mut payload, "m");
+        put_instance(&mut payload, &[(0, 1.0)]).unwrap();
+        payload.push(0);
+        let mut scratch = BatchScratch::default();
+        assert!(matches!(
+            decode_predict_request(Op::Predict, &payload, &mut scratch),
+            Err(FrameError::BadPayload(_))
+        ));
+    }
+
+    #[test]
+    fn predict_response_round_trips_bit_exactly() {
+        let preds = vec![0.5, -0.0, f64::MIN_POSITIVE, 1e300];
+        let mut payload = Vec::new();
+        put_predict_response(&mut payload, &preds, 9, 250);
+        let mut back = Vec::new();
+        let (version, staleness) =
+            decode_predict_response(&payload, &mut back).unwrap();
+        assert_eq!(version, 9);
+        assert_eq!(staleness, 250);
+        assert_eq!(back.len(), preds.len());
+        for (a, b) in preds.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn stats_and_models_round_trip() {
+        let s = StatsReport {
+            bytes_in: 1,
+            bytes_out: 2,
+            frames_in: 3,
+            frames_out: 4,
+            decode_errors: 5,
+            connections: 6,
+            active_connections: 1,
+            uptime_us: 99,
+            models: vec![ModelStatsReport {
+                name: "tree".into(),
+                requests: 10,
+                predictions: 20,
+                p50_ns: 100,
+                p99_ns: 900,
+                max_ns: 1000,
+                max_staleness: 7,
+            }],
+        };
+        let mut payload = Vec::new();
+        put_stats(&mut payload, &s);
+        assert_eq!(decode_stats(&payload).unwrap(), s);
+
+        let models = vec![ModelEntry {
+            name: "sgd".into(),
+            dim: 1024,
+            params: 1024,
+            snapshot_version: 3,
+            trained_instances: 50_000,
+        }];
+        let mut payload = Vec::new();
+        put_models(&mut payload, &models);
+        assert_eq!(decode_models(&payload).unwrap(), models);
+    }
+
+    #[test]
+    fn unrepresentable_names_are_omitted_not_desynced() {
+        // a registry name longer than the one-byte length prefix can
+        // never be addressed over the wire; the admin encoders must
+        // skip it rather than wrap the length into a corrupt frame
+        let models = vec![
+            ModelEntry {
+                name: "ok".into(),
+                dim: 8,
+                params: 8,
+                snapshot_version: 0,
+                trained_instances: 0,
+            },
+            ModelEntry {
+                name: "x".repeat(MAX_NAME + 1),
+                dim: 8,
+                params: 8,
+                snapshot_version: 0,
+                trained_instances: 0,
+            },
+        ];
+        let mut payload = Vec::new();
+        put_models(&mut payload, &models);
+        let back = decode_models(&payload).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].name, "ok");
+
+        let s = StatsReport {
+            models: vec![ModelStatsReport {
+                name: "y".repeat(MAX_NAME + 1),
+                requests: 1,
+                predictions: 1,
+                p50_ns: 0,
+                p99_ns: 0,
+                max_ns: 0,
+                max_staleness: 0,
+            }],
+            ..Default::default()
+        };
+        let mut payload = Vec::new();
+        put_stats(&mut payload, &s);
+        assert!(decode_stats(&payload).unwrap().models.is_empty());
+    }
+
+    #[test]
+    fn op_codes_round_trip() {
+        for op in [
+            Op::Predict,
+            Op::PredictBatch,
+            Op::Stats,
+            Op::ListModels,
+            Op::Ping,
+            Op::Shutdown,
+        ] {
+            assert_eq!(Op::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(Op::from_u8(0), None);
+        assert_eq!(Op::from_u8(200), None);
+    }
+
+    #[test]
+    fn writer_enforces_reader_caps() {
+        let mut w = FrameWriter::new();
+        w.start(Op::Ping as u8, STATUS_OK, 1);
+        w.payload().resize(MAX_FRAME as usize, 0);
+        let mut out = Vec::new();
+        assert!(w.finish_to(&mut out).is_err());
+        assert!(out.is_empty(), "nothing written on refusal");
+    }
+}

@@ -1,0 +1,75 @@
+//! `pol::wire` — the real network front-end: a length-prefixed binary
+//! protocol, a TCP server over the serving registry, a blocking
+//! client, and an admin plane.
+//!
+//! The paper's multinode story (§0.5.3) is shaped by network behaviour
+//! — "the use of many small packets can result in substantially
+//! reduced bandwidth" — and this module applies that lesson to the
+//! serving path: many predictions batch into one frame, one checksum,
+//! one syscall each way. [`crate::net`] *simulates* that wire for the
+//! training-time experiments; `pol::wire` is the deployable one,
+//! pure `std` like the rest of the crate.
+//!
+//! * [`frame`] — the versioned envelope. Layout (little-endian):
+//!
+//!   | offset | size | field    | notes                               |
+//!   |--------|------|----------|-------------------------------------|
+//!   | 0      | 4    | len      | body bytes; 24 ≤ len ≤ 4 MiB        |
+//!   | 4      | 4    | magic    | `POLW`                              |
+//!   | 8      | 2    | version  | protocol version (1)                |
+//!   | 10     | 1    | op       | Predict, PredictBatch, Stats, ListModels, Ping, Shutdown |
+//!   | 11     | 1    | status   | 0 = request/ok; error code on responses |
+//!   | 12     | 8    | req_id   | echoed in the response              |
+//!   | 20     | n    | payload  | op-specific                         |
+//!   | 20 + n | 8    | checksum | FNV-1a64 over magic..payload        |
+//!
+//!   Strict caps (frame size, batch size, features per instance, name
+//!   and ping lengths) are enforced *before* any allocation, so a
+//!   hostile peer can never make either side allocate past one frame —
+//!   the same discipline as the `.polz` codec.
+//! * [`server`] — [`WireServer`]: a `TcpListener` acceptor plus a
+//!   bounded handler pool driving the **same**
+//!   [`crate::serve::ModelRegistry`]/[`crate::serve::SnapshotCell`]
+//!   read path as the in-process [`crate::serve::PredictionServer`]
+//!   (per-connection cached `(reader, scratch)` through
+//!   [`crate::serve::ModelCache`] — zero steady-state allocation),
+//!   per-model routing by name, request pipelining, graceful drain,
+//!   an idle-connection deadline (the slow-loris guard for the
+//!   bounded pool), an optional remote-shutdown lockout, and
+//!   wire-level stats.
+//! * [`client`] — [`WireClient`]: blocking, one reused connection,
+//!   single/batch/pipelined predict (bounded in-flight window, so
+//!   arbitrarily long request streams cannot deadlock the socket
+//!   buffers) plus the admin ops, every failure a typed [`WireError`]
+//!   — and responses are shape-checked, so a misbehaving peer yields
+//!   an error, never a panic.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use pol::prelude::*;
+//! use pol::wire::{WireClient, WireConfig, WireServer};
+//!
+//! // serve a checkpointed model over TCP…
+//! let model = pol::model::load("model.polz").expect("load");
+//! let registry = ModelRegistry::with_model("m", SnapshotCell::new(model.snapshot()));
+//! let server = WireServer::bind("127.0.0.1:0", Arc::clone(&registry), WireConfig::default())
+//!     .expect("bind");
+//!
+//! // …and query it from anywhere
+//! let mut client = WireClient::connect(server.local_addr()).expect("connect");
+//! let resp = client.predict_for("m", &[(0, 1.0), (7, -0.5)]).expect("predict");
+//! println!("pred {} (snapshot v{}, {} instances behind)",
+//!          resp.preds[0], resp.snapshot_version, resp.staleness);
+//! server.shutdown();
+//! ```
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{WireClient, WireError, WireResponse};
+pub use frame::{
+    FrameError, ModelEntry, ModelStatsReport, Op, StatsReport, MAX_BATCH,
+    MAX_FEATURES, MAX_FRAME, MAX_NAME, MAX_PING, PROTO_VERSION,
+};
+pub use server::{WireConfig, WireServer, DRAIN_FRAMES};

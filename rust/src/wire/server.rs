@@ -1,0 +1,637 @@
+//! [`WireServer`] — the TCP front-end over the serving registry.
+//!
+//! One `std::net::TcpListener` acceptor thread feeds accepted
+//! connections to a **bounded** pool of handler threads (the pool size
+//! is the concurrency cap; further connections queue in the kernel
+//! accept backlog — a connection flood cannot spawn unbounded
+//! threads). Each handler owns exactly the per-connection state the
+//! in-process serving workers own per thread: a
+//! [`ModelCache`] of `(reader, scratch)` pairs, a recycled
+//! [`FrameBuf`]/[`FrameWriter`], and recycled decode/predict buffers —
+//! the steady-state request path allocates nothing, and scoring drives
+//! the *same* [`crate::serve::ModelRegistry`]/snapshot read path as
+//! [`crate::serve::PredictionServer`], so wire answers are
+//! bit-identical to in-process answers by construction.
+//!
+//! Requests pipeline: a client may send many frames without waiting;
+//! the handler answers them in arrival order and every response
+//! carries the request id it answers. Malformed *payloads* get typed
+//! error frames; framing-level corruption (bad length, magic, version,
+//! checksum, truncation) means the byte stream can no longer be
+//! trusted, so the connection closes cleanly instead — either way a
+//! hostile peer gets bounded allocation and no panic.
+//!
+//! Shutdown drains gracefully: [`WireServer::shutdown`] (or a
+//! [`Op::Shutdown`] admin frame, when permitted) stops the acceptor,
+//! lets every handler answer the frames already buffered on its
+//! connection (bounded by [`DRAIN_FRAMES`]), then closes. Wire-level
+//! totals (bytes/frames/decode errors) and per-model latency
+//! histograms are readable live through [`WireServer::stats`] or
+//! remotely via the [`Op::Stats`] admin op.
+
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serve::registry::{ModelCache, ModelRegistry};
+use crate::serve::server::ModelStats;
+use crate::wire::frame::{
+    decode_predict_request, put_models, put_predict_response, put_stats,
+    read_frame, BatchScratch, FrameBuf, FrameError, FrameWriter, ModelEntry,
+    ModelStatsReport, Op, StatsReport, MAX_PING, STATUS_BAD_FRAME,
+    STATUS_FORBIDDEN, STATUS_OK, STATUS_SHUTTING_DOWN, STATUS_TOO_LARGE,
+    STATUS_UNKNOWN_MODEL, STATUS_UNKNOWN_OP,
+};
+
+/// Frames a draining handler still answers before closing its
+/// connection — bounded so a peer that keeps streaming cannot hold the
+/// drain open forever.
+pub const DRAIN_FRAMES: u32 = 256;
+
+/// Tuning for a [`WireServer`].
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// Handler-pool size: the maximum number of concurrently served
+    /// connections (further connections wait in the accept backlog).
+    pub handlers: usize,
+    /// How often a blocked handler wakes to check for shutdown.
+    pub poll: Duration,
+    /// Honour the [`Op::Shutdown`] admin frame. Disable for servers
+    /// that must only stop from the owning process.
+    pub allow_remote_shutdown: bool,
+    /// Close a connection that goes this long without completing a
+    /// frame, and bound every response write by the same duration —
+    /// the slow-loris guard in both directions: with a bounded handler
+    /// pool, a socket that neither sends frames nor drains responses
+    /// would otherwise pin a handler forever and starve every later
+    /// client (and wedge shutdown on the join). `None` disables both
+    /// deadlines (trusted networks).
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            handlers: 4,
+            poll: Duration::from_millis(25),
+            allow_remote_shutdown: true,
+            idle_timeout: Some(Duration::from_secs(300)),
+        }
+    }
+}
+
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    stop: AtomicBool,
+    allow_remote_shutdown: bool,
+    local_addr: SocketAddr,
+    started: Instant,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    decode_errors: AtomicU64,
+    connections: AtomicU64,
+    active: AtomicU64,
+    per_model: Mutex<std::collections::BTreeMap<String, ModelStats>>,
+}
+
+impl Shared {
+    fn trigger_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        // wake the acceptor if it is blocked in accept(): one throwaway
+        // connection to ourselves, immediately dropped on the far
+        // side. An unspecified bind address (0.0.0.0 / ::) is not
+        // connectable on every platform — aim at the same-family
+        // loopback instead.
+        let mut addr = self.local_addr;
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr {
+                SocketAddr::V4(_) => {
+                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                }
+                SocketAddr::V6(_) => {
+                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                }
+            });
+        }
+        let _ = TcpStream::connect(addr);
+    }
+
+    fn stats(&self) -> StatsReport {
+        let models = {
+            let per_model = self.per_model.lock().expect("wire stats lock");
+            per_model
+                .iter()
+                .map(|(name, m)| ModelStatsReport {
+                    name: name.clone(),
+                    requests: m.requests,
+                    predictions: m.predictions,
+                    p50_ns: m.latency.quantile_ns(0.5),
+                    p99_ns: m.latency.quantile_ns(0.99),
+                    max_ns: m.latency.max_ns(),
+                    max_staleness: m.max_staleness,
+                })
+                .collect()
+        };
+        StatsReport {
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            active_connections: self.active.load(Ordering::Relaxed),
+            uptime_us: self.started.elapsed().as_micros() as u64,
+            models,
+        }
+    }
+}
+
+/// Handle to a running TCP serving front-end (see the module docs).
+pub struct WireServer {
+    shared: Arc<Shared>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    handlers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `registry` — models may be inserted, replaced, or
+    /// removed while serving, and snapshot publishes through the cells
+    /// are picked up per request, exactly like the in-process server.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        registry: Arc<ModelRegistry>,
+        cfg: WireConfig,
+    ) -> io::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            registry,
+            stop: AtomicBool::new(false),
+            allow_remote_shutdown: cfg.allow_remote_shutdown,
+            local_addr,
+            started: Instant::now(),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            decode_errors: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            per_model: Mutex::new(std::collections::BTreeMap::new()),
+        });
+        let handlers_n = cfg.handlers.max(1);
+        // rendezvous-ish queue: the acceptor blocks once every handler
+        // is busy, so the kernel backlog is the only connection queue
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(handlers_n);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::with_capacity(handlers_n);
+        for hid in 0..handlers_n {
+            let shared = Arc::clone(&shared);
+            let conn_rx = Arc::clone(&conn_rx);
+            let poll = cfg.poll;
+            let idle = cfg.idle_timeout;
+            handlers.push(
+                std::thread::Builder::new()
+                    .name(format!("wire-{hid}"))
+                    .spawn(move || loop {
+                        let stream = {
+                            let guard =
+                                conn_rx.lock().expect("wire conn queue lock");
+                            guard.recv()
+                        };
+                        match stream {
+                            Ok(s) => {
+                                shared.active.fetch_add(1, Ordering::Relaxed);
+                                handle_conn(&shared, s, poll, idle);
+                                shared.active.fetch_sub(1, Ordering::Relaxed);
+                            }
+                            Err(_) => break, // acceptor gone: shutting down
+                        }
+                    })
+                    .expect("spawn wire handler"),
+            );
+        }
+        let acceptor_shared = Arc::clone(&shared);
+        let accept_backoff = cfg.poll;
+        let acceptor = std::thread::Builder::new()
+            .name("wire-accept".into())
+            .spawn(move || {
+                loop {
+                    if acceptor_shared.stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if acceptor_shared.stop.load(Ordering::Acquire) {
+                                break; // the wake-up connection
+                            }
+                            acceptor_shared
+                                .connections
+                                .fetch_add(1, Ordering::Relaxed);
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            // transient accept failures (EMFILE under
+                            // a connection flood) must not hot-loop
+                            // the acceptor at 100% CPU
+                            std::thread::sleep(accept_backoff);
+                        }
+                    }
+                }
+                // conn_tx drops here; idle handlers exit on recv error
+            })
+            .expect("spawn wire acceptor");
+        Ok(WireServer { shared, acceptor: Some(acceptor), handlers })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Live wire-level + per-model stats (also served remotely through
+    /// the [`Op::Stats`] admin op).
+    pub fn stats(&self) -> StatsReport {
+        self.shared.stats()
+    }
+
+    /// Whether a drain has been requested (locally or by a
+    /// [`Op::Shutdown`] admin frame).
+    pub fn is_draining(&self) -> bool {
+        self.shared.stop.load(Ordering::Acquire)
+    }
+
+    /// Block until a drain is requested — the serve-forever loop of
+    /// `pol serve --listen` (a remote [`Op::Shutdown`] frame, when
+    /// permitted, is the off switch).
+    pub fn wait(&self) {
+        while !self.is_draining() {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Stop accepting, drain in-flight connections (each answers at
+    /// most [`DRAIN_FRAMES`] more frames), join every thread, and
+    /// report final stats.
+    pub fn shutdown(mut self) -> StatsReport {
+        self.shared.trigger_stop();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.stats()
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        // dropping without shutdown() still stops the threads
+        self.shared.trigger_stop();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Send one frame (sealing the checksum), flush it, and account it.
+fn send_frame(
+    shared: &Shared,
+    out: &mut FrameWriter,
+    w: &mut impl Write,
+) -> io::Result<()> {
+    let n = out.finish_to(w)?;
+    w.flush()?;
+    shared.frames_out.fetch_add(1, Ordering::Relaxed);
+    shared.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Send a typed error frame: same op and request id, error status,
+/// UTF-8 message payload.
+fn send_error(
+    shared: &Shared,
+    out: &mut FrameWriter,
+    w: &mut impl Write,
+    op: u8,
+    status: u8,
+    req_id: u64,
+    msg: &str,
+) -> io::Result<()> {
+    out.start(op, status, req_id);
+    out.payload().extend_from_slice(msg.as_bytes());
+    send_frame(shared, out, w)
+}
+
+/// Per-connection stats flush cadence, in answered predict frames:
+/// handlers record into private buffers (no lock, no allocation on the
+/// hot path) and merge into the shared map this often, at connection
+/// close, and before answering a `Stats` op on their own connection —
+/// so a remote stats read lags a *live* connection by at most this
+/// many frames.
+const STATS_FLUSH_FRAMES: u32 = 64;
+
+/// Merge a connection's private per-model stats into the shared map
+/// and zero the private buffers (keys are kept, so steady state
+/// re-allocates nothing).
+fn flush_stats(
+    shared: &Shared,
+    local: &mut std::collections::HashMap<String, ModelStats>,
+) {
+    if local.values().all(|m| m.requests == 0) {
+        return;
+    }
+    let mut per_model = shared.per_model.lock().expect("wire stats lock");
+    for (name, ms) in local.iter_mut() {
+        if ms.requests == 0 {
+            continue;
+        }
+        match per_model.get_mut(name) {
+            Some(entry) => entry.merge(ms),
+            None => {
+                per_model.insert(name.clone(), ms.clone());
+            }
+        }
+        *ms = ModelStats::new();
+    }
+}
+
+/// Serve one connection to completion (see the module docs for the
+/// close-vs-error-frame policy).
+fn handle_conn(
+    shared: &Shared,
+    stream: TcpStream,
+    poll: Duration,
+    idle: Option<Duration>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(poll));
+    // a peer that sends requests but never drains responses must not
+    // wedge the handler in write_all: bound writes by the same
+    // deadline that bounds idle reads (a timed-out write errors the
+    // send and closes the connection)
+    let _ = stream.set_write_timeout(idle);
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::with_capacity(1 << 16, stream);
+    let mut writer = BufWriter::with_capacity(1 << 16, write_half);
+    let mut buf = FrameBuf::new();
+    let mut out = FrameWriter::new();
+    let mut cache = ModelCache::new(&shared.registry);
+    let mut scratch = BatchScratch::default();
+    let mut preds: Vec<f64> = Vec::new();
+    let mut local_stats: std::collections::HashMap<String, ModelStats> =
+        std::collections::HashMap::new();
+    let mut unflushed = 0u32;
+    let mut drained = 0u32;
+    loop {
+        let draining = shared.stop.load(Ordering::Acquire);
+        if draining {
+            drained += 1;
+            if drained > DRAIN_FRAMES {
+                break;
+            }
+        }
+        let idle_deadline = idle.map(|t| Instant::now() + t);
+        match read_frame(
+            &mut reader,
+            &mut buf,
+            Some(&shared.stop),
+            idle_deadline,
+        ) {
+            Ok(None) => break, // clean close, or idle while draining
+            Ok(Some(frame)) => {
+                shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .bytes_in
+                    .fetch_add(frame.wire_bytes as u64, Ordering::Relaxed);
+                let op = frame.op;
+                let req_id = frame.req_id;
+                let enqueued = Instant::now();
+                let outcome = match Op::from_u8(op) {
+                    None => send_error(
+                        shared,
+                        &mut out,
+                        &mut writer,
+                        op,
+                        STATUS_UNKNOWN_OP,
+                        req_id,
+                        &format!("unknown op {op}"),
+                    ),
+                    Some(kind @ (Op::Predict | Op::PredictBatch)) => {
+                        match decode_predict_request(
+                            kind,
+                            frame.payload,
+                            &mut scratch,
+                        ) {
+                            Ok(name) => {
+                                match cache.resolve(&shared.registry, name) {
+                                    Some((snap_reader, pscratch)) => {
+                                        let snap =
+                                            Arc::clone(snap_reader.current());
+                                        preds.clear();
+                                        for x in scratch.batch() {
+                                            preds.push(
+                                                snap.predict_with(x, pscratch),
+                                            );
+                                        }
+                                        let staleness = snap_reader
+                                            .cell()
+                                            .staleness_of(&snap);
+                                        out.start(op, STATUS_OK, req_id);
+                                        put_predict_response(
+                                            out.payload(),
+                                            &preds,
+                                            snap.version,
+                                            staleness,
+                                        );
+                                        let sent = send_frame(
+                                            shared,
+                                            &mut out,
+                                            &mut writer,
+                                        );
+                                        if sent.is_ok() {
+                                            // private buffer: no lock,
+                                            // no allocation once the
+                                            // name has been seen
+                                            match local_stats.get_mut(name)
+                                            {
+                                                Some(ms) => ms.record(
+                                                    preds.len() as u64,
+                                                    enqueued.elapsed(),
+                                                    staleness,
+                                                ),
+                                                None => {
+                                                    let mut ms =
+                                                        ModelStats::new();
+                                                    ms.record(
+                                                        preds.len() as u64,
+                                                        enqueued.elapsed(),
+                                                        staleness,
+                                                    );
+                                                    local_stats.insert(
+                                                        name.to_string(),
+                                                        ms,
+                                                    );
+                                                }
+                                            }
+                                            unflushed += 1;
+                                            if unflushed
+                                                >= STATS_FLUSH_FRAMES
+                                            {
+                                                flush_stats(
+                                                    shared,
+                                                    &mut local_stats,
+                                                );
+                                                unflushed = 0;
+                                            }
+                                        }
+                                        sent
+                                    }
+                                    None => send_error(
+                                        shared,
+                                        &mut out,
+                                        &mut writer,
+                                        op,
+                                        STATUS_UNKNOWN_MODEL,
+                                        req_id,
+                                        &format!("unknown model '{name}'"),
+                                    ),
+                                }
+                            }
+                            Err(e) => {
+                                shared
+                                    .decode_errors
+                                    .fetch_add(1, Ordering::Relaxed);
+                                let status = match e {
+                                    FrameError::OverCap(_) => {
+                                        STATUS_TOO_LARGE
+                                    }
+                                    _ => STATUS_BAD_FRAME,
+                                };
+                                send_error(
+                                    shared,
+                                    &mut out,
+                                    &mut writer,
+                                    op,
+                                    status,
+                                    req_id,
+                                    &e.to_string(),
+                                )
+                            }
+                        }
+                    }
+                    Some(Op::Stats) => {
+                        // publish this connection's own numbers first,
+                        // so a client polling stats on the connection
+                        // it queries through always sees itself
+                        flush_stats(shared, &mut local_stats);
+                        unflushed = 0;
+                        out.start(op, STATUS_OK, req_id);
+                        put_stats(out.payload(), &shared.stats());
+                        send_frame(shared, &mut out, &mut writer)
+                    }
+                    Some(Op::ListModels) => {
+                        let mut models = Vec::new();
+                        for name in shared.registry.names() {
+                            let Some(cell) = shared.registry.get(&name)
+                            else {
+                                continue; // removed between names() and get
+                            };
+                            let snap = cell.load();
+                            models.push(ModelEntry {
+                                name,
+                                dim: snap.dim() as u64,
+                                params: snap.num_params() as u64,
+                                snapshot_version: snap.version,
+                                trained_instances: snap.trained_instances,
+                            });
+                        }
+                        out.start(op, STATUS_OK, req_id);
+                        put_models(out.payload(), &models);
+                        send_frame(shared, &mut out, &mut writer)
+                    }
+                    Some(Op::Ping) => {
+                        if frame.payload.len() > MAX_PING {
+                            send_error(
+                                shared,
+                                &mut out,
+                                &mut writer,
+                                op,
+                                STATUS_TOO_LARGE,
+                                req_id,
+                                &format!(
+                                    "ping payload {} bytes (cap {MAX_PING})",
+                                    frame.payload.len()
+                                ),
+                            )
+                        } else {
+                            out.start(op, STATUS_OK, req_id);
+                            out.payload().extend_from_slice(frame.payload);
+                            send_frame(shared, &mut out, &mut writer)
+                        }
+                    }
+                    Some(Op::Shutdown) => {
+                        if shared.allow_remote_shutdown {
+                            let sent = send_error(
+                                shared,
+                                &mut out,
+                                &mut writer,
+                                op,
+                                STATUS_OK,
+                                req_id,
+                                "draining",
+                            );
+                            shared.trigger_stop();
+                            sent
+                        } else {
+                            send_error(
+                                shared,
+                                &mut out,
+                                &mut writer,
+                                op,
+                                STATUS_FORBIDDEN,
+                                req_id,
+                                "remote shutdown disabled on this server",
+                            )
+                        }
+                    }
+                };
+                if outcome.is_err() {
+                    break; // peer went away mid-write
+                }
+            }
+            Err(FrameError::Io(_)) => break, // transport failure
+            Err(_) => {
+                // framing-level corruption: the stream cannot be
+                // resynchronized, so count it and close cleanly —
+                // never panic, never allocate toward a hostile length
+                shared.decode_errors.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+    flush_stats(shared, &mut local_stats);
+    // a draining handler tells pipelined peers why the stream ends
+    if shared.stop.load(Ordering::Acquire) {
+        let _ = send_error(
+            shared,
+            &mut out,
+            &mut writer,
+            Op::Shutdown as u8,
+            STATUS_SHUTTING_DOWN,
+            0,
+            "server draining",
+        );
+    }
+}

@@ -12,11 +12,14 @@ fn help_lists_commands() {
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
     for cmd in [
-        "train", "checkpoint", "reshard", "serve", "predict", "bench-data",
-        "inspect", "artifacts-check",
+        "train", "checkpoint", "reshard", "serve", "serve-stats", "predict",
+        "bench-data", "inspect", "artifacts-check",
     ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+    // the network flags are documented
+    assert!(text.contains("--listen"), "help missing --listen");
+    assert!(text.contains("--connect"), "help missing --connect");
 }
 
 #[test]
@@ -139,13 +142,259 @@ fn unknown_flags_are_rejected_not_ignored() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("bad value"));
 
     // every subcommand parses strictly
-    for cmd in ["checkpoint", "serve", "predict", "bench-data", "inspect"] {
+    for cmd in
+        ["checkpoint", "serve", "serve-stats", "predict", "bench-data",
+         "inspect"]
+    {
         let out = pol()
             .args([cmd, "--no-such-flag", "x"])
             .output()
             .expect("run pol");
         assert_eq!(out.status.code(), Some(2), "{cmd}");
     }
+}
+
+#[test]
+fn wire_flags_are_strictly_validated() {
+    // --listen with a synthetic-load knob is a mode mismatch naming
+    // the offending flag
+    for flag in ["--batch", "--density", "--seed"] {
+        let out = pol()
+            .args([
+                "serve", "--model", "whatever.polz", "--listen",
+                "127.0.0.1:0", flag, "7",
+            ])
+            .output()
+            .expect("run pol");
+        assert_eq!(out.status.code(), Some(2), "{flag}");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(flag), "{err}");
+        assert!(err.contains("--listen"), "{err}");
+    }
+
+    // a malformed --listen address is a usage error naming the flag
+    // (checked before any checkpoint is touched)
+    let out = pol()
+        .args(["serve", "--model", "whatever.polz", "--listen", "not/an/addr"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--listen"), "{err}");
+    assert!(err.contains("not/an/addr"), "{err}");
+
+    // same for predict --connect and serve-stats --connect
+    for cmd in ["predict", "serve-stats"] {
+        let out = pol()
+            .args([cmd, "--connect", "999.999.999.999:xx"])
+            .output()
+            .expect("run pol");
+        assert_eq!(out.status.code(), Some(2), "{cmd}");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("--connect"), "{err}");
+    }
+
+    // predict: --connect and --model are mutually exclusive
+    let out = pol()
+        .args([
+            "predict", "--connect", "127.0.0.1:1", "--model", "m.polz",
+        ])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--connect"), "{err}");
+    assert!(err.contains("--model"), "{err}");
+
+    // predict: --name only makes sense with --connect
+    let out = pol()
+        .args(["predict", "--name", "m", "--model", "m.polz"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--name"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // serve-stats requires --connect
+    let out = pol().args(["serve-stats"]).output().expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--connect"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // --no-remote-shutdown is a wire-mode switch
+    let out = pol()
+        .args(["serve", "--model", "whatever.polz", "--no-remote-shutdown"])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--no-remote-shutdown"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // valid flags + unreadable checkpoint is a RUNTIME failure (1),
+    // not a usage error (2)
+    let out = pol()
+        .args([
+            "serve", "--model", "/no/such/checkpoint.polz", "--listen",
+            "127.0.0.1:0",
+        ])
+        .output()
+        .expect("run pol");
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("load"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Reserve an ephemeral loopback port (freed on drop; tiny reuse race
+/// is acceptable for a test).
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .expect("probe port")
+        .local_addr()
+        .expect("probe addr")
+        .port()
+}
+
+#[test]
+fn serve_listen_predict_connect_round_trip() {
+    use std::io::Write;
+
+    let dir = std::env::temp_dir().join("pol_cli_wire");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("wire.polz");
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "2000", "--rule",
+            "local", "--workers", "2", "--loss", "logistic", "--seed", "3",
+            "--checkpoint", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    // --seconds is the safety net; the test ends the server early with
+    // a wire Shutdown frame
+    let mut server = pol()
+        .args([
+            "serve", "--model", model.to_str().unwrap(), "--listen",
+            addr.as_str(), "--threads", "2", "--seconds", "30",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn pol serve --listen");
+
+    // wait for the socket to come up
+    let mut client = None;
+    for _ in 0..200 {
+        match pol::wire::WireClient::connect(addr.as_str()) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    }
+    let mut client = client.expect("server never came up");
+
+    // the remote answers must match the local checkpoint bit for bit
+    let queries = ["5:1 17:0.5 100:-2", "0:1", "262143:3.5"];
+    let stdin_text = queries.join("\n") + "\n";
+    let local = {
+        let mut child = pol()
+            .args(["predict", "--model", model.to_str().unwrap()])
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn local predict");
+        child
+            .stdin
+            .take()
+            .unwrap()
+            .write_all(stdin_text.as_bytes())
+            .unwrap();
+        let out = child.wait_with_output().expect("local predict");
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let remote = {
+        let mut child = pol()
+            .args(["predict", "--connect", addr.as_str()])
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn remote predict");
+        child
+            .stdin
+            .take()
+            .unwrap()
+            .write_all(stdin_text.as_bytes())
+            .unwrap();
+        let out = child.wait_with_output().expect("remote predict");
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    assert_eq!(local, remote, "wire predictions must match the checkpoint");
+
+    // predict --connect with a wrong --name fails cleanly (exit 1)
+    let mut child = pol()
+        .args(["predict", "--connect", addr.as_str(), "--name", "ghost"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn predict ghost");
+    drop(child.stdin.take());
+    let out = child.wait_with_output().expect("predict ghost");
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("ghost"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // serve-stats sees the traffic
+    let out = pol()
+        .args(["serve-stats", "--connect", addr.as_str()])
+        .output()
+        .expect("run serve-stats");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("frames_in="), "{text}");
+    assert!(text.contains("model=wire"), "{text}");
+
+    // a wire Shutdown frame ends the server before its --seconds
+    client.shutdown_server().expect("shutdown op");
+    let out = server.wait_with_output().expect("server exit");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("connections="), "{text}");
+    assert!(text.contains("model=wire"), "{text}");
+
+    std::fs::remove_file(&model).ok();
 }
 
 /// Write a small VW-text training file.

@@ -355,3 +355,62 @@ fn server_follows_live_training() {
     // staleness can never exceed what the trainer actually ran ahead
     assert!(stats.max_staleness <= 20_000);
 }
+
+#[test]
+fn shutdown_rejects_late_submitters_instead_of_hanging() {
+    // the reject-after-drain contract: shutdown() completes even while
+    // clients still exist, and a client submitting during/after the
+    // drain gets a clean PredictError::Closed — never a hang
+    let cell = SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0));
+    let server = PredictionServer::single(Arc::clone(&cell), 2);
+    let client = server.client();
+    // served normally before shutdown
+    assert!(client.predict(vec![vec![(0, 1.0)]]).is_some());
+
+    let draining = Arc::new(AtomicBool::new(false));
+    let rejected = Arc::new(AtomicBool::new(false));
+    let submitter = {
+        let client = client.clone();
+        let draining = Arc::clone(&draining);
+        let rejected = Arc::clone(&rejected);
+        std::thread::spawn(move || {
+            // hammer the server across the shutdown; every call must
+            // return (answered or Closed), and once the drain started
+            // a Closed must eventually surface
+            for _ in 0..100_000 {
+                match client.predict_for(
+                    pol::serve::DEFAULT_MODEL,
+                    vec![vec![(0, 1.0)]],
+                ) {
+                    Ok(resp) => assert_eq!(resp.preds[0], 1.0),
+                    Err(pol::serve::PredictError::Closed) => {
+                        rejected.store(true, Ordering::Release);
+                        break;
+                    }
+                    Err(e) => panic!("unexpected error: {e}"),
+                }
+                if draining.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+            }
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    draining.store(true, Ordering::Release);
+    // the client (and the submitter's clone) are still alive: shutdown
+    // must drain and return anyway
+    let stats = server.shutdown();
+    assert!(stats.requests >= 1);
+    submitter.join().expect("submitter");
+    assert!(
+        rejected.load(Ordering::Acquire),
+        "a submission racing shutdown must be rejected, not hang"
+    );
+    // and a fresh submission after shutdown is rejected immediately
+    assert_eq!(
+        client
+            .predict_for(pol::serve::DEFAULT_MODEL, vec![vec![(0, 1.0)]])
+            .unwrap_err(),
+        pol::serve::PredictError::Closed
+    );
+}
