@@ -147,3 +147,33 @@ pub fn write_bench_json(bench: &str, rows: &[BenchRow]) {
         Err(e) => eprintln!("bench json write to {} failed: {e}", path.display()),
     }
 }
+
+/// Emit the bench's final metrics-registry snapshot next to the
+/// `--bench-json` rows (`<path>.metrics`, versioned `# pol-metrics v1`
+/// exposition text) so a perf row always ships with the telemetry that
+/// produced it. Without `--bench-json` the snapshot goes to stdout
+/// under a header instead.
+pub fn write_metrics_snapshot(bench: &str, exposition: &str) {
+    match bench_json_path() {
+        Some(path) => {
+            let mut p = path.into_os_string();
+            p.push(".metrics");
+            let p = std::path::PathBuf::from(p);
+            match std::fs::write(&p, exposition) {
+                Ok(()) => eprintln!(
+                    "{bench} metrics snapshot written to {}",
+                    p.display()
+                ),
+                Err(e) => eprintln!(
+                    "{bench} metrics snapshot write to {} failed: {e}",
+                    p.display()
+                ),
+            }
+        }
+        None => {
+            println!();
+            println!("=== {bench}: final metrics snapshot ===");
+            print!("{exposition}");
+        }
+    }
+}

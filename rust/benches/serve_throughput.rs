@@ -60,14 +60,24 @@ fn cfg() -> RunConfig {
 }
 
 /// One measured configuration: train a full pass while `threads`
-/// serving threads hammer single-instance predicts.
-fn run(ds: &Dataset, cadence: u64, threads: usize) -> common::BenchRow {
-    let mut session = Session::builder()
+/// serving threads hammer single-instance predicts. With `obs` the
+/// same pass runs fully instrumented (the `instr-` rows): the gap to
+/// the seed row of the same shape is the telemetry tax, expected ≈ 0
+/// because the hot path only touches atomics.
+fn run(
+    ds: &Dataset,
+    cadence: u64,
+    threads: usize,
+    obs: Option<&Arc<pol::obs::Obs>>,
+) -> common::BenchRow {
+    let mut builder = Session::builder()
         .config(cfg())
         .dim(ds.dim)
-        .publish_every(cadence)
-        .build()
-        .expect("build session");
+        .publish_every(cadence);
+    if let Some(o) = obs {
+        builder = builder.obs(Arc::clone(o));
+    }
+    let mut session = builder.build().expect("build session");
     let cell = Arc::clone(session.cell().expect("publishing wired"));
     let server = PredictionServer::single(cell, threads);
     let done = AtomicBool::new(false);
@@ -98,18 +108,23 @@ fn run(ds: &Dataset, cadence: u64, threads: usize) -> common::BenchRow {
         train_ms = trainer.join().expect("trainer");
     });
     let stats = server.shutdown();
+    let label = format!(
+        "{}cadence{cadence}-threads{threads}",
+        if obs.is_some() { "instr-" } else { "" }
+    );
     println!(
-        "{:>7} {:>7} {:>9.0} {:>7.1} {:>7.1} {:>13} {:>8}",
+        "{:>7} {:>7} {:>9.0} {:>7.1} {:>7.1} {:>13} {:>8}{}",
         cadence,
         threads,
         stats.qps(),
         stats.latency.quantile_ns(0.5) as f64 / 1e3,
         stats.latency.quantile_ns(0.99) as f64 / 1e3,
         stats.max_staleness,
-        train_ms
+        train_ms,
+        if obs.is_some() { "  (instrumented)" } else { "" }
     );
     common::BenchRow::new(
-        format!("cadence{cadence}-threads{threads}"),
+        label,
         stats.qps(),
         stats.latency.quantile_ns(0.5) as f64 / 1e3,
         stats.latency.quantile_ns(0.99) as f64 / 1e3,
@@ -306,8 +321,16 @@ fn main() {
     let mut rows = Vec::new();
     for cadence in [1_024u64, 8_192] {
         for threads in [1usize, 2, 4] {
-            rows.push(run(&ds, cadence, threads));
+            rows.push(run(&ds, cadence, threads, None));
         }
+    }
+
+    // instrumented-vs-seed: repeat a seed shape with a live telemetry
+    // registry attached; compare the instr- rows against their twins
+    // above
+    let obs = pol::obs::Obs::new();
+    for threads in [1usize, 4] {
+        rows.push(run(&ds, 1_024, threads, Some(&obs)));
     }
 
     // wire stage: the same frozen snapshot served over loopback TCP vs
@@ -327,4 +350,7 @@ fn main() {
         }
     }
     common::write_bench_json("serve_throughput", &rows);
+    // the registry the instrumented rows trained against, as exposition
+    // text next to the json rows
+    common::write_metrics_snapshot("serve_throughput", &obs.metrics.render());
 }

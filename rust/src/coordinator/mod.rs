@@ -22,12 +22,14 @@ pub mod timing;
 
 use std::collections::VecDeque;
 use std::io;
+use std::sync::Arc;
 
 use crate::config::{RunConfig, UpdateRule};
 use crate::data::Dataset;
 use crate::learner::node::NodeLearner;
 use crate::linalg::SparseFeat;
 use crate::metrics::ProgressiveValidator;
+use crate::obs::{Counter, Gauge, Histogram, Obs, TraceKind};
 use crate::serve::checkpoint::CheckpointSink;
 use crate::serve::publisher::SnapshotPublisher;
 use crate::serve::snapshot::{
@@ -50,6 +52,30 @@ struct Pending {
     /// Local gradient scale each node applied at Local time (0 if none).
     local_g: Vec<f64>,
     final_pred: f64,
+    /// `trained` at forward time — the instance's 0-based stream index.
+    /// The observed-delay telemetry measures feedback lag against it.
+    /// Reassigned on every [`Coordinator::forward`] (records are pooled).
+    born: u64,
+}
+
+/// Registered metric handles of an instrumented coordinator — resolved
+/// once at [`Coordinator::set_obs`] time so the training loop touches
+/// only atomics (integer ops only: an instrumented run is bit-identical
+/// to an uninstrumented one).
+struct CoordObs {
+    handle: Arc<Obs>,
+    /// `pol_train_instances_total`
+    trained: Counter,
+    /// `pol_train_delay` — observed per-update τ, in instances.
+    delay: Histogram,
+    /// `pol_train_pending_depth`
+    pending_depth: Gauge,
+    /// `pol_train_shard_nnz_total{shard="k"}`, one per leaf.
+    shard_nnz: Vec<Counter>,
+    /// `pol_snapshot_publishes_total`
+    publishes: Counter,
+    /// `pol_checkpoint_writes_total`
+    ckpt_writes: Counter,
 }
 
 /// Outcome of a coordinator run.
@@ -99,6 +125,8 @@ pub struct Coordinator {
     /// Optional durability hook: writes a `.polz` checkpoint atomically
     /// every K trained instances ([`crate::serve::checkpoint`]).
     ckpt_sink: Option<CheckpointSink>,
+    /// Optional telemetry: metric handles + event ring ([`crate::obs`]).
+    obs: Option<CoordObs>,
 }
 
 impl Coordinator {
@@ -136,6 +164,7 @@ impl Coordinator {
             trained: 0,
             publisher: None,
             ckpt_sink: None,
+            obs: None,
         }
     }
 
@@ -214,6 +243,21 @@ impl Coordinator {
     /// Delayed feedback still in flight refers to the old leaf layout,
     /// so a mid-stream model must [`Self::flush_feedback`] first.
     pub fn reshard(&self, workers: usize) -> Result<Coordinator, String> {
+        let mut out = self.reshard_model(workers)?;
+        if let Some(o) = &self.obs {
+            o.handle.trace.record(
+                TraceKind::Reshard,
+                self.trained,
+                format!("{} -> {} workers", self.graph.leaves, workers),
+            );
+            // the migrated model keeps reporting into the same registry
+            // (its leaf-count-dependent shard counters re-resolve there)
+            out.set_obs(Arc::clone(&o.handle));
+        }
+        Ok(out)
+    }
+
+    fn reshard_model(&self, workers: usize) -> Result<Coordinator, String> {
         if workers == 0 {
             return Err("worker count must be at least 1".into());
         }
@@ -351,6 +395,57 @@ impl Coordinator {
         self.ckpt_sink.take()
     }
 
+    /// Attach a telemetry handle: every metric cell is resolved here,
+    /// once, so the training loop only ever touches atomics. The same
+    /// registry may back several coordinators (the cells are shared by
+    /// name), and instrumentation is integer-only — attaching an
+    /// [`Obs`] never changes a single trained bit.
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        let m = &obs.metrics;
+        let shard_nnz = (0..self.graph.leaves)
+            .map(|k| {
+                m.counter_with(
+                    "pol_train_shard_nnz_total",
+                    &[("shard", &k.to_string())],
+                )
+            })
+            .collect();
+        self.obs = Some(CoordObs {
+            trained: m.counter("pol_train_instances_total"),
+            delay: m.histogram("pol_train_delay"),
+            pending_depth: m.gauge("pol_train_pending_depth"),
+            shard_nnz,
+            publishes: m.counter("pol_snapshot_publishes_total"),
+            ckpt_writes: m.counter("pol_checkpoint_writes_total"),
+            handle: obs,
+        });
+    }
+
+    /// The attached telemetry handle, if any.
+    pub fn obs_handle(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref().map(|o| &o.handle)
+    }
+
+    /// Count the features just routed to each leaf (the per-shard heat
+    /// `pol top` renders as bars). Called right after every
+    /// `split_features_into`; pure counter adds.
+    #[inline]
+    fn observe_split(&self) {
+        if let Some(o) = &self.obs {
+            for (k, buf) in self.leaf_bufs.iter().enumerate() {
+                o.shard_nnz[k].add(buf.len() as u64);
+            }
+        }
+    }
+
+    /// Count one trained instance (called next to `self.trained += 1`).
+    #[inline]
+    fn observe_trained(&self) {
+        if let Some(o) = &self.obs {
+            o.trained.inc();
+        }
+    }
+
     /// Build an immutable serving snapshot of the current weights.
     ///
     /// This is constructor-side dispatch over the coordinator's own
@@ -394,6 +489,14 @@ impl Coordinator {
         if let Some(mut p) = self.publisher.take() {
             if p.tick(self.trained) || force {
                 p.publish(self.snapshot());
+                if let Some(o) = &self.obs {
+                    o.publishes.inc();
+                    o.handle.trace.record(
+                        TraceKind::Publish,
+                        self.trained,
+                        format!("snapshot #{}", p.published()),
+                    );
+                }
             }
             self.publisher = Some(p);
         }
@@ -406,7 +509,29 @@ impl Coordinator {
                 match crate::serve::checkpoint::write_coordinator(
                     self, &mut bytes,
                 ) {
-                    Ok(()) => s.write_async(self.trained, bytes),
+                    Ok(()) => {
+                        if let Some(o) = &self.obs {
+                            o.ckpt_writes.inc();
+                            o.handle.trace.record(
+                                TraceKind::Checkpoint,
+                                self.trained,
+                                format!("background checkpoint ({} bytes)", bytes.len()),
+                            );
+                            // ride the event tail along: readers see the
+                            // control-plane history that produced the file
+                            // (old readers stop at payload_len and never
+                            // look at the trailer)
+                            bytes.extend_from_slice(
+                                &crate::obs::trace::encode_trailer(
+                                    &o.handle.trace.tail(
+                                        crate::obs::trace::MAX_TRAILER_EVENTS
+                                            as usize,
+                                    ),
+                                ),
+                            );
+                        }
+                        s.write_async(self.trained, bytes)
+                    }
                     Err(e) => {
                         s.arm(self.trained);
                         eprintln!(
@@ -447,6 +572,7 @@ impl Coordinator {
         self.scratch_preds.clear();
         self.scratch_preds.resize(n, 0.0);
         self.plan.split_features_into(features, &mut self.leaf_bufs);
+        self.observe_split();
         for leaf in 0..self.graph.leaves {
             let x = std::mem::take(&mut self.leaf_bufs[leaf]);
             let (pre, _g) = self.nodes[leaf].local_learn(&x, label);
@@ -504,6 +630,7 @@ impl Coordinator {
 
         // leaves (no feature clone: split straight from the slice)
         self.plan.split_features_into(features, &mut self.leaf_bufs);
+        self.observe_split();
         for leaf in 0..self.graph.leaves {
             // swap the filled buffer out, leaving a recycled one with
             // retained capacity for the next instance's split
@@ -551,7 +678,8 @@ impl Coordinator {
             inputs.push(x);
         }
         let final_pred = preds[self.graph.root];
-        Pending { label, inputs, preds, local_g, final_pred }
+        let born = self.trained;
+        Pending { label, inputs, preds, local_g, final_pred, born }
     }
 
     /// Apply the master's feedback for one pending instance (§0.6 rules).
@@ -729,6 +857,7 @@ impl Coordinator {
             _ => self.tree_feedback_step(features, label, None),
         };
         self.trained += 1;
+        self.observe_trained();
         self.hooks_tick(false);
         yhat
     }
@@ -737,7 +866,15 @@ impl Coordinator {
     /// [`Self::learn_one`] callers, end of stream).
     pub fn flush_feedback(&mut self) {
         while let Some(p) = self.pending.pop_front() {
+            if let Some(o) = &self.obs {
+                // no instance is in flight here: arrivals after `born`
+                // number trained − born − 1 (τ−1 down to 0 at stream end)
+                o.delay.record(self.trained - p.born - 1);
+            }
             self.feedback(p);
+        }
+        if let Some(o) = &self.obs {
+            o.pending_depth.set(0);
         }
     }
 
@@ -788,6 +925,7 @@ impl Coordinator {
             );
         }
         self.trained += 1;
+        self.observe_trained();
         self.hooks_tick(false);
     }
 
@@ -818,7 +956,16 @@ impl Coordinator {
         // arrived (the §0.6.6 steady-state delay)
         while self.pending.len() as u64 > self.cfg.tau {
             let p = self.pending.pop_front().expect("pending non-empty");
+            if let Some(o) = &self.obs {
+                // `trained` still equals the in-flight instance's
+                // index, and that arrival is what triggered this pop:
+                // delay = trained − born = exactly τ in steady state
+                o.delay.record(self.trained - p.born);
+            }
             self.feedback(p);
+        }
+        if let Some(o) = &self.obs {
+            o.pending_depth.set(self.pending.len() as u64);
         }
         yhat
     }
@@ -1002,6 +1149,9 @@ impl Coordinator {
     /// position of the current table is exactly this run's instances.
     fn finish_central(&mut self, rep: TrainReport) -> TrainReport {
         self.trained = rep.instances;
+        if let Some(o) = &self.obs {
+            o.trained.add(rep.instances);
+        }
         self.hooks_tick(true);
         rep
     }

@@ -35,6 +35,7 @@ use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
 use crate::loss::Loss;
 use crate::lr::LrSchedule;
 use crate::metrics::ProgressiveValidator;
+use crate::obs::{Counter, Obs};
 use crate::sharding::ShardPlan;
 use crate::stream::{DatasetSource, InstanceBatch, InstanceSource, Pipeline};
 
@@ -43,6 +44,8 @@ pub struct MulticoreTrainer {
     pub threads: usize,
     pub loss: Loss,
     pub lr: LrSchedule,
+    /// Optional telemetry sink ([`MulticoreTrainer::with_obs`]).
+    obs: Option<Arc<Obs>>,
 }
 
 /// Shared per-instance rendezvous state.
@@ -181,7 +184,18 @@ fn b2f(b: i64) -> f64 {
 impl MulticoreTrainer {
     pub fn new(threads: usize, loss: Loss, lr: LrSchedule) -> Self {
         assert!(threads >= 1);
-        MulticoreTrainer { threads, loss, lr }
+        MulticoreTrainer { threads, loss, lr, obs: None }
+    }
+
+    /// Report into `obs`: per-shard routed-feature counts
+    /// (`pol_train_shard_nnz_total{shard="tid"}`) and the trained-
+    /// instance total. Each learner thread accumulates locally and
+    /// flushes once at the end of its stream — zero per-instance
+    /// overhead on the rendezvous hot path, and the trained weights
+    /// stay bit-identical (counters never touch the float path).
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.obs = Some(obs);
+        self
     }
 
     /// Train one pass over an in-memory dataset; returns (per-shard
@@ -269,14 +283,31 @@ impl MulticoreTrainer {
         let mut weight_parts: Vec<Vec<f32>> = Vec::with_capacity(k);
         let mut pv = ProgressiveValidator::with_loss(loss);
 
+        // resolve shard counters up front; each thread flushes its
+        // locally-accumulated count into its own cell once, at the end
+        let nnz_counters: Vec<Option<Counter>> = (0..k)
+            .map(|tid| {
+                self.obs.as_ref().map(|o| {
+                    o.metrics.counter_with(
+                        "pol_train_shard_nnz_total",
+                        &[("shard", &tid.to_string())],
+                    )
+                })
+            })
+            .collect();
+
         let ((), _stats) = pipe.with_feed(source, |feed| {
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(k);
-                for (tid, seed) in seeds.drain(..).enumerate() {
+                for ((tid, seed), nnz) in
+                    seeds.drain(..).enumerate().zip(nnz_counters)
+                {
                     let rv = Arc::clone(&rv);
                     let round = Arc::clone(&round);
                     handles.push(scope.spawn(move || {
-                        learner_thread(tid, k, seed, t0, loss, lr, &rv, &round)
+                        learner_thread(
+                            tid, k, seed, t0, loss, lr, &rv, &round, nnz,
+                        )
                     }));
                 }
                 let mut result = Ok(());
@@ -312,6 +343,9 @@ impl MulticoreTrainer {
             })
         })?;
         let elapsed = start.elapsed();
+        if let Some(o) = &self.obs {
+            o.metrics.counter("pol_train_instances_total").add(pv.count());
+        }
 
         // merge: each thread only touched the indices its plan shard
         // owns, so owner-selection reassembles the single learner's
@@ -338,13 +372,16 @@ fn learner_thread(
     lr: LrSchedule,
     rv: &Rendezvous,
     round: &BatchRound,
+    nnz_counter: Option<Counter>,
 ) -> Vec<f32> {
     let mut my_seq = 0u64;
     let mut my_round = 0u64;
+    let mut nnz = 0u64;
     while let Some((r, batch, yhats)) = round.next_round(my_round) {
         my_round = r;
         for i in 0..batch.len() {
             let x: &[SparseFeat] = &batch.shards(i)[tid];
+            nnz += x.len() as u64;
             let t = t0 + batch.start_index() + i as u64;
             let partial = sparse_dot(&w, x);
             rv.slots[tid].store(f2b(partial), Ordering::Release);
@@ -385,6 +422,9 @@ fn learner_thread(
         drop(batch);
         drop(yhats);
         round.complete();
+    }
+    if let Some(c) = nnz_counter {
+        c.add(nnz);
     }
     w
 }

@@ -146,6 +146,32 @@
 //! them, and `pol serve-stats --connect HOST:7878` reads the wire
 //! stats; `examples/net_train_serve.rs` runs the full
 //! train-while-serve-over-TCP story through a live re-shard.
+//!
+//! ## Observability
+//!
+//! **[`obs`]** is the telemetry layer: a global-free
+//! [`obs::MetricsRegistry`] of atomic counters/gauges/histograms (the
+//! trainer's observed per-update τ distribution, pending-feedback
+//! depth, per-shard traffic, pipeline pool occupancy, serving
+//! QPS/latency/staleness, wire frame counters) plus a bounded
+//! [`obs::TraceRing`] of control-plane events (publishes, re-shards,
+//! checkpoints, shutdowns). Everything exports through one versioned
+//! text format, and a remote process scrapes it over the wire:
+//!
+//! ```no_run
+//! use pol::obs::parse_exposition;
+//! use pol::wire::WireClient;
+//!
+//! let mut client = WireClient::connect("127.0.0.1:7878").expect("connect");
+//! let text = client.metrics_dump().expect("scrape");
+//! for (series, value) in parse_exposition(&text).expect("parse") {
+//!     println!("{series} = {value}");
+//! }
+//! ```
+//!
+//! At the CLI, `pol metrics --connect HOST:7878` is that one-shot
+//! scrape and `pol top --connect HOST:7878` is the live terminal view
+//! (QPS, staleness, τ p50/p99, shard heat).
 
 pub mod config;
 pub mod coordinator;
@@ -160,6 +186,7 @@ pub mod lr;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
@@ -190,6 +217,7 @@ pub mod prelude {
     pub use crate::metrics::ProgressiveValidator;
     pub use crate::model::{Model, Session, SessionBuilder};
     pub use crate::net::{LinkSpec, SimNetwork};
+    pub use crate::obs::{MetricsRegistry, Obs, TraceKind, TraceRing};
     pub use crate::rng::Rng;
     pub use crate::serve::{
         ModelRegistry, ModelSnapshot, PredictClient, PredictionServer,

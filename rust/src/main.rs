@@ -40,6 +40,8 @@ fn main() {
         Some("reshard") => cmd_reshard(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("serve-stats") => cmd_serve_stats(&args[1..]),
+        Some("metrics") => cmd_metrics(&args[1..]),
+        Some("top") => cmd_top(&args[1..]),
         Some("predict") => cmd_predict(&args[1..]),
         Some("bench-data") => cmd_bench_data(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
@@ -94,8 +96,18 @@ COMMANDS:
                    --batch/--density/--seed do not apply)
                    --no-remote-shutdown  (ignore wire Shutdown frames;
                    only --seconds or the owning process stop the server)
-  serve-stats      query a --listen server's wire + per-model stats
+  serve-stats      query a --listen server's wire + per-model stats,
+                   then its full metrics exposition
                    --connect ADDR
+  metrics          scrape a --listen server's metrics registry once
+                   (`# pol-metrics v1` text exposition)
+                   --connect ADDR
+  top              live terminal view of a --listen server: QPS,
+                   staleness, observed-delay p50/p99, shard heat
+                   --connect ADDR  --interval S (default 1)
+                   --seconds S  (exit after S seconds)
+                   --once  (print one exposition scrape and exit;
+                   automatic when stdout is not a terminal)
   predict          one prediction per stdin line ('idx:val idx:val ...',
                    pre-hashed indices) against a checkpoint
                    --model PATH
@@ -485,7 +497,10 @@ fn cmd_train(args: &[String]) -> i32 {
             let builder = wire_checkpoint(
                 Session::builder().config(cfg.clone()).dim(source.dim()),
                 &fl,
-            )?;
+            )?
+            // telemetry rides along: counters only (bit-identical
+            // training), and checkpoints carry the trace-tail trailer
+            .obs(pol::obs::Obs::new());
             // from here on failures are runtime errors (exit 1)
             let mut session = match builder.build() {
                 Ok(s) => s,
@@ -557,7 +572,8 @@ fn cmd_train(args: &[String]) -> i32 {
         let builder = wire_checkpoint(
             Session::builder().config(cfg.clone()).dim(train.dim),
             &fl,
-        )?;
+        )?
+        .obs(pol::obs::Obs::new());
         // from here on failures are runtime errors (exit 1), not usage
         // errors (exit 2)
         let mut session = match builder.build() {
@@ -632,6 +648,18 @@ fn cmd_checkpoint(args: &[String]) -> i32 {
             }
             for line in info.config_text.lines() {
                 println!("  {line}");
+            }
+            if !info.trace.is_empty() {
+                println!("trace tail ({} event(s)):", info.trace.len());
+                for ev in &info.trace {
+                    println!(
+                        "  #{} {} @ {} instances: {}",
+                        ev.seq,
+                        ev.kind.name(),
+                        ev.trained,
+                        ev.detail
+                    );
+                }
             }
             0
         }
@@ -913,32 +941,252 @@ fn cmd_serve_stats(args: &[String]) -> i32 {
             return 1;
         }
     };
-    println!(
-        "uptime_s={:.1} connections={} active={} frames_in={} frames_out={} \
-         bytes_in={} bytes_out={} decode_errors={}",
-        s.uptime_us as f64 / 1e6,
-        s.connections,
-        s.active_connections,
-        s.frames_in,
-        s.frames_out,
-        s.bytes_in,
-        s.bytes_out,
-        s.decode_errors
-    );
-    for m in &s.models {
-        println!(
-            "model={} requests={} predictions={} p50_us={:.1} p99_us={:.1} \
-             max_us={:.1} max_staleness={}",
-            m.name,
-            m.requests,
-            m.predictions,
-            m.p50_ns as f64 / 1e3,
-            m.p99_ns as f64 / 1e3,
-            m.max_ns as f64 / 1e3,
-            m.max_staleness
-        );
+    // the one formatting path shared with `pol serve`'s exit reports
+    print!("{}", s.render_text());
+    // the registry snapshot rides along: same scrape `pol metrics` and
+    // `pol top --once` print (servers predating MetricsDump just skip it)
+    if let Ok(text) = client.metrics_dump() {
+        print!("{text}");
     }
     0
+}
+
+fn cmd_metrics(args: &[String]) -> i32 {
+    let fl = match parse_flags("metrics", args, &["--connect"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let Some(addr) = fl.get("--connect") else {
+        return usage_error("metrics: --connect ADDR required");
+    };
+    let sock = match resolve_addr("metrics", "--connect", addr) {
+        Ok(s) => s,
+        Err(e) => return usage_error(&e),
+    };
+    let mut client = match pol::wire::WireClient::connect(sock) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("metrics: connect {sock}: {e}");
+            return 1;
+        }
+    };
+    match client.metrics_dump() {
+        Ok(text) => {
+            print!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("metrics: {sock}: {e}");
+            1
+        }
+    }
+}
+
+/// Exact-match lookup in a parsed exposition.
+fn series_value(series: &[(String, u64)], name: &str) -> Option<u64> {
+    series.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+}
+
+/// Sum every series whose name is `name` exactly or `name{...}` (the
+/// labeled instances plus any unlabeled mirror).
+fn series_sum(series: &[(String, u64)], name: &str) -> u64 {
+    let prefix = format!("{name}{{");
+    series
+        .iter()
+        .filter(|(n, _)| n == name || n.starts_with(&prefix))
+        .map(|&(_, v)| v)
+        .sum()
+}
+
+/// One dashboard frame for `pol top`: headline rates from the delta
+/// against the previous scrape, then gauges and shard heat bars.
+fn render_top(
+    sock: std::net::SocketAddr,
+    cur: &[(String, u64)],
+    prev: Option<(std::time::Duration, &[(String, u64)])>,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "pol top — {sock}");
+    let rate = |name: &str| -> Option<f64> {
+        let (dt, prev) = prev?;
+        let dt = dt.as_secs_f64();
+        if dt <= 0.0 {
+            return None;
+        }
+        Some(
+            series_sum(cur, name).saturating_sub(series_sum(prev, name))
+                as f64
+                / dt,
+        )
+    };
+    match (rate("pol_serve_requests_total"), rate("pol_wire_frames_in_total"))
+    {
+        (Some(qps), Some(fps)) => {
+            let _ = writeln!(
+                out,
+                "qps={qps:.0} frames_in_per_s={fps:.0} active_connections={}",
+                series_sum(cur, "pol_wire_active_connections")
+            );
+        }
+        _ => {
+            let _ = writeln!(
+                out,
+                "qps=… (first scrape) active_connections={}",
+                series_sum(cur, "pol_wire_active_connections")
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "requests={} predictions={} staleness_max={} decode_errors={}",
+        series_sum(cur, "pol_serve_requests_total"),
+        series_sum(cur, "pol_serve_predictions_total"),
+        cur.iter()
+            .filter(|(n, _)| n.starts_with("pol_serve_staleness_max"))
+            .map(|&(_, v)| v)
+            .max()
+            .unwrap_or(0),
+        series_sum(cur, "pol_wire_decode_errors_total"),
+    );
+    if series_value(cur, "pol_train_delay_count").is_some() {
+        let _ = writeln!(
+            out,
+            "trained={} delay(tau) p50={} p99={} max={} pending={}",
+            series_sum(cur, "pol_train_instances_total"),
+            series_value(cur, "pol_train_delay_p50").unwrap_or(0),
+            series_value(cur, "pol_train_delay_p99").unwrap_or(0),
+            series_value(cur, "pol_train_delay_max").unwrap_or(0),
+            series_value(cur, "pol_train_pending_depth").unwrap_or(0),
+        );
+    }
+    // per-model latency lines
+    for (n, v) in cur {
+        if let Some(rest) = n.strip_prefix("pol_serve_latency_ns_p99{") {
+            let model = rest
+                .strip_prefix("model=\"")
+                .and_then(|r| r.strip_suffix("\"}"))
+                .unwrap_or(rest);
+            let p50name = n.replace("_p99{", "_p50{");
+            let _ = writeln!(
+                out,
+                "model={model} p50_us={:.1} p99_us={:.1}",
+                series_value(cur, &p50name).unwrap_or(0) as f64 / 1e3,
+                *v as f64 / 1e3,
+            );
+        }
+    }
+    // shard heat: nnz routed per shard, scaled to the hottest
+    let mut shards: Vec<(&str, u64)> = cur
+        .iter()
+        .filter_map(|(n, v)| {
+            n.strip_prefix("pol_train_shard_nnz_total{shard=\"")
+                .and_then(|r| r.strip_suffix("\"}"))
+                .map(|k| (k, *v))
+        })
+        .collect();
+    if !shards.is_empty() {
+        shards.sort_by_key(|&(k, _)| k.parse::<u64>().unwrap_or(u64::MAX));
+        let hottest = shards.iter().map(|&(_, v)| v).max().unwrap_or(1).max(1);
+        let _ = writeln!(out, "shard heat (nnz):");
+        for (k, v) in shards {
+            let width = ((v as f64 / hottest as f64) * 30.0).round() as usize;
+            let _ = writeln!(out, "  {k:>3} {:<30} {v}", "#".repeat(width));
+        }
+    }
+    out
+}
+
+fn cmd_top(args: &[String]) -> i32 {
+    let fl = match parse_flags(
+        "top",
+        args,
+        &["--connect", "--interval", "--seconds"],
+        &["--once"],
+    ) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let run = || -> Result<i32, String> {
+        let Some(addr) = fl.get("--connect") else {
+            return Err("top: --connect ADDR required".into());
+        };
+        let sock = resolve_addr("top", "--connect", addr)?;
+        let interval: f64 = parsed("top", &fl, "--interval")?.unwrap_or(1.0);
+        let seconds: Option<f64> = parsed("top", &fl, "--seconds")?;
+        let mut client = match pol::wire::WireClient::connect(sock) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("top: connect {sock}: {e}");
+                return Ok(1);
+            }
+        };
+        // a redirected stdout cannot host an ANSI redraw loop: degrade
+        // to one parseable scrape, exactly what --once asks for
+        let once = fl.has("--once")
+            || !std::io::IsTerminal::is_terminal(&std::io::stdout());
+        if once {
+            return Ok(match client.metrics_dump() {
+                Ok(text) => {
+                    print!("{text}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("top: {sock}: {e}");
+                    1
+                }
+            });
+        }
+        let deadline = seconds.map(|s| {
+            std::time::Instant::now()
+                + std::time::Duration::from_secs_f64(s.max(0.1))
+        });
+        let mut prev: Option<(std::time::Instant, Vec<(String, u64)>)> = None;
+        loop {
+            let text = match client.metrics_dump() {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("top: {sock}: {e}");
+                    return Ok(1);
+                }
+            };
+            let now = std::time::Instant::now();
+            let Some(cur) = pol::obs::parse_exposition(&text) else {
+                eprintln!("top: {sock}: unparseable metrics exposition");
+                return Ok(1);
+            };
+            let frame = render_top(
+                sock,
+                &cur,
+                prev.as_ref()
+                    .map(|(t, v)| (now.duration_since(*t), v.as_slice())),
+            );
+            // home + clear: redraw in place without scrollback spam
+            print!("\x1b[H\x1b[2J{frame}");
+            let _ = std::io::Write::flush(&mut std::io::stdout());
+            prev = Some((now, cur));
+            if let Some(d) = deadline {
+                if std::time::Instant::now() >= d {
+                    return Ok(0);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                interval.clamp(0.05, 60.0),
+            ));
+        }
+    };
+    match run() {
+        Ok(code) => code,
+        Err(e) => usage_error(&e),
+    }
 }
 
 /// `NAME=PATH` or bare `PATH` (name defaults to the file stem).
@@ -1050,28 +1298,8 @@ fn serve_listen(
         None => server.wait(),
     }
     let stats = server.shutdown();
-    println!(
-        "connections={} frames_in={} frames_out={} bytes_in={} bytes_out={} \
-         decode_errors={}",
-        stats.connections,
-        stats.frames_in,
-        stats.frames_out,
-        stats.bytes_in,
-        stats.bytes_out,
-        stats.decode_errors
-    );
-    for m in &stats.models {
-        println!(
-            "model={} requests={} predictions={} p50_us={:.1} p99_us={:.1} \
-             max_staleness={}",
-            m.name,
-            m.requests,
-            m.predictions,
-            m.p50_ns as f64 / 1e3,
-            m.p99_ns as f64 / 1e3,
-            m.max_staleness
-        );
-    }
+    // exit report through the same formatting path as `pol serve-stats`
+    print!("{}", stats.render_text());
     0
 }
 
@@ -1156,7 +1384,9 @@ fn cmd_serve(args: &[String]) -> i32 {
             "serving {} model(s) on {threads} threads, batch {batch}, for {seconds}s",
             loaded.len()
         );
-        let server = PredictionServer::start(Arc::clone(&registry), threads);
+        let obs = pol::obs::Obs::new();
+        let mut server = PredictionServer::start(Arc::clone(&registry), threads);
+        server.attach_obs(Arc::clone(&obs));
         let deadline = std::time::Instant::now()
             + std::time::Duration::from_secs_f64(seconds.max(0.1));
         // drive load from as many client threads as serving threads,
@@ -1203,17 +1433,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             stats.latency.max_ns() as f64 / 1e3,
             stats.max_staleness
         );
-        for (name, ms) in &stats.per_model {
-            println!(
-                "model={name} requests={} predictions={} qps={:.0} p50_us={:.1} p99_us={:.1} max_staleness={}",
-                ms.requests,
-                ms.predictions,
-                ms.qps(stats.elapsed),
-                ms.latency.quantile_ns(0.5) as f64 / 1e3,
-                ms.latency.quantile_ns(0.99) as f64 / 1e3,
-                ms.max_staleness
-            );
-        }
+        // per-model lines through the same formatting path as the wire
+        // front-end, then the mirrored registry snapshot
+        print!(
+            "{}",
+            pol::wire::StatsReport::from_serve(&stats).render_models_text()
+        );
+        print!("{}", obs.metrics.render());
         Ok(0)
     };
     match run() {

@@ -196,6 +196,19 @@ impl LatencyHistogram {
         self.max_ns
     }
 
+    /// Total of every recorded sample (saturating).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// The raw per-bucket counts (bucket `i` holds samples with
+    /// `floor(log2(ns)) == i`) — the same edges
+    /// [`crate::obs::Histogram`] uses, so the two fold together
+    /// without rebinning.
+    pub fn bucket_counts(&self) -> &[u64; 64] {
+        &self.buckets
+    }
+
     /// Upper edge (ns) of the bucket containing quantile `q` ∈ [0, 1] —
     /// a ≤2× overestimate of the true quantile, capped at the observed
     /// max.
@@ -313,6 +326,76 @@ mod tests {
     fn histogram_empty_is_zero() {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.quantile_ns(0.0), 0);
+        assert_eq!(h.quantile_ns(1.0), 0);
         assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.sum_ns(), 0);
+    }
+
+    #[test]
+    fn histogram_single_sample_every_quantile() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(777);
+        // with one sample, every quantile is that sample (the bucket
+        // upper edge is capped at the observed max)
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), 777, "q {q}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum_ns(), 777);
+    }
+
+    #[test]
+    fn histogram_zero_sample_lands_in_bucket_zero() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(0);
+        assert_eq!(h.bucket_counts()[0], 1);
+        assert_eq!(h.count(), 1);
+        // quantile is the bucket-0 upper edge capped at the max (0)
+        assert_eq!(h.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_all_in_overflow_bucket() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.record_ns(u64::MAX);
+        }
+        assert_eq!(h.bucket_counts()[63], 10);
+        // the i >= 63 edge would be u64::MAX; the cap keeps it honest
+        assert_eq!(h.quantile_ns(0.5), u64::MAX);
+        assert_eq!(h.quantile_ns(0.99), u64::MAX);
+        assert_eq!(h.max_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone_under_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for ns in [50u64, 300, 1200, 90_000] {
+            a.record_ns(ns);
+        }
+        for ns in [10u64, 10, 10, 2_000_000] {
+            b.record_ns(ns);
+        }
+        for h in [&a, &b] {
+            // p50 ≤ p99 ≤ p100 within each histogram
+            assert!(h.quantile_ns(0.5) <= h.quantile_ns(0.99));
+            assert!(h.quantile_ns(0.99) <= h.quantile_ns(1.0));
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert!(merged.quantile_ns(0.5) <= merged.quantile_ns(0.99));
+        // merged extremes bracket the inputs' extremes
+        assert_eq!(
+            merged.quantile_ns(1.0),
+            a.quantile_ns(1.0).max(b.quantile_ns(1.0))
+        );
+        assert!(
+            merged.quantile_ns(0.0)
+                <= a.quantile_ns(0.0).min(b.quantile_ns(0.0))
+        );
+        assert_eq!(merged.count(), a.count() + b.count());
     }
 }

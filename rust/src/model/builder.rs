@@ -44,6 +44,7 @@ pub struct SessionBuilder {
     checkpoint_every: Option<u64>,
     warm_start: Option<PathBuf>,
     workers: Option<usize>,
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 impl SessionBuilder {
@@ -191,6 +192,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach a telemetry handle ([`crate::obs::Obs`]): the model
+    /// reports its `pol_train_*` series and lifecycle trace events into
+    /// it, and checkpoints written by this session carry the trace tail
+    /// as a `POLT` trailer (readable with `pol checkpoint --model`).
+    pub fn obs(mut self, obs: Arc<crate::obs::Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
     /// Construct the model and wire its serving/durability hooks.
     pub fn build(self) -> io::Result<Session> {
         let dim = self
@@ -243,12 +253,16 @@ impl SessionBuilder {
                 ckpt_writes = Some(handle);
             }
         }
+        if let Some(obs) = &self.obs {
+            model.install_obs(Arc::clone(obs));
+        }
         Ok(Session {
             model,
             cell,
             source: self.source,
             checkpoint_to: self.checkpoint_to,
             ckpt_writes,
+            obs: self.obs,
         })
     }
 }
@@ -262,6 +276,7 @@ pub struct Session {
     source: Option<Box<dyn InstanceSource>>,
     checkpoint_to: Option<PathBuf>,
     ckpt_writes: Option<Arc<AtomicU64>>,
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 impl Session {
@@ -278,6 +293,7 @@ impl Session {
             source: None,
             checkpoint_to: None,
             ckpt_writes: None,
+            obs: None,
         }
     }
 
@@ -367,9 +383,31 @@ impl Session {
         Ok(())
     }
 
-    /// Write the model to a `.polz` checkpoint atomically.
+    /// Write the model to a `.polz` checkpoint atomically. With an
+    /// [`SessionBuilder::obs`] handle attached, the trace-ring tail is
+    /// appended as a `POLT` trailer after the checksummed payload (old
+    /// readers stop at the payload length and never see it).
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> io::Result<()> {
-        checkpoint::save_atomic(path.as_ref(), |out| self.model.write(out))
+        match &self.obs {
+            None => checkpoint::save_atomic(path.as_ref(), |out| {
+                self.model.write(out)
+            }),
+            Some(o) => {
+                o.metrics.counter("pol_checkpoint_writes_total").inc();
+                o.trace.record(
+                    crate::obs::TraceKind::Checkpoint,
+                    self.model.trained_instances(),
+                    "final checkpoint",
+                );
+                let events = o.trace.tail(
+                    crate::obs::trace::MAX_TRAILER_EVENTS as usize,
+                );
+                checkpoint::save_atomic(path.as_ref(), move |out| {
+                    self.model.write(out)?;
+                    crate::obs::trace::append_trailer(&mut *out, &events)
+                })
+            }
+        }
     }
 
     /// Take the model out of the session.

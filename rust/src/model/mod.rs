@@ -194,6 +194,16 @@ pub trait Model: Send {
     /// Wait for any in-flight background checkpoint write to land
     /// (call before reading or replacing the checkpoint file).
     fn finish_checkpoints(&mut self) {}
+
+    /// Attach a telemetry handle ([`crate::obs::Obs`]): the model
+    /// reports its training series (`pol_train_*`, snapshot/checkpoint
+    /// counters) into its registry and its lifecycle events into its
+    /// trace ring. Returns `false` when the model records nothing
+    /// (attachment is then a no-op, as for plain [`Sgd`]).
+    fn install_obs(&mut self, obs: std::sync::Arc<crate::obs::Obs>) -> bool {
+        let _ = obs;
+        false
+    }
 }
 
 /// Deserialize any `.polz` checkpoint into a [`Model`] trait object.
@@ -367,6 +377,11 @@ impl Model for Coordinator {
 
     fn finish_checkpoints(&mut self) {
         self.flush_checkpoints();
+    }
+
+    fn install_obs(&mut self, obs: std::sync::Arc<crate::obs::Obs>) -> bool {
+        self.set_obs(obs);
+        true
     }
 }
 

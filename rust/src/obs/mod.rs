@@ -1,0 +1,89 @@
+//! `pol::obs` — unified telemetry: one registry for every metric the
+//! system emits, one event ring for everything it does.
+//!
+//! The paper's governing quantity is the update delay τ (§0.5.3), and
+//! *Slow Learners are Fast* (PAPERS.md) makes it the variable of the
+//! regret bound — so this layer exists to *measure* it: the observed
+//! per-update delay distribution, pending-feedback depth, snapshot
+//! staleness, per-shard traffic, and the serving-side QPS/latency all
+//! flow into one [`MetricsRegistry`] and export through one versioned
+//! text format. The delay-adaptive `LrSchedule` and the multinode
+//! coordinator (ROADMAP) will read from exactly these sensors.
+//!
+//! Three export paths, one source of truth:
+//! * [`MetricsRegistry::render`] — the versioned text exposition
+//!   format (`# pol-metrics v1`, sorted `name{label="v"} value`
+//!   lines; golden-tested byte-for-byte).
+//! * the `MetricsDump` wire op — a remote process scrapes the same
+//!   text over TCP via [`crate::wire::WireClient::metrics_dump`].
+//! * `pol top --connect ADDR` / `pol metrics --connect ADDR` — a live
+//!   terminal view (or one-shot dump) over that wire op.
+//!
+//! Series emitted by the instrumented layers:
+//!
+//! | series | layer | meaning |
+//! |--------|-------|---------|
+//! | `pol_train_instances_total` | coordinator | instances trained |
+//! | `pol_train_delay{,_count,_sum,_max,_p50,_p99}` | coordinator | observed per-update τ (instances) |
+//! | `pol_train_pending_depth` | coordinator | τ-delayed feedbacks in flight |
+//! | `pol_train_shard_nnz_total{shard="k"}` | coordinator/multicore | features routed to shard k |
+//! | `pol_stream_instances_total`, `pol_stream_batches_total` | pipeline | ingest volume |
+//! | `pol_stream_pool_batches`, `pol_stream_parse_skips_total` | pipeline | pool occupancy, skipped lines |
+//! | `pol_snapshot_publishes_total` | coordinator | snapshots published |
+//! | `pol_checkpoint_writes_total` | coordinator | background checkpoints |
+//! | `pol_serve_requests_total{model}`, `pol_serve_predictions_total{model}` | serve/wire | request volume |
+//! | `pol_serve_latency_ns{model}` (histogram) | serve/wire | per-request latency |
+//! | `pol_serve_staleness_max{model}` | serve/wire | worst instances-behind served |
+//! | `pol_serve_registry_version`, `pol_serve_models` | wire | registry state |
+//! | `pol_wire_{bytes,frames}_{in,out}_total`, `pol_wire_decode_errors_total` | wire | frame traffic |
+//! | `pol_wire_connections_total`, `pol_wire_active_connections` | wire | connection churn |
+//!
+//! Instrumentation is counters only — no float math on any training
+//! path — so an instrumented trainer is bit-identical to an
+//! uninstrumented one (pinned per rule × topology in
+//! `tests/test_obs.rs`).
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    parse_exposition, Counter, Exposition, Gauge, Histogram,
+    HistogramSnapshot, MetricsRegistry, EXPOSITION_HEADER,
+};
+pub use trace::{TraceEvent, TraceKind, TraceRing};
+
+use std::sync::Arc;
+
+/// Default capacity of the structured event ring.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1024;
+
+/// The shared observability handle: a metrics registry plus an event
+/// ring, built once and cloned (`Arc`) into every component that
+/// should report — coordinator, pipeline, servers. Components without
+/// a handle record nothing and pay nothing.
+pub struct Obs {
+    pub metrics: MetricsRegistry,
+    pub trace: TraceRing,
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs")
+            .field("metrics", &self.metrics.len())
+            .field("trace", &self.trace.len())
+            .finish()
+    }
+}
+
+impl Obs {
+    pub fn new() -> Arc<Obs> {
+        Obs::with_trace_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    pub fn with_trace_capacity(capacity: usize) -> Arc<Obs> {
+        Arc::new(Obs {
+            metrics: MetricsRegistry::new(),
+            trace: TraceRing::new(capacity),
+        })
+    }
+}

@@ -1,0 +1,580 @@
+//! The metrics registry: named counters, gauges, and fixed-bucket
+//! histograms behind cheap atomic handles, plus the versioned text
+//! exposition format every export path renders through.
+//!
+//! The registry is global-free — construct one (usually inside an
+//! [`crate::obs::Obs`]) and hand clones of the handles out. The hot
+//! path is lock-free: registration returns a handle wrapping the
+//! atomic cell itself, so recording is a relaxed atomic op with zero
+//! steady-state allocation; the registry's mutex is touched only at
+//! registration and snapshot time. Registering the same
+//! `(name, labels)` pair twice returns a handle to the *same* cell,
+//! so independent components can share a series without coordination.
+//!
+//! [`Histogram`] uses the same power-of-two bucketing as
+//! [`crate::metrics::LatencyHistogram`] (bucket `i` holds values in
+//! `[2^i, 2^(i+1))`), so wire-side latency buffers fold in bucket by
+//! bucket via [`Histogram::merge_latency`] without rebinning.
+//!
+//! Exposition format (`# pol-metrics v1`): one `name{k="v"} value`
+//! line per series, label values `\`/`"`/newline-escaped, lines
+//! sorted, every value a base-10 `u64`. Histograms render as five
+//! derived series (`_count`, `_sum`, `_max`, `_p50`, `_p99`). The
+//! format is pinned byte-for-byte by a golden test — bump the header
+//! version if it ever has to change.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::LatencyHistogram;
+
+/// First line of every exposition dump; parsers reject anything else.
+pub const EXPOSITION_HEADER: &str = "# pol-metrics v1";
+
+/// A monotonically increasing event count.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins (or running-max) instantaneous value.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Ratchet the gauge up to `v` if larger (high-water marks).
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistCells {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl HistCells {
+    fn new() -> HistCells {
+        HistCells {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; 64];
+        for (slot, cell) in buckets.iter_mut().zip(&self.buckets) {
+            *slot = cell.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A fixed 64-bucket power-of-two histogram behind atomic cells —
+/// recording is four relaxed atomic ops, no locks, no allocation.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCells>);
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        let b = 63 - v.max(1).leading_zeros() as usize;
+        let c = &*self.0;
+        c.buckets[b].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Fold an already-binned [`LatencyHistogram`] in bucket by bucket
+    /// (both use the same power-of-two edges). This is how batched
+    /// per-connection/per-worker stats buffers land in the registry
+    /// without touching the request hot path.
+    pub fn merge_latency(&self, h: &LatencyHistogram) {
+        let c = &*self.0;
+        for (cell, &n) in c.buckets.iter().zip(h.bucket_counts()) {
+            if n > 0 {
+                cell.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        c.count.fetch_add(h.count(), Ordering::Relaxed);
+        c.sum.fetch_add(h.sum_ns(), Ordering::Relaxed);
+        c.max.fetch_max(h.max_ns(), Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.0.snapshot()
+    }
+}
+
+/// A consistent point-in-time copy of a [`Histogram`] (or of a
+/// [`LatencyHistogram`], via [`HistogramSnapshot::from_latency`]).
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; 64],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { buckets: [0; 64], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Re-bin a [`LatencyHistogram`] (identical bucket edges, so this
+    /// is a plain copy).
+    pub fn from_latency(h: &LatencyHistogram) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: *h.bucket_counts(),
+            count: h.count(),
+            sum: h.sum_ns(),
+            max: h.max_ns(),
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = 63 - v.max(1).leading_zeros() as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Upper-bound estimate of the `q`-quantile: the upper edge of the
+    /// bucket holding the target rank, clamped to the true max. Same
+    /// contract as [`LatencyHistogram::quantile_ns`]; 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let upper =
+                    if i >= 63 { u64::MAX } else { (2u64 << i) - 1 };
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistCells>),
+}
+
+impl Cell {
+    fn kind(&self) -> &'static str {
+        match self {
+            Cell::Counter(_) => "counter",
+            Cell::Gauge(_) => "gauge",
+            Cell::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    cell: Cell,
+}
+
+/// Named metric series; see the module docs for the discipline.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn find(
+        entries: &[Entry],
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<usize> {
+        entries.iter().position(|e| {
+            e.name == name
+                && e.labels.len() == labels.len()
+                && e.labels
+                    .iter()
+                    .zip(labels)
+                    .all(|((k, v), &(lk, lv))| k == lk && v == lv)
+        })
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Cell,
+    ) -> Cell {
+        let mut entries = self.entries.lock().expect("metrics lock");
+        if let Some(i) = Self::find(&entries, name, labels) {
+            let e = &entries[i].cell;
+            return match e {
+                Cell::Counter(c) => Cell::Counter(Arc::clone(c)),
+                Cell::Gauge(g) => Cell::Gauge(Arc::clone(g)),
+                Cell::Histogram(h) => Cell::Histogram(Arc::clone(h)),
+            };
+        }
+        let cell = make();
+        let handle = match &cell {
+            Cell::Counter(c) => Cell::Counter(Arc::clone(c)),
+            Cell::Gauge(g) => Cell::Gauge(Arc::clone(g)),
+            Cell::Histogram(h) => Cell::Histogram(Arc::clone(h)),
+        };
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|&(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            cell,
+        });
+        handle
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counter_with(name, &[])
+    }
+
+    /// Register (or re-fetch) a counter under `(name, labels)`. Panics
+    /// if the series already exists with a different metric type — a
+    /// programming error, caught at registration, never on the hot
+    /// path.
+    pub fn counter_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Counter {
+        match self.register(name, labels, || {
+            Cell::Counter(Arc::new(AtomicU64::new(0)))
+        }) {
+            Cell::Counter(c) => Counter(c),
+            other => panic!(
+                "metric {name} already registered as a {}",
+                other.kind()
+            ),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.register(name, labels, || {
+            Cell::Gauge(Arc::new(AtomicU64::new(0)))
+        }) {
+            Cell::Gauge(g) => Gauge(g),
+            other => panic!(
+                "metric {name} already registered as a {}",
+                other.kind()
+            ),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.histogram_with(name, &[])
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        match self.register(name, labels, || {
+            Cell::Histogram(Arc::new(HistCells::new()))
+        }) {
+            Cell::Histogram(h) => Histogram(h),
+            other => panic!(
+                "metric {name} already registered as a {}",
+                other.kind()
+            ),
+        }
+    }
+
+    /// Number of registered series.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("metrics lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Emit every registered series into an [`Exposition`] under
+    /// construction (lets callers append process-level series — the
+    /// wire server folds its frame counters in this way).
+    pub fn render_into(&self, exp: &mut Exposition) {
+        let entries = self.entries.lock().expect("metrics lock");
+        for e in entries.iter() {
+            let labels: Vec<(&str, &str)> = e
+                .labels
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.as_str()))
+                .collect();
+            match &e.cell {
+                Cell::Counter(c) => {
+                    exp.point(&e.name, &labels, c.load(Ordering::Relaxed));
+                }
+                Cell::Gauge(g) => {
+                    exp.point(&e.name, &labels, g.load(Ordering::Relaxed));
+                }
+                Cell::Histogram(h) => {
+                    exp.histogram(&e.name, &labels, &h.snapshot());
+                }
+            }
+        }
+    }
+
+    /// Render the whole registry as versioned exposition text.
+    pub fn render(&self) -> String {
+        let mut exp = Exposition::new();
+        self.render_into(&mut exp);
+        exp.render()
+    }
+}
+
+/// Builder for the versioned text exposition format: collect points,
+/// then [`Exposition::render`] sorts the lines and prepends the
+/// version header, so output is byte-stable regardless of
+/// registration order.
+#[derive(Default)]
+pub struct Exposition {
+    lines: Vec<String>,
+}
+
+impl Exposition {
+    pub fn new() -> Exposition {
+        Exposition::default()
+    }
+
+    pub fn point(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        let mut line = String::with_capacity(name.len() + 24);
+        line.push_str(name);
+        if !labels.is_empty() {
+            line.push('{');
+            for (i, &(k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                line.push_str(k);
+                line.push_str("=\"");
+                for ch in v.chars() {
+                    match ch {
+                        '"' => line.push_str("\\\""),
+                        '\\' => line.push_str("\\\\"),
+                        '\n' => line.push_str("\\n"),
+                        c => line.push(c),
+                    }
+                }
+                line.push('"');
+            }
+            line.push('}');
+        }
+        line.push(' ');
+        line.push_str(&value.to_string());
+        self.lines.push(line);
+    }
+
+    /// A histogram renders as five derived series: `_count`, `_sum`,
+    /// `_max`, `_p50`, `_p99`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        snap: &HistogramSnapshot,
+    ) {
+        self.point(&format!("{name}_count"), labels, snap.count);
+        self.point(&format!("{name}_sum"), labels, snap.sum);
+        self.point(&format!("{name}_max"), labels, snap.max);
+        self.point(&format!("{name}_p50"), labels, snap.quantile(0.5));
+        self.point(&format!("{name}_p99"), labels, snap.quantile(0.99));
+    }
+
+    /// Sorted, newline-terminated text starting with
+    /// [`EXPOSITION_HEADER`].
+    pub fn render(mut self) -> String {
+        self.lines.sort();
+        let size: usize =
+            self.lines.iter().map(|l| l.len() + 1).sum::<usize>()
+                + EXPOSITION_HEADER.len()
+                + 1;
+        let mut out = String::with_capacity(size);
+        out.push_str(EXPOSITION_HEADER);
+        out.push('\n');
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Parse exposition text back into `(series, value)` pairs, the series
+/// key keeping its label block verbatim (`name{k="v"}`). `None` when
+/// the header is missing/unsupported or any line is malformed — the
+/// consumer (`pol top`, tests) treats that as a protocol error, never
+/// a partial read.
+pub fn parse_exposition(text: &str) -> Option<Vec<(String, u64)>> {
+    let mut lines = text.lines();
+    if lines.next()? != EXPOSITION_HEADER {
+        return None;
+    }
+    let mut out = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ')?;
+        out.push((series.to_string(), value.parse().ok()?));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_basics() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("c");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // re-registration returns the same cell
+        let c2 = reg.counter("c");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        assert_eq!(reg.len(), 1);
+
+        let g = reg.gauge("g");
+        g.set(9);
+        g.record_max(3);
+        assert_eq!(g.get(), 9);
+        g.record_max(12);
+        assert_eq!(g.get(), 12);
+        // same name, different labels = a distinct series
+        let g2 = reg.gauge_with("g", &[("shard", "1")]);
+        g2.set(1);
+        assert_eq!(g.get(), 12);
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn type_mismatch_panics_at_registration() {
+        let reg = MetricsRegistry::new();
+        reg.counter("m");
+        reg.gauge("m");
+    }
+
+    #[test]
+    fn histogram_buckets_match_latency_histogram() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("h");
+        let mut lat = LatencyHistogram::new();
+        for v in [1u64, 2, 3, 900, 1023, 1024, u64::MAX] {
+            h.record(v);
+            lat.record_ns(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.buckets, *lat.bucket_counts());
+        assert_eq!(snap.count, lat.count());
+        assert_eq!(snap.quantile(0.5), lat.quantile_ns(0.5));
+        assert_eq!(snap.quantile(0.99), lat.quantile_ns(0.99));
+        // folding the latency histogram in doubles every bucket
+        h.merge_latency(&lat);
+        let snap2 = h.snapshot();
+        assert_eq!(snap2.count, 2 * snap.count);
+        for (a, b) in snap2.buckets.iter().zip(&snap.buckets) {
+            assert_eq!(*a, 2 * b);
+        }
+    }
+
+    #[test]
+    fn exposition_escapes_and_sorts() {
+        let mut exp = Exposition::new();
+        exp.point("b_metric", &[], 2);
+        exp.point("a_metric", &[("k", "x\"y\\z")], 1);
+        let text = exp.render();
+        assert_eq!(
+            text,
+            "# pol-metrics v1\na_metric{k=\"x\\\"y\\\\z\"} 1\nb_metric 2\n"
+        );
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        let reg = MetricsRegistry::new();
+        reg.counter("requests").add(7);
+        reg.gauge_with("depth", &[("shard", "0")]).set(3);
+        let text = reg.render();
+        let points = parse_exposition(&text).expect("parse");
+        assert!(points.contains(&("requests".to_string(), 7)));
+        assert!(points.contains(&("depth{shard=\"0\"}".to_string(), 3)));
+        // header is mandatory
+        assert!(parse_exposition("requests 7\n").is_none());
+        assert!(parse_exposition("# pol-metrics v2\nrequests 7\n").is_none());
+        // malformed value poisons the whole parse
+        assert!(parse_exposition("# pol-metrics v1\nx notanum\n").is_none());
+    }
+}

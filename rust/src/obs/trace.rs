@@ -1,0 +1,405 @@
+//! `obs::trace` — a bounded structured event ring answering "what did
+//! the system do, and when (in trained instances)?" after the fact.
+//!
+//! Rare control-plane events — snapshot publishes, re-shards,
+//! checkpoint writes, shutdowns, worker join/leave — are recorded with
+//! a global sequence number and the trained-instance count at that
+//! moment. The ring is bounded: the oldest event is overwritten when
+//! capacity is reached (the sequence numbers make the loss visible).
+//! Events are orders of magnitude rarer than updates, so a mutex is
+//! the right tool here; the *metrics* hot path lives in
+//! [`crate::obs::registry`] and stays lock-free.
+//!
+//! The tail of the ring also rides along inside `.polz` checkpoints as
+//! an optional trailer appended *after* the payload (magic `POLT`,
+//! FNV-1a checksummed). The checkpoint reader consumes exactly
+//! `payload_len` bytes, so old readers never see the trailer and new
+//! readers treat a missing one as an empty trace — forward and
+//! backward compatible by construction. `pol checkpoint` prints it,
+//! making "which snapshot was serving when" answerable from the file
+//! alone.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::hashing::fnv1a64;
+
+/// Magic opening a trace trailer appended after a checkpoint payload.
+pub const TRAILER_MAGIC: &[u8; 4] = b"POLT";
+
+/// Caps enforced before any allocation when reading a trailer back
+/// (same discipline as the `.polz` codec and the wire frames).
+pub const MAX_TRAILER_EVENTS: u32 = 4096;
+pub const MAX_DETAIL_BYTES: u32 = 512;
+
+/// Fixed per-event wire overhead: seq + kind + trained + detail len.
+const EVENT_HEAD: usize = 8 + 1 + 8 + 4;
+const MAX_TRAILER_BYTES: u64 = 4
+    + 4
+    + (MAX_TRAILER_EVENTS as u64)
+        * (EVENT_HEAD as u64 + MAX_DETAIL_BYTES as u64)
+    + 8;
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// What happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    Publish,
+    Reshard,
+    Checkpoint,
+    Shutdown,
+    WorkerJoin,
+    WorkerLeave,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Publish => "publish",
+            TraceKind::Reshard => "reshard",
+            TraceKind::Checkpoint => "checkpoint",
+            TraceKind::Shutdown => "shutdown",
+            TraceKind::WorkerJoin => "worker-join",
+            TraceKind::WorkerLeave => "worker-leave",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            TraceKind::Publish => 0,
+            TraceKind::Reshard => 1,
+            TraceKind::Checkpoint => 2,
+            TraceKind::Shutdown => 3,
+            TraceKind::WorkerJoin => 4,
+            TraceKind::WorkerLeave => 5,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<TraceKind> {
+        Some(match b {
+            0 => TraceKind::Publish,
+            1 => TraceKind::Reshard,
+            2 => TraceKind::Checkpoint,
+            3 => TraceKind::Shutdown,
+            4 => TraceKind::WorkerJoin,
+            5 => TraceKind::WorkerLeave,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Global sequence number (gaps reveal overwritten events).
+    pub seq: u64,
+    pub kind: TraceKind,
+    /// Trained-instance count at the moment of the event.
+    pub trained: u64,
+    /// Small human-readable payload, e.g. `"snapshot v7"`.
+    pub detail: String,
+}
+
+struct Ring {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// The bounded event ring. Cheap to share behind an `Arc` (it lives
+/// inside [`crate::obs::Obs`]); all methods take `&self`.
+pub struct TraceRing {
+    seq: AtomicU64,
+    inner: Mutex<Ring>,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            seq: AtomicU64::new(0),
+            inner: Mutex::new(Ring {
+                cap: capacity.max(1),
+                events: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Record an event; returns its sequence number.
+    pub fn record(
+        &self,
+        kind: TraceKind,
+        trained: u64,
+        detail: impl Into<String>,
+    ) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut r = self.inner.lock().expect("trace lock");
+        if r.events.len() == r.cap {
+            r.events.pop_front();
+            r.dropped += 1;
+        }
+        r.events.push_back(TraceEvent {
+            seq,
+            kind,
+            trained,
+            detail: detail.into(),
+        });
+        seq
+    }
+
+    /// The newest `n` events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<TraceEvent> {
+        let r = self.inner.lock().expect("trace lock");
+        let skip = r.events.len().saturating_sub(n);
+        r.events.iter().skip(skip).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("trace lock").events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().expect("trace lock").dropped
+    }
+
+    /// The sequence number the next [`TraceRing::record`] will get.
+    pub fn next_seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+}
+
+// --------------------------------------------------- trailer codec
+
+/// Serialize events as a checkpoint trailer: `POLT | u32 count |
+/// per-event (u64 seq | u8 kind | u64 trained | u32 detail_len |
+/// detail) | u64 fnv1a64 over count..details`. Keeps at most the
+/// newest [`MAX_TRAILER_EVENTS`]; details are truncated to
+/// [`MAX_DETAIL_BYTES`] on a char boundary — a trailer that encodes
+/// always decodes.
+pub fn encode_trailer(events: &[TraceEvent]) -> Vec<u8> {
+    let take = events.len().min(MAX_TRAILER_EVENTS as usize);
+    let events = &events[events.len() - take..];
+    let mut body = Vec::with_capacity(4 + events.len() * 32);
+    body.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for e in events {
+        body.extend_from_slice(&e.seq.to_le_bytes());
+        body.push(e.kind.to_u8());
+        body.extend_from_slice(&e.trained.to_le_bytes());
+        let mut detail = e.detail.as_str();
+        if detail.len() > MAX_DETAIL_BYTES as usize {
+            let mut cut = MAX_DETAIL_BYTES as usize;
+            while !detail.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            detail = &detail[..cut];
+        }
+        body.extend_from_slice(&(detail.len() as u32).to_le_bytes());
+        body.extend_from_slice(detail.as_bytes());
+    }
+    let mut out = Vec::with_capacity(4 + body.len() + 8);
+    out.extend_from_slice(TRAILER_MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    out
+}
+
+/// Append a trace trailer to a checkpoint being written.
+pub fn append_trailer(
+    out: &mut impl Write,
+    events: &[TraceEvent],
+) -> io::Result<()> {
+    out.write_all(&encode_trailer(events))
+}
+
+/// Read an optional trace trailer from a stream positioned right after
+/// a checkpoint payload. Clean EOF means "no trailer" (`Ok(vec![])`);
+/// anything present but malformed — wrong magic, truncation, a bad
+/// checksum, hostile lengths — is an [`io::ErrorKind::InvalidData`]
+/// error. All caps are enforced before allocation.
+pub fn read_trailer(inp: &mut impl Read) -> io::Result<Vec<TraceEvent>> {
+    let mut magic = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = inp.read(&mut magic[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    if got == 0 {
+        return Ok(Vec::new());
+    }
+    if got < 4 || &magic != TRAILER_MAGIC {
+        return Err(bad("malformed trace trailer magic"));
+    }
+    let mut rest = Vec::new();
+    inp.take(MAX_TRAILER_BYTES + 1).read_to_end(&mut rest)?;
+    if rest.len() as u64 > MAX_TRAILER_BYTES {
+        return Err(bad("trace trailer exceeds cap"));
+    }
+    if rest.len() < 4 + 8 {
+        return Err(bad("truncated trace trailer"));
+    }
+    let (body, sum) = rest.split_at(rest.len() - 8);
+    let expect = u64::from_le_bytes(sum.try_into().unwrap());
+    if fnv1a64(body) != expect {
+        return Err(bad("trace trailer checksum mismatch"));
+    }
+    decode_body(body)
+}
+
+fn decode_body(body: &[u8]) -> io::Result<Vec<TraceEvent>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> io::Result<&[u8]> {
+        let end = pos
+            .checked_add(n)
+            .filter(|&e| e <= body.len())
+            .ok_or_else(|| bad("truncated trace trailer"))?;
+        let s = &body[*pos..end];
+        *pos = end;
+        Ok(s)
+    };
+    let count =
+        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if count > MAX_TRAILER_EVENTS {
+        return Err(bad("trace trailer event count exceeds cap"));
+    }
+    // every event needs at least its fixed head; reject a lying count
+    // before reserving anything
+    if (count as usize) * EVENT_HEAD > body.len() - pos {
+        return Err(bad("trace trailer count exceeds bytes present"));
+    }
+    let mut events = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let seq =
+            u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let kind = TraceKind::from_u8(take(&mut pos, 1)?[0])
+            .ok_or_else(|| bad("unknown trace event kind"))?;
+        let trained =
+            u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let dlen =
+            u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if dlen > MAX_DETAIL_BYTES {
+            return Err(bad("trace detail exceeds cap"));
+        }
+        let detail = String::from_utf8(take(&mut pos, dlen as usize)?.to_vec())
+            .map_err(|_| bad("trace detail is not utf-8"))?;
+        events.push(TraceEvent { seq, kind, trained, detail });
+    }
+    if pos != body.len() {
+        return Err(bad("trailing bytes after trace trailer"));
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64, kind: TraceKind, trained: u64, d: &str) -> TraceEvent {
+        TraceEvent { seq, kind, trained, detail: d.to_string() }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_seq() {
+        let ring = TraceRing::new(3);
+        for i in 0..5u64 {
+            let seq =
+                ring.record(TraceKind::Publish, i * 10, format!("v{i}"));
+            assert_eq!(seq, i);
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        assert_eq!(ring.next_seq(), 5);
+        let tail = ring.tail(10);
+        let seqs: Vec<u64> = tail.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+        // a shorter tail keeps the newest
+        let t1 = ring.tail(1);
+        assert_eq!(t1[0].seq, 4);
+        assert_eq!(t1[0].detail, "v4");
+    }
+
+    #[test]
+    fn trailer_round_trips() {
+        let events = vec![
+            ev(0, TraceKind::Publish, 1024, "snapshot v1"),
+            ev(1, TraceKind::Checkpoint, 2048, "m.polz"),
+            ev(2, TraceKind::Reshard, 2048, "4 -> 8 workers"),
+            ev(3, TraceKind::Shutdown, 3000, ""),
+        ];
+        let bytes = encode_trailer(&events);
+        let back = read_trailer(&mut bytes.as_slice()).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn missing_trailer_is_empty() {
+        let back = read_trailer(&mut [].as_slice()).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn truncation_and_corruption_error_cleanly() {
+        let events = vec![ev(7, TraceKind::WorkerJoin, 9, "shard 3")];
+        let bytes = encode_trailer(&events);
+        for cut in 1..bytes.len() {
+            let err = read_trailer(&mut &bytes[..cut]).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                io::ErrorKind::InvalidData,
+                "cut {cut}"
+            );
+        }
+        let mut flipped = bytes.clone();
+        let idx = flipped.len() / 2;
+        flipped[idx] ^= 0x20;
+        assert!(read_trailer(&mut flipped.as_slice()).is_err());
+        // wrong magic
+        let mut wrong = bytes;
+        wrong[0] = b'X';
+        assert!(read_trailer(&mut wrong.as_slice()).is_err());
+    }
+
+    #[test]
+    fn hostile_lengths_rejected_before_allocation() {
+        // a count far past the cap
+        let mut body = Vec::new();
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(TRAILER_MAGIC);
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        let err = read_trailer(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // a plausible count with no bytes behind it
+        let mut body = Vec::new();
+        body.extend_from_slice(&64u32.to_le_bytes());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(TRAILER_MAGIC);
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        let err = read_trailer(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn long_details_truncate_on_encode_but_still_decode() {
+        let long = "x".repeat(2 * MAX_DETAIL_BYTES as usize);
+        let bytes =
+            encode_trailer(&[ev(0, TraceKind::Publish, 1, &long)]);
+        let back = read_trailer(&mut bytes.as_slice()).unwrap();
+        assert_eq!(back[0].detail.len(), MAX_DETAIL_BYTES as usize);
+    }
+}

@@ -120,6 +120,11 @@ pub struct CheckpointInfo {
     /// checkpoints and for v1/v2 files, which predate the header
     /// plan).
     pub plan: Option<ShardPlan>,
+    /// Tail of the writer's [`crate::obs::TraceRing`], appended as an
+    /// optional `POLT` trailer *after* the checksummed payload — old
+    /// readers stop at `payload_len` and never see it. Empty when the
+    /// writer had no obs attached (or the file predates the trailer).
+    pub trace: Vec<crate::obs::TraceEvent>,
 }
 
 impl CheckpointInfo {
@@ -784,6 +789,7 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
             total_params,
             config_text,
             plan: header_plan,
+            trace: Vec::new(),
         },
         tables,
     })
@@ -910,10 +916,15 @@ pub fn load_model(path: &Path) -> io::Result<Box<dyn Model>> {
 }
 
 /// Parse structure + metadata without building the model (`pol
-/// checkpoint` inspection; still verifies checksum and digest).
+/// checkpoint` inspection; still verifies checksum and digest). Also
+/// decodes the optional `POLT` trace trailer after the payload — a
+/// file without one yields an empty trace; a *corrupt* trailer is an
+/// error (the writer only ever appends whole, checksummed trailers).
 pub fn inspect(path: &Path) -> io::Result<CheckpointInfo> {
     let mut f = io::BufReader::new(std::fs::File::open(path)?);
-    Ok(read_raw(&mut f)?.info)
+    let mut info = read_raw(&mut f)?.info;
+    info.trace = crate::obs::trace::read_trailer(&mut f)?;
+    Ok(info)
 }
 
 impl Checkpoint {

@@ -157,6 +157,7 @@ pub struct PredictionServer {
     started: Instant,
     inflight_hint: Arc<AtomicU64>,
     closed: Arc<AtomicBool>,
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 /// Cloneable client side of a [`PredictionServer`].
@@ -243,7 +244,17 @@ impl PredictionServer {
             started: Instant::now(),
             inflight_hint: Arc::new(AtomicU64::new(0)),
             closed,
+            obs: None,
         }
+    }
+
+    /// Attach a telemetry handle: [`Self::shutdown`] mirrors the final
+    /// per-model stats into its registry (`pol_serve_*` series — the
+    /// same names the wire server exposes) and records a `Shutdown`
+    /// trace event. Nothing touches the request path, so attaching obs
+    /// costs nothing per prediction.
+    pub fn attach_obs(&mut self, obs: Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
     }
 
     /// Spawn a server hosting one cell under [`DEFAULT_MODEL`] (the
@@ -316,14 +327,40 @@ impl PredictionServer {
             let _ = job.reply.send(Err(PredictError::Closed));
         }
         drop(rx);
-        ServeStats {
+        let stats = ServeStats {
             requests: total.requests,
             predictions: total.predictions,
             latency: total.latency,
             max_staleness: total.max_staleness,
             elapsed: self.started.elapsed(),
             per_model,
+        };
+        if let Some(o) = &self.obs {
+            for (name, ms) in &stats.per_model {
+                let labels = [("model", name.as_str())];
+                o.metrics
+                    .counter_with("pol_serve_requests_total", &labels)
+                    .add(ms.requests);
+                o.metrics
+                    .counter_with("pol_serve_predictions_total", &labels)
+                    .add(ms.predictions);
+                o.metrics
+                    .gauge_with("pol_serve_staleness_max", &labels)
+                    .record_max(ms.max_staleness);
+                o.metrics
+                    .histogram_with("pol_serve_latency_ns", &labels)
+                    .merge_latency(&ms.latency);
+            }
+            o.trace.record(
+                crate::obs::TraceKind::Shutdown,
+                stats.requests,
+                format!(
+                    "prediction server drained ({} requests)",
+                    stats.requests
+                ),
+            );
         }
+        stats
     }
 }
 

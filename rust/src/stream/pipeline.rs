@@ -16,6 +16,7 @@ use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 
 use super::{InstanceBatch, InstanceSource};
+use crate::obs::Obs;
 use crate::sharding::ShardPlan;
 
 /// Configuration for a streaming run: batch granularity, the batch-pool
@@ -36,11 +37,22 @@ pub struct Pipeline {
     /// (the multicore path: sharding happens on the parsing thread, off
     /// the learners).
     pub shard: Option<ShardPlan>,
+    /// Optional telemetry sink: a finished run mirrors its counters
+    /// (`pol_stream_instances_total`, `pol_stream_batches_total`,
+    /// `pol_stream_pool_batches`, `pol_stream_parse_skips_total`) into
+    /// the registry — one flush per run, nothing on the parse path.
+    pub obs: Option<Arc<Obs>>,
 }
 
 impl Default for Pipeline {
     fn default() -> Self {
-        Pipeline { batch_size: 256, pool: 4, passes: 1, shard: None }
+        Pipeline {
+            batch_size: 256,
+            pool: 4,
+            passes: 1,
+            shard: None,
+            obs: None,
+        }
     }
 }
 
@@ -107,13 +119,17 @@ impl Pipeline {
         consume: impl FnOnce(&Feed) -> io::Result<R>,
     ) -> io::Result<(R, PipelineStats)> {
         let cfg = self.clone();
+        let skipped_before = source.skipped();
         let stats = Arc::new(StatsInner::default());
         let producer_stats = Arc::clone(&stats);
         let (tx, rx) = std::sync::mpsc::sync_channel(self.pool.max(1));
         let (recycle_tx, recycle_rx) = std::sync::mpsc::channel();
         let result = std::thread::scope(|s| {
+            // reborrow, so the source is readable again after the scope
+            // (the post-run skip count goes to the registry)
+            let src: &mut dyn InstanceSource = &mut *source;
             let producer = s.spawn(move || {
-                produce(&cfg, source, tx, recycle_rx, &producer_stats)
+                produce(&cfg, src, tx, recycle_rx, &producer_stats)
             });
             let feed = Feed { rx, recycle: recycle_tx };
             let r = consume(&feed);
@@ -122,7 +138,17 @@ impl Pipeline {
             producer.join().expect("pipeline parser thread panicked");
             r
         })?;
-        Ok((result, stats.snapshot()))
+        let snap = stats.snapshot();
+        if let Some(o) = &self.obs {
+            let m = &o.metrics;
+            m.counter("pol_stream_instances_total").add(snap.instances);
+            m.counter("pol_stream_batches_total").add(snap.batches);
+            m.gauge("pol_stream_pool_batches")
+                .record_max(snap.batches_allocated as u64);
+            m.counter("pol_stream_parse_skips_total")
+                .add(source.skipped().saturating_sub(skipped_before));
+        }
+        Ok((result, snap))
     }
 
     /// Drain the whole source through `f`, one batch at a time (the

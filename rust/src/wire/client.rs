@@ -380,6 +380,22 @@ impl WireClient {
         Ok(decode_stats(payload)?)
     }
 
+    /// Admin: scrape the server's full metrics exposition — the
+    /// versioned `# pol-metrics v1` text (see [`crate::obs`]), parseable
+    /// with [`crate::obs::parse_exposition`]. The request carries no
+    /// payload; the response is the text itself.
+    pub fn metrics_dump(&mut self) -> Result<String, WireError> {
+        let id = self.begin(Op::MetricsDump);
+        self.enqueue()?;
+        self.flush()?;
+        let payload = self.recv_expect(Op::MetricsDump, id)?;
+        String::from_utf8(payload.to_vec()).map_err(|_| {
+            WireError::Frame(FrameError::BadPayload(
+                "metrics dump payload is not UTF-8",
+            ))
+        })
+    }
+
     /// Admin: the registry's current models.
     pub fn list_models(&mut self) -> Result<Vec<ModelEntry>, WireError> {
         let id = self.begin(Op::ListModels);

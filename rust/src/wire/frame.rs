@@ -104,6 +104,10 @@ pub enum Op {
     Ping = 5,
     /// Admin: acknowledge, then gracefully drain the server.
     Shutdown = 6,
+    /// Admin: the full metrics registry in the versioned text
+    /// exposition format (request payload empty; response payload is
+    /// the UTF-8 text, already bounded by the frame cap).
+    MetricsDump = 7,
 }
 
 impl Op {
@@ -115,6 +119,7 @@ impl Op {
             4 => Some(Op::ListModels),
             5 => Some(Op::Ping),
             6 => Some(Op::Shutdown),
+            7 => Some(Op::MetricsDump),
             _ => None,
         }
     }
@@ -649,7 +654,83 @@ pub struct StatsReport {
     pub connections: u64,
     pub active_connections: u64,
     pub uptime_us: u64,
+    /// Registry generation at report time (bumps on every insert,
+    /// replace, or remove) — a scraper can detect hot-swaps from the
+    /// Stats payload alone.
+    pub registry_version: u64,
+    /// Number of models the registry held at report time.
+    pub registry_models: u64,
     pub models: Vec<ModelStatsReport>,
+}
+
+impl StatsReport {
+    /// Build a report from an in-process [`ServeStats`] — the
+    /// same shape the wire server exposes, so both front-ends print
+    /// through one formatting path ([`Self::render_text`]). The wire
+    /// counters stay zero: an in-process server has no wire.
+    ///
+    /// [`ServeStats`]: crate::serve::server::ServeStats
+    pub fn from_serve(s: &crate::serve::server::ServeStats) -> StatsReport {
+        StatsReport {
+            uptime_us: s.elapsed.as_micros() as u64,
+            models: s
+                .per_model
+                .iter()
+                .map(|(name, m)| ModelStatsReport {
+                    name: name.clone(),
+                    requests: m.requests,
+                    predictions: m.predictions,
+                    p50_ns: m.latency.quantile_ns(0.5),
+                    p99_ns: m.latency.quantile_ns(0.99),
+                    max_ns: m.latency.max_ns(),
+                    max_staleness: m.max_staleness,
+                })
+                .collect(),
+            ..StatsReport::default()
+        }
+    }
+
+    /// The per-model lines (`model=NAME requests=… …`), one per model,
+    /// newline-terminated — the single formatting path shared by
+    /// `pol serve-stats`, `pol serve --listen`'s exit report, and the
+    /// in-process `pol serve` display.
+    pub fn render_models_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for m in &self.models {
+            let _ = writeln!(
+                out,
+                "model={} requests={} predictions={} p50_us={:.1} \
+                 p99_us={:.1} max_us={:.1} max_staleness={}",
+                m.name,
+                m.requests,
+                m.predictions,
+                m.p50_ns as f64 / 1e3,
+                m.p99_ns as f64 / 1e3,
+                m.max_ns as f64 / 1e3,
+                m.max_staleness
+            );
+        }
+        out
+    }
+
+    /// The full text report: one wire-level header line, then
+    /// [`Self::render_models_text`].
+    pub fn render_text(&self) -> String {
+        format!(
+            "uptime_s={:.1} connections={} active={} frames_in={} \
+             frames_out={} bytes_in={} bytes_out={} decode_errors={}\n{}",
+            self.uptime_us as f64 / 1e6,
+            self.connections,
+            self.active_connections,
+            self.frames_in,
+            self.frames_out,
+            self.bytes_in,
+            self.bytes_out,
+            self.decode_errors,
+            self.render_models_text()
+        )
+    }
 }
 
 /// A name the one-byte length prefix can carry. Longer registry names
@@ -669,6 +750,8 @@ pub fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
     put_u64(out, s.connections);
     put_u64(out, s.active_connections);
     put_u64(out, s.uptime_us);
+    put_u64(out, s.registry_version);
+    put_u64(out, s.registry_models);
     let models = wire_named(&s.models, |m| &m.name);
     put_u32(out, models.len() as u32);
     for m in models {
@@ -693,6 +776,8 @@ pub fn decode_stats(payload: &[u8]) -> Result<StatsReport, FrameError> {
         connections: cur.take_u64()?,
         active_connections: cur.take_u64()?,
         uptime_us: cur.take_u64()?,
+        registry_version: cur.take_u64()?,
+        registry_models: cur.take_u64()?,
         models: Vec::new(),
     };
     let count = cur.take_u32()?;
@@ -1000,6 +1085,8 @@ mod tests {
             connections: 6,
             active_connections: 1,
             uptime_us: 99,
+            registry_version: 11,
+            registry_models: 1,
             models: vec![ModelStatsReport {
                 name: "tree".into(),
                 requests: 10,
@@ -1079,6 +1166,7 @@ mod tests {
             Op::ListModels,
             Op::Ping,
             Op::Shutdown,
+            Op::MetricsDump,
         ] {
             assert_eq!(Op::from_u8(op as u8), Some(op));
         }

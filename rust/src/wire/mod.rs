@@ -17,7 +17,7 @@
 //!   | 0      | 4    | len      | body bytes; 24 ≤ len ≤ 4 MiB        |
 //!   | 4      | 4    | magic    | `POLW`                              |
 //!   | 8      | 2    | version  | protocol version (1)                |
-//!   | 10     | 1    | op       | Predict, PredictBatch, Stats, ListModels, Ping, Shutdown |
+//!   | 10     | 1    | op       | Predict, PredictBatch, Stats, ListModels, Ping, Shutdown, MetricsDump |
 //!   | 11     | 1    | status   | 0 = request/ok; error code on responses |
 //!   | 12     | 8    | req_id   | echoed in the response              |
 //!   | 20     | n    | payload  | op-specific                         |
@@ -36,7 +36,10 @@
 //!   per-model routing by name, request pipelining, graceful drain,
 //!   an idle-connection deadline (the slow-loris guard for the
 //!   bounded pool), an optional remote-shutdown lockout, and
-//!   wire-level stats.
+//!   wire-level stats. With [`WireConfig::obs`] attached, the
+//!   `MetricsDump` op exports the whole process's metrics registry in
+//!   the `# pol-metrics v1` text format (see [`crate::obs`]) — what
+//!   `pol top`/`pol metrics` scrape.
 //! * [`client`] — [`WireClient`]: blocking, one reused connection,
 //!   single/batch/pipelined predict (bounded in-flight window, so
 //!   arbitrarily long request streams cannot deadlock the socket
@@ -72,4 +75,6 @@ pub use frame::{
     FrameError, ModelEntry, ModelStatsReport, Op, StatsReport, MAX_BATCH,
     MAX_FEATURES, MAX_FRAME, MAX_NAME, MAX_PING, PROTO_VERSION,
 };
-pub use server::{WireConfig, WireServer, DRAIN_FRAMES};
+pub use server::{
+    WireConfig, WireServer, DEFAULT_STATS_FLUSH_FRAMES, DRAIN_FRAMES,
+};

@@ -35,6 +35,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{Exposition, HistogramSnapshot, Obs};
 use crate::serve::registry::{ModelCache, ModelRegistry};
 use crate::serve::server::ModelStats;
 use crate::wire::frame::{
@@ -69,7 +70,22 @@ pub struct WireConfig {
     /// client (and wedge shutdown on the join). `None` disables both
     /// deadlines (trusted networks).
     pub idle_timeout: Option<Duration>,
+    /// Per-connection stats flush cadence, in answered predict frames:
+    /// handlers record into private buffers (no lock, no allocation on
+    /// the hot path) and merge into the shared map this often — plus at
+    /// connection close (including idle-timeout disconnects) and before
+    /// answering a `Stats`/`MetricsDump` op on their own connection, so
+    /// a remote stats read lags a *live* connection by at most this
+    /// many frames. Clamped to ≥ 1.
+    pub stats_flush_frames: u32,
+    /// Attach the process-wide telemetry registry: its series are
+    /// folded into every `MetricsDump` response next to the wire's own
+    /// counters (see [`crate::obs`] for the series table).
+    pub obs: Option<Arc<Obs>>,
 }
+
+/// Default for [`WireConfig::stats_flush_frames`].
+pub const DEFAULT_STATS_FLUSH_FRAMES: u32 = 64;
 
 impl Default for WireConfig {
     fn default() -> Self {
@@ -78,6 +94,8 @@ impl Default for WireConfig {
             poll: Duration::from_millis(25),
             allow_remote_shutdown: true,
             idle_timeout: Some(Duration::from_secs(300)),
+            stats_flush_frames: DEFAULT_STATS_FLUSH_FRAMES,
+            obs: None,
         }
     }
 }
@@ -96,6 +114,8 @@ struct Shared {
     connections: AtomicU64,
     active: AtomicU64,
     per_model: Mutex<std::collections::BTreeMap<String, ModelStats>>,
+    stats_flush_frames: u32,
+    obs: Option<Arc<Obs>>,
 }
 
 impl Shared {
@@ -145,6 +165,8 @@ impl Shared {
             connections: self.connections.load(Ordering::Relaxed),
             active_connections: self.active.load(Ordering::Relaxed),
             uptime_us: self.started.elapsed().as_micros() as u64,
+            registry_version: self.registry.version(),
+            registry_models: self.registry.len() as u64,
             models,
         }
     }
@@ -183,6 +205,8 @@ impl WireServer {
             connections: AtomicU64::new(0),
             active: AtomicU64::new(0),
             per_model: Mutex::new(std::collections::BTreeMap::new()),
+            stats_flush_frames: cfg.stats_flush_frames.max(1),
+            obs: cfg.obs.clone(),
         });
         let handlers_n = cfg.handlers.max(1);
         // rendezvous-ish queue: the acceptor blocks once every handler
@@ -334,14 +358,6 @@ fn send_error(
     send_frame(shared, out, w)
 }
 
-/// Per-connection stats flush cadence, in answered predict frames:
-/// handlers record into private buffers (no lock, no allocation on the
-/// hot path) and merge into the shared map this often, at connection
-/// close, and before answering a `Stats` op on their own connection —
-/// so a remote stats read lags a *live* connection by at most this
-/// many frames.
-const STATS_FLUSH_FRAMES: u32 = 64;
-
 /// Merge a connection's private per-model stats into the shared map
 /// and zero the private buffers (keys are kept, so steady state
 /// re-allocates nothing).
@@ -365,6 +381,71 @@ fn flush_stats(
         }
         *ms = ModelStats::new();
     }
+}
+
+/// Render the full metrics exposition for a `MetricsDump` response:
+/// the wire layer's own counters, the per-model serving series from
+/// the shared stats map, registry state, and — when the process-wide
+/// [`Obs`] handle is attached — every series the training/streaming
+/// layers recorded into it. One text, one format, one source of truth
+/// (the same bytes `pol metrics`/`pol top --once` print).
+fn render_metrics(shared: &Shared) -> String {
+    let mut exp = Exposition::new();
+    exp.point(
+        "pol_wire_bytes_in_total",
+        &[],
+        shared.bytes_in.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_bytes_out_total",
+        &[],
+        shared.bytes_out.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_frames_in_total",
+        &[],
+        shared.frames_in.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_frames_out_total",
+        &[],
+        shared.frames_out.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_decode_errors_total",
+        &[],
+        shared.decode_errors.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_connections_total",
+        &[],
+        shared.connections.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_active_connections",
+        &[],
+        shared.active.load(Ordering::Relaxed),
+    );
+    exp.point("pol_serve_registry_version", &[], shared.registry.version());
+    exp.point("pol_serve_models", &[], shared.registry.len() as u64);
+    {
+        let per_model = shared.per_model.lock().expect("wire stats lock");
+        for (name, m) in per_model.iter() {
+            let labels = [("model", name.as_str())];
+            exp.point("pol_serve_requests_total", &labels, m.requests);
+            exp.point("pol_serve_predictions_total", &labels, m.predictions);
+            exp.point("pol_serve_staleness_max", &labels, m.max_staleness);
+            exp.histogram(
+                "pol_serve_latency_ns",
+                &labels,
+                &HistogramSnapshot::from_latency(&m.latency),
+            );
+        }
+    }
+    if let Some(o) = &shared.obs {
+        o.metrics.render_into(&mut exp);
+    }
+    exp.render()
 }
 
 /// Serve one connection to completion (see the module docs for the
@@ -487,7 +568,7 @@ fn handle_conn(
                                             }
                                             unflushed += 1;
                                             if unflushed
-                                                >= STATS_FLUSH_FRAMES
+                                                >= shared.stats_flush_frames
                                             {
                                                 flush_stats(
                                                     shared,
@@ -540,6 +621,32 @@ fn handle_conn(
                         out.start(op, STATUS_OK, req_id);
                         put_stats(out.payload(), &shared.stats());
                         send_frame(shared, &mut out, &mut writer)
+                    }
+                    Some(Op::MetricsDump) => {
+                        if !frame.payload.is_empty() {
+                            shared
+                                .decode_errors
+                                .fetch_add(1, Ordering::Relaxed);
+                            send_error(
+                                shared,
+                                &mut out,
+                                &mut writer,
+                                op,
+                                STATUS_BAD_FRAME,
+                                req_id,
+                                "metrics dump request carries a payload",
+                            )
+                        } else {
+                            // same self-visibility rule as Stats: fold
+                            // this connection's numbers in first
+                            flush_stats(shared, &mut local_stats);
+                            unflushed = 0;
+                            out.start(op, STATUS_OK, req_id);
+                            out.payload().extend_from_slice(
+                                render_metrics(shared).as_bytes(),
+                            );
+                            send_frame(shared, &mut out, &mut writer)
+                        }
                     }
                     Some(Op::ListModels) => {
                         let mut models = Vec::new();

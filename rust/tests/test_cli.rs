@@ -386,6 +386,43 @@ fn serve_listen_predict_connect_round_trip() {
     assert!(text.contains("frames_in="), "{text}");
     assert!(text.contains("model=wire"), "{text}");
 
+    // the metrics exposition is scrapeable and parseable
+    let out = pol()
+        .args(["metrics", "--connect", addr.as_str()])
+        .output()
+        .expect("run pol metrics");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(text.starts_with("# pol-metrics v1\n"), "{text}");
+    let series =
+        pol::obs::parse_exposition(&text).expect("parseable exposition");
+    assert!(
+        series.iter().any(|(n, v)| {
+            n == "pol_serve_requests_total{model=\"wire\"}" && *v > 0
+        }),
+        "{text}"
+    );
+    assert!(
+        series.iter().any(|(n, _)| n == "pol_wire_frames_in_total"),
+        "{text}"
+    );
+
+    // pol top degrades to a one-shot parseable dump off a TTY; --once
+    // asks for that explicitly
+    let out = pol()
+        .args(["top", "--connect", addr.as_str(), "--once"])
+        .output()
+        .expect("run pol top --once");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(pol::obs::parse_exposition(&text).is_some(), "{text}");
+
+    // both commands demand an address
+    let out = pol().args(["metrics"]).output().expect("run pol metrics");
+    assert_eq!(out.status.code(), Some(2));
+    let out = pol().args(["top"]).output().expect("run pol top");
+    assert_eq!(out.status.code(), Some(2));
+
     // a wire Shutdown frame ends the server before its --seconds
     client.shutdown_server().expect("shutdown op");
     let out = server.wait_with_output().expect("server exit");

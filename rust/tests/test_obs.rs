@@ -1,0 +1,291 @@
+//! The telemetry layer end-to-end: the pinned exposition format, the
+//! observed-delay histogram against a configured τ schedule, proof
+//! that attaching an [`pol::obs::Obs`] never changes a trained bit for
+//! any rule × topology, and the checkpoint trace trailer round trip.
+
+use std::sync::Arc;
+
+use pol::config::{RunConfig, UpdateRule};
+use pol::coordinator::Coordinator;
+use pol::data::synth::{RcvLikeGen, SynthConfig};
+use pol::data::Dataset;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::obs::{Obs, TraceKind};
+use pol::topology::Topology;
+
+fn ds(instances: usize) -> Dataset {
+    RcvLikeGen::new(SynthConfig {
+        instances,
+        features: 300,
+        density: 10,
+        hash_bits: 10,
+        ..Default::default()
+    })
+    .generate()
+}
+
+// ---- satellite 3: pinned exposition bytes ---------------------------
+
+/// The `# pol-metrics v1` format is a wire contract (`pol top`, the
+/// bench harness, and any scraper parse it): every byte is pinned.
+/// Registration order must not matter — render sorts.
+#[test]
+fn golden_exposition_bytes_are_pinned() {
+    let obs = Obs::new();
+    let m = &obs.metrics;
+    // register deliberately out of output order
+    m.counter_with("requests_total", &[("model", "b")]).add(2);
+    let h = m.histogram("lat");
+    h.record(100);
+    h.record(1);
+    m.gauge("jobs_active").set(3);
+    m.counter_with("requests_total", &[("model", "a")]).add(5);
+
+    let golden = "# pol-metrics v1\n\
+                  jobs_active 3\n\
+                  lat_count 2\n\
+                  lat_max 100\n\
+                  lat_p50 1\n\
+                  lat_p99 100\n\
+                  lat_sum 101\n\
+                  requests_total{model=\"a\"} 5\n\
+                  requests_total{model=\"b\"} 2\n";
+    assert_eq!(m.render(), golden);
+
+    // and the parser inverts the renderer
+    let series = pol::obs::parse_exposition(golden).expect("round trip");
+    assert_eq!(series.len(), 8);
+    assert!(series.contains(&("requests_total{model=\"a\"}".into(), 5)));
+    assert!(series.contains(&("lat_p99".into(), 100)));
+}
+
+// ---- observed-τ exactness -------------------------------------------
+
+/// The paper's delay knob, measured: a coordinator configured with
+/// τ = 16 must *record* a delay distribution that is exactly 16 for
+/// every steady-state update, with the end-of-stream drain counting
+/// down τ−1..0 — nothing else. This pins the telemetry to the §0.6.6
+/// schedule rather than to "roughly τ".
+#[test]
+fn observed_delay_histogram_matches_configured_tau() {
+    const N: u64 = 3_000;
+    const TAU: u64 = 16;
+    let data = ds(N as usize);
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 2 },
+        rule: UpdateRule::DelayedGlobal,
+        tau: TAU,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg, data.dim);
+    let obs = Obs::new();
+    c.set_obs(Arc::clone(&obs));
+    for inst in data.iter() {
+        c.learn_one(&inst.features, inst.label);
+    }
+    c.flush_feedback();
+
+    let snap = obs.metrics.histogram("pol_train_delay").snapshot();
+    // every instance's feedback was observed exactly once
+    assert_eq!(snap.count, N);
+    // steady state: N − τ updates, each with delay exactly τ;
+    // the drain: delays τ−1, τ−2, …, 0
+    assert_eq!(snap.max, TAU);
+    assert_eq!(snap.sum, (N - TAU) * TAU + TAU * (TAU - 1) / 2);
+    // delay 16 lands in power-of-two bucket 4 ([16, 31]); the drain's
+    // delays are all < 16, so the bucket holds the steady-state pops
+    // alone
+    assert_eq!(snap.buckets[4], N - TAU);
+    assert_eq!(snap.quantile(0.5), TAU);
+
+    assert_eq!(
+        obs.metrics.counter("pol_train_instances_total").get(),
+        N
+    );
+    assert_eq!(obs.metrics.gauge("pol_train_pending_depth").get(), 0);
+    // per-shard heat: every leaf saw traffic
+    let text = obs.metrics.render();
+    assert!(
+        text.contains("pol_train_shard_nnz_total{shard=\"0\"}"),
+        "{text}"
+    );
+    assert!(
+        text.contains("pol_train_shard_nnz_total{shard=\"1\"}"),
+        "{text}"
+    );
+}
+
+// ---- instrumentation is bit-free ------------------------------------
+
+/// Attaching telemetry must never change the math: for every update
+/// rule × topology, an instrumented run and an uninstrumented run of
+/// the same config over the same stream end bit-identical (compared
+/// through `predict().to_bits()` on held-out inputs).
+#[test]
+fn instrumented_training_is_bit_identical_for_every_rule_and_topology() {
+    let data = ds(600);
+    let rules = [
+        UpdateRule::Local,
+        UpdateRule::DelayedGlobal,
+        UpdateRule::Corrective,
+        UpdateRule::Backprop { multiplier: 1.0 },
+        UpdateRule::Minibatch { batch: 64 },
+        UpdateRule::Cg { batch: 64 },
+        UpdateRule::Sgd,
+    ];
+    let topologies = [
+        Topology::TwoLayer { shards: 2 },
+        Topology::BinaryTree { leaves: 4 },
+        Topology::KAry { leaves: 4, fanin: 2 },
+    ];
+    for rule in rules {
+        for topology in topologies {
+            let cfg = RunConfig {
+                topology,
+                rule,
+                loss: Loss::Logistic,
+                lr: LrSchedule::inv_sqrt(0.5, 1.0),
+                tau: 8,
+                clip01: false,
+                ..Default::default()
+            };
+            let mut plain = Coordinator::new(cfg.clone(), data.dim);
+            let mut wired = Coordinator::new(cfg.clone(), data.dim);
+            let obs = Obs::new();
+            wired.set_obs(Arc::clone(&obs));
+            plain.train(&data);
+            wired.train(&data);
+            for inst in data.iter().take(64) {
+                assert_eq!(
+                    plain.predict(&inst.features).to_bits(),
+                    wired.predict(&inst.features).to_bits(),
+                    "rule {:?} topology {:?} diverged under telemetry",
+                    rule,
+                    topology
+                );
+            }
+            // the sensors did fire while the bits stayed put
+            assert_eq!(
+                obs.metrics.counter("pol_train_instances_total").get(),
+                data.len() as u64,
+                "rule {rule:?} topology {topology:?} miscounted"
+            );
+        }
+    }
+}
+
+// ---- trace ring + checkpoint trailer --------------------------------
+
+/// An instrumented `Session` appends the trace tail as a `POLT`
+/// trailer behind the model payload; `inspect` reads it back; plain
+/// `load` ignores it (backwards-compatible framing).
+#[test]
+fn session_checkpoint_carries_the_trace_trailer() {
+    let dir = std::env::temp_dir().join("pol_obs_trailer");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("traced.polz");
+
+    let data = ds(800);
+    let obs = Obs::new();
+    obs.trace.record(TraceKind::WorkerJoin, 0, "worker 0 online");
+    let mut session = pol::model::Session::builder()
+        .rule(UpdateRule::DelayedGlobal)
+        .topology(Topology::TwoLayer { shards: 2 })
+        .tau(8)
+        .dim(data.dim)
+        .obs(Arc::clone(&obs))
+        .build()
+        .expect("build session");
+    session.train(&data).expect("train");
+    session.save(&path).expect("save with trailer");
+
+    // inspect surfaces the trailer…
+    let info = pol::serve::checkpoint::inspect(&path).expect("inspect");
+    assert!(!info.trace.is_empty(), "no trace trailer read back");
+    assert_eq!(info.trace[0].kind, TraceKind::WorkerJoin);
+    assert_eq!(info.trace[0].detail, "worker 0 online");
+    let ckpt = info
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::Checkpoint)
+        .expect("final-checkpoint event");
+    assert_eq!(ckpt.trained, data.len() as u64);
+    // …and sequence numbers are strictly increasing
+    for pair in info.trace.windows(2) {
+        assert!(pair[0].seq < pair[1].seq, "{:?}", info.trace);
+    }
+
+    // …while the plain loader ignores it and the model round-trips
+    let restored = pol::serve::checkpoint::load(&path).expect("load");
+    for inst in data.iter().take(32) {
+        assert_eq!(
+            restored.predict(&inst.features).to_bits(),
+            session.predict(&inst.features).to_bits(),
+            "trailer corrupted the model payload"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The bounded ring overwrites oldest; `tail` returns newest-last.
+#[test]
+fn trace_ring_overwrites_oldest_and_tail_is_ordered() {
+    let obs = pol::obs::Obs::with_trace_capacity(4);
+    for i in 0..10u64 {
+        obs.trace.record(TraceKind::Publish, i, format!("event {i}"));
+    }
+    assert_eq!(obs.trace.len(), 4);
+    let tail = obs.trace.tail(16);
+    assert_eq!(tail.len(), 4);
+    assert_eq!(tail[0].trained, 6);
+    assert_eq!(tail[3].trained, 9);
+    assert_eq!(tail[3].detail, "event 9");
+}
+
+/// Publishes and reshards land in the trace ring with the trained
+/// count at the moment they happened.
+#[test]
+fn publish_and_reshard_events_land_in_the_trace() {
+    let data = ds(500);
+    let cfg = RunConfig {
+        topology: Topology::TwoLayer { shards: 2 },
+        rule: UpdateRule::Local,
+        tau: 8,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg, data.dim);
+    let obs = Obs::new();
+    c.set_obs(Arc::clone(&obs));
+    let cell = pol::serve::SnapshotCell::new(c.snapshot());
+    let publisher = pol::serve::SnapshotPublisher::new(Arc::clone(&cell), 100);
+    c.set_publisher(publisher);
+    c.train(&data);
+    let publishes = obs
+        .trace
+        .tail(usize::MAX)
+        .iter()
+        .filter(|e| e.kind == TraceKind::Publish)
+        .count() as u64;
+    assert!(publishes >= 4, "expected cadence publishes, got {publishes}");
+    assert_eq!(
+        obs.metrics.counter("pol_snapshot_publishes_total").get(),
+        publishes
+    );
+
+    let resharded = c.reshard(4).expect("reshard");
+    let obs2 = resharded.obs_handle().expect("obs propagated");
+    let reshard_ev = obs2
+        .trace
+        .tail(usize::MAX)
+        .into_iter()
+        .rev()
+        .find(|e| e.kind == TraceKind::Reshard)
+        .expect("reshard event traced");
+    assert!(
+        reshard_ev.detail.contains("2 -> 4"),
+        "{:?}",
+        reshard_ev
+    );
+    assert_eq!(reshard_ev.trained, c.trained_instances());
+}

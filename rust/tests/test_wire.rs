@@ -526,3 +526,121 @@ fn garbage_bytes_and_healthy_frames_interleave_across_connections() {
     assert_eq!(msg, b"hi");
     server.shutdown();
 }
+
+// ---- metrics exposition over the wire -------------------------------
+
+#[test]
+fn metrics_dump_round_trips_and_folds_the_obs_registry() {
+    let registry = ModelRegistry::with_model(
+        "m",
+        SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+    );
+    // a training-side registry folded into every dump
+    let obs = pol::obs::Obs::new();
+    obs.metrics.counter("pol_train_instances_total").add(7);
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        WireConfig { obs: Some(Arc::clone(&obs)), ..Default::default() },
+    )
+    .expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+    client.predict_for("m", &[(0, 1.0)]).expect("predict");
+
+    let text = client.metrics_dump().expect("metrics dump");
+    assert!(
+        text.starts_with(pol::obs::EXPOSITION_HEADER),
+        "missing version header: {text}"
+    );
+    let series = pol::obs::parse_exposition(&text).expect("parseable dump");
+    let get = |name: &str| {
+        series.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    };
+    // the dump folds this connection's own traffic in before rendering
+    assert_eq!(get("pol_serve_requests_total{model=\"m\"}"), Some(1));
+    assert_eq!(get("pol_serve_predictions_total{model=\"m\"}"), Some(1));
+    assert_eq!(get("pol_serve_models"), Some(1));
+    assert!(get("pol_serve_registry_version").expect("registry version") >= 1);
+    assert!(get("pol_wire_frames_in_total").expect("frames in") >= 2);
+    assert_eq!(get("pol_wire_active_connections"), Some(1));
+    // the attached obs registry rides along
+    assert_eq!(get("pol_train_instances_total"), Some(7));
+    // per-model latency exposes the full histogram summary
+    assert_eq!(get("pol_serve_latency_ns_count{model=\"m\"}"), Some(1));
+
+    // the extended Stats payload carries the registry generation too
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.registry_models, 1);
+    assert_eq!(stats.registry_version, 1);
+    server.shutdown();
+}
+
+#[test]
+fn metrics_dump_with_a_payload_is_a_typed_error_and_server_survives() {
+    let (server, addr) = hostile_server();
+    // MetricsDump (op 7) takes no request payload; junk bytes must be a
+    // typed bad-frame error, not a close and not an allocation
+    let bad = raw_frame(b"POLW", PROTO_VERSION, 7, 0, 21, b"junk");
+    let back = send_raw(addr, &bad);
+    let (op, status, req_id, msg) = first_frame(&back).expect("error frame");
+    assert_eq!(op, 7);
+    assert_eq!(status, frame::STATUS_BAD_FRAME);
+    assert_eq!(req_id, 21);
+    assert!(String::from_utf8_lossy(&msg).contains("payload"));
+    assert_alive(addr);
+    // a well-formed dump still answers on a server with no obs attached
+    let mut client = WireClient::connect(addr).expect("connect");
+    let text = client.metrics_dump().expect("dump without obs");
+    let series = pol::obs::parse_exposition(&text).expect("parseable");
+    assert!(series.iter().any(|(n, _)| n == "pol_wire_frames_in_total"));
+    let stats = server.shutdown();
+    assert!(stats.decode_errors >= 1, "{stats:?}");
+}
+
+#[test]
+fn stats_flush_interval_is_configurable_and_disconnect_flushes() {
+    let registry = ModelRegistry::with_model(
+        "m",
+        SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+    );
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        WireConfig {
+            stats_flush_frames: 2,
+            idle_timeout: Some(std::time::Duration::from_millis(100)),
+            poll: std::time::Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+    let mut client = WireClient::connect(addr).expect("connect");
+    client.predict_for("m", &[(0, 1.0)]).expect("predict 1");
+    client.predict_for("m", &[(0, 1.0)]).expect("predict 2");
+    // cadence 2 reached: a DIFFERENT connection sees both requests
+    // without the first one issuing Stats itself
+    let mut other = WireClient::connect(addr).expect("second connection");
+    let stats = other.stats().expect("stats");
+    let row = stats.models.iter().find(|m| m.name == "m").expect("model row");
+    assert!(row.requests >= 2, "cadence-2 flush not visible: {stats:?}");
+    drop(other);
+
+    // one more request leaves the first connection mid-cadence; the
+    // idle-timeout disconnect must flush the remainder
+    client.predict_for("m", &[(0, 1.0)]).expect("predict 3");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let row = server.stats();
+        let m = row.models.iter().find(|m| m.name == "m").expect("model row");
+        if m.requests >= 3 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "idle disconnect never flushed the third request: {row:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    server.shutdown();
+}
