@@ -1,0 +1,265 @@
+//! Source masking for the lint rules: a minimal Rust "lexer" that
+//! blanks out everything token patterns must not match inside.
+//!
+//! [`mask`] returns a same-length string (newlines preserved, so line
+//! and column arithmetic holds) in which the *contents* of line
+//! comments, block comments (nested), plain and raw strings, byte
+//! strings, and char literals are replaced by spaces. Delimiting
+//! quotes are kept so downstream brace matching still sees string
+//! boundaries; lifetimes (`'a`) are left untouched — the char-literal
+//! heuristic only fires when a closing quote is actually present.
+//!
+//! This is deliberately not a full lexer: the rules only need "does
+//! this token occur in code position", and masking is the smallest
+//! mechanism with that property. Waiver comments are *not* read from
+//! the masked text — [`super::rules`] scans the raw source for them,
+//! precisely because masking erases comments.
+
+/// Blank comment/string/char-literal contents, preserving length and
+/// newlines. See the module docs for the exact contract.
+pub fn mask(text: &str) -> String {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+        if c == b'/' && nxt == b'/' {
+            // line comment: blank to end of line
+            while i < n && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+        } else if c == b'/' && nxt == b'*' {
+            // block comment, nested
+            let mut depth = 1usize;
+            out.push(b' ');
+            out.push(b' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+        } else if c == b'r'
+            && (nxt == b'"' || nxt == b'#')
+            && (i == 0 || !ident_byte(b[i - 1]))
+        {
+            // raw string r"..." / r#"..."# (any hash count)
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                out.push(b' '); // the r
+                for _ in 0..hashes {
+                    out.push(b' ');
+                }
+                out.push(b'"');
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b[j] == b'"' && closes_raw(b, j, hashes) {
+                        out.push(b'"');
+                        for _ in 0..hashes {
+                            out.push(b' ');
+                        }
+                        j += 1 + hashes;
+                        break;
+                    }
+                    out.push(if b[j] == b'\n' { b'\n' } else { b' ' });
+                    j += 1;
+                }
+                i = j;
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else if c == b'b' && nxt == b'"' && (i == 0 || !ident_byte(b[i - 1]))
+        {
+            // byte string: blank the b, fall into string handling
+            out.push(b' ');
+            i += 1;
+            i = mask_string(b, i, &mut out);
+        } else if c == b'"' {
+            i = mask_string(b, i, &mut out);
+        } else if c == b'\'' {
+            i = mask_char_or_lifetime(b, i, &mut out);
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    // masking only substitutes ASCII for ASCII; multi-byte UTF-8 inside
+    // strings/comments is blanked byte-for-byte, so this is valid UTF-8
+    String::from_utf8(out).unwrap_or_default()
+}
+
+fn ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does the `"` at `j` close a raw string with `hashes` trailing `#`s?
+fn closes_raw(b: &[u8], j: usize, hashes: usize) -> bool {
+    if j + 1 + hashes > b.len() {
+        return false;
+    }
+    b[j + 1..j + 1 + hashes].iter().all(|&c| c == b'#')
+}
+
+/// Mask a plain string starting at the opening `"` (index `i`);
+/// returns the index after the closing quote.
+fn mask_string(b: &[u8], mut i: usize, out: &mut Vec<u8>) -> usize {
+    let n = b.len();
+    out.push(b'"');
+    i += 1;
+    while i < n {
+        if b[i] == b'\\' {
+            out.push(b' ');
+            if i + 1 < n {
+                out.push(if b[i + 1] == b'\n' { b'\n' } else { b' ' });
+            }
+            i += 2;
+        } else if b[i] == b'"' {
+            out.push(b'"');
+            i += 1;
+            break;
+        } else {
+            out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Mask a char literal, or pass a lifetime through untouched. `i` is
+/// at the opening `'`; returns the index after whatever was consumed.
+fn mask_char_or_lifetime(b: &[u8], i: usize, out: &mut Vec<u8>) -> usize {
+    let n = b.len();
+    let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+    if nxt == b'\\' {
+        // escaped char literal: '\n', '\\', '\u{1F600}', ...
+        let mut j = i + 2;
+        while j < n && b[j] != b'\'' && b[j] != b'\n' {
+            j += 1;
+        }
+        if j < n && b[j] == b'\'' {
+            out.push(b'\'');
+            for _ in 0..(j - i - 1) {
+                out.push(b' ');
+            }
+            out.push(b'\'');
+            return j + 1;
+        }
+        out.push(b'\'');
+        return i + 1;
+    }
+    if i + 2 < n && b[i + 2] == b'\'' {
+        // plain char literal 'x' (including multi-byte starts — any
+        // quote two bytes out means char, not lifetime, in real code)
+        out.push(b'\'');
+        out.push(b' ');
+        out.push(b'\'');
+        return i + 3;
+    }
+    // lifetime ('a, 'static) — or a multi-byte char literal, which the
+    // rules never need to see the inside of anyway
+    out.push(b'\'');
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mask;
+
+    #[test]
+    fn masks_line_comments() {
+        let m = mask("let x = 1; // .unwrap() here\nlet y = 2;");
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("let y = 2;"));
+        assert_eq!(m.len(), "let x = 1; // .unwrap() here\nlet y = 2;".len());
+    }
+
+    #[test]
+    fn masks_nested_block_comments() {
+        let m = mask("a /* x /* y */ .unwrap() */ b");
+        assert!(!m.contains("unwrap"));
+        assert!(m.starts_with('a'));
+        assert!(m.ends_with('b'));
+    }
+
+    #[test]
+    fn masks_strings_keeping_quotes() {
+        let m = mask(r#"let s = "call .unwrap() maybe"; s.len()"#);
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains('"'));
+        assert!(m.contains("s.len()"));
+    }
+
+    #[test]
+    fn masks_raw_strings() {
+        let src = "let s = r#\"x .unwrap() \"quoted\" y\"#; done()";
+        let m = mask(src);
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("done()"));
+        assert_eq!(m.len(), src.len());
+    }
+
+    #[test]
+    fn masks_escaped_quotes_in_strings() {
+        let m = mask(r#"let s = "a\".unwrap()\"b"; tail()"#);
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("tail()"));
+    }
+
+    #[test]
+    fn keeps_lifetimes_and_masks_chars() {
+        let m = mask("fn f<'a>(x: &'a str) { let c = 'u'; }");
+        assert!(m.contains("<'a>"));
+        assert!(m.contains("&'a str"));
+        assert!(!m.contains("'u'"));
+        assert!(m.contains("' '"));
+    }
+
+    #[test]
+    fn masks_escaped_char_literals() {
+        let m = mask(r"let c = '\n'; let d = '\u{41}'; g()");
+        assert!(!m.contains("\\n"));
+        assert!(!m.contains("u{41}"));
+        assert!(m.contains("g()"));
+    }
+
+    #[test]
+    fn newlines_survive_masking() {
+        let src = "a\n\"two\nline\"\n/* c\nc */\nb";
+        let m = mask(src);
+        assert_eq!(
+            src.matches('\n').count(),
+            m.matches('\n').count(),
+            "{m:?}"
+        );
+    }
+
+    #[test]
+    fn byte_strings_are_masked() {
+        let m = mask(r#"let b = b"SystemTime"; t()"#);
+        assert!(!m.contains("SystemTime"));
+        assert!(m.contains("t()"));
+    }
+}

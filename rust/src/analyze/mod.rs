@@ -1,0 +1,229 @@
+//! `pol lint` — static enforcement of the crate's hand-kept invariants.
+//!
+//! The crate's correctness story leans on conventions that `rustc` and
+//! `clippy` cannot check: which modules may touch the wall clock, where
+//! `Relaxed` atomics are sound, how decode paths must bound their
+//! allocations. Those used to live in doc comments and review memory;
+//! this module checks them mechanically. The pass is pure-std (a
+//! masking lexer in [`lexer`], substring/boundary token scanning in
+//! [`rules`] — no regex, no syn), runs over `rust/src` in milliseconds,
+//! and gates CI: a violation fails the build unless it carries an
+//! inline waiver that names the rule *and states a reason*.
+//!
+//! # Rules
+//!
+//! | Rule | Invariant | What it underwrites |
+//! |------|-----------|---------------------|
+//! | **L001** | No `.unwrap()` / `.expect(` in non-test library code. | The serving path's no-panic contract: poisoned-mutex and channel results map to [`crate::error`] (see [`crate::error::LockExt`]) instead of cascading a peer thread's panic into an outage. |
+//! | **L002** | `Ordering::Relaxed` only under `obs/` and in `metrics.rs`. | Cross-thread *publication* (snapshot cells, registry versions, shutdown flags) uses Acquire/Release pairs; `Relaxed` is reserved for monotonic telemetry counters where a stale read is harmless. Guards the bit-parity tests' assumption that readers see fully published snapshots. |
+//! | **L003** | In the decode functions of `wire/frame.rs`, `serve/checkpoint.rs`, and `obs/trace.rs`, every allocation (`with_capacity(`, `.reserve(`, `vec![`, `.resize(`) must be dominated by a `MAX_*` cap or `remaining()` bytes-present check earlier in the same function. | Bounded allocation against hostile or corrupt length fields — a crafted frame or checkpoint cannot make the process attempt an absurd allocation. |
+//! | **L004** | No `Instant::now` / `SystemTime` under `coordinator/`, `model/`, `stream/`, `sharding/`. | Determinism of the training paths: the golden tests and the stream/in-memory bit-parity tests require that nothing on those paths branches on wall-clock time. (Timing that only feeds `TrainReport` is waived per site.) |
+//! | **L005** | No word-bounded `f32`/`f64` tokens in the record-path functions (`record*`, `inc*`, `add*`, `set*`, `observe*`, `tick*`, `merge*`) under `obs/`. | Telemetry records integers only; float math lives on snapshot *read* paths (quantiles, means), so recording never perturbs — or gets perturbed by — float state, and record hot paths stay integer-cheap. |
+//! | **L006** | No narrowing `as u8` / `as u16` / `as u32` casts in `wire/frame.rs`, `wire/client.rs`, `wire/server.rs`, `serve/checkpoint.rs`, `obs/trace.rs`. | Wire and checkpoint length fields are produced via `u32::try_from(..)` so an oversized length errors instead of truncating into a silently desynced frame or a checkpoint that decodes to the wrong model. |
+//!
+//! # Waivers
+//!
+//! Some violations are the intended design (a rendezvous that *wants*
+//! a peer panic to tear the round down; an enum-discriminant cast that
+//! is not a length). Those sites carry an inline waiver on the same
+//! line or the line directly above:
+//!
+//! ```text
+//! // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
+//! st = self.round_done.wait(st).expect("round lock");
+//! ```
+//!
+//! A whole file can opt out of one rule with
+//! `// pol-lint: allow-file(L002, "reason")`. The reason string is
+//! **mandatory** — a waiver without one is ignored and the violation
+//! still fires. Waivers are scanned from the raw source (they live in
+//! comments); everything else is matched against masked source, so
+//! tokens inside strings and comments never trigger rules.
+//!
+//! # Test code
+//!
+//! `#[cfg(test)]` items (inline `mod tests` and gated helpers) are
+//! exempt from every rule: tests are the one place `.unwrap()` is the
+//! *correct* failure mode.
+//!
+//! # Running
+//!
+//! `pol lint [--root DIR]` prints one `file:line:col rule message` per
+//! finding and exits non-zero if any fired; CI runs it as a blocking
+//! step. [`lint_tree`] is the library entry the CLI and the self-check
+//! test share.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Context, Result};
+
+/// The rule identifiers. See the module docs for the rule table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// No `unwrap`/`expect` in non-test library code.
+    L001,
+    /// `Relaxed` atomics only in telemetry (`obs/`, `metrics.rs`).
+    L002,
+    /// Decode-path allocations must follow a cap check.
+    L003,
+    /// No wall clock in the deterministic training paths.
+    L004,
+    /// No floats on `obs` record paths.
+    L005,
+    /// No narrowing `as` casts on wire/checkpoint codec paths.
+    L006,
+}
+
+impl Rule {
+    /// Every rule, in id order.
+    pub const ALL: [Rule; 6] = [
+        Rule::L001,
+        Rule::L002,
+        Rule::L003,
+        Rule::L004,
+        Rule::L005,
+        Rule::L006,
+    ];
+
+    /// The canonical id string (`"L001"`, ...).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Rule::L001 => "L001",
+            Rule::L002 => "L002",
+            Rule::L003 => "L003",
+            Rule::L004 => "L004",
+            Rule::L005 => "L005",
+            Rule::L006 => "L006",
+        }
+    }
+
+    /// Parse an id string; `None` for anything that is not a known rule.
+    pub fn parse(s: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.as_str() == s)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One rule violation: where it is and what it says.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Which rule fired.
+    pub rule: Rule,
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// 1-based byte column.
+    pub col: usize,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{} {} {}",
+            self.file, self.line, self.col, self.rule, self.msg
+        )
+    }
+}
+
+/// Lint a single file's contents. `rel` is the `/`-separated path
+/// relative to the source root (rule scoping matches on it).
+pub fn lint_file(rel: &str, text: &str) -> Vec<Finding> {
+    rules::lint_file(rel, text)
+}
+
+/// Lint every `*.rs` file under `root`, depth-first with sorted
+/// directory entries so the finding order is stable across platforms.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        findings.extend(rules::lint_file(&rel, &text));
+    }
+    findings.sort_by(|a, b| {
+        (a.rule, &a.file, a.line, a.col).cmp(&(b.rule, &b.file, b.line, b.col))
+    });
+    Ok(findings)
+}
+
+/// Count the well-formed waivers under `root`, so a clean lint run can
+/// still report how many sites opted out (and reviewers can watch that
+/// number instead of grepping).
+pub fn waivers_in_tree(root: &Path) -> Result<usize> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    let mut n = 0usize;
+    for path in files {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        n += rules::waiver_count(&text);
+    }
+    Ok(n)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_round_trip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(Rule::parse("L999"), None);
+        assert_eq!(Rule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn findings_render_as_file_line_col() {
+        let f = Finding {
+            rule: Rule::L004,
+            file: "model/mod.rs".into(),
+            line: 3,
+            col: 9,
+            msg: "wall clock in deterministic path".into(),
+        };
+        assert_eq!(
+            f.to_string(),
+            "model/mod.rs:3:9 L004 wall clock in deterministic path"
+        );
+    }
+}

@@ -1,0 +1,514 @@
+//! The six lint rules and the span/waiver machinery they share.
+//!
+//! Everything here runs over the *masked* source from
+//! [`super::lexer::mask`] — except waiver scanning, which reads the
+//! raw source (waivers live in comments, and masking erases comments).
+//! All token matching is plain substring/boundary scanning: the crate
+//! has no regex engine, and none of the rules need one.
+
+use super::lexer::mask;
+use super::{Finding, Rule};
+
+/// 1-based inclusive line span.
+#[derive(Clone, Copy, Debug)]
+struct Span {
+    start: usize,
+    end: usize,
+}
+
+impl Span {
+    fn contains(&self, line: usize) -> bool {
+        self.start <= line && line <= self.end
+    }
+}
+
+/// A function item found in masked source: its name and the byte range
+/// of its brace-delimited body (offsets into the masked text).
+struct FnSpan {
+    name_start: usize,
+    name_len: usize,
+    body_start: usize,
+    body_end: usize,
+}
+
+/// Per-file waiver table parsed from raw source comments.
+struct Waivers {
+    /// `(line, rule)` pairs from `pol-lint: allow(RULE, "...")`.
+    line: Vec<(usize, Rule)>,
+    /// Rules waived for the whole file via `allow-file`.
+    file: Vec<Rule>,
+}
+
+impl Waivers {
+    /// A waiver covers its own line and the line directly below it —
+    /// so it can share the offending line or sit on the line above.
+    fn covers(&self, rule: Rule, line: usize) -> bool {
+        self.file.contains(&rule)
+            || self
+                .line
+                .iter()
+                .any(|&(wl, wr)| wr == rule && (wl == line || wl + 1 == line))
+    }
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of every occurrence of `needle` in `hay`.
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+/// Occurrences of `word` bounded by non-identifier bytes on each side.
+fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let b = hay.as_bytes();
+    find_all(hay, word)
+        .into_iter()
+        .filter(|&p| {
+            let before_ok = p == 0 || !is_ident(b[p - 1]);
+            let after = p + word.len();
+            let after_ok = after >= b.len() || !is_ident(b[after]);
+            before_ok && after_ok
+        })
+        .collect()
+}
+
+/// 1-based line of a byte offset.
+fn line_of(text: &str, off: usize) -> usize {
+    text.as_bytes()[..off].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// 1-based column of a byte offset (bytes since the last newline).
+fn col_of(text: &str, off: usize) -> usize {
+    match text.as_bytes()[..off].iter().rposition(|&c| c == b'\n') {
+        Some(nl) => off - nl,
+        None => off + 1,
+    }
+}
+
+/// `#[cfg(test)]` item spans: from the attribute to the close brace of
+/// the item it gates. An attribute on a brace-less item (`;` before
+/// any `{` at bracket depth 0) gates nothing scannable and is skipped.
+fn test_spans(masked: &str) -> Vec<Span> {
+    let b = masked.as_bytes();
+    let mut spans = Vec::new();
+    for start in find_all(masked, "#[cfg(test)]") {
+        let mut j = start + "#[cfg(test)]".len();
+        let mut depth = 0i32;
+        let mut open = None;
+        while j < b.len() {
+            match b[j] {
+                b'{' if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else { continue };
+        let Some(close) = match_brace(b, open) else { continue };
+        spans.push(Span {
+            start: line_of(masked, start),
+            end: line_of(masked, close),
+        });
+    }
+    spans
+}
+
+/// Offset of the `}` closing the `{` at `open` (best effort: the end
+/// of text if unbalanced, which still bounds the span).
+fn match_brace(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut k = open;
+    while k < b.len() {
+        match b[k] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    Some(b.len().saturating_sub(1))
+}
+
+/// Every `fn name` with a brace body in the masked source. Signature
+/// scanning balances `([<` so a `{` inside a where-clause generic or
+/// argument list is not mistaken for the body.
+fn fn_spans(masked: &str) -> Vec<FnSpan> {
+    let b = masked.as_bytes();
+    let mut out = Vec::new();
+    for p in find_word(masked, "fn") {
+        // skip whitespace, collect the name
+        let mut j = p + 2;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue; // `fn` in a type position (fn-pointer), no name
+        }
+        let name_len = j - name_start;
+        // find the body `{` at depth 0 (a `;` first means no body)
+        let mut depth = 0i64;
+        let mut body = None;
+        while j < b.len() {
+            match b[j] {
+                b'{' if depth == 0 => {
+                    body = Some(j);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                b'(' | b'[' | b'<' => depth += 1,
+                b')' | b']' | b'>' => depth = (depth - 1).max(0),
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(body_start) = body else { continue };
+        let Some(body_end) = match_brace(b, body_start) else { continue };
+        out.push(FnSpan { name_start, name_len, body_start, body_end });
+    }
+    out
+}
+
+/// Parse `pol-lint: allow(RULE, "...")` / `allow-file(RULE, "...")`
+/// markers from the raw source. The reason string is mandatory: a
+/// marker without an opening quote after the rule id is ignored (and
+/// therefore the violation it meant to waive still fires — a waiver
+/// that cites no reason is not a waiver).
+fn waivers(raw: &str) -> Waivers {
+    let mut w = Waivers { line: Vec::new(), file: Vec::new() };
+    for (idx, l) in raw.lines().enumerate() {
+        let lineno = idx + 1;
+        for p in find_all(l, "pol-lint:") {
+            let rest = l[p + "pol-lint:".len()..].trim_start();
+            let (is_file, rest) = if let Some(r) = rest.strip_prefix("allow-file(")
+            {
+                (true, r)
+            } else if let Some(r) = rest.strip_prefix("allow(") {
+                (false, r)
+            } else {
+                continue;
+            };
+            let Some((rule, tail)) = parse_rule_id(rest) else { continue };
+            let tail = tail.trim_start();
+            let Some(tail) = tail.strip_prefix(',') else { continue };
+            if !tail.trim_start().starts_with('"') {
+                continue;
+            }
+            if is_file {
+                w.file.push(rule);
+            } else {
+                w.line.push((lineno, rule));
+            }
+        }
+    }
+    w
+}
+
+/// Number of well-formed waivers (line and file scope) in `raw` —
+/// reported by the CLI so a clean run still shows how many sites are
+/// relying on an explicit opt-out.
+pub fn waiver_count(raw: &str) -> usize {
+    let w = waivers(raw);
+    w.line.len() + w.file.len()
+}
+
+/// A rule id `L` + digits at the head of `s`; returns it and the tail.
+fn parse_rule_id(s: &str) -> Option<(Rule, &str)> {
+    let b = s.as_bytes();
+    if b.is_empty() || !b[0].is_ascii_uppercase() {
+        return None;
+    }
+    let mut j = 1;
+    while j < b.len() && b[j].is_ascii_digit() {
+        j += 1;
+    }
+    if j == 1 {
+        return None;
+    }
+    Rule::parse(&s[..j]).map(|r| (r, &s[j..]))
+}
+
+// ---- rule scopes -----------------------------------------------------
+
+const L003_FILES: &[&str] =
+    &["wire/frame.rs", "serve/checkpoint.rs", "obs/trace.rs"];
+const L006_FILES: &[&str] = &[
+    "wire/frame.rs",
+    "wire/client.rs",
+    "wire/server.rs",
+    "serve/checkpoint.rs",
+    "obs/trace.rs",
+];
+const L004_DIRS: &[&str] = &["coordinator/", "model/", "stream/", "sharding/"];
+const L002_DIRS: &[&str] = &["obs/"];
+const L002_FILES: &[&str] = &["metrics.rs"];
+const ALLOC_TOKENS: &[&str] =
+    &["with_capacity(", ".reserve(", "vec![", ".resize("];
+const DECODE_PREFIXES: &[&str] =
+    &["decode", "read", "parse", "take", "inspect"];
+const L005_PREFIXES: &[&str] =
+    &["record", "inc", "add", "set", "observe", "tick", "merge"];
+
+fn has_prefix(name: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| name.starts_with(p))
+}
+
+/// A cap-check dominator for L003: a `MAX_`-named bound or a
+/// `remaining()` bytes-present guard earlier in the same function body.
+fn has_dominator(body_prefix: &str) -> bool {
+    body_prefix.contains("MAX_") || body_prefix.contains("remaining()")
+}
+
+// ---- the linter ------------------------------------------------------
+
+/// Lint one file. `rel` is the path relative to the source root with
+/// `/` separators (rule scoping matches on it); `raw` is the file
+/// contents.
+pub fn lint_file(rel: &str, raw: &str) -> Vec<Finding> {
+    let masked = mask(raw);
+    let tspans = test_spans(&masked);
+    let fns = fn_spans(&masked);
+    let w = waivers(raw);
+    let mut findings = Vec::new();
+
+    let mut emit = |rule: Rule, line: usize, col: usize, msg: String| {
+        if tspans.iter().any(|s| s.contains(line)) {
+            return;
+        }
+        if w.covers(rule, line) {
+            return;
+        }
+        findings.push(Finding {
+            rule,
+            file: rel.to_string(),
+            line,
+            col,
+            msg,
+        });
+    };
+
+    // L001: no unwrap/expect outside tests
+    // literals here are masked when the linter runs over its own source
+    for tok in [".unwrap()", ".expect("] {
+        for off in find_all(&masked, tok) {
+            emit(
+                Rule::L001,
+                line_of(&masked, off),
+                col_of(&masked, off),
+                "unwrap/expect in library code".to_string(),
+            );
+        }
+    }
+
+    // L002: Relaxed ordering only in obs/ and metrics.rs
+    if !L002_DIRS.iter().any(|d| rel.starts_with(d))
+        && !L002_FILES.contains(&rel)
+    {
+        for off in find_all(&masked, "Ordering::Relaxed") {
+            emit(
+                Rule::L002,
+                line_of(&masked, off),
+                col_of(&masked, off),
+                "Relaxed ordering outside obs/metrics".to_string(),
+            );
+        }
+    }
+
+    // L003: cap-before-allocate in the decode paths of the codec files
+    if L003_FILES.contains(&rel) {
+        for f in &fns {
+            let name = &masked[f.name_start..f.name_start + f.name_len];
+            if !has_prefix(name, DECODE_PREFIXES) {
+                continue;
+            }
+            let body = &masked[f.body_start..f.body_end];
+            for tok in ALLOC_TOKENS {
+                for rel_off in find_all(body, tok) {
+                    if !has_dominator(&body[..rel_off]) {
+                        let abs = f.body_start + rel_off;
+                        emit(
+                            Rule::L003,
+                            line_of(&masked, abs),
+                            col_of(&masked, abs),
+                            format!("allocation before cap check in {name}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // L004: no wall clock in deterministic paths
+    if L004_DIRS.iter().any(|d| rel.starts_with(d)) {
+        for tok in ["Instant::now", "SystemTime"] {
+            for off in find_all(&masked, tok) {
+                emit(
+                    Rule::L004,
+                    line_of(&masked, off),
+                    col_of(&masked, off),
+                    "wall clock in deterministic path".to_string(),
+                );
+            }
+        }
+    }
+
+    // L005: no float arithmetic on obs record paths
+    if rel.starts_with("obs/") {
+        for f in &fns {
+            let name = &masked[f.name_start..f.name_start + f.name_len];
+            if !has_prefix(name, L005_PREFIXES) {
+                continue;
+            }
+            let body = &masked[f.body_start..f.body_end];
+            for tok in ["f32", "f64"] {
+                for rel_off in find_word(body, tok) {
+                    let abs = f.body_start + rel_off;
+                    emit(
+                        Rule::L005,
+                        line_of(&masked, abs),
+                        col_of(&masked, abs),
+                        format!("float on record path in {name}"),
+                    );
+                }
+            }
+        }
+    }
+
+    // L006: no truncating as-casts on the codec files
+    if L006_FILES.contains(&rel) {
+        for off in find_narrowing_casts(&masked) {
+            emit(
+                Rule::L006,
+                line_of(&masked, off),
+                col_of(&masked, off),
+                "narrowing as-cast on codec path".to_string(),
+            );
+        }
+    }
+
+    findings
+}
+
+/// Offsets of `as u8` / `as u16` / `as u32` (word-bounded, any
+/// whitespace between); `as u64`/`as usize` are widening on every
+/// supported target and are not flagged.
+fn find_narrowing_casts(masked: &str) -> Vec<usize> {
+    let b = masked.as_bytes();
+    find_word(masked, "as")
+        .into_iter()
+        .filter(|&p| {
+            let mut j = p + 2;
+            let mut saw_ws = false;
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t' || b[j] == b'\n')
+            {
+                saw_ws = true;
+                j += 1;
+            }
+            if !saw_ws {
+                return false;
+            }
+            for ty in ["u8", "u16", "u32"] {
+                if masked[j..].starts_with(ty) {
+                    let after = j + ty.len();
+                    if after >= b.len() || !is_ident(b[after]) {
+                        return true;
+                    }
+                }
+            }
+            false
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_word_respects_boundaries() {
+        assert_eq!(find_word("f32 xf32 f32x f32", "f32").len(), 2);
+    }
+
+    #[test]
+    fn narrowing_casts_found_and_widening_ignored() {
+        let offs =
+            find_narrowing_casts("a as u32; b as u64; c as usize; d as u8");
+        assert_eq!(offs.len(), 2);
+    }
+
+    #[test]
+    fn cast_across_newline_is_still_a_cast() {
+        assert_eq!(find_narrowing_casts("x as\n    u16").len(), 1);
+    }
+
+    #[test]
+    fn waiver_without_reason_is_ignored() {
+        let w = waivers("// pol-lint: allow(L001)\nx\n");
+        assert!(w.line.is_empty());
+        let w = waivers("// pol-lint: allow(L001, \"why\")\nx\n");
+        assert_eq!(w.line, vec![(1, Rule::L001)]);
+    }
+
+    #[test]
+    fn waiver_count_counts_only_well_formed_waivers() {
+        let src = "// pol-lint: allow(L001, \"a\")\n// pol-lint: allow-file(L002, \"b\")\n// pol-lint: allow(L003)\n";
+        assert_eq!(waiver_count(src), 2);
+    }
+
+    #[test]
+    fn file_waiver_covers_everything() {
+        let w = waivers("// pol-lint: allow-file(L002, \"counters\")\n");
+        assert!(w.covers(Rule::L002, 999));
+        assert!(!w.covers(Rule::L001, 999));
+    }
+
+    #[test]
+    fn line_waiver_covers_same_and_next_line() {
+        let w = waivers("// pol-lint: allow(L004, \"timing\")\n");
+        assert!(w.covers(Rule::L004, 1));
+        assert!(w.covers(Rule::L004, 2));
+        assert!(!w.covers(Rule::L004, 3));
+    }
+
+    #[test]
+    fn test_spans_swallow_test_modules() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { x.unwrap() }\n}\nfn c() {}\n";
+        let masked = mask(src);
+        let spans = test_spans(&masked);
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].contains(4));
+        assert!(!spans[0].contains(1));
+        assert!(!spans[0].contains(6));
+    }
+
+    #[test]
+    fn fn_spans_find_bodies_not_signatures() {
+        let masked = mask("fn read_x(a: Vec<u8>) -> Vec<u8> { body() }\nfn sig_only();\n");
+        let fns = fn_spans(&masked);
+        assert_eq!(fns.len(), 1);
+        let f = &fns[0];
+        assert_eq!(&masked[f.name_start..f.name_start + f.name_len], "read_x");
+        assert!(masked[f.body_start..f.body_end].contains("body()"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Little-endian slice decoding shared by the three binary codecs
+//! (`wire::frame`, `serve::checkpoint`, `obs::trace`).
+//!
+//! Every codec cursor hands out exact-length sub-slices, then turns
+//! them into integers. Doing that with `slice.try_into().unwrap()`
+//! sprinkles panic sites through decode paths (lint rule L001); these
+//! helpers centralize the conversion behind plain indexing instead.
+//! The caller contract is the same as the `from_le_bytes` it wraps:
+//! the slice must hold at least the advertised width (codec cursors
+//! enforce this before calling — a short slice is a bug upstream, and
+//! still panics via the bounds check rather than reading garbage).
+
+#[inline]
+pub(crate) fn le_u16(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+#[inline]
+pub(crate) fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+#[inline]
+pub(crate) fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+#[inline]
+pub(crate) fn le_f32(b: &[u8]) -> f32 {
+    f32::from_bits(le_u32(b))
+}
+
+#[inline]
+pub(crate) fn le_f64(b: &[u8]) -> f64 {
+    f64::from_bits(le_u64(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_match_from_le_bytes() {
+        assert_eq!(le_u16(&0xBEEFu16.to_le_bytes()), 0xBEEF);
+        assert_eq!(le_u32(&0xDEAD_BEEFu32.to_le_bytes()), 0xDEAD_BEEF);
+        assert_eq!(
+            le_u64(&0x0123_4567_89AB_CDEFu64.to_le_bytes()),
+            0x0123_4567_89AB_CDEF
+        );
+        assert_eq!(le_f32(&(-0.0f32).to_le_bytes()).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(le_f64(&1.5f64.to_le_bytes()), 1.5);
+    }
+
+    #[test]
+    fn longer_slices_read_their_prefix() {
+        let mut b = 7u32.to_le_bytes().to_vec();
+        b.extend_from_slice(&[0xFF; 8]);
+        assert_eq!(le_u32(&b), 7);
+    }
+}

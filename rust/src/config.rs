@@ -31,6 +31,7 @@ pub enum UpdateRule {
 }
 
 impl UpdateRule {
+    /// Parse a rule name as written in configs and on the command line.
     pub fn parse(s: &str) -> Option<UpdateRule> {
         let (name, arg) = match s.split_once(':') {
             Some((n, a)) => (n, Some(a)),
@@ -54,6 +55,7 @@ impl UpdateRule {
         }
     }
 
+    /// Canonical name, round-trippable through [`UpdateRule::parse`].
     pub fn name(&self) -> String {
         match self {
             UpdateRule::Local => "local".into(),
@@ -83,9 +85,13 @@ impl UpdateRule {
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Node topology the run trains over.
     pub topology: Topology,
+    /// Update rule (delayed SGD, minibatch, CG, ...).
     pub rule: UpdateRule,
+    /// Loss function.
     pub loss: Loss,
+    /// Learning-rate schedule.
     pub lr: LrSchedule,
     /// Learning-rate schedule for internal (combiner) nodes; defaults to
     /// `lr`. The master's feature space is tiny (k predictions + bias),
@@ -101,7 +107,9 @@ pub struct RunConfig {
     /// experimental final output node has one ("one (default) constant
     /// feature"); the Proposition 3/4 analysis assumes none.
     pub bias: bool,
+    /// Number of passes over the dataset.
     pub passes: usize,
+    /// RNG seed for synthetic data and shuffling.
     pub seed: u64,
 }
 

@@ -35,6 +35,7 @@ pub const ALPHA_MAX: f64 = 50.0;
 /// Dense reference implementation (kept for tests/benches; O(d) per
 /// batch).
 pub struct DenseCg {
+    /// Weight vector.
     pub w: Vec<f64>,
     g_prev: Vec<f64>,
     d_prev: Vec<f64>,
@@ -42,6 +43,7 @@ pub struct DenseCg {
 }
 
 impl DenseCg {
+    /// A dense CG learner over `dim` weights.
     pub fn new(dim: usize, loss: Loss) -> Self {
         DenseCg {
             w: vec![0.0; dim],
@@ -51,6 +53,7 @@ impl DenseCg {
         }
     }
 
+    /// Margin for a sparse example.
     pub fn predict(&self, x: &[SparseFeat]) -> f64 {
         x.iter().map(|&(i, v)| self.w[i as usize] * v as f64).sum()
     }
@@ -132,6 +135,7 @@ pub struct LazyCg {
 }
 
 impl LazyCg {
+    /// A lazily-updated CG learner over `dim` weights.
     pub fn new(dim: usize, loss: Loss) -> Self {
         LazyCg {
             w: vec![0.0; dim],
@@ -185,6 +189,7 @@ impl LazyCg {
         self.w[i as usize]
     }
 
+    /// Margin for a sparse example (applies pending updates first).
     pub fn predict(&mut self, x: &[SparseFeat]) -> f64 {
         let mut acc = 0.0;
         for &(i, v) in x {
@@ -332,6 +337,7 @@ pub fn train(cfg: &RunConfig, ds: &Dataset, batch: usize) -> TrainReport {
     report
 }
 
+/// Like [`train`], but also return the learned weights.
 pub fn train_weights(
     cfg: &RunConfig,
     ds: &Dataset,
@@ -365,6 +371,7 @@ pub struct CgTrainer {
 }
 
 impl CgTrainer {
+    /// A CG trainer from `cfg` over `dim` features with `batch`-sized rounds.
     pub fn new(cfg: &RunConfig, dim: usize, batch: usize) -> Self {
         CgTrainer {
             cgl: LazyCg::new(dim, cfg.loss),
@@ -374,6 +381,7 @@ impl CgTrainer {
             filled: 0,
             total: 0,
             progressive: ProgressiveValidator::with_loss(cfg.loss),
+            // pol-lint: allow(L004, "wall-clock feeds TrainReport timing only")
             start: std::time::Instant::now(),
         }
     }

@@ -12,8 +12,11 @@ use crate::linalg::SparseFeat;
 /// from the sharder with one designated subordinate, per §0.5.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PredictionMsg {
+    /// Example timestamp (global index).
     pub t: u64,
+    /// Originating node id.
     pub node: usize,
+    /// The node's local prediction.
     pub pred: f64,
     /// Piggybacked label (only one subordinate per master carries it).
     pub label: Option<f64>,
@@ -24,7 +27,9 @@ pub struct PredictionMsg {
 /// gradient, corrective difference, or chain-rule product).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FeedbackMsg {
+    /// Example timestamp (global index).
     pub t: u64,
+    /// Gradient scale broadcast back to the shards.
     pub gscale: f64,
 }
 
@@ -33,25 +38,31 @@ pub struct FeedbackMsg {
 /// [`crate::sharding::ShardPlan`], never re-derived here).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardMsg {
+    /// Example timestamp (global index).
     pub t: u64,
+    /// Example label.
     pub label: f64,
+    /// Sparse features routed to this shard.
     pub features: Vec<SparseFeat>,
 }
 
 /// Wire sizes (bytes) for the virtual-time model.
 impl PredictionMsg {
+    /// Bytes this message occupies on the (simulated) wire.
     pub fn wire_size(&self) -> usize {
         crate::net::wire::prediction() + if self.label.is_some() { 8 } else { 0 }
     }
 }
 
 impl FeedbackMsg {
+    /// Bytes this message occupies on the (simulated) wire.
     pub fn wire_size(&self) -> usize {
         crate::net::wire::prediction()
     }
 }
 
 impl ShardMsg {
+    /// Bytes this message occupies on the (simulated) wire.
     pub fn wire_size(&self) -> usize {
         crate::net::wire::shard_features(self.features.len())
     }

@@ -59,6 +59,7 @@ pub struct MinibatchSgd {
 }
 
 impl MinibatchSgd {
+    /// A minibatch trainer from `cfg` over `dim` features with `batch`-sized rounds.
     pub fn new(cfg: &RunConfig, dim: usize, batch: usize) -> Self {
         MinibatchSgd {
             w: vec![0.0f32; dim],
@@ -71,6 +72,7 @@ impl MinibatchSgd {
             updates: 0,
             total: 0,
             progressive: ProgressiveValidator::with_loss(cfg.loss),
+            // pol-lint: allow(L004, "wall-clock feeds TrainReport timing only")
             start: std::time::Instant::now(),
         }
     }

@@ -41,8 +41,11 @@ use crate::stream::{DatasetSource, InstanceBatch, InstanceSource, Pipeline};
 
 /// Multicore synchronous feature-sharded trainer.
 pub struct MulticoreTrainer {
+    /// Worker thread count.
     pub threads: usize,
+    /// Loss shared by all workers.
     pub loss: Loss,
+    /// Learning-rate schedule shared by all workers.
     pub lr: LrSchedule,
     /// Optional telemetry sink ([`MulticoreTrainer::with_obs`]).
     obs: Option<Arc<Obs>>,
@@ -117,6 +120,7 @@ impl BatchRound {
         k: usize,
     ) -> (InstanceBatch, Arc<Vec<AtomicU64>>) {
         let arc = Arc::new(batch);
+        // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
         let mut st = self.state.lock().expect("round lock");
         if st.yhats.len() < arc.len() {
             st.yhats =
@@ -128,10 +132,12 @@ impl BatchRound {
         st.round += 1;
         self.new_round.notify_all();
         while st.done < k {
+            // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
             st = self.round_done.wait(st).expect("round lock");
         }
         st.batch = None;
         drop(st);
+        // pol-lint: allow(L001, "done==k: every learner dropped its Arc")
         let batch = Arc::try_unwrap(arc).expect("all learners released the batch");
         (batch, yhats)
     }
@@ -142,13 +148,16 @@ impl BatchRound {
         &self,
         my_round: u64,
     ) -> Option<(u64, Arc<InstanceBatch>, Arc<Vec<AtomicU64>>)> {
+        // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
         let mut st = self.state.lock().expect("round lock");
         while !st.finished && st.round == my_round {
+            // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
             st = self.new_round.wait(st).expect("round lock");
         }
         if st.round == my_round {
             return None; // finished with no new round
         }
+        // pol-lint: allow(L001, "round > my_round implies a published batch")
         let batch = Arc::clone(st.batch.as_ref().expect("published batch"));
         Some((st.round, batch, Arc::clone(&st.yhats)))
     }
@@ -156,12 +165,14 @@ impl BatchRound {
     /// Learner side: mark this round processed (after dropping the
     /// batch Arc).
     fn complete(&self) {
+        // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
         let mut st = self.state.lock().expect("round lock");
         st.done += 1;
         self.round_done.notify_all();
     }
 
     fn finish(&self) {
+        // pol-lint: allow(L001, "rendezvous: a peer panic must tear down the round")
         let mut st = self.state.lock().expect("round lock");
         st.finished = true;
         self.new_round.notify_all();
@@ -182,6 +193,7 @@ fn b2f(b: i64) -> f64 {
 }
 
 impl MulticoreTrainer {
+    /// A trainer running `threads` workers over a shared model.
     pub fn new(threads: usize, loss: Loss, lr: LrSchedule) -> Self {
         assert!(threads >= 1);
         MulticoreTrainer { threads, loss, lr, obs: None }
@@ -207,6 +219,7 @@ impl MulticoreTrainer {
     ) -> (Vec<f32>, ProgressiveValidator, std::time::Duration) {
         let mut src = DatasetSource::new(ds);
         self.train_source(&mut src)
+            // pol-lint: allow(L001, "in-memory source, no I/O error path")
             .expect("in-memory sources cannot fail")
     }
 
@@ -277,6 +290,7 @@ impl MulticoreTrainer {
             None => (0..k).map(|_| vec![0.0f32; dim]).collect(),
         };
 
+        // pol-lint: allow(L004, "wall-clock feeds TrainReport timing only")
         let start = std::time::Instant::now();
         let rv = Arc::new(Rendezvous::new(k));
         let round = Arc::new(BatchRound::new());
@@ -334,6 +348,7 @@ impl MulticoreTrainer {
                 }
                 round.finish();
                 for h in handles {
+                    // pol-lint: allow(L001, "propagate a learner panic to the caller")
                     let part = h.join().expect("learner thread");
                     if result.is_ok() {
                         weight_parts.push(part);

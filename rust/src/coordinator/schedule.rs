@@ -28,6 +28,7 @@ pub enum Op {
 /// Deterministic τ-delay round-robin schedule.
 #[derive(Clone, Copy, Debug)]
 pub struct DelaySchedule {
+    /// Fixed feedback delay in examples.
     pub tau: u64,
 }
 
@@ -36,6 +37,7 @@ impl DelaySchedule {
     /// buffer ("a maximum latency of 2048 instances is allowed").
     pub const PAPER_TAU: u64 = 1024;
 
+    /// A constant-tau schedule.
     pub fn new(tau: u64) -> Self {
         DelaySchedule { tau }
     }

@@ -156,6 +156,7 @@ pub fn save(ds: &Dataset, path: &std::path::Path) -> io::Result<()> {
     write_cache(ds, &mut f)
 }
 
+/// Load the cached dataset `name` from `path`.
 pub fn load(path: &std::path::Path, name: &str) -> io::Result<Dataset> {
     let mut f = io::BufReader::new(std::fs::File::open(path)?);
     read_cache(&mut f, name)

@@ -10,6 +10,7 @@ use crate::linalg::SparseFeat;
 /// logistic/hinge.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Instance {
+    /// Supervised label.
     pub label: f64,
     /// Importance weight (1.0 for all paper experiments).
     pub weight: f32,
@@ -20,10 +21,12 @@ pub struct Instance {
 }
 
 impl Instance {
+    /// An instance with `label` and sparse `features`.
     pub fn new(label: f64, features: Vec<SparseFeat>) -> Self {
         Instance { label, weight: 1.0, features, tag: 0 }
     }
 
+    /// Attach an opaque tag (e.g. a source line number).
     pub fn with_tag(mut self, tag: u64) -> Self {
         self.tag = tag;
         self

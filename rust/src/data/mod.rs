@@ -15,9 +15,13 @@
 //! longer the only way data reaches a learner — streams larger than
 //! memory train at pool-bounded RSS with bit-identical weights.
 
+/// Binary dataset cache.
 pub mod cache;
+/// The sparse instance type.
 pub mod instance;
+/// VW-style text parsing.
 pub mod parser;
+/// Synthetic dataset generators.
 pub mod synth;
 
 use instance::Instance;
@@ -25,25 +29,31 @@ use instance::Instance;
 /// An in-memory dataset plus the metadata learners need.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Dataset name.
     pub name: String,
     /// Hashed feature-space size (weight-table length learners allocate).
     pub dim: usize,
+    /// The instances, in stream order.
     pub instances: Vec<Instance>,
 }
 
 impl Dataset {
+    /// An empty dataset named `name` over `dim` features.
     pub fn new(name: impl Into<String>, dim: usize) -> Self {
         Dataset { name: name.into(), dim, instances: Vec::new() }
     }
 
+    /// Number of instances.
     pub fn len(&self) -> usize {
         self.instances.len()
     }
 
+    /// Whether there are no instances.
     pub fn is_empty(&self) -> bool {
         self.instances.is_empty()
     }
 
+    /// Iterate the instances in order.
     pub fn iter(&self) -> std::slice::Iter<'_, Instance> {
         self.instances.iter()
     }

@@ -18,6 +18,7 @@ use crate::hashing::FeatureHasher;
 use crate::linalg::SparseFeat;
 
 #[derive(Clone, Debug, Default)]
+/// Knobs for the VW-style text parser.
 pub struct ParserConfig {
     /// Pairs of namespace initials to cross, e.g. `[('u','a')]` for
     /// VW's `-q ua` (user×ad outer-product features).
@@ -25,9 +26,13 @@ pub struct ParserConfig {
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
+/// Why a line failed to parse.
 pub enum ParseError {
+    /// The line had no tokens.
     Empty,
+    /// The label token did not parse.
     BadLabel(String),
+    /// A feature value did not parse.
     BadValue(String),
 }
 
@@ -43,6 +48,7 @@ impl std::fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parser for `label feat:val ...` text lines.
 pub struct Parser {
     hasher: FeatureHasher,
     config: ParserConfig,
@@ -50,6 +56,7 @@ pub struct Parser {
 }
 
 impl Parser {
+    /// A parser hashing features through `hasher`.
     pub fn new(hasher: FeatureHasher, config: ParserConfig) -> Self {
         Parser { hasher, config, line_no: 0 }
     }

@@ -24,10 +24,12 @@ use crate::rng::Rng;
 pub struct DisplayEvent {
     /// Hashed features of (user, page) context joined with each ad.
     pub ad_a: Vec<SparseFeat>,
+    /// Hashed features of the (user, page) context joined with ad B.
     pub ad_b: Vec<SparseFeat>,
     /// True click-through probabilities (hidden from learners; used by
     /// the policy evaluator's ground-truth mode).
     pub ctr_a: f64,
+    /// True click-through probability of ad B.
     pub ctr_b: f64,
     /// Which ad the logging policy displayed (0 = a, 1 = b).
     pub shown: u8,
@@ -36,16 +38,25 @@ pub struct DisplayEvent {
 }
 
 #[derive(Clone, Debug)]
+/// Shape of the synthetic ad-display stream.
 pub struct AdDisplayConfig {
+    /// Number of display events.
     pub events: usize,
+    /// Distinct users.
     pub users: usize,
+    /// Distinct ads.
     pub ads: usize,
+    /// Distinct pages.
     pub pages: usize,
     /// Features per namespace draw.
     pub user_feats: usize,
+    /// Features per ad.
     pub ad_feats: usize,
+    /// Features per page.
     pub page_feats: usize,
+    /// Hash bits for the feature space.
     pub hash_bits: u32,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -65,27 +76,35 @@ impl Default for AdDisplayConfig {
     }
 }
 
+/// Generator for the ad-display corpus.
 pub struct AdDisplayGen {
+    /// Generation parameters.
     pub config: AdDisplayConfig,
 }
 
 /// The generated corpus: pairwise training set + event log for policy
 /// evaluation.
 pub struct AdDisplayCorpus {
+    /// Pairwise-preference training set.
     pub pairwise: Dataset,
+    /// The raw display events.
     pub events: Vec<DisplayEvent>,
+    /// Hashed feature dimension.
     pub dim: usize,
 }
 
 impl AdDisplayGen {
+    /// A generator with `config`.
     pub fn new(config: AdDisplayConfig) -> Self {
         AdDisplayGen { config }
     }
 
+    /// A small corpus sized for tests.
     pub fn default_small() -> Self {
         AdDisplayGen { config: AdDisplayConfig::default() }
     }
 
+    /// Generate the corpus deterministically from the seed.
     pub fn generate(&self) -> AdDisplayCorpus {
         let c = &self.config;
         let mut rng = Rng::new(c.seed);

@@ -12,8 +12,11 @@
 //! * [`prop3`]/[`prop4`] — the exact 4-point distributions of
 //!   Propositions 3 and 4.
 
+/// Logged ad-display events and the pairwise set built from them.
 pub mod ad_display;
+/// Proposition 3's exact 4-point distribution.
 pub mod prop3;
+/// Proposition 4's exact 4-point distribution.
 pub mod prop4;
 
 pub use ad_display::AdDisplayGen;
@@ -33,6 +36,7 @@ pub struct SynthConfig {
     pub noise: f64,
     /// Hash bits for the weight table (dataset `dim` = 2^bits).
     pub hash_bits: u32,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -75,17 +79,21 @@ impl SynthConfig {
 /// `generate()` materializes the identical stream, so in-memory and
 /// streamed training see bit-identical data.
 pub struct RcvLikeGen {
+    /// Generation parameters.
     pub config: SynthConfig,
 }
 
 impl RcvLikeGen {
+    /// A generator with `config`.
     pub fn new(config: SynthConfig) -> Self {
         RcvLikeGen { config }
     }
 
+    /// Generate the dataset deterministically from the seed.
     pub fn generate(&self) -> Dataset {
         let mut src = crate::stream::RcvLikeSource::new(self.config.clone());
         crate::stream::read_all(&mut src)
+            // pol-lint: allow(L001, "in-memory generator, no I/O error path")
             .expect("synthetic sources cannot fail")
     }
 }
@@ -97,6 +105,7 @@ impl RcvLikeGen {
 /// systematically weaker than global rules. Denser than RCV1-like.
 /// Labels ∈ {−1, +1}.
 pub struct WebspamLikeGen {
+    /// Generation parameters.
     pub config: SynthConfig,
     /// Number of correlated blocks.
     pub blocks: usize,
@@ -105,6 +114,7 @@ pub struct WebspamLikeGen {
 }
 
 impl WebspamLikeGen {
+    /// A generator with `config`.
     pub fn new(config: SynthConfig) -> Self {
         WebspamLikeGen { config, blocks: 32, rho: 0.7 }
     }
@@ -120,6 +130,7 @@ impl WebspamLikeGen {
             self.rho,
         );
         crate::stream::read_all(&mut src)
+            // pol-lint: allow(L001, "in-memory generator, no I/O error path")
             .expect("synthetic sources cannot fail")
     }
 }
@@ -129,15 +140,19 @@ impl WebspamLikeGen {
 /// information about an instance while it is still being shown — this is
 /// the construction behind Theorem 1's √τ slowdown.
 pub struct AdversarialDupGen {
+    /// Base generation parameters.
     pub base: SynthConfig,
+    /// Duplication run length (matches the feedback delay under test).
     pub tau: usize,
 }
 
 impl AdversarialDupGen {
+    /// A generator duplicating examples in runs of `tau`.
     pub fn new(base: SynthConfig, tau: usize) -> Self {
         AdversarialDupGen { base, tau: tau.max(1) }
     }
 
+    /// Generate the dataset deterministically from the seed.
     pub fn generate(&self) -> Dataset {
         let uniques = (self.base.instances / self.tau).max(1);
         let inner = RcvLikeGen::new(SynthConfig {

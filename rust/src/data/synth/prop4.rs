@@ -27,6 +27,7 @@ pub const OPTIMAL_W: [f64; 3] = [1.0, 1.0, 1.0];
 /// Lower bound on the squared error of any predictor with w3 = 0.
 pub const LOCAL_MSE_LOWER_BOUND: f64 = 0.5;
 
+/// Feature dimension of the construction.
 pub const DIM: usize = 3;
 
 /// As a cyclically-repeating dataset of `n` instances.

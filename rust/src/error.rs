@@ -25,6 +25,18 @@ impl Error {
     pub fn context(self, c: impl fmt::Display) -> Self {
         Error { msg: format!("{c}: {}", self.msg) }
     }
+
+    /// A poisoned-lock error: some thread panicked while holding the
+    /// named lock. The typed counterpart to `lock().unwrap()` — callers
+    /// that cannot safely recover a poisoned guard (see [`LockExt`])
+    /// surface this instead of cascading the panic.
+    pub fn poisoned(what: &str) -> Self {
+        Error {
+            msg: format!(
+                "{what}: lock poisoned (a thread panicked while holding it)"
+            ),
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -91,6 +103,37 @@ impl<T> Context<T> for Option<T> {
     }
 }
 
+/// Disciplined handling of [`std::sync::PoisonError`] lock results —
+/// the crate-wide replacement for `lock().unwrap()` (lint rule L001).
+///
+/// Two recovery postures, chosen per call site:
+/// - [`LockExt::or_poisoned`] maps poison to a typed [`Error`]; use it
+///   where the caller has a `Result` surface and the guarded data may
+///   be mid-mutation when a holder panics.
+/// - [`LockExt::recover_poisoned`] takes the guard anyway; use it ONLY
+///   where every critical section leaves the data valid at all times
+///   (monotonic counters, whole-`Arc` slot swaps, append-only maps),
+///   and say so in a comment at the call site.
+pub trait LockExt<G> {
+    /// The guard, or a typed [`Error`] naming `what` if the lock was
+    /// poisoned by a panicking holder.
+    fn or_poisoned(self, what: &str) -> Result<G>;
+
+    /// The guard regardless of poisoning. Sound only when the protected
+    /// data is valid after any partial critical section.
+    fn recover_poisoned(self) -> G;
+}
+
+impl<G> LockExt<G> for std::result::Result<G, std::sync::PoisonError<G>> {
+    fn or_poisoned(self, what: &str) -> Result<G> {
+        self.map_err(|_| Error::poisoned(what))
+    }
+
+    fn recover_poisoned(self) -> G {
+        self.unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
 /// `anyhow!`-shaped constructor: `format_err!("bad {x}")` → [`Error`].
 #[macro_export]
 macro_rules! format_err {
@@ -123,6 +166,23 @@ mod tests {
         let v: Option<u32> = None;
         assert!(v.context("missing").is_err());
         assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn lock_ext_types_and_recovers_poison() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let e = m.lock().or_poisoned("test lock").unwrap_err();
+        assert!(e.to_string().contains("lock poisoned"), "{e}");
+        // the data is a plain counter: recovery is sound
+        assert_eq!(*m.lock().recover_poisoned(), 7);
     }
 
     #[test]

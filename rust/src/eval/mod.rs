@@ -1,5 +1,7 @@
 //! Evaluation: offline policy evaluation (the §0.5.3 ad task) and regret
 //! against the batch least-squares optimum (the Theorem-1 experiments).
 
+/// Off-policy value estimation.
 pub mod policy;
+/// Regret accounting against a fixed comparator.
 pub mod regret;

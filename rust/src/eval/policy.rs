@@ -21,6 +21,7 @@ pub struct PolicyValue {
     /// Matched events (where π agreed with the log) — the effective
     /// sample size of the estimate.
     pub matched: usize,
+    /// Events considered.
     pub total: usize,
     /// Ground-truth expected CTR of the new policy (computable only for
     /// synthetic data; the paper could not report this).

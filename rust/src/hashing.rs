@@ -86,6 +86,7 @@ impl FeatureHasher {
         self
     }
 
+    /// Number of hash bits; the feature space has `1 << bits` slots.
     pub fn bits(&self) -> u32 {
         self.bits
     }
@@ -144,12 +145,16 @@ impl FeatureHasher {
 /// number of weights do not substantially improve results").
 #[derive(Debug, Default, Clone)]
 pub struct CollisionStats {
+    /// Distinct raw feature ids observed.
     pub unique_inputs: usize,
+    /// Hash slots that received at least one id.
     pub occupied_slots: usize,
+    /// Ids that shared a slot with a different id.
     pub collided_inputs: usize,
 }
 
 impl CollisionStats {
+    /// Hash `ids` through `hasher` and tally collisions.
     pub fn compute(hasher: &FeatureHasher, ids: impl Iterator<Item = u64>) -> Self {
         let mut first: Vec<u64> = vec![u64::MAX; hasher.table_size()];
         let mut stats = CollisionStats::default();

@@ -20,8 +20,11 @@ use crate::lr::LrSchedule;
 /// Delayed gradient descent (Algorithm 2) with delay τ.
 #[derive(Clone, Debug)]
 pub struct DelayedSgd {
+    /// Weight vector.
     pub w: Vec<f32>,
+    /// Loss function.
     pub loss: Loss,
+    /// Learning-rate schedule.
     pub lr: LrSchedule,
     tau: usize,
     /// Pending (features, gradient-scale) computed but not yet applied.
@@ -30,6 +33,7 @@ pub struct DelayedSgd {
 }
 
 impl DelayedSgd {
+    /// A learner over `dim` weights with feedback delay `tau`.
     pub fn new(dim: usize, loss: Loss, lr: LrSchedule, tau: usize) -> Self {
         let mut pending = VecDeque::with_capacity(tau + 1);
         // Algorithm 2 line 2: x_1..x_τ = 0 with gradients of ℓ(0,0) —
@@ -40,6 +44,7 @@ impl DelayedSgd {
         DelayedSgd { w: vec![0.0; dim], loss, lr, tau, pending, t: 0 }
     }
 
+    /// The feedback delay in examples.
     pub fn tau(&self) -> usize {
         self.tau
     }
@@ -51,6 +56,7 @@ impl DelayedSgd {
         let g = self.loss.dloss(yhat, y);
         self.pending.push_back((x.to_vec(), g));
         // apply g_{t-τ}
+        // pol-lint: allow(L001, "pop follows a push on the same deque")
         let (old_x, old_g) = self.pending.pop_front().expect("ring non-empty");
         self.t += 1;
         let eta = self.lr.eta(self.t);
@@ -83,6 +89,7 @@ impl OnlineLearner for DelayedSgd {
 
     fn learn_with_gradient(&mut self, x: &[SparseFeat], gscale: f64) {
         self.pending.push_back((x.to_vec(), gscale));
+        // pol-lint: allow(L001, "pop follows a push on the same deque")
         let (old_x, old_g) = self.pending.pop_front().expect("ring non-empty");
         self.t += 1;
         let eta = self.lr.eta(self.t);

@@ -1,9 +1,13 @@
 //! Online learners: Algorithm 1 (SGD), Algorithm 2 (delayed SGD), Naïve
 //! Bayes, and the per-node learner every tree position runs.
 
+/// SGD with delayed gradient feedback.
 pub mod delayed;
+/// Streaming naive-Bayes baseline.
 pub mod naive_bayes;
+/// The per-node learner used in tree topologies.
 pub mod node;
+/// Plain online SGD.
 pub mod sgd;
 
 use crate::linalg::SparseFeat;

@@ -23,6 +23,7 @@ pub struct NaiveBayes {
 }
 
 impl NaiveBayes {
+    /// A learner over `dim` features.
     pub fn new(dim: usize) -> Self {
         NaiveBayes { b: vec![0.0; dim], sii: vec![0.0; dim], t: 0 }
     }
@@ -37,6 +38,7 @@ impl NaiveBayes {
         }
     }
 
+    /// Per-feature weights implied by the class statistics.
     pub fn weights(&self) -> Vec<f64> {
         (0..self.b.len() as u32).map(|i| self.weight(i)).collect()
     }

@@ -14,11 +14,13 @@ use crate::lr::LrSchedule;
 /// A learning node in the sharded architecture (leaf, internal, or root).
 #[derive(Clone, Debug)]
 pub struct NodeLearner {
+    /// Node id in the graph.
     pub id: usize,
     inner: Sgd,
 }
 
 impl NodeLearner {
+    /// A learner for node `id` over `dim` weights.
     pub fn new(id: usize, dim: usize, loss: Loss, lr: LrSchedule) -> Self {
         NodeLearner { id, inner: Sgd::new(dim, loss, lr) }
     }
@@ -35,11 +37,13 @@ impl NodeLearner {
         NodeLearner { id, inner: Sgd::from_parts(w, loss, lr, t) }
     }
 
+    /// The learning-rate schedule.
     pub fn lr(&self) -> LrSchedule {
         self.inner.lr
     }
 
     #[inline]
+    /// Margin for a sparse example.
     pub fn predict(&self, x: &[SparseFeat]) -> f64 {
         self.inner.predict(x)
     }
@@ -71,14 +75,17 @@ impl NodeLearner {
         self.inner.loss.dloss(yhat, y)
     }
 
+    /// The loss function.
     pub fn loss(&self) -> Loss {
         self.inner.loss
     }
 
+    /// The weight vector.
     pub fn weights(&self) -> &[f32] {
         self.inner.weights()
     }
 
+    /// Gradient steps taken.
     pub fn steps(&self) -> u64 {
         self.inner.steps()
     }

@@ -11,8 +11,11 @@ use crate::lr::LrSchedule;
 /// Online gradient descent (Algorithm 1).
 #[derive(Clone, Debug)]
 pub struct Sgd {
+    /// Weight vector.
     pub w: Vec<f32>,
+    /// Loss function.
     pub loss: Loss,
+    /// Learning-rate schedule.
     pub lr: LrSchedule,
     t: u64,
 }
@@ -36,6 +39,7 @@ impl Sgd {
         self.lr.eta(self.t + 1)
     }
 
+    /// The weight vector.
     pub fn weights(&self) -> &[f32] {
         &self.w
     }

@@ -173,27 +173,61 @@
 //! scrape and `pol top --connect HOST:7878` is the live terminal view
 //! (QPS, staleness, τ p50/p99, shard heat).
 
+// The whole crate is safe code except the two bounds-check-elided
+// hot-path loops in `linalg`, which carry per-site `#[allow]`s with
+// the in-range-by-construction argument written next to them.
+#![deny(unsafe_code)]
+// Every public item documents itself; the `pol lint` pass (see
+// `analyze`) enforces the invariants the docs promise.
+#![deny(missing_docs)]
+
+/// `pol lint` — the static analysis pass enforcing the crate's
+/// hand-kept invariants (see its module docs for the rule table).
+pub mod analyze;
+/// Run configuration: the canonical `key = value` config text.
 pub mod config;
+/// Tree coordinators — the paper's sharded architectures.
 pub mod coordinator;
+/// Datasets, instances, and the synthetic generators.
 pub mod data;
+/// Crate-wide error type and the `anyhow`-shaped helpers.
 pub mod error;
+/// Regret/accuracy evaluation (propositions, delay sweeps).
 pub mod eval;
+/// Feature hashing (FNV-1a) and digests.
 pub mod hashing;
+/// Online learners: SGD, delayed SGD, naive Bayes, tree nodes.
 pub mod learner;
+/// Sparse/dense linear-algebra hot-path primitives.
 pub mod linalg;
+/// Loss functions and their gradients.
 pub mod loss;
+/// Learning-rate schedules.
 pub mod lr;
+/// Progressive validation and training metrics.
 pub mod metrics;
+/// The [`model::Model`] trait and the [`model::Session`] builder.
 pub mod model;
+/// Simulated network links for the delay experiments.
 pub mod net;
+/// Unified telemetry: metrics registry, trace ring, exposition.
 pub mod obs;
+/// The deterministic xorshift RNG every experiment seeds from.
 pub mod rng;
+/// Accelerator runtime stubs (artifact registry, exec servers).
 pub mod runtime;
+/// Model serving: snapshots, registry, prediction server.
 pub mod serve;
+/// Feature sharding plans and elastic re-sharding.
 pub mod sharding;
+/// Instance sources and the background parse pipeline.
 pub mod stream;
+/// Tree topologies (flat, binary, custom arity).
 pub mod topology;
+/// The TCP front-end: framed protocol, server, client.
 pub mod wire;
+
+mod bytes;
 
 /// Convenience re-exports for the common API surface.
 pub mod prelude {

@@ -11,6 +11,10 @@
 pub type SparseFeat = (u32, f32);
 
 /// ⟨w, x⟩ for sparse x over dense w.
+// unsafe_code waiver: the one hot-path bounds-check elision in the
+// crate. Hashed indices are reduced mod the table size at parse time,
+// so `i < w.len()` holds by construction; debug builds still assert it.
+#[allow(unsafe_code)]
 #[inline]
 pub fn sparse_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
     let mut acc = 0.0f64;
@@ -24,6 +28,9 @@ pub fn sparse_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
 }
 
 /// w ← w + a·x for sparse x.
+// unsafe_code waiver: same in-range-by-construction argument as
+// `sparse_dot`, asserted in debug builds.
+#[allow(unsafe_code)]
 #[inline]
 pub fn sparse_saxpy(w: &mut [f32], a: f64, x: &[SparseFeat]) {
     for &(i, v) in x {
@@ -100,6 +107,7 @@ pub fn solve(a: &[f64], b: &[f64], n: usize, ridge: f64) -> Option<Vec<f64>> {
 /// feature space of dimension n. Used by the regret evaluator and the
 /// Proposition 3/4 exact checks.
 pub struct LeastSquares {
+    /// Problem dimension (number of unknowns).
     pub n: usize,
     sigma: Vec<f64>, // n×n
     b: Vec<f64>,
@@ -107,10 +115,12 @@ pub struct LeastSquares {
 }
 
 impl LeastSquares {
+    /// An empty accumulator for an `n`-dimensional problem.
     pub fn new(n: usize) -> Self {
         LeastSquares { n, sigma: vec![0.0; n * n], b: vec![0.0; n], count: 0 }
     }
 
+    /// Fold a dense observation `(x, y)` into the normal equations.
     pub fn observe_dense(&mut self, x: &[f64], y: f64) {
         assert_eq!(x.len(), self.n);
         for i in 0..self.n {
@@ -125,6 +135,7 @@ impl LeastSquares {
         self.count += 1;
     }
 
+    /// Fold a sparse observation into the normal equations.
     pub fn observe_sparse(&mut self, x: &[SparseFeat], y: f64) {
         for &(i, v) in x {
             let i = i as usize;
@@ -141,6 +152,7 @@ impl LeastSquares {
         solve(&self.sigma, &self.b, self.n, ridge)
     }
 
+    /// Number of observations folded in so far.
     pub fn count(&self) -> u64 {
         self.count
     }

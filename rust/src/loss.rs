@@ -97,6 +97,7 @@ impl Loss {
         }
     }
 
+    /// Parse a loss name as written in configs and on the command line.
     pub fn parse(s: &str) -> Option<Loss> {
         match s {
             "sq" | "squared" => Some(Loss::Squared),
@@ -106,6 +107,7 @@ impl Loss {
         }
     }
 
+    /// Canonical name, round-trippable through [`Loss::parse`].
     pub fn name(self) -> &'static str {
         match self {
             Loss::Squared => "squared",

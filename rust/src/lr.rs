@@ -21,18 +21,22 @@ pub enum LrSchedule {
 }
 
 impl LrSchedule {
+    /// Constant rate `lambda`.
     pub fn constant(lambda: f64) -> Self {
         LrSchedule::Constant { lambda }
     }
 
+    /// `lambda / sqrt(t + t0)` decay.
     pub fn inv_sqrt(lambda: f64, t0: f64) -> Self {
         LrSchedule::InvSqrt { lambda, t0 }
     }
 
+    /// `lambda / (t + t0)` decay (strongly-convex rate).
     pub fn inv(lambda: f64, t0: f64) -> Self {
         LrSchedule::Inv { lambda, t0 }
     }
 
+    /// Theorem 1's adversarial delayed rate `R / (L * sqrt(2 * tau * t))`.
     pub fn delayed_adversarial(r: f64, l: f64, tau: f64) -> Self {
         LrSchedule::DelayedAdversarial { r, l, tau: tau.max(1.0) }
     }

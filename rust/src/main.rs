@@ -46,6 +46,7 @@ fn main() {
         Some("bench-data") => cmd_bench_data(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("artifacts-check") => cmd_artifacts_check(&args[1..]),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print!("{HELP}");
             0
@@ -119,6 +120,15 @@ COMMANDS:
   inspect          hashing collision stats   --bits B  --uniques N
   artifacts-check  compile-check all AOT artifacts (needs `make artifacts`)
                    --dir DIR
+  lint             statically check the crate's hand-kept invariants
+                   (rules L001-L006: no panics in library code, Relaxed
+                   atomics only in telemetry, cap-before-allocate decode
+                   paths, no wall clock in deterministic paths, no floats
+                   on obs record paths, no narrowing casts on codecs;
+                   see src/analyze/mod.rs for the rule table and the
+                   `pol-lint: allow(...)` waiver syntax)
+                   --root DIR  (source tree to lint; default: ./src,
+                   falling back to ./rust/src)
 ";
 
 /// Parsed `--key value` / `--switch` arguments for one subcommand.
@@ -480,6 +490,7 @@ fn cmd_train(args: &[String]) -> i32 {
         };
 
         if !fl.has("--in-memory") && file_source.is_some() {
+            // pol-lint: allow(L001, "is_some() checked in the branch guard")
             let mut source = file_source.take().expect("checked is_some");
             // the default file path: stream at constant memory through
             // the background parse pipeline (no held-out split — the
@@ -1563,5 +1574,59 @@ fn cmd_artifacts_check(args: &[String]) -> i32 {
             eprintln!("{e:#}");
             1
         }
+    }
+}
+
+fn cmd_lint(args: &[String]) -> i32 {
+    let fl = match parse_flags("lint", args, &["--root"], &[]) {
+        Ok(fl) => fl,
+        Err(e) => return usage_error(&e),
+    };
+    if fl.has("--help") {
+        print!("{HELP}");
+        return 0;
+    }
+    let root = match fl.get("--root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            // `cargo run` from rust/ sees ./src; from the repo root,
+            // ./rust/src
+            let src = std::path::Path::new("src");
+            let nested = std::path::Path::new("rust/src");
+            if src.is_dir() {
+                src.to_path_buf()
+            } else if nested.is_dir() {
+                nested.to_path_buf()
+            } else {
+                return usage_error(
+                    "lint: no ./src or ./rust/src here; pass --root DIR",
+                );
+            }
+        }
+    };
+    let findings = match pol::analyze::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        let waivers = pol::analyze::waivers_in_tree(&root).unwrap_or(0);
+        println!(
+            "pol lint: clean ({}, {waivers} waiver(s) in effect)",
+            root.display()
+        );
+        0
+    } else {
+        println!(
+            "pol lint: {} finding(s) in {}",
+            findings.len(),
+            root.display()
+        );
+        1
     }
 }

@@ -24,10 +24,12 @@ impl Default for ProgressiveValidator {
 }
 
 impl ProgressiveValidator {
+    /// A validator scoring under the default loss.
     pub fn new() -> Self {
         Self::with_loss(Loss::Squared)
     }
 
+    /// A validator scoring under `loss`.
     pub fn with_loss(loss: Loss) -> Self {
         ProgressiveValidator { sum_sq: 0.0, sum_loss: 0.0, correct: 0, n: 0, loss }
     }
@@ -71,6 +73,7 @@ impl ProgressiveValidator {
         }
     }
 
+    /// Number of examples scored.
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -108,7 +111,9 @@ pub fn test_metrics(
 #[derive(Debug)]
 pub struct Throughput {
     start: std::time::Instant,
+    /// Instances processed.
     pub items: u64,
+    /// Feature values processed.
     pub features: u64,
 }
 
@@ -119,24 +124,29 @@ impl Default for Throughput {
 }
 
 impl Throughput {
+    /// Start a throughput clock at zero items.
     pub fn new() -> Self {
         Throughput { start: std::time::Instant::now(), items: 0, features: 0 }
     }
 
     #[inline]
+    /// Record one instance carrying `features` feature values.
     pub fn tick(&mut self, features: usize) {
         self.items += 1;
         self.features += features as u64;
     }
 
+    /// Wall time since construction.
     pub fn elapsed(&self) -> std::time::Duration {
         self.start.elapsed()
     }
 
+    /// Instances per second since construction.
     pub fn items_per_sec(&self) -> f64 {
         self.items as f64 / self.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// Feature values per second since construction.
     pub fn features_per_sec(&self) -> f64 {
         self.features as f64 / self.elapsed().as_secs_f64().max(1e-9)
     }
@@ -162,16 +172,19 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         LatencyHistogram { buckets: [0; 64], count: 0, sum_ns: 0, max_ns: 0 }
     }
 
     #[inline]
+    /// Record one latency sample.
     pub fn record(&mut self, d: std::time::Duration) {
         self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
     #[inline]
+    /// Record one latency sample in nanoseconds.
     pub fn record_ns(&mut self, ns: u64) {
         let bucket = 63 - ns.max(1).leading_zeros() as usize;
         self.buckets[bucket] += 1;
@@ -180,10 +193,12 @@ impl LatencyHistogram {
         self.max_ns = self.max_ns.max(ns);
     }
 
+    /// Number of samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean latency in nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -192,6 +207,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Largest recorded latency in nanoseconds.
     pub fn max_ns(&self) -> u64 {
         self.max_ns
     }

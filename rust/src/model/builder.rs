@@ -101,6 +101,7 @@ impl SessionBuilder {
         self
     }
 
+    /// Set the loss function.
     pub fn loss(mut self, loss: Loss) -> Self {
         self.cfg.loss = loss;
         self
@@ -136,11 +137,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Set the number of training passes.
     pub fn passes(mut self, passes: usize) -> Self {
         self.cfg.passes = passes.max(1);
         self
     }
 
+    /// Set the RNG seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self
@@ -280,6 +283,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// Start building a session.
     pub fn builder() -> SessionBuilder {
         SessionBuilder::default()
     }
@@ -297,10 +301,12 @@ impl Session {
         }
     }
 
+    /// The trained model.
     pub fn model(&self) -> &dyn Model {
         &*self.model
     }
 
+    /// Mutable access to the trained model.
     pub fn model_mut(&mut self) -> &mut dyn Model {
         &mut *self.model
     }
@@ -316,6 +322,7 @@ impl Session {
     pub fn background_checkpoints(&self) -> u64 {
         self.ckpt_writes
             .as_ref()
+            // pol-lint: allow(L002, "monotonic write counter, no publication")
             .map_or(0, |w| w.load(Ordering::Relaxed))
     }
 

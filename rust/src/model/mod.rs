@@ -227,6 +227,7 @@ impl Model for Sgd {
     }
 
     fn train_dataset(&mut self, ds: &Dataset) -> TrainReport {
+        // pol-lint: allow(L004, "wall-clock feeds TrainReport timing only")
         let start = std::time::Instant::now();
         let mut pv = ProgressiveValidator::with_loss(self.loss);
         for inst in ds.iter() {
@@ -246,6 +247,7 @@ impl Model for Sgd {
         &mut self,
         source: &mut dyn InstanceSource,
     ) -> io::Result<TrainReport> {
+        // pol-lint: allow(L004, "wall-clock feeds TrainReport timing only")
         let start = std::time::Instant::now();
         let mut pv = ProgressiveValidator::with_loss(self.loss);
         let mut total = 0u64;

@@ -60,10 +60,12 @@ pub struct SimNetwork {
     cpu_free: Vec<f64>,
     /// Bytes sent per node (for saturation diagnostics).
     pub bytes_sent: Vec<u64>,
+    /// Packets sent, indexed by node id.
     pub packets_sent: Vec<u64>,
 }
 
 impl SimNetwork {
+    /// A simulated network of `nodes` nodes joined by `link`.
     pub fn new(nodes: usize, link: LinkSpec) -> Self {
         SimNetwork {
             link,
@@ -74,6 +76,7 @@ impl SimNetwork {
         }
     }
 
+    /// The link spec this network was built with.
     pub fn link(&self) -> LinkSpec {
         self.link
     }

@@ -43,7 +43,9 @@
 //! uninstrumented one (pinned per rule × topology in
 //! `tests/test_obs.rs`).
 
+/// Metrics registry: counters, gauges, histograms.
 pub mod registry;
+/// Fixed-capacity event trace ring.
 pub mod trace;
 
 pub use registry::{
@@ -62,7 +64,9 @@ pub const DEFAULT_TRACE_CAPACITY: usize = 1024;
 /// should report — coordinator, pipeline, servers. Components without
 /// a handle record nothing and pay nothing.
 pub struct Obs {
+    /// Metrics registry.
     pub metrics: MetricsRegistry,
+    /// Trace ring.
     pub trace: TraceRing,
 }
 
@@ -76,10 +80,12 @@ impl std::fmt::Debug for Obs {
 }
 
 impl Obs {
+    /// A hub with the default trace capacity.
     pub fn new() -> Arc<Obs> {
         Obs::with_trace_capacity(DEFAULT_TRACE_CAPACITY)
     }
 
+    /// A hub whose trace ring holds `capacity` events.
     pub fn with_trace_capacity(capacity: usize) -> Arc<Obs> {
         Arc::new(Obs {
             metrics: MetricsRegistry::new(),

@@ -26,6 +26,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::error::LockExt;
 use crate::metrics::LatencyHistogram;
 
 /// First line of every exposition dump; parsers reject anything else.
@@ -36,14 +37,17 @@ pub const EXPOSITION_HEADER: &str = "# pol-metrics v1";
 pub struct Counter(Arc<AtomicU64>);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -54,6 +58,7 @@ impl Counter {
 pub struct Gauge(Arc<AtomicU64>);
 
 impl Gauge {
+    /// Set the gauge to `v`.
     pub fn set(&self, v: u64) {
         self.0.store(v, Ordering::Relaxed);
     }
@@ -63,6 +68,7 @@ impl Gauge {
         self.0.fetch_max(v, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -105,6 +111,7 @@ impl HistCells {
 pub struct Histogram(Arc<HistCells>);
 
 impl Histogram {
+    /// Record one sample.
     pub fn record(&self, v: u64) {
         let b = 63 - v.max(1).leading_zeros() as usize;
         let c = &*self.0;
@@ -130,6 +137,7 @@ impl Histogram {
         c.max.fetch_max(h.max_ns(), Ordering::Relaxed);
     }
 
+    /// A point-in-time copy of the histogram state.
     pub fn snapshot(&self) -> HistogramSnapshot {
         self.0.snapshot()
     }
@@ -139,9 +147,13 @@ impl Histogram {
 /// [`LatencyHistogram`], via [`HistogramSnapshot::from_latency`]).
 #[derive(Clone, Debug)]
 pub struct HistogramSnapshot {
+    /// Per-bucket counts (power-of-two bounds).
     pub buckets: [u64; 64],
+    /// Total samples.
     pub count: u64,
+    /// Sum of all samples.
     pub sum: u64,
+    /// Largest sample.
     pub max: u64,
 }
 
@@ -163,6 +175,7 @@ impl HistogramSnapshot {
         }
     }
 
+    /// Fold one sample into this snapshot.
     pub fn record(&mut self, v: u64) {
         let b = 63 - v.max(1).leading_zeros() as usize;
         self.buckets[b] += 1;
@@ -171,6 +184,7 @@ impl HistogramSnapshot {
         self.max = self.max.max(v);
     }
 
+    /// Fold another snapshot into this one.
     pub fn merge(&mut self, other: &HistogramSnapshot) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -201,6 +215,7 @@ impl HistogramSnapshot {
         self.max
     }
 
+    /// Mean of recorded samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -239,6 +254,7 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// An empty registry.
     pub fn new() -> MetricsRegistry {
         MetricsRegistry::default()
     }
@@ -264,7 +280,8 @@ impl MetricsRegistry {
         labels: &[(&str, &str)],
         make: impl FnOnce() -> Cell,
     ) -> Cell {
-        let mut entries = self.entries.lock().expect("metrics lock");
+        // entries is append-only; valid after any partial critical section
+        let mut entries = self.entries.lock().recover_poisoned();
         if let Some(i) = Self::find(&entries, name, labels) {
             let e = &entries[i].cell;
             return match e {
@@ -290,6 +307,7 @@ impl MetricsRegistry {
         handle
     }
 
+    /// The counter named `name`, created on first use.
     pub fn counter(&self, name: &str) -> Counter {
         self.counter_with(name, &[])
     }
@@ -314,10 +332,12 @@ impl MetricsRegistry {
         }
     }
 
+    /// The gauge named `name`, created on first use.
     pub fn gauge(&self, name: &str) -> Gauge {
         self.gauge_with(name, &[])
     }
 
+    /// A labelled gauge, created on first use.
     pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
         match self.register(name, labels, || {
             Cell::Gauge(Arc::new(AtomicU64::new(0)))
@@ -330,10 +350,12 @@ impl MetricsRegistry {
         }
     }
 
+    /// The histogram named `name`, created on first use.
     pub fn histogram(&self, name: &str) -> Histogram {
         self.histogram_with(name, &[])
     }
 
+    /// A labelled histogram, created on first use.
     pub fn histogram_with(
         &self,
         name: &str,
@@ -352,9 +374,11 @@ impl MetricsRegistry {
 
     /// Number of registered series.
     pub fn len(&self) -> usize {
-        self.entries.lock().expect("metrics lock").len()
+        // entries is append-only; valid after any partial critical section
+        self.entries.lock().recover_poisoned().len()
     }
 
+    /// Whether no instruments are registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -363,7 +387,8 @@ impl MetricsRegistry {
     /// construction (lets callers append process-level series — the
     /// wire server folds its frame counters in this way).
     pub fn render_into(&self, exp: &mut Exposition) {
-        let entries = self.entries.lock().expect("metrics lock");
+        // entries is append-only; valid after any partial critical section
+        let entries = self.entries.lock().recover_poisoned();
         for e in entries.iter() {
             let labels: Vec<(&str, &str)> = e
                 .labels
@@ -402,10 +427,12 @@ pub struct Exposition {
 }
 
 impl Exposition {
+    /// An empty exposition buffer.
     pub fn new() -> Exposition {
         Exposition::default()
     }
 
+    /// Append one `name{labels} value` sample line.
     pub fn point(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
         let mut line = String::with_capacity(name.len() + 24);
         line.push_str(name);

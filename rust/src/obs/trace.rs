@@ -24,6 +24,7 @@ use std::io::{self, Read, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::error::LockExt;
 use crate::hashing::fnv1a64;
 
 /// Magic opening a trace trailer appended after a checkpoint payload.
@@ -32,6 +33,7 @@ pub const TRAILER_MAGIC: &[u8; 4] = b"POLT";
 /// Caps enforced before any allocation when reading a trailer back
 /// (same discipline as the `.polz` codec and the wire frames).
 pub const MAX_TRAILER_EVENTS: u32 = 4096;
+/// Cap on a single event's detail string on the wire.
 pub const MAX_DETAIL_BYTES: u32 = 512;
 
 /// Fixed per-event wire overhead: seq + kind + trained + detail len.
@@ -49,15 +51,22 @@ fn bad(msg: impl Into<String>) -> io::Error {
 /// What happened.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceKind {
+    /// A snapshot was published.
     Publish,
+    /// A shard plan migration ran.
     Reshard,
+    /// A checkpoint was written.
     Checkpoint,
+    /// The server shut down.
     Shutdown,
+    /// A worker thread joined.
     WorkerJoin,
+    /// A worker thread left.
     WorkerLeave,
 }
 
 impl TraceKind {
+    /// Canonical event-kind name.
     pub fn name(self) -> &'static str {
         match self {
             TraceKind::Publish => "publish",
@@ -98,6 +107,7 @@ impl TraceKind {
 pub struct TraceEvent {
     /// Global sequence number (gaps reveal overwritten events).
     pub seq: u64,
+    /// What happened.
     pub kind: TraceKind,
     /// Trained-instance count at the moment of the event.
     pub trained: u64,
@@ -119,6 +129,7 @@ pub struct TraceRing {
 }
 
 impl TraceRing {
+    /// A ring holding the last `capacity` events.
     pub fn new(capacity: usize) -> TraceRing {
         TraceRing {
             seq: AtomicU64::new(0),
@@ -138,7 +149,8 @@ impl TraceRing {
         detail: impl Into<String>,
     ) -> u64 {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let mut r = self.inner.lock().expect("trace lock");
+        // ring state is a deque + counter, valid after any partial write
+        let mut r = self.inner.lock().recover_poisoned();
         if r.events.len() == r.cap {
             r.events.pop_front();
             r.dropped += 1;
@@ -154,22 +166,27 @@ impl TraceRing {
 
     /// The newest `n` events, oldest first.
     pub fn tail(&self, n: usize) -> Vec<TraceEvent> {
-        let r = self.inner.lock().expect("trace lock");
+        // ring state is a deque + counter, valid after any partial write
+        let r = self.inner.lock().recover_poisoned();
         let skip = r.events.len().saturating_sub(n);
         r.events.iter().skip(skip).cloned().collect()
     }
 
+    /// Events currently buffered.
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("trace lock").events.len()
+        // ring state is a deque + counter, valid after any partial write
+        self.inner.lock().recover_poisoned().events.len()
     }
 
+    /// Whether the ring is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
     /// Events overwritten so far because the ring was full.
     pub fn dropped(&self) -> u64 {
-        self.inner.lock().expect("trace lock").dropped
+        // ring state is a deque + counter, valid after any partial write
+        self.inner.lock().recover_poisoned().dropped
     }
 
     /// The sequence number the next [`TraceRing::record`] will get.
@@ -190,6 +207,7 @@ pub fn encode_trailer(events: &[TraceEvent]) -> Vec<u8> {
     let take = events.len().min(MAX_TRAILER_EVENTS as usize);
     let events = &events[events.len() - take..];
     let mut body = Vec::with_capacity(4 + events.len() * 32);
+    // pol-lint: allow(L006, "len capped to MAX_TRAILER_EVENTS above")
     body.extend_from_slice(&(events.len() as u32).to_le_bytes());
     for e in events {
         body.extend_from_slice(&e.seq.to_le_bytes());
@@ -203,6 +221,7 @@ pub fn encode_trailer(events: &[TraceEvent]) -> Vec<u8> {
             }
             detail = &detail[..cut];
         }
+        // pol-lint: allow(L006, "detail truncated to MAX_DETAIL_BYTES above")
         body.extend_from_slice(&(detail.len() as u32).to_le_bytes());
         body.extend_from_slice(detail.as_bytes());
     }
@@ -251,7 +270,7 @@ pub fn read_trailer(inp: &mut impl Read) -> io::Result<Vec<TraceEvent>> {
         return Err(bad("truncated trace trailer"));
     }
     let (body, sum) = rest.split_at(rest.len() - 8);
-    let expect = u64::from_le_bytes(sum.try_into().unwrap());
+    let expect = crate::bytes::le_u64(sum);
     if fnv1a64(body) != expect {
         return Err(bad("trace trailer checksum mismatch"));
     }
@@ -269,8 +288,7 @@ fn decode_body(body: &[u8]) -> io::Result<Vec<TraceEvent>> {
         *pos = end;
         Ok(s)
     };
-    let count =
-        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let count = crate::bytes::le_u32(take(&mut pos, 4)?);
     if count > MAX_TRAILER_EVENTS {
         return Err(bad("trace trailer event count exceeds cap"));
     }
@@ -281,14 +299,11 @@ fn decode_body(body: &[u8]) -> io::Result<Vec<TraceEvent>> {
     }
     let mut events = Vec::with_capacity(count as usize);
     for _ in 0..count {
-        let seq =
-            u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let seq = crate::bytes::le_u64(take(&mut pos, 8)?);
         let kind = TraceKind::from_u8(take(&mut pos, 1)?[0])
             .ok_or_else(|| bad("unknown trace event kind"))?;
-        let trained =
-            u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let dlen =
-            u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let trained = crate::bytes::le_u64(take(&mut pos, 8)?);
+        let dlen = crate::bytes::le_u32(take(&mut pos, 4)?);
         if dlen > MAX_DETAIL_BYTES {
             return Err(bad("trace detail exceeds cap"));
         }

@@ -32,6 +32,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next pseudo-random 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
             .rotate_left(23)

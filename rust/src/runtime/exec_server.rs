@@ -10,24 +10,30 @@ use crate::format_err as anyhow;
 /// A tensor crossing the server boundary: shape + row-major f32 data.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Shape, one entry per dimension.
     pub dims: Vec<i64>,
+    /// Row-major element data.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A rank-0 tensor holding `v`.
     pub fn scalar(v: f32) -> Self {
         Tensor { dims: vec![], data: vec![v] }
     }
 
+    /// A rank-1 tensor owning `data`.
     pub fn vec(data: Vec<f32>) -> Self {
         Tensor { dims: vec![data.len() as i64], data }
     }
 
+    /// A `rows x cols` rank-2 tensor.
     pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(rows * cols, data.len());
         Tensor { dims: vec![rows as i64, cols as i64], data }
     }
 
+    /// Total number of elements.
     pub fn numel(&self) -> usize {
         self.dims.iter().product::<i64>().max(1) as usize
     }
@@ -53,10 +59,12 @@ impl ExecServer {
         let handle = std::thread::Builder::new()
             .name(thread_name)
             .spawn(move || serve(path, rx))
+            // pol-lint: allow(L001, "spawn fails only on resource exhaustion")
             .expect("spawn exec server");
         ExecServer { tx, name: name.to_string(), handle: Some(handle) }
     }
 
+    /// The artifact name this server executes.
     pub fn name(&self) -> &str {
         &self.name
     }

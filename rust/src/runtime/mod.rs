@@ -14,8 +14,11 @@
 //! parser reassigns ids (see `python/compile/aot.py` and
 //! /opt/xla-example/README.md).
 
+/// In-process tensor execution server.
 pub mod exec_server;
+/// Named training ops executed against the registry.
 pub mod ops;
+/// On-disk registry of compiled artifacts.
 pub mod registry;
 
 pub use exec_server::ExecServer;

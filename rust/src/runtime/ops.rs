@@ -20,7 +20,9 @@ use crate::linalg::SparseFeat;
 /// updates `w` in place.
 pub struct ShardStepOp<'r> {
     server: std::sync::Arc<super::ExecServer>,
+    /// Feature dimension.
     pub d: usize,
+    /// Batch size.
     pub b: usize,
     /// Reused densification buffer (perf: b×d f32 ≈ 256 KB per call
     /// would otherwise be allocated and zeroed from scratch every block;
@@ -30,6 +32,7 @@ pub struct ShardStepOp<'r> {
 }
 
 impl<'r> ShardStepOp<'r> {
+    /// Bind the op against `reg`, requiring at least `min_d` features.
     pub fn new(reg: &'r Registry, loss: &str, min_d: usize) -> Result<Self> {
         let spec = reg
             .find_at_least("shard_step", loss, min_d)
@@ -99,7 +102,9 @@ impl<'r> ShardStepOp<'r> {
 /// Minibatch-CG step (L1 kernel `cg_step`): full CG state in/out.
 pub struct CgStepOp<'r> {
     server: std::sync::Arc<super::ExecServer>,
+    /// Feature dimension.
     pub d: usize,
+    /// Batch size.
     pub b: usize,
     /// Reused densification buffer (see [`ShardStepOp::dense`]).
     dense: std::cell::RefCell<Vec<f32>>,
@@ -107,6 +112,7 @@ pub struct CgStepOp<'r> {
 }
 
 impl<'r> CgStepOp<'r> {
+    /// Bind the op against `reg`, requiring at least `min_d` features.
     pub fn new(reg: &'r Registry, loss: &str, min_d: usize) -> Result<Self> {
         let spec = reg
             .find_at_least("cg_step", loss, min_d)
@@ -173,12 +179,15 @@ impl<'r> CgStepOp<'r> {
 /// Master combine sweep (L1 kernel `master_step`).
 pub struct MasterStepOp<'r> {
     server: std::sync::Arc<super::ExecServer>,
+    /// Number of shards feeding the master.
     pub k: usize,
+    /// Batch size.
     pub b: usize,
     _registry: &'r Registry,
 }
 
 impl<'r> MasterStepOp<'r> {
+    /// Bind the op against `reg` for `k` shards.
     pub fn new(reg: &'r Registry, k: usize, clip01: bool) -> Result<Self> {
         let spec = reg
             .specs()
@@ -228,14 +237,18 @@ impl<'r> MasterStepOp<'r> {
 /// shard_step/master_step path — ~8× end-to-end on the e2e driver.
 pub struct TwoLayerOp<'r> {
     server: std::sync::Arc<super::ExecServer>,
+    /// Number of shards.
     pub k: usize,
+    /// Feature dimension.
     pub d: usize,
+    /// Batch size.
     pub b: usize,
     dense: std::cell::RefCell<Vec<f32>>,
     _registry: &'r Registry,
 }
 
 impl<'r> TwoLayerOp<'r> {
+    /// Bind the fused two-layer op against `reg`.
     pub fn new(reg: &'r Registry) -> Result<Self> {
         let spec = reg
             .specs()

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use crate::error::{Context, Result};
+use crate::error::{Context, LockExt, Result};
 use crate::format_err as anyhow;
 
 use super::exec_server::ExecServer;
@@ -17,12 +17,19 @@ use super::exec_server::ExecServer;
 /// One artifact's signature, from the manifest.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Artifact name.
     pub name: String,
+    /// Op kind this artifact implements.
     pub op: String,
+    /// Loss the artifact was compiled for.
     pub loss: String,
+    /// Feature dimension.
     pub d: usize,
+    /// Batch size.
     pub b: usize,
+    /// Shard count (two-layer ops).
     pub k: usize,
+    /// Whether master predictions are clipped to `[0, 1]`.
     pub clip01: bool,
 }
 
@@ -41,6 +48,7 @@ impl Registry {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
+    /// Open the registry rooted at `dir` (reads `manifest.tsv`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = dir.join("manifest.tsv");
@@ -66,6 +74,7 @@ impl Registry {
         Ok(Registry { dir, specs, servers: Mutex::new(HashMap::new()) })
     }
 
+    /// The artifact specs listed in the manifest.
     pub fn specs(&self) -> &[ArtifactSpec] {
         &self.specs
     }
@@ -102,7 +111,8 @@ impl Registry {
         if !self.specs.iter().any(|s| s.name == name) {
             return Err(anyhow!("unknown artifact '{name}'"));
         }
-        let mut servers = self.servers.lock().expect("registry lock");
+        // name -> Arc map, insert-only; valid after any partial section
+        let mut servers = self.servers.lock().recover_poisoned();
         if let Some(s) = servers.get(name) {
             return Ok(std::sync::Arc::clone(s));
         }

@@ -70,11 +70,14 @@ use crate::model::Model;
 use crate::serve::snapshot::ModelSnapshot;
 use crate::sharding::{plan::WIRE_LEN as PLAN_WIRE_LEN, ShardPlan};
 
+/// File magic: every checkpoint starts with these four bytes.
 pub const MAGIC: &[u8; 4] = b"POLZ";
+/// Current checkpoint format version.
 pub const FORMAT_VERSION: u32 = 3;
 
 /// Payload encodings (the byte after the format version).
 pub const ENC_RAW: u8 = 0;
+/// Encoding tag: sparse run-length weight tables.
 pub const ENC_SPARSE: u8 = 1;
 
 /// Caps keeping corrupted or hostile length fields from attempting
@@ -99,22 +102,34 @@ const RUN_MERGE_GAP: usize = 2;
 /// care about the concrete type should use [`read_model`]/[`load_model`]
 /// and stay on the [`Model`] trait.
 pub enum Checkpoint {
+    /// A single SGD learner.
     Sgd(Sgd),
+    /// A full coordinator (per-node weight tables).
     Coordinator(Box<Coordinator>),
 }
 
 /// Parsed header + structural metadata (`pol checkpoint` inspection).
 #[derive(Clone, Debug)]
 pub struct CheckpointInfo {
+    /// Format version the file was written with.
     pub format_version: u32,
+    /// Weight-table encoding tag.
     pub encoding: u8,
+    /// Checkpoint kind tag (SGD or coordinator).
     pub kind: u8,
+    /// Digest of the run config that produced the model.
     pub config_digest: u64,
+    /// Feature dimension.
     pub dim: u64,
+    /// Hash salt the model was trained with.
     pub salt: u64,
+    /// Instances trained when the checkpoint was taken.
     pub trained_instances: u64,
+    /// Number of weight tables.
     pub tables: u32,
+    /// Total parameters across all tables.
     pub total_params: u64,
+    /// Human-readable config text embedded in the file.
     pub config_text: String,
     /// The shard plan recorded in the v3 header (`None` for plain-sgd
     /// checkpoints and for v1/v2 files, which predate the header
@@ -128,6 +143,7 @@ pub struct CheckpointInfo {
 }
 
 impl CheckpointInfo {
+    /// Human-readable kind tag.
     pub fn kind_name(&self) -> &'static str {
         match self.kind {
             KIND_SGD => "sgd",
@@ -137,6 +153,7 @@ impl CheckpointInfo {
         }
     }
 
+    /// Human-readable encoding tag.
     pub fn encoding_name(&self) -> &'static str {
         match self.encoding {
             ENC_RAW => "raw",
@@ -243,6 +260,7 @@ fn sparse_runs(w: &[f32]) -> Vec<(u32, u32)> {
             }
             j += 1;
         }
+        // pol-lint: allow(L006, "indices bounded by table len <= MAX_TABLE")
         runs.push((start as u32, (end - start) as u32));
         i = end;
     }
@@ -265,6 +283,7 @@ fn push_table_sparse(
 ) {
     out.extend_from_slice(&steps.to_le_bytes());
     out.extend_from_slice(&(w.len() as u64).to_le_bytes());
+    // pol-lint: allow(L006, "run count bounded by table len <= MAX_TABLE")
     out.extend_from_slice(&(runs.len() as u32).to_le_bytes());
     for &(start, count) in runs {
         out.extend_from_slice(&start.to_le_bytes());
@@ -290,12 +309,14 @@ fn build_payload(
     trained: u64,
     tables: &[(u64, &[f32])],
 ) -> io::Result<(u8, Vec<u8>)> {
-    if cfg_text.len() as u32 > MAX_CFG_TEXT {
-        return Err(bad("config text exceeds the checkpoint format cap"));
-    }
-    if tables.len() as u32 > MAX_TABLES {
-        return Err(bad("table count exceeds the checkpoint format cap"));
-    }
+    let cfg_len = u32::try_from(cfg_text.len())
+        .ok()
+        .filter(|&n| n <= MAX_CFG_TEXT)
+        .ok_or_else(|| bad("config text exceeds the checkpoint format cap"))?;
+    let table_count = u32::try_from(tables.len())
+        .ok()
+        .filter(|&n| n <= MAX_TABLES)
+        .ok_or_else(|| bad("table count exceeds the checkpoint format cap"))?;
     let total_params: u64 = tables.iter().map(|&(_, w)| w.len() as u64).sum();
     if tables.iter().any(|&(_, w)| w.len() as u64 > MAX_TABLE)
         || total_params > MAX_TOTAL_PARAMS
@@ -324,12 +345,12 @@ fn build_payload(
     let mut payload =
         Vec::with_capacity(1 + 4 + cfg_text.len() + 28 + section_size);
     payload.push(kind);
-    payload.extend_from_slice(&(cfg_text.len() as u32).to_le_bytes());
+    payload.extend_from_slice(&cfg_len.to_le_bytes());
     payload.extend_from_slice(cfg_text.as_bytes());
     payload.extend_from_slice(&dim.to_le_bytes());
     payload.extend_from_slice(&salt.to_le_bytes());
     payload.extend_from_slice(&trained.to_le_bytes());
-    payload.extend_from_slice(&(tables.len() as u32).to_le_bytes());
+    payload.extend_from_slice(&table_count.to_le_bytes());
     for (&(steps, w), runs) in tables.iter().zip(&runs_per_table) {
         if encoding == ENC_SPARSE {
             push_table_sparse(&mut payload, steps, w, runs);
@@ -457,10 +478,12 @@ pub fn save_atomic(
     result
 }
 
+/// Write `s` to `path` as a checkpoint.
 pub fn save_sgd(s: &Sgd, path: &Path) -> io::Result<()> {
     save_atomic(path, |out| write_sgd(s, out))
 }
 
+/// Write `c` to `path` as a checkpoint.
 pub fn save_coordinator(c: &Coordinator, path: &Path) -> io::Result<()> {
     save_atomic(path, |out| write_coordinator(c, out))
 }
@@ -485,6 +508,7 @@ pub struct CheckpointSink {
 }
 
 impl CheckpointSink {
+    /// A sink that checkpoints to `path` every `every` instances.
     pub fn new(path: impl Into<PathBuf>, every: u64) -> CheckpointSink {
         let every = every.max(1);
         CheckpointSink {
@@ -503,10 +527,12 @@ impl CheckpointSink {
         self.next_at = trained + self.every;
     }
 
+    /// Destination path.
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// Write cadence in instances.
     pub fn every(&self) -> u64 {
         self.every
     }
@@ -518,6 +544,7 @@ impl CheckpointSink {
 
     /// Successful background writes so far.
     pub fn writes(&self) -> u64 {
+        // pol-lint: allow(L002, "monotonic write counter, no publication")
         self.writes.load(Ordering::Relaxed)
     }
 
@@ -538,6 +565,7 @@ impl CheckpointSink {
         self.flush();
         self.next_at = trained + self.every;
         save_atomic(&self.path, write_fn)?;
+        // pol-lint: allow(L002, "monotonic write counter, no publication")
         self.writes.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -556,6 +584,7 @@ impl CheckpointSink {
         self.pending = Some(std::thread::spawn(move || {
             match save_atomic(&path, |out| out.write_all(&bytes)) {
                 Ok(()) => {
+                    // pol-lint: allow(L002, "monotonic write counter")
                     writes.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(e) => {
@@ -603,17 +632,17 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> io::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(crate::bytes::le_u32(self.take(4)?))
     }
 
     fn u64(&mut self) -> io::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(crate::bytes::le_u64(self.take(8)?))
     }
 
     fn f32_into(&mut self, out: &mut [f32]) -> io::Result<()> {
         let raw = self.take(out.len() * 4)?;
         for (slot, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
-            *slot = f32::from_le_bytes(c.try_into().unwrap());
+            *slot = crate::bytes::le_f32(c);
         }
         Ok(())
     }
@@ -674,7 +703,7 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
     if &head[0..4] != MAGIC {
         return Err(bad("bad magic (not a .polz checkpoint)"));
     }
-    let format_version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    let format_version = crate::bytes::le_u32(&head[4..8]);
     // version 1: no encoding byte, raw tables, checksum over the payload
     // alone; version 2: encoding byte after the version, checksum over
     // (encoding ‖ payload); version 3: shard plan after the encoding
@@ -687,9 +716,9 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
             inp.read_exact(&mut rest).map_err(|_| bad("truncated header"))?;
             (
                 ENC_RAW,
-                u64::from_le_bytes(rest[0..8].try_into().unwrap()),
-                u64::from_le_bytes(rest[8..16].try_into().unwrap()),
-                u64::from_le_bytes(rest[16..24].try_into().unwrap()),
+                crate::bytes::le_u64(&rest[0..8]),
+                crate::bytes::le_u64(&rest[8..16]),
+                crate::bytes::le_u64(&rest[16..24]),
             )
         }
         2 => {
@@ -697,24 +726,24 @@ fn read_raw(inp: &mut impl Read) -> io::Result<RawCheckpoint> {
             inp.read_exact(&mut rest).map_err(|_| bad("truncated header"))?;
             (
                 rest[0],
-                u64::from_le_bytes(rest[1..9].try_into().unwrap()),
-                u64::from_le_bytes(rest[9..17].try_into().unwrap()),
-                u64::from_le_bytes(rest[17..25].try_into().unwrap()),
+                crate::bytes::le_u64(&rest[1..9]),
+                crate::bytes::le_u64(&rest[9..17]),
+                crate::bytes::le_u64(&rest[17..25]),
             )
         }
         3 => {
             let mut rest = [0u8; 25 + PLAN_WIRE_LEN];
             inp.read_exact(&mut rest).map_err(|_| bad("truncated header"))?;
-            let wire: [u8; PLAN_WIRE_LEN] =
-                rest[1..1 + PLAN_WIRE_LEN].try_into().unwrap();
+            let mut wire = [0u8; PLAN_WIRE_LEN];
+            wire.copy_from_slice(&rest[1..1 + PLAN_WIRE_LEN]);
             header_plan = decode_plan(&wire)?;
             plan_wire = wire.to_vec();
             let p = 1 + PLAN_WIRE_LEN;
             (
                 rest[0],
-                u64::from_le_bytes(rest[p..p + 8].try_into().unwrap()),
-                u64::from_le_bytes(rest[p + 8..p + 16].try_into().unwrap()),
-                u64::from_le_bytes(rest[p + 16..p + 24].try_into().unwrap()),
+                crate::bytes::le_u64(&rest[p..p + 8]),
+                crate::bytes::le_u64(&rest[p + 8..p + 16]),
+                crate::bytes::le_u64(&rest[p + 16..p + 24]),
             )
         }
         v => return Err(bad(format!("unsupported checkpoint version {v}"))),
@@ -953,6 +982,7 @@ impl Checkpoint {
         }
     }
 
+    /// Feature dimension of the contained model.
     pub fn dim(&self) -> usize {
         match self {
             Checkpoint::Sgd(s) => s.w.len(),

@@ -82,10 +82,15 @@
 //!          resp.model, resp.preds[0], resp.snapshot_version, resp.staleness);
 //! ```
 
+/// Binary model checkpoints (versioned save/load format).
 pub mod checkpoint;
+/// Snapshot publication from trainer to readers.
 pub mod publisher;
+/// Multi-model registry.
 pub mod registry;
+/// In-process prediction server.
 pub mod server;
+/// Immutable model snapshots for serving.
 pub mod snapshot;
 
 pub use checkpoint::{Checkpoint, CheckpointInfo, CheckpointSink};

@@ -19,6 +19,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::error::LockExt;
 use crate::serve::snapshot::ModelSnapshot;
 
 /// The swappable holder of the latest published model.
@@ -45,7 +46,10 @@ impl SnapshotCell {
 
     /// Swap in a freshly built snapshot; returns its assigned version.
     pub fn publish(&self, mut snap: ModelSnapshot) -> u64 {
-        let mut slot = self.slot.lock().expect("snapshot cell lock");
+        // slot holds a whole Arc: swaps are atomic, recovery is sound
+        let mut slot = self.slot.lock().recover_poisoned();
+        // the publication edge is the Release store below
+        // pol-lint: allow(L002, "read under slot mutex; Release store publishes")
         let version = self.seq.load(Ordering::Relaxed) + 1;
         snap.version = version;
         self.record_trained(snap.trained_instances);
@@ -59,7 +63,8 @@ impl SnapshotCell {
     /// Latest snapshot (locks; serving threads should prefer
     /// [`SnapshotReader`], which only locks when the version changed).
     pub fn load(&self) -> Arc<ModelSnapshot> {
-        Arc::clone(&self.slot.lock().expect("snapshot cell lock"))
+        // slot holds a whole Arc: swaps are atomic, recovery is sound
+        Arc::clone(&self.slot.lock().recover_poisoned())
     }
 
     /// Number of publishes so far.
@@ -91,6 +96,7 @@ pub struct SnapshotReader {
 }
 
 impl SnapshotReader {
+    /// A reader over `cell`.
     pub fn new(cell: Arc<SnapshotCell>) -> Self {
         let cached = cell.load();
         let cached_seq = cached.version;
@@ -115,6 +121,7 @@ impl SnapshotReader {
         &self.cached
     }
 
+    /// The shared cell this reader polls.
     pub fn cell(&self) -> &Arc<SnapshotCell> {
         &self.cell
     }
@@ -131,16 +138,19 @@ pub struct SnapshotPublisher {
 }
 
 impl SnapshotPublisher {
+    /// A publisher refreshing `cell` every `every` updates.
     pub fn new(cell: Arc<SnapshotCell>, every: u64) -> Self {
         let every = every.max(1);
         let next_at = cell.latest_trained() + every;
         SnapshotPublisher { cell, every, next_at, published: 0 }
     }
 
+    /// The shared cell this publisher writes.
     pub fn cell(&self) -> &Arc<SnapshotCell> {
         &self.cell
     }
 
+    /// Number of snapshots published so far.
     pub fn published(&self) -> u64 {
         self.published
     }

@@ -18,6 +18,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::error::LockExt;
 use crate::serve::publisher::{SnapshotCell, SnapshotReader};
 use crate::serve::snapshot::PredictScratch;
 
@@ -26,6 +27,9 @@ pub struct ModelRegistry {
     /// Bumped on every insert/remove; serving workers re-resolve their
     /// cached readers when it changes.
     version: AtomicU64,
+    /// Whole-`Arc` values in, whole-`Arc` values out — every critical
+    /// section leaves the map valid, so lock poisoning is recovered
+    /// (`recover_poisoned`) rather than cascading a peer's panic.
     models: RwLock<HashMap<String, Arc<SnapshotCell>>>,
 }
 
@@ -58,7 +62,7 @@ impl ModelRegistry {
         let prev = self
             .models
             .write()
-            .expect("registry lock")
+            .recover_poisoned()
             .insert(name.into(), cell);
         self.version.fetch_add(1, Ordering::Release);
         prev
@@ -67,7 +71,7 @@ impl ModelRegistry {
     /// Deregister a model; in-flight requests already resolved keep
     /// their snapshot, new requests get an unknown-model error.
     pub fn remove(&self, name: &str) -> Option<Arc<SnapshotCell>> {
-        let prev = self.models.write().expect("registry lock").remove(name);
+        let prev = self.models.write().recover_poisoned().remove(name);
         if prev.is_some() {
             self.version.fetch_add(1, Ordering::Release);
         }
@@ -76,7 +80,7 @@ impl ModelRegistry {
 
     /// Resolve a model name to its cell.
     pub fn get(&self, name: &str) -> Option<Arc<SnapshotCell>> {
-        self.models.read().expect("registry lock").get(name).cloned()
+        self.models.read().recover_poisoned().get(name).cloned()
     }
 
     /// Registered model names, sorted (stable reporting order).
@@ -84,7 +88,7 @@ impl ModelRegistry {
         let mut names: Vec<String> = self
             .models
             .read()
-            .expect("registry lock")
+            .recover_poisoned()
             .keys()
             .cloned()
             .collect();
@@ -92,10 +96,12 @@ impl ModelRegistry {
         names
     }
 
+    /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.read().expect("registry lock").len()
+        self.models.read().recover_poisoned().len()
     }
 
+    /// Whether no models are registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -121,6 +127,7 @@ pub struct ModelCache {
 }
 
 impl ModelCache {
+    /// A cache over `registry`'s current contents.
     pub fn new(registry: &ModelRegistry) -> ModelCache {
         ModelCache { models: HashMap::new(), version: registry.version() }
     }

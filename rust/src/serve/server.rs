@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::error::LockExt;
 use crate::linalg::SparseFeat;
 use crate::metrics::LatencyHistogram;
 use crate::serve::publisher::SnapshotCell;
@@ -39,6 +40,7 @@ pub const DEFAULT_MODEL: &str = "default";
 pub struct PredictResponse {
     /// Registry name of the model that answered.
     pub model: String,
+    /// One prediction per request row.
     pub preds: Vec<f64>,
     /// Version of the snapshot that answered this request.
     pub snapshot_version: u64,
@@ -82,10 +84,13 @@ struct Job {
 /// Serving metrics for one model (or the whole server).
 #[derive(Clone, Debug)]
 pub struct ModelStats {
+    /// Requests served.
     pub requests: u64,
+    /// Predictions returned.
     pub predictions: u64,
     /// Request latency (enqueue → reply), so queueing is included.
     pub latency: LatencyHistogram,
+    /// Largest snapshot staleness observed, in versions.
     pub max_staleness: u64,
 }
 
@@ -127,17 +132,22 @@ impl ModelStats {
 /// Aggregated serving metrics (merged across workers at shutdown).
 #[derive(Clone, Debug)]
 pub struct ServeStats {
+    /// Requests served.
     pub requests: u64,
+    /// Predictions returned.
     pub predictions: u64,
     /// Request latency (enqueue → reply), so queueing is included.
     pub latency: LatencyHistogram,
+    /// Largest snapshot staleness observed, in versions.
     pub max_staleness: u64,
+    /// Wall time the server has been up.
     pub elapsed: std::time::Duration,
     /// Per-model breakdown, keyed by registry name (sorted).
     pub per_model: BTreeMap<String, ModelStats>,
 }
 
 impl ServeStats {
+    /// Requests per second over `elapsed`.
     pub fn qps(&self) -> f64 {
         self.predictions as f64 / self.elapsed.as_secs_f64().max(1e-9)
     }
@@ -186,6 +196,7 @@ impl PredictClient {
             return Err(PredictError::Closed);
         }
         let (rtx, rrx) = mpsc::channel();
+        // pol-lint: allow(L002, "monitoring gauge, not a sync primitive")
         self.inflight_hint.fetch_add(1, Ordering::Relaxed);
         let job = Job {
             model: model.to_string(),
@@ -203,6 +214,7 @@ impl PredictClient {
         } else {
             Err(PredictError::Closed)
         };
+        // pol-lint: allow(L002, "monitoring gauge, not a sync primitive")
         self.inflight_hint.fetch_sub(1, Ordering::Relaxed);
         result
     }
@@ -233,6 +245,8 @@ impl PredictionServer {
                 std::thread::Builder::new()
                     .name(format!("serve-{wid}"))
                     .spawn(move || worker_loop(registry, rx, closed))
+                    // start() has no error surface to thread this into
+                    // pol-lint: allow(L001, "spawn fails only on resource exhaustion")
                     .expect("spawn serving thread"),
             );
         }
@@ -263,6 +277,7 @@ impl PredictionServer {
         PredictionServer::start(ModelRegistry::with_model(DEFAULT_MODEL, cell), threads)
     }
 
+    /// A client handle feeding this server's queue.
     pub fn client(&self) -> PredictClient {
         PredictClient {
             tx: self.tx.clone(),
@@ -277,6 +292,7 @@ impl PredictionServer {
         &self.registry
     }
 
+    /// Worker thread count.
     pub fn threads(&self) -> usize {
         self.workers.len()
     }
@@ -288,6 +304,7 @@ impl PredictionServer {
     /// reject-after-drain contract guarantees every submitted request
     /// is answered or cleanly rejected).
     pub fn inflight(&self) -> u64 {
+        // pol-lint: allow(L002, "monitoring gauge, not a sync primitive")
         self.inflight_hint.load(Ordering::Relaxed)
     }
 
@@ -310,7 +327,9 @@ impl PredictionServer {
         let mut total = ModelStats::new();
         let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
         for w in self.workers {
-            let ws = w.join().expect("serving thread panicked");
+            // a panicked worker has no stats to merge; keep joining the
+            // rest so shutdown still drains and reports the survivors
+            let Ok(ws) = w.join() else { continue };
             total.merge(&ws.total);
             for (name, stats) in ws.per_model {
                 per_model
@@ -321,7 +340,9 @@ impl PredictionServer {
         }
         // jobs that slipped into the queue after the workers left get
         // a clean reject instead of a reply channel that never settles
-        let rx = self.rx.lock().expect("serve queue lock");
+        // the receiver stays usable after a worker panic; recover so
+        // the final sweep can still reject queued jobs
+        let rx = self.rx.lock().recover_poisoned();
         while let Ok(job) = rx.try_recv() {
             total.requests += 1;
             let _ = job.reply.send(Err(PredictError::Closed));
@@ -381,7 +402,9 @@ fn worker_loop(
         // predicting; the timeout lets the worker notice a shutdown
         // even while clients still hold live senders
         let job = {
-            let guard = rx.lock().expect("serve queue lock");
+            // recover from a peer worker's panic: the shared receiver
+            // has no partial state to observe
+            let guard = rx.lock().recover_poisoned();
             match guard.recv_timeout(Duration::from_millis(25)) {
                 Ok(j) => j,
                 Err(mpsc::RecvTimeoutError::Timeout) => {

@@ -118,6 +118,7 @@ pub trait SnapshotPredict: Send + Sync + std::fmt::Debug {
 /// the centralized Minibatch/CG/SGD rules).
 #[derive(Clone, Debug)]
 pub struct CentralPredictor {
+    /// Flat weight vector.
     pub w: Vec<f32>,
 }
 
@@ -143,13 +144,16 @@ impl SnapshotPredict for CentralPredictor {
 /// A feature-sharded node tree (the §0.5.2 architectures).
 #[derive(Clone, Debug)]
 pub struct TreePredictor {
+    /// Node graph the predictor mirrors.
     pub graph: NodeGraph,
     /// The routing the leaves were trained under — the same
     /// [`ShardPlan`] the coordinator, pipeline, and codec hold.
     pub plan: ShardPlan,
     /// Per-node weight tables, indexed by node id (leaves first).
     pub weights: Vec<Vec<f32>>,
+    /// Clip the master output to `[0, 1]`.
     pub clip01: bool,
+    /// Whether a bias slot is present.
     pub bias: bool,
 }
 

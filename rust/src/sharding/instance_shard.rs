@@ -14,11 +14,14 @@ use crate::loss::Loss;
 use crate::lr::LrSchedule;
 
 #[derive(Clone, Debug)]
+/// Instance-level sharding baseline: train shards independently, average.
 pub struct InstanceSharder {
+    /// Number of shards.
     pub shards: usize,
 }
 
 impl InstanceSharder {
+    /// A sharder over `shards` shards.
     pub fn new(shards: usize) -> Self {
         assert!(shards >= 1);
         InstanceSharder { shards }

@@ -35,7 +35,9 @@
 //! against for online learning — partition instances, average
 //! parameters — kept for the comparison experiments.
 
+/// Instance-level (example) sharding baseline.
 pub mod instance_shard;
+/// First-class shard plans and migrations.
 pub mod plan;
 
 pub use instance_shard::InstanceSharder;

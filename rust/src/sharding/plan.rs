@@ -54,6 +54,7 @@ pub enum ShardKind {
 }
 
 impl ShardKind {
+    /// Canonical kind name.
     pub fn name(&self) -> &'static str {
         match self {
             ShardKind::Hash => "hash",
@@ -139,6 +140,7 @@ impl ShardPlan {
         ShardPlan::hash(topology.leaves(), dim)
     }
 
+    /// The sharding kind.
     pub fn kind(&self) -> ShardKind {
         self.kind
     }
@@ -321,8 +323,8 @@ impl ShardPlan {
     /// Inverse of [`Self::to_wire`]. `None` for an unknown kind byte or
     /// field values no constructor would accept.
     pub fn from_wire(bytes: &[u8; WIRE_LEN]) -> Option<ShardPlan> {
-        let shards = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
-        let dim = u64::from_le_bytes(bytes[5..13].try_into().unwrap());
+        let shards = crate::bytes::le_u32(&bytes[1..5]) as usize;
+        let dim = crate::bytes::le_u64(&bytes[5..13]);
         // feature indices are u32: a dim that cannot fit would make the
         // range arithmetic divide by a truncated zero
         if shards == 0 || dim == 0 || dim > u32::MAX as u64 {
@@ -346,10 +348,12 @@ pub struct ShardMigration {
 }
 
 impl ShardMigration {
+    /// The plan being migrated away from.
     pub fn from_plan(&self) -> ShardPlan {
         self.from
     }
 
+    /// The plan being migrated to.
     pub fn to_plan(&self) -> ShardPlan {
         self.to
     }

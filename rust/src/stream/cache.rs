@@ -23,6 +23,7 @@ pub struct CacheSource {
 }
 
 impl CacheSource {
+    /// Open the cache file at `path`.
     pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
         let path = path.as_ref();
         let file = File::open(path)?;

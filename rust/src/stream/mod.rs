@@ -151,6 +151,7 @@ impl InstanceBatch {
         self.len
     }
 
+    /// Whether the batch holds no instances.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -160,10 +161,12 @@ impl InstanceBatch {
         self.start
     }
 
+    /// The `i`-th instance.
     pub fn get(&self, i: usize) -> &Instance {
         &self.items[..self.len][i]
     }
 
+    /// Iterate the batch in order.
     pub fn iter(&self) -> std::slice::Iter<'_, Instance> {
         self.items[..self.len].iter()
     }

@@ -135,6 +135,7 @@ impl Pipeline {
             let r = consume(&feed);
             // close both channels so a blocked producer unblocks
             drop(feed);
+            // pol-lint: allow(L001, "a parser panic must propagate, not hide")
             producer.join().expect("pipeline parser thread panicked");
             r
         })?;

@@ -33,6 +33,7 @@ pub struct RcvLikeSource {
 }
 
 impl RcvLikeSource {
+    /// A streaming source over the RCV1-like synthetic distribution.
     pub fn new(cfg: SynthConfig) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let hasher = FeatureHasher::new(cfg.hash_bits);
@@ -123,6 +124,7 @@ impl WebspamLikeSource {
         Self::with_blocks(cfg, 32, 0.7)
     }
 
+    /// A source with `blocks` correlated feature blocks mixed by `rho`.
     pub fn with_blocks(cfg: SynthConfig, blocks: usize, rho: f64) -> Self {
         let mut rng = Rng::new(cfg.seed.wrapping_add(0x5EB));
         let hasher = FeatureHasher::new(cfg.hash_bits);

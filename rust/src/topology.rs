@@ -15,12 +15,16 @@
 /// Declarative topology.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
+    /// One master over `shards` leaf workers.
     TwoLayer { shards: usize },
+    /// Balanced binary reduction tree over `leaves` workers.
     BinaryTree { leaves: usize },
+    /// K-ary reduction tree: `leaves` workers, `fanin` children per internal node.
     KAry { leaves: usize, fanin: usize },
 }
 
 impl Topology {
+    /// Number of leaf (worker) nodes.
     pub fn leaves(&self) -> usize {
         match *self {
             Topology::TwoLayer { shards } => shards,
@@ -42,6 +46,7 @@ impl Topology {
         }
     }
 
+    /// Short name of the topology kind.
     pub fn kind_name(&self) -> &'static str {
         match self {
             Topology::TwoLayer { .. } => "two-layer",
@@ -50,6 +55,7 @@ impl Topology {
         }
     }
 
+    /// Materialise the node graph (parents, children, root).
     pub fn build(&self) -> NodeGraph {
         match *self {
             Topology::TwoLayer { shards } => NodeGraph::karyfrom(shards, shards),
@@ -63,9 +69,13 @@ impl Topology {
 /// built bottom-up layer by layer; `root` is the final combiner.
 #[derive(Clone, Debug)]
 pub struct NodeGraph {
+    /// Parent of each node (`None` for the root).
     pub parent: Vec<Option<usize>>,
+    /// Children of each node.
     pub children: Vec<Vec<usize>>,
+    /// Number of leaf nodes.
     pub leaves: usize,
+    /// Root node id.
     pub root: usize,
 }
 
@@ -99,10 +109,12 @@ impl NodeGraph {
         NodeGraph { parent, children, leaves, root }
     }
 
+    /// Total node count.
     pub fn num_nodes(&self) -> usize {
         self.parent.len()
     }
 
+    /// Whether `id` is a leaf.
     pub fn is_leaf(&self, id: usize) -> bool {
         id < self.leaves
     }

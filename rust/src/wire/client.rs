@@ -68,6 +68,7 @@ impl From<FrameError> for WireError {
 /// One answered predict call.
 #[derive(Clone, Debug)]
 pub struct WireResponse {
+    /// One prediction per submitted row.
     pub preds: Vec<f64>,
     /// Version of the snapshot that answered.
     pub snapshot_version: u64,
@@ -114,6 +115,7 @@ impl WireClient {
     fn begin(&mut self, op: Op) -> u64 {
         let id = self.next_id;
         self.next_id = self.next_id.wrapping_add(1);
+        // pol-lint: allow(L006, "Op discriminants are u8 by definition")
         self.out.start(op as u8, 0, id);
         id
     }
@@ -160,6 +162,7 @@ impl WireClient {
                 "response does not match the request id/op",
             )));
         }
+        // pol-lint: allow(L006, "Op discriminants are u8 by definition")
         if frame.op != op as u8 || frame.req_id != req_id {
             return Err(WireError::Frame(FrameError::BadPayload(
                 "response does not match the request id/op",
@@ -260,6 +263,7 @@ impl WireClient {
         {
             let p = self.out.payload();
             put_name(p, model);
+            // pol-lint: allow(L006, "batch len checked against MAX_BATCH above")
             put_u32(p, batch.len() as u32);
         }
         for x in batch {
@@ -311,7 +315,7 @@ impl WireClient {
                     error = Some(e);
                     break;
                 }
-                let id = pending.pop_front().expect("window non-empty");
+                let Some(id) = pending.pop_front() else { break };
                 match self.read_predict_response(id) {
                     Ok(r) => responses.push(r),
                     Err(e) => {

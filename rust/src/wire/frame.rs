@@ -111,6 +111,7 @@ pub enum Op {
 }
 
 impl Op {
+    /// Decode an opcode byte; `None` for unknown ops.
     pub fn from_u8(op: u8) -> Option<Op> {
         match op {
             1 => Some(Op::Predict),
@@ -208,6 +209,7 @@ pub(crate) fn put_f64(out: &mut Vec<u8>, v: f64) {
 /// can never wrap into a desynced frame.
 pub(crate) fn put_name(out: &mut Vec<u8>, name: &str) {
     debug_assert!(name.len() <= MAX_NAME);
+    // pol-lint: allow(L006, "MAX_NAME = 255; encoders filter longer names")
     out.push(name.len() as u8);
     out.extend_from_slice(name.as_bytes());
 }
@@ -220,14 +222,17 @@ pub(crate) struct Cur<'a> {
 }
 
 impl<'a> Cur<'a> {
+    /// A cursor over `b`.
     pub fn new(b: &'a [u8]) -> Cur<'a> {
         Cur { b }
     }
 
+    /// Bytes left.
     pub fn remaining(&self) -> usize {
         self.b.len()
     }
 
+    /// Take the next `n` bytes, erroring on underrun.
     pub fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
         if n > self.b.len() {
             return Err(FrameError::Truncated);
@@ -237,32 +242,39 @@ impl<'a> Cur<'a> {
         Ok(head)
     }
 
+    /// Read one byte.
     pub fn take_u8(&mut self) -> Result<u8, FrameError> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian `u32`.
     pub fn take_u32(&mut self) -> Result<u32, FrameError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(crate::bytes::le_u32(self.take(4)?))
     }
 
+    /// Read a little-endian `u64`.
     pub fn take_u64(&mut self) -> Result<u64, FrameError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(crate::bytes::le_u64(self.take(8)?))
     }
 
+    /// Read a little-endian `f32`.
     pub fn take_f32(&mut self) -> Result<f32, FrameError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(crate::bytes::le_f32(self.take(4)?))
     }
 
+    /// Read a little-endian `f64`.
     pub fn take_f64(&mut self) -> Result<f64, FrameError> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(crate::bytes::le_f64(self.take(8)?))
     }
 
+    /// Read a length-prefixed UTF-8 name.
     pub fn take_name(&mut self) -> Result<&'a str, FrameError> {
         let len = self.take_u8()? as usize;
         std::str::from_utf8(self.take(len)?)
             .map_err(|_| FrameError::BadPayload("model name is not UTF-8"))
     }
 
+    /// Error unless the payload was fully consumed.
     pub fn finish(self) -> Result<(), FrameError> {
         if self.b.is_empty() {
             Ok(())
@@ -283,6 +295,7 @@ pub struct FrameWriter {
 }
 
 impl FrameWriter {
+    /// An empty writer.
     pub fn new() -> FrameWriter {
         FrameWriter { body: Vec::with_capacity(256) }
     }
@@ -309,14 +322,17 @@ impl FrameWriter {
     pub fn finish_to(&mut self, out: &mut impl Write) -> io::Result<usize> {
         let sum = fnv1a64(&self.body);
         put_u64(&mut self.body, sum);
-        let len = self.body.len() as u64;
-        if len > MAX_FRAME as u64 {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidInput,
-                format!("frame body {len} bytes exceeds cap {MAX_FRAME}"),
-            ));
-        }
-        out.write_all(&(len as u32).to_le_bytes())?;
+        let len = self.body.len();
+        let len32 = u32::try_from(len)
+            .ok()
+            .filter(|&n| n <= MAX_FRAME)
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("frame body {len} bytes exceeds cap {MAX_FRAME}"),
+                )
+            })?;
+        out.write_all(&len32.to_le_bytes())?;
         out.write_all(&self.body)?;
         Ok(4 + self.body.len())
     }
@@ -336,8 +352,11 @@ pub struct Frame<'a> {
     /// Raw op byte (map through [`Op::from_u8`]; unknown ops get a
     /// typed error response rather than a decode failure).
     pub op: u8,
+    /// Response status byte (0 = ok).
     pub status: u8,
+    /// Request id echoed back to the client.
     pub req_id: u64,
+    /// Opcode-specific payload bytes.
     pub payload: &'a [u8],
     /// Wire size of this frame including the length prefix.
     pub wire_bytes: usize,
@@ -349,6 +368,7 @@ pub struct FrameBuf {
 }
 
 impl FrameBuf {
+    /// An empty reusable receive buffer.
     pub fn new() -> FrameBuf {
         FrameBuf { body: Vec::with_capacity(256) }
     }
@@ -438,21 +458,23 @@ pub fn read_frame<'a>(
     }
     let body = &buf.body[..];
     let (content, sum_bytes) = body.split_at(body.len() - 8);
-    let sum = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    let sum = crate::bytes::le_u64(sum_bytes);
     if fnv1a64(content) != sum {
         return Err(FrameError::ChecksumMismatch);
     }
     if content[0..4] != MAGIC {
-        return Err(FrameError::BadMagic(content[0..4].try_into().unwrap()));
+        let mut magic = [0u8; 4];
+        magic.copy_from_slice(&content[0..4]);
+        return Err(FrameError::BadMagic(magic));
     }
-    let version = u16::from_le_bytes(content[4..6].try_into().unwrap());
+    let version = crate::bytes::le_u16(&content[4..6]);
     if version != PROTO_VERSION {
         return Err(FrameError::BadVersion(version));
     }
     Ok(Some(Frame {
         op: content[6],
         status: content[7],
-        req_id: u64::from_le_bytes(content[8..16].try_into().unwrap()),
+        req_id: crate::bytes::le_u64(&content[8..16]),
         payload: &content[16..],
         wire_bytes: 4 + len as usize,
     }))
@@ -463,16 +485,19 @@ pub fn read_frame<'a>(
 /// Append one instance (`nnz | nnz × (idx, val)`) to a payload.
 /// Errors if the instance exceeds [`MAX_FEATURES`].
 pub fn put_instance(out: &mut Vec<u8>, x: &[SparseFeat]) -> io::Result<()> {
-    if x.len() as u64 > MAX_FEATURES as u64 {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidInput,
-            format!(
-                "instance has {} features (wire cap {MAX_FEATURES})",
-                x.len()
-            ),
-        ));
-    }
-    put_u32(out, x.len() as u32);
+    let nnz = u32::try_from(x.len())
+        .ok()
+        .filter(|&n| n <= MAX_FEATURES)
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "instance has {} features (wire cap {MAX_FEATURES})",
+                    x.len()
+                ),
+            )
+        })?;
+    put_u32(out, nnz);
     for &(i, v) in x {
         put_u32(out, i);
         put_f32(out, v);
@@ -594,6 +619,7 @@ pub fn put_predict_response(
     snapshot_version: u64,
     staleness: u64,
 ) {
+    // pol-lint: allow(L006, "preds mirrors a decoded batch, len <= MAX_BATCH")
     put_u32(out, preds.len() as u32);
     for &p in preds {
         put_f64(out, p);
@@ -633,26 +659,40 @@ pub fn decode_predict_response(
 /// pre-derived from the server's [`crate::metrics::LatencyHistogram`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelStatsReport {
+    /// Model name.
     pub name: String,
+    /// Requests served.
     pub requests: u64,
+    /// Predictions returned.
     pub predictions: u64,
+    /// Median request latency in nanoseconds.
     pub p50_ns: u64,
+    /// 99th-percentile request latency in nanoseconds.
     pub p99_ns: u64,
+    /// Largest request latency in nanoseconds.
     pub max_ns: u64,
+    /// Largest snapshot staleness observed.
     pub max_staleness: u64,
 }
 
 /// Wire-level stats as reported by the [`Op::Stats`] admin op.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StatsReport {
+    /// Bytes read from clients.
     pub bytes_in: u64,
+    /// Bytes written to clients.
     pub bytes_out: u64,
+    /// Frames decoded.
     pub frames_in: u64,
+    /// Frames sent.
     pub frames_out: u64,
+    /// Frames rejected by the decoder.
     pub decode_errors: u64,
     /// Connections accepted over the server's lifetime.
     pub connections: u64,
+    /// Currently open connections.
     pub active_connections: u64,
+    /// Server uptime in microseconds.
     pub uptime_us: u64,
     /// Registry generation at report time (bumps on every insert,
     /// replace, or remove) — a scraper can detect hot-swaps from the
@@ -660,6 +700,7 @@ pub struct StatsReport {
     pub registry_version: u64,
     /// Number of models the registry held at report time.
     pub registry_models: u64,
+    /// Per-model breakdowns.
     pub models: Vec<ModelStatsReport>,
 }
 
@@ -741,6 +782,7 @@ fn wire_named<T>(items: &[T], name: impl Fn(&T) -> &str) -> Vec<&T> {
     items.iter().filter(|m| name(m).len() <= MAX_NAME).collect()
 }
 
+/// Encode a stats report payload.
 pub fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
     put_u64(out, s.bytes_in);
     put_u64(out, s.bytes_out);
@@ -753,6 +795,7 @@ pub fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
     put_u64(out, s.registry_version);
     put_u64(out, s.registry_models);
     let models = wire_named(&s.models, |m| &m.name);
+    // pol-lint: allow(L006, "registry model count is far below u32::MAX")
     put_u32(out, models.len() as u32);
     for m in models {
         put_name(out, &m.name);
@@ -765,6 +808,7 @@ pub fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
     }
 }
 
+/// Decode a stats report payload.
 pub fn decode_stats(payload: &[u8]) -> Result<StatsReport, FrameError> {
     let mut cur = Cur::new(payload);
     let mut s = StatsReport {
@@ -804,15 +848,22 @@ pub fn decode_stats(payload: &[u8]) -> Result<StatsReport, FrameError> {
 /// One registry entry as reported by the [`Op::ListModels`] admin op.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelEntry {
+    /// Model name.
     pub name: String,
+    /// Feature dimension.
     pub dim: u64,
+    /// Parameter count.
     pub params: u64,
+    /// Version of the served snapshot.
     pub snapshot_version: u64,
+    /// Instances trained into the snapshot.
     pub trained_instances: u64,
 }
 
+/// Encode a model-list payload.
 pub fn put_models(out: &mut Vec<u8>, models: &[ModelEntry]) {
     let models = wire_named(models, |m| &m.name);
+    // pol-lint: allow(L006, "registry model count is far below u32::MAX")
     put_u32(out, models.len() as u32);
     for m in models {
         put_name(out, &m.name);
@@ -823,6 +874,7 @@ pub fn put_models(out: &mut Vec<u8>, models: &[ModelEntry]) {
     }
 }
 
+/// Decode a model-list payload.
 pub fn decode_models(payload: &[u8]) -> Result<Vec<ModelEntry>, FrameError> {
     let mut cur = Cur::new(payload);
     let count = cur.take_u32()?;

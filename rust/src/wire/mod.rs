@@ -66,8 +66,11 @@
 //! server.shutdown();
 //! ```
 
+/// Blocking client for the framed protocol.
 pub mod client;
+/// Frame format: header, opcodes, payload codecs.
 pub mod frame;
+/// TCP server speaking the framed protocol.
 pub mod server;
 
 pub use client::{WireClient, WireError, WireResponse};

@@ -29,12 +29,18 @@
 //! histograms are readable live through [`WireServer::stats`] or
 //! remotely via the [`Op::Stats`] admin op.
 
+// Every Relaxed here is monotonic telemetry (byte/frame/connection
+// counters, the active-handler gauge); cross-thread hand-off of real
+// data goes through channels and mutexes, never through these atomics.
+// pol-lint: allow-file(L002, "wire counters are monotonic telemetry")
+
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::error::LockExt;
 use crate::obs::{Exposition, HistogramSnapshot, Obs};
 use crate::serve::registry::{ModelCache, ModelRegistry};
 use crate::serve::server::ModelStats;
@@ -142,7 +148,8 @@ impl Shared {
 
     fn stats(&self) -> StatsReport {
         let models = {
-            let per_model = self.per_model.lock().expect("wire stats lock");
+            // merged monotonic counters; valid after any partial merge
+            let per_model = self.per_model.lock().recover_poisoned();
             per_model
                 .iter()
                 .map(|(name, m)| ModelStatsReport {
@@ -224,8 +231,9 @@ impl WireServer {
                     .name(format!("wire-{hid}"))
                     .spawn(move || loop {
                         let stream = {
-                            let guard =
-                                conn_rx.lock().expect("wire conn queue lock");
+                            // the shared receiver has no partial state;
+                            // recover from a peer handler's panic
+                            let guard = conn_rx.lock().recover_poisoned();
                             guard.recv()
                         };
                         match stream {
@@ -236,8 +244,7 @@ impl WireServer {
                             }
                             Err(_) => break, // acceptor gone: shutting down
                         }
-                    })
-                    .expect("spawn wire handler"),
+                    })?,
             );
         }
         let acceptor_shared = Arc::clone(&shared);
@@ -270,8 +277,7 @@ impl WireServer {
                     }
                 }
                 // conn_tx drops here; idle handlers exit on recv error
-            })
-            .expect("spawn wire acceptor");
+            })?;
         Ok(WireServer { shared, acceptor: Some(acceptor), handlers })
     }
 
@@ -368,7 +374,8 @@ fn flush_stats(
     if local.values().all(|m| m.requests == 0) {
         return;
     }
-    let mut per_model = shared.per_model.lock().expect("wire stats lock");
+    // merged monotonic counters; valid after any partial merge
+    let mut per_model = shared.per_model.lock().recover_poisoned();
     for (name, ms) in local.iter_mut() {
         if ms.requests == 0 {
             continue;
@@ -429,7 +436,8 @@ fn render_metrics(shared: &Shared) -> String {
     exp.point("pol_serve_registry_version", &[], shared.registry.version());
     exp.point("pol_serve_models", &[], shared.registry.len() as u64);
     {
-        let per_model = shared.per_model.lock().expect("wire stats lock");
+        // merged monotonic counters; valid after any partial merge
+        let per_model = shared.per_model.lock().recover_poisoned();
         for (name, m) in per_model.iter() {
             let labels = [("model", name.as_str())];
             exp.point("pol_serve_requests_total", &labels, m.requests);
@@ -735,6 +743,7 @@ fn handle_conn(
             shared,
             &mut out,
             &mut writer,
+            // pol-lint: allow(L006, "Op discriminants are u8 by definition")
             Op::Shutdown as u8,
             STATUS_SHUTTING_DOWN,
             0,

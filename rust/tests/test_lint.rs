@@ -1,0 +1,305 @@
+//! `pol lint` — per-rule fixtures (violating / compliant / waived),
+//! waiver semantics, the CLI exit contract, and the self-check that the
+//! crate's own source lints clean.
+
+use std::process::Command;
+
+use pol::analyze::{lint_file, lint_tree, Rule};
+
+fn pol() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pol"))
+}
+
+/// Lint `text` under the rule-scoping path `rel` and return
+/// `(rule, line, col)` triples.
+fn findings(rel: &str, text: &str) -> Vec<(Rule, usize, usize)> {
+    lint_file(rel, text).iter().map(|f| (f.rule, f.line, f.col)).collect()
+}
+
+// ---- L001: unwrap/expect ---------------------------------------------
+
+#[test]
+fn l001_flags_unwrap_and_expect() {
+    let bad = "fn f() {\n    x.unwrap();\n}\n";
+    assert_eq!(findings("foo.rs", bad), vec![(Rule::L001, 2, 6)]);
+
+    let bad = "fn f() {\n    x.expect(\"boom\");\n}\n";
+    assert_eq!(findings("foo.rs", bad), vec![(Rule::L001, 2, 6)]);
+}
+
+#[test]
+fn l001_clean_code_passes() {
+    let ok = "fn f() -> Option<u8> {\n    None\n}\n";
+    assert!(findings("foo.rs", ok).is_empty());
+}
+
+#[test]
+fn l001_waiver_on_line_above_suppresses() {
+    let waived = "fn f() {\n    // pol-lint: allow(L001, \"fixture\")\n    x.unwrap();\n}\n";
+    assert!(findings("foo.rs", waived).is_empty());
+}
+
+#[test]
+fn l001_waiver_on_same_line_suppresses() {
+    let waived =
+        "fn f() {\n    x.unwrap(); // pol-lint: allow(L001, \"fixture\")\n}\n";
+    assert!(findings("foo.rs", waived).is_empty());
+}
+
+#[test]
+fn waiver_without_reason_does_not_waive() {
+    let bad = "fn f() {\n    // pol-lint: allow(L001)\n    x.unwrap();\n}\n";
+    assert_eq!(findings("foo.rs", bad), vec![(Rule::L001, 3, 6)]);
+}
+
+#[test]
+fn waiver_does_not_reach_two_lines_down() {
+    let bad = "fn f() {\n    // pol-lint: allow(L001, \"fixture\")\n    let y = 1;\n    x.unwrap();\n}\n";
+    assert_eq!(findings("foo.rs", bad), vec![(Rule::L001, 4, 6)]);
+}
+
+#[test]
+fn strings_and_comments_never_trigger_rules() {
+    let ok = "fn f() {\n    let s = \".unwrap()\";\n    // also fine: x.unwrap()\n}\n";
+    assert!(findings("foo.rs", ok).is_empty());
+}
+
+#[test]
+fn cfg_test_code_is_exempt() {
+    let ok = "fn a() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        x.unwrap();\n    }\n}\n";
+    assert!(findings("foo.rs", ok).is_empty());
+}
+
+// ---- L002: Relaxed ordering ------------------------------------------
+
+#[test]
+fn l002_flags_relaxed_outside_obs() {
+    let bad = "fn f() {\n    a.load(Ordering::Relaxed);\n}\n";
+    assert_eq!(findings("coordinator/mod.rs", bad), vec![(Rule::L002, 2, 12)]);
+}
+
+#[test]
+fn l002_obs_and_metrics_are_in_scope_for_relaxed() {
+    let text = "fn f() {\n    a.load(Ordering::Relaxed);\n}\n";
+    assert!(findings("obs/registry.rs", text).is_empty());
+    assert!(findings("metrics.rs", text).is_empty());
+}
+
+#[test]
+fn l002_file_waiver_covers_the_whole_file() {
+    let waived = "// pol-lint: allow-file(L002, \"fixture\")\nfn f() {\n    a.load(Ordering::Relaxed);\n}\nfn g() {\n    b.load(Ordering::Relaxed);\n}\n";
+    assert!(findings("coordinator/mod.rs", waived).is_empty());
+}
+
+// ---- L003: cap-before-allocate ---------------------------------------
+
+#[test]
+fn l003_flags_unguarded_alloc_in_decode_fn() {
+    let bad = "fn decode_body(n: usize) -> Vec<u8> {\n    let v = Vec::with_capacity(n);\n    v\n}\n";
+    assert_eq!(findings("wire/frame.rs", bad), vec![(Rule::L003, 2, 18)]);
+}
+
+#[test]
+fn l003_cap_check_before_alloc_passes() {
+    let ok = "fn decode_body(n: usize) -> Vec<u8> {\n    if n > MAX_BODY { return Vec::new(); }\n    let v = Vec::with_capacity(n);\n    v\n}\n";
+    assert!(findings("wire/frame.rs", ok).is_empty());
+
+    let ok = "fn take_body(c: &mut Cur) -> Vec<u8> {\n    let n = c.remaining();\n    let v = Vec::with_capacity(n);\n    v\n}\n";
+    assert!(findings("wire/frame.rs", ok).is_empty());
+}
+
+#[test]
+fn l003_only_decode_like_fns_and_codec_files_are_in_scope() {
+    let encode = "fn put_body(n: usize) -> Vec<u8> {\n    Vec::with_capacity(n)\n}\n";
+    assert!(findings("wire/frame.rs", encode).is_empty());
+
+    let elsewhere = "fn decode_body(n: usize) -> Vec<u8> {\n    Vec::with_capacity(n)\n}\n";
+    assert!(findings("data/parser.rs", elsewhere).is_empty());
+}
+
+#[test]
+fn l003_waiver_suppresses() {
+    let waived = "fn decode_body(n: usize) -> Vec<u8> {\n    // pol-lint: allow(L003, \"fixture\")\n    let v = Vec::with_capacity(n);\n    v\n}\n";
+    assert!(findings("wire/frame.rs", waived).is_empty());
+}
+
+// ---- L004: wall clock ------------------------------------------------
+
+#[test]
+fn l004_flags_wall_clock_in_deterministic_paths() {
+    let bad = "fn f() {\n    let t = std::time::Instant::now();\n}\n";
+    assert_eq!(findings("model/mod.rs", bad), vec![(Rule::L004, 2, 24)]);
+
+    let bad = "fn f() {\n    let t = SystemTime::now();\n}\n";
+    assert_eq!(findings("stream/mod.rs", bad), vec![(Rule::L004, 2, 13)]);
+}
+
+#[test]
+fn l004_other_modules_may_use_the_clock() {
+    let text = "fn f() {\n    let t = std::time::Instant::now();\n}\n";
+    assert!(findings("serve/server.rs", text).is_empty());
+    assert!(findings("metrics.rs", text).is_empty());
+}
+
+#[test]
+fn l004_waiver_suppresses() {
+    let waived = "fn f() {\n    // pol-lint: allow(L004, \"fixture\")\n    let t = std::time::Instant::now();\n}\n";
+    assert!(findings("coordinator/mod.rs", waived).is_empty());
+}
+
+// ---- L005: floats on record paths ------------------------------------
+
+#[test]
+fn l005_flags_floats_in_obs_record_fns() {
+    let bad = "fn record_x(v: u64) {\n    let z = v as f64;\n    drop(z);\n}\n";
+    assert_eq!(findings("obs/registry.rs", bad), vec![(Rule::L005, 2, 18)]);
+}
+
+#[test]
+fn l005_read_paths_and_other_modules_may_use_floats() {
+    let snapshot = "fn snapshot_mean(s: u64, n: u64) -> f64 {\n    let m = s as f64;\n    m\n}\n";
+    assert!(findings("obs/registry.rs", snapshot).is_empty());
+
+    let elsewhere = "fn record_x(v: u64) {\n    let z = v as f64;\n    drop(z);\n}\n";
+    assert!(findings("metrics.rs", elsewhere).is_empty());
+}
+
+#[test]
+fn l005_integer_record_path_passes() {
+    let ok = "fn record_x(v: u64) {\n    let z = v + 1;\n    drop(z);\n}\n";
+    assert!(findings("obs/registry.rs", ok).is_empty());
+}
+
+#[test]
+fn l005_waiver_suppresses() {
+    let waived = "fn record_x(v: u64) {\n    // pol-lint: allow(L005, \"fixture\")\n    let z = v as f64;\n    drop(z);\n}\n";
+    assert!(findings("obs/registry.rs", waived).is_empty());
+}
+
+// ---- L006: narrowing casts -------------------------------------------
+
+#[test]
+fn l006_flags_narrowing_casts_on_codec_files() {
+    let bad = "fn f(x: usize) -> u32 {\n    x as u32\n}\n";
+    assert_eq!(findings("wire/client.rs", bad), vec![(Rule::L006, 2, 7)]);
+}
+
+#[test]
+fn l006_widening_casts_and_other_files_pass() {
+    let widening = "fn f(x: u32) -> u64 {\n    x as u64\n}\n";
+    assert!(findings("wire/frame.rs", widening).is_empty());
+
+    let elsewhere = "fn f(x: usize) -> u32 {\n    x as u32\n}\n";
+    assert!(findings("learner/sgd.rs", elsewhere).is_empty());
+}
+
+#[test]
+fn l006_waiver_suppresses() {
+    let waived =
+        "fn f(x: usize) -> u32 {\n    x as u32 // pol-lint: allow(L006, \"fixture\")\n}\n";
+    assert!(findings("wire/server.rs", waived).is_empty());
+}
+
+// ---- multiple findings sort stably -----------------------------------
+
+#[test]
+fn lint_tree_sorts_findings_by_rule_then_location() {
+    let dir = std::env::temp_dir().join("pol_lint_sorted");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("b.rs"),
+        "fn f() {\n    x.unwrap();\n    y.unwrap();\n}\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("a.rs"), "fn f() {\n    x.unwrap();\n}\n").unwrap();
+
+    let found = lint_tree(&dir).expect("lint tree");
+    let locs: Vec<(String, usize)> =
+        found.iter().map(|f| (f.file.clone(), f.line)).collect();
+    assert_eq!(
+        locs,
+        vec![("a.rs".into(), 2), ("b.rs".into(), 2), ("b.rs".into(), 3)]
+    );
+}
+
+// ---- the self-check: this crate lints clean --------------------------
+
+#[test]
+fn the_crate_lints_its_own_source_clean() {
+    let root =
+        std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let found = lint_tree(root).expect("lint tree");
+    assert!(
+        found.is_empty(),
+        "pol lint found violations in the crate's own source:\n{}",
+        found
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+// ---- CLI exit contract -----------------------------------------------
+
+#[test]
+fn cli_exits_nonzero_on_seeded_violation() {
+    let dir = std::env::temp_dir().join("pol_lint_seeded");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.rs"), "fn f() {\n    x.unwrap();\n}\n")
+        .unwrap();
+
+    let out = pol()
+        .args(["lint", "--root", dir.to_str().unwrap()])
+        .output()
+        .expect("run pol");
+    assert!(!out.status.success(), "seeded violation must fail the lint");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("L001"), "stdout names the rule: {text}");
+    assert!(text.contains("bad.rs:2:6"), "stdout locates it: {text}");
+}
+
+#[test]
+fn cli_exits_zero_on_clean_tree() {
+    let dir = std::env::temp_dir().join("pol_lint_clean");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("ok.rs"), "fn f() -> u8 {\n    0\n}\n").unwrap();
+
+    let out = pol()
+        .args(["lint", "--root", dir.to_str().unwrap()])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "clean tree must pass");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("clean"), "stdout says clean: {text}");
+    assert!(
+        text.contains("0 waiver(s) in effect"),
+        "clean runs report the waivers in effect: {text}"
+    );
+}
+
+#[test]
+fn cli_reports_waivers_in_effect_on_clean_trees() {
+    let dir = std::env::temp_dir().join("pol_lint_waived");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("waived.rs"),
+        "fn f() {\n    // pol-lint: allow(L001, \"fixture\")\n    x.unwrap();\n}\n",
+    )
+    .unwrap();
+
+    let out = pol()
+        .args(["lint", "--root", dir.to_str().unwrap()])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "waived violation passes");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("1 waiver(s) in effect"),
+        "waiver is reported: {text}"
+    );
+}
