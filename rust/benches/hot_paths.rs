@@ -1,14 +1,21 @@
 //! Micro-benchmarks of the L3 hot paths (the perf-pass §Perf targets):
-//! sparse dot / saxpy, feature split, schedule iteration, lazy-CG step,
-//! and the coordinator per-instance cost.
+//! sparse dot / saxpy across the simd dispatch tiers, the frame/
+//! checkpoint byte scans, feature split, schedule iteration, lazy-CG
+//! step, and the coordinator per-instance cost.
+//!
+//! `--bench-json <path>` emits every kernel row for the
+//! perf-trajectory file (`BENCH_hot_paths.json` at the repo root);
+//! `POL_SIMD=scalar` pins dispatch so the same rows measure the
+//! reference kernels on identical inputs.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use pol::linalg::{sparse_dot, sparse_saxpy};
 use pol::rng::Rng;
+use pol::simd;
 
-fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     // warmup
     for _ in 0..iters / 10 + 1 {
         f();
@@ -19,10 +26,25 @@ fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
     }
     let per = t.elapsed().as_secs_f64() / iters as f64;
     println!("{name:<34} {:>12.1} ns/iter", per * 1e9);
+    per
+}
+
+/// A kernel row for the json output: one call is one "instance", and
+/// the p50/p99 slots carry the mean per-call latency (a tight
+/// micro-loop has no meaningful tail).
+fn row(rows: &mut Vec<common::BenchRow>, name: &str, per_secs: f64) {
+    rows.push(common::BenchRow::new(
+        name,
+        1.0 / per_secs.max(1e-12),
+        per_secs * 1e6,
+        per_secs * 1e6,
+    ));
 }
 
 fn main() {
     common::header("hot paths (ns/iter)");
+    println!("simd dispatch tier: {}", simd::tier().name());
+    let mut rows: Vec<common::BenchRow> = Vec::new();
     let mut rng = Rng::new(1);
     let dim = 1 << 18;
     let mut w = vec![0.0f32; dim];
@@ -30,19 +52,99 @@ fn main() {
         .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
         .collect();
 
-    bench("sparse_dot (nnz=100, dim=2^18)", 2_000_000, || {
+    // -- the gather kernels, scalar reference vs dispatched ----------
+    let per = bench("sparse_dot scalar (nnz=100)", 2_000_000, || {
+        std::hint::black_box(simd::sparse_dot_scalar(
+            &w,
+            std::hint::black_box(&x),
+        ));
+    });
+    row(&mut rows, "sparse_dot/scalar", per);
+    let per = bench("sparse_dot unrolled (nnz=100)", 2_000_000, || {
+        std::hint::black_box(simd::sparse_dot_unrolled(
+            &w,
+            std::hint::black_box(&x),
+        ));
+    });
+    row(&mut rows, "sparse_dot/unrolled", per);
+    let per = bench("sparse_dot dispatched (nnz=100)", 2_000_000, || {
         std::hint::black_box(sparse_dot(&w, std::hint::black_box(&x)));
     });
-    bench("sparse_saxpy (nnz=100)", 2_000_000, || {
+    row(&mut rows, &format!("sparse_dot/{}", simd::tier().name()), per);
+    // off the default path: reassociated 4-lane sums (not
+    // bit-identical to the scalar fold, benchmark-only)
+    let per = bench("sparse_dot reassoc (nnz=100)", 2_000_000, || {
+        std::hint::black_box(simd::sparse_dot_reassoc(
+            &w,
+            std::hint::black_box(&x),
+        ));
+    });
+    row(&mut rows, "sparse_dot/reassoc-off-path", per);
+
+    let per = bench("sparse_saxpy scalar (nnz=100)", 2_000_000, || {
+        simd::sparse_saxpy_scalar(&mut w, 1e-9, std::hint::black_box(&x));
+    });
+    row(&mut rows, "sparse_saxpy/scalar", per);
+    let per = bench("sparse_saxpy dispatched (nnz=100)", 2_000_000, || {
         sparse_saxpy(&mut w, 1e-9, std::hint::black_box(&x));
     });
+    row(&mut rows, &format!("sparse_saxpy/{}", simd::tier().name()), per);
+
+    // -- aligned vs unaligned weight storage (same dispatched dot) --
+    let wa = simd::AlignedTable::from_slice(&w);
+    let per = bench("sparse_dot aligned table", 2_000_000, || {
+        std::hint::black_box(sparse_dot(&wa, std::hint::black_box(&x)));
+    });
+    row(&mut rows, "sparse_dot/aligned-table", per);
+    let w_unaligned = &w[1..]; // force a 4-byte-offset base pointer
+    let per = bench("sparse_dot unaligned base", 2_000_000, || {
+        std::hint::black_box(sparse_dot(
+            w_unaligned,
+            std::hint::black_box(&x),
+        ));
+    });
+    row(&mut rows, "sparse_dot/unaligned-base", per);
+
+    // -- the byte scans: frame checksums and .polz zero runs ---------
+    let bytes: Vec<u8> =
+        (0..4096u32).map(|i| i.wrapping_mul(2654435761) as u8).collect();
+    let per = bench("fnv1a64 scalar (4 KiB)", 500_000, || {
+        std::hint::black_box(simd::fnv1a64_scalar(std::hint::black_box(
+            &bytes,
+        )));
+    });
+    row(&mut rows, "fnv1a64/scalar", per);
+    let per = bench("fnv1a64 dispatched (4 KiB)", 500_000, || {
+        std::hint::black_box(simd::fnv1a64(std::hint::black_box(&bytes)));
+    });
+    row(&mut rows, &format!("fnv1a64/{}", simd::tier().name()), per);
+
+    let mut sparse_w = vec![0.0f32; dim];
+    for _ in 0..dim / 64 {
+        sparse_w[rng.below(dim as u64) as usize] = rng.normal() as f32;
+    }
+    let per = bench("zero_runs scalar (2^18, 1/64)", 5_000, || {
+        std::hint::black_box(simd::zero_runs_scalar(
+            std::hint::black_box(&sparse_w),
+            2,
+        ));
+    });
+    row(&mut rows, "zero_runs/scalar", per);
+    let per = bench("zero_runs dispatched (2^18)", 5_000, || {
+        std::hint::black_box(simd::zero_runs(
+            std::hint::black_box(&sparse_w),
+            2,
+        ));
+    });
+    row(&mut rows, &format!("zero_runs/{}", simd::tier().name()), per);
 
     let plan = pol::sharding::ShardPlan::hash(8, dim);
     let inst = pol::data::instance::Instance::new(1.0, x.clone());
     let mut bufs: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 8];
-    bench("feature split_into (nnz=100, k=8)", 1_000_000, || {
+    let per = bench("feature split_into (nnz=100, k=8)", 1_000_000, || {
         plan.split_into(std::hint::black_box(&inst), &mut bufs);
     });
+    row(&mut rows, "feature_split/k8", per);
 
     let sched = pol::coordinator::schedule::DelaySchedule::new(1024);
     bench("schedule 10k ops", 10_000, || {
@@ -100,10 +202,14 @@ fn main() {
         let mut c = Coordinator::new(cfg, ds.dim);
         let t = std::time::Instant::now();
         let rep = c.train(&ds);
+        let per = t.elapsed().as_secs_f64() / rep.instances as f64;
         println!(
             "coordinator {:<22} {:>12.1} ns/instance",
             format!("({})", rule.name()),
-            t.elapsed().as_secs_f64() / rep.instances as f64 * 1e9
+            per * 1e9
         );
+        row(&mut rows, &format!("coordinator/{}", rule.name()), per);
     }
+
+    common::write_bench_json("hot_paths", &rows);
 }

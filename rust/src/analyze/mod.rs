@@ -20,6 +20,7 @@
 //! | **L004** | No `Instant::now` / `SystemTime` under `coordinator/`, `model/`, `stream/`, `sharding/`. | Determinism of the training paths: the golden tests and the stream/in-memory bit-parity tests require that nothing on those paths branches on wall-clock time. (Timing that only feeds `TrainReport` is waived per site.) |
 //! | **L005** | No word-bounded `f32`/`f64` tokens in the record-path functions (`record*`, `inc*`, `add*`, `set*`, `observe*`, `tick*`, `merge*`) under `obs/`. | Telemetry records integers only; float math lives on snapshot *read* paths (quantiles, means), so recording never perturbs — or gets perturbed by — float state, and record hot paths stay integer-cheap. |
 //! | **L006** | No narrowing `as u8` / `as u16` / `as u32` casts in `wire/frame.rs`, `wire/client.rs`, `wire/server.rs`, `serve/checkpoint.rs`, `obs/trace.rs`. | Wire and checkpoint length fields are produced via `u32::try_from(..)` so an oversized length errors instead of truncating into a silently desynced frame or a checkpoint that decodes to the wrong model. |
+//! | **L007** | `unsafe` only in `linalg.rs` and under `simd/`, and there only with a reasoned per-site waiver; anywhere else it fires *even with* a waiver. | The crate-wide `#![deny(unsafe_code)]` story: the entire unsafe surface (bounds-check-elided gathers, AVX2 intrinsics, aligned-table slice views) is confined to the kernel layer, each site carrying its in-range/feature-gated argument next to it — a new `unsafe` elsewhere cannot slip in behind an `#[allow]`. |
 //!
 //! # Waivers
 //!
@@ -76,17 +77,20 @@ pub enum Rule {
     L005,
     /// No narrowing `as` casts on wire/checkpoint codec paths.
     L006,
+    /// `unsafe` confined to `linalg.rs`/`simd/`, waived with a reason.
+    L007,
 }
 
 impl Rule {
     /// Every rule, in id order.
-    pub const ALL: [Rule; 6] = [
+    pub const ALL: [Rule; 7] = [
         Rule::L001,
         Rule::L002,
         Rule::L003,
         Rule::L004,
         Rule::L005,
         Rule::L006,
+        Rule::L007,
     ];
 
     /// The canonical id string (`"L001"`, ...).
@@ -98,6 +102,7 @@ impl Rule {
             Rule::L004 => "L004",
             Rule::L005 => "L005",
             Rule::L006 => "L006",
+            Rule::L007 => "L007",
         }
     }
 

@@ -1,4 +1,4 @@
-//! The six lint rules and the span/waiver machinery they share.
+//! The seven lint rules and the span/waiver machinery they share.
 //!
 //! Everything here runs over the *masked* source from
 //! [`super::lexer::mask`] — except waiver scanning, which reads the
@@ -269,6 +269,9 @@ const DECODE_PREFIXES: &[&str] =
     &["decode", "read", "parse", "take", "inspect"];
 const L005_PREFIXES: &[&str] =
     &["record", "inc", "add", "set", "observe", "tick", "merge"];
+/// Where `unsafe` is allowed to exist at all (L007): the kernel layer.
+const L007_SCOPE_FILES: &[&str] = &["linalg.rs"];
+const L007_SCOPE_DIRS: &[&str] = &["simd/"];
 
 fn has_prefix(name: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| name.starts_with(p))
@@ -405,6 +408,37 @@ pub fn lint_file(rel: &str, raw: &str) -> Vec<Finding> {
                 "narrowing as-cast on codec path".to_string(),
             );
         }
+    }
+
+    // L007: `unsafe` confined to the kernel layer. Inside the scope a
+    // reasoned waiver is *required*; outside it the waiver table is
+    // deliberately not consulted — no `pol-lint: allow` can legalize
+    // unsafe elsewhere (which is why this block skips the `emit`
+    // closure). Test spans stay exempt either way. The word-bounded
+    // scan does not match `unsafe_code` (the `#![deny]`/`#[allow]`
+    // attribute token).
+    let in_l007_scope = L007_SCOPE_FILES.contains(&rel)
+        || L007_SCOPE_DIRS.iter().any(|d| rel.starts_with(d));
+    for off in find_word(&masked, "unsafe") {
+        let (line, col) = (line_of(&masked, off), col_of(&masked, off));
+        if tspans.iter().any(|s| s.contains(line)) {
+            continue;
+        }
+        let msg = if in_l007_scope {
+            if w.covers(Rule::L007, line) {
+                continue;
+            }
+            "unsafe without a reasoned waiver"
+        } else {
+            "unsafe outside linalg.rs/simd/ (not waivable)"
+        };
+        findings.push(Finding {
+            rule: Rule::L007,
+            file: rel.to_string(),
+            line,
+            col,
+            msg: msg.to_string(),
+        });
     }
 
     findings

@@ -412,6 +412,7 @@ impl Coordinator {
     /// [`Obs`] never changes a single trained bit.
     pub fn set_obs(&mut self, obs: Arc<Obs>) {
         let m = &obs.metrics;
+        crate::simd::export_dispatch(m);
         let shard_nnz = (0..self.graph.leaves)
             .map(|k| {
                 m.counter_with(
@@ -470,7 +471,9 @@ impl Coordinator {
         );
         let predictor: std::sync::Arc<dyn SnapshotPredict> = match &self.central_w
         {
-            Some(w) => std::sync::Arc::new(CentralPredictor { w: w.clone() }),
+            Some(w) => std::sync::Arc::new(CentralPredictor {
+                w: crate::simd::AlignedTable::from_slice(w),
+            }),
             None => std::sync::Arc::new(TreePredictor {
                 graph: self.graph.clone(),
                 plan: self.plan,

@@ -37,6 +37,7 @@ use crate::lr::LrSchedule;
 use crate::metrics::ProgressiveValidator;
 use crate::obs::{Counter, Obs};
 use crate::sharding::ShardPlan;
+use crate::simd::AlignedTable;
 use crate::stream::{DatasetSource, InstanceBatch, InstanceSource, Pipeline};
 
 /// Multicore synchronous feature-sharded trainer.
@@ -206,6 +207,7 @@ impl MulticoreTrainer {
     /// overhead on the rendezvous hot path, and the trained weights
     /// stay bit-identical (counters never touch the float path).
     pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        crate::simd::export_dispatch(&obs.metrics);
         self.obs = Some(obs);
         self
     }
@@ -284,17 +286,22 @@ impl MulticoreTrainer {
         let pipe = Pipeline { shard: Some(plan), ..Default::default() };
 
         // warm start: each learner thread owns its plan shard of the
-        // merged table (zeros elsewhere, like its own updates leave it)
-        let mut seeds: Vec<Vec<f32>> = match w0 {
-            Some(w0) => plan.split_table(w0),
-            None => (0..k).map(|_| vec![0.0f32; dim]).collect(),
+        // merged table (zeros elsewhere, like its own updates leave it);
+        // tables are cache-line aligned for the gather kernels
+        let mut seeds: Vec<AlignedTable> = match w0 {
+            Some(w0) => plan
+                .split_table(w0)
+                .into_iter()
+                .map(AlignedTable::from_vec)
+                .collect(),
+            None => (0..k).map(|_| AlignedTable::new(dim)).collect(),
         };
 
         // pol-lint: allow(L004, "wall-clock feeds TrainReport timing only")
         let start = std::time::Instant::now();
         let rv = Arc::new(Rendezvous::new(k));
         let round = Arc::new(BatchRound::new());
-        let mut weight_parts: Vec<Vec<f32>> = Vec::with_capacity(k);
+        let mut weight_parts: Vec<AlignedTable> = Vec::with_capacity(k);
         let mut pv = ProgressiveValidator::with_loss(loss);
 
         // resolve shard counters up front; each thread flushes its
@@ -381,14 +388,14 @@ impl MulticoreTrainer {
 fn learner_thread(
     tid: usize,
     k: usize,
-    mut w: Vec<f32>,
+    mut w: AlignedTable,
     t0: u64,
     loss: Loss,
     lr: LrSchedule,
     rv: &Rendezvous,
     round: &BatchRound,
     nnz_counter: Option<Counter>,
-) -> Vec<f32> {
+) -> AlignedTable {
     let mut my_seq = 0u64;
     let mut my_round = 0u64;
     let mut nnz = 0u64;
@@ -398,6 +405,12 @@ fn learner_thread(
             let x: &[SparseFeat] = &batch.shards(i)[tid];
             nnz += x.len() as u64;
             let t = t0 + batch.start_index() + i as u64;
+            // overlap the next instance's weight-line loads with the
+            // rendezvous this instance is about to spin on (pure hint:
+            // no architectural effect, weights stay bit-identical)
+            if i + 1 < batch.len() {
+                crate::simd::prefetch_features(&w, &batch.shards(i + 1)[tid]);
+            }
             let partial = sparse_dot(&w, x);
             rv.slots[tid].store(f2b(partial), Ordering::Release);
             let arrived = rv.arrived.fetch_add(1, Ordering::AcqRel) + 1;

@@ -48,9 +48,12 @@ pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
 }
 
 /// FNV-1a 64-bit — the checkpoint format's digest/checksum hash (stable,
-/// dependency-free, byte-order independent).
+/// dependency-free, byte-order independent). Contiguous buffers go
+/// through the dispatched wide byte-scan in [`crate::simd`]
+/// (8 bytes per load, bit-identical by construction — the recurrence
+/// is serial, so the wide path performs the same operation sequence).
 pub fn fnv1a64(data: &[u8]) -> u64 {
-    fnv1a64_iter(data.iter().copied())
+    crate::simd::fnv1a64(data)
 }
 
 /// FNV-1a 64-bit over an arbitrary byte stream — lets callers hash

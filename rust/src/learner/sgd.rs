@@ -7,12 +7,13 @@ use crate::learner::OnlineLearner;
 use crate::linalg::{sparse_dot, sparse_saxpy, SparseFeat};
 use crate::loss::Loss;
 use crate::lr::LrSchedule;
+use crate::simd::AlignedTable;
 
 /// Online gradient descent (Algorithm 1).
 #[derive(Clone, Debug)]
 pub struct Sgd {
-    /// Weight vector.
-    pub w: Vec<f32>,
+    /// Weight vector, cache-line aligned for the gather kernels.
+    pub w: AlignedTable,
     /// Loss function.
     pub loss: Loss,
     /// Learning-rate schedule.
@@ -23,7 +24,7 @@ pub struct Sgd {
 impl Sgd {
     /// `dim` is the hashed weight-table size (2^bits).
     pub fn new(dim: usize, loss: Loss, lr: LrSchedule) -> Self {
-        Sgd { w: vec![0.0; dim], loss, lr, t: 0 }
+        Sgd { w: AlignedTable::new(dim), loss, lr, t: 0 }
     }
 
     /// Reassemble a learner from checkpointed state (`pol::serve`
@@ -31,7 +32,7 @@ impl Sgd {
     /// restored learner continues the η_t schedule exactly where the
     /// saved one stopped.
     pub fn from_parts(w: Vec<f32>, loss: Loss, lr: LrSchedule, t: u64) -> Self {
-        Sgd { w, loss, lr, t }
+        Sgd { w: AlignedTable::from_vec(w), loss, lr, t }
     }
 
     /// Current learning rate (η_{t+1}, i.e. for the *next* update).

@@ -173,9 +173,11 @@
 //! scrape and `pol top --connect HOST:7878` is the live terminal view
 //! (QPS, staleness, τ p50/p99, shard heat).
 
-// The whole crate is safe code except the two bounds-check-elided
-// hot-path loops in `linalg`, which carry per-site `#[allow]`s with
-// the in-range-by-construction argument written next to them.
+// The whole crate is safe code except the kernel layer in `simd/`
+// (bounds-check-elided gathers, the AVX2 tier, and the aligned-table
+// slice views), where every site carries a per-site `#[allow]` plus a
+// reasoned `pol-lint: allow(L007, ...)` waiver; lint rule L007
+// mechanically rejects `unsafe` anywhere else in the crate.
 #![deny(unsafe_code)]
 // Every public item documents itself; the `pol lint` pass (see
 // `analyze`) enforces the invariants the docs promise.
@@ -220,6 +222,8 @@ pub mod runtime;
 pub mod serve;
 /// Feature sharding plans and elastic re-sharding.
 pub mod sharding;
+/// Runtime-dispatched SIMD kernels and aligned weight storage.
+pub mod simd;
 /// Instance sources and the background parse pipeline.
 pub mod stream;
 /// Tree topologies (flat, binary, custom arity).
@@ -258,6 +262,7 @@ pub mod prelude {
         SnapshotCell, SnapshotPublisher,
     };
     pub use crate::sharding::{ShardKind, ShardMigration, ShardPlan};
+    pub use crate::simd::AlignedTable;
     pub use crate::stream::{
         CacheSource, DatasetSource, InstanceSource, Pipeline, RcvLikeSource,
         VwTextSource, WebspamLikeSource,

@@ -3,42 +3,29 @@
 //! The per-instance inner loop of every learner is `sparse_dot` +
 //! `sparse_saxpy` over a hashed weight table; these two functions are the
 //! L3 analogue of the L1 kernel and are benchmarked in
-//! `benches/hot_paths.rs`. Dense helpers back the least-squares solver
-//! used by the regret evaluator and the Proposition 3/4 checks.
+//! `benches/hot_paths.rs`. Since the SIMD pass they are thin façades
+//! over the runtime-dispatched kernels in [`crate::simd`] (scalar,
+//! portable-unrolled, or AVX2 — all bit-identical; see that module's
+//! parity contract), which keeps this module free of `unsafe`. Dense
+//! helpers back the least-squares solver used by the regret evaluator
+//! and the Proposition 3/4 checks.
 
 /// A sparse feature: (hashed index, value). Values already carry the
 /// hashing sign.
 pub type SparseFeat = (u32, f32);
 
-/// ⟨w, x⟩ for sparse x over dense w.
-// unsafe_code waiver: the one hot-path bounds-check elision in the
-// crate. Hashed indices are reduced mod the table size at parse time,
-// so `i < w.len()` holds by construction; debug builds still assert it.
-#[allow(unsafe_code)]
+/// ⟨w, x⟩ for sparse x over dense w. Dispatches to the best available
+/// kernel tier ([`crate::simd::tier`]); every tier is bit-identical.
 #[inline]
 pub fn sparse_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
-    let mut acc = 0.0f64;
-    for &(i, v) in x {
-        // hashed indices are always in-range by construction; use
-        // get_unchecked in release after the debug_assert.
-        debug_assert!((i as usize) < w.len());
-        acc += unsafe { *w.get_unchecked(i as usize) } as f64 * v as f64;
-    }
-    acc
+    crate::simd::sparse_dot(w, x)
 }
 
-/// w ← w + a·x for sparse x.
-// unsafe_code waiver: same in-range-by-construction argument as
-// `sparse_dot`, asserted in debug builds.
-#[allow(unsafe_code)]
+/// w ← w + a·x for sparse x. Dispatches like [`sparse_dot`]; duplicate
+/// indices accumulate in element order on every tier.
 #[inline]
 pub fn sparse_saxpy(w: &mut [f32], a: f64, x: &[SparseFeat]) {
-    for &(i, v) in x {
-        debug_assert!((i as usize) < w.len());
-        unsafe {
-            *w.get_unchecked_mut(i as usize) += (a * v as f64) as f32;
-        }
-    }
+    crate::simd::sparse_saxpy(w, a, x)
 }
 
 /// ‖x‖² of a sparse vector.
@@ -136,12 +123,23 @@ impl LeastSquares {
     }
 
     /// Fold a sparse observation into the normal equations.
+    ///
+    /// Features with indices outside `0..n` are skipped, mirroring the
+    /// serving path's untrusted-feature contract (`observe_dense`
+    /// asserts instead because its caller fixes the dimension).
     pub fn observe_sparse(&mut self, x: &[SparseFeat], y: f64) {
         for &(i, v) in x {
             let i = i as usize;
+            if i >= self.n {
+                continue;
+            }
             self.b[i] += v as f64 * y;
             for &(j, u) in x {
-                self.sigma[i * self.n + j as usize] += v as f64 * u as f64;
+                let j = j as usize;
+                if j >= self.n {
+                    continue;
+                }
+                self.sigma[i * self.n + j] += v as f64 * u as f64;
             }
         }
         self.count += 1;
@@ -225,5 +223,23 @@ mod tests {
         d.observe_dense(&[1.0, 0.0, 2.0, 0.0], 3.0);
         s.observe_sparse(&[(0, 1.0), (2, 2.0)], 3.0);
         assert_eq!(d.solve(1e-6), s.solve(1e-6));
+    }
+
+    #[test]
+    fn observe_sparse_skips_out_of_range_indices() {
+        // regression: an out-of-range sparse index used to panic via
+        // unchecked slice indexing; it must be skipped, leaving the
+        // in-range features folded in exactly as without it
+        let mut clean = LeastSquares::new(3);
+        let mut dirty = LeastSquares::new(3);
+        clean.observe_sparse(&[(0, 1.0), (2, -0.5)], 1.0);
+        dirty.observe_sparse(&[(0, 1.0), (7, 9.0), (2, -0.5)], 1.0);
+        assert_eq!(clean.solve(1e-9), dirty.solve(1e-9));
+        assert_eq!(dirty.count(), 1);
+        // an observation that is *entirely* out of range still counts
+        // but must touch nothing
+        dirty.observe_sparse(&[(3, 1.0), (100, 2.0)], 5.0);
+        clean.count += 1;
+        assert_eq!(clean.solve(1e-9), dirty.solve(1e-9));
     }
 }

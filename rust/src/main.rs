@@ -121,12 +121,13 @@ COMMANDS:
   artifacts-check  compile-check all AOT artifacts (needs `make artifacts`)
                    --dir DIR
   lint             statically check the crate's hand-kept invariants
-                   (rules L001-L006: no panics in library code, Relaxed
+                   (rules L001-L007: no panics in library code, Relaxed
                    atomics only in telemetry, cap-before-allocate decode
                    paths, no wall clock in deterministic paths, no floats
-                   on obs record paths, no narrowing casts on codecs;
-                   see src/analyze/mod.rs for the rule table and the
-                   `pol-lint: allow(...)` waiver syntax)
+                   on obs record paths, no narrowing casts on codecs,
+                   unsafe confined to linalg.rs/simd/ with reasoned
+                   waivers; see src/analyze/mod.rs for the rule table
+                   and the `pol-lint: allow(...)` waiver syntax)
                    --root DIR  (source tree to lint; default: ./src,
                    falling back to ./rust/src)
 ";
@@ -1396,6 +1397,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             loaded.len()
         );
         let obs = pol::obs::Obs::new();
+        pol::simd::export_dispatch(&obs.metrics);
         let mut server = PredictionServer::start(Arc::clone(&registry), threads);
         server.attach_obs(Arc::clone(&obs));
         let deadline = std::time::Instant::now()

@@ -37,6 +37,7 @@
 //! | `pol_serve_registry_version`, `pol_serve_models` | wire | registry state |
 //! | `pol_wire_{bytes,frames}_{in,out}_total`, `pol_wire_decode_errors_total` | wire | frame traffic |
 //! | `pol_wire_connections_total`, `pol_wire_active_connections` | wire | connection churn |
+//! | `pol_simd_dispatch` | simd | selected kernel tier (0 scalar / 1 unrolled / 2 avx2) |
 //!
 //! Instrumentation is counters only — no float math on any training
 //! path — so an instrumented trainer is bit-identical to an

@@ -236,35 +236,14 @@ fn plan_mismatch(expected: &ShardPlan, file_salt: u64) -> io::Error {
 /// Non-zero stretches of a weight table as `(start, count)` runs; zero
 /// gaps of up to [`RUN_MERGE_GAP`] slots stay inline (cheaper than a
 /// fresh run header). "Zero" means bit-pattern zero: `-0.0` is kept.
+///
+/// The scan itself is the dispatched zero-run scanner in
+/// [`crate::simd`] (8-lane block skipping on AVX2); every tier emits
+/// the identical run list, so the encoded bytes — and therefore the
+/// checkpoint digests — are independent of the machine that wrote
+/// them (pinned by the golden-byte test in `tests/test_simd.rs`).
 fn sparse_runs(w: &[f32]) -> Vec<(u32, u32)> {
-    let mut runs = Vec::new();
-    let mut i = 0usize;
-    while i < w.len() {
-        if w[i].to_bits() == 0 {
-            i += 1;
-            continue;
-        }
-        let start = i;
-        let mut end = i + 1; // exclusive end at the last non-zero seen
-        let mut j = i + 1;
-        let mut gap = 0usize;
-        while j < w.len() {
-            if w[j].to_bits() != 0 {
-                end = j + 1;
-                gap = 0;
-            } else {
-                gap += 1;
-                if gap > RUN_MERGE_GAP {
-                    break;
-                }
-            }
-            j += 1;
-        }
-        // pol-lint: allow(L006, "indices bounded by table len <= MAX_TABLE")
-        runs.push((start as u32, (end - start) as u32));
-        i = end;
-    }
-    runs
+    crate::simd::zero_runs(w, RUN_MERGE_GAP)
 }
 
 fn push_table_raw(out: &mut Vec<u8>, steps: u64, w: &[f32]) {
@@ -401,7 +380,7 @@ fn sgd_cfg_text(s: &Sgd) -> String {
 /// included, so a server can verify provenance like any other model).
 pub(crate) fn sgd_snapshot(s: &Sgd) -> ModelSnapshot {
     let digest = config_digest(&sgd_cfg_text(s), s.w.len() as u64, 0);
-    ModelSnapshot::central(s.w.clone(), s.steps(), digest)
+    ModelSnapshot::central(s.w.to_vec(), s.steps(), digest)
 }
 
 /// Serialize a plain [`Sgd`] learner.
@@ -414,7 +393,7 @@ pub fn write_sgd(s: &Sgd, out: &mut impl Write) -> io::Result<()> {
         dim,
         0,
         s.steps(),
-        &[(s.steps(), &s.w)],
+        &[(s.steps(), s.w.as_slice())],
     )?;
     write_framed(out, &cfg_text, dim, 0, None, encoding, &payload)
 }

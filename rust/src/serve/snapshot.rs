@@ -118,8 +118,8 @@ pub trait SnapshotPredict: Send + Sync + std::fmt::Debug {
 /// the centralized Minibatch/CG/SGD rules).
 #[derive(Clone, Debug)]
 pub struct CentralPredictor {
-    /// Flat weight vector.
-    pub w: Vec<f32>,
+    /// Flat weight vector, cache-line aligned for the serving dot.
+    pub w: crate::simd::AlignedTable,
 }
 
 impl SnapshotPredict for CentralPredictor {
@@ -137,7 +137,7 @@ impl SnapshotPredict for CentralPredictor {
     }
 
     fn weights_flat(&self) -> Option<&[f32]> {
-        Some(&self.w)
+        Some(self.w.as_slice())
     }
 }
 
@@ -219,7 +219,7 @@ impl ModelSnapshot {
     /// A flat-table snapshot.
     pub fn central(w: Vec<f32>, trained_instances: u64, config_digest: u64) -> Self {
         Self::from_predictor(
-            Arc::new(CentralPredictor { w }),
+            Arc::new(CentralPredictor { w: crate::simd::AlignedTable::from_vec(w) }),
             trained_instances,
             config_digest,
         )

@@ -1,0 +1,223 @@
+//! 64-byte-aligned weight-table storage.
+//!
+//! [`AlignedTable`] is a `Vec<f32>`-shaped buffer whose backing
+//! allocation starts on a cache-line (64-byte) boundary, so the
+//! gather kernels' line touches never straddle an extra line and the
+//! AVX2 tier's block loads stay within one line per 16 floats. It
+//! derefs to `[f32]`, so every existing call site that passed
+//! `&Vec<f32>` as `&[f32]` compiles unchanged.
+//!
+//! Alignment comes from the element type, not an allocator call: the
+//! buffer is a `Vec` of 64-byte `repr(align(64))` lines of 16 `f32`s,
+//! which the global allocator must place on a 64-byte boundary.
+//! Elements past the logical length (up to the line boundary) are
+//! kept at `0.0` so `resize` can expose them without a fill pass.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+
+/// One cache line of weights: 16 `f32`s, 64-byte aligned. The array is
+/// only ever read through the `as_slice` pointer casts, which the
+/// dead-code lint cannot see.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Line(#[allow(dead_code)] [f32; 16]);
+
+const LANES: usize = 16;
+
+/// A 64-byte-aligned `f32` weight table (see the module docs).
+#[derive(Clone, Default)]
+pub struct AlignedTable {
+    lines: Vec<Line>,
+    len: usize,
+}
+
+impl AlignedTable {
+    /// A zero-filled table of `len` weights.
+    pub fn new(len: usize) -> AlignedTable {
+        AlignedTable {
+            lines: vec![Line([0.0; LANES]); len.div_ceil(LANES)],
+            len,
+        }
+    }
+
+    /// An aligned copy of `src`.
+    pub fn from_slice(src: &[f32]) -> AlignedTable {
+        let mut t = AlignedTable::new(src.len());
+        t.as_mut_slice().copy_from_slice(src);
+        t
+    }
+
+    /// An aligned copy of `src` (consumes the vec; the buffer itself
+    /// cannot be reused because the alignment guarantee differs).
+    pub fn from_vec(src: Vec<f32>) -> AlignedTable {
+        AlignedTable::from_slice(&src)
+    }
+
+    /// The weights as a plain `Vec<f32>`.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    /// Number of weights.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the table holds no weights.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The weights as a slice.
+    pub fn as_slice(&self) -> &[f32] {
+        // unsafe_code waiver: the lines buffer always holds at least
+        // ceil(len/16)*16 f32s, so `len` elements are in bounds; a
+        // `Vec<Line>`'s (possibly dangling) pointer is 64-byte
+        // aligned, which over-satisfies f32 alignment.
+        #[allow(unsafe_code)]
+        // pol-lint: allow(L007, "view of the aligned line buffer; len <= capacity by construction")
+        unsafe {
+            std::slice::from_raw_parts(self.lines.as_ptr() as *const f32, self.len)
+        }
+    }
+
+    /// The weights as a mutable slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // unsafe_code waiver: same bounds/alignment argument as
+        // `as_slice`, with the &mut self receiver giving uniqueness.
+        #[allow(unsafe_code)]
+        // pol-lint: allow(L007, "unique view of the aligned line buffer; len <= capacity")
+        unsafe {
+            std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut f32, self.len)
+        }
+    }
+
+    /// Resize to `len` weights; new weights are `0.0`. Shrinking zeros
+    /// the vacated tail so a later grow re-exposes zeros, preserving
+    /// the module invariant.
+    pub fn resize(&mut self, len: usize) {
+        if len < self.len {
+            for v in &mut self.as_mut_slice()[len..] {
+                *v = 0.0;
+            }
+        }
+        self.lines.resize(len.div_ceil(LANES), Line([0.0; LANES]));
+        self.len = len;
+    }
+}
+
+impl Deref for AlignedTable {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for AlignedTable {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl AsRef<[f32]> for AlignedTable {
+    fn as_ref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for AlignedTable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+impl PartialEq for AlignedTable {
+    fn eq(&self, other: &AlignedTable) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for AlignedTable {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<AlignedTable> for Vec<f32> {
+    fn eq(&self, other: &AlignedTable) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for AlignedTable {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<'a> IntoIterator for &'a AlignedTable {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_aligned_64(t: &AlignedTable) -> bool {
+        (t.as_slice().as_ptr() as usize) % 64 == 0
+    }
+
+    #[test]
+    fn allocations_are_64_byte_aligned_across_sizes() {
+        for len in [0usize, 1, 15, 16, 17, 63, 64, 65, 1000] {
+            let t = AlignedTable::new(len);
+            assert!(is_aligned_64(&t), "len {len}");
+            assert_eq!(t.len(), len);
+            assert!(t.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn from_slice_round_trips_and_stays_aligned() {
+        let src: Vec<f32> = (0..37).map(|i| i as f32 - 18.0).collect();
+        let t = AlignedTable::from_slice(&src);
+        assert!(is_aligned_64(&t));
+        assert_eq!(t.to_vec(), src);
+        assert_eq!(t, src);
+        assert_eq!(src, t);
+    }
+
+    #[test]
+    fn resize_grows_with_zeros_and_shrink_then_grow_re_zeroes() {
+        let mut t = AlignedTable::from_slice(&[1.0, 2.0, 3.0]);
+        t.resize(5);
+        assert!(is_aligned_64(&t));
+        assert_eq!(t.as_slice(), &[1.0, 2.0, 3.0, 0.0, 0.0]);
+        t.resize(1);
+        assert_eq!(t.as_slice(), &[1.0]);
+        // the vacated 2.0/3.0 must not reappear
+        t.resize(4);
+        assert_eq!(t.as_slice(), &[1.0, 0.0, 0.0, 0.0]);
+        // cross a line boundary to force reallocation
+        t.resize(100);
+        assert!(is_aligned_64(&t));
+        assert_eq!(t.len(), 100);
+        assert_eq!(t[0], 1.0);
+        assert!(t[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mutation_through_deref_works_like_a_vec() {
+        let mut t = AlignedTable::new(4);
+        t[2] = 7.5;
+        t.as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.iter().sum::<f32>(), 10.0);
+        let doubled: Vec<f32> = t.into_iter().map(|v| v * 2.0).collect();
+        assert_eq!(doubled, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+}

@@ -1,0 +1,572 @@
+//! The kernel bodies behind [`crate::simd`]'s dispatch: scalar
+//! references, portable unrolled variants, and the x86_64 AVX2 tier.
+//!
+//! Every function here is paired with the scalar reference it must be
+//! bit-identical to (see the module docs of [`crate::simd`] for the
+//! per-kernel argument); the adversarial parity tests live in
+//! `tests/test_simd.rs` and in this file's unit tests. The one
+//! deliberate exception is [`sparse_dot_reassoc`], which reassociates
+//! the `f64` accumulation and is therefore never dispatched.
+
+use crate::linalg::SparseFeat;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+// ---- scalar references ----------------------------------------------
+
+/// ⟨w, x⟩ — the scalar reference: one exact `f32`→`f64` product per
+/// element, accumulated in element order. This is the historical
+/// `linalg::sparse_dot` body, bounds-check-elided.
+// unsafe_code waiver: the hot-path bounds-check elision. Hashed
+// indices are reduced mod the table size at parse time, so
+// `i < w.len()` holds by construction; debug builds still assert it.
+#[allow(unsafe_code)]
+#[inline]
+pub fn sparse_dot_scalar(w: &[f32], x: &[SparseFeat]) -> f64 {
+    let mut acc = 0.0f64;
+    for &(i, v) in x {
+        debug_assert!((i as usize) < w.len());
+        // pol-lint: allow(L007, "in-range-by-construction gather, debug-asserted")
+        acc += unsafe { *w.get_unchecked(i as usize) } as f64 * v as f64;
+    }
+    acc
+}
+
+/// `w ← w + a·x` — the scalar reference (historical
+/// `linalg::sparse_saxpy` body).
+// unsafe_code waiver: same in-range-by-construction argument as
+// `sparse_dot_scalar`, asserted in debug builds.
+#[allow(unsafe_code)]
+#[inline]
+pub fn sparse_saxpy_scalar(w: &mut [f32], a: f64, x: &[SparseFeat]) {
+    for &(i, v) in x {
+        debug_assert!((i as usize) < w.len());
+        // pol-lint: allow(L007, "in-range-by-construction store, debug-asserted")
+        unsafe {
+            *w.get_unchecked_mut(i as usize) += (a * v as f64) as f32;
+        }
+    }
+}
+
+/// FNV-1a 64 — the byte-at-a-time scalar reference (the historical
+/// `hashing::fnv1a64` body).
+#[inline]
+pub fn fnv1a64_scalar(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Zero-run scanner — the scalar reference (the historical
+/// `serve::checkpoint::sparse_runs` body, with the merge gap as a
+/// parameter). "Zero" is bit-pattern zero: `-0.0` is non-zero and is
+/// kept inside runs.
+pub fn zero_runs_scalar(w: &[f32], merge_gap: usize) -> Vec<(u32, u32)> {
+    let mut runs = Vec::new();
+    let mut i = 0usize;
+    while i < w.len() {
+        if w[i].to_bits() == 0 {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut end = i + 1; // exclusive end at the last non-zero seen
+        let mut j = i + 1;
+        let mut gap = 0usize;
+        while j < w.len() {
+            if w[j].to_bits() != 0 {
+                end = j + 1;
+                gap = 0;
+            } else {
+                gap += 1;
+                if gap > merge_gap {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        // indices bounded by the table length, which every producer
+        // caps far below u32::MAX (checkpoint MAX_TABLE, hash bits<=31)
+        runs.push((start as u32, (end - start) as u32));
+        i = end;
+    }
+    runs
+}
+
+// ---- portable unrolled tier -----------------------------------------
+
+/// ⟨w, x⟩ — four independent products per iteration (exact, order-free
+/// work), folded into the accumulator **in element order** so the
+/// non-associative `f64` additions happen in the scalar sequence.
+/// Bit-identical to [`sparse_dot_scalar`].
+// unsafe_code waiver: same in-range-by-construction gather as the
+// scalar reference, debug-asserted per element.
+#[allow(unsafe_code)]
+#[inline]
+pub fn sparse_dot_unrolled(w: &[f32], x: &[SparseFeat]) -> f64 {
+    let mut acc = 0.0f64;
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        debug_assert!(c.iter().all(|&(i, _)| (i as usize) < w.len()));
+        // pol-lint: allow(L007, "in-range-by-construction gathers, debug-asserted")
+        let (p0, p1, p2, p3) = unsafe {
+            (
+                *w.get_unchecked(c[0].0 as usize) as f64 * c[0].1 as f64,
+                *w.get_unchecked(c[1].0 as usize) as f64 * c[1].1 as f64,
+                *w.get_unchecked(c[2].0 as usize) as f64 * c[2].1 as f64,
+                *w.get_unchecked(c[3].0 as usize) as f64 * c[3].1 as f64,
+            )
+        };
+        // in-order fold: (((acc+p0)+p1)+p2)+p3, exactly as scalar
+        acc += p0;
+        acc += p1;
+        acc += p2;
+        acc += p3;
+    }
+    for &(i, v) in chunks.remainder() {
+        debug_assert!((i as usize) < w.len());
+        // pol-lint: allow(L007, "in-range-by-construction gather, debug-asserted")
+        acc += unsafe { *w.get_unchecked(i as usize) } as f64 * v as f64;
+    }
+    acc
+}
+
+/// `w ← w + a·x` — four deltas computed per iteration (they depend
+/// only on `a` and `x`), then applied sequentially in element order so
+/// duplicate indices accumulate exactly like the scalar loop.
+/// Bit-identical to [`sparse_saxpy_scalar`].
+// unsafe_code waiver: same in-range-by-construction stores as the
+// scalar reference, debug-asserted per chunk.
+#[allow(unsafe_code)]
+#[inline]
+pub fn sparse_saxpy_unrolled(w: &mut [f32], a: f64, x: &[SparseFeat]) {
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        debug_assert!(c.iter().all(|&(i, _)| (i as usize) < w.len()));
+        let d0 = (a * c[0].1 as f64) as f32;
+        let d1 = (a * c[1].1 as f64) as f32;
+        let d2 = (a * c[2].1 as f64) as f32;
+        let d3 = (a * c[3].1 as f64) as f32;
+        // pol-lint: allow(L007, "in-range-by-construction stores, debug-asserted")
+        unsafe {
+            *w.get_unchecked_mut(c[0].0 as usize) += d0;
+            *w.get_unchecked_mut(c[1].0 as usize) += d1;
+            *w.get_unchecked_mut(c[2].0 as usize) += d2;
+            *w.get_unchecked_mut(c[3].0 as usize) += d3;
+        }
+    }
+    for &(i, v) in chunks.remainder() {
+        debug_assert!((i as usize) < w.len());
+        // pol-lint: allow(L007, "in-range-by-construction store, debug-asserted")
+        unsafe {
+            *w.get_unchecked_mut(i as usize) += (a * v as f64) as f32;
+        }
+    }
+}
+
+/// FNV-1a 64 — eight bytes per iteration: one `u64` load feeds eight
+/// *dependent* xor/multiply steps, the identical operation sequence to
+/// the byte loop. Bit-identical to [`fnv1a64_scalar`] by construction
+/// (the recurrence is serial; this removes loop/bounds overhead only).
+#[inline]
+pub fn fnv1a64_unrolled(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let x = u64::from_le_bytes([
+            c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+        ]);
+        // byte k of the little-endian load is exactly c[k]
+        h = (h ^ (x & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ ((x >> 8) & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ ((x >> 16) & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ ((x >> 24) & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ ((x >> 32) & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ ((x >> 40) & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ ((x >> 48) & 0xff)).wrapping_mul(FNV_PRIME);
+        h = (h ^ (x >> 56)).wrapping_mul(FNV_PRIME);
+    }
+    for &b in chunks.remainder() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+// ---- the documented-off reassociating kernel ------------------------
+
+/// ⟨w, x⟩ with **four independent accumulators** folded at the end —
+/// the classically fastest dot layout, and the one kernel here that is
+/// **not** bit-identical to the scalar reference: `f64` addition is not
+/// associative, so regrouping the sum changes low-order bits on real
+/// data. It is therefore *off by default* — [`crate::simd::sparse_dot`]
+/// never dispatches to it — and exists only so
+/// `benches/hot_paths.rs` can measure what the ordered-fold
+/// bit-parity guarantee costs.
+// unsafe_code waiver: same in-range-by-construction gather as the
+// scalar reference, debug-asserted per chunk.
+#[allow(unsafe_code)]
+pub fn sparse_dot_reassoc(w: &[f32], x: &[SparseFeat]) -> f64 {
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        debug_assert!(c.iter().all(|&(i, _)| (i as usize) < w.len()));
+        // pol-lint: allow(L007, "in-range-by-construction gathers, debug-asserted")
+        unsafe {
+            a0 += *w.get_unchecked(c[0].0 as usize) as f64 * c[0].1 as f64;
+            a1 += *w.get_unchecked(c[1].0 as usize) as f64 * c[1].1 as f64;
+            a2 += *w.get_unchecked(c[2].0 as usize) as f64 * c[2].1 as f64;
+            a3 += *w.get_unchecked(c[3].0 as usize) as f64 * c[3].1 as f64;
+        }
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for &(i, v) in chunks.remainder() {
+        debug_assert!((i as usize) < w.len());
+        // pol-lint: allow(L007, "in-range-by-construction gather, debug-asserted")
+        acc += unsafe { *w.get_unchecked(i as usize) } as f64 * v as f64;
+    }
+    acc
+}
+
+// ---- the AVX2 tier (x86_64 only) ------------------------------------
+
+/// The x86_64 AVX2 kernels. Callers must verify
+/// `is_x86_feature_detected!("avx2")` before entering (the safe
+/// wrappers in [`crate::simd`] do).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use crate::linalg::SparseFeat;
+    use std::arch::x86_64::*;
+
+    /// ⟨w, x⟩ — 8-lane gather + exact per-lane `f64` products, folded
+    /// into the accumulator in element order (bit-identical to the
+    /// scalar reference; see the `simd` module docs).
+    ///
+    /// # Safety
+    /// AVX2 must be available; every index in `x` must be in range for
+    /// `w` and `w.len() <= i32::MAX` (gather takes `i32` lane indices —
+    /// both hold by construction: hash bits are capped at 31).
+    // unsafe_code waiver: target_feature kernel; gather indices are
+    // in-range-by-construction, debug-asserted per chunk.
+    #[allow(unsafe_code)]
+    #[target_feature(enable = "avx2")]
+    // pol-lint: allow(L007, "AVX2 gather kernel: feature-gated, indices debug-asserted")
+    pub unsafe fn sparse_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
+        let mut acc = 0.0f64;
+        let mut prod = [0.0f64; 8];
+        let mut chunks = x.chunks_exact(8);
+        for c in &mut chunks {
+            debug_assert!(c.iter().all(|&(i, _)| (i as usize) < w.len()));
+            let idx = _mm256_setr_epi32(
+                c[0].0 as i32,
+                c[1].0 as i32,
+                c[2].0 as i32,
+                c[3].0 as i32,
+                c[4].0 as i32,
+                c[5].0 as i32,
+                c[6].0 as i32,
+                c[7].0 as i32,
+            );
+            let gathered = _mm256_i32gather_ps::<4>(w.as_ptr(), idx);
+            let vals = _mm256_setr_ps(
+                c[0].1, c[1].1, c[2].1, c[3].1, c[4].1, c[5].1, c[6].1,
+                c[7].1,
+            );
+            // f32 -> f64 conversion is exact; mul_pd is the same
+            // correctly-rounded multiply the scalar loop performs
+            let g_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(gathered));
+            let g_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(gathered));
+            let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(vals));
+            let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(vals));
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(g_lo, v_lo));
+            _mm256_storeu_pd(
+                prod.as_mut_ptr().add(4),
+                _mm256_mul_pd(g_hi, v_hi),
+            );
+            // in-order fold preserves the scalar addition sequence
+            acc += prod[0];
+            acc += prod[1];
+            acc += prod[2];
+            acc += prod[3];
+            acc += prod[4];
+            acc += prod[5];
+            acc += prod[6];
+            acc += prod[7];
+        }
+        for &(i, v) in chunks.remainder() {
+            debug_assert!((i as usize) < w.len());
+            acc += *w.get_unchecked(i as usize) as f64 * v as f64;
+        }
+        acc
+    }
+
+    /// `w ← w + a·x` — 8 deltas per iteration computed with vector
+    /// multiply + convert (same operations as the scalar loop), stores
+    /// applied sequentially in element order (duplicate-index exact).
+    ///
+    /// # Safety
+    /// AVX2 must be available; every index in `x` must be in range for
+    /// `w`.
+    // unsafe_code waiver: target_feature kernel; stores are
+    // in-range-by-construction, debug-asserted per chunk.
+    #[allow(unsafe_code)]
+    #[target_feature(enable = "avx2")]
+    // pol-lint: allow(L007, "AVX2 saxpy kernel: feature-gated, indices debug-asserted")
+    pub unsafe fn sparse_saxpy(w: &mut [f32], a: f64, x: &[SparseFeat]) {
+        let av = _mm256_set1_pd(a);
+        let mut delta = [0.0f32; 8];
+        let mut chunks = x.chunks_exact(8);
+        for c in &mut chunks {
+            debug_assert!(c.iter().all(|&(i, _)| (i as usize) < w.len()));
+            let vals = _mm256_setr_ps(
+                c[0].1, c[1].1, c[2].1, c[3].1, c[4].1, c[5].1, c[6].1,
+                c[7].1,
+            );
+            let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(vals));
+            let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(vals));
+            // cvtpd_ps rounds to nearest-even under the default MXCSR,
+            // matching Rust's `as f32`; the crate never alters MXCSR
+            let d_lo = _mm256_cvtpd_ps(_mm256_mul_pd(av, v_lo));
+            let d_hi = _mm256_cvtpd_ps(_mm256_mul_pd(av, v_hi));
+            _mm_storeu_ps(delta.as_mut_ptr(), d_lo);
+            _mm_storeu_ps(delta.as_mut_ptr().add(4), d_hi);
+            // sequential stores in element order: duplicate indices
+            // accumulate exactly as in the scalar loop
+            for (k, &(i, _)) in c.iter().enumerate() {
+                *w.get_unchecked_mut(i as usize) += delta[k];
+            }
+        }
+        for &(i, v) in chunks.remainder() {
+            debug_assert!((i as usize) < w.len());
+            *w.get_unchecked_mut(i as usize) += (a * v as f64) as f32;
+        }
+    }
+
+    /// Non-zero bits per lane of the 8-`f32` block at `p`: bit k set
+    /// when lane k is bit-pattern non-zero.
+    ///
+    /// # Safety
+    /// AVX2 available; `p..p+8` floats readable (unaligned load).
+    // unsafe_code waiver: unaligned in-bounds block load inside the
+    // feature-gated scanner.
+    #[allow(unsafe_code)]
+    #[target_feature(enable = "avx2")]
+    // pol-lint: allow(L007, "AVX2 block load: caller keeps the block in bounds")
+    unsafe fn nonzero_mask(p: *const f32) -> u32 {
+        let block = _mm256_loadu_si256(p as *const __m256i);
+        let zeros = _mm256_cmpeq_epi32(block, _mm256_setzero_si256());
+        // movemask gives "is zero" bits; invert to "is non-zero"
+        let zmask = _mm256_movemask_ps(_mm256_castsi256_ps(zeros)) as u32;
+        !zmask & 0xff
+    }
+
+    /// Zero-run scanner — the scalar state machine, with 8-lane
+    /// compare+movemask used to (a) find the next non-zero element and
+    /// (b) skip whole all-zero / all-nonzero blocks inside a run.
+    /// Every transition mirrors one the scalar machine makes, so the
+    /// output runs are identical (fuzz-pinned in `tests/test_simd.rs`).
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    // unsafe_code waiver: target_feature kernel; all block loads are
+    // bounds-guarded before issue.
+    #[allow(unsafe_code)]
+    #[target_feature(enable = "avx2")]
+    // pol-lint: allow(L007, "AVX2 scanner: feature-gated, block loads bounds-guarded")
+    pub unsafe fn zero_runs(w: &[f32], merge_gap: usize) -> Vec<(u32, u32)> {
+        let mut runs = Vec::new();
+        let n = w.len();
+        let mut i = 0usize;
+        'outer: while i < n {
+            // find the next non-zero element, whole blocks at a time
+            while i + 8 <= n {
+                let m = nonzero_mask(w.as_ptr().add(i));
+                if m != 0 {
+                    i += m.trailing_zeros() as usize;
+                    break;
+                }
+                i += 8;
+            }
+            while i < n && w[i].to_bits() == 0 {
+                i += 1;
+            }
+            if i >= n {
+                break 'outer;
+            }
+            let start = i;
+            let mut end = i + 1;
+            let mut j = i + 1;
+            let mut gap = 0usize;
+            loop {
+                if j + 8 <= n {
+                    let m = nonzero_mask(w.as_ptr().add(j));
+                    if m == 0xff {
+                        // all non-zero: scalar would set end=j+1..j+8
+                        // one step at a time, ending exactly here
+                        j += 8;
+                        end = j;
+                        gap = 0;
+                        continue;
+                    }
+                    if m == 0 {
+                        // all zero: scalar counts 8 gap steps (end
+                        // untouched) and breaks as soon as the count
+                        // passes the merge gap — the break position is
+                        // irrelevant, the next scan restarts at `end`
+                        gap += 8;
+                        if gap > merge_gap {
+                            break;
+                        }
+                        j += 8;
+                        continue;
+                    }
+                    // mixed block: fall through to scalar steps
+                }
+                if j >= n {
+                    break;
+                }
+                if w[j].to_bits() != 0 {
+                    end = j + 1;
+                    gap = 0;
+                } else {
+                    gap += 1;
+                    if gap > merge_gap {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            runs.push((start as u32, (end - start) as u32));
+            i = end;
+        }
+        runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn bits(x: f64) -> u64 {
+        x.to_bits()
+    }
+
+    #[test]
+    fn fnv_unrolled_matches_reference_vectors() {
+        for (input, want) in [
+            (&b""[..], 0xcbf29ce484222325u64),
+            (&b"a"[..], 0xaf63dc4c8601ec8c),
+            (&b"foobar"[..], 0x85944171f73967e8),
+        ] {
+            assert_eq!(fnv1a64_scalar(input), want);
+            assert_eq!(fnv1a64_unrolled(input), want);
+        }
+    }
+
+    #[test]
+    fn fnv_unrolled_matches_scalar_on_all_lengths_to_64() {
+        let data: Vec<u8> = (0..64u32).map(|i| (i * 37 + 11) as u8).collect();
+        for len in 0..=data.len() {
+            assert_eq!(
+                fnv1a64_unrolled(&data[..len]),
+                fnv1a64_scalar(&data[..len]),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn unrolled_dot_bit_matches_scalar_on_random_data() {
+        let mut rng = Rng::new(7);
+        let dim = 1usize << 12;
+        let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        for nnz in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 100] {
+            let x: Vec<SparseFeat> = (0..nnz)
+                .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+                .collect();
+            assert_eq!(
+                bits(sparse_dot_unrolled(&w, &x)),
+                bits(sparse_dot_scalar(&w, &x)),
+                "nnz {nnz}"
+            );
+        }
+    }
+
+    #[test]
+    fn unrolled_saxpy_bit_matches_scalar_with_duplicates() {
+        let mut rng = Rng::new(9);
+        let dim = 256usize;
+        for nnz in [0usize, 1, 3, 5, 8, 9, 17, 64] {
+            let w0: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            // force duplicate indices by drawing from a tiny id pool
+            let x: Vec<SparseFeat> = (0..nnz)
+                .map(|_| (rng.below(7) as u32, rng.normal() as f32))
+                .collect();
+            let mut a = w0.clone();
+            let mut b = w0.clone();
+            sparse_saxpy_unrolled(&mut a, -0.37, &x);
+            sparse_saxpy_scalar(&mut b, -0.37, &x);
+            let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "nnz {nnz}");
+        }
+    }
+
+    #[test]
+    fn reassoc_dot_is_close_but_not_contracted_to_be_identical() {
+        // documents *why* the reassociating kernel stays off by
+        // default: it must agree to rounding, not to the bit
+        let mut rng = Rng::new(21);
+        let dim = 1024usize;
+        let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let x: Vec<SparseFeat> = (0..333)
+            .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+            .collect();
+        let exact = sparse_dot_scalar(&w, &x);
+        let re = sparse_dot_reassoc(&w, &x);
+        assert!((exact - re).abs() <= 1e-9 * exact.abs().max(1.0));
+    }
+
+    #[test]
+    fn zero_runs_scalar_shapes() {
+        assert!(zero_runs_scalar(&[], 2).is_empty());
+        assert!(zero_runs_scalar(&[0.0; 16], 2).is_empty());
+        assert_eq!(zero_runs_scalar(&[1.0], 2), vec![(0, 1)]);
+        // -0.0 has non-zero bits: it is part of a run
+        assert_eq!(zero_runs_scalar(&[0.0, -0.0, 0.0], 2), vec![(1, 1)]);
+        // gap of 2 merges, gap of 3 splits (merge_gap = 2)
+        assert_eq!(
+            zero_runs_scalar(&[1.0, 0.0, 0.0, 1.0], 2),
+            vec![(0, 4)]
+        );
+        assert_eq!(
+            zero_runs_scalar(&[1.0, 0.0, 0.0, 0.0, 1.0], 2),
+            vec![(0, 1), (4, 1)]
+        );
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_bit_match_scalar_when_available() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let mut rng = Rng::new(31);
+        let dim = 1usize << 10;
+        let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        for nnz in [0usize, 1, 7, 8, 9, 16, 23, 100] {
+            let x: Vec<SparseFeat> = (0..nnz)
+                .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+                .collect();
+            // SAFETY: avx2 checked above; indices drawn below dim
+            #[allow(unsafe_code)]
+            // pol-lint: allow(L007, "test-only direct call, feature-checked above")
+            let d = unsafe { avx2::sparse_dot(&w, &x) };
+            assert_eq!(bits(d), bits(sparse_dot_scalar(&w, &x)), "nnz {nnz}");
+        }
+    }
+}

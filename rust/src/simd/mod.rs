@@ -1,0 +1,377 @@
+//! Runtime-dispatched SIMD kernels and cache-layout primitives for the
+//! five hot paths: the sparse dot product, the sparse SGD update
+//! (`saxpy`), the FNV-1a frame/checkpoint checksum, the `.polz`
+//! zero-run scanner, and the gather-heavy sharded forward sweep
+//! (software prefetch).
+//!
+//! Pure `std`: the accelerated paths use `std::arch` x86_64 intrinsics
+//! behind `is_x86_feature_detected!` runtime dispatch, with a portable
+//! hand-unrolled multi-lane fallback on every other target. Nothing
+//! here changes a single trained or serialized bit — see the contract
+//! below.
+//!
+//! # Dispatch tiers
+//!
+//! The tier is detected once per process and cached; every public
+//! kernel routes through it.
+//!
+//! | Tier | `pol_simd_dispatch` | Selected when |
+//! |------|---------------------|---------------|
+//! | [`Tier::Scalar`]   | 0 | `POL_SIMD=scalar` (testing/debug only) |
+//! | [`Tier::Unrolled`] | 1 | non-x86_64 targets, or x86_64 without AVX2 |
+//! | [`Tier::Avx2`]     | 2 | x86_64 with AVX2 (runtime-detected) |
+//!
+//! `POL_SIMD=scalar|unrolled|avx2` overrides detection (read once, at
+//! first kernel use). Forcing a tier the CPU cannot run falls back to
+//! the best available tier rather than faulting, so a blanket
+//! `POL_SIMD=avx2` in CI is safe on AVX2-less runners. The selected
+//! tier is exported as the integer gauge `pol_simd_dispatch` via
+//! [`export_dispatch`], so `pol metrics` / `pol top` show which path
+//! production is actually running.
+//!
+//! # The bit-parity contract
+//!
+//! The crate's backbone is its bit-parity proofs (multicore ==
+//! single-thread, streamed == in-memory, checkpoint round-trips
+//! bit-exact). Every kernel that is **enabled by default** is
+//! bit-identical to its scalar reference — not approximately equal —
+//! and ships adversarial parity tests (duplicate indices, `-0.0`,
+//! `NaN`, extreme magnitudes, empty and odd-length tails):
+//!
+//! | Kernel | Why bit-identical |
+//! |--------|-------------------|
+//! | [`sparse_dot`] | Each product `w[i] as f64 * v as f64` is computed exactly as the scalar loop does (`f32`→`f64` conversion is exact; one correctly-rounded `f64` multiply of the same operands). Vector lanes only compute the *products*; the accumulator folds them **in the original element order**, so the non-associative `f64` additions happen in the scalar sequence. |
+//! | [`sparse_saxpy`] | The deltas `(a * v as f64) as f32` depend only on `a` and `x`, never on `w`, so lanes compute them up front (same multiply, same correctly-rounded `f64`→`f32` conversion); the `w[i] += d` stores are then applied **sequentially in element order**, which is what makes duplicate indices accumulate exactly like the scalar loop. |
+//! | [`fnv1a64`] | FNV-1a is a serial recurrence (`h = (h ^ b) * p`) and cannot be lane-split. The wide path is a hand-unrolled 8-bytes-per-iteration loop (one `u64` load, eight dependent steps) that performs the **identical operation sequence**, so it is bit-identical by construction on every tier. |
+//! | [`zero_runs`] | Pure integer predicate (`w[i].to_bits() == 0` — `-0.0` is non-zero bits and stays stored). The SIMD path runs the same run/gap state machine and only uses 8-lane compare+movemask to skip all-zero and all-nonzero blocks, transitions the scalar machine would make one element at a time. Output runs are provably equal. |
+//! | [`prefetch_features`] | `prefetch` is architecturally a hint with no memory effects; issuing or dropping it cannot change any result. |
+//!
+//! A reassociated multi-accumulator dot ([`sparse_dot_reassoc`]) — the
+//! classically fastest layout — **cannot** be proven bit-identical
+//! (`f64` addition is not associative), so it is *off by default*,
+//! never dispatched, and exists only for benchmarking the cost of the
+//! ordered-fold guarantee.
+//!
+//! # Cache layout
+//!
+//! [`AlignedTable`] is the 64-byte-aligned weight-table allocation
+//! adopted by the learner ([`crate::learner::sgd::Sgd`]), the multicore
+//! coordinator's per-thread shard tables, and the serving snapshot's
+//! central predictor: gather-heavy kernels never split a weight load
+//! across cache lines, and tables start on a line boundary regardless
+//! of allocator behavior. Contents are plain `[f32]` (it derefs to a
+//! slice), so every byte format that serializes weights is unchanged —
+//! checkpoint round-trips through aligned tables are byte-identical to
+//! the pre-existing format (pinned by tests).
+//!
+//! # Unsafe surface
+//!
+//! This module (plus `linalg.rs`, historically) is the only place the
+//! crate's `#![deny(unsafe_code)]` is waived, one site at a time, and
+//! the `pol lint` rule **L007** enforces exactly that: an `unsafe`
+//! token outside `linalg.rs`/`simd/` fails the build even if waived,
+//! and inside them it still requires a reasoned
+//! `// pol-lint: allow(L007, "...")` at the site.
+
+mod aligned;
+mod kernels;
+
+pub use aligned::AlignedTable;
+pub use kernels::{
+    fnv1a64_scalar, fnv1a64_unrolled, sparse_dot_reassoc, sparse_dot_scalar,
+    sparse_dot_unrolled, sparse_saxpy_scalar, sparse_saxpy_unrolled,
+    zero_runs_scalar,
+};
+
+use crate::linalg::SparseFeat;
+use std::sync::OnceLock;
+
+/// The dispatch tier a kernel call routes to. Discriminants are the
+/// `pol_simd_dispatch` gauge values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Tier {
+    /// The plain reference loops (forced via `POL_SIMD=scalar`).
+    Scalar = 0,
+    /// Portable hand-unrolled multi-lane loops (any target).
+    Unrolled = 1,
+    /// AVX2 gather/convert kernels (x86_64, runtime-detected).
+    Avx2 = 2,
+}
+
+impl Tier {
+    /// The gauge value (0 scalar / 1 unrolled / 2 avx2).
+    pub fn as_u64(self) -> u64 {
+        self as u64
+    }
+
+    /// The tier's `POL_SIMD` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Unrolled => "unrolled",
+            Tier::Avx2 => "avx2",
+        }
+    }
+}
+
+static TIER: OnceLock<Tier> = OnceLock::new();
+
+/// The dispatch tier in effect for this process — detected (or read
+/// from `POL_SIMD`) on first use, then cached.
+#[inline]
+pub fn tier() -> Tier {
+    *TIER.get_or_init(detect)
+}
+
+/// The fastest tier this CPU can actually run.
+fn best_available() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Tier::Avx2;
+        }
+    }
+    Tier::Unrolled
+}
+
+/// Detection + the `POL_SIMD` override. An override naming a tier the
+/// CPU cannot run (or an unknown value) falls back to detection.
+fn detect() -> Tier {
+    let auto = best_available();
+    match std::env::var("POL_SIMD").ok().as_deref() {
+        Some("scalar") => Tier::Scalar,
+        Some("unrolled") => Tier::Unrolled,
+        Some("avx2") if auto == Tier::Avx2 => Tier::Avx2,
+        _ => auto,
+    }
+}
+
+/// Register the selected dispatch tier as the integer gauge
+/// `pol_simd_dispatch` (0 scalar / 1 unrolled / 2 avx2). Called by
+/// every component that wires up telemetry, so the gauge is visible
+/// wherever training or serving metrics are. Integer-only (L005-safe).
+pub fn export_dispatch(metrics: &crate::obs::MetricsRegistry) {
+    metrics.gauge("pol_simd_dispatch").set(tier().as_u64());
+}
+
+/// ⟨w, x⟩ for sparse `x` over dense `w`, dispatched. Bit-identical to
+/// [`sparse_dot_scalar`] at every tier (see the module docs).
+///
+/// Contract (same as the scalar reference): every index in `x` is in
+/// range for `w` — hashed indices are reduced mod the table size at
+/// parse time; debug builds assert it.
+#[inline]
+pub fn sparse_dot(w: &[f32], x: &[SparseFeat]) -> f64 {
+    match tier() {
+        Tier::Scalar => sparse_dot_scalar(w, x),
+        Tier::Unrolled => sparse_dot_unrolled(w, x),
+        Tier::Avx2 => sparse_dot_avx2(w, x).unwrap_or_else(|| sparse_dot_unrolled(w, x)),
+    }
+}
+
+/// `w ← w + a·x` for sparse `x`, dispatched. Bit-identical to
+/// [`sparse_saxpy_scalar`] at every tier, including duplicate indices
+/// in `x` (deltas are applied sequentially in element order).
+#[inline]
+pub fn sparse_saxpy(w: &mut [f32], a: f64, x: &[SparseFeat]) {
+    match tier() {
+        Tier::Scalar => sparse_saxpy_scalar(w, a, x),
+        Tier::Unrolled => sparse_saxpy_unrolled(w, a, x),
+        Tier::Avx2 => {
+            if !sparse_saxpy_avx2(w, a, x) {
+                sparse_saxpy_unrolled(w, a, x);
+            }
+        }
+    }
+}
+
+/// FNV-1a 64 over `data`, dispatched. The recurrence is serial, so the
+/// accelerated path is the unrolled 8-bytes-per-iteration loop on both
+/// the [`Tier::Unrolled`] and [`Tier::Avx2`] tiers — identical
+/// operation sequence, bit-identical by construction.
+#[inline]
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    match tier() {
+        Tier::Scalar => fnv1a64_scalar(data),
+        Tier::Unrolled | Tier::Avx2 => fnv1a64_unrolled(data),
+    }
+}
+
+/// Non-zero stretches of `w` as `(start, count)` runs, merging zero
+/// gaps of up to `merge_gap` slots, dispatched. "Zero" is bit-pattern
+/// zero (`-0.0` is non-zero). Output-identical to [`zero_runs_scalar`]
+/// at every tier; the AVX2 path only skips whole all-zero / all-nonzero
+/// 8-lane blocks.
+#[inline]
+pub fn zero_runs(w: &[f32], merge_gap: usize) -> Vec<(u32, u32)> {
+    match tier() {
+        Tier::Avx2 => {
+            zero_runs_avx2(w, merge_gap).unwrap_or_else(|| zero_runs_scalar(w, merge_gap))
+        }
+        _ => zero_runs_scalar(w, merge_gap),
+    }
+}
+
+/// The AVX2 dot kernel, if this CPU can run it (`None` otherwise —
+/// including tables too large for 32-bit gather indices). Public so
+/// parity tests and benches can pin the tier explicitly regardless of
+/// dispatch.
+#[inline]
+pub fn sparse_dot_avx2(w: &[f32], x: &[SparseFeat]) -> Option<f64> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && w.len() <= i32::MAX as usize {
+            // SAFETY: AVX2 presence just checked; indices are in range
+            // for `w` by the kernel contract (debug-asserted inside).
+            #[allow(unsafe_code)]
+            // pol-lint: allow(L007, "runtime-feature-gated dispatch into the AVX2 kernel")
+            return Some(unsafe { kernels::avx2::sparse_dot(w, x) });
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (w, x);
+    }
+    None
+}
+
+/// The AVX2 saxpy kernel, if this CPU can run it; returns whether it
+/// ran (`false` means the caller must fall back). Public for parity
+/// tests and benches.
+#[inline]
+pub fn sparse_saxpy_avx2(w: &mut [f32], a: f64, x: &[SparseFeat]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just checked; indices are in range
+            // for `w` by the kernel contract (debug-asserted inside).
+            #[allow(unsafe_code)]
+            // pol-lint: allow(L007, "runtime-feature-gated dispatch into the AVX2 kernel")
+            unsafe {
+                kernels::avx2::sparse_saxpy(w, a, x)
+            };
+            return true;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (w, a, x);
+    }
+    false
+}
+
+/// The AVX2 zero-run scanner, if this CPU can run it (`None`
+/// otherwise). Public for parity tests and benches.
+#[inline]
+pub fn zero_runs_avx2(w: &[f32], merge_gap: usize) -> Option<Vec<(u32, u32)>> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just checked; the kernel reads only
+            // in-bounds full blocks of `w`.
+            #[allow(unsafe_code)]
+            // pol-lint: allow(L007, "runtime-feature-gated dispatch into the AVX2 kernel")
+            return Some(unsafe { kernels::avx2::zero_runs(w, merge_gap) });
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (w, merge_gap);
+    }
+    None
+}
+
+/// Software-prefetch the cache lines of `w` that the features in `x`
+/// will gather, ahead of the dot/saxpy that reads them. Architecturally
+/// a hint: issuing it has no memory effects and cannot change any
+/// result. No-op on non-x86_64 targets and for out-of-range indices.
+#[inline]
+pub fn prefetch_features(w: &[f32], x: &[SparseFeat]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        for &(i, _) in x {
+            if (i as usize) < w.len() {
+                // SAFETY: prefetch has no memory effects for any
+                // address; this one is in-bounds besides.
+                #[allow(unsafe_code)]
+                // pol-lint: allow(L007, "prefetch hint: no memory effects, in-bounds address")
+                unsafe {
+                    _mm_prefetch::<_MM_HINT_T0>(
+                        w.as_ptr().add(i as usize) as *const i8,
+                    )
+                };
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (w, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_is_cached_and_consistent() {
+        let t = tier();
+        assert_eq!(tier(), t);
+        assert!(t >= Tier::Scalar && t <= Tier::Avx2);
+    }
+
+    #[test]
+    fn tier_names_and_gauge_values() {
+        assert_eq!(Tier::Scalar.as_u64(), 0);
+        assert_eq!(Tier::Unrolled.as_u64(), 1);
+        assert_eq!(Tier::Avx2.as_u64(), 2);
+        assert_eq!(Tier::Scalar.name(), "scalar");
+        assert_eq!(Tier::Unrolled.name(), "unrolled");
+        assert_eq!(Tier::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn export_dispatch_sets_the_integer_gauge() {
+        let m = crate::obs::MetricsRegistry::new();
+        export_dispatch(&m);
+        let rendered = m.render();
+        assert!(
+            rendered.contains(&format!(
+                "pol_simd_dispatch {}",
+                tier().as_u64()
+            )),
+            "{rendered}"
+        );
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_on_a_smoke_input() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32) * 0.25 - 4.0).collect();
+        let x = [(0u32, 1.5f32), (63, -2.0), (7, 0.0), (7, 3.25)];
+        assert_eq!(
+            sparse_dot(&w, &x).to_bits(),
+            sparse_dot_scalar(&w, &x).to_bits()
+        );
+        let mut a = w.clone();
+        let mut b = w.clone();
+        sparse_saxpy(&mut a, -0.125, &x);
+        sparse_saxpy_scalar(&mut b, -0.125, &x);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let bytes: Vec<u8> = (0..300).map(|i| (i * 7 % 251) as u8).collect();
+        assert_eq!(fnv1a64(&bytes), fnv1a64_scalar(&bytes));
+        assert_eq!(zero_runs(&w, 2), zero_runs_scalar(&w, 2));
+    }
+
+    #[test]
+    fn prefetch_is_a_pure_hint() {
+        let w = vec![1.0f32; 128];
+        // out-of-range indices must be ignored, in-range ones are a no-op
+        prefetch_features(&w, &[(0, 1.0), (127, 1.0), (100_000, 1.0)]);
+        prefetch_features(&[], &[(0, 1.0)]);
+    }
+}

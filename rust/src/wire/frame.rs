@@ -24,7 +24,10 @@
 //! to an attacker-chosen number, only to bytes actually received (and
 //! those are capped at one frame). This mirrors the `.polz` codec
 //! discipline in [`crate::serve::checkpoint`] and reuses the same
-//! [`crate::hashing::fnv1a64`] checksum.
+//! [`crate::hashing::fnv1a64`] checksum — which since the SIMD pass
+//! runs the dispatched 8-bytes-per-load scan from [`crate::simd`],
+//! so whole-frame checksumming no longer walks the body a byte at a
+//! time (bit-identical: same serial FNV recurrence).
 
 use std::io::{self, Read, Write};
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -200,6 +200,40 @@ fn l006_waiver_suppresses() {
     assert!(findings("wire/server.rs", waived).is_empty());
 }
 
+// ---- L007: unsafe confined to the kernel layer ------------------------
+
+#[test]
+fn l007_flags_unwaived_unsafe_inside_the_kernel_scope() {
+    let bad = "fn f(w: &[f32]) -> f32 {\n    unsafe { *w.get_unchecked(0) }\n}\n";
+    assert_eq!(findings("simd/kernels.rs", bad), vec![(Rule::L007, 2, 5)]);
+    assert_eq!(findings("linalg.rs", bad), vec![(Rule::L007, 2, 5)]);
+}
+
+#[test]
+fn l007_waived_unsafe_inside_the_kernel_scope_passes() {
+    let waived = "fn f(w: &[f32]) -> f32 {\n    // pol-lint: allow(L007, \"fixture: in-range by construction\")\n    unsafe { *w.get_unchecked(0) }\n}\n";
+    assert!(findings("simd/mod.rs", waived).is_empty());
+    assert!(findings("linalg.rs", waived).is_empty());
+}
+
+#[test]
+fn l007_unsafe_outside_the_scope_fires_even_with_a_waiver() {
+    let bad = "fn f(w: &[f32]) -> f32 {\n    // pol-lint: allow(L007, \"a waiver cannot legalize this\")\n    unsafe { *w.get_unchecked(0) }\n}\n";
+    assert_eq!(findings("wire/frame.rs", bad), vec![(Rule::L007, 3, 5)]);
+    assert_eq!(findings("coordinator/mod.rs", bad), vec![(Rule::L007, 3, 5)]);
+}
+
+#[test]
+fn l007_attribute_tokens_and_test_code_do_not_trigger() {
+    // `unsafe_code` inside deny/allow attributes is not the `unsafe`
+    // token; test spans stay exempt like every other rule
+    let ok = "#![deny(unsafe_code)]\n#[allow(unsafe_code)]\nfn f() {}\n";
+    assert!(findings("serve/mod.rs", ok).is_empty());
+
+    let test_only = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t(w: &[f32]) -> f32 {\n        unsafe { *w.get_unchecked(0) }\n    }\n}\n";
+    assert!(findings("serve/mod.rs", test_only).is_empty());
+}
+
 // ---- multiple findings sort stably -----------------------------------
 
 #[test]

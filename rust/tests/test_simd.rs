@@ -1,0 +1,376 @@
+//! The simd bit-parity contract, adversarially: every default-enabled
+//! kernel must produce **bit-identical** results to its scalar
+//! reference on hostile inputs — duplicate indices, `-0.0`, `NaN`,
+//! extreme magnitudes, empty and odd-length tails — at every tier the
+//! host can run. Plus the cache-layout guarantees ([`AlignedTable`]
+//! 64-byte alignment across sizes and resizes) and the formats that
+//! ride on these kernels: a `.polz` checkpoint written through the
+//! aligned tables and the dispatched zero-run scanner must be
+//! byte-identical to the pre-existing format (golden bytes pinned
+//! below, machine-independent by the parity contract).
+//!
+//! CI runs this suite twice — default dispatch and `POL_SIMD=scalar` —
+//! so both sides of every dispatched call stay green. The tier is
+//! process-wide (detected once), so cross-tier parity here goes
+//! through the public per-tier entry points rather than the env var.
+
+use pol::learner::sgd::Sgd;
+use pol::linalg::SparseFeat;
+use pol::loss::Loss;
+use pol::lr::LrSchedule;
+use pol::rng::Rng;
+use pol::simd::{
+    fnv1a64, fnv1a64_scalar, fnv1a64_unrolled, sparse_dot, sparse_dot_avx2,
+    sparse_dot_reassoc, sparse_dot_scalar, sparse_dot_unrolled, sparse_saxpy,
+    sparse_saxpy_avx2, sparse_saxpy_scalar, sparse_saxpy_unrolled, zero_runs,
+    zero_runs_avx2, zero_runs_scalar, AlignedTable,
+};
+
+/// Bit pattern of a weight table, for exact comparisons through NaN.
+fn bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Assert every available dot tier agrees bitwise with the scalar
+/// reference on (w, x).
+fn assert_dot_parity(w: &[f32], x: &[SparseFeat], what: &str) {
+    let want = sparse_dot_scalar(w, x).to_bits();
+    assert_eq!(sparse_dot_unrolled(w, x).to_bits(), want, "unrolled: {what}");
+    assert_eq!(sparse_dot(w, x).to_bits(), want, "dispatched: {what}");
+    if let Some(got) = sparse_dot_avx2(w, x) {
+        assert_eq!(got.to_bits(), want, "avx2: {what}");
+    }
+}
+
+/// Assert every available saxpy tier leaves w bit-identical to the
+/// scalar reference.
+fn assert_saxpy_parity(w0: &[f32], a: f64, x: &[SparseFeat], what: &str) {
+    let mut reference = w0.to_vec();
+    sparse_saxpy_scalar(&mut reference, a, x);
+    let want = bits(&reference);
+
+    let mut unrolled = w0.to_vec();
+    sparse_saxpy_unrolled(&mut unrolled, a, x);
+    assert_eq!(bits(&unrolled), want, "unrolled: {what}");
+
+    let mut dispatched = w0.to_vec();
+    sparse_saxpy(&mut dispatched, a, x);
+    assert_eq!(bits(&dispatched), want, "dispatched: {what}");
+
+    let mut vector = w0.to_vec();
+    if sparse_saxpy_avx2(&mut vector, a, x) {
+        assert_eq!(bits(&vector), want, "avx2: {what}");
+    }
+}
+
+// ---------------------------------------------------- gather kernels
+
+#[test]
+fn dot_parity_on_adversarial_values() {
+    // duplicates (7 twice), -0.0 stored and multiplied, NaN weight,
+    // infinities from overflow, subnormals, and a zero-value feature
+    let w = [
+        1.0f32,
+        -0.0,
+        f32::NAN,
+        f32::MAX,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        -3.5,
+        0.0,
+        2.0f32.powi(-120),
+    ];
+    let cases: &[&[SparseFeat]] = &[
+        &[],
+        &[(0, 1.5)],
+        &[(2, 1.0)],                             // NaN propagates
+        &[(3, f32::MAX), (3, -f32::MAX)],        // inf + (-inf) = NaN
+        &[(1, -0.0), (6, -0.0)],                 // signed zero products
+        &[(7, 2.0f32.powi(-120)), (4, 1.0)],     // tiny magnitudes
+        &[(5, 1e30), (3, 1e30), (0, -1e30)],     // large magnitudes
+        &[(0, 1.0), (0, 1.0), (0, 1.0), (7, 0.5), (7, 0.5)], // duplicates
+    ];
+    for (i, x) in cases.iter().enumerate() {
+        assert_dot_parity(&w, x, &format!("case {i}"));
+    }
+}
+
+#[test]
+fn saxpy_parity_on_adversarial_values() {
+    let w0 = [0.5f32, -0.0, f32::NAN, f32::MAX, 0.0, 1.0, -2.0, 3.0];
+    let duplicates: &[SparseFeat] =
+        &[(4, 1.0), (4, 1.0), (4, -1.0), (0, 0.25), (0, 0.25)];
+    for &(a, what) in &[
+        (1e300f64, "a = 1e300 saturates the f32 store"),
+        (-0.0, "a = -0.0 keeps signed-zero semantics"),
+        (f64::NAN, "a = NaN poisons touched slots only"),
+        (1e-300, "a = 1e-300 underflows to signed zeros"),
+        (-0.37, "plain negative step"),
+    ] {
+        assert_saxpy_parity(&w0, a, duplicates, what);
+        assert_saxpy_parity(&w0, a, &[(2, f32::NAN), (5, -0.0)], what);
+        assert_saxpy_parity(&w0, a, &[], what);
+    }
+}
+
+#[test]
+fn dot_and_saxpy_parity_across_tail_lengths() {
+    // every remainder class of the 4- and 8-lane loops, plus fuzz
+    let mut rng = Rng::new(42);
+    let dim = 257; // odd, not a lane multiple
+    let w0: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    for nnz in [0usize, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33] {
+        let x: Vec<SparseFeat> = (0..nnz)
+            .map(|_| (rng.below(dim as u64) as u32, rng.normal() as f32))
+            .collect();
+        assert_dot_parity(&w0, &x, &format!("nnz={nnz}"));
+        assert_saxpy_parity(&w0, -0.125, &x, &format!("nnz={nnz}"));
+    }
+    // fuzz: random duplicate-heavy batches over a small table
+    for round in 0..50 {
+        let x: Vec<SparseFeat> = (0..rng.below(40))
+            .map(|_| (rng.below(16) as u32, (rng.normal() * 10.0) as f32))
+            .collect();
+        let a = rng.normal();
+        assert_dot_parity(&w0[..16], &x, &format!("fuzz round {round}"));
+        assert_saxpy_parity(&w0[..16], a, &x, &format!("fuzz round {round}"));
+    }
+}
+
+#[test]
+fn reassoc_dot_is_close_but_explicitly_off_the_parity_contract() {
+    // the reassociated dot must agree to rounding, not to the bit —
+    // that is exactly why it is never dispatched
+    let mut rng = Rng::new(7);
+    let w: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let x: Vec<SparseFeat> =
+        (0..33).map(|i| (i % 64, rng.normal() as f32)).collect();
+    let exact = sparse_dot_scalar(&w, &x);
+    let re = sparse_dot_reassoc(&w, &x);
+    assert!((exact - re).abs() <= 1e-9 * (1.0 + exact.abs()));
+}
+
+// ------------------------------------------------------- byte scans
+
+#[test]
+fn fnv_parity_and_pinned_vectors() {
+    // published FNV-1a 64 test vectors pin the constants
+    assert_eq!(fnv1a64_scalar(b""), 0xcbf29ce484222325);
+    assert_eq!(fnv1a64_scalar(b"a"), 0xaf63dc4c8601ec8c);
+    assert_eq!(fnv1a64_scalar(b"foobar"), 0x85944171f73967e8);
+    let mut rng = Rng::new(3);
+    for len in 0..=100usize {
+        let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let want = fnv1a64_scalar(&data);
+        assert_eq!(fnv1a64_unrolled(&data), want, "len {len}");
+        assert_eq!(fnv1a64(&data), want, "len {len}");
+    }
+}
+
+#[test]
+fn zero_run_parity_on_adversarial_shapes() {
+    let cases: Vec<Vec<f32>> = vec![
+        vec![],
+        vec![0.0; 7],
+        vec![0.0; 64],
+        vec![1.0; 64],
+        vec![-0.0; 9],                       // -0.0 is non-zero bits
+        [vec![0.0; 8], vec![1.0], vec![0.0; 8]].concat(),
+        [vec![1.0; 8], vec![0.0; 2], vec![1.0; 8]].concat(), // merged gap
+        [vec![1.0; 8], vec![0.0; 3], vec![1.0; 8]].concat(), // split gap
+        [vec![0.0; 15], vec![2.5]].concat(), // run starts at a lane tail
+        [vec![3.0], vec![0.0; 15]].concat(), // run ends at a lane head
+    ];
+    for (i, w) in cases.iter().enumerate() {
+        for gap in [0usize, 1, 2, 3, 8] {
+            let want = zero_runs_scalar(w, gap);
+            assert_eq!(zero_runs(w, gap), want, "case {i} gap {gap}");
+            if let Some(got) = zero_runs_avx2(w, gap) {
+                assert_eq!(got, want, "avx2 case {i} gap {gap}");
+            }
+        }
+    }
+    // fuzz across densities and lengths around the 8-lane boundaries
+    let mut rng = Rng::new(11);
+    for round in 0..200 {
+        let len = rng.below(70) as usize;
+        let density = 1 + rng.below(8);
+        let w: Vec<f32> = (0..len)
+            .map(|_| {
+                if rng.below(density) == 0 {
+                    rng.normal() as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let gap = rng.below(4) as usize;
+        let want = zero_runs_scalar(&w, gap);
+        assert_eq!(zero_runs(&w, gap), want, "fuzz {round}");
+        if let Some(got) = zero_runs_avx2(&w, gap) {
+            assert_eq!(got, want, "avx2 fuzz {round}");
+        }
+    }
+}
+
+// ----------------------------------------------------- cache layout
+
+#[test]
+fn aligned_tables_start_on_a_cache_line_across_sizes() {
+    for len in [0usize, 1, 15, 16, 17, 63, 64, 65, 100, 1000, 1 << 14] {
+        let t = AlignedTable::new(len);
+        assert_eq!(t.as_slice().as_ptr() as usize % 64, 0, "len {len}");
+        assert_eq!(t.len(), len);
+        assert!(t.iter().all(|&v| v == 0.0));
+        let from = AlignedTable::from_vec(vec![1.5; len]);
+        assert_eq!(from.as_slice().as_ptr() as usize % 64, 0, "len {len}");
+    }
+}
+
+#[test]
+fn aligned_table_resize_stays_aligned_and_zero_fills() {
+    let mut t = AlignedTable::from_vec(vec![2.0; 40]);
+    for len in [100usize, 7, 0, 65, 64, 1] {
+        t.resize(len);
+        assert_eq!(t.len(), len);
+        assert_eq!(t.as_slice().as_ptr() as usize % 64, 0, "len {len}");
+        // everything beyond the shortest historical prefix was vacated
+        // at some shrink and must read back as zero after the regrow
+        assert!(t.iter().skip(40).all(|&v| v == 0.0), "len {len}");
+    }
+    t.resize(8);
+    t.resize(80);
+    assert!(t.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn learner_weights_ride_aligned_tables() {
+    let s = Sgd::new(100, Loss::Squared, LrSchedule::constant(0.1));
+    assert_eq!(s.weights().as_ptr() as usize % 64, 0);
+}
+
+// ------------------------------------- checkpoint byte compatibility
+
+/// The `.polz` byte layout must be exactly what it was before the simd
+/// pass: header offsets pinned, payload hand-built from the format doc
+/// in `serve/checkpoint.rs`. Weights include a hole (so the zero-run
+/// scanner participates in the encoding choice) and a `-0.0` (which
+/// must be stored verbatim).
+#[test]
+fn checkpoint_bytes_are_pinned_through_the_simd_paths() {
+    let s = Sgd::from_parts(
+        vec![1.0, 0.0, -0.0, 2.5],
+        Loss::Squared,
+        LrSchedule::constant(0.25),
+        3,
+    );
+    let mut file = Vec::new();
+    pol::serve::checkpoint::write_sgd(&s, &mut file).expect("write");
+
+    // header: magic, version, encoding, plan-none, then the payload
+    assert_eq!(&file[0..4], b"POLZ");
+    assert_eq!(u32::from_le_bytes(file[4..8].try_into().expect("u32")), 3);
+    assert_eq!(file[8], 0, "raw beats zero-run at 4 weights");
+    assert_eq!(file[9], 2, "plan kind: none (plain sgd)");
+    assert!(file[10..22].iter().all(|&b| b == 0), "empty plan body");
+
+    // payload, byte for byte, from the documented layout
+    let cfg = "kind = sgd\nloss = squared\nlr = const:0.25\n";
+    let mut payload = Vec::new();
+    payload.push(0u8); // kind: sgd
+    payload.extend_from_slice(&(cfg.len() as u32).to_le_bytes());
+    payload.extend_from_slice(cfg.as_bytes());
+    payload.extend_from_slice(&4u64.to_le_bytes()); // dim
+    payload.extend_from_slice(&0u64.to_le_bytes()); // salt
+    payload.extend_from_slice(&3u64.to_le_bytes()); // trained
+    payload.extend_from_slice(&1u32.to_le_bytes()); // table count
+    payload.extend_from_slice(&3u64.to_le_bytes()); // step clock
+    payload.extend_from_slice(&4u64.to_le_bytes()); // table length
+    for w in [1.0f32, 0.0, -0.0, 2.5] {
+        payload.extend_from_slice(&w.to_le_bytes());
+    }
+    assert_eq!(
+        u64::from_le_bytes(file[38..46].try_into().expect("u64")),
+        payload.len() as u64
+    );
+    assert_eq!(&file[46..], &payload[..], "payload bytes moved");
+
+    // and the header integrity fields are the documented hashes
+    let digest = {
+        let mut b = cfg.as_bytes().to_vec();
+        b.extend_from_slice(&4u64.to_le_bytes());
+        b.extend_from_slice(&0u64.to_le_bytes());
+        pol::hashing::fnv1a64(&b)
+    };
+    assert_eq!(
+        u64::from_le_bytes(file[22..30].try_into().expect("u64")),
+        digest
+    );
+    let checksum = {
+        let mut b = vec![file[8]];
+        b.extend_from_slice(&file[9..22]);
+        b.extend_from_slice(&payload);
+        pol::hashing::fnv1a64(&b)
+    };
+    assert_eq!(
+        u64::from_le_bytes(file[30..38].try_into().expect("u64")),
+        checksum
+    );
+}
+
+#[test]
+fn checkpoint_round_trips_bit_exact_through_aligned_tables() {
+    // a sparse-ish table so the zero-run encoding wins and the
+    // dispatched scanner shapes the actual bytes; -0.0 stays verbatim
+    let mut w = vec![0.0f32; 512];
+    let mut rng = Rng::new(9);
+    for _ in 0..24 {
+        w[rng.below(512) as usize] = rng.normal() as f32;
+    }
+    w[100] = -0.0;
+    let s = Sgd::from_parts(w, Loss::Logistic, LrSchedule::inv_sqrt(2.0, 10.0), 77);
+    let mut first = Vec::new();
+    pol::serve::checkpoint::write_sgd(&s, &mut first).expect("write");
+    assert_eq!(first[8], 1, "zero-run encoding wins on a sparse table");
+
+    let restored = match pol::serve::checkpoint::read(&mut &first[..]).expect("read") {
+        pol::serve::Checkpoint::Sgd(s) => s,
+        _ => panic!("sgd checkpoint came back as a different kind"),
+    };
+    assert_eq!(bits(restored.weights()), bits(s.weights()));
+    assert_eq!(restored.steps(), s.steps());
+
+    let mut second = Vec::new();
+    pol::serve::checkpoint::write_sgd(&restored, &mut second).expect("write");
+    assert_eq!(first, second, "write → read → write must be a fixpoint");
+}
+
+#[test]
+fn coordinator_checkpoint_round_trips_bit_exact() {
+    use pol::config::{RunConfig, UpdateRule};
+    use pol::coordinator::Coordinator;
+    let ds = pol::data::synth::RcvLikeGen::new(pol::data::synth::SynthConfig {
+        instances: 2_000,
+        features: 300,
+        density: 10,
+        hash_bits: 10,
+        ..Default::default()
+    })
+    .generate();
+    let cfg = RunConfig {
+        rule: UpdateRule::Local,
+        loss: Loss::Logistic,
+        tau: 16,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg, ds.dim);
+    c.train(&ds);
+    let mut first = Vec::new();
+    pol::serve::checkpoint::write_coordinator(&c, &mut first).expect("write");
+    let restored = match pol::serve::checkpoint::read(&mut &first[..]).expect("read") {
+        pol::serve::Checkpoint::Coordinator(c) => c,
+        _ => panic!("coordinator checkpoint came back as a different kind"),
+    };
+    let mut second = Vec::new();
+    pol::serve::checkpoint::write_coordinator(&restored, &mut second).expect("write");
+    assert_eq!(first, second, "tree tables must re-encode byte-identically");
+}
