@@ -17,10 +17,15 @@
 //! `baseline` row shows the same pass with no serving load — their gap
 //! is the serving tax on the trainer (expected ≈ 0: readers share
 //! nothing with the trainer but one Arc swap per publish).
+//!
+//! The `wire-conns256-{threads,poll}` rows measure the mostly-idle
+//! fleet shape: 256 parked connections plus 4 hot clients, once per
+//! I/O backend — the comparison that motivates `--io-model poll`.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -35,7 +40,7 @@ use pol::metrics::LatencyHistogram;
 use pol::model::{Model, Session};
 use pol::serve::{ModelRegistry, PredictionServer, SnapshotCell};
 use pol::topology::Topology;
-use pol::wire::{WireClient, WireConfig, WireServer};
+use pol::wire::{IoModel, WireClient, WireConfig, WireServer};
 
 fn dataset(n: usize) -> Dataset {
     RcvLikeGen::new(SynthConfig {
@@ -266,6 +271,75 @@ fn run_wire(
     )
 }
 
+/// High-connection-count stage: `hot` clients drive batched predicts
+/// while `idle_target` connections sit parked — connected, silent —
+/// for the whole window. This is the mostly-idle fleet shape the
+/// readiness backend exists for: on `poll` the parked fleet costs one
+/// conn-table slot each and the hot subset keeps its full throughput;
+/// on `threads` every parked peer competes for the bounded handler
+/// pool. Hot clients connect FIRST so the threads row measures the
+/// pool serving real traffic (parked peers queue behind them) rather
+/// than a wedge. Parked connections the accept path cannot absorb
+/// (bounded conn queue + kernel backlog) are dropped and reported —
+/// that shortfall IS the threads-backend result, not an error.
+fn run_conns(
+    ds: &Dataset,
+    registry: &Arc<ModelRegistry>,
+    io: IoModel,
+    idle_target: usize,
+    hot: usize,
+    seconds: f64,
+) -> common::BenchRow {
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(registry),
+        WireConfig {
+            io_model: io,
+            handlers: hot,
+            max_conns: idle_target + hot + 16,
+            ..Default::default()
+        },
+    )
+    .expect("bind wire server");
+    let addr = server.local_addr();
+    // hot clients first: on `threads` they own the handler pool
+    let mut hot_clients: Vec<Option<WireClient>> = (0..hot)
+        .map(|_| Some(WireClient::connect(addr).expect("connect hot")))
+        .collect();
+    // park the idle fleet; a saturated accept path refuses the tail
+    let mut parked = Vec::with_capacity(idle_target);
+    for _ in 0..idle_target {
+        match TcpStream::connect_timeout(&addr, Duration::from_millis(250)) {
+            Ok(s) => parked.push(s),
+            Err(_) => break,
+        }
+    }
+    if parked.len() < idle_target {
+        println!(
+            "  ({io}: parked {}/{idle_target} idle conns — accept path saturated)",
+            parked.len()
+        );
+    }
+    let (total, hist, elapsed) = drive_load(ds, 16, hot, seconds, |c| {
+        let mut client = hot_clients[c].take().expect("hot client");
+        move |reqs: Vec<Vec<SparseFeat>>, preds: &mut Vec<f64>| {
+            client
+                .predict_batch_into("bench", &reqs, preds)
+                .expect("wire predict");
+        }
+    });
+    drop(parked);
+    let stats = server.shutdown();
+    let frames = stats.frames_in as f64 / elapsed.as_secs_f64().max(1e-9);
+    stage_row(
+        format!("wire-conns{idle_target}-{io}"),
+        total,
+        &hist,
+        elapsed,
+        Some(frames),
+    )
+}
+
 /// The in-process twin of [`run_wire`]: identical frozen snapshot,
 /// identical request stream, channel instead of socket.
 fn run_inproc(
@@ -348,6 +422,13 @@ fn main() {
             rows.push(run_inproc(&ds, &registry, batch, threads, 1.0));
             rows.push(run_wire(&ds, &registry, batch, threads, 1.0));
         }
+    }
+
+    // high-connection-count stage: 256 parked idle connections plus a
+    // hot subset, once per I/O backend — the production fleet shape
+    // that motivates the readiness loop (`--io-model poll`)
+    for io in [IoModel::Threads, IoModel::Poll] {
+        rows.push(run_conns(&ds, &registry, io, 256, 4, 1.0));
     }
     common::write_bench_json("serve_throughput", &rows);
     // the registry the instrumented rows trained against, as exposition

@@ -16,10 +16,10 @@
 //! |------|-----------|---------------------|
 //! | **L001** | No `.unwrap()` / `.expect(` in non-test library code. | The serving path's no-panic contract: poisoned-mutex and channel results map to [`crate::error`] (see [`crate::error::LockExt`]) instead of cascading a peer thread's panic into an outage. |
 //! | **L002** | `Ordering::Relaxed` only under `obs/` and in `metrics.rs`. | Cross-thread *publication* (snapshot cells, registry versions, shutdown flags) uses Acquire/Release pairs; `Relaxed` is reserved for monotonic telemetry counters where a stale read is harmless. Guards the bit-parity tests' assumption that readers see fully published snapshots. |
-//! | **L003** | In the decode functions of `wire/frame.rs`, `serve/checkpoint.rs`, and `obs/trace.rs`, every allocation (`with_capacity(`, `.reserve(`, `vec![`, `.resize(`) must be dominated by a `MAX_*` cap or `remaining()` bytes-present check earlier in the same function. | Bounded allocation against hostile or corrupt length fields — a crafted frame or checkpoint cannot make the process attempt an absurd allocation. |
+//! | **L003** | In the decode functions of `wire/frame.rs`, `wire/conn.rs`, `wire/poll.rs`, `serve/checkpoint.rs`, and `obs/trace.rs`, every allocation (`with_capacity(`, `.reserve(`, `vec![`, `.resize(`) must be dominated by a `MAX_*` cap or `remaining()` bytes-present check earlier in the same function. | Bounded allocation against hostile or corrupt length fields — a crafted frame or checkpoint cannot make the process attempt an absurd allocation. |
 //! | **L004** | No `Instant::now` / `SystemTime` under `coordinator/`, `model/`, `stream/`, `sharding/`. | Determinism of the training paths: the golden tests and the stream/in-memory bit-parity tests require that nothing on those paths branches on wall-clock time. (Timing that only feeds `TrainReport` is waived per site.) |
 //! | **L005** | No word-bounded `f32`/`f64` tokens in the record-path functions (`record*`, `inc*`, `add*`, `set*`, `observe*`, `tick*`, `merge*`) under `obs/`. | Telemetry records integers only; float math lives on snapshot *read* paths (quantiles, means), so recording never perturbs — or gets perturbed by — float state, and record hot paths stay integer-cheap. |
-//! | **L006** | No narrowing `as u8` / `as u16` / `as u32` casts in `wire/frame.rs`, `wire/client.rs`, `wire/server.rs`, `serve/checkpoint.rs`, `obs/trace.rs`. | Wire and checkpoint length fields are produced via `u32::try_from(..)` so an oversized length errors instead of truncating into a silently desynced frame or a checkpoint that decodes to the wrong model. |
+//! | **L006** | No narrowing `as u8` / `as u16` / `as u32` casts in `wire/frame.rs`, `wire/client.rs`, `wire/conn.rs`, `wire/poll.rs`, `wire/server.rs`, `serve/checkpoint.rs`, `obs/trace.rs`. | Wire and checkpoint length fields are produced via `u32::try_from(..)` so an oversized length errors instead of truncating into a silently desynced frame or a checkpoint that decodes to the wrong model. |
 //! | **L007** | `unsafe` only in `linalg.rs` and under `simd/`, and there only with a reasoned per-site waiver; anywhere else it fires *even with* a waiver. | The crate-wide `#![deny(unsafe_code)]` story: the entire unsafe surface (bounds-check-elided gathers, AVX2 intrinsics, aligned-table slice views) is confined to the kernel layer, each site carrying its in-range/feature-gated argument next to it — a new `unsafe` elsewhere cannot slip in behind an `#[allow]`. |
 //!
 //! # Waivers

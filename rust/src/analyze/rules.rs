@@ -251,11 +251,18 @@ fn parse_rule_id(s: &str) -> Option<(Rule, &str)> {
 
 // ---- rule scopes -----------------------------------------------------
 
-const L003_FILES: &[&str] =
-    &["wire/frame.rs", "serve/checkpoint.rs", "obs/trace.rs"];
+const L003_FILES: &[&str] = &[
+    "wire/frame.rs",
+    "wire/conn.rs",
+    "wire/poll.rs",
+    "serve/checkpoint.rs",
+    "obs/trace.rs",
+];
 const L006_FILES: &[&str] = &[
     "wire/frame.rs",
     "wire/client.rs",
+    "wire/conn.rs",
+    "wire/poll.rs",
     "wire/server.rs",
     "serve/checkpoint.rs",
     "obs/trace.rs",

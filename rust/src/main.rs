@@ -95,6 +95,14 @@ COMMANDS:
                    length-prefixed binary frames, routed by model name;
                    runs until a wire Shutdown frame, or --seconds S;
                    --batch/--density/--seed do not apply)
+                   --io-model threads|poll  (--listen only; default
+                   threads: bounded handler pool, one blocking thread
+                   per active connection. poll: one readiness loop
+                   multiplexing every connection over nonblocking
+                   sockets — overload sheds typed over-capacity frames
+                   instead of queueing; --threads does not apply)
+                   --max-conns N  (--io-model poll only; admission cap
+                   on tracked connections, default 1024)
                    --no-remote-shutdown  (ignore wire Shutdown frames;
                    only --seconds or the owning process stop the server)
   serve-stats      query a --listen server's wire + per-model stats,
@@ -1065,6 +1073,18 @@ fn render_top(
             .unwrap_or(0),
         series_sum(cur, "pol_wire_decode_errors_total"),
     );
+    // event-loop line: only meaningful once the poll backend has
+    // swept at least once (the threads backend reports 0 wakeups)
+    if series_sum(cur, "pol_wire_wakeups") > 0 {
+        let _ = writeln!(
+            out,
+            "poll loop: wakeups={} conns_shed={} frames_per_wakeup p50={} p99={}",
+            series_sum(cur, "pol_wire_wakeups"),
+            series_sum(cur, "pol_wire_conns_shed"),
+            series_value(cur, "pol_wire_wakeup_frames_p50").unwrap_or(0),
+            series_value(cur, "pol_wire_wakeup_frames_p99").unwrap_or(0),
+        );
+    }
     if series_value(cur, "pol_train_delay_count").is_some() {
         let _ = writeln!(
             out,
@@ -1273,11 +1293,15 @@ fn serve_listen(
     registry: Arc<ModelRegistry>,
     models: usize,
     threads: usize,
+    io_model: pol::wire::IoModel,
+    max_conns: usize,
     seconds: Option<f64>,
     allow_remote_shutdown: bool,
 ) -> i32 {
     let cfg = pol::wire::WireConfig {
+        io_model,
         handlers: threads,
+        max_conns,
         allow_remote_shutdown,
         ..Default::default()
     };
@@ -1288,8 +1312,14 @@ fn serve_listen(
             return 1;
         }
     };
+    let backend = match io_model {
+        pol::wire::IoModel::Threads => format!("{threads} handler(s)"),
+        pol::wire::IoModel::Poll => {
+            format!("poll loop, max {max_conns} conn(s)")
+        }
+    };
     eprintln!(
-        "serving {models} model(s) over TCP on {} ({threads} handler(s), {})",
+        "serving {models} model(s) over TCP on {} ({backend}, {})",
         server.local_addr(),
         match seconds {
             Some(s) => format!("for {s}s"),
@@ -1321,7 +1351,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         args,
         &[
             "--model", "--threads", "--seconds", "--batch", "--density",
-            "--seed", "--listen",
+            "--seed", "--listen", "--io-model", "--max-conns",
         ],
         &["--no-remote-shutdown"],
     ) {
@@ -1352,6 +1382,37 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
             let sock = resolve_addr("serve", "--listen", addr)?;
             let seconds: Option<f64> = parsed("serve", &fl, "--seconds")?;
+            let io_model: pol::wire::IoModel = match fl.get("--io-model") {
+                Some(v) => v
+                    .parse()
+                    .map_err(|e| format!("serve: --io-model: {e}"))?,
+                None => pol::wire::IoModel::Threads,
+            };
+            // knobs scoped to one backend are rejected on the other,
+            // never silently ignored
+            if io_model == pol::wire::IoModel::Poll
+                && fl.get("--threads").is_some()
+            {
+                return Err(
+                    "serve: --threads sizes the threads backend's handler \
+                     pool and does not apply with --io-model poll \
+                     (use --max-conns)"
+                        .into(),
+                );
+            }
+            let max_conns: usize = match parsed("serve", &fl, "--max-conns")? {
+                Some(n) => {
+                    if io_model != pol::wire::IoModel::Poll {
+                        return Err(
+                            "serve: --max-conns is the poll backend's \
+                             admission cap and requires --io-model poll"
+                                .into(),
+                        );
+                    }
+                    n
+                }
+                None => pol::wire::DEFAULT_MAX_CONNS,
+            };
             let (registry, loaded) = match load_registry(&named) {
                 Ok(r) => r,
                 Err(e) => {
@@ -1366,6 +1427,8 @@ fn cmd_serve(args: &[String]) -> i32 {
                 registry,
                 loaded.len(),
                 threads,
+                io_model,
+                max_conns,
                 seconds,
                 !fl.has("--no-remote-shutdown"),
             ));
@@ -1377,6 +1440,15 @@ fn cmd_serve(args: &[String]) -> i32 {
                  shutdown to disable)"
                     .into(),
             );
+        }
+        for flag in ["--io-model", "--max-conns"] {
+            if fl.get(flag).is_some() {
+                return Err(format!(
+                    "serve: {flag} selects the --listen wire server's I/O \
+                     backend and does not apply to the synthetic self-load \
+                     mode"
+                ));
+            }
         }
         let seconds: f64 = parsed("serve", &fl, "--seconds")?.unwrap_or(2.0);
         let batch: usize = parsed("serve", &fl, "--batch")?.unwrap_or(1);

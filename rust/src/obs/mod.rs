@@ -37,6 +37,10 @@
 //! | `pol_serve_registry_version`, `pol_serve_models` | wire | registry state |
 //! | `pol_wire_{bytes,frames}_{in,out}_total`, `pol_wire_decode_errors_total` | wire | frame traffic |
 //! | `pol_wire_connections_total`, `pol_wire_active_connections` | wire | connection churn |
+//! | `pol_wire_conns_active` | wire | connections being served right now (both backends) |
+//! | `pol_wire_conns_shed` | wire (poll) | connections refused by the admission cap |
+//! | `pol_wire_wakeups` | wire (poll) | readiness-loop sweeps (0 on the threads backend) |
+//! | `pol_wire_wakeup_frames{,_count,_sum,_max,_p50,_p99}` | wire (poll) | frames answered per wakeup (fairness budget) |
 //! | `pol_simd_dispatch` | simd | selected kernel tier (0 scalar / 1 unrolled / 2 avx2) |
 //!
 //! Instrumentation is counters only — no float math on any training

@@ -1,0 +1,382 @@
+//! Per-connection byte-shuttling state for the readiness-driven
+//! backend ([`crate::wire::poll`]): an accumulation buffer fed by
+//! nonblocking partial reads, a pending-output buffer drained by
+//! nonblocking partial writes, and the bookkeeping a multiplexed
+//! connection needs (idle clock, private stats buffer, drain/close
+//! flags).
+//!
+//! [`Conn`] is deliberately I/O-agnostic — [`Conn::fill`] and
+//! [`Conn::drain_to`] are generic over `Read`/`Write` — so the
+//! partial-read/partial-write/backpressure logic is unit-testable
+//! against in-memory transports that yield `WouldBlock` at arbitrary
+//! byte positions, which no real socket will do on demand.
+//!
+//! Buffer discipline (all caps are compile-time constants):
+//!
+//! * reads grow `rbuf` by at most [`READ_CHUNK`] per call — one
+//!   connection cannot monopolize a wakeup by having a deep socket
+//!   buffer;
+//! * the loop stops reading a connection once `pending()` reaches
+//!   [`RBUF_HIGH`] = `MAX_FRAME + 4`: at that size the buffer is
+//!   *guaranteed* to hold either a complete frame or a framing error
+//!   (no valid frame is larger), so decode always makes progress and
+//!   flow control can never deadlock;
+//! * the loop stops *decoding* (and reading) for a connection whose
+//!   un-drained output reaches [`WBUF_HIGH`] — a peer that sends
+//!   requests but never drains responses gets backpressure, not an
+//!   unbounded server-side queue.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::time::Instant;
+
+use crate::serve::server::ModelStats;
+use crate::wire::frame::{FrameWriter, MAX_FRAME};
+
+/// Most bytes one [`Conn::fill`] call reads — the per-connection,
+/// per-wakeup read quantum.
+pub(crate) const READ_CHUNK: usize = 1 << 14;
+
+/// Stop reading a connection whose accumulation buffer holds this many
+/// un-decoded bytes. `MAX_FRAME + 4` (prefix included) guarantees the
+/// buffer then contains a complete frame or a framing error, so the
+/// decode loop always makes progress against a backlogged peer.
+pub(crate) const RBUF_HIGH: usize = MAX_FRAME as usize + 4;
+
+/// Stop decoding for a connection whose pending output exceeds this —
+/// write backpressure for peers that pipeline requests without
+/// draining responses.
+pub(crate) const WBUF_HIGH: usize = 1 << 18;
+
+/// Compact `wbuf` (shift the un-written tail to the front) once the
+/// dead prefix passes this, so a long-lived slow reader cannot pin an
+/// ever-growing buffer.
+const WBUF_COMPACT: usize = 1 << 16;
+
+/// Compact `rbuf` once the consumed prefix passes this.
+const RBUF_COMPACT: usize = 1 << 16;
+
+/// What one [`Conn::fill`] observed on the transport.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum FillOutcome {
+    /// `n > 0` fresh bytes appended to the accumulation buffer.
+    Bytes(usize),
+    /// The transport has nothing now (`WouldBlock`/`Interrupted`).
+    NotReady,
+    /// Orderly end of stream — the peer finished sending.
+    Eof,
+    /// Transport error: the connection is unusable.
+    Gone,
+}
+
+/// What one [`Conn::drain_to`] left behind.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum DrainOutcome {
+    /// Pending output fully written (or there was none).
+    Drained,
+    /// Output remains; `progressed` says whether any byte moved.
+    Pending { progressed: bool },
+    /// Transport error or zero-length write: the connection is gone.
+    Gone,
+}
+
+/// One multiplexed connection's buffers and bookkeeping. Fields are
+/// `pub(crate)` because the poll loop borrows them *disjointly* — the
+/// decoded frame holds `rbuf` while the answer writes `wbuf`/`out` —
+/// which field access allows and accessor methods would forbid.
+pub(crate) struct Conn {
+    /// Accumulated inbound bytes; `rbuf[rpos..]` is un-decoded.
+    pub(crate) rbuf: Vec<u8>,
+    /// Decode cursor into `rbuf`.
+    pub(crate) rpos: usize,
+    /// Pending outbound bytes; `wbuf[wpos..]` is un-written.
+    pub(crate) wbuf: Vec<u8>,
+    /// Write cursor into `wbuf`.
+    pub(crate) wpos: usize,
+    /// Recycled frame assembler for this connection's responses.
+    pub(crate) out: FrameWriter,
+    /// Last moment a complete frame was answered (connect time before
+    /// any frame). Deliberately *not* advanced by partial reads: a
+    /// slow-loris peer trickling bytes that never finish a frame ages
+    /// toward the idle deadline exactly like a silent one, mirroring
+    /// the threads backend's per-frame deadline.
+    pub(crate) last_activity: Instant,
+    /// This connection's private per-model stats buffer (merged into
+    /// the shared map at cadence and on every close).
+    pub(crate) local_stats: HashMap<String, ModelStats>,
+    /// Frames answered since the last stats flush.
+    pub(crate) unflushed: u32,
+    /// Frames answered since drain began (bounded by
+    /// [`crate::wire::server::DRAIN_FRAMES`]).
+    pub(crate) drained: u32,
+    /// No further reads or decodes; close once `wbuf` drains (or the
+    /// loop's flush deadline passes).
+    pub(crate) closing: bool,
+    /// The peer half-closed its send side; answer what is buffered,
+    /// then close.
+    pub(crate) saw_eof: bool,
+}
+
+impl Conn {
+    /// Fresh state for a connection admitted at `now`.
+    pub(crate) fn new(now: Instant) -> Conn {
+        Conn {
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            out: FrameWriter::new(),
+            last_activity: now,
+            local_stats: HashMap::new(),
+            unflushed: 0,
+            drained: 0,
+            closing: false,
+            saw_eof: false,
+        }
+    }
+
+    /// The un-decoded inbound bytes.
+    pub(crate) fn pending(&self) -> &[u8] {
+        &self.rbuf[self.rpos..]
+    }
+
+    /// Bytes of output not yet written to the transport.
+    pub(crate) fn write_backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Whether the loop should try reading this connection at all:
+    /// not after EOF/close, and not past the [`RBUF_HIGH`] inbound or
+    /// [`WBUF_HIGH`] outbound high-water marks (flow control).
+    pub(crate) fn wants_fill(&self) -> bool {
+        !self.saw_eof
+            && !self.closing
+            && self.pending().len() < RBUF_HIGH
+            && self.write_backlog() < WBUF_HIGH
+    }
+
+    /// One bounded nonblocking read: grow `rbuf` by at most
+    /// [`READ_CHUNK`], pull what the transport has, shrink back to the
+    /// bytes actually received.
+    pub(crate) fn fill(&mut self, r: &mut impl Read) -> FillOutcome {
+        let old = self.rbuf.len();
+        self.rbuf.resize(old + READ_CHUNK, 0);
+        let got = r.read(&mut self.rbuf[old..]);
+        match got {
+            Ok(0) => {
+                self.rbuf.truncate(old);
+                self.saw_eof = true;
+                FillOutcome::Eof
+            }
+            Ok(n) => {
+                self.rbuf.truncate(old + n);
+                FillOutcome::Bytes(n)
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted
+                ) =>
+            {
+                self.rbuf.truncate(old);
+                FillOutcome::NotReady
+            }
+            Err(_) => {
+                self.rbuf.truncate(old);
+                FillOutcome::Gone
+            }
+        }
+    }
+
+    /// Mark `n` bytes at the front of [`Conn::pending`] decoded, and
+    /// compact the buffer when the dead prefix is the whole buffer (the
+    /// common pipelining case — backlog fully drained) or has grown
+    /// past [`RBUF_COMPACT`].
+    pub(crate) fn consume(&mut self, n: usize) {
+        self.rpos += n;
+        debug_assert!(self.rpos <= self.rbuf.len());
+        if self.rpos == self.rbuf.len() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        } else if self.rpos >= RBUF_COMPACT {
+            self.rbuf.copy_within(self.rpos.., 0);
+            let live = self.rbuf.len() - self.rpos;
+            self.rbuf.truncate(live);
+            self.rpos = 0;
+        }
+    }
+
+    /// One nonblocking write pass over the pending output. Loops while
+    /// the transport accepts bytes; stops at `WouldBlock`. `Ok(0)` from
+    /// a nonblocking socket write means the peer is gone.
+    pub(crate) fn drain_to(&mut self, w: &mut impl Write) -> DrainOutcome {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match w.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return DrainOutcome::Gone,
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return DrainOutcome::Gone,
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+            DrainOutcome::Drained
+        } else {
+            if self.wpos >= WBUF_COMPACT {
+                self.wbuf.copy_within(self.wpos.., 0);
+                let live = self.wbuf.len() - self.wpos;
+                self.wbuf.truncate(live);
+                self.wpos = 0;
+            }
+            DrainOutcome::Pending { progressed }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A reader that hands out its script one slice per call, then
+    /// yields `WouldBlock` forever (or EOF, when `eof` is set).
+    struct ScriptedReader {
+        chunks: Vec<Vec<u8>>,
+        eof: bool,
+    }
+
+    impl Read for ScriptedReader {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let Some(c) = self.chunks.first() {
+                let n = c.len().min(buf.len());
+                buf[..n].copy_from_slice(&c[..n]);
+                if n == c.len() {
+                    self.chunks.remove(0);
+                } else {
+                    self.chunks[0].drain(..n);
+                }
+                return Ok(n);
+            }
+            if self.eof {
+                Ok(0)
+            } else {
+                Err(io::Error::from(io::ErrorKind::WouldBlock))
+            }
+        }
+    }
+
+    /// A writer that accepts at most `cap` bytes per call and yields
+    /// `WouldBlock` every other call — the adversarial partial-write
+    /// transport.
+    struct TricklingWriter {
+        cap: usize,
+        wrote: Vec<u8>,
+        turn: bool,
+    }
+
+    impl Write for TricklingWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.turn = !self.turn;
+            if !self.turn {
+                return Err(io::Error::from(io::ErrorKind::WouldBlock));
+            }
+            let n = buf.len().min(self.cap);
+            self.wrote.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn fill_accumulates_partial_reads_and_flags_eof() {
+        let mut c = Conn::new(Instant::now());
+        let mut r = ScriptedReader {
+            chunks: vec![vec![1, 2, 3], vec![4, 5]],
+            eof: true,
+        };
+        assert_eq!(c.fill(&mut r), FillOutcome::Bytes(3));
+        assert_eq!(c.fill(&mut r), FillOutcome::Bytes(2));
+        assert_eq!(c.pending(), &[1, 2, 3, 4, 5]);
+        assert_eq!(c.fill(&mut r), FillOutcome::Eof);
+        assert!(c.saw_eof);
+        // rbuf never keeps the zero padding past the received bytes
+        assert_eq!(c.rbuf.len(), 5);
+    }
+
+    #[test]
+    fn fill_reports_not_ready_without_growing_the_buffer() {
+        let mut c = Conn::new(Instant::now());
+        let mut r = ScriptedReader { chunks: vec![], eof: false };
+        assert_eq!(c.fill(&mut r), FillOutcome::NotReady);
+        assert!(c.pending().is_empty());
+        assert_eq!(c.rbuf.len(), 0);
+    }
+
+    #[test]
+    fn consume_advances_and_compacts_at_the_boundary() {
+        let mut c = Conn::new(Instant::now());
+        c.rbuf = vec![9; 10];
+        c.consume(4);
+        assert_eq!(c.pending().len(), 6);
+        c.consume(6);
+        // fully consumed: buffer resets so steady state never grows
+        assert_eq!(c.rbuf.len(), 0);
+        assert_eq!(c.rpos, 0);
+    }
+
+    #[test]
+    fn drain_survives_would_block_and_partial_writes() {
+        let mut c = Conn::new(Instant::now());
+        c.wbuf = (0u8..100).collect();
+        let mut w = TricklingWriter { cap: 7, wrote: Vec::new(), turn: false };
+        let mut passes = 0;
+        loop {
+            match c.drain_to(&mut w) {
+                DrainOutcome::Drained => break,
+                DrainOutcome::Pending { .. } => passes += 1,
+                DrainOutcome::Gone => panic!("transport declared dead"),
+            }
+            assert!(passes < 1000, "drain must terminate");
+        }
+        assert_eq!(w.wrote, (0u8..100).collect::<Vec<u8>>());
+        assert_eq!(c.write_backlog(), 0);
+        assert_eq!(c.wbuf.len(), 0);
+    }
+
+    #[test]
+    fn drain_treats_zero_write_as_gone() {
+        struct DeadWriter;
+        impl Write for DeadWriter {
+            fn write(&mut self, _b: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut c = Conn::new(Instant::now());
+        c.wbuf = vec![1, 2, 3];
+        assert_eq!(c.drain_to(&mut DeadWriter), DrainOutcome::Gone);
+    }
+
+    #[test]
+    fn flow_control_stops_reads_at_the_high_water_marks() {
+        let mut c = Conn::new(Instant::now());
+        assert!(c.wants_fill());
+        c.rbuf = vec![0; RBUF_HIGH];
+        assert!(!c.wants_fill(), "inbound high-water mark must gate reads");
+        c.rbuf.clear();
+        c.wbuf = vec![0; WBUF_HIGH];
+        assert!(!c.wants_fill(), "write backpressure must gate reads");
+        c.wbuf.clear();
+        c.saw_eof = true;
+        assert!(!c.wants_fill(), "no reads after EOF");
+    }
+}

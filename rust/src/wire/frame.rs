@@ -483,6 +483,60 @@ pub fn read_frame<'a>(
     }))
 }
 
+/// Decode one frame from the *front* of an accumulation buffer — the
+/// nonblocking twin of [`read_frame`], for callers that gather bytes
+/// with readiness-driven partial reads instead of blocking on a
+/// stream. `Ok(None)` means "incomplete: keep reading"; `Ok(Some((f,
+/// consumed)))` yields the frame plus the byte count to drop from the
+/// buffer's front. The length prefix is validated as soon as its four
+/// bytes are present — a hostile claim past [`MAX_FRAME`] is rejected
+/// *before* the caller buffers anything toward it, so the
+/// accumulation buffer only ever grows by bytes actually received
+/// (and a complete valid frame always fits in `MAX_FRAME + 4`).
+/// Framing-level validation (magic, version, checksum) is identical
+/// to [`read_frame`], so the two decoders accept exactly the same
+/// byte streams.
+pub fn decode_frame_from(
+    buf: &[u8],
+) -> Result<Option<(Frame<'_>, usize)>, FrameError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = crate::bytes::le_u32(&buf[..4]);
+    if !(MIN_FRAME..=MAX_FRAME).contains(&len) {
+        return Err(FrameError::BadLength { len });
+    }
+    let total = 4 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let body = &buf[4..total];
+    let (content, sum_bytes) = body.split_at(body.len() - 8);
+    let sum = crate::bytes::le_u64(sum_bytes);
+    if fnv1a64(content) != sum {
+        return Err(FrameError::ChecksumMismatch);
+    }
+    if content[0..4] != MAGIC {
+        let mut magic = [0u8; 4];
+        magic.copy_from_slice(&content[0..4]);
+        return Err(FrameError::BadMagic(magic));
+    }
+    let version = crate::bytes::le_u16(&content[4..6]);
+    if version != PROTO_VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    Ok(Some((
+        Frame {
+            op: content[6],
+            status: content[7],
+            req_id: crate::bytes::le_u64(&content[8..16]),
+            payload: &content[16..],
+            wire_bytes: total,
+        },
+        total,
+    )))
+}
+
 // ---- predict payloads -----------------------------------------------
 
 /// Append one instance (`nnz | nnz × (idx, val)`) to a payload.
@@ -1227,6 +1281,68 @@ mod tests {
         }
         assert_eq!(Op::from_u8(0), None);
         assert_eq!(Op::from_u8(200), None);
+    }
+
+    #[test]
+    fn incremental_decode_agrees_with_blocking_decode_byte_by_byte() {
+        // feed the buffer one byte at a time: every prefix short of the
+        // full frame is "incomplete", the full frame decodes to the
+        // same fields read_frame produces, and trailing bytes from a
+        // pipelined successor are left untouched
+        let bytes = round_trip(Op::Ping as u8, STATUS_OK, 42, b"hello");
+        for cut in 0..bytes.len() {
+            match decode_frame_from(&bytes[..cut]) {
+                Ok(None) => {}
+                other => panic!("prefix {cut} should be incomplete: {other:?}"),
+            }
+        }
+        let (f, consumed) =
+            decode_frame_from(&bytes).expect("decode").expect("complete");
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(f.op, Op::Ping as u8);
+        assert_eq!(f.status, STATUS_OK);
+        assert_eq!(f.req_id, 42);
+        assert_eq!(f.payload, b"hello");
+        assert_eq!(f.wire_bytes, bytes.len());
+        // two pipelined frames: the first decodes, consumed points at
+        // the second, which then decodes from the remainder
+        let mut two = bytes.clone();
+        let second = round_trip(Op::Ping as u8, STATUS_OK, 43, b"again");
+        two.extend_from_slice(&second);
+        let (f, consumed) =
+            decode_frame_from(&two).expect("decode").expect("first");
+        assert_eq!(f.req_id, 42);
+        let (f2, c2) =
+            decode_frame_from(&two[consumed..]).expect("decode").expect("second");
+        assert_eq!(f2.req_id, 43);
+        assert_eq!(consumed + c2, two.len());
+    }
+
+    #[test]
+    fn incremental_decode_rejects_hostile_prefixes_before_buffering() {
+        // a 4 GiB length claim fails with exactly four bytes on hand
+        let claim = u32::MAX.to_le_bytes();
+        assert!(matches!(
+            decode_frame_from(&claim),
+            Err(FrameError::BadLength { len: u32::MAX })
+        ));
+        // under-length claims too
+        let tiny = 8u32.to_le_bytes();
+        assert!(matches!(
+            decode_frame_from(&tiny),
+            Err(FrameError::BadLength { len: 8 })
+        ));
+        // three bytes of a hostile claim are still just "incomplete"
+        assert!(matches!(decode_frame_from(&claim[..3]), Ok(None)));
+        // corruption inside a complete frame is caught the same as the
+        // blocking decoder
+        let mut corrupt = round_trip(Op::Stats as u8, STATUS_OK, 7, b"");
+        let n = corrupt.len();
+        corrupt[n - 9] ^= 0xFF;
+        assert!(matches!(
+            decode_frame_from(&corrupt),
+            Err(FrameError::ChecksumMismatch)
+        ));
     }
 
     #[test]

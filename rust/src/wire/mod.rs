@@ -27,25 +27,63 @@
 //!   and ping lengths) are enforced *before* any allocation, so a
 //!   hostile peer can never make either side allocate past one frame —
 //!   the same discipline as the `.polz` codec.
-//! * [`server`] — [`WireServer`]: a `TcpListener` acceptor plus a
-//!   bounded handler pool driving the **same**
+//! * [`server`] — [`WireServer`]: one handle, two I/O backends
+//!   (selected by [`WireConfig::io_model`]), both driving the **same**
 //!   [`crate::serve::ModelRegistry`]/[`crate::serve::SnapshotCell`]
 //!   read path as the in-process [`crate::serve::PredictionServer`]
 //!   (per-connection cached `(reader, scratch)` through
 //!   [`crate::serve::ModelCache`] — zero steady-state allocation),
 //!   per-model routing by name, request pipelining, graceful drain,
-//!   an idle-connection deadline (the slow-loris guard for the
-//!   bounded pool), an optional remote-shutdown lockout, and
-//!   wire-level stats. With [`WireConfig::obs`] attached, the
-//!   `MetricsDump` op exports the whole process's metrics registry in
-//!   the `# pol-metrics v1` text format (see [`crate::obs`]) — what
-//!   `pol top`/`pol metrics` scrape.
+//!   an idle-connection/slow-loris deadline, an optional
+//!   remote-shutdown lockout, and wire-level stats. With
+//!   [`WireConfig::obs`] attached, the `MetricsDump` op exports the
+//!   whole process's metrics registry in the `# pol-metrics v1` text
+//!   format (see [`crate::obs`]) — what `pol top`/`pol metrics`
+//!   scrape.
+//! * [`poll`] + [`conn`] — the readiness-driven backend
+//!   ([`IoModel::Poll`]): one event loop multiplexing every
+//!   connection over nonblocking sockets, with per-connection
+//!   buffered state machines ([`conn`]) and a pure-`std` readiness
+//!   shim ([`Poller`]/[`ScanPoller`]).
 //! * [`client`] — [`WireClient`]: blocking, one reused connection,
 //!   single/batch/pipelined predict (bounded in-flight window, so
 //!   arbitrarily long request streams cannot deadlock the socket
 //!   buffers) plus the admin ops, every failure a typed [`WireError`]
 //!   — and responses are shape-checked, so a misbehaving peer yields
 //!   an error, never a panic.
+//!
+//! # Picking an I/O model
+//!
+//! **`threads`** (the default): a bounded handler pool, one blocking
+//! thread per active connection. Lowest latency for a few busy,
+//! long-lived peers (a dedicated thread blocks directly on the
+//! socket); concurrency is capped at the pool size, and connections
+//! past it wait *unserved* in the kernel accept backlog — mostly-idle
+//! peers monopolize handlers.
+//!
+//! **`poll`**: one readiness loop multiplexing every connection
+//! ([`poll`] module docs have the mechanics). Thousands of
+//! mostly-idle connections cost no threads; concurrency is capped by
+//! [`WireConfig::max_conns`] *admission control*, not thread count.
+//! Pick it whenever connection count exceeds a sane thread count —
+//! the production posture for "millions of users" traffic.
+//!
+//! Overload semantics differ on purpose. The threads backend queues
+//! excess connections in the accept backlog (invisible until the
+//! kernel drops them). The poll backend is explicit: a connection
+//! past `max_conns` is **shed** — it receives one typed
+//! over-capacity frame ([`Op::Shutdown`] op byte, `TOO_LARGE`
+//! status, request id 0; surfaced by [`WireClient`] as a typed
+//! server error) and is closed, the `pol_wire_conns_shed` counter
+//! ticks, and every *admitted* connection keeps answering.
+//! Per-connection fairness comes from [`WireConfig::frame_budget`]:
+//! at most that many frames are answered per connection per loop
+//! sweep, so a max-rate pipelining peer cannot starve a slow one.
+//!
+//! Both backends answer through one shared dispatch, so every
+//! response byte — prediction bits included — is identical between
+//! them; the test suite runs against both (`POL_WIRE_IO` selects the
+//! backend matrix in CI).
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -68,8 +106,12 @@
 
 /// Blocking client for the framed protocol.
 pub mod client;
+/// Per-connection buffered state for the readiness backend.
+pub mod conn;
 /// Frame format: header, opcodes, payload codecs.
 pub mod frame;
+/// Readiness event loop + pure-`std` poller shim.
+pub mod poll;
 /// TCP server speaking the framed protocol.
 pub mod server;
 
@@ -78,6 +120,8 @@ pub use frame::{
     FrameError, ModelEntry, ModelStatsReport, Op, StatsReport, MAX_BATCH,
     MAX_FEATURES, MAX_FRAME, MAX_NAME, MAX_PING, PROTO_VERSION,
 };
+pub use poll::{Poller, ScanPoller, DRAIN_FLUSH};
 pub use server::{
-    WireConfig, WireServer, DEFAULT_STATS_FLUSH_FRAMES, DRAIN_FRAMES,
+    IoModel, WireConfig, WireServer, DEFAULT_FRAME_BUDGET,
+    DEFAULT_MAX_CONNS, DEFAULT_STATS_FLUSH_FRAMES, DRAIN_FRAMES,
 };

@@ -1,0 +1,494 @@
+//! The readiness-driven wire backend ([`IoModel::Poll`]): one loop,
+//! nonblocking sockets, every connection multiplexed.
+//!
+//! [`IoModel::Poll`]: crate::wire::server::IoModel::Poll
+//!
+//! # Shape
+//!
+//! [`PollServer::run`] owns the listener and every admitted connection
+//! and sweeps them per wakeup:
+//!
+//! 1. **accept** — drain the nonblocking accept queue. A connection
+//!    past the admission cap is *shed*: it gets one typed
+//!    over-capacity frame ([`Op::Shutdown`] op byte,
+//!    [`STATUS_TOO_LARGE`]) and an immediate close, and the
+//!    `pol_wire_conns_shed` counter ticks — overload is explicit, not
+//!    a silently collapsing queue.
+//! 2. **per connection** — write-drain pending output, then read up
+//!    to one [`crate::wire::conn::READ_CHUNK`], then decode and
+//!    answer at most `frame_budget` frames. The budget is the
+//!    fairness mechanism: a peer streaming max-rate pipelined frames
+//!    is preempted after `frame_budget` answers and the sweep moves
+//!    on, so a slow peer's single frame is never stuck behind an
+//!    unbounded burst.
+//! 3. **sleep** — only when a full sweep made no progress anywhere
+//!    (no bytes moved, no frames answered, no state change), for the
+//!    configured poll interval.
+//!
+//! Answers come from the same [`answer_frame`] dispatch the threads
+//! backend runs, writing into the connection's pending-output buffer
+//! (`Vec<u8>` implements `io::Write`; the flush inside `send_frame`
+//! is a no-op there) — prediction bytes are bit-identical across
+//! backends by construction.
+//!
+//! # Readiness without `poll(2)`
+//!
+//! The crate confines `unsafe` to the kernel layer (lint rule L007 —
+//! not waivable elsewhere), and `std` exposes no readiness syscall,
+//! so the [`Poller`] trait is the platform seam: [`ScanPoller`], the
+//! pure-`std` implementation used today, reports "probe everything"
+//! and relies on nonblocking reads/writes returning `WouldBlock` as
+//! the per-source readiness verdict, sleeping the poll interval only
+//! when a whole sweep is idle. An OS-backed `poll(2)`/`epoll`
+//! implementation slots in behind the same trait (wait returns the
+//! ready tokens; the sweep then probes only those) the day an FFI
+//! story exists — nothing above this module changes.
+//!
+//! # Deadlines, drain, stats
+//!
+//! Idle and slow-loris peers age out against `idle_timeout`: a
+//! connection's clock only advances when a *complete* frame is
+//! answered, so trickling bytes that never finish a frame is
+//! indistinguishable from silence, mirroring the threads backend's
+//! per-frame read deadline. On shutdown the loop stops accepting,
+//! answers only the frames already buffered per connection (bounded
+//! by [`DRAIN_FRAMES`]), enqueues the typed shutting-down frame, and
+//! closes each connection as its output drains (bounded by
+//! [`DRAIN_FLUSH`]). Every close — idle, EOF, error, shed-free drain —
+//! flushes the connection's private stats buffer into the shared map
+//! first, the same disconnect-flush contract the threads backend
+//! keeps.
+
+// Every Relaxed here is monotonic telemetry (shed/wakeup/byte/frame
+// counters, the active gauge); real cross-thread hand-off goes through
+// the `stop` flag's Acquire/Release pair and the stats mutex.
+// pol-lint: allow-file(L002, "wire counters are monotonic telemetry")
+
+use std::io::{self, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::LockExt;
+use crate::wire::conn::{Conn, DrainOutcome, FillOutcome, WBUF_HIGH};
+use crate::wire::frame::{
+    decode_frame_from, FrameWriter, Op, STATUS_SHUTTING_DOWN,
+    STATUS_TOO_LARGE,
+};
+use crate::wire::server::{
+    answer_frame, flush_stats, send_goodbye, HandlerCtx, Shared,
+    DRAIN_FRAMES,
+};
+
+/// How long a draining [`PollServer`] keeps lingering connections
+/// around to flush their final output before force-closing them.
+pub const DRAIN_FLUSH: Duration = Duration::from_secs(5);
+
+/// The platform seam for readiness notification. Implementations tell
+/// the event loop *which* registered sources to probe after a wait.
+///
+/// `std` has no readiness syscall and lint rule L007 keeps `unsafe`
+/// (hence FFI) out of this layer, so the shipped implementation is the
+/// probe-based [`ScanPoller`]; an OS `poll(2)`/`epoll` backend belongs
+/// behind this same trait.
+pub trait Poller {
+    /// Track a new readiness source under `token`.
+    fn register(&mut self, token: usize);
+    /// Stop tracking `token`.
+    fn deregister(&mut self, token: usize);
+    /// Block up to `timeout` for readiness. `None` means "no
+    /// per-source information — probe every registered source";
+    /// `Some(tokens)` narrows the next sweep to those sources.
+    fn wait(&mut self, timeout: Duration) -> Option<Vec<usize>>;
+}
+
+/// Pure-`std` [`Poller`]: no readiness syscall, so every wait reports
+/// "probe everything" and the loop discovers per-source readiness from
+/// nonblocking calls returning `WouldBlock`. The wait itself is a
+/// plain sleep — it only runs when a full sweep made no progress, so
+/// the loop idles at the poll interval instead of spinning.
+pub struct ScanPoller {
+    registered: usize,
+}
+
+impl ScanPoller {
+    /// A poller tracking nothing.
+    pub fn new() -> ScanPoller {
+        ScanPoller { registered: 0 }
+    }
+
+    /// How many sources are currently registered.
+    pub fn registered(&self) -> usize {
+        self.registered
+    }
+}
+
+impl Default for ScanPoller {
+    fn default() -> Self {
+        ScanPoller::new()
+    }
+}
+
+impl Poller for ScanPoller {
+    fn register(&mut self, _token: usize) {
+        self.registered += 1;
+    }
+
+    fn deregister(&mut self, _token: usize) {
+        self.registered = self.registered.saturating_sub(1);
+    }
+
+    fn wait(&mut self, timeout: Duration) -> Option<Vec<usize>> {
+        std::thread::sleep(timeout);
+        None
+    }
+}
+
+/// Tuning handed from [`crate::wire::server::WireConfig`] to the loop.
+pub(crate) struct PollParams {
+    /// Sleep between sweeps that made no progress.
+    pub(crate) poll: Duration,
+    /// Idle/slow-loris deadline per connection (`None` = never).
+    pub(crate) idle_timeout: Option<Duration>,
+    /// Admission cap: connections tracked at once; excess is shed.
+    pub(crate) max_conns: usize,
+    /// Frames answered per connection per sweep (fairness quantum).
+    pub(crate) frame_budget: u32,
+}
+
+/// One admitted connection: its socket, its readiness token, and its
+/// buffered state machine.
+struct PollConn {
+    token: usize,
+    stream: TcpStream,
+    conn: Conn,
+}
+
+/// What one [`PollServer::service`] pass decided for a connection.
+enum Verdict {
+    /// Keep the connection; `progressed`/`frames` feed the sweep's
+    /// progress flag and the per-wakeup frames histogram.
+    Keep { progressed: bool, frames: u32 },
+    /// Remove and close the connection (stats flush first).
+    Close,
+}
+
+/// The readiness event loop (see the module docs). Constructed and run
+/// on the dedicated `wire-poll` thread by
+/// [`crate::wire::server::WireServer::bind`].
+pub(crate) struct PollServer {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+    poller: ScanPoller,
+    conns: Vec<PollConn>,
+    ctx: HandlerCtx,
+    params: PollParams,
+    next_token: usize,
+    drain_deadline: Option<Instant>,
+    shed_frame: Vec<u8>,
+}
+
+impl PollServer {
+    /// Wrap an already-bound listener. The shed frame is precomputed
+    /// once so overload handling allocates nothing per refused peer.
+    pub(crate) fn new(
+        shared: Arc<Shared>,
+        listener: TcpListener,
+        params: PollParams,
+    ) -> PollServer {
+        // best-effort: if the platform refused nonblocking mode the
+        // stop-wake connection still unblocks a stuck accept
+        let _ = listener.set_nonblocking(true);
+        let mut out = FrameWriter::new();
+        out.start(
+            // pol-lint: allow(L006, "Op discriminants are u8 by definition")
+            Op::Shutdown as u8,
+            STATUS_TOO_LARGE,
+            0,
+        );
+        out.payload()
+            .extend_from_slice(b"server over capacity: connection shed");
+        let mut shed_frame = Vec::new();
+        // writing to a Vec cannot fail
+        let _ = out.finish_to(&mut shed_frame);
+        let ctx = HandlerCtx::new(&shared.registry);
+        PollServer {
+            shared,
+            listener,
+            poller: ScanPoller::new(),
+            conns: Vec::new(),
+            ctx,
+            params,
+            next_token: 0,
+            drain_deadline: None,
+            shed_frame,
+        }
+    }
+
+    /// Run until a drain is requested and every connection has closed.
+    pub(crate) fn run(mut self) {
+        loop {
+            let now = Instant::now();
+            let draining = self.shared.stop.load(Ordering::Acquire);
+            if draining && self.drain_deadline.is_none() {
+                self.drain_deadline = Some(now + DRAIN_FLUSH);
+            }
+            if !draining {
+                self.accept_new(now);
+            }
+            let mut progressed = false;
+            let mut total_frames = 0u64;
+            let mut i = 0;
+            while i < self.conns.len() {
+                match self.service(i, now, draining) {
+                    Verdict::Close => {
+                        self.close_at(i);
+                        progressed = true;
+                        // swap_remove moved a fresh conn into slot i
+                    }
+                    Verdict::Keep { progressed: p, frames } => {
+                        progressed |= p;
+                        total_frames += u64::from(frames);
+                        i += 1;
+                    }
+                }
+            }
+            self.shared.wakeups.fetch_add(1, Ordering::Relaxed);
+            {
+                // per-wakeup frames-answered histogram (fairness
+                // budget observability); idle sweeps record zeros
+                let mut wf =
+                    self.shared.wakeup_frames.lock().recover_poisoned();
+                wf.record(total_frames);
+            }
+            if draining && self.conns.is_empty() {
+                break;
+            }
+            if !progressed {
+                let _ = self.poller.wait(self.params.poll);
+            }
+        }
+    }
+
+    /// Drain the nonblocking accept queue: admit up to the cap, shed
+    /// the rest with the typed over-capacity frame.
+    fn accept_new(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.shared.stop.load(Ordering::Acquire) {
+                        // trigger_stop's throwaway wake connection:
+                        // never counted, exactly like the threads
+                        // acceptor's post-accept stop check
+                        return;
+                    }
+                    if self.conns.len() >= self.params.max_conns {
+                        self.shed(stream);
+                        continue;
+                    }
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    self.shared.connections.fetch_add(1, Ordering::Relaxed);
+                    self.shared.active.fetch_add(1, Ordering::Relaxed);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    self.poller.register(token);
+                    self.conns.push(PollConn {
+                        token,
+                        stream,
+                        conn: Conn::new(now),
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                // transient accept failure (EMFILE under a flood):
+                // retry next sweep instead of hot-looping
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Refuse one over-cap connection: count it, best-effort write the
+    /// precomputed typed frame, close. The frame is a handful of bytes
+    /// into an empty socket buffer, so the single nonblocking write
+    /// virtually always lands whole; a peer that raced away simply
+    /// misses its goodbye.
+    fn shed(&mut self, stream: TcpStream) {
+        self.shared.shed.fetch_add(1, Ordering::Relaxed);
+        let _ = stream.set_nonblocking(true);
+        let mut w = &stream;
+        if w.write_all(&self.shed_frame).is_ok() {
+            self.shared.frames_out.fetch_add(1, Ordering::Relaxed);
+            self.shared
+                .bytes_out
+                .fetch_add(self.shed_frame.len() as u64, Ordering::Relaxed);
+        }
+        // stream drops here: FIN right behind the frame
+    }
+
+    /// One service pass over connection `i`: write-drain, deadlines,
+    /// read, then decode/answer up to the fairness budget.
+    fn service(&mut self, i: usize, now: Instant, draining: bool) -> Verdict {
+        let pc = &mut self.conns[i];
+        let mut progressed = false;
+
+        // pending output first — a readiness loop must never let
+        // decode work starve half-written responses
+        let wrote = {
+            let mut w = &pc.stream;
+            pc.conn.drain_to(&mut w)
+        };
+        match wrote {
+            DrainOutcome::Gone => return Verdict::Close,
+            DrainOutcome::Drained => {}
+            DrainOutcome::Pending { progressed: p } => progressed |= p,
+        }
+
+        // a closing connection only lingers for its final bytes
+        if pc.conn.closing {
+            if pc.conn.write_backlog() == 0
+                || self.drain_deadline.is_some_and(|d| now >= d)
+            {
+                return Verdict::Close;
+            }
+            return Verdict::Keep { progressed, frames: 0 };
+        }
+
+        // idle/slow-loris deadline: the clock only advances on
+        // answered frames, so byte-trickling ages out too
+        if let Some(idle) = self.params.idle_timeout {
+            if now.duration_since(pc.conn.last_activity) >= idle {
+                return Verdict::Close;
+            }
+        }
+
+        // read one bounded chunk (never while draining: shutdown
+        // answers only what was already buffered)
+        if !draining && pc.conn.wants_fill() {
+            let got = {
+                let mut r = &pc.stream;
+                pc.conn.fill(&mut r)
+            };
+            match got {
+                FillOutcome::Bytes(_) | FillOutcome::Eof => progressed = true,
+                FillOutcome::NotReady => {}
+                FillOutcome::Gone => return Verdict::Close,
+            }
+        }
+
+        // decode and answer up to the fairness budget
+        let mut frames = 0u32;
+        let mut backlog_empty = false;
+        while frames < self.params.frame_budget {
+            if draining && pc.conn.drained >= DRAIN_FRAMES {
+                break; // bounded drain: stop answering
+            }
+            if pc.conn.write_backlog() >= WBUF_HIGH {
+                break; // write backpressure: answers wait for drain
+            }
+            match decode_frame_from(&pc.conn.rbuf[pc.conn.rpos..]) {
+                Ok(None) => {
+                    backlog_empty = true;
+                    break;
+                }
+                Ok(Some((frame, total))) => {
+                    self.shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                    self.shared
+                        .bytes_in
+                        .fetch_add(total as u64, Ordering::Relaxed);
+                    if draining {
+                        pc.conn.drained += 1;
+                    }
+                    let sent = answer_frame(
+                        &self.shared,
+                        &frame,
+                        &mut self.ctx,
+                        &mut pc.conn.out,
+                        &mut pc.conn.wbuf,
+                        &mut pc.conn.local_stats,
+                        &mut pc.conn.unflushed,
+                    );
+                    pc.conn.consume(total);
+                    if sent.is_err() {
+                        // unreachable for a Vec sink, but the contract
+                        // is "send failure closes the connection"
+                        return Verdict::Close;
+                    }
+                    pc.conn.last_activity = now;
+                    frames += 1;
+                    progressed = true;
+                }
+                Err(_) => {
+                    // framing corruption: the byte stream cannot be
+                    // resynchronized — count and close, same policy
+                    // (and same counter) as the threads backend
+                    self.shared.decode_errors.fetch_add(1, Ordering::Relaxed);
+                    return Verdict::Close;
+                }
+            }
+        }
+
+        if draining {
+            // buffered frames answered (or the drain cap hit): tell
+            // pipelined peers why the stream ends, then linger only
+            // for the output to flush
+            if backlog_empty || pc.conn.drained >= DRAIN_FRAMES {
+                let _ = send_goodbye(
+                    &self.shared,
+                    &mut pc.conn.out,
+                    &mut pc.conn.wbuf,
+                    STATUS_SHUTTING_DOWN,
+                    "server draining",
+                );
+                pc.conn.closing = true;
+                progressed = true;
+            }
+        } else if pc.conn.saw_eof && backlog_empty {
+            if pc.conn.rpos < pc.conn.rbuf.len() {
+                // EOF inside a frame: truncation, counted like the
+                // threads backend's mid-frame EOF
+                self.shared.decode_errors.fetch_add(1, Ordering::Relaxed);
+                return Verdict::Close;
+            }
+            if pc.conn.write_backlog() == 0 {
+                return Verdict::Close; // clean close at a boundary
+            }
+            pc.conn.closing = true; // flush the tail, then close
+        }
+
+        Verdict::Keep { progressed, frames }
+    }
+
+    /// Close and forget connection `i` — flushing its private stats
+    /// into the shared map *first*, the same disconnect-flush contract
+    /// the threads backend keeps (idle-timeout and shed-drain closes
+    /// included).
+    fn close_at(&mut self, i: usize) {
+        let mut pc = self.conns.swap_remove(i);
+        flush_stats(&self.shared, &mut pc.conn.local_stats);
+        self.poller.deregister(pc.token);
+        self.shared.active.fetch_sub(1, Ordering::Relaxed);
+        // pc.stream drops here, closing the socket
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_poller_tracks_registration_and_reports_probe_all() {
+        let mut p = ScanPoller::new();
+        assert_eq!(p.registered(), 0);
+        p.register(7);
+        p.register(9);
+        assert_eq!(p.registered(), 2);
+        p.deregister(7);
+        assert_eq!(p.registered(), 1);
+        // no readiness syscall: a wait always says "probe everything"
+        assert_eq!(p.wait(Duration::from_millis(1)), None);
+        p.deregister(9);
+        p.deregister(9); // double-deregister must not underflow
+        assert_eq!(p.registered(), 0);
+    }
+}

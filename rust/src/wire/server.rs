@@ -1,17 +1,31 @@
 //! [`WireServer`] — the TCP front-end over the serving registry.
 //!
-//! One `std::net::TcpListener` acceptor thread feeds accepted
-//! connections to a **bounded** pool of handler threads (the pool size
-//! is the concurrency cap; further connections queue in the kernel
-//! accept backlog — a connection flood cannot spawn unbounded
-//! threads). Each handler owns exactly the per-connection state the
-//! in-process serving workers own per thread: a
+//! Two I/O backends answer the same protocol behind one handle,
+//! selected by [`WireConfig::io_model`] (see [`crate::wire`] for the
+//! when-to-pick-which discussion):
+//!
+//! * [`IoModel::Threads`] — one `std::net::TcpListener` acceptor
+//!   thread feeds accepted connections to a **bounded** pool of
+//!   handler threads (the pool size is the concurrency cap; further
+//!   connections queue in the kernel accept backlog — a connection
+//!   flood cannot spawn unbounded threads).
+//! * [`IoModel::Poll`] — one readiness loop multiplexes every
+//!   connection over nonblocking sockets (see [`crate::wire::poll`]):
+//!   concurrency is capped by [`WireConfig::max_conns`] admission
+//!   control instead of a thread count, overload sheds typed
+//!   over-capacity frames, and a per-connection
+//!   [`WireConfig::frame_budget`] keeps a chatty pipelining peer from
+//!   starving the rest.
+//!
+//! Either way a connection is served with exactly the per-connection
+//! state the in-process serving workers own per thread: a
 //! [`ModelCache`] of `(reader, scratch)` pairs, a recycled
 //! [`FrameBuf`]/[`FrameWriter`], and recycled decode/predict buffers —
 //! the steady-state request path allocates nothing, and scoring drives
 //! the *same* [`crate::serve::ModelRegistry`]/snapshot read path as
-//! [`crate::serve::PredictionServer`], so wire answers are
-//! bit-identical to in-process answers by construction.
+//! [`crate::serve::PredictionServer`] through one shared dispatch
+//! ([`answer_frame`]), so wire answers are bit-identical to in-process
+//! answers — and across the two backends — by construction.
 //!
 //! Requests pipeline: a client may send many frames without waiting;
 //! the handler answers them in arrival order and every response
@@ -57,12 +71,72 @@ use crate::wire::frame::{
 /// drain open forever.
 pub const DRAIN_FRAMES: u32 = 256;
 
+/// Default admission cap for the [`IoModel::Poll`] backend.
+pub const DEFAULT_MAX_CONNS: usize = 1024;
+
+/// Default [`WireConfig::frame_budget`] for the [`IoModel::Poll`]
+/// backend.
+pub const DEFAULT_FRAME_BUDGET: u32 = 16;
+
+/// Which I/O backend [`WireServer::bind`] starts. Both speak the
+/// identical protocol over the identical registry read path; they
+/// differ only in how connections map onto threads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IoModel {
+    /// Blocking I/O, one handler thread per active connection, pool
+    /// bounded by [`WireConfig::handlers`]. Simple and fast for a few
+    /// busy peers; concurrency is capped at the thread count.
+    #[default]
+    Threads,
+    /// One readiness loop multiplexing every connection over
+    /// nonblocking sockets. Concurrency is capped by
+    /// [`WireConfig::max_conns`] (overload sheds typed frames instead
+    /// of queueing), so thousands of mostly-idle peers cost no
+    /// threads.
+    Poll,
+}
+
+impl std::fmt::Display for IoModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            IoModel::Threads => "threads",
+            IoModel::Poll => "poll",
+        })
+    }
+}
+
+impl std::str::FromStr for IoModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<IoModel, String> {
+        match s {
+            "threads" => Ok(IoModel::Threads),
+            "poll" => Ok(IoModel::Poll),
+            other => Err(format!("unknown io model '{other}' (threads|poll)")),
+        }
+    }
+}
+
 /// Tuning for a [`WireServer`].
 #[derive(Clone, Debug)]
 pub struct WireConfig {
+    /// Which I/O backend serves connections.
+    pub io_model: IoModel,
     /// Handler-pool size: the maximum number of concurrently served
     /// connections (further connections wait in the accept backlog).
+    /// [`IoModel::Threads`] only.
     pub handlers: usize,
+    /// Admission cap on tracked connections ([`IoModel::Poll`] only):
+    /// a connection accepted past the cap is sent one typed
+    /// over-capacity frame ([`Op::Shutdown`] op byte, `STATUS_TOO_LARGE`)
+    /// and closed — counted by the `pol_wire_conns_shed` series — while
+    /// admitted connections keep answering. Clamped to ≥ 1.
+    pub max_conns: usize,
+    /// Frames answered per connection per readiness-loop wakeup
+    /// ([`IoModel::Poll`] only) — the fairness quantum: a peer
+    /// streaming max-rate pipelined frames yields the loop to every
+    /// other ready connection after this many answers. Clamped to ≥ 1.
+    pub frame_budget: u32,
     /// How often a blocked handler wakes to check for shutdown.
     pub poll: Duration,
     /// Honour the [`Op::Shutdown`] admin frame. Disable for servers
@@ -96,7 +170,10 @@ pub const DEFAULT_STATS_FLUSH_FRAMES: u32 = 64;
 impl Default for WireConfig {
     fn default() -> Self {
         WireConfig {
+            io_model: IoModel::Threads,
             handlers: 4,
+            max_conns: DEFAULT_MAX_CONNS,
+            frame_budget: DEFAULT_FRAME_BUDGET,
             poll: Duration::from_millis(25),
             allow_remote_shutdown: true,
             idle_timeout: Some(Duration::from_secs(300)),
@@ -106,26 +183,36 @@ impl Default for WireConfig {
     }
 }
 
-struct Shared {
-    registry: Arc<ModelRegistry>,
-    stop: AtomicBool,
-    allow_remote_shutdown: bool,
-    local_addr: SocketAddr,
-    started: Instant,
-    bytes_in: AtomicU64,
-    bytes_out: AtomicU64,
-    frames_in: AtomicU64,
-    frames_out: AtomicU64,
-    decode_errors: AtomicU64,
-    connections: AtomicU64,
-    active: AtomicU64,
-    per_model: Mutex<std::collections::BTreeMap<String, ModelStats>>,
-    stats_flush_frames: u32,
-    obs: Option<Arc<Obs>>,
+/// State shared by every handler (threads backend) or owned by the
+/// readiness loop (poll backend) plus the public [`WireServer`]
+/// handle. Crate-visible so [`crate::wire::poll`] drives the same
+/// counters and stats map.
+pub(crate) struct Shared {
+    pub(crate) registry: Arc<ModelRegistry>,
+    pub(crate) stop: AtomicBool,
+    pub(crate) allow_remote_shutdown: bool,
+    pub(crate) local_addr: SocketAddr,
+    pub(crate) started: Instant,
+    pub(crate) bytes_in: AtomicU64,
+    pub(crate) bytes_out: AtomicU64,
+    pub(crate) frames_in: AtomicU64,
+    pub(crate) frames_out: AtomicU64,
+    pub(crate) decode_errors: AtomicU64,
+    pub(crate) connections: AtomicU64,
+    pub(crate) active: AtomicU64,
+    /// Connections refused by the poll backend's admission cap.
+    pub(crate) shed: AtomicU64,
+    /// Readiness-loop wakeups (sweeps); stays 0 on the threads backend.
+    pub(crate) wakeups: AtomicU64,
+    /// Frames answered per wakeup — the fairness-budget histogram.
+    pub(crate) wakeup_frames: Mutex<HistogramSnapshot>,
+    pub(crate) per_model: Mutex<std::collections::BTreeMap<String, ModelStats>>,
+    pub(crate) stats_flush_frames: u32,
+    pub(crate) obs: Option<Arc<Obs>>,
 }
 
 impl Shared {
-    fn trigger_stop(&self) {
+    pub(crate) fn trigger_stop(&self) {
         self.stop.store(true, Ordering::Release);
         // wake the acceptor if it is blocked in accept(): one throwaway
         // connection to ourselves, immediately dropped on the far
@@ -179,11 +266,42 @@ impl Shared {
     }
 }
 
+/// The threads the selected backend runs on — joined on shutdown/drop.
+enum Backend {
+    Threads {
+        acceptor: Option<std::thread::JoinHandle<()>>,
+        handlers: Vec<std::thread::JoinHandle<()>>,
+    },
+    Poll {
+        looper: Option<std::thread::JoinHandle<()>>,
+    },
+}
+
+impl Backend {
+    fn join(&mut self) {
+        match self {
+            Backend::Threads { acceptor, handlers } => {
+                if let Some(a) = acceptor.take() {
+                    let _ = a.join();
+                }
+                for h in handlers.drain(..) {
+                    let _ = h.join();
+                }
+            }
+            Backend::Poll { looper } => {
+                if let Some(l) = looper.take() {
+                    let _ = l.join();
+                }
+            }
+        }
+    }
+}
+
 /// Handle to a running TCP serving front-end (see the module docs).
+/// The public surface is identical for both backends.
 pub struct WireServer {
     shared: Arc<Shared>,
-    acceptor: Option<std::thread::JoinHandle<()>>,
-    handlers: Vec<std::thread::JoinHandle<()>>,
+    backend: Backend,
 }
 
 impl WireServer {
@@ -211,10 +329,36 @@ impl WireServer {
             decode_errors: AtomicU64::new(0),
             connections: AtomicU64::new(0),
             active: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            wakeups: AtomicU64::new(0),
+            wakeup_frames: Mutex::new(HistogramSnapshot::default()),
             per_model: Mutex::new(std::collections::BTreeMap::new()),
             stats_flush_frames: cfg.stats_flush_frames.max(1),
             obs: cfg.obs.clone(),
         });
+        if cfg.io_model == IoModel::Poll {
+            let params = crate::wire::poll::PollParams {
+                poll: cfg.poll,
+                idle_timeout: cfg.idle_timeout,
+                max_conns: cfg.max_conns.max(1),
+                frame_budget: cfg.frame_budget.max(1),
+            };
+            let loop_shared = Arc::clone(&shared);
+            let looper = std::thread::Builder::new()
+                .name("wire-poll".into())
+                .spawn(move || {
+                    crate::wire::poll::PollServer::new(
+                        loop_shared,
+                        listener,
+                        params,
+                    )
+                    .run()
+                })?;
+            return Ok(WireServer {
+                shared,
+                backend: Backend::Poll { looper: Some(looper) },
+            });
+        }
         let handlers_n = cfg.handlers.max(1);
         // rendezvous-ish queue: the acceptor blocks once every handler
         // is busy, so the kernel backlog is the only connection queue
@@ -278,7 +422,10 @@ impl WireServer {
                 }
                 // conn_tx drops here; idle handlers exit on recv error
             })?;
-        Ok(WireServer { shared, acceptor: Some(acceptor), handlers })
+        Ok(WireServer {
+            shared,
+            backend: Backend::Threads { acceptor: Some(acceptor), handlers },
+        })
     }
 
     /// The bound address (useful with port 0).
@@ -312,12 +459,7 @@ impl WireServer {
     /// report final stats.
     pub fn shutdown(mut self) -> StatsReport {
         self.shared.trigger_stop();
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        for h in self.handlers.drain(..) {
-            let _ = h.join();
-        }
+        self.backend.join();
         self.shared.stats()
     }
 }
@@ -326,17 +468,15 @@ impl Drop for WireServer {
     fn drop(&mut self) {
         // dropping without shutdown() still stops the threads
         self.shared.trigger_stop();
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        for h in self.handlers.drain(..) {
-            let _ = h.join();
-        }
+        self.backend.join();
     }
 }
 
 /// Send one frame (sealing the checksum), flush it, and account it.
-fn send_frame(
+/// The poll backend's `w` is a connection's pending-output buffer
+/// (`Vec<u8>` — `flush` is a no-op there); the threads backend's is a
+/// `BufWriter` over the socket.
+pub(crate) fn send_frame(
     shared: &Shared,
     out: &mut FrameWriter,
     w: &mut impl Write,
@@ -350,7 +490,7 @@ fn send_frame(
 
 /// Send a typed error frame: same op and request id, error status,
 /// UTF-8 message payload.
-fn send_error(
+pub(crate) fn send_error(
     shared: &Shared,
     out: &mut FrameWriter,
     w: &mut impl Write,
@@ -366,8 +506,11 @@ fn send_error(
 
 /// Merge a connection's private per-model stats into the shared map
 /// and zero the private buffers (keys are kept, so steady state
-/// re-allocates nothing).
-fn flush_stats(
+/// re-allocates nothing). Both backends call this at every flush
+/// cadence boundary AND whenever a connection closes — including the
+/// poll backend's idle-timeout and drain closes — so no answered
+/// frame is ever lost to the stats plane.
+pub(crate) fn flush_stats(
     shared: &Shared,
     local: &mut std::collections::HashMap<String, ModelStats>,
 ) {
@@ -433,6 +576,28 @@ fn render_metrics(shared: &Shared) -> String {
         &[],
         shared.active.load(Ordering::Relaxed),
     );
+    // event-loop series (the threads backend reports zeros for the
+    // loop-only counters; conns_active is live on both)
+    exp.point(
+        "pol_wire_conns_active",
+        &[],
+        shared.active.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_conns_shed",
+        &[],
+        shared.shed.load(Ordering::Relaxed),
+    );
+    exp.point(
+        "pol_wire_wakeups",
+        &[],
+        shared.wakeups.load(Ordering::Relaxed),
+    );
+    {
+        // per-wakeup frames-answered histogram; valid after any merge
+        let wf = shared.wakeup_frames.lock().recover_poisoned();
+        exp.histogram("pol_wire_wakeup_frames", &[], &wf);
+    }
     exp.point("pol_serve_registry_version", &[], shared.registry.version());
     exp.point("pol_serve_models", &[], shared.registry.len() as u64);
     {
@@ -456,8 +621,245 @@ fn render_metrics(shared: &Shared) -> String {
     exp.render()
 }
 
-/// Serve one connection to completion (see the module docs for the
-/// close-vs-error-frame policy).
+/// Per-handler scoring state: the registry cache and the recycled
+/// decode/predict buffers. One per handler thread on the threads
+/// backend; the poll backend's single loop owns exactly one and shares
+/// it across every multiplexed connection (safe — the loop is
+/// single-threaded — and it keeps the cache hot across peers).
+pub(crate) struct HandlerCtx {
+    cache: ModelCache,
+    scratch: BatchScratch,
+    preds: Vec<f64>,
+}
+
+impl HandlerCtx {
+    /// Fresh scoring state over `registry`.
+    pub(crate) fn new(registry: &ModelRegistry) -> HandlerCtx {
+        HandlerCtx {
+            cache: ModelCache::new(registry),
+            scratch: BatchScratch::default(),
+            preds: Vec::new(),
+        }
+    }
+}
+
+/// Answer one decoded frame — the single op dispatch both backends
+/// run, so every response byte (prediction bits included) is identical
+/// between them by construction. The caller has already accounted
+/// `frames_in`/`bytes_in`; this accounts everything outgoing through
+/// [`send_frame`]. `local_stats`/`unflushed` are the calling
+/// connection's private stats buffer and its flush-cadence counter.
+pub(crate) fn answer_frame(
+    shared: &Shared,
+    frame: &crate::wire::frame::Frame<'_>,
+    ctx: &mut HandlerCtx,
+    out: &mut FrameWriter,
+    w: &mut impl Write,
+    local_stats: &mut std::collections::HashMap<String, ModelStats>,
+    unflushed: &mut u32,
+) -> io::Result<()> {
+    let op = frame.op;
+    let req_id = frame.req_id;
+    let enqueued = Instant::now();
+    match Op::from_u8(op) {
+        None => send_error(
+            shared,
+            out,
+            w,
+            op,
+            STATUS_UNKNOWN_OP,
+            req_id,
+            &format!("unknown op {op}"),
+        ),
+        Some(kind @ (Op::Predict | Op::PredictBatch)) => {
+            match decode_predict_request(kind, frame.payload, &mut ctx.scratch)
+            {
+                Ok(name) => {
+                    match ctx.cache.resolve(&shared.registry, name) {
+                        Some((snap_reader, pscratch)) => {
+                            let snap = Arc::clone(snap_reader.current());
+                            ctx.preds.clear();
+                            for x in ctx.scratch.batch() {
+                                ctx.preds.push(snap.predict_with(x, pscratch));
+                            }
+                            let staleness =
+                                snap_reader.cell().staleness_of(&snap);
+                            out.start(op, STATUS_OK, req_id);
+                            put_predict_response(
+                                out.payload(),
+                                &ctx.preds,
+                                snap.version,
+                                staleness,
+                            );
+                            let sent = send_frame(shared, out, w);
+                            if sent.is_ok() {
+                                // private buffer: no lock, no
+                                // allocation once the name is known
+                                match local_stats.get_mut(name) {
+                                    Some(ms) => ms.record(
+                                        ctx.preds.len() as u64,
+                                        enqueued.elapsed(),
+                                        staleness,
+                                    ),
+                                    None => {
+                                        let mut ms = ModelStats::new();
+                                        ms.record(
+                                            ctx.preds.len() as u64,
+                                            enqueued.elapsed(),
+                                            staleness,
+                                        );
+                                        local_stats.insert(
+                                            name.to_string(),
+                                            ms,
+                                        );
+                                    }
+                                }
+                                *unflushed += 1;
+                                if *unflushed >= shared.stats_flush_frames {
+                                    flush_stats(shared, local_stats);
+                                    *unflushed = 0;
+                                }
+                            }
+                            sent
+                        }
+                        None => send_error(
+                            shared,
+                            out,
+                            w,
+                            op,
+                            STATUS_UNKNOWN_MODEL,
+                            req_id,
+                            &format!("unknown model '{name}'"),
+                        ),
+                    }
+                }
+                Err(e) => {
+                    shared.decode_errors.fetch_add(1, Ordering::Relaxed);
+                    let status = match e {
+                        FrameError::OverCap(_) => STATUS_TOO_LARGE,
+                        _ => STATUS_BAD_FRAME,
+                    };
+                    send_error(shared, out, w, op, status, req_id, &e.to_string())
+                }
+            }
+        }
+        Some(Op::Stats) => {
+            // publish this connection's own numbers first, so a client
+            // polling stats on the connection it queries through
+            // always sees itself
+            flush_stats(shared, local_stats);
+            *unflushed = 0;
+            out.start(op, STATUS_OK, req_id);
+            put_stats(out.payload(), &shared.stats());
+            send_frame(shared, out, w)
+        }
+        Some(Op::MetricsDump) => {
+            if !frame.payload.is_empty() {
+                shared.decode_errors.fetch_add(1, Ordering::Relaxed);
+                send_error(
+                    shared,
+                    out,
+                    w,
+                    op,
+                    STATUS_BAD_FRAME,
+                    req_id,
+                    "metrics dump request carries a payload",
+                )
+            } else {
+                // same self-visibility rule as Stats: fold this
+                // connection's numbers in first
+                flush_stats(shared, local_stats);
+                *unflushed = 0;
+                out.start(op, STATUS_OK, req_id);
+                out.payload()
+                    .extend_from_slice(render_metrics(shared).as_bytes());
+                send_frame(shared, out, w)
+            }
+        }
+        Some(Op::ListModels) => {
+            let mut models = Vec::new();
+            for name in shared.registry.names() {
+                let Some(cell) = shared.registry.get(&name) else {
+                    continue; // removed between names() and get
+                };
+                let snap = cell.load();
+                models.push(ModelEntry {
+                    name,
+                    dim: snap.dim() as u64,
+                    params: snap.num_params() as u64,
+                    snapshot_version: snap.version,
+                    trained_instances: snap.trained_instances,
+                });
+            }
+            out.start(op, STATUS_OK, req_id);
+            put_models(out.payload(), &models);
+            send_frame(shared, out, w)
+        }
+        Some(Op::Ping) => {
+            if frame.payload.len() > MAX_PING {
+                send_error(
+                    shared,
+                    out,
+                    w,
+                    op,
+                    STATUS_TOO_LARGE,
+                    req_id,
+                    &format!(
+                        "ping payload {} bytes (cap {MAX_PING})",
+                        frame.payload.len()
+                    ),
+                )
+            } else {
+                out.start(op, STATUS_OK, req_id);
+                out.payload().extend_from_slice(frame.payload);
+                send_frame(shared, out, w)
+            }
+        }
+        Some(Op::Shutdown) => {
+            if shared.allow_remote_shutdown {
+                let sent =
+                    send_error(shared, out, w, op, STATUS_OK, req_id, "draining");
+                shared.trigger_stop();
+                sent
+            } else {
+                send_error(
+                    shared,
+                    out,
+                    w,
+                    op,
+                    STATUS_FORBIDDEN,
+                    req_id,
+                    "remote shutdown disabled on this server",
+                )
+            }
+        }
+    }
+}
+
+/// Send the typed end-of-stream frame a draining connection owes its
+/// pipelined peers (and that a shed connection gets instead of silent
+/// queue collapse): [`Op::Shutdown`] op byte, `status`, request id 0.
+pub(crate) fn send_goodbye(
+    shared: &Shared,
+    out: &mut FrameWriter,
+    w: &mut impl Write,
+    status: u8,
+    msg: &str,
+) -> io::Result<()> {
+    send_error(
+        shared,
+        out,
+        w,
+        // pol-lint: allow(L006, "Op discriminants are u8 by definition")
+        Op::Shutdown as u8,
+        status,
+        0,
+        msg,
+    )
+}
+
+/// Serve one connection to completion on a handler thread (threads
+/// backend; see the module docs for the close-vs-error-frame policy).
 fn handle_conn(
     shared: &Shared,
     stream: TcpStream,
@@ -476,9 +878,7 @@ fn handle_conn(
     let mut writer = BufWriter::with_capacity(1 << 16, write_half);
     let mut buf = FrameBuf::new();
     let mut out = FrameWriter::new();
-    let mut cache = ModelCache::new(&shared.registry);
-    let mut scratch = BatchScratch::default();
-    let mut preds: Vec<f64> = Vec::new();
+    let mut ctx = HandlerCtx::new(&shared.registry);
     let mut local_stats: std::collections::HashMap<String, ModelStats> =
         std::collections::HashMap::new();
     let mut unflushed = 0u32;
@@ -504,224 +904,15 @@ fn handle_conn(
                 shared
                     .bytes_in
                     .fetch_add(frame.wire_bytes as u64, Ordering::Relaxed);
-                let op = frame.op;
-                let req_id = frame.req_id;
-                let enqueued = Instant::now();
-                let outcome = match Op::from_u8(op) {
-                    None => send_error(
-                        shared,
-                        &mut out,
-                        &mut writer,
-                        op,
-                        STATUS_UNKNOWN_OP,
-                        req_id,
-                        &format!("unknown op {op}"),
-                    ),
-                    Some(kind @ (Op::Predict | Op::PredictBatch)) => {
-                        match decode_predict_request(
-                            kind,
-                            frame.payload,
-                            &mut scratch,
-                        ) {
-                            Ok(name) => {
-                                match cache.resolve(&shared.registry, name) {
-                                    Some((snap_reader, pscratch)) => {
-                                        let snap =
-                                            Arc::clone(snap_reader.current());
-                                        preds.clear();
-                                        for x in scratch.batch() {
-                                            preds.push(
-                                                snap.predict_with(x, pscratch),
-                                            );
-                                        }
-                                        let staleness = snap_reader
-                                            .cell()
-                                            .staleness_of(&snap);
-                                        out.start(op, STATUS_OK, req_id);
-                                        put_predict_response(
-                                            out.payload(),
-                                            &preds,
-                                            snap.version,
-                                            staleness,
-                                        );
-                                        let sent = send_frame(
-                                            shared,
-                                            &mut out,
-                                            &mut writer,
-                                        );
-                                        if sent.is_ok() {
-                                            // private buffer: no lock,
-                                            // no allocation once the
-                                            // name has been seen
-                                            match local_stats.get_mut(name)
-                                            {
-                                                Some(ms) => ms.record(
-                                                    preds.len() as u64,
-                                                    enqueued.elapsed(),
-                                                    staleness,
-                                                ),
-                                                None => {
-                                                    let mut ms =
-                                                        ModelStats::new();
-                                                    ms.record(
-                                                        preds.len() as u64,
-                                                        enqueued.elapsed(),
-                                                        staleness,
-                                                    );
-                                                    local_stats.insert(
-                                                        name.to_string(),
-                                                        ms,
-                                                    );
-                                                }
-                                            }
-                                            unflushed += 1;
-                                            if unflushed
-                                                >= shared.stats_flush_frames
-                                            {
-                                                flush_stats(
-                                                    shared,
-                                                    &mut local_stats,
-                                                );
-                                                unflushed = 0;
-                                            }
-                                        }
-                                        sent
-                                    }
-                                    None => send_error(
-                                        shared,
-                                        &mut out,
-                                        &mut writer,
-                                        op,
-                                        STATUS_UNKNOWN_MODEL,
-                                        req_id,
-                                        &format!("unknown model '{name}'"),
-                                    ),
-                                }
-                            }
-                            Err(e) => {
-                                shared
-                                    .decode_errors
-                                    .fetch_add(1, Ordering::Relaxed);
-                                let status = match e {
-                                    FrameError::OverCap(_) => {
-                                        STATUS_TOO_LARGE
-                                    }
-                                    _ => STATUS_BAD_FRAME,
-                                };
-                                send_error(
-                                    shared,
-                                    &mut out,
-                                    &mut writer,
-                                    op,
-                                    status,
-                                    req_id,
-                                    &e.to_string(),
-                                )
-                            }
-                        }
-                    }
-                    Some(Op::Stats) => {
-                        // publish this connection's own numbers first,
-                        // so a client polling stats on the connection
-                        // it queries through always sees itself
-                        flush_stats(shared, &mut local_stats);
-                        unflushed = 0;
-                        out.start(op, STATUS_OK, req_id);
-                        put_stats(out.payload(), &shared.stats());
-                        send_frame(shared, &mut out, &mut writer)
-                    }
-                    Some(Op::MetricsDump) => {
-                        if !frame.payload.is_empty() {
-                            shared
-                                .decode_errors
-                                .fetch_add(1, Ordering::Relaxed);
-                            send_error(
-                                shared,
-                                &mut out,
-                                &mut writer,
-                                op,
-                                STATUS_BAD_FRAME,
-                                req_id,
-                                "metrics dump request carries a payload",
-                            )
-                        } else {
-                            // same self-visibility rule as Stats: fold
-                            // this connection's numbers in first
-                            flush_stats(shared, &mut local_stats);
-                            unflushed = 0;
-                            out.start(op, STATUS_OK, req_id);
-                            out.payload().extend_from_slice(
-                                render_metrics(shared).as_bytes(),
-                            );
-                            send_frame(shared, &mut out, &mut writer)
-                        }
-                    }
-                    Some(Op::ListModels) => {
-                        let mut models = Vec::new();
-                        for name in shared.registry.names() {
-                            let Some(cell) = shared.registry.get(&name)
-                            else {
-                                continue; // removed between names() and get
-                            };
-                            let snap = cell.load();
-                            models.push(ModelEntry {
-                                name,
-                                dim: snap.dim() as u64,
-                                params: snap.num_params() as u64,
-                                snapshot_version: snap.version,
-                                trained_instances: snap.trained_instances,
-                            });
-                        }
-                        out.start(op, STATUS_OK, req_id);
-                        put_models(out.payload(), &models);
-                        send_frame(shared, &mut out, &mut writer)
-                    }
-                    Some(Op::Ping) => {
-                        if frame.payload.len() > MAX_PING {
-                            send_error(
-                                shared,
-                                &mut out,
-                                &mut writer,
-                                op,
-                                STATUS_TOO_LARGE,
-                                req_id,
-                                &format!(
-                                    "ping payload {} bytes (cap {MAX_PING})",
-                                    frame.payload.len()
-                                ),
-                            )
-                        } else {
-                            out.start(op, STATUS_OK, req_id);
-                            out.payload().extend_from_slice(frame.payload);
-                            send_frame(shared, &mut out, &mut writer)
-                        }
-                    }
-                    Some(Op::Shutdown) => {
-                        if shared.allow_remote_shutdown {
-                            let sent = send_error(
-                                shared,
-                                &mut out,
-                                &mut writer,
-                                op,
-                                STATUS_OK,
-                                req_id,
-                                "draining",
-                            );
-                            shared.trigger_stop();
-                            sent
-                        } else {
-                            send_error(
-                                shared,
-                                &mut out,
-                                &mut writer,
-                                op,
-                                STATUS_FORBIDDEN,
-                                req_id,
-                                "remote shutdown disabled on this server",
-                            )
-                        }
-                    }
-                };
+                let outcome = answer_frame(
+                    shared,
+                    &frame,
+                    &mut ctx,
+                    &mut out,
+                    &mut writer,
+                    &mut local_stats,
+                    &mut unflushed,
+                );
                 if outcome.is_err() {
                     break; // peer went away mid-write
                 }
@@ -739,14 +930,11 @@ fn handle_conn(
     flush_stats(shared, &mut local_stats);
     // a draining handler tells pipelined peers why the stream ends
     if shared.stop.load(Ordering::Acquire) {
-        let _ = send_error(
+        let _ = send_goodbye(
             shared,
             &mut out,
             &mut writer,
-            // pol-lint: allow(L006, "Op discriminants are u8 by definition")
-            Op::Shutdown as u8,
             STATUS_SHUTTING_DOWN,
-            0,
             "server draining",
         );
     }

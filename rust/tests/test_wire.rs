@@ -5,6 +5,15 @@
 //! every hostile byte sequence must produce a typed error frame or a
 //! clean close, never a panic or an allocation proportional to an
 //! attacker-chosen length.
+//!
+//! Every scenario runs against **both** I/O backends (the bounded
+//! thread pool and the readiness loop) through [`backends`]: the
+//! `POL_WIRE_IO` env var pins one (`threads`|`poll`) — the CI matrix,
+//! same pattern as `POL_SIMD` — and by default both run in-process.
+//! The readiness loop inherits every adversarial proof this suite
+//! holds the threads backend to, plus its own: admission-cap shedding,
+//! more live connections than any sane thread count, and
+//! fairness-budget starvation resistance.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -26,8 +35,24 @@ use pol::wire::frame::{
     STATUS_TOO_LARGE, STATUS_UNKNOWN_MODEL, STATUS_UNKNOWN_OP,
 };
 use pol::wire::{
-    WireClient, WireConfig, WireError, WireServer, MAX_BATCH, PROTO_VERSION,
+    IoModel, Op, WireClient, WireConfig, WireError, WireServer, MAX_BATCH,
+    PROTO_VERSION,
 };
+
+/// Backends under test: the one `POL_WIRE_IO` names, or both.
+fn backends() -> Vec<IoModel> {
+    match std::env::var("POL_WIRE_IO").ok().as_deref() {
+        Some("threads") => vec![IoModel::Threads],
+        Some("poll") => vec![IoModel::Poll],
+        Some(other) => panic!("POL_WIRE_IO={other}: expected threads|poll"),
+        None => vec![IoModel::Threads, IoModel::Poll],
+    }
+}
+
+/// Default config on the given backend.
+fn cfg_for(io: IoModel) -> WireConfig {
+    WireConfig { io_model: io, ..Default::default() }
+}
 
 fn small_ds() -> Dataset {
     RcvLikeGen::new(SynthConfig {
@@ -73,92 +98,194 @@ fn loopback_predictions_bit_identical_across_swaps_and_reshard() {
     let ds = small_ds();
     let tree = tree_coordinator(&ds, 2);
     let sgd = trained_sgd(&ds);
-    let tree_cell = SnapshotCell::new(tree.snapshot());
-    let sgd_cell = SnapshotCell::new(Model::snapshot(&sgd));
-    let registry = ModelRegistry::new();
-    registry.insert("tree", Arc::clone(&tree_cell));
-    registry.insert("sgd", Arc::clone(&sgd_cell));
-
-    let server = WireServer::bind(
-        "127.0.0.1:0",
-        Arc::clone(&registry),
-        WireConfig::default(),
-    )
-    .expect("bind");
-    let mut client = WireClient::connect(server.local_addr()).expect("connect");
-
-    // 1. single predictions, both models, bit-identical to in-process
-    for inst in ds.iter().take(50) {
-        for name in ["tree", "sgd"] {
-            let cell = if name == "tree" { &tree_cell } else { &sgd_cell };
-            let resp = client.predict_for(name, &inst.features).expect(name);
-            assert_eq!(resp.preds.len(), 1);
-            assert_eq!(
-                resp.preds[0].to_bits(),
-                reference(cell, &inst.features).to_bits(),
-                "{name} diverged over the wire"
-            );
-        }
-    }
-
-    // 2. one batched frame = the same bits as n in-process calls
-    let batch: Vec<Vec<SparseFeat>> =
-        ds.iter().take(64).map(|i| i.features.clone()).collect();
-    let resp = client.predict_batch_for("tree", &batch).expect("batch");
-    assert_eq!(resp.preds.len(), 64);
-    for (x, y) in batch.iter().zip(&resp.preds) {
-        assert_eq!(y.to_bits(), reference(&tree_cell, x).to_bits());
-    }
-    // an empty batch is well-formed
-    let empty = client.predict_batch_for("tree", &[]).expect("empty batch");
-    assert!(empty.preds.is_empty());
-
-    // 3. snapshot publish (train-while-serve): same connection sees the
-    //    new version, still bit-identical
     let mut more = tree_coordinator(&ds, 2);
     more.train(&ds); // second pass: different weights
-    let v = tree_cell.publish(more.snapshot());
-    let x = &ds.instances[7].features;
-    let resp = client.predict_for("tree", x).expect("after publish");
-    assert_eq!(resp.snapshot_version, v);
-    assert_eq!(resp.preds[0].to_bits(), reference(&tree_cell, x).to_bits());
-
-    // 4. registry hot-swap: replace the cell wholesale under the same
-    //    name; the connection's cache re-resolves on its next request
-    let swapped = SnapshotCell::new(Model::snapshot(&trained_sgd(&ds)));
-    registry.insert("tree", Arc::clone(&swapped));
-    let resp = client.predict_for("tree", x).expect("after hot-swap");
-    assert_eq!(resp.preds[0].to_bits(), reference(&swapped, x).to_bits());
-
-    // 5. live re-shard: migrate the coordinator to 4 workers and serve
-    //    the migrated snapshot; wire answers must match the migrated
-    //    model in-process, bit for bit
     let resharded = tree.reshard(4).expect("reshard 2 -> 4");
-    let reshard_cell = SnapshotCell::new(resharded.snapshot());
-    registry.insert("tree", Arc::clone(&reshard_cell));
-    for inst in ds.iter().take(50) {
-        let resp = client.predict_for("tree", &inst.features).expect("resharded");
+    let swap_sgd = trained_sgd(&ds);
+    for io in backends() {
+        let tree_cell = SnapshotCell::new(tree.snapshot());
+        let sgd_cell = SnapshotCell::new(Model::snapshot(&sgd));
+        let registry = ModelRegistry::new();
+        registry.insert("tree", Arc::clone(&tree_cell));
+        registry.insert("sgd", Arc::clone(&sgd_cell));
+
+        let server =
+            WireServer::bind("127.0.0.1:0", Arc::clone(&registry), cfg_for(io))
+                .expect("bind");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
+
+        // 1. single predictions, both models, bit-identical to in-process
+        for inst in ds.iter().take(50) {
+            for name in ["tree", "sgd"] {
+                let cell = if name == "tree" { &tree_cell } else { &sgd_cell };
+                let resp = client.predict_for(name, &inst.features).expect(name);
+                assert_eq!(resp.preds.len(), 1);
+                assert_eq!(
+                    resp.preds[0].to_bits(),
+                    reference(cell, &inst.features).to_bits(),
+                    "{name} diverged over the wire ({io})"
+                );
+            }
+        }
+
+        // 2. one batched frame = the same bits as n in-process calls
+        let batch: Vec<Vec<SparseFeat>> =
+            ds.iter().take(64).map(|i| i.features.clone()).collect();
+        let resp = client.predict_batch_for("tree", &batch).expect("batch");
+        assert_eq!(resp.preds.len(), 64);
+        for (x, y) in batch.iter().zip(&resp.preds) {
+            assert_eq!(y.to_bits(), reference(&tree_cell, x).to_bits());
+        }
+        // an empty batch is well-formed
+        let empty =
+            client.predict_batch_for("tree", &[]).expect("empty batch");
+        assert!(empty.preds.is_empty());
+
+        // 3. snapshot publish (train-while-serve): same connection sees
+        //    the new version, still bit-identical
+        let v = tree_cell.publish(more.snapshot());
+        let x = &ds.instances[7].features;
+        let resp = client.predict_for("tree", x).expect("after publish");
+        assert_eq!(resp.snapshot_version, v);
         assert_eq!(
             resp.preds[0].to_bits(),
+            reference(&tree_cell, x).to_bits()
+        );
+
+        // 4. registry hot-swap: replace the cell wholesale under the
+        //    same name; the cache re-resolves on its next request
+        let swapped = SnapshotCell::new(Model::snapshot(&swap_sgd));
+        registry.insert("tree", Arc::clone(&swapped));
+        let resp = client.predict_for("tree", x).expect("after hot-swap");
+        assert_eq!(
+            resp.preds[0].to_bits(),
+            reference(&swapped, x).to_bits()
+        );
+
+        // 5. live re-shard: serve the migrated snapshot; wire answers
+        //    must match the migrated model in-process, bit for bit
+        let reshard_cell = SnapshotCell::new(resharded.snapshot());
+        registry.insert("tree", Arc::clone(&reshard_cell));
+        for inst in ds.iter().take(50) {
+            let resp =
+                client.predict_for("tree", &inst.features).expect("resharded");
+            assert_eq!(
+                resp.preds[0].to_bits(),
+                reference(&reshard_cell, &inst.features).to_bits(),
+                "re-sharded model diverged over the wire ({io})"
+            );
+        }
+
+        // 6. a removed model stops resolving with a typed error
+        registry.remove("sgd");
+        match client.predict_for("sgd", x) {
+            Err(WireError::Server { status, .. }) => {
+                assert_eq!(status, STATUS_UNKNOWN_MODEL)
+            }
+            other => panic!("expected unknown-model error, got {other:?}"),
+        }
+
+        let stats = server.shutdown();
+        assert!(stats.frames_in > 0);
+        assert!(stats.frames_out > 0);
+        assert!(stats.bytes_in > 0);
+        assert!(stats.bytes_out > 0);
+    }
+}
+
+/// The tentpole acceptance proof: both backends live at once over the
+/// same registry, every prediction compared bit-for-bit between them
+/// *and* against the in-process reference — single, batched, and
+/// pipelined frames, across a snapshot publish, a registry hot-swap,
+/// and a live re-shard.
+#[test]
+fn poll_and_threads_backends_answer_bit_identically() {
+    let ds = small_ds();
+    let tree = tree_coordinator(&ds, 2);
+    let mut more = tree_coordinator(&ds, 2);
+    more.train(&ds);
+    let resharded = tree.reshard(4).expect("reshard 2 -> 4");
+
+    let cell = SnapshotCell::new(tree.snapshot());
+    let registry = ModelRegistry::with_model("m", Arc::clone(&cell));
+    let srv_t = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        cfg_for(IoModel::Threads),
+    )
+    .expect("bind threads");
+    let srv_p = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        cfg_for(IoModel::Poll),
+    )
+    .expect("bind poll");
+    let mut ct = WireClient::connect(srv_t.local_addr()).expect("connect t");
+    let mut cp = WireClient::connect(srv_p.local_addr()).expect("connect p");
+
+    let mut check_all = |ct: &mut WireClient, cp: &mut WireClient, tag: &str| {
+        // singles
+        for inst in ds.iter().take(40) {
+            let a = ct.predict_for("m", &inst.features).expect("threads");
+            let b = cp.predict_for("m", &inst.features).expect("poll");
+            let r = reference(&cell, &inst.features);
+            assert_eq!(a.preds[0].to_bits(), r.to_bits(), "threads≠ref {tag}");
+            assert_eq!(b.preds[0].to_bits(), r.to_bits(), "poll≠ref {tag}");
+            assert_eq!(a.snapshot_version, b.snapshot_version, "{tag}");
+            assert_eq!(a.staleness, b.staleness, "{tag}");
+        }
+        // one batched frame
+        let batch: Vec<Vec<SparseFeat>> =
+            ds.iter().take(48).map(|i| i.features.clone()).collect();
+        let a = ct.predict_batch_for("m", &batch).expect("threads batch");
+        let b = cp.predict_batch_for("m", &batch).expect("poll batch");
+        assert_eq!(a.preds.len(), b.preds.len());
+        for (x, (ya, yb)) in batch.iter().zip(a.preds.iter().zip(&b.preds)) {
+            assert_eq!(ya.to_bits(), yb.to_bits(), "batch {tag}");
+            assert_eq!(ya.to_bits(), reference(&cell, x).to_bits(), "{tag}");
+        }
+        // pipelined past the in-flight window
+        let insts: Vec<Vec<SparseFeat>> = ds
+            .iter()
+            .take(2 * WireClient::PIPELINE_WINDOW + 5)
+            .map(|i| i.features.clone())
+            .collect();
+        let a = ct.predict_pipelined("m", &insts).expect("threads pipeline");
+        let b = cp.predict_pipelined("m", &insts).expect("poll pipeline");
+        for ((x, ra), rb) in insts.iter().zip(&a).zip(&b) {
+            assert_eq!(
+                ra.preds[0].to_bits(),
+                rb.preds[0].to_bits(),
+                "pipelined {tag}"
+            );
+            assert_eq!(
+                ra.preds[0].to_bits(),
+                reference(&cell, x).to_bits(),
+                "pipelined≠ref {tag}"
+            );
+        }
+    };
+
+    check_all(&mut ct, &mut cp, "initial");
+    // snapshot publish under both servers at once
+    cell.publish(more.snapshot());
+    check_all(&mut ct, &mut cp, "after publish");
+    // live re-shard: both backends serve the migrated model
+    let reshard_cell = SnapshotCell::new(resharded.snapshot());
+    registry.insert("m", Arc::clone(&reshard_cell));
+    for inst in ds.iter().take(40) {
+        let a = ct.predict_for("m", &inst.features).expect("threads");
+        let b = cp.predict_for("m", &inst.features).expect("poll");
+        assert_eq!(a.preds[0].to_bits(), b.preds[0].to_bits(), "resharded");
+        assert_eq!(
+            a.preds[0].to_bits(),
             reference(&reshard_cell, &inst.features).to_bits(),
-            "re-sharded model diverged over the wire"
+            "resharded≠ref"
         );
     }
-
-    // 6. a removed model stops resolving with a typed error
-    registry.remove("sgd");
-    match client.predict_for("sgd", x) {
-        Err(WireError::Server { status, .. }) => {
-            assert_eq!(status, STATUS_UNKNOWN_MODEL)
-        }
-        other => panic!("expected unknown-model error, got {other:?}"),
-    }
-
-    let stats = server.shutdown();
-    assert!(stats.frames_in > 0);
-    assert!(stats.frames_out > 0);
-    assert!(stats.bytes_in > 0);
-    assert!(stats.bytes_out > 0);
+    srv_t.shutdown();
+    srv_p.shutdown();
 }
 
 #[test]
@@ -166,109 +293,197 @@ fn pipelined_frames_answer_in_order_with_matching_ids() {
     let ds = small_ds();
     let sgd = trained_sgd(&ds);
     let cell = SnapshotCell::new(Model::snapshot(&sgd));
-    let registry = ModelRegistry::with_model("m", Arc::clone(&cell));
-    let server =
-        WireServer::bind("127.0.0.1:0", registry, WireConfig::default())
+    for io in backends() {
+        let registry = ModelRegistry::with_model("m", Arc::clone(&cell));
+        let server = WireServer::bind("127.0.0.1:0", registry, cfg_for(io))
             .expect("bind");
-    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
 
-    // several multiples of the in-flight window, so the bounded-window
-    // drain path (send → read one → send) is exercised, plus a tail
-    let instances: Vec<Vec<SparseFeat>> = ds
-        .iter()
-        .take(3 * WireClient::PIPELINE_WINDOW + 7)
-        .map(|i| i.features.clone())
-        .collect();
-    let responses =
-        client.predict_pipelined("m", &instances).expect("pipelined");
-    assert_eq!(responses.len(), instances.len());
-    for (x, resp) in instances.iter().zip(&responses) {
-        assert_eq!(resp.preds[0].to_bits(), reference(&cell, x).to_bits());
+        // several multiples of the in-flight window, so the
+        // bounded-window drain path (send → read one → send) is
+        // exercised, plus a tail
+        let instances: Vec<Vec<SparseFeat>> = ds
+            .iter()
+            .take(3 * WireClient::PIPELINE_WINDOW + 7)
+            .map(|i| i.features.clone())
+            .collect();
+        let responses =
+            client.predict_pipelined("m", &instances).expect("pipelined");
+        assert_eq!(responses.len(), instances.len());
+        for (x, resp) in instances.iter().zip(&responses) {
+            assert_eq!(resp.preds[0].to_bits(), reference(&cell, x).to_bits());
+        }
+        server.shutdown();
     }
-    server.shutdown();
 }
 
 #[test]
 fn admin_plane_reports_models_stats_and_ping() {
     let ds = small_ds();
-    let registry = ModelRegistry::new();
-    registry.insert("a", SnapshotCell::new(Model::snapshot(&trained_sgd(&ds))));
-    registry.insert(
-        "b",
-        SnapshotCell::new(ModelSnapshot::central(vec![2.0; 16], 123, 0)),
-    );
-    let server = WireServer::bind(
-        "127.0.0.1:0",
-        Arc::clone(&registry),
-        WireConfig::default(),
-    )
-    .expect("bind");
-    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+    let sgd = trained_sgd(&ds);
+    for io in backends() {
+        let registry = ModelRegistry::new();
+        registry.insert("a", SnapshotCell::new(Model::snapshot(&sgd)));
+        registry.insert(
+            "b",
+            SnapshotCell::new(ModelSnapshot::central(vec![2.0; 16], 123, 0)),
+        );
+        let server =
+            WireServer::bind("127.0.0.1:0", Arc::clone(&registry), cfg_for(io))
+                .expect("bind");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
 
-    // ping echoes bytes
-    assert_eq!(client.ping(b"heartbeat").expect("ping"), b"heartbeat");
+        // ping echoes bytes
+        assert_eq!(client.ping(b"heartbeat").expect("ping"), b"heartbeat");
 
-    // list-models reports both entries with their shapes
-    let mut models = client.list_models().expect("list");
-    models.sort_by(|x, y| x.name.cmp(&y.name));
-    assert_eq!(models.len(), 2);
-    assert_eq!(models[0].name, "a");
-    assert_eq!(models[0].dim, ds.dim as u64);
-    assert_eq!(models[1].name, "b");
-    assert_eq!(models[1].dim, 16);
-    assert_eq!(models[1].trained_instances, 123);
+        // list-models reports both entries with their shapes
+        let mut models = client.list_models().expect("list");
+        models.sort_by(|x, y| x.name.cmp(&y.name));
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].name, "a");
+        assert_eq!(models[0].dim, ds.dim as u64);
+        assert_eq!(models[1].name, "b");
+        assert_eq!(models[1].dim, 16);
+        assert_eq!(models[1].trained_instances, 123);
 
-    // stats sees the traffic so far plus per-model rows after requests
-    client.predict_for("b", &[(0, 1.0)]).expect("predict");
-    client.predict_for("b", &[(1, 1.0)]).expect("predict");
-    let stats = client.stats().expect("stats");
-    assert!(stats.frames_in >= 4, "{stats:?}");
-    assert_eq!(stats.active_connections, 1);
-    assert_eq!(stats.connections, 1);
-    let b = stats.models.iter().find(|m| m.name == "b").expect("model b row");
-    assert_eq!(b.requests, 2);
-    assert_eq!(b.predictions, 2);
-    assert_eq!(b.max_staleness, 0);
+        // stats sees the traffic so far plus per-model rows
+        client.predict_for("b", &[(0, 1.0)]).expect("predict");
+        client.predict_for("b", &[(1, 1.0)]).expect("predict");
+        let stats = client.stats().expect("stats");
+        assert!(stats.frames_in >= 4, "{stats:?}");
+        assert_eq!(stats.active_connections, 1);
+        assert_eq!(stats.connections, 1);
+        let b =
+            stats.models.iter().find(|m| m.name == "b").expect("model b row");
+        assert_eq!(b.requests, 2);
+        assert_eq!(b.predictions, 2);
+        assert_eq!(b.max_staleness, 0);
 
-    // the live server handle reports the same numbers
-    let local = server.stats();
-    assert_eq!(local.connections, 1);
-    assert!(local.frames_in >= stats.frames_in);
-    server.shutdown();
+        // the live server handle reports the same numbers
+        let local = server.stats();
+        assert_eq!(local.connections, 1);
+        assert!(local.frames_in >= stats.frames_in);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn shutdown_op_drains_gracefully() {
-    let registry = ModelRegistry::with_model(
-        "m",
-        SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
-    );
-    let server =
-        WireServer::bind("127.0.0.1:0", registry, WireConfig::default())
+    for io in backends() {
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+        );
+        let server = WireServer::bind("127.0.0.1:0", registry, cfg_for(io))
             .expect("bind");
-    let mut client = WireClient::connect(server.local_addr()).expect("connect");
-    client.predict_for("m", &[(0, 1.0)]).expect("predict");
-    client.shutdown_server().expect("shutdown acknowledged");
-    server.wait(); // returns because the wire op triggered the drain
-    assert!(server.is_draining());
-    let stats = server.shutdown();
-    assert!(stats.frames_in >= 2);
-    // the drained connection ends with a typed shutting-down frame (or
-    // a clean close); a fresh request on it surfaces a typed error
-    match client.predict_for("m", &[(0, 1.0)]) {
-        Ok(_) => {} // raced the drain window: still answered
-        Err(WireError::Server { status, .. }) => {
-            assert_eq!(status, STATUS_SHUTTING_DOWN)
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
+        client.predict_for("m", &[(0, 1.0)]).expect("predict");
+        client.shutdown_server().expect("shutdown acknowledged");
+        server.wait(); // returns because the wire op triggered the drain
+        assert!(server.is_draining());
+        let stats = server.shutdown();
+        assert!(stats.frames_in >= 2);
+        // the drained connection ends with a typed shutting-down frame
+        // (or a clean close); a fresh request surfaces a typed error
+        match client.predict_for("m", &[(0, 1.0)]) {
+            Ok(_) => {} // raced the drain window: still answered
+            Err(WireError::Server { status, .. }) => {
+                assert_eq!(status, STATUS_SHUTTING_DOWN)
+            }
+            Err(WireError::Closed | WireError::Io(_)) => {}
+            Err(other) => panic!("expected a clean rejection, got {other:?}"),
         }
-        Err(WireError::Closed | WireError::Io(_)) => {}
-        Err(other) => panic!("expected a clean rejection, got {other:?}"),
     }
 }
 
 #[test]
 fn idle_connections_are_disconnected_at_the_deadline() {
-    // slow-loris guard: with a bounded handler pool, a peer that opens
-    // a connection and sends nothing must not pin a handler forever
+    // slow-loris guard: a peer that opens a connection and sends
+    // nothing must not pin a handler (threads) or a conn slot (poll)
+    for io in backends() {
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+        );
+        let server = WireServer::bind(
+            "127.0.0.1:0",
+            registry,
+            WireConfig {
+                io_model: io,
+                idle_timeout: Some(std::time::Duration::from_millis(100)),
+                poll: std::time::Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .expect("bind");
+        let addr = server.local_addr();
+        let mut idle = TcpStream::connect(addr).expect("connect");
+        // the server closes the idle socket: reads return EOF well
+        // before the test times out
+        let mut back = Vec::new();
+        idle.read_to_end(&mut back).expect("read until server closes");
+        assert!(back.is_empty(), "no frame was owed to an idle peer");
+        let mut client = WireClient::connect(addr).expect("reconnect");
+        assert_eq!(
+            client
+                .predict_for("m", &[(0, 1.0)])
+                .expect("still serving")
+                .preds[0],
+            1.0
+        );
+        // an ACTIVE connection is never idle-closed: keep it busy past
+        // several deadlines
+        for _ in 0..5 {
+            std::thread::sleep(std::time::Duration::from_millis(40));
+            client.predict_for("m", &[(0, 1.0)]).expect("active connection");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn remote_shutdown_can_be_disabled() {
+    for io in backends() {
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+        );
+        let server = WireServer::bind(
+            "127.0.0.1:0",
+            registry,
+            WireConfig {
+                io_model: io,
+                allow_remote_shutdown: false,
+                ..Default::default()
+            },
+        )
+        .expect("bind");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
+        match client.shutdown_server() {
+            Err(WireError::Server { status, .. }) => {
+                assert_eq!(status, frame::STATUS_FORBIDDEN)
+            }
+            other => panic!("expected forbidden, got {other:?}"),
+        }
+        assert!(!server.is_draining());
+        // and the connection still serves
+        client.predict_for("m", &[(0, 1.0)]).expect("still serving");
+        server.shutdown();
+    }
+}
+
+// ---- readiness-backend specifics ------------------------------------
+
+/// Overload is typed, not collapsed: connections past the admission
+/// cap get the over-capacity frame and a counted shed, while admitted
+/// connections keep answering. The threads backend cannot pass this —
+/// its overload behaviour is an invisible kernel backlog.
+#[test]
+fn poll_backend_sheds_over_cap_connections_with_typed_frames() {
     let registry = ModelRegistry::with_model(
         "m",
         SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
@@ -277,35 +492,69 @@ fn idle_connections_are_disconnected_at_the_deadline() {
         "127.0.0.1:0",
         registry,
         WireConfig {
-            idle_timeout: Some(std::time::Duration::from_millis(100)),
-            poll: std::time::Duration::from_millis(10),
+            io_model: IoModel::Poll,
+            max_conns: 2,
+            poll: std::time::Duration::from_millis(5),
             ..Default::default()
         },
     )
     .expect("bind");
     let addr = server.local_addr();
-    let mut idle = TcpStream::connect(addr).expect("connect");
-    // the server closes the idle socket: reads return EOF well before
-    // the test times out, and the handler is free to serve others
+    // fill the cap; a served request proves each connection is admitted
+    let mut c1 = WireClient::connect(addr).expect("connect 1");
+    c1.predict_for("m", &[(0, 1.0)]).expect("admitted 1");
+    let mut c2 = WireClient::connect(addr).expect("connect 2");
+    c2.predict_for("m", &[(0, 1.0)]).expect("admitted 2");
+
+    // the third peer is shed: one typed over-capacity frame, then EOF
+    let mut s3 = TcpStream::connect(addr).expect("connect 3");
     let mut back = Vec::new();
-    idle.read_to_end(&mut back).expect("read until server closes");
-    assert!(back.is_empty(), "no frame was owed to an idle peer");
-    let mut client = WireClient::connect(addr).expect("reconnect");
-    assert_eq!(
-        client.predict_for("m", &[(0, 1.0)]).expect("still serving").preds[0],
-        1.0
+    s3.read_to_end(&mut back).expect("read shed frame");
+    let (op, status, req_id, msg) = first_frame(&back).expect("shed frame");
+    assert_eq!(op, Op::Shutdown as u8);
+    assert_eq!(status, STATUS_TOO_LARGE);
+    assert_eq!(req_id, 0);
+    assert!(
+        String::from_utf8_lossy(&msg).contains("capacity"),
+        "shed frame should say why: {msg:?}"
     );
-    // an ACTIVE connection is never idle-closed: keep it busy past
-    // several deadlines
-    for _ in 0..5 {
-        std::thread::sleep(std::time::Duration::from_millis(40));
-        client.predict_for("m", &[(0, 1.0)]).expect("active connection");
+
+    // a client-library peer surfaces the shed as a typed server error
+    let mut c4 = WireClient::connect(addr).expect("connect 4");
+    match c4.predict_for("m", &[(0, 1.0)]) {
+        Err(WireError::Server { status, .. }) => {
+            assert_eq!(status, STATUS_TOO_LARGE)
+        }
+        Err(WireError::Closed | WireError::Io(_)) => {} // raced the close
+        other => panic!("expected a typed shed, got {other:?}"),
     }
-    server.shutdown();
+
+    // admitted connections keep answering through the overload
+    assert_eq!(c1.predict_for("m", &[(0, 3.0)]).expect("c1 alive").preds[0], 3.0);
+    assert_eq!(c2.predict_for("m", &[(0, 4.0)]).expect("c2 alive").preds[0], 4.0);
+
+    // the sheds are counted and exported
+    let text = c1.metrics_dump().expect("metrics");
+    let series = pol::obs::parse_exposition(&text).expect("parseable");
+    let shed = series
+        .iter()
+        .find(|(n, _)| n == "pol_wire_conns_shed")
+        .map(|&(_, v)| v)
+        .expect("shed series");
+    assert!(shed >= 1, "shed connections must be counted, got {shed}");
+
+    let stats = server.shutdown();
+    // `connections` counts admissions; sheds are their own metric
+    assert_eq!(stats.connections, 2, "{stats:?}");
 }
 
+/// The readiness loop serves far more concurrent connections than any
+/// bounded pool: 32 interleaved live connections on one loop thread,
+/// every one answering in round-robin. The threads backend (handler
+/// pool of 2) would serve the first two and leave the rest waiting
+/// unserved in the accept backlog.
 #[test]
-fn remote_shutdown_can_be_disabled() {
+fn poll_backend_serves_more_connections_than_handler_threads() {
     let registry = ModelRegistry::with_model(
         "m",
         SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
@@ -313,19 +562,108 @@ fn remote_shutdown_can_be_disabled() {
     let server = WireServer::bind(
         "127.0.0.1:0",
         registry,
-        WireConfig { allow_remote_shutdown: false, ..Default::default() },
+        WireConfig {
+            io_model: IoModel::Poll,
+            handlers: 2, // would be the concurrency cap on threads
+            poll: std::time::Duration::from_millis(2),
+            ..Default::default()
+        },
     )
     .expect("bind");
-    let mut client = WireClient::connect(server.local_addr()).expect("connect");
-    match client.shutdown_server() {
-        Err(WireError::Server { status, .. }) => {
-            assert_eq!(status, frame::STATUS_FORBIDDEN)
+    let addr = server.local_addr();
+    let mut clients: Vec<WireClient> = (0..32)
+        .map(|i| {
+            WireClient::connect(addr).unwrap_or_else(|e| {
+                panic!("connect {i}: {e:?}");
+            })
+        })
+        .collect();
+    // all 32 are open simultaneously; interleave requests across them
+    // so no connection can be served by "finish one, take the next"
+    for round in 0..3 {
+        for (i, c) in clients.iter_mut().enumerate() {
+            let v = (round * 32 + i) as f64;
+            let resp = c
+                .predict_for("m", &[(0, v)])
+                .unwrap_or_else(|e| panic!("conn {i} round {round}: {e:?}"));
+            assert_eq!(resp.preds[0].to_bits(), v.to_bits());
         }
-        other => panic!("expected forbidden, got {other:?}"),
     }
-    assert!(!server.is_draining());
-    // and the connection still serves
-    client.predict_for("m", &[(0, 1.0)]).expect("still serving");
+    let stats = server.stats();
+    assert_eq!(stats.connections, 32, "{stats:?}");
+    assert_eq!(stats.active_connections, 32, "{stats:?}");
+    drop(clients);
+    server.shutdown();
+}
+
+/// Fairness: a peer streaming max-rate pipelined batches cannot starve
+/// a slow sequential peer — the per-connection frame budget preempts
+/// the streamer every sweep, so the slow peer's singles keep answering
+/// promptly for the whole overlap.
+#[test]
+fn poll_backend_frame_budget_prevents_starvation_by_a_hot_streamer() {
+    let ds = small_ds();
+    let sgd = trained_sgd(&ds);
+    let cell = SnapshotCell::new(Model::snapshot(&sgd));
+    let registry = ModelRegistry::with_model("m", Arc::clone(&cell));
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        registry,
+        WireConfig {
+            io_model: IoModel::Poll,
+            frame_budget: 4,
+            poll: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hot_stop = Arc::clone(&stop);
+    let hot_batch: Vec<Vec<SparseFeat>> =
+        ds.iter().take(64).map(|i| i.features.clone()).collect();
+    let hot = std::thread::spawn(move || {
+        let mut c = match WireClient::connect(addr) {
+            Ok(c) => c,
+            Err(e) => panic!("hot connect: {e:?}"),
+        };
+        let mut streamed = 0u64;
+        while !hot_stop.load(std::sync::atomic::Ordering::Acquire) {
+            // max-rate pipelining: full client window, no think time
+            match c.predict_pipelined("m", &hot_batch) {
+                Ok(r) => streamed += r.len() as u64,
+                Err(_) => break, // server draining at test end
+            }
+        }
+        streamed
+    });
+
+    // the slow peer: sequential singles with think time, racing the
+    // streamer the whole way; every answer must come back promptly and
+    // carry the right bits
+    let mut slow = WireClient::connect(addr).expect("slow connect");
+    let x = &ds.instances[3].features;
+    let want = reference(&cell, x).to_bits();
+    let started = std::time::Instant::now();
+    for i in 0..20 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let resp = slow
+            .predict_for("m", x)
+            .unwrap_or_else(|e| panic!("slow peer starved at {i}: {e:?}"));
+        assert_eq!(resp.preds[0].to_bits(), want);
+    }
+    // generous bound: 20 round-trips of one small frame each; a
+    // starved peer (served only after the streamer disconnects) would
+    // blow far past this
+    let elapsed = started.elapsed();
+    assert!(
+        elapsed < std::time::Duration::from_secs(10),
+        "slow peer took {elapsed:?} under a hot streamer"
+    );
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let streamed = hot.join().expect("hot streamer");
+    assert!(streamed > 0, "the hot peer must actually have streamed");
     server.shutdown();
 }
 
@@ -355,14 +693,13 @@ fn raw_frame(
     out
 }
 
-fn hostile_server() -> (WireServer, std::net::SocketAddr) {
+fn hostile_server(io: IoModel) -> (WireServer, std::net::SocketAddr) {
     let registry = ModelRegistry::with_model(
         "m",
         SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
     );
-    let server =
-        WireServer::bind("127.0.0.1:0", registry, WireConfig::default())
-            .expect("bind");
+    let server = WireServer::bind("127.0.0.1:0", registry, cfg_for(io))
+        .expect("bind");
     let addr = server.local_addr();
     (server, addr)
 }
@@ -397,250 +734,304 @@ fn assert_alive(addr: std::net::SocketAddr) {
 
 #[test]
 fn truncated_frames_close_cleanly() {
-    let (server, addr) = hostile_server();
-    // a frame cut at every prefix of its bytes
-    let full = raw_frame(b"POLW", PROTO_VERSION, 5, 0, 1, b"ping");
-    for cut in [1, 3, 4, 7, full.len() - 1] {
-        let back = send_raw(addr, &full[..cut]);
-        assert!(back.is_empty(), "cut at {cut} got a reply: {back:?}");
-        assert_alive(addr);
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        // a frame cut at every prefix of its bytes
+        let full = raw_frame(b"POLW", PROTO_VERSION, 5, 0, 1, b"ping");
+        for cut in [1, 3, 4, 7, full.len() - 1] {
+            let back = send_raw(addr, &full[..cut]);
+            assert!(back.is_empty(), "cut at {cut} got a reply: {back:?}");
+            assert_alive(addr);
+        }
+        let stats = server.shutdown();
+        assert!(stats.decode_errors >= 3, "{stats:?}");
     }
-    let stats = server.shutdown();
-    assert!(stats.decode_errors >= 3, "{stats:?}");
 }
 
 #[test]
 fn oversized_length_prefix_rejected_without_allocation() {
-    let (server, addr) = hostile_server();
-    // claims 4 GiB; the server must reject after the four length bytes
-    // and close — long before any allocation toward the claim
-    let mut bytes = u32::MAX.to_le_bytes().to_vec();
-    bytes.extend_from_slice(&[0xAB; 128]);
-    let back = send_raw(addr, &bytes);
-    assert!(back.is_empty());
-    assert_alive(addr);
-    // an under-sized claim is rejected the same way
-    let mut tiny = 4u32.to_le_bytes().to_vec();
-    tiny.extend_from_slice(&[0u8; 4]);
-    assert!(send_raw(addr, &tiny).is_empty());
-    assert_alive(addr);
-    let stats = server.shutdown();
-    assert!(stats.decode_errors >= 2);
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        // claims 4 GiB; the server must reject after the four length
+        // bytes and close — long before any allocation toward the claim
+        let mut bytes = u32::MAX.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0xAB; 128]);
+        let back = send_raw(addr, &bytes);
+        assert!(back.is_empty());
+        assert_alive(addr);
+        // an under-sized claim is rejected the same way
+        let mut tiny = 4u32.to_le_bytes().to_vec();
+        tiny.extend_from_slice(&[0u8; 4]);
+        assert!(send_raw(addr, &tiny).is_empty());
+        assert_alive(addr);
+        let stats = server.shutdown();
+        assert!(stats.decode_errors >= 2);
+    }
 }
 
 #[test]
 fn bad_magic_version_and_checksum_close_cleanly() {
-    let (server, addr) = hostile_server();
-    // wrong magic, checksum otherwise valid
-    let bad_magic = raw_frame(b"HTTP", PROTO_VERSION, 5, 0, 1, b"x");
-    assert!(send_raw(addr, &bad_magic).is_empty());
-    assert_alive(addr);
-    // wrong protocol version
-    let bad_version = raw_frame(b"POLW", 0xEEEE, 5, 0, 1, b"x");
-    assert!(send_raw(addr, &bad_version).is_empty());
-    assert_alive(addr);
-    // checksum mismatch (flip one payload byte after sealing)
-    let mut corrupt = raw_frame(b"POLW", PROTO_VERSION, 5, 0, 1, b"payload");
-    let n = corrupt.len();
-    corrupt[n - 12] ^= 0x40;
-    assert!(send_raw(addr, &corrupt).is_empty());
-    assert_alive(addr);
-    let stats = server.shutdown();
-    assert_eq!(stats.decode_errors, 3);
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        // wrong magic, checksum otherwise valid
+        let bad_magic = raw_frame(b"HTTP", PROTO_VERSION, 5, 0, 1, b"x");
+        assert!(send_raw(addr, &bad_magic).is_empty());
+        assert_alive(addr);
+        // wrong protocol version
+        let bad_version = raw_frame(b"POLW", 0xEEEE, 5, 0, 1, b"x");
+        assert!(send_raw(addr, &bad_version).is_empty());
+        assert_alive(addr);
+        // checksum mismatch (flip one payload byte after sealing)
+        let mut corrupt =
+            raw_frame(b"POLW", PROTO_VERSION, 5, 0, 1, b"payload");
+        let n = corrupt.len();
+        corrupt[n - 12] ^= 0x40;
+        assert!(send_raw(addr, &corrupt).is_empty());
+        assert_alive(addr);
+        let stats = server.shutdown();
+        // identical counting on both backends: one per corrupt stream
+        assert_eq!(stats.decode_errors, 3);
+    }
 }
 
 #[test]
 fn unknown_op_and_over_cap_payloads_get_typed_error_frames() {
-    let (server, addr) = hostile_server();
-    // unknown op: well-formed frame, typed error, connection stays up
-    let unknown = raw_frame(b"POLW", PROTO_VERSION, 99, 0, 7, b"");
-    let back = send_raw(addr, &unknown);
-    let (op, status, req_id, msg) = first_frame(&back).expect("error frame");
-    assert_eq!(op, 99);
-    assert_eq!(status, STATUS_UNKNOWN_OP);
-    assert_eq!(req_id, 7);
-    assert!(String::from_utf8_lossy(&msg).contains("99"));
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        // unknown op: well-formed frame, typed error, connection stays up
+        let unknown = raw_frame(b"POLW", PROTO_VERSION, 99, 0, 7, b"");
+        let back = send_raw(addr, &unknown);
+        let (op, status, req_id, msg) =
+            first_frame(&back).expect("error frame");
+        assert_eq!(op, 99);
+        assert_eq!(status, STATUS_UNKNOWN_OP);
+        assert_eq!(req_id, 7);
+        assert!(String::from_utf8_lossy(&msg).contains("99"));
 
-    // over-cap batch count: typed too-large error naming the cap
-    let mut payload = Vec::new();
-    payload.push(1u8);
-    payload.push(b'm');
-    payload.extend_from_slice(&(MAX_BATCH + 1).to_le_bytes());
-    let over = raw_frame(b"POLW", PROTO_VERSION, 2, 0, 9, &payload);
-    let back = send_raw(addr, &over);
-    let (_, status, req_id, _) = first_frame(&back).expect("error frame");
-    assert_eq!(status, STATUS_TOO_LARGE);
-    assert_eq!(req_id, 9);
+        // over-cap batch count: typed too-large error naming the cap
+        let mut payload = Vec::new();
+        payload.push(1u8);
+        payload.push(b'm');
+        payload.extend_from_slice(&(MAX_BATCH + 1).to_le_bytes());
+        let over = raw_frame(b"POLW", PROTO_VERSION, 2, 0, 9, &payload);
+        let back = send_raw(addr, &over);
+        let (_, status, req_id, _) = first_frame(&back).expect("error frame");
+        assert_eq!(status, STATUS_TOO_LARGE);
+        assert_eq!(req_id, 9);
 
-    // a batch whose count lies about the bytes present: bad-frame error
-    let mut payload = Vec::new();
-    payload.push(1u8);
-    payload.push(b'm');
-    payload.extend_from_slice(&64u32.to_le_bytes());
-    let lying = raw_frame(b"POLW", PROTO_VERSION, 2, 0, 11, &payload);
-    let back = send_raw(addr, &lying);
-    let (_, status, req_id, _) = first_frame(&back).expect("error frame");
-    assert_eq!(status, frame::STATUS_BAD_FRAME);
-    assert_eq!(req_id, 11);
+        // a batch whose count lies about the bytes present: bad-frame
+        let mut payload = Vec::new();
+        payload.push(1u8);
+        payload.push(b'm');
+        payload.extend_from_slice(&64u32.to_le_bytes());
+        let lying = raw_frame(b"POLW", PROTO_VERSION, 2, 0, 11, &payload);
+        let back = send_raw(addr, &lying);
+        let (_, status, req_id, _) = first_frame(&back).expect("error frame");
+        assert_eq!(status, frame::STATUS_BAD_FRAME);
+        assert_eq!(req_id, 11);
 
-    assert_alive(addr);
-    let stats = server.shutdown();
-    assert!(stats.decode_errors >= 2, "{stats:?}");
+        assert_alive(addr);
+        let stats = server.shutdown();
+        assert!(stats.decode_errors >= 2, "{stats:?}");
+    }
 }
 
 #[test]
 fn unknown_model_is_a_typed_error_not_a_close() {
-    let (server, addr) = hostile_server();
-    let mut client = WireClient::connect(addr).expect("connect");
-    match client.predict_for("ghost", &[(0, 1.0)]) {
-        Err(WireError::Server { status, message }) => {
-            assert_eq!(status, STATUS_UNKNOWN_MODEL);
-            assert!(message.contains("ghost"), "{message}");
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        let mut client = WireClient::connect(addr).expect("connect");
+        match client.predict_for("ghost", &[(0, 1.0)]) {
+            Err(WireError::Server { status, message }) => {
+                assert_eq!(status, STATUS_UNKNOWN_MODEL);
+                assert!(message.contains("ghost"), "{message}");
+            }
+            other => panic!("expected unknown-model, got {other:?}"),
         }
-        other => panic!("expected unknown-model, got {other:?}"),
+        // same connection keeps serving afterwards
+        let resp = client.predict_for("m", &[(0, 1.0)]).expect("predict");
+        assert_eq!(resp.preds[0], 1.0);
+        server.shutdown();
     }
-    // same connection keeps serving afterwards
-    let resp = client.predict_for("m", &[(0, 1.0)]).expect("predict");
-    assert_eq!(resp.preds[0], 1.0);
-    server.shutdown();
 }
 
 #[test]
 fn garbage_bytes_and_healthy_frames_interleave_across_connections() {
-    let (server, addr) = hostile_server();
-    // fuzz-ish: deterministic garbage of several lengths, then prove
-    // the server still serves — no panic, no wedged handler
-    let mut rng = pol::rng::Rng::new(0xF00D);
-    for len in [1usize, 3, 24, 64, 512] {
-        let garbage: Vec<u8> =
-            (0..len).map(|_| rng.below(256) as u8).collect();
-        let _ = send_raw(addr, &garbage);
-        assert_alive(addr);
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        // fuzz-ish: deterministic garbage of several lengths, then
+        // prove the server still serves — no panic, no wedged handler
+        let mut rng = pol::rng::Rng::new(0xF00D);
+        for len in [1usize, 3, 24, 64, 512] {
+            let garbage: Vec<u8> =
+                (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = send_raw(addr, &garbage);
+            assert_alive(addr);
+        }
+        // a valid OK *status* on a request frame is still served
+        // (status is ignored on requests), and response status is OK
+        let ok = raw_frame(b"POLW", PROTO_VERSION, 5, STATUS_OK, 3, b"hi");
+        let back = send_raw(addr, &ok);
+        let (_, status, _, msg) = first_frame(&back).expect("pong");
+        assert_eq!(status, STATUS_OK);
+        assert_eq!(msg, b"hi");
+        server.shutdown();
     }
-    // a valid OK *status* on a request frame is still served (status
-    // is ignored on requests), and response status is OK
-    let ok = raw_frame(b"POLW", PROTO_VERSION, 5, STATUS_OK, 3, b"hi");
-    let back = send_raw(addr, &ok);
-    let (_, status, _, msg) = first_frame(&back).expect("pong");
-    assert_eq!(status, STATUS_OK);
-    assert_eq!(msg, b"hi");
-    server.shutdown();
 }
 
 // ---- metrics exposition over the wire -------------------------------
 
 #[test]
 fn metrics_dump_round_trips_and_folds_the_obs_registry() {
-    let registry = ModelRegistry::with_model(
-        "m",
-        SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
-    );
-    // a training-side registry folded into every dump
-    let obs = pol::obs::Obs::new();
-    obs.metrics.counter("pol_train_instances_total").add(7);
-    let server = WireServer::bind(
-        "127.0.0.1:0",
-        Arc::clone(&registry),
-        WireConfig { obs: Some(Arc::clone(&obs)), ..Default::default() },
-    )
-    .expect("bind");
-    let mut client = WireClient::connect(server.local_addr()).expect("connect");
-    client.predict_for("m", &[(0, 1.0)]).expect("predict");
+    for io in backends() {
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+        );
+        // a training-side registry folded into every dump
+        let obs = pol::obs::Obs::new();
+        obs.metrics.counter("pol_train_instances_total").add(7);
+        let server = WireServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            WireConfig {
+                io_model: io,
+                obs: Some(Arc::clone(&obs)),
+                ..Default::default()
+            },
+        )
+        .expect("bind");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
+        client.predict_for("m", &[(0, 1.0)]).expect("predict");
 
-    let text = client.metrics_dump().expect("metrics dump");
-    assert!(
-        text.starts_with(pol::obs::EXPOSITION_HEADER),
-        "missing version header: {text}"
-    );
-    let series = pol::obs::parse_exposition(&text).expect("parseable dump");
-    let get = |name: &str| {
-        series.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
-    };
-    // the dump folds this connection's own traffic in before rendering
-    assert_eq!(get("pol_serve_requests_total{model=\"m\"}"), Some(1));
-    assert_eq!(get("pol_serve_predictions_total{model=\"m\"}"), Some(1));
-    assert_eq!(get("pol_serve_models"), Some(1));
-    assert!(get("pol_serve_registry_version").expect("registry version") >= 1);
-    assert!(get("pol_wire_frames_in_total").expect("frames in") >= 2);
-    assert_eq!(get("pol_wire_active_connections"), Some(1));
-    // the attached obs registry rides along
-    assert_eq!(get("pol_train_instances_total"), Some(7));
-    // per-model latency exposes the full histogram summary
-    assert_eq!(get("pol_serve_latency_ns_count{model=\"m\"}"), Some(1));
+        let text = client.metrics_dump().expect("metrics dump");
+        assert!(
+            text.starts_with(pol::obs::EXPOSITION_HEADER),
+            "missing version header: {text}"
+        );
+        let series =
+            pol::obs::parse_exposition(&text).expect("parseable dump");
+        let get = |name: &str| {
+            series.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+        };
+        // the dump folds this connection's own traffic in first
+        assert_eq!(get("pol_serve_requests_total{model=\"m\"}"), Some(1));
+        assert_eq!(get("pol_serve_predictions_total{model=\"m\"}"), Some(1));
+        assert_eq!(get("pol_serve_models"), Some(1));
+        assert!(
+            get("pol_serve_registry_version").expect("registry version") >= 1
+        );
+        assert!(get("pol_wire_frames_in_total").expect("frames in") >= 2);
+        assert_eq!(get("pol_wire_active_connections"), Some(1));
+        // the attached obs registry rides along
+        assert_eq!(get("pol_train_instances_total"), Some(7));
+        // per-model latency exposes the full histogram summary
+        assert_eq!(get("pol_serve_latency_ns_count{model=\"m\"}"), Some(1));
+        // event-loop series: live on both backends, moving on poll
+        assert_eq!(get("pol_wire_conns_active"), Some(1));
+        assert_eq!(get("pol_wire_conns_shed"), Some(0));
+        let wakeups = get("pol_wire_wakeups").expect("wakeups series");
+        let wakeup_frames =
+            get("pol_wire_wakeup_frames_count").expect("wakeup histogram");
+        match io {
+            IoModel::Poll => {
+                assert!(wakeups >= 1, "the loop must have swept");
+                assert!(wakeup_frames >= 1, "sweeps must record the budget");
+            }
+            IoModel::Threads => {
+                assert_eq!(wakeups, 0, "no loop on the threads backend");
+                assert_eq!(wakeup_frames, 0);
+            }
+        }
 
-    // the extended Stats payload carries the registry generation too
-    let stats = client.stats().expect("stats");
-    assert_eq!(stats.registry_models, 1);
-    assert_eq!(stats.registry_version, 1);
-    server.shutdown();
+        // the extended Stats payload carries the registry generation
+        let stats = client.stats().expect("stats");
+        assert_eq!(stats.registry_models, 1);
+        assert_eq!(stats.registry_version, 1);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn metrics_dump_with_a_payload_is_a_typed_error_and_server_survives() {
-    let (server, addr) = hostile_server();
-    // MetricsDump (op 7) takes no request payload; junk bytes must be a
-    // typed bad-frame error, not a close and not an allocation
-    let bad = raw_frame(b"POLW", PROTO_VERSION, 7, 0, 21, b"junk");
-    let back = send_raw(addr, &bad);
-    let (op, status, req_id, msg) = first_frame(&back).expect("error frame");
-    assert_eq!(op, 7);
-    assert_eq!(status, frame::STATUS_BAD_FRAME);
-    assert_eq!(req_id, 21);
-    assert!(String::from_utf8_lossy(&msg).contains("payload"));
-    assert_alive(addr);
-    // a well-formed dump still answers on a server with no obs attached
-    let mut client = WireClient::connect(addr).expect("connect");
-    let text = client.metrics_dump().expect("dump without obs");
-    let series = pol::obs::parse_exposition(&text).expect("parseable");
-    assert!(series.iter().any(|(n, _)| n == "pol_wire_frames_in_total"));
-    let stats = server.shutdown();
-    assert!(stats.decode_errors >= 1, "{stats:?}");
+    for io in backends() {
+        let (server, addr) = hostile_server(io);
+        // MetricsDump (op 7) takes no request payload; junk bytes must
+        // be a typed bad-frame error, not a close and not an allocation
+        let bad = raw_frame(b"POLW", PROTO_VERSION, 7, 0, 21, b"junk");
+        let back = send_raw(addr, &bad);
+        let (op, status, req_id, msg) =
+            first_frame(&back).expect("error frame");
+        assert_eq!(op, 7);
+        assert_eq!(status, frame::STATUS_BAD_FRAME);
+        assert_eq!(req_id, 21);
+        assert!(String::from_utf8_lossy(&msg).contains("payload"));
+        assert_alive(addr);
+        // a well-formed dump still answers with no obs attached
+        let mut client = WireClient::connect(addr).expect("connect");
+        let text = client.metrics_dump().expect("dump without obs");
+        let series = pol::obs::parse_exposition(&text).expect("parseable");
+        assert!(series.iter().any(|(n, _)| n == "pol_wire_frames_in_total"));
+        let stats = server.shutdown();
+        assert!(stats.decode_errors >= 1, "{stats:?}");
+    }
 }
 
+/// Satellite regression: the per-connection stats buffer must reach
+/// the shared map at the flush cadence AND on every disconnect — the
+/// threads backend's handler exit, and the poll backend's idle-timeout
+/// close (the readiness loop re-expression of the same contract).
 #[test]
 fn stats_flush_interval_is_configurable_and_disconnect_flushes() {
-    let registry = ModelRegistry::with_model(
-        "m",
-        SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
-    );
-    let server = WireServer::bind(
-        "127.0.0.1:0",
-        Arc::clone(&registry),
-        WireConfig {
-            stats_flush_frames: 2,
-            idle_timeout: Some(std::time::Duration::from_millis(100)),
-            poll: std::time::Duration::from_millis(10),
-            ..Default::default()
-        },
-    )
-    .expect("bind");
-    let addr = server.local_addr();
-    let mut client = WireClient::connect(addr).expect("connect");
-    client.predict_for("m", &[(0, 1.0)]).expect("predict 1");
-    client.predict_for("m", &[(0, 1.0)]).expect("predict 2");
-    // cadence 2 reached: a DIFFERENT connection sees both requests
-    // without the first one issuing Stats itself
-    let mut other = WireClient::connect(addr).expect("second connection");
-    let stats = other.stats().expect("stats");
-    let row = stats.models.iter().find(|m| m.name == "m").expect("model row");
-    assert!(row.requests >= 2, "cadence-2 flush not visible: {stats:?}");
-    drop(other);
-
-    // one more request leaves the first connection mid-cadence; the
-    // idle-timeout disconnect must flush the remainder
-    client.predict_for("m", &[(0, 1.0)]).expect("predict 3");
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
-    loop {
-        let row = server.stats();
-        let m = row.models.iter().find(|m| m.name == "m").expect("model row");
-        if m.requests >= 3 {
-            break;
-        }
-        assert!(
-            std::time::Instant::now() < deadline,
-            "idle disconnect never flushed the third request: {row:?}"
+    for io in backends() {
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
         );
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        let server = WireServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            WireConfig {
+                io_model: io,
+                stats_flush_frames: 2,
+                idle_timeout: Some(std::time::Duration::from_millis(100)),
+                poll: std::time::Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .expect("bind");
+        let addr = server.local_addr();
+        let mut client = WireClient::connect(addr).expect("connect");
+        client.predict_for("m", &[(0, 1.0)]).expect("predict 1");
+        client.predict_for("m", &[(0, 1.0)]).expect("predict 2");
+        // cadence 2 reached: a DIFFERENT connection sees both requests
+        // without the first one issuing Stats itself
+        let mut other = WireClient::connect(addr).expect("second connection");
+        let stats = other.stats().expect("stats");
+        let row =
+            stats.models.iter().find(|m| m.name == "m").expect("model row");
+        assert!(row.requests >= 2, "cadence-2 flush not visible: {stats:?}");
+        drop(other);
+
+        // one more request leaves the first connection mid-cadence; the
+        // idle-timeout disconnect must flush the remainder
+        client.predict_for("m", &[(0, 1.0)]).expect("predict 3");
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let row = server.stats();
+            let m =
+                row.models.iter().find(|m| m.name == "m").expect("model row");
+            if m.requests >= 3 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "idle disconnect never flushed request 3 ({io}): {row:?}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        server.shutdown();
     }
-    server.shutdown();
 }
