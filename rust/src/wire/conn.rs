@@ -110,7 +110,8 @@ pub(crate) struct Conn {
     /// [`crate::wire::server::DRAIN_FRAMES`]).
     pub(crate) drained: u32,
     /// No further reads or decodes; close once `wbuf` drains (or the
-    /// loop's flush deadline passes).
+    /// loop's idle or drain-flush deadline passes — a peer that never
+    /// reads its final bytes must not pin the slot).
     pub(crate) closing: bool,
     /// The peer half-closed its send side; answer what is buffered,
     /// then close.

@@ -50,14 +50,20 @@
 //! connection's clock only advances when a *complete* frame is
 //! answered, so trickling bytes that never finish a frame is
 //! indistinguishable from silence, mirroring the threads backend's
-//! per-frame read deadline. On shutdown the loop stops accepting,
-//! answers only the frames already buffered per connection (bounded
-//! by [`DRAIN_FRAMES`]), enqueues the typed shutting-down frame, and
-//! closes each connection as its output drains (bounded by
-//! [`DRAIN_FLUSH`]). Every close — idle, EOF, error, shed-free drain —
-//! flushes the connection's private stats buffer into the shared map
-//! first, the same disconnect-flush contract the threads backend
-//! keeps.
+//! per-frame read deadline. The same deadline covers the write
+//! direction: a connection lingering in the closing state because its
+//! peer never reads the final responses ages out too (the threads
+//! backend gets this from its idle-bounded write timeout), so a
+//! half-closed, never-reading peer cannot pin a conn slot and bleed
+//! the admission cap. On shutdown the loop stops accepting, answers
+//! only the frames already buffered per connection (bounded by
+//! [`DRAIN_FRAMES`]), enqueues the typed shutting-down frame, and
+//! closes each connection as its output drains — with [`DRAIN_FLUSH`]
+//! as the hard bound on *every* connection, including one stuck in
+//! write backpressure that never reached the closing state. Every
+//! close — idle, EOF, error, shed-free drain — flushes the
+//! connection's private stats buffer into the shared map first, the
+//! same disconnect-flush contract the threads backend keeps.
 
 // Every Relaxed here is monotonic telemetry (shed/wakeup/byte/frame
 // counters, the active gauge); real cross-thread hand-off goes through
@@ -314,6 +320,10 @@ impl PollServer {
     /// virtually always lands whole; a peer that raced away simply
     /// misses its goodbye.
     fn shed(&mut self, stream: TcpStream) {
+        // the threads backend counts every accept in `connections`;
+        // a shed accept counts there too, so the two backends report
+        // identical pol_wire_connections_total for identical traffic
+        self.shared.connections.fetch_add(1, Ordering::Relaxed);
         self.shared.shed.fetch_add(1, Ordering::Relaxed);
         let _ = stream.set_nonblocking(true);
         let mut w = &stream;
@@ -344,22 +354,32 @@ impl PollServer {
             DrainOutcome::Pending { progressed: p } => progressed |= p,
         }
 
-        // a closing connection only lingers for its final bytes
-        if pc.conn.closing {
-            if pc.conn.write_backlog() == 0
-                || self.drain_deadline.is_some_and(|d| now >= d)
-            {
-                return Verdict::Close;
-            }
-            return Verdict::Keep { progressed, frames: 0 };
+        // drain flush bound: past the deadline *every* connection is
+        // force-closed — closing or still under write backpressure —
+        // so shutdown() is bounded by DRAIN_FLUSH, never by a peer
+        // that stopped reading
+        if self.drain_deadline.is_some_and(|d| now >= d) {
+            return Verdict::Close;
         }
 
         // idle/slow-loris deadline: the clock only advances on
-        // answered frames, so byte-trickling ages out too
+        // answered frames, so byte-trickling ages out. Checked before
+        // the closing branch on purpose — a peer that half-closes with
+        // responses pending and never reads them must not pin a conn
+        // slot past the deadline (the write-direction guard the
+        // threads backend gets from its idle-bounded write timeout).
         if let Some(idle) = self.params.idle_timeout {
             if now.duration_since(pc.conn.last_activity) >= idle {
                 return Verdict::Close;
             }
+        }
+
+        // a closing connection only lingers for its final bytes
+        if pc.conn.closing {
+            if pc.conn.write_backlog() == 0 {
+                return Verdict::Close;
+            }
+            return Verdict::Keep { progressed, frames: 0 };
         }
 
         // read one bounded chunk (never while draining: shutdown
@@ -475,6 +495,140 @@ impl PollServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64};
+    use std::sync::Mutex;
+
+    use crate::obs::HistogramSnapshot;
+    use crate::serve::ModelRegistry;
+
+    fn test_shared(local_addr: std::net::SocketAddr) -> Arc<Shared> {
+        Arc::new(Shared {
+            registry: ModelRegistry::new(),
+            stop: AtomicBool::new(false),
+            allow_remote_shutdown: true,
+            local_addr,
+            started: Instant::now(),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            decode_errors: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            wakeups: AtomicU64::new(0),
+            wakeup_frames: Mutex::new(HistogramSnapshot::default()),
+            per_model: Mutex::new(std::collections::BTreeMap::new()),
+            stats_flush_frames: 64,
+            obs: None,
+        })
+    }
+
+    /// A server with one tracked connection whose peer never reads,
+    /// carrying `backlog` bytes of pending output. The backlog is far
+    /// past any kernel buffer, so a drain pass cannot finish it — the
+    /// connection stays pending by construction.
+    fn server_with_stuck_conn(
+        idle_timeout: Option<Duration>,
+        backlog: usize,
+    ) -> (PollServer, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let peer = TcpStream::connect(addr).expect("connect");
+        let (stream, _) = listener.accept().expect("accept");
+        let _ = stream.set_nonblocking(true);
+        let mut srv = PollServer::new(
+            test_shared(addr),
+            listener,
+            PollParams {
+                poll: Duration::from_millis(1),
+                idle_timeout,
+                max_conns: 4,
+                frame_budget: 16,
+            },
+        );
+        let mut conn = Conn::new(Instant::now());
+        conn.wbuf = vec![0xAB; backlog];
+        srv.conns.push(PollConn { token: 0, stream, conn });
+        (srv, peer)
+    }
+
+    /// REVIEW regression (high): a connection in the closing state —
+    /// peer half-closed, responses pending, peer never reads — must
+    /// age out against the idle deadline instead of pinning a conn
+    /// slot forever and bleeding the admission cap.
+    #[test]
+    fn closing_connection_whose_peer_never_reads_hits_the_idle_deadline() {
+        let idle = Duration::from_secs(5);
+        let (mut srv, _peer) =
+            server_with_stuck_conn(Some(idle), 64 << 20);
+        srv.conns[0].conn.closing = true;
+
+        // inside the deadline the closing connection lingers for its
+        // final bytes, exactly as before
+        assert!(
+            matches!(
+                srv.service(0, Instant::now(), false),
+                Verdict::Keep { .. }
+            ),
+            "a closing conn inside the idle deadline must be kept"
+        );
+        assert!(
+            srv.conns[0].conn.write_backlog() > 0,
+            "test invariant: the peer must not have drained the backlog"
+        );
+
+        // past the deadline it goes, pending output or not
+        let stale = Instant::now()
+            .checked_sub(idle + Duration::from_millis(1))
+            .expect("clock headroom");
+        srv.conns[0].conn.last_activity = stale;
+        assert!(
+            matches!(srv.service(0, Instant::now(), false), Verdict::Close),
+            "a closing conn past the idle deadline must be closed"
+        );
+    }
+
+    /// REVIEW regression (medium): during a drain, a connection stuck
+    /// at the write high-water mark never reaches the closing state
+    /// (the decode loop breaks before `backlog_empty`), so the
+    /// DRAIN_FLUSH force-close must apply to it directly — otherwise
+    /// shutdown() blocks on the slowest reader instead of the
+    /// documented flush bound.
+    #[test]
+    fn drain_deadline_force_closes_connections_stuck_in_backpressure() {
+        let (mut srv, _peer) =
+            server_with_stuck_conn(None, WBUF_HIGH + (64 << 20));
+        srv.shared.stop.store(true, Ordering::Release);
+
+        // before the flush deadline the connection is kept (it may
+        // still drain on its own) — and the bug's precondition holds:
+        // backpressure kept it out of the closing state
+        let now = Instant::now();
+        srv.drain_deadline = Some(now + DRAIN_FLUSH);
+        assert!(
+            matches!(srv.service(0, now, true), Verdict::Keep { .. }),
+            "inside the flush deadline the conn may still drain"
+        );
+        assert!(
+            !srv.conns[0].conn.closing,
+            "test invariant: backpressure must have kept the conn \
+             out of the closing state"
+        );
+        assert!(
+            srv.conns[0].conn.write_backlog() >= WBUF_HIGH,
+            "test invariant: the backlog must still be above the \
+             high-water mark"
+        );
+
+        // at the deadline the force-close fires even though the
+        // connection never reached the closing state
+        let later = now + DRAIN_FLUSH;
+        assert!(
+            matches!(srv.service(0, later, true), Verdict::Close),
+            "the drain flush deadline must bound a backpressured conn"
+        );
+    }
 
     #[test]
     fn scan_poller_tracks_registration_and_reports_probe_all() {

@@ -544,8 +544,89 @@ fn poll_backend_sheds_over_cap_connections_with_typed_frames() {
     assert!(shed >= 1, "shed connections must be counted, got {shed}");
 
     let stats = server.shutdown();
-    // `connections` counts admissions; sheds are their own metric
-    assert_eq!(stats.connections, 2, "{stats:?}");
+    // `connections` counts every accept — admitted *and* shed — for
+    // parity with the threads backend (which counts every accept);
+    // sheds are additionally counted in their own metric
+    assert_eq!(stats.connections, 4, "{stats:?}");
+    assert_eq!(stats.active_connections, 0, "{stats:?}");
+}
+
+/// REVIEW regression: a peer that pipelines requests, half-closes its
+/// send side with responses still pending, and never reads must not
+/// pin a conn slot past the idle deadline — otherwise an attacker
+/// opening `max_conns` such connections permanently exhausts the
+/// admission cap and every later peer is shed.
+#[test]
+fn poll_backend_frees_slots_pinned_by_half_closed_never_reading_peers() {
+    let registry = ModelRegistry::with_model(
+        "m",
+        SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+    );
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        registry,
+        WireConfig {
+            io_model: IoModel::Poll,
+            max_conns: 1, // the attacker's one slot is ALL the slots
+            idle_timeout: Some(std::time::Duration::from_millis(200)),
+            poll: std::time::Duration::from_millis(5),
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    // the attacker: pipeline ~2 MiB of max-size pings (enough response
+    // bytes to overwhelm any kernel buffering once we stop reading),
+    // half-close, never read a byte. The writer runs on its own thread
+    // because the server stops reading under write backpressure, which
+    // blocks our sends until the idle close resets the connection.
+    let attacker = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).expect("attacker connect");
+        let ping = raw_frame(
+            b"POLW",
+            PROTO_VERSION,
+            Op::Ping as u8,
+            0,
+            1,
+            &[0x5A; frame::MAX_PING],
+        );
+        for _ in 0..512 {
+            if s.write_all(&ping).is_err() {
+                break; // server already reset us: slot reclaimed
+            }
+        }
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        // never read; hold the socket open until the server closes it
+        std::thread::sleep(std::time::Duration::from_secs(2));
+    });
+
+    // the slot must come back within the idle deadline (plus slack),
+    // not be pinned until shutdown
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        if server.stats().active_connections == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "half-closed never-reading peer pinned its conn slot: {:?}",
+            server.stats()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // and a well-behaved peer is admitted into the reclaimed slot —
+    // served, not shed
+    let mut client = WireClient::connect(addr).expect("reconnect");
+    assert_eq!(
+        client.predict_for("m", &[(0, 2.0)]).expect("reclaimed slot").preds
+            [0],
+        2.0
+    );
+    attacker.join().expect("attacker thread");
+    server.shutdown();
 }
 
 /// The readiness loop serves far more concurrent connections than any
