@@ -21,6 +21,7 @@
 //! | **L005** | No word-bounded `f32`/`f64` tokens in the record-path functions (`record*`, `inc*`, `add*`, `set*`, `observe*`, `tick*`, `merge*`) under `obs/`. | Telemetry records integers only; float math lives on snapshot *read* paths (quantiles, means), so recording never perturbs — or gets perturbed by — float state, and record hot paths stay integer-cheap. |
 //! | **L006** | No narrowing `as u8` / `as u16` / `as u32` casts in `wire/frame.rs`, `wire/client.rs`, `wire/conn.rs`, `wire/poll.rs`, `wire/server.rs`, `serve/checkpoint.rs`, `obs/trace.rs`. | Wire and checkpoint length fields are produced via `u32::try_from(..)` so an oversized length errors instead of truncating into a silently desynced frame or a checkpoint that decodes to the wrong model. |
 //! | **L007** | `unsafe` only in `linalg.rs` and under `simd/`, and there only with a reasoned per-site waiver; anywhere else it fires *even with* a waiver. | The crate-wide `#![deny(unsafe_code)]` story: the entire unsafe surface (bounds-check-elided gathers, AVX2 intrinsics, aligned-table slice views) is confined to the kernel layer, each site carrying its in-range/feature-gated argument next to it — a new `unsafe` elsewhere cannot slip in behind an `#[allow]`. |
+//! | **L008** | String literals beginning `pol_` (the metrics/series namespace) only in `obs/names.rs`. | Every exported series name is spelled exactly once, in [`crate::obs::names`]; producers, renderers, and dashboards all reference the same constants, so the exposition namespace cannot fork by typo and renaming a series is a one-file change. |
 //!
 //! # Waivers
 //!
@@ -79,11 +80,13 @@ pub enum Rule {
     L006,
     /// `unsafe` confined to `linalg.rs`/`simd/`, waived with a reason.
     L007,
+    /// `pol_*` series-name literals only in `obs/names.rs`.
+    L008,
 }
 
 impl Rule {
     /// Every rule, in id order.
-    pub const ALL: [Rule; 7] = [
+    pub const ALL: [Rule; 8] = [
         Rule::L001,
         Rule::L002,
         Rule::L003,
@@ -91,6 +94,7 @@ impl Rule {
         Rule::L005,
         Rule::L006,
         Rule::L007,
+        Rule::L008,
     ];
 
     /// The canonical id string (`"L001"`, ...).
@@ -103,6 +107,7 @@ impl Rule {
             Rule::L005 => "L005",
             Rule::L006 => "L006",
             Rule::L007 => "L007",
+            Rule::L008 => "L008",
         }
     }
 

@@ -1,4 +1,4 @@
-//! The seven lint rules and the span/waiver machinery they share.
+//! The eight lint rules and the span/waiver machinery they share.
 //!
 //! Everything here runs over the *masked* source from
 //! [`super::lexer::mask`] — except waiver scanning, which reads the
@@ -257,6 +257,7 @@ const L003_FILES: &[&str] = &[
     "wire/poll.rs",
     "serve/checkpoint.rs",
     "obs/trace.rs",
+    "obs/flight.rs",
 ];
 const L006_FILES: &[&str] = &[
     "wire/frame.rs",
@@ -266,6 +267,7 @@ const L006_FILES: &[&str] = &[
     "wire/server.rs",
     "serve/checkpoint.rs",
     "obs/trace.rs",
+    "obs/flight.rs",
 ];
 const L004_DIRS: &[&str] = &["coordinator/", "model/", "stream/", "sharding/"];
 const L002_DIRS: &[&str] = &["obs/"];
@@ -279,6 +281,8 @@ const L005_PREFIXES: &[&str] =
 /// Where `unsafe` is allowed to exist at all (L007): the kernel layer.
 const L007_SCOPE_FILES: &[&str] = &["linalg.rs"];
 const L007_SCOPE_DIRS: &[&str] = &["simd/"];
+/// The one file allowed to spell `pol_*` series names (L008).
+const L008_NAME_FILE: &str = "obs/names.rs";
 
 fn has_prefix(name: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| name.starts_with(p))
@@ -413,6 +417,30 @@ pub fn lint_file(rel: &str, raw: &str) -> Vec<Finding> {
                 line_of(&masked, off),
                 col_of(&masked, off),
                 "narrowing as-cast on codec path".to_string(),
+            );
+        }
+    }
+
+    // L008: `pol_*` series-name literals live only in obs/names.rs,
+    // so the exposition namespace is spelled exactly once. The scan
+    // runs over the *raw* source (masking blanks string contents, the
+    // very thing this rule is about) and each hit is confirmed
+    // against the masked text: the opening quote survives masking and
+    // the byte after it is blanked, so a `"pol_` inside a comment or
+    // doc example never fires.
+    if rel != L008_NAME_FILE {
+        let mb = masked.as_bytes();
+        for off in find_all(raw, "\"pol_") {
+            if mb.get(off) != Some(&b'"') || mb.get(off + 1) != Some(&b' ')
+            {
+                continue;
+            }
+            emit(
+                Rule::L008,
+                line_of(raw, off),
+                col_of(raw, off),
+                "series name literal (pol_*) outside obs/names.rs"
+                    .to_string(),
             );
         }
     }

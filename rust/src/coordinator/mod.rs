@@ -35,7 +35,9 @@ use crate::data::Dataset;
 use crate::learner::node::NodeLearner;
 use crate::linalg::SparseFeat;
 use crate::metrics::ProgressiveValidator;
-use crate::obs::{Counter, Gauge, Histogram, Obs, TraceKind};
+use crate::obs::{
+    names, Counter, Gauge, Histogram, LogicalSpan, Obs, TraceKind,
+};
 use crate::serve::checkpoint::CheckpointSink;
 use crate::serve::publisher::SnapshotPublisher;
 use crate::serve::snapshot::{
@@ -82,6 +84,13 @@ struct CoordObs {
     publishes: Counter,
     /// `pol_checkpoint_writes_total`
     ckpt_writes: Counter,
+    /// `pol_train_span_instances{span="publish"}` — instances between
+    /// successive snapshot publishes, on the logical clock (L004: no
+    /// wall time on the training path).
+    publish_span: LogicalSpan,
+    /// `pol_train_span_instances{span="checkpoint"}` — instances
+    /// between successive background checkpoints.
+    ckpt_span: LogicalSpan,
 }
 
 /// Outcome of a coordinator run.
@@ -416,18 +425,26 @@ impl Coordinator {
         let shard_nnz = (0..self.graph.leaves)
             .map(|k| {
                 m.counter_with(
-                    "pol_train_shard_nnz_total",
+                    names::TRAIN_SHARD_NNZ_TOTAL,
                     &[("shard", &k.to_string())],
                 )
             })
             .collect();
         self.obs = Some(CoordObs {
-            trained: m.counter("pol_train_instances_total"),
-            delay: m.histogram("pol_train_delay"),
-            pending_depth: m.gauge("pol_train_pending_depth"),
+            trained: m.counter(names::TRAIN_INSTANCES_TOTAL),
+            delay: m.histogram(names::TRAIN_DELAY),
+            pending_depth: m.gauge(names::TRAIN_PENDING_DEPTH),
             shard_nnz,
-            publishes: m.counter("pol_snapshot_publishes_total"),
-            ckpt_writes: m.counter("pol_checkpoint_writes_total"),
+            publishes: m.counter(names::SNAPSHOT_PUBLISHES_TOTAL),
+            ckpt_writes: m.counter(names::CHECKPOINT_WRITES_TOTAL),
+            publish_span: LogicalSpan::new(m.histogram_with(
+                names::TRAIN_SPAN_INSTANCES,
+                &[("span", "publish")],
+            )),
+            ckpt_span: LogicalSpan::new(m.histogram_with(
+                names::TRAIN_SPAN_INSTANCES,
+                &[("span", "checkpoint")],
+            )),
             handle: obs,
         });
     }
@@ -502,11 +519,15 @@ impl Coordinator {
         if let Some(mut p) = self.publisher.take() {
             if p.tick(self.trained) || force {
                 p.publish(self.snapshot());
-                if let Some(o) = &self.obs {
+                let trained = self.trained;
+                if let Some(o) = &mut self.obs {
                     o.publishes.inc();
+                    // logical-clock span: instances since the previous
+                    // publish (integer-only; L004/L005 safe)
+                    o.publish_span.lap(trained);
                     o.handle.trace.record(
                         TraceKind::Publish,
-                        self.trained,
+                        trained,
                         format!("snapshot #{}", p.published()),
                     );
                 }
@@ -523,11 +544,14 @@ impl Coordinator {
                     self, &mut bytes,
                 ) {
                     Ok(()) => {
-                        if let Some(o) = &self.obs {
+                        let trained = self.trained;
+                        if let Some(o) = &mut self.obs {
                             o.ckpt_writes.inc();
+                            // checkpoint-to-checkpoint logical span
+                            o.ckpt_span.lap(trained);
                             o.handle.trace.record(
                                 TraceKind::Checkpoint,
-                                self.trained,
+                                trained,
                                 format!("background checkpoint ({} bytes)", bytes.len()),
                             );
                             // ride the event tail along: readers see the

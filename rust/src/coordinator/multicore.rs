@@ -310,7 +310,7 @@ impl MulticoreTrainer {
             .map(|tid| {
                 self.obs.as_ref().map(|o| {
                     o.metrics.counter_with(
-                        "pol_train_shard_nnz_total",
+                        crate::obs::names::TRAIN_SHARD_NNZ_TOTAL,
                         &[("shard", &tid.to_string())],
                     )
                 })
@@ -366,7 +366,9 @@ impl MulticoreTrainer {
         })?;
         let elapsed = start.elapsed();
         if let Some(o) = &self.obs {
-            o.metrics.counter("pol_train_instances_total").add(pv.count());
+            o.metrics
+                .counter(crate::obs::names::TRAIN_INSTANCES_TOTAL)
+                .add(pv.count());
         }
 
         // merge: each thread only touched the indices its plan shard

@@ -5,6 +5,7 @@
 //!   checkpoint       inspect/verify a `.polz` model checkpoint
 //!   serve            serve one or more checkpointed models from N threads
 //!   predict          answer predictions from stdin against a checkpoint
+//!   trace            inspect a `.poltrace` flight record post-mortem
 //!   bench-data       generate + describe the Table 0.1 datasets
 //!   inspect          feature-hashing collision statistics
 //!   artifacts-check  load every AOT artifact and smoke-execute one
@@ -43,6 +44,7 @@ fn main() {
         Some("metrics") => cmd_metrics(&args[1..]),
         Some("top") => cmd_top(&args[1..]),
         Some("predict") => cmd_predict(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("bench-data") => cmd_bench_data(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("artifacts-check") => cmd_artifacts_check(&args[1..]),
@@ -105,18 +107,29 @@ COMMANDS:
                    on tracked connections, default 1024)
                    --no-remote-shutdown  (ignore wire Shutdown frames;
                    only --seconds or the owning process stop the server)
+                   --flight-record OUT.poltrace  (--listen only: write a
+                   flight record — trace tail, metrics-history snapshots,
+                   config digest — at shutdown; inspect with `pol trace`)
   serve-stats      query a --listen server's wire + per-model stats,
                    then its full metrics exposition
                    --connect ADDR
   metrics          scrape a --listen server's metrics registry once
                    (`# pol-metrics v1` text exposition)
                    --connect ADDR
+                   --watch S  (rescrape every S seconds, emitting the
+                   parseable exposition each tick, until the server goes
+                   away; requires --connect)
   top              live terminal view of a --listen server: QPS,
                    staleness, observed-delay p50/p99, shard heat
                    --connect ADDR  --interval S (default 1)
                    --seconds S  (exit after S seconds)
                    --once  (print one exposition scrape and exit;
                    automatic when stdout is not a terminal)
+                   --snapshot  (print one rendered dashboard frame with
+                   rates from the server's own metrics history, no ANSI)
+  trace            inspect a `.poltrace` flight record: config digest,
+                   trace tail (sequence gaps flagged), history snapshots
+                   FILE  (or --file PATH)
   predict          one prediction per stdin line ('idx:val idx:val ...',
                    pre-hashed indices) against a checkpoint
                    --model PATH
@@ -129,12 +142,13 @@ COMMANDS:
   artifacts-check  compile-check all AOT artifacts (needs `make artifacts`)
                    --dir DIR
   lint             statically check the crate's hand-kept invariants
-                   (rules L001-L007: no panics in library code, Relaxed
+                   (rules L001-L008: no panics in library code, Relaxed
                    atomics only in telemetry, cap-before-allocate decode
                    paths, no wall clock in deterministic paths, no floats
                    on obs record paths, no narrowing casts on codecs,
                    unsafe confined to linalg.rs/simd/ with reasoned
-                   waivers; see src/analyze/mod.rs for the rule table
+                   waivers, pol_* series names spelled only in
+                   obs::names; see src/analyze/mod.rs for the rule table
                    and the `pol-lint: allow(...)` waiver syntax)
                    --root DIR  (source tree to lint; default: ./src,
                    falling back to ./rust/src)
@@ -671,7 +685,22 @@ fn cmd_checkpoint(args: &[String]) -> i32 {
             }
             if !info.trace.is_empty() {
                 println!("trace tail ({} event(s)):", info.trace.len());
+                let mut prev_seq: Option<u64> = None;
                 for ev in &info.trace {
+                    // sequence numbers are dense at the recorder: a
+                    // jump means the ring overwrote events between
+                    // these two — flag the gap explicitly
+                    if let Some(p) = prev_seq {
+                        if ev.seq > p + 1 {
+                            println!(
+                                "  … gap: {} event(s) overwritten \
+                                 (#{}..#{})",
+                                ev.seq - p - 1,
+                                p + 1,
+                                ev.seq - 1
+                            );
+                        }
+                    }
                     println!(
                         "  #{} {} @ {} instances: {}",
                         ev.seq,
@@ -679,6 +708,7 @@ fn cmd_checkpoint(args: &[String]) -> i32 {
                         ev.trained,
                         ev.detail
                     );
+                    prev_seq = Some(ev.seq);
                 }
             }
             0
@@ -688,6 +718,112 @@ fn cmd_checkpoint(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_trace(args: &[String]) -> i32 {
+    // `pol trace FILE` is the documented shape; `--file PATH` is the
+    // uniform-flag spelling. Parsed by hand because parse_flags
+    // rejects positionals.
+    let mut file: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--help" => {
+                print!("{HELP}");
+                return 0;
+            }
+            "--file" => {
+                let Some(v) = args.get(i + 1) else {
+                    return usage_error("trace: --file needs a value");
+                };
+                if file.replace(v.clone()).is_some() {
+                    return usage_error("trace: one FILE only");
+                }
+                i += 2;
+            }
+            s if s.starts_with("--") => {
+                return usage_error(&format!("trace: unknown flag {s}"));
+            }
+            s => {
+                if file.replace(s.to_string()).is_some() {
+                    return usage_error("trace: one FILE only");
+                }
+                i += 1;
+            }
+        }
+    }
+    let Some(path) = file else {
+        return usage_error("trace: FILE (or --file PATH) required");
+    };
+    let rec = match pol::obs::read_flight(std::path::Path::new(&path)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("trace {path}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "flight record v{}: config digest={:#018x} events={} snapshots={}",
+        pol::obs::flight::FLIGHT_VERSION,
+        rec.config_digest,
+        rec.events.len(),
+        rec.snapshots.len()
+    );
+    if !rec.events.is_empty() {
+        println!("trace tail ({} event(s)):", rec.events.len());
+        let mut prev_seq: Option<u64> = None;
+        for ev in &rec.events {
+            // same gap discipline as `pol checkpoint`: sequence
+            // numbers are dense at the recorder, so a jump means the
+            // ring overwrote events between these two
+            if let Some(p) = prev_seq {
+                if ev.seq > p + 1 {
+                    println!(
+                        "  … gap: {} event(s) overwritten (#{}..#{})",
+                        ev.seq - p - 1,
+                        p + 1,
+                        ev.seq - 1
+                    );
+                }
+            }
+            println!(
+                "  #{} {} @ {} instances: {}",
+                ev.seq,
+                ev.kind.name(),
+                ev.trained,
+                ev.detail
+            );
+            prev_seq = Some(ev.seq);
+        }
+    }
+    if !rec.snapshots.is_empty() {
+        println!("history ({} snapshot(s)):", rec.snapshots.len());
+        for s in &rec.snapshots {
+            println!(
+                "  tick={} uptime_ms={} series={} frames_in={} \
+                 requests={}",
+                s.tick,
+                s.uptime_ms,
+                s.series.len(),
+                s.sum(pol::obs::names::WIRE_FRAMES_IN_TOTAL),
+                s.sum(pol::obs::names::SERVE_REQUESTS_TOTAL),
+            );
+        }
+        // offline rate over the recorded window, the same read-time
+        // math `pol top` applies to live history
+        if let (Some(first), Some(last)) =
+            (rec.snapshots.first(), rec.snapshots.last())
+        {
+            if let Some(rate) = pol::obs::rate_per_sec(
+                first,
+                last,
+                pol::obs::names::WIRE_FRAMES_IN_TOTAL,
+            ) {
+                println!("  frames_in over window: {rate:.1}/s");
+            }
+        }
+    }
+    0
 }
 
 fn cmd_reshard(args: &[String]) -> i32 {
@@ -972,13 +1108,26 @@ fn cmd_serve_stats(args: &[String]) -> i32 {
 }
 
 fn cmd_metrics(args: &[String]) -> i32 {
-    let fl = match parse_flags("metrics", args, &["--connect"], &[]) {
+    let fl = match parse_flags("metrics", args, &["--connect", "--watch"], &[])
+    {
         Ok(fl) => fl,
         Err(e) => return usage_error(&e),
     };
     if fl.has("--help") {
         print!("{HELP}");
         return 0;
+    }
+    let watch: Option<f64> = match parsed("metrics", &fl, "--watch") {
+        Ok(w) => w,
+        Err(e) => return usage_error(&e),
+    };
+    // --watch is a repeated *scrape*: without a server to scrape it is
+    // meaningless, so the combination is a usage error, not a default
+    if watch.is_some() && fl.get("--connect").is_none() {
+        return usage_error(
+            "metrics: --watch repeats a --connect scrape and requires \
+             --connect ADDR",
+        );
     }
     let Some(addr) = fl.get("--connect") else {
         return usage_error("metrics: --connect ADDR required");
@@ -994,14 +1143,33 @@ fn cmd_metrics(args: &[String]) -> i32 {
             return 1;
         }
     };
+    // first scrape: a failure here is a hard error in both modes
     match client.metrics_dump() {
-        Ok(text) => {
-            print!("{text}");
-            0
-        }
+        Ok(text) => print!("{text}"),
         Err(e) => {
             eprintln!("metrics: {sock}: {e}");
-            1
+            return 1;
+        }
+    }
+    let Some(secs) = watch else { return 0 };
+    // repeated-scrape mode: one parseable exposition per tick,
+    // blank-line separated, flushed each time (non-TTY friendly —
+    // pipe it straight into a collector). The watch ends cleanly
+    // when the server goes away after at least one good scrape.
+    loop {
+        let _ = std::io::Write::flush(&mut std::io::stdout());
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            secs.clamp(0.05, 3600.0),
+        ));
+        match client.metrics_dump() {
+            Ok(text) => {
+                println!();
+                print!("{text}");
+            }
+            Err(e) => {
+                eprintln!("metrics: {sock}: watch ended: {e}");
+                return 0;
+            }
         }
     }
 }
@@ -1029,6 +1197,7 @@ fn render_top(
     cur: &[(String, u64)],
     prev: Option<(std::time::Duration, &[(String, u64)])>,
 ) -> String {
+    use pol::obs::names;
     use std::fmt::Write as _;
     let mut out = String::new();
     let _ = writeln!(out, "pol top — {sock}");
@@ -1044,61 +1213,69 @@ fn render_top(
                 / dt,
         )
     };
-    match (rate("pol_serve_requests_total"), rate("pol_wire_frames_in_total"))
-    {
+    match (
+        rate(names::SERVE_REQUESTS_TOTAL),
+        rate(names::WIRE_FRAMES_IN_TOTAL),
+    ) {
         (Some(qps), Some(fps)) => {
             let _ = writeln!(
                 out,
                 "qps={qps:.0} frames_in_per_s={fps:.0} active_connections={}",
-                series_sum(cur, "pol_wire_active_connections")
+                series_sum(cur, names::WIRE_ACTIVE_CONNECTIONS)
             );
         }
         _ => {
             let _ = writeln!(
                 out,
                 "qps=… (first scrape) active_connections={}",
-                series_sum(cur, "pol_wire_active_connections")
+                series_sum(cur, names::WIRE_ACTIVE_CONNECTIONS)
             );
         }
     }
     let _ = writeln!(
         out,
         "requests={} predictions={} staleness_max={} decode_errors={}",
-        series_sum(cur, "pol_serve_requests_total"),
-        series_sum(cur, "pol_serve_predictions_total"),
+        series_sum(cur, names::SERVE_REQUESTS_TOTAL),
+        series_sum(cur, names::SERVE_PREDICTIONS_TOTAL),
         cur.iter()
-            .filter(|(n, _)| n.starts_with("pol_serve_staleness_max"))
+            .filter(|(n, _)| n.starts_with(names::SERVE_STALENESS_MAX))
             .map(|&(_, v)| v)
             .max()
             .unwrap_or(0),
-        series_sum(cur, "pol_wire_decode_errors_total"),
+        series_sum(cur, names::WIRE_DECODE_ERRORS_TOTAL),
     );
     // event-loop line: only meaningful once the poll backend has
     // swept at least once (the threads backend reports 0 wakeups)
-    if series_sum(cur, "pol_wire_wakeups") > 0 {
+    if series_sum(cur, names::WIRE_WAKEUPS) > 0 {
         let _ = writeln!(
             out,
             "poll loop: wakeups={} conns_shed={} frames_per_wakeup p50={} p99={}",
-            series_sum(cur, "pol_wire_wakeups"),
-            series_sum(cur, "pol_wire_conns_shed"),
-            series_value(cur, "pol_wire_wakeup_frames_p50").unwrap_or(0),
-            series_value(cur, "pol_wire_wakeup_frames_p99").unwrap_or(0),
+            series_sum(cur, names::WIRE_WAKEUPS),
+            series_sum(cur, names::WIRE_CONNS_SHED),
+            series_value(cur, &format!("{}_p50", names::WIRE_WAKEUP_FRAMES))
+                .unwrap_or(0),
+            series_value(cur, &format!("{}_p99", names::WIRE_WAKEUP_FRAMES))
+                .unwrap_or(0),
         );
     }
-    if series_value(cur, "pol_train_delay_count").is_some() {
+    if series_value(cur, &format!("{}_count", names::TRAIN_DELAY)).is_some() {
         let _ = writeln!(
             out,
             "trained={} delay(tau) p50={} p99={} max={} pending={}",
-            series_sum(cur, "pol_train_instances_total"),
-            series_value(cur, "pol_train_delay_p50").unwrap_or(0),
-            series_value(cur, "pol_train_delay_p99").unwrap_or(0),
-            series_value(cur, "pol_train_delay_max").unwrap_or(0),
-            series_value(cur, "pol_train_pending_depth").unwrap_or(0),
+            series_sum(cur, names::TRAIN_INSTANCES_TOTAL),
+            series_value(cur, &format!("{}_p50", names::TRAIN_DELAY))
+                .unwrap_or(0),
+            series_value(cur, &format!("{}_p99", names::TRAIN_DELAY))
+                .unwrap_or(0),
+            series_value(cur, &format!("{}_max", names::TRAIN_DELAY))
+                .unwrap_or(0),
+            series_value(cur, names::TRAIN_PENDING_DEPTH).unwrap_or(0),
         );
     }
     // per-model latency lines
+    let latency_p99 = format!("{}_p99{{", names::SERVE_LATENCY_NS);
     for (n, v) in cur {
-        if let Some(rest) = n.strip_prefix("pol_serve_latency_ns_p99{") {
+        if let Some(rest) = n.strip_prefix(latency_p99.as_str()) {
             let model = rest
                 .strip_prefix("model=\"")
                 .and_then(|r| r.strip_suffix("\"}"))
@@ -1113,10 +1290,12 @@ fn render_top(
         }
     }
     // shard heat: nnz routed per shard, scaled to the hottest
+    let shard_prefix =
+        format!("{}{{shard=\"", names::TRAIN_SHARD_NNZ_TOTAL);
     let mut shards: Vec<(&str, u64)> = cur
         .iter()
         .filter_map(|(n, v)| {
-            n.strip_prefix("pol_train_shard_nnz_total{shard=\"")
+            n.strip_prefix(shard_prefix.as_str())
                 .and_then(|r| r.strip_suffix("\"}"))
                 .map(|k| (k, *v))
         })
@@ -1138,7 +1317,7 @@ fn cmd_top(args: &[String]) -> i32 {
         "top",
         args,
         &["--connect", "--interval", "--seconds"],
-        &["--once"],
+        &["--once", "--snapshot"],
     ) {
         Ok(fl) => fl,
         Err(e) => return usage_error(&e),
@@ -1161,6 +1340,46 @@ fn cmd_top(args: &[String]) -> i32 {
                 return Ok(1);
             }
         };
+        // one rendered dashboard frame, rates from the server's own
+        // metrics-history ring (no ANSI, no client-side scrape state —
+        // non-TTY friendly by construction)
+        if fl.has("--snapshot") {
+            let hist = match client.metrics_history() {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("top: {sock}: {e}");
+                    return Ok(1);
+                }
+            };
+            let frame = match (hist.first(), hist.last()) {
+                (Some(older), Some(newest)) if hist.len() >= 2 => {
+                    // whole-window rates: the server's sampler cadence,
+                    // not a client scrape interval
+                    let dt =
+                        newest.uptime_ms.saturating_sub(older.uptime_ms);
+                    render_top(
+                        sock,
+                        &newest.series,
+                        (dt > 0).then(|| {
+                            (
+                                std::time::Duration::from_millis(dt),
+                                older.series.as_slice(),
+                            )
+                        }),
+                    )
+                }
+                (_, Some(newest)) => render_top(sock, &newest.series, None),
+                _ => {
+                    eprintln!(
+                        "top: {sock}: server has no metrics history yet \
+                         (sampler disabled or first period pending)"
+                    );
+                    return Ok(1);
+                }
+            };
+            print!("{frame}");
+            return Ok(0);
+        }
         // a redirected stdout cannot host an ANSI redraw loop: degrade
         // to one parseable scrape, exactly what --once asks for
         let once = fl.has("--once")
@@ -1183,28 +1402,60 @@ fn cmd_top(args: &[String]) -> i32 {
         });
         let mut prev: Option<(std::time::Instant, Vec<(String, u64)>)> = None;
         loop {
-            let text = match client.metrics_dump() {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("top: {sock}: {e}");
-                    return Ok(1);
+            // server-side history first: rates reflect the sampler's
+            // cadence and survive client restarts. A server without
+            // the MetricsHistory op (or with sampling disabled) falls
+            // back to the client-side delta between scrapes.
+            let mut frame: Option<String> = None;
+            if let Ok(h) = client.metrics_history() {
+                if h.len() >= 2 {
+                    let newest = &h[h.len() - 1];
+                    let older = &h[h.len() - 2];
+                    let dt =
+                        newest.uptime_ms.saturating_sub(older.uptime_ms);
+                    if dt > 0 {
+                        frame = Some(render_top(
+                            sock,
+                            &newest.series,
+                            Some((
+                                std::time::Duration::from_millis(dt),
+                                older.series.as_slice(),
+                            )),
+                        ));
+                    }
+                }
+            }
+            let frame = match frame {
+                Some(f) => f,
+                None => {
+                    let text = match client.metrics_dump() {
+                        Ok(t) => t,
+                        Err(e) => {
+                            eprintln!("top: {sock}: {e}");
+                            return Ok(1);
+                        }
+                    };
+                    let now = std::time::Instant::now();
+                    let Some(cur) = pol::obs::parse_exposition(&text) else {
+                        eprintln!(
+                            "top: {sock}: unparseable metrics exposition"
+                        );
+                        return Ok(1);
+                    };
+                    let f = render_top(
+                        sock,
+                        &cur,
+                        prev.as_ref().map(|(t, v)| {
+                            (now.duration_since(*t), v.as_slice())
+                        }),
+                    );
+                    prev = Some((now, cur));
+                    f
                 }
             };
-            let now = std::time::Instant::now();
-            let Some(cur) = pol::obs::parse_exposition(&text) else {
-                eprintln!("top: {sock}: unparseable metrics exposition");
-                return Ok(1);
-            };
-            let frame = render_top(
-                sock,
-                &cur,
-                prev.as_ref()
-                    .map(|(t, v)| (now.duration_since(*t), v.as_slice())),
-            );
             // home + clear: redraw in place without scrollback spam
             print!("\x1b[H\x1b[2J{frame}");
             let _ = std::io::Write::flush(&mut std::io::stdout());
-            prev = Some((now, cur));
             if let Some(d) = deadline {
                 if std::time::Instant::now() >= d {
                     return Ok(0);
@@ -1297,12 +1548,26 @@ fn serve_listen(
     max_conns: usize,
     seconds: Option<f64>,
     allow_remote_shutdown: bool,
+    flight: Option<std::path::PathBuf>,
 ) -> i32 {
+    // one Obs per serve: phase spans, the control-event trace, and
+    // the sampler's metrics history all hang off it — and the flight
+    // recorder serializes all three at shutdown when requested
+    let obs = pol::obs::Obs::new();
+    pol::simd::export_dispatch(&obs.metrics);
+    if let Some(p) = &flight {
+        eprintln!(
+            "flight record will be written to {} at shutdown",
+            p.display()
+        );
+    }
     let cfg = pol::wire::WireConfig {
         io_model,
         handlers: threads,
         max_conns,
         allow_remote_shutdown,
+        obs: Some(Arc::clone(&obs)),
+        flight_path: flight,
         ..Default::default()
     };
     let server = match pol::wire::WireServer::bind(sock, registry, cfg) {
@@ -1312,6 +1577,13 @@ fn serve_listen(
             return 1;
         }
     };
+    // lifecycle marks on the control trace: a post-mortem `pol trace`
+    // of the flight record shows when serving started and why it ended
+    obs.trace.record(
+        pol::obs::TraceKind::WorkerJoin,
+        0,
+        format!("wire server listening on {}", server.local_addr()),
+    );
     let backend = match io_model {
         pol::wire::IoModel::Threads => format!("{threads} handler(s)"),
         pol::wire::IoModel::Poll => {
@@ -1339,6 +1611,16 @@ fn serve_listen(
         }
         None => server.wait(),
     }
+    // recorded before shutdown() so the flight record captures it
+    obs.trace.record(
+        pol::obs::TraceKind::Shutdown,
+        0,
+        if server.is_draining() {
+            "wire Shutdown frame"
+        } else {
+            "deadline reached"
+        },
+    );
     let stats = server.shutdown();
     // exit report through the same formatting path as `pol serve-stats`
     print!("{}", stats.render_text());
@@ -1352,6 +1634,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         &[
             "--model", "--threads", "--seconds", "--batch", "--density",
             "--seed", "--listen", "--io-model", "--max-conns",
+            "--flight-record",
         ],
         &["--no-remote-shutdown"],
     ) {
@@ -1431,6 +1714,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                 max_conns,
                 seconds,
                 !fl.has("--no-remote-shutdown"),
+                fl.get("--flight-record").map(std::path::PathBuf::from),
             ));
         }
         if fl.has("--no-remote-shutdown") {
@@ -1449,6 +1733,14 @@ fn cmd_serve(args: &[String]) -> i32 {
                      mode"
                 ));
             }
+        }
+        if fl.get("--flight-record").is_some() {
+            return Err(
+                "serve: --flight-record is written by the --listen wire \
+                 server at shutdown and does not apply to the synthetic \
+                 self-load mode"
+                    .into(),
+            );
         }
         let seconds: f64 = parsed("serve", &fl, "--seconds")?.unwrap_or(2.0);
         let batch: usize = parsed("serve", &fl, "--batch")?.unwrap_or(1);
@@ -1472,6 +1764,12 @@ fn cmd_serve(args: &[String]) -> i32 {
         pol::simd::export_dispatch(&obs.metrics);
         let mut server = PredictionServer::start(Arc::clone(&registry), threads);
         server.attach_obs(Arc::clone(&obs));
+        // sample metrics history at a cadence that gives a short
+        // self-load run several snapshots to rate over
+        server.start_history(
+            std::time::Duration::from_millis(250),
+            pol::obs::DEFAULT_SERIES_CAPACITY,
+        );
         let deadline = std::time::Instant::now()
             + std::time::Duration::from_secs_f64(seconds.max(0.1));
         // drive load from as many client threads as serving threads,
@@ -1505,7 +1803,11 @@ fn cmd_serve(args: &[String]) -> i32 {
                 });
             }
         });
+        let history = server.history();
         let stats = server.shutdown();
+        if let Some(h) = &history {
+            eprintln!("metrics history: {} snapshot(s) sampled", h.len());
+        }
         println!(
             "threads={} models={} requests={} predictions={} qps={:.0} p50_us={:.1} p99_us={:.1} max_us={:.1} max_staleness={}",
             threads,

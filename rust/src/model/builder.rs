@@ -400,7 +400,9 @@ impl Session {
                 self.model.write(out)
             }),
             Some(o) => {
-                o.metrics.counter("pol_checkpoint_writes_total").inc();
+                o.metrics
+                    .counter(crate::obs::names::CHECKPOINT_WRITES_TOTAL)
+                    .inc();
                 o.trace.record(
                     crate::obs::TraceKind::Checkpoint,
                     self.model.trained_instances(),

@@ -1,0 +1,404 @@
+//! `obs::flight` — the flight recorder: a versioned `.poltrace`
+//! post-mortem file written at server shutdown and read back by
+//! `pol trace FILE`.
+//!
+//! A flight record captures the three things a post-mortem needs:
+//! the trace ring's tail (what the control plane did), the last K
+//! whole-registry series snapshots (what the load looked like over
+//! time — rates are computable offline), and a digest of the serving
+//! configuration (what the server *was*). The codec follows the
+//! `.polz`/`POLT` discipline exactly: magic + version, every count
+//! capped **before** any allocation, an FNV-1a checksum over the
+//! whole body, truncation or corruption anywhere an
+//! [`io::ErrorKind::InvalidData`] error — and a record that encodes
+//! always decodes (events and snapshots are truncated to their caps
+//! at encode time, newest first).
+//!
+//! # Layout
+//!
+//! ```text
+//! POLF | u16 version (=1) | u64 config_digest
+//!      | u32 trailer_len | POLT trace trailer (its own checksum)
+//!      | u32 nsnaps | per snapshot:
+//!          u64 tick | u64 uptime_ms | u32 nseries
+//!          | per series: u16 name_len | name | u64 value
+//!      | u64 fnv1a64 over everything after the magic
+//! ```
+//!
+//! Writes are atomic: bytes land in a `.tmp` sibling, are fsynced,
+//! and rename into place — a crash mid-write never leaves a torn
+//! `.poltrace` behind.
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use crate::hashing::fnv1a64;
+use crate::obs::series::SeriesSnapshot;
+use crate::obs::trace::{
+    encode_trailer, read_trailer, TraceEvent, MAX_TRAILER_BYTES,
+};
+
+/// Magic opening a `.poltrace` flight record.
+pub const FLIGHT_MAGIC: &[u8; 4] = b"POLF";
+
+/// Current flight-record format version.
+pub const FLIGHT_VERSION: u16 = 1;
+
+/// Caps enforced before any allocation when decoding (and applied,
+/// newest first, when encoding — a record that encodes decodes).
+pub const MAX_FLIGHT_SNAPSHOTS: u32 = 256;
+/// Cap on series entries per snapshot.
+pub const MAX_FLIGHT_SERIES: u32 = 4096;
+/// Cap on one series name (with labels) in bytes.
+pub const MAX_SERIES_NAME_BYTES: u32 = 512;
+/// Hard cap on a whole flight record.
+pub const MAX_FLIGHT_BYTES: u64 = 1 << 26;
+
+/// Fixed per-snapshot overhead: tick + uptime + series count.
+const SNAP_HEAD: usize = 8 + 8 + 4;
+/// Fixed per-series overhead: name length + value.
+const ENTRY_HEAD: usize = 2 + 8;
+/// Fixed non-snapshot bytes: magic + version + digest + the two
+/// section counts + checksum.
+const FIXED_HEAD: usize = 4 + 2 + 8 + 4 + 4 + 8;
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Everything a post-mortem reconstructs: what happened (trace),
+/// what the load looked like (series history), and what the server
+/// was (config digest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlightRecord {
+    /// FNV-1a digest of the canonical serving-config text.
+    pub config_digest: u64,
+    /// Trace-ring tail, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Series snapshots, oldest first.
+    pub snapshots: Vec<SeriesSnapshot>,
+}
+
+fn encode_snapshot(s: &SeriesSnapshot) -> Vec<u8> {
+    let take = s.series.len().min(MAX_FLIGHT_SERIES as usize);
+    let mut out = Vec::with_capacity(SNAP_HEAD + take * 48);
+    out.extend_from_slice(&s.tick.to_le_bytes());
+    out.extend_from_slice(&s.uptime_ms.to_le_bytes());
+    // pol-lint: allow(L006, "len capped to MAX_FLIGHT_SERIES above")
+    out.extend_from_slice(&(take as u32).to_le_bytes());
+    for (name, value) in s.series.iter().take(take) {
+        let mut name = name.as_str();
+        if name.len() > MAX_SERIES_NAME_BYTES as usize {
+            let mut cut = MAX_SERIES_NAME_BYTES as usize;
+            while !name.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            name = &name[..cut];
+        }
+        // pol-lint: allow(L006, "name truncated to MAX_SERIES_NAME_BYTES")
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&value.to_le_bytes());
+    }
+    out
+}
+
+/// Serialize a flight record. Events ride as a complete `POLT`
+/// trailer (one codec for trace bytes everywhere); snapshots are
+/// truncated newest-first to [`MAX_FLIGHT_SNAPSHOTS`] and the
+/// [`MAX_FLIGHT_BYTES`] budget, so the newest history always
+/// survives and the encoded record always decodes.
+pub fn encode_flight(rec: &FlightRecord) -> Vec<u8> {
+    let trailer = encode_trailer(&rec.events);
+    let budget = (MAX_FLIGHT_BYTES as usize)
+        .saturating_sub(FIXED_HEAD + trailer.len());
+    let mut kept: Vec<Vec<u8>> = Vec::new();
+    let mut used = 0usize;
+    for s in rec.snapshots.iter().rev() {
+        if kept.len() == MAX_FLIGHT_SNAPSHOTS as usize {
+            break;
+        }
+        let buf = encode_snapshot(s);
+        if used + buf.len() > budget {
+            break;
+        }
+        used += buf.len();
+        kept.push(buf);
+    }
+    kept.reverse(); // back to oldest-first
+
+    let mut body = Vec::with_capacity(2 + 8 + 4 + trailer.len() + used + 4);
+    body.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+    body.extend_from_slice(&rec.config_digest.to_le_bytes());
+    // pol-lint: allow(L006, "trailer len bounded by MAX_TRAILER_BYTES")
+    body.extend_from_slice(&(trailer.len() as u32).to_le_bytes());
+    body.extend_from_slice(&trailer);
+    // pol-lint: allow(L006, "len capped to MAX_FLIGHT_SNAPSHOTS above")
+    body.extend_from_slice(&(kept.len() as u32).to_le_bytes());
+    for buf in &kept {
+        body.extend_from_slice(buf);
+    }
+    let mut out = Vec::with_capacity(4 + body.len() + 8);
+    out.extend_from_slice(FLIGHT_MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    out
+}
+
+/// Decode a flight record. Every cap is enforced before the
+/// allocation it bounds; truncation at any boundary, a lying count,
+/// a bad checksum, or trailing bytes all error cleanly.
+pub fn decode_flight(bytes: &[u8]) -> io::Result<FlightRecord> {
+    if bytes.len() as u64 > MAX_FLIGHT_BYTES {
+        return Err(bad("flight record exceeds cap"));
+    }
+    if bytes.len() < FIXED_HEAD {
+        return Err(bad("truncated flight record"));
+    }
+    if &bytes[..4] != FLIGHT_MAGIC {
+        return Err(bad("malformed flight record magic"));
+    }
+    let (body, sum) = bytes[4..].split_at(bytes.len() - 4 - 8);
+    if fnv1a64(body) != crate::bytes::le_u64(sum) {
+        return Err(bad("flight record checksum mismatch"));
+    }
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> io::Result<&[u8]> {
+        let end = pos
+            .checked_add(n)
+            .filter(|&e| e <= body.len())
+            .ok_or_else(|| bad("truncated flight record"))?;
+        let s = &body[*pos..end];
+        *pos = end;
+        Ok(s)
+    };
+    let version = crate::bytes::le_u16(take(&mut pos, 2)?);
+    if version != FLIGHT_VERSION {
+        return Err(bad(format!("unsupported flight version {version}")));
+    }
+    let config_digest = crate::bytes::le_u64(take(&mut pos, 8)?);
+    let tlen = crate::bytes::le_u32(take(&mut pos, 4)?);
+    if u64::from(tlen) > MAX_TRAILER_BYTES {
+        return Err(bad("flight trace section exceeds cap"));
+    }
+    let mut trailer = take(&mut pos, tlen as usize)?;
+    let events = read_trailer(&mut trailer)?;
+    let nsnaps = crate::bytes::le_u32(take(&mut pos, 4)?);
+    if nsnaps > MAX_FLIGHT_SNAPSHOTS {
+        return Err(bad("flight snapshot count exceeds cap"));
+    }
+    // every snapshot needs at least its fixed head; reject a lying
+    // count before reserving anything
+    if (nsnaps as usize) * SNAP_HEAD > body.len() - pos {
+        return Err(bad("flight snapshot count exceeds bytes present"));
+    }
+    let mut snapshots = Vec::with_capacity(nsnaps as usize);
+    for _ in 0..nsnaps {
+        let tick = crate::bytes::le_u64(take(&mut pos, 8)?);
+        let uptime_ms = crate::bytes::le_u64(take(&mut pos, 8)?);
+        let nseries = crate::bytes::le_u32(take(&mut pos, 4)?);
+        if nseries > MAX_FLIGHT_SERIES {
+            return Err(bad("flight series count exceeds cap"));
+        }
+        if (nseries as usize) * ENTRY_HEAD > body.len() - pos {
+            return Err(bad("flight series count exceeds bytes present"));
+        }
+        let mut series = Vec::with_capacity(nseries as usize);
+        for _ in 0..nseries {
+            let nlen = crate::bytes::le_u16(take(&mut pos, 2)?);
+            if u32::from(nlen) > MAX_SERIES_NAME_BYTES {
+                return Err(bad("flight series name exceeds cap"));
+            }
+            let name =
+                String::from_utf8(take(&mut pos, nlen as usize)?.to_vec())
+                    .map_err(|_| bad("flight series name is not utf-8"))?;
+            let value = crate::bytes::le_u64(take(&mut pos, 8)?);
+            series.push((name, value));
+        }
+        snapshots.push(SeriesSnapshot { tick, uptime_ms, series });
+    }
+    if pos != body.len() {
+        return Err(bad("trailing bytes after flight record"));
+    }
+    Ok(FlightRecord { config_digest, events, snapshots })
+}
+
+/// Write a flight record atomically: encode, write to a `.tmp`
+/// sibling, fsync, rename into place (then best-effort fsync the
+/// directory) — the `.polz` checkpoint discipline.
+pub fn write_flight(path: &Path, rec: &FlightRecord) -> io::Result<()> {
+    let bytes = encode_flight(rec);
+    let tmp = path.with_extension("poltrace.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Read a flight record back, enforcing [`MAX_FLIGHT_BYTES`] before
+/// buffering the file.
+pub fn read_flight(path: &Path) -> io::Result<FlightRecord> {
+    let f = std::fs::File::open(path)?;
+    let mut bytes = Vec::new();
+    f.take(MAX_FLIGHT_BYTES + 1).read_to_end(&mut bytes)?;
+    decode_flight(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceKind;
+
+    fn sample() -> FlightRecord {
+        FlightRecord {
+            config_digest: 0xDEAD_BEEF_u64,
+            events: vec![
+                TraceEvent {
+                    seq: 3,
+                    kind: TraceKind::Publish,
+                    trained: 1_000,
+                    detail: "snapshot v4".into(),
+                },
+                TraceEvent {
+                    seq: 4,
+                    kind: TraceKind::Shutdown,
+                    trained: 2_000,
+                    detail: String::new(),
+                },
+            ],
+            snapshots: vec![
+                SeriesSnapshot {
+                    tick: 7,
+                    uptime_ms: 1_000,
+                    series: vec![("a_total".into(), 5)],
+                },
+                SeriesSnapshot {
+                    tick: 8,
+                    uptime_ms: 2_000,
+                    series: vec![
+                        ("a_total".into(), 9),
+                        ("b{l=\"x\"}".into(), 1),
+                    ],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn flight_record_round_trips() {
+        let rec = sample();
+        let bytes = encode_flight(&rec);
+        assert_eq!(decode_flight(&bytes).unwrap(), rec);
+    }
+
+    #[test]
+    fn empty_record_round_trips() {
+        let rec = FlightRecord {
+            config_digest: 0,
+            events: Vec::new(),
+            snapshots: Vec::new(),
+        };
+        assert_eq!(decode_flight(&encode_flight(&rec)).unwrap(), rec);
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_errors_cleanly() {
+        let bytes = encode_flight(&sample());
+        for cut in 0..bytes.len() {
+            let err = decode_flight(&bytes[..cut]).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                io::ErrorKind::InvalidData,
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_and_wrong_magic_error_cleanly() {
+        let bytes = encode_flight(&sample());
+        for idx in [5, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[idx] ^= 0x01;
+            assert!(decode_flight(&bad).is_err(), "flip at {idx}");
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_rejected_before_allocation() {
+        // a snapshot count far past the cap, with a valid checksum
+        let mut body = Vec::new();
+        body.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes());
+        let trailer = encode_trailer(&[]);
+        // pol-lint: allow(L006, "test constructs a tiny known trailer")
+        body.extend_from_slice(&(trailer.len() as u32).to_le_bytes());
+        body.extend_from_slice(&trailer);
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(FLIGHT_MAGIC);
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(
+            &crate::hashing::fnv1a64(&body).to_le_bytes(),
+        );
+        let err = decode_flight(&buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // a plausible count with no bytes behind it
+        let mut body2 = Vec::new();
+        body2.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+        body2.extend_from_slice(&0u64.to_le_bytes());
+        // pol-lint: allow(L006, "test constructs a tiny known trailer")
+        body2.extend_from_slice(&(trailer.len() as u32).to_le_bytes());
+        body2.extend_from_slice(&trailer);
+        body2.extend_from_slice(&64u32.to_le_bytes());
+        let mut buf2 = Vec::new();
+        buf2.extend_from_slice(FLIGHT_MAGIC);
+        buf2.extend_from_slice(&body2);
+        buf2.extend_from_slice(
+            &crate::hashing::fnv1a64(&body2).to_le_bytes(),
+        );
+        let err = decode_flight(&buf2).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn oversized_names_truncate_on_encode_but_still_decode() {
+        let long = "n".repeat(2 * MAX_SERIES_NAME_BYTES as usize);
+        let rec = FlightRecord {
+            config_digest: 1,
+            events: Vec::new(),
+            snapshots: vec![SeriesSnapshot {
+                tick: 0,
+                uptime_ms: 0,
+                series: vec![(long, 3)],
+            }],
+        };
+        let back = decode_flight(&encode_flight(&rec)).unwrap();
+        assert_eq!(
+            back.snapshots[0].series[0].0.len(),
+            MAX_SERIES_NAME_BYTES as usize
+        );
+        assert_eq!(back.snapshots[0].series[0].1, 3);
+    }
+
+    #[test]
+    fn write_is_atomic_and_reads_back() {
+        let dir = std::env::temp_dir().join("pol_flight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("post.poltrace");
+        let rec = sample();
+        write_flight(&path, &rec).unwrap();
+        assert!(!path.with_extension("poltrace.tmp").exists());
+        assert_eq!(read_flight(&path).unwrap(), rec);
+        std::fs::remove_file(&path).ok();
+    }
+}

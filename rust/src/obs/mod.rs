@@ -10,14 +10,25 @@
 //! text format. The delay-adaptive `LrSchedule` and the multinode
 //! coordinator (ROADMAP) will read from exactly these sensors.
 //!
-//! Three export paths, one source of truth:
+//! Export paths, one source of truth:
 //! * [`MetricsRegistry::render`] — the versioned text exposition
 //!   format (`# pol-metrics v1`, sorted `name{label="v"} value`
 //!   lines; golden-tested byte-for-byte).
 //! * the `MetricsDump` wire op — a remote process scrapes the same
 //!   text over TCP via [`crate::wire::WireClient::metrics_dump`].
+//! * the `MetricsHistory` wire op — the server's own bounded ring of
+//!   periodic registry snapshots ([`SeriesRing`]), so rates and
+//!   trends are a server-side fact
+//!   ([`crate::wire::WireClient::metrics_history`]).
 //! * `pol top --connect ADDR` / `pol metrics --connect ADDR` — a live
-//!   terminal view (or one-shot dump) over that wire op.
+//!   terminal view (or one-shot dump; `--watch` repeats) over those
+//!   wire ops.
+//! * the flight recorder ([`flight`]) — trace tail + last-K series
+//!   snapshots + config digest, written to a `.poltrace` file at
+//!   shutdown and read back by `pol trace FILE`.
+//!
+//! Series names are spelled exactly once, in [`names`] (lint rule
+//! L008); every registration, render, and test site imports them.
 //!
 //! Series emitted by the instrumented layers:
 //!
@@ -41,6 +52,9 @@
 //! | `pol_wire_conns_shed` | wire (poll) | connections refused by the admission cap |
 //! | `pol_wire_wakeups` | wire (poll) | readiness-loop sweeps (0 on the threads backend) |
 //! | `pol_wire_wakeup_frames{,_count,_sum,_max,_p50,_p99}` | wire (poll) | frames answered per wakeup (fairness budget) |
+//! | `pol_wire_phase_ns{phase,op}` (histogram) | wire/serve | request phase durations: `read_decode`, `predict`, `encode`, `write_flush` per op |
+//! | `pol_train_span_instances{span}` (histogram) | coordinator | logical-clock span lengths in instances (`publish`, `checkpoint`) |
+//! | `pol_trace_dropped` | obs (wire render) | trace events overwritten because the ring was full |
 //! | `pol_simd_dispatch` | simd | selected kernel tier (0 scalar / 1 unrolled / 2 avx2) |
 //!
 //! Instrumentation is counters only — no float math on any training
@@ -48,15 +62,30 @@
 //! uninstrumented one (pinned per rule × topology in
 //! `tests/test_obs.rs`).
 
+/// Flight recorder: `.poltrace` post-mortem files.
+pub mod flight;
+/// Canonical metric/series name constants (lint rule L008).
+pub mod names;
 /// Metrics registry: counters, gauges, histograms.
 pub mod registry;
+/// Bounded ring of periodic whole-registry snapshots.
+pub mod series;
+/// Phase-attributed request timing and logical-clock spans.
+pub mod span;
 /// Fixed-capacity event trace ring.
 pub mod trace;
 
+pub use flight::{
+    decode_flight, encode_flight, read_flight, write_flight, FlightRecord,
+};
 pub use registry::{
     parse_exposition, Counter, Exposition, Gauge, Histogram,
     HistogramSnapshot, MetricsRegistry, EXPOSITION_HEADER,
 };
+pub use series::{
+    rate_per_sec, SeriesRing, SeriesSnapshot, DEFAULT_SERIES_CAPACITY,
+};
+pub use span::{duration_ns, LogicalSpan, Phase, PhaseSpans};
 pub use trace::{TraceEvent, TraceKind, TraceRing};
 
 use std::sync::Arc;

@@ -1,0 +1,138 @@
+//! Canonical metric/series names — the **only** module where a
+//! `pol_*` name string literal may appear (lint rule L008).
+//!
+//! Every registration site, every render site, and every test imports
+//! these constants, so a typo'd series name is a compile error or a
+//! lint failure instead of a silently forked time series. The
+//! layer-by-layer meaning of each series lives in the
+//! [`crate::obs`] module-doc table; this module is just the spelling
+//! authority.
+
+// ---- training --------------------------------------------------------
+
+/// Instances trained (counter; the training side's logical clock).
+pub const TRAIN_INSTANCES_TOTAL: &str = "pol_train_instances_total";
+/// Observed per-update feedback delay τ, in instances (histogram).
+pub const TRAIN_DELAY: &str = "pol_train_delay";
+/// Predictions awaiting feedback right now (gauge).
+pub const TRAIN_PENDING_DEPTH: &str = "pol_train_pending_depth";
+/// Nonzero features routed per shard (counter, `shard` label).
+pub const TRAIN_SHARD_NNZ_TOTAL: &str = "pol_train_shard_nnz_total";
+/// Logical-clock span lengths in instances (histogram, `span` label).
+pub const TRAIN_SPAN_INSTANCES: &str = "pol_train_span_instances";
+/// Snapshots published to the serving cell (counter).
+pub const SNAPSHOT_PUBLISHES_TOTAL: &str = "pol_snapshot_publishes_total";
+/// Checkpoints written (counter).
+pub const CHECKPOINT_WRITES_TOTAL: &str = "pol_checkpoint_writes_total";
+
+// ---- serving ---------------------------------------------------------
+
+/// Requests served (counter, `model` label).
+pub const SERVE_REQUESTS_TOTAL: &str = "pol_serve_requests_total";
+/// Predictions returned (counter, `model` label).
+pub const SERVE_PREDICTIONS_TOTAL: &str = "pol_serve_predictions_total";
+/// Largest snapshot staleness observed (gauge, `model` label).
+pub const SERVE_STALENESS_MAX: &str = "pol_serve_staleness_max";
+/// Request latency in nanoseconds (histogram, `model` label).
+pub const SERVE_LATENCY_NS: &str = "pol_serve_latency_ns";
+/// Registry mutation version (gauge).
+pub const SERVE_REGISTRY_VERSION: &str = "pol_serve_registry_version";
+/// Models currently registered (gauge).
+pub const SERVE_MODELS: &str = "pol_serve_models";
+
+// ---- wire ------------------------------------------------------------
+
+/// Bytes received over the wire protocol (counter).
+pub const WIRE_BYTES_IN_TOTAL: &str = "pol_wire_bytes_in_total";
+/// Bytes sent over the wire protocol (counter).
+pub const WIRE_BYTES_OUT_TOTAL: &str = "pol_wire_bytes_out_total";
+/// Frames received (counter).
+pub const WIRE_FRAMES_IN_TOTAL: &str = "pol_wire_frames_in_total";
+/// Frames sent (counter).
+pub const WIRE_FRAMES_OUT_TOTAL: &str = "pol_wire_frames_out_total";
+/// Frames that failed to decode (counter).
+pub const WIRE_DECODE_ERRORS_TOTAL: &str = "pol_wire_decode_errors_total";
+/// Connections accepted since start, shed included (counter).
+pub const WIRE_CONNECTIONS_TOTAL: &str = "pol_wire_connections_total";
+/// Connections being served right now (gauge).
+pub const WIRE_ACTIVE_CONNECTIONS: &str = "pol_wire_active_connections";
+/// Poll-backend tracked connections (gauge).
+pub const WIRE_CONNS_ACTIVE: &str = "pol_wire_conns_active";
+/// Connections refused over the admission cap (counter).
+pub const WIRE_CONNS_SHED: &str = "pol_wire_conns_shed";
+/// Poll-loop wakeups (counter).
+pub const WIRE_WAKEUPS: &str = "pol_wire_wakeups";
+/// Frames answered per poll wakeup (histogram).
+pub const WIRE_WAKEUP_FRAMES: &str = "pol_wire_wakeup_frames";
+/// Request phase durations in nanoseconds (histogram, `phase` and
+/// `op` labels) — the serving path's span layer.
+pub const WIRE_PHASE_NS: &str = "pol_wire_phase_ns";
+
+// ---- obs itself ------------------------------------------------------
+
+/// Trace events overwritten because the ring was full (counter).
+pub const TRACE_DROPPED: &str = "pol_trace_dropped";
+
+// ---- stream ----------------------------------------------------------
+
+/// Instances parsed by the ingest pipeline (counter).
+pub const STREAM_INSTANCES_TOTAL: &str = "pol_stream_instances_total";
+/// Batches handed to the trainer (counter).
+pub const STREAM_BATCHES_TOTAL: &str = "pol_stream_batches_total";
+/// Recycled batches resident in the pool (gauge).
+pub const STREAM_POOL_BATCHES: &str = "pol_stream_pool_batches";
+/// Unparseable lines skipped (counter).
+pub const STREAM_PARSE_SKIPS_TOTAL: &str = "pol_stream_parse_skips_total";
+
+// ---- simd ------------------------------------------------------------
+
+/// Selected dispatch tier: 0 scalar / 1 unrolled / 2 avx2 (gauge).
+pub const SIMD_DISPATCH: &str = "pol_simd_dispatch";
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn every_name_is_well_formed() {
+        for n in [
+            super::TRAIN_INSTANCES_TOTAL,
+            super::TRAIN_DELAY,
+            super::TRAIN_PENDING_DEPTH,
+            super::TRAIN_SHARD_NNZ_TOTAL,
+            super::TRAIN_SPAN_INSTANCES,
+            super::SNAPSHOT_PUBLISHES_TOTAL,
+            super::CHECKPOINT_WRITES_TOTAL,
+            super::SERVE_REQUESTS_TOTAL,
+            super::SERVE_PREDICTIONS_TOTAL,
+            super::SERVE_STALENESS_MAX,
+            super::SERVE_LATENCY_NS,
+            super::SERVE_REGISTRY_VERSION,
+            super::SERVE_MODELS,
+            super::WIRE_BYTES_IN_TOTAL,
+            super::WIRE_BYTES_OUT_TOTAL,
+            super::WIRE_FRAMES_IN_TOTAL,
+            super::WIRE_FRAMES_OUT_TOTAL,
+            super::WIRE_DECODE_ERRORS_TOTAL,
+            super::WIRE_CONNECTIONS_TOTAL,
+            super::WIRE_ACTIVE_CONNECTIONS,
+            super::WIRE_CONNS_ACTIVE,
+            super::WIRE_CONNS_SHED,
+            super::WIRE_WAKEUPS,
+            super::WIRE_WAKEUP_FRAMES,
+            super::WIRE_PHASE_NS,
+            super::TRACE_DROPPED,
+            super::STREAM_INSTANCES_TOTAL,
+            super::STREAM_BATCHES_TOTAL,
+            super::STREAM_POOL_BATCHES,
+            super::STREAM_PARSE_SKIPS_TOTAL,
+            super::SIMD_DISPATCH,
+        ] {
+            assert!(n.starts_with("pol_"), "{n}");
+            assert!(
+                n.bytes().all(|c| c.is_ascii_lowercase()
+                    || c.is_ascii_digit()
+                    || c == b'_'),
+                "{n}"
+            );
+        }
+    }
+}

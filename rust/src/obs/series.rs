@@ -1,0 +1,212 @@
+//! `obs::series` — a bounded ring of periodic whole-registry
+//! snapshots, so rates and trends are a *server-side* fact instead of
+//! client scrape state.
+//!
+//! A sampler thread (owned by the wire server or the in-process
+//! prediction server, cadence configured there) parses its own
+//! metrics exposition at each tick and pushes the resulting
+//! `(series, value)` table into a [`SeriesRing`]. Samples are raw
+//! totals; deltas and rates are computed **at read time**
+//! ([`SeriesSnapshot::value`], [`rate_per_sec`]) so the ring stores
+//! one canonical thing and every consumer derives its own view. The
+//! ring is bounded and overwrites oldest — monotonically increasing
+//! tick numbers make the loss visible, the same discipline as
+//! [`crate::obs::TraceRing`].
+//!
+//! The ring is exported two ways: over the wire as the
+//! `MetricsHistory` op (`pol top` renders server-side rates and
+//! sparklines from it) and into the `.poltrace` flight record at
+//! shutdown ([`crate::obs::flight`]).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::LockExt;
+
+/// Snapshots a [`SeriesRing`] retains by default (with a one-second
+/// sampler cadence: about a minute of history).
+pub const DEFAULT_SERIES_CAPACITY: usize = 64;
+
+/// One whole-registry sample.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SeriesSnapshot {
+    /// Monotonic sample number (gaps reveal overwritten samples).
+    pub tick: u64,
+    /// Milliseconds since the sampling server started.
+    pub uptime_ms: u64,
+    /// `(series, value)` pairs, in exposition order (sorted).
+    pub series: Vec<(String, u64)>,
+}
+
+impl SeriesSnapshot {
+    /// The value of one exactly-named series.
+    pub fn value(&self, name: &str) -> Option<u64> {
+        self.series
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Sum over every series matching `name` exactly or carrying
+    /// labels (`name{...}`) — the cross-label total.
+    pub fn sum(&self, name: &str) -> u64 {
+        self.series
+            .iter()
+            .filter(|(n, _)| {
+                n == name
+                    || (n.starts_with(name)
+                        && n[name.len()..].starts_with('{'))
+            })
+            .map(|&(_, v)| v)
+            .sum()
+    }
+}
+
+struct Ring {
+    cap: usize,
+    snaps: VecDeque<SeriesSnapshot>,
+    dropped: u64,
+}
+
+/// The bounded snapshot ring. All methods take `&self`; sampling is
+/// orders of magnitude rarer than requests, so a mutex is the right
+/// tool (the metrics hot path stays lock-free in
+/// [`crate::obs::registry`]).
+pub struct SeriesRing {
+    tick: AtomicU64,
+    inner: Mutex<Ring>,
+}
+
+impl SeriesRing {
+    /// A ring holding the last `capacity` snapshots.
+    pub fn new(capacity: usize) -> SeriesRing {
+        SeriesRing {
+            tick: AtomicU64::new(0),
+            inner: Mutex::new(Ring {
+                cap: capacity.max(1),
+                snaps: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Append one sample; returns its tick number.
+    pub fn push(&self, uptime_ms: u64, series: Vec<(String, u64)>) -> u64 {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
+        // ring state is a deque + counter, valid after any partial write
+        let mut r = self.inner.lock().recover_poisoned();
+        if r.snaps.len() == r.cap {
+            r.snaps.pop_front();
+            r.dropped += 1;
+        }
+        r.snaps.push_back(SeriesSnapshot { tick, uptime_ms, series });
+        tick
+    }
+
+    /// The newest `n` snapshots, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<SeriesSnapshot> {
+        // ring state is a deque + counter, valid after any partial write
+        let r = self.inner.lock().recover_poisoned();
+        let skip = r.snaps.len().saturating_sub(n);
+        r.snaps.iter().skip(skip).cloned().collect()
+    }
+
+    /// Snapshots currently buffered.
+    pub fn len(&self) -> usize {
+        // ring state is a deque + counter, valid after any partial write
+        self.inner.lock().recover_poisoned().snaps.len()
+    }
+
+    /// Whether the ring is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshots overwritten so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        // ring state is a deque + counter, valid after any partial write
+        self.inner.lock().recover_poisoned().dropped
+    }
+}
+
+/// The per-second rate of a (cross-label summed) counter series
+/// between two samples — read-time math over raw totals. `None` when
+/// the samples coincide or run backwards in sampled uptime.
+pub fn rate_per_sec(
+    older: &SeriesSnapshot,
+    newer: &SeriesSnapshot,
+    name: &str,
+) -> Option<f64> {
+    let dt_ms = newer.uptime_ms.checked_sub(older.uptime_ms)?;
+    if dt_ms == 0 {
+        return None;
+    }
+    let delta = newer.sum(name).saturating_sub(older.sum(name));
+    Some(delta as f64 * 1_000.0 / dt_ms as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(tick_series: &[(&str, u64)]) -> Vec<(String, u64)> {
+        tick_series
+            .iter()
+            .map(|&(n, v)| (n.to_string(), v))
+            .collect()
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_ticks() {
+        let ring = SeriesRing::new(3);
+        for i in 0..5u64 {
+            let t = ring.push(i * 100, snap(&[("a_total", i)]));
+            assert_eq!(t, i);
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let tail = ring.tail(10);
+        let ticks: Vec<u64> = tail.iter().map(|s| s.tick).collect();
+        assert_eq!(ticks, vec![2, 3, 4]);
+        // a shorter tail keeps the newest
+        assert_eq!(ring.tail(1)[0].tick, 4);
+    }
+
+    #[test]
+    fn value_and_sum_split_exact_and_labelled_series() {
+        let s = SeriesSnapshot {
+            tick: 0,
+            uptime_ms: 0,
+            series: snap(&[
+                ("req_total{model=\"a\"}", 5),
+                ("req_total{model=\"b\"}", 2),
+                ("req_totals", 100), // prefix but not a label match
+                ("up", 1),
+            ]),
+        };
+        assert_eq!(s.value("up"), Some(1));
+        assert_eq!(s.value("req_total"), None);
+        assert_eq!(s.sum("req_total"), 7);
+        assert_eq!(s.sum("req_totals"), 100);
+    }
+
+    #[test]
+    fn rates_are_read_time_math_over_raw_totals() {
+        let a = SeriesSnapshot {
+            tick: 0,
+            uptime_ms: 1_000,
+            series: snap(&[("req_total", 50)]),
+        };
+        let b = SeriesSnapshot {
+            tick: 1,
+            uptime_ms: 3_000,
+            series: snap(&[("req_total", 150)]),
+        };
+        let r = rate_per_sec(&a, &b, "req_total").expect("rate");
+        assert!((r - 50.0).abs() < 1e-9, "{r}");
+        // degenerate windows yield None, not a division blow-up
+        assert!(rate_per_sec(&a, &a, "req_total").is_none());
+        assert!(rate_per_sec(&b, &a, "req_total").is_none());
+    }
+}

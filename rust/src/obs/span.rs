@@ -1,0 +1,210 @@
+//! `obs::span` — phase-attributed request timing.
+//!
+//! Two clocks, one discipline. On the **serving** path requests burn
+//! wall time, so [`PhaseSpans`] splits each answered frame into the
+//! four phases of its lifecycle — `read_decode` (frame dispatch
+//! through request decode), `predict`, `encode`, `write_flush` — and
+//! records each duration into the
+//! [`crate::obs::names::WIRE_PHASE_NS`] histogram labelled by phase
+//! and op. Both wire backends and the in-process prediction server
+//! record through this one type from the shared dispatch point
+//! (`answer_frame`/`HandlerCtx`), so the attribution cannot drift
+//! between backends.
+//!
+//! On the **training** path wall time is banned (lint rule L004: the
+//! bit-parity proofs require nothing there branches on a clock), so
+//! spans are measured on the logical clock instead: a [`LogicalSpan`]
+//! records the distance *in trained instances* between successive
+//! marks of a recurring event (publish-to-publish, checkpoint-to-
+//! checkpoint) into [`crate::obs::names::TRAIN_SPAN_INSTANCES`].
+//! Integer-only end to end, so lint rule L005 and every parity proof
+//! stay intact.
+//!
+//! Recording is allocation-free in steady state: histogram handles
+//! are resolved once per (op, phase) pair and cached.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::obs::names;
+use crate::obs::registry::Histogram;
+use crate::obs::Obs;
+
+/// One phase of a request's lifecycle on the serving path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Frame dispatch through request decode. (Socket read *wait* is
+    /// excluded by design: it is idle time on the threads backend and
+    /// multiplexed across peers on the poll backend, so charging it
+    /// to a request would make the backends disagree.)
+    ReadDecode,
+    /// Model scoring against the resolved snapshot.
+    Predict,
+    /// Response payload assembly.
+    Encode,
+    /// Frame finish + transport write + flush.
+    WriteFlush,
+}
+
+impl Phase {
+    /// Every phase, in lifecycle order.
+    pub const ALL: [Phase; 4] = [
+        Phase::ReadDecode,
+        Phase::Predict,
+        Phase::Encode,
+        Phase::WriteFlush,
+    ];
+
+    /// The `phase` label value.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::ReadDecode => "read_decode",
+            Phase::Predict => "predict",
+            Phase::Encode => "encode",
+            Phase::WriteFlush => "write_flush",
+        }
+    }
+}
+
+/// A [`Duration`] as whole nanoseconds, saturating at `u64::MAX`.
+pub fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Per-(op, phase) span recorder for the serving path. Disabled (the
+/// no-obs case) it is a no-op whose callers skip their clock reads,
+/// so un-instrumented serving pays nothing.
+pub struct PhaseSpans {
+    obs: Option<Arc<Obs>>,
+    cache: HashMap<(&'static str, Phase), Histogram>,
+}
+
+impl PhaseSpans {
+    /// A recorder writing into `obs`'s metrics registry.
+    pub fn new(obs: Arc<Obs>) -> PhaseSpans {
+        PhaseSpans { obs: Some(obs), cache: HashMap::new() }
+    }
+
+    /// The no-op recorder for un-instrumented serving.
+    pub fn disabled() -> PhaseSpans {
+        PhaseSpans { obs: None, cache: HashMap::new() }
+    }
+
+    /// A recorder iff `obs` is attached — the common construction at
+    /// both wire backends and the in-process server.
+    pub fn from_obs(obs: Option<&Arc<Obs>>) -> PhaseSpans {
+        match obs {
+            Some(o) => PhaseSpans::new(Arc::clone(o)),
+            None => PhaseSpans::disabled(),
+        }
+    }
+
+    /// Whether recording is live — callers guard their `Instant`
+    /// reads on this so disabled spans cost zero clock calls.
+    pub fn enabled(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    /// Record one phase duration for `op` (resolving and caching the
+    /// labelled histogram handle on first use).
+    pub fn record(&mut self, op: &'static str, phase: Phase, d: Duration) {
+        let Some(o) = &self.obs else { return };
+        let h = self.cache.entry((op, phase)).or_insert_with(|| {
+            o.metrics.histogram_with(
+                names::WIRE_PHASE_NS,
+                &[("phase", phase.name()), ("op", op)],
+            )
+        });
+        h.record(duration_ns(d));
+    }
+}
+
+/// A recurring span on the training side's logical clock: each
+/// [`LogicalSpan::lap`] records the distance in instances since the
+/// previous lap. No wall clock, no floats — safe on every
+/// deterministic path.
+pub struct LogicalSpan {
+    hist: Histogram,
+    last: Option<u64>,
+}
+
+impl LogicalSpan {
+    /// A span recording into `hist` (typically
+    /// [`crate::obs::names::TRAIN_SPAN_INSTANCES`] with a `span`
+    /// label naming the recurring event).
+    pub fn new(hist: Histogram) -> LogicalSpan {
+        LogicalSpan { hist, last: None }
+    }
+
+    /// Mark the logical clock at `now` trained instances; records
+    /// `now - previous mark` when one exists (the first lap only
+    /// arms the span).
+    pub fn lap(&mut self, now: u64) {
+        if let Some(prev) = self.last {
+            self.hist.record(now.saturating_sub(prev));
+        }
+        self.last = Some(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_have_distinct_label_values() {
+        let mut seen = std::collections::HashSet::new();
+        for p in Phase::ALL {
+            assert!(seen.insert(p.name()), "duplicate label {}", p.name());
+        }
+    }
+
+    #[test]
+    fn recording_lands_in_the_labelled_histogram() {
+        let o = Obs::new();
+        let mut spans = PhaseSpans::new(Arc::clone(&o));
+        assert!(spans.enabled());
+        spans.record("predict", Phase::Predict, Duration::from_nanos(500));
+        spans.record("predict", Phase::Predict, Duration::from_nanos(700));
+        spans.record("predict", Phase::Encode, Duration::from_nanos(9));
+        let h = o.metrics.histogram_with(
+            names::WIRE_PHASE_NS,
+            &[("phase", Phase::Predict.name()), ("op", "predict")],
+        );
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.sum, 1200);
+        // and the cache resolved each (op, phase) handle exactly once
+        assert_eq!(spans.cache.len(), 2);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let mut spans = PhaseSpans::disabled();
+        assert!(!spans.enabled());
+        spans.record("predict", Phase::Predict, Duration::from_secs(1));
+        assert!(spans.cache.is_empty());
+    }
+
+    #[test]
+    fn duration_ns_saturates() {
+        assert_eq!(duration_ns(Duration::from_nanos(7)), 7);
+        assert_eq!(duration_ns(Duration::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn logical_span_records_lap_distances() {
+        let m = crate::obs::registry::MetricsRegistry::new();
+        let h = m.histogram("span_test");
+        let mut s = LogicalSpan::new(h.clone());
+        s.lap(1_000); // arms only
+        assert_eq!(h.snapshot().count, 0);
+        s.lap(3_000);
+        s.lap(3_500);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.sum, 2_500);
+        assert_eq!(snap.max, 2_000);
+    }
+}

@@ -38,7 +38,7 @@ pub const MAX_DETAIL_BYTES: u32 = 512;
 
 /// Fixed per-event wire overhead: seq + kind + trained + detail len.
 const EVENT_HEAD: usize = 8 + 1 + 8 + 4;
-const MAX_TRAILER_BYTES: u64 = 4
+pub(crate) const MAX_TRAILER_BYTES: u64 = 4
     + 4
     + (MAX_TRAILER_EVENTS as u64)
         * (EVENT_HEAD as u64 + MAX_DETAIL_BYTES as u64)

@@ -22,12 +22,13 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::error::LockExt;
 use crate::linalg::SparseFeat;
 use crate::metrics::LatencyHistogram;
+use crate::obs::{names, parse_exposition, Obs, Phase, PhaseSpans, SeriesRing};
 use crate::serve::publisher::SnapshotCell;
 use crate::serve::registry::{ModelCache, ModelRegistry};
 
@@ -167,7 +168,13 @@ pub struct PredictionServer {
     started: Instant,
     inflight_hint: Arc<AtomicU64>,
     closed: Arc<AtomicBool>,
-    obs: Option<Arc<crate::obs::Obs>>,
+    obs: Option<Arc<Obs>>,
+    // set-once relay: workers are spawned before attach_obs can run,
+    // so they watch this cell and arm their span recorders lazily
+    obs_cell: Arc<OnceLock<Arc<Obs>>>,
+    history: Option<Arc<SeriesRing>>,
+    sampler: Option<std::thread::JoinHandle<()>>,
+    sampler_stop: Arc<AtomicBool>,
 }
 
 /// Cloneable client side of a [`PredictionServer`].
@@ -236,15 +243,17 @@ impl PredictionServer {
         let (tx, rx) = mpsc::channel::<Job>();
         let shared_rx = Arc::new(Mutex::new(rx));
         let closed = Arc::new(AtomicBool::new(false));
+        let obs_cell: Arc<OnceLock<Arc<Obs>>> = Arc::new(OnceLock::new());
         let mut workers = Vec::with_capacity(threads);
         for wid in 0..threads {
             let rx = Arc::clone(&shared_rx);
             let registry = Arc::clone(&registry);
             let closed = Arc::clone(&closed);
+            let obs_cell = Arc::clone(&obs_cell);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("serve-{wid}"))
-                    .spawn(move || worker_loop(registry, rx, closed))
+                    .spawn(move || worker_loop(registry, rx, closed, obs_cell))
                     // start() has no error surface to thread this into
                     // pol-lint: allow(L001, "spawn fails only on resource exhaustion")
                     .expect("spawn serving thread"),
@@ -259,16 +268,77 @@ impl PredictionServer {
             inflight_hint: Arc::new(AtomicU64::new(0)),
             closed,
             obs: None,
+            obs_cell,
+            history: None,
+            sampler: None,
+            sampler_stop: Arc::new(AtomicBool::new(false)),
         }
     }
 
-    /// Attach a telemetry handle: [`Self::shutdown`] mirrors the final
-    /// per-model stats into its registry (`pol_serve_*` series — the
-    /// same names the wire server exposes) and records a `Shutdown`
-    /// trace event. Nothing touches the request path, so attaching obs
-    /// costs nothing per prediction.
-    pub fn attach_obs(&mut self, obs: Arc<crate::obs::Obs>) {
-        self.obs = Some(obs);
+    /// Attach a telemetry handle: the workers pick it up (set-once
+    /// relay, one lock-free load per request) and start recording
+    /// per-phase request timing into
+    /// [`crate::obs::names::WIRE_PHASE_NS`] — the same
+    /// `read_decode → predict → encode → write_flush` attribution the
+    /// wire backends record, with `read_decode` covering queue wait.
+    /// [`Self::shutdown`] additionally mirrors the final per-model
+    /// stats into the registry (`pol_serve_*` series — the same names
+    /// the wire server exposes) and records a `Shutdown` trace event.
+    /// Un-attached servers skip every span clock read and pay nothing
+    /// per prediction.
+    pub fn attach_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = Some(Arc::clone(&obs));
+        let _ = self.obs_cell.set(obs);
+    }
+
+    /// Start the history sampler: every `every`, snapshot the attached
+    /// registry's whole exposition into a bounded [`SeriesRing`] of
+    /// `len` entries ([`Self::history`] reads it; rates via
+    /// [`crate::obs::rate_per_sec`]) — the in-process mirror of the
+    /// wire server's `history_every`/`history_len`. No-op unless
+    /// [`Self::attach_obs`] ran first, or if a sampler already runs.
+    pub fn start_history(&mut self, every: Duration, len: usize) {
+        let Some(obs) = &self.obs else { return };
+        if self.sampler.is_some() {
+            return;
+        }
+        let ring = Arc::new(SeriesRing::new(len.max(1)));
+        self.history = Some(Arc::clone(&ring));
+        let obs = Arc::clone(obs);
+        let stop = Arc::clone(&self.sampler_stop);
+        let started = self.started;
+        let period = every.max(Duration::from_millis(10));
+        let sampler = std::thread::Builder::new()
+            .name("serve-sampler".to_string())
+            .spawn(move || {
+                let mut next = Instant::now() + period;
+                while !stop.load(Ordering::Acquire) {
+                    let now = Instant::now();
+                    if now < next {
+                        // short steps so shutdown never waits a period
+                        let step =
+                            (next - now).min(Duration::from_millis(25));
+                        std::thread::sleep(step);
+                        continue;
+                    }
+                    next = now + period;
+                    if let Some(series) =
+                        parse_exposition(&obs.metrics.render())
+                    {
+                        let uptime_ms =
+                            started.elapsed().as_millis() as u64;
+                        ring.push(uptime_ms, series);
+                    }
+                }
+            })
+            // pol-lint: allow(L001, "spawn fails only on resource exhaustion")
+            .expect("spawn sampler thread");
+        self.sampler = Some(sampler);
+    }
+
+    /// The history ring, when [`Self::start_history`] is running.
+    pub fn history(&self) -> Option<Arc<SeriesRing>> {
+        self.history.clone()
     }
 
     /// Spawn a server hosting one cell under [`DEFAULT_MODEL`] (the
@@ -324,6 +394,10 @@ impl PredictionServer {
         // workers finish what is already queued
         self.closed.store(true, Ordering::Release);
         drop(self.tx);
+        self.sampler_stop.store(true, Ordering::Release);
+        if let Some(s) = self.sampler {
+            let _ = s.join();
+        }
         let mut total = ModelStats::new();
         let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
         for w in self.workers {
@@ -360,16 +434,16 @@ impl PredictionServer {
             for (name, ms) in &stats.per_model {
                 let labels = [("model", name.as_str())];
                 o.metrics
-                    .counter_with("pol_serve_requests_total", &labels)
+                    .counter_with(names::SERVE_REQUESTS_TOTAL, &labels)
                     .add(ms.requests);
                 o.metrics
-                    .counter_with("pol_serve_predictions_total", &labels)
+                    .counter_with(names::SERVE_PREDICTIONS_TOTAL, &labels)
                     .add(ms.predictions);
                 o.metrics
-                    .gauge_with("pol_serve_staleness_max", &labels)
+                    .gauge_with(names::SERVE_STALENESS_MAX, &labels)
                     .record_max(ms.max_staleness);
                 o.metrics
-                    .histogram_with("pol_serve_latency_ns", &labels)
+                    .histogram_with(names::SERVE_LATENCY_NS, &labels)
                     .merge_latency(&ms.latency);
             }
             o.trace.record(
@@ -389,6 +463,7 @@ fn worker_loop(
     registry: Arc<ModelRegistry>,
     rx: Arc<Mutex<mpsc::Receiver<Job>>>,
     closed: Arc<AtomicBool>,
+    obs: Arc<OnceLock<Arc<Obs>>>,
 ) -> WorkerStats {
     // Per-model cache ([`ModelCache`], shared with the pol::wire
     // handlers): reader + private predict scratch, so alternating
@@ -397,6 +472,10 @@ fn worker_loop(
     // allocates nothing beyond the prediction output.
     let mut cache = ModelCache::new(&registry);
     let mut ws = WorkerStats { total: ModelStats::new(), per_model: HashMap::new() };
+    // span recorder, armed lazily: attach_obs may run after the
+    // workers start, so each dequeue re-checks the set-once cell
+    // (one lock-free load) until a handle appears
+    let mut spans = PhaseSpans::disabled();
     loop {
         // hold the queue lock only for the dequeue, never while
         // predicting; the timeout lets the worker notice a shutdown
@@ -417,18 +496,45 @@ fn worker_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         };
+        if !spans.enabled() {
+            if let Some(o) = obs.get() {
+                spans = PhaseSpans::new(Arc::clone(o));
+            }
+        }
         let Some((reader, scratch)) = cache.resolve(&registry, &job.model)
         else {
+            // error path stays uninstrumented, mirroring the wire
+            // dispatch: phases describe answered requests
             ws.total.requests += 1;
             let _ = job.reply.send(Err(PredictError::UnknownModel(job.model)));
             continue;
         };
+        // phase attribution (the wire dispatch's discipline, queue
+        // flavored): read_decode = queue wait, predict = scoring,
+        // encode = response assembly + stats, write_flush = reply
+        // send. Disabled spans skip every clock read below.
+        let timed = spans.enabled();
+        let mut mark = job.enqueued;
+        if timed {
+            let now = Instant::now();
+            spans.record(
+                "predict",
+                Phase::ReadDecode,
+                now.duration_since(mark),
+            );
+            mark = now;
+        }
         let snap = Arc::clone(reader.current());
         let preds: Vec<f64> = job
             .batch
             .iter()
             .map(|x| snap.predict_with(x, scratch))
             .collect();
+        if timed {
+            let now = Instant::now();
+            spans.record("predict", Phase::Predict, now.duration_since(mark));
+            mark = now;
+        }
         let staleness = reader.cell().staleness_of(&snap);
         let latency = job.enqueued.elapsed();
         ws.total.record(preds.len() as u64, latency, staleness);
@@ -440,12 +546,21 @@ fn worker_loop(
                 ws.per_model.insert(job.model.clone(), ms);
             }
         }
-        let _ = job.reply.send(Ok(PredictResponse {
+        let resp = Ok(PredictResponse {
             model: job.model,
             preds,
             snapshot_version: snap.version,
             staleness,
-        }));
+        });
+        if timed {
+            let now = Instant::now();
+            spans.record("predict", Phase::Encode, now.duration_since(mark));
+            mark = now;
+        }
+        let _ = job.reply.send(resp);
+        if timed {
+            spans.record("predict", Phase::WriteFlush, mark.elapsed());
+        }
     }
     ws
 }

@@ -152,7 +152,9 @@ fn detect() -> Tier {
 /// every component that wires up telemetry, so the gauge is visible
 /// wherever training or serving metrics are. Integer-only (L005-safe).
 pub fn export_dispatch(metrics: &crate::obs::MetricsRegistry) {
-    metrics.gauge("pol_simd_dispatch").set(tier().as_u64());
+    metrics
+        .gauge(crate::obs::names::SIMD_DISPATCH)
+        .set(tier().as_u64());
 }
 
 /// ⟨w, x⟩ for sparse `x` over dense `w`, dispatched. Bit-identical to
@@ -339,7 +341,8 @@ mod tests {
         let rendered = m.render();
         assert!(
             rendered.contains(&format!(
-                "pol_simd_dispatch {}",
+                "{} {}",
+                crate::obs::names::SIMD_DISPATCH,
                 tier().as_u64()
             )),
             "{rendered}"

@@ -141,12 +141,13 @@ impl Pipeline {
         })?;
         let snap = stats.snapshot();
         if let Some(o) = &self.obs {
+            use crate::obs::names;
             let m = &o.metrics;
-            m.counter("pol_stream_instances_total").add(snap.instances);
-            m.counter("pol_stream_batches_total").add(snap.batches);
-            m.gauge("pol_stream_pool_batches")
+            m.counter(names::STREAM_INSTANCES_TOTAL).add(snap.instances);
+            m.counter(names::STREAM_BATCHES_TOTAL).add(snap.batches);
+            m.gauge(names::STREAM_POOL_BATCHES)
                 .record_max(snap.batches_allocated as u64);
-            m.counter("pol_stream_parse_skips_total")
+            m.counter(names::STREAM_PARSE_SKIPS_TOTAL)
                 .add(source.skipped().saturating_sub(skipped_before));
         }
         Ok((result, snap))

@@ -13,11 +13,12 @@ use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
 use crate::linalg::SparseFeat;
+use crate::obs::SeriesSnapshot;
 use crate::wire::frame::{
-    decode_models, decode_predict_response, decode_stats, put_instance,
-    put_name, put_u32, read_frame, status_name, Frame, FrameBuf, FrameError,
-    FrameWriter, ModelEntry, Op, StatsReport, MAX_BATCH, MAX_NAME, MAX_PING,
-    STATUS_OK,
+    decode_history, decode_models, decode_predict_response, decode_stats,
+    put_instance, put_name, put_u32, read_frame, status_name, Frame,
+    FrameBuf, FrameError, FrameWriter, ModelEntry, Op, StatsReport,
+    MAX_BATCH, MAX_NAME, MAX_PING, STATUS_OK,
 };
 
 /// Why a wire call failed.
@@ -398,6 +399,24 @@ impl WireClient {
                 "metrics dump payload is not UTF-8",
             ))
         })
+    }
+
+    /// Admin: the server's own metrics history — the tail of its
+    /// bounded ring of periodic whole-registry snapshots, oldest
+    /// first. Rates computed between adjacent snapshots
+    /// ([`crate::obs::rate_per_sec`]) reflect the *server's* sampling
+    /// cadence, not the scrape interval, so `pol top` renders true
+    /// server-side rates from one request. Empty when the server runs
+    /// without a sampler (`history_every: None`) or has not completed
+    /// its first sampling period yet.
+    pub fn metrics_history(
+        &mut self,
+    ) -> Result<Vec<SeriesSnapshot>, WireError> {
+        let id = self.begin(Op::MetricsHistory);
+        self.enqueue()?;
+        self.flush()?;
+        let payload = self.recv_expect(Op::MetricsHistory, id)?;
+        Ok(decode_history(payload)?)
     }
 
     /// Admin: the registry's current models.

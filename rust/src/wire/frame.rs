@@ -111,6 +111,11 @@ pub enum Op {
     /// exposition format (request payload empty; response payload is
     /// the UTF-8 text, already bounded by the frame cap).
     MetricsDump = 7,
+    /// Admin: the server's bounded ring of periodic registry
+    /// snapshots (request payload empty; response payload is
+    /// `nsnaps:u32 | nsnaps × snapshot` — see [`put_history`]), so
+    /// rates and trends are a server-side fact.
+    MetricsHistory = 8,
 }
 
 impl Op {
@@ -124,6 +129,7 @@ impl Op {
             5 => Some(Op::Ping),
             6 => Some(Op::Shutdown),
             7 => Some(Op::MetricsDump),
+            8 => Some(Op::MetricsHistory),
             _ => None,
         }
     }
@@ -248,6 +254,11 @@ impl<'a> Cur<'a> {
     /// Read one byte.
     pub fn take_u8(&mut self) -> Result<u8, FrameError> {
         Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn take_u16(&mut self) -> Result<u16, FrameError> {
+        Ok(crate::bytes::le_u16(self.take(2)?))
     }
 
     /// Read a little-endian `u32`.
@@ -931,6 +942,135 @@ pub fn put_models(out: &mut Vec<u8>, models: &[ModelEntry]) {
     }
 }
 
+// ---- metrics-history payload ----------------------------------------
+
+/// Snapshots one [`Op::MetricsHistory`] response may carry.
+pub const MAX_HISTORY_SNAPSHOTS: u32 = 256;
+/// Series entries per history snapshot.
+pub const MAX_HISTORY_SERIES: u32 = 4_096;
+/// Bytes in one series name (label block included).
+pub const MAX_SERIES_NAME: u32 = 512;
+
+/// Fixed per-snapshot overhead: tick + uptime + series count.
+const HIST_SNAP_HEAD: usize = 8 + 8 + 4;
+/// Fixed per-series overhead: name length + value.
+const HIST_ENTRY_HEAD: usize = 2 + 8;
+
+/// A series name as it rides the history payload: truncated to
+/// [`MAX_SERIES_NAME`] on a char boundary.
+fn history_name(name: &str) -> &str {
+    if name.len() <= MAX_SERIES_NAME as usize {
+        return name;
+    }
+    let mut cut = MAX_SERIES_NAME as usize;
+    while !name.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    &name[..cut]
+}
+
+fn encoded_snapshot_len(s: &crate::obs::SeriesSnapshot) -> usize {
+    let take = s.series.len().min(MAX_HISTORY_SERIES as usize);
+    HIST_SNAP_HEAD
+        + s.series
+            .iter()
+            .take(take)
+            .map(|(n, _)| HIST_ENTRY_HEAD + history_name(n).len())
+            .sum::<usize>()
+}
+
+/// Encode a metrics-history payload:
+/// `nsnaps:u32 | per snapshot (u64 tick | u64 uptime_ms | u32 nseries
+/// | per series (u16 name_len | name | u64 value))`, oldest first.
+/// Keeps the newest snapshots that fit both [`MAX_HISTORY_SNAPSHOTS`]
+/// and the frame budget (older history is droppable; the newest
+/// window is what rates are computed from), and truncates series
+/// lists and names to their caps — a payload that encodes always
+/// decodes and always frames.
+pub fn put_history(
+    out: &mut Vec<u8>,
+    snaps: &[crate::obs::SeriesSnapshot],
+) {
+    // leave headroom for the frame header and checksum already in /
+    // appended around this payload
+    let budget = (MAX_FRAME as usize).saturating_sub(out.len() + 64);
+    let mut first = snaps.len();
+    let mut used = 4usize;
+    while first > 0 {
+        if snaps.len() - first == MAX_HISTORY_SNAPSHOTS as usize {
+            break;
+        }
+        let need = encoded_snapshot_len(&snaps[first - 1]);
+        if used + need > budget {
+            break;
+        }
+        used += need;
+        first -= 1;
+    }
+    let kept = &snaps[first..];
+    // pol-lint: allow(L006, "len capped to MAX_HISTORY_SNAPSHOTS above")
+    put_u32(out, kept.len() as u32);
+    for s in kept {
+        put_u64(out, s.tick);
+        put_u64(out, s.uptime_ms);
+        let take = s.series.len().min(MAX_HISTORY_SERIES as usize);
+        // pol-lint: allow(L006, "len capped to MAX_HISTORY_SERIES above")
+        put_u32(out, take as u32);
+        for (n, v) in s.series.iter().take(take) {
+            let name = history_name(n);
+            // pol-lint: allow(L006, "name truncated to MAX_SERIES_NAME above")
+            put_u16(out, name.len() as u16);
+            out.extend_from_slice(name.as_bytes());
+            put_u64(out, *v);
+        }
+    }
+}
+
+/// Decode a metrics-history payload. Every count is validated against
+/// its cap and the bytes actually present before the corresponding
+/// allocation — the cap-before-allocate discipline of every other op.
+pub fn decode_history(
+    payload: &[u8],
+) -> Result<Vec<crate::obs::SeriesSnapshot>, FrameError> {
+    let mut cur = Cur::new(payload);
+    let nsnaps = cur.take_u32()?;
+    if nsnaps > MAX_HISTORY_SNAPSHOTS {
+        return Err(FrameError::OverCap("history snapshot count"));
+    }
+    if (nsnaps as usize) * HIST_SNAP_HEAD > cur.remaining() {
+        return Err(FrameError::Truncated);
+    }
+    let mut snaps = Vec::with_capacity(nsnaps as usize);
+    for _ in 0..nsnaps {
+        let tick = cur.take_u64()?;
+        let uptime_ms = cur.take_u64()?;
+        let nseries = cur.take_u32()?;
+        if nseries > MAX_HISTORY_SERIES {
+            return Err(FrameError::OverCap("history series count"));
+        }
+        if (nseries as usize) * HIST_ENTRY_HEAD > cur.remaining() {
+            return Err(FrameError::Truncated);
+        }
+        let mut series = Vec::with_capacity(nseries as usize);
+        for _ in 0..nseries {
+            let nlen = cur.take_u16()?;
+            if u32::from(nlen) > MAX_SERIES_NAME {
+                return Err(FrameError::OverCap("history series name"));
+            }
+            let name = std::str::from_utf8(cur.take(nlen as usize)?)
+                .map_err(|_| {
+                    FrameError::BadPayload("series name is not UTF-8")
+                })?
+                .to_string();
+            let value = cur.take_u64()?;
+            series.push((name, value));
+        }
+        snaps.push(crate::obs::SeriesSnapshot { tick, uptime_ms, series });
+    }
+    cur.finish()?;
+    Ok(snaps)
+}
+
 /// Decode a model-list payload.
 pub fn decode_models(payload: &[u8]) -> Result<Vec<ModelEntry>, FrameError> {
     let mut cur = Cur::new(payload);
@@ -1276,11 +1416,160 @@ mod tests {
             Op::Ping,
             Op::Shutdown,
             Op::MetricsDump,
+            Op::MetricsHistory,
         ] {
             assert_eq!(Op::from_u8(op as u8), Some(op));
         }
         assert_eq!(Op::from_u8(0), None);
         assert_eq!(Op::from_u8(200), None);
+    }
+
+    fn hist_snap(
+        tick: u64,
+        uptime_ms: u64,
+        series: &[(&str, u64)],
+    ) -> crate::obs::SeriesSnapshot {
+        crate::obs::SeriesSnapshot {
+            tick,
+            uptime_ms,
+            series: series
+                .iter()
+                .map(|&(n, v)| (n.to_string(), v))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn history_payload_round_trips() {
+        let snaps = vec![
+            hist_snap(3, 1_000, &[("a_total", 5), ("b{l=\"x\"}", 1)]),
+            hist_snap(4, 2_000, &[("a_total", 9)]),
+            hist_snap(5, 3_000, &[]),
+        ];
+        let mut payload = Vec::new();
+        put_history(&mut payload, &snaps);
+        assert_eq!(decode_history(&payload).unwrap(), snaps);
+        // empty history is well-formed
+        let mut payload = Vec::new();
+        put_history(&mut payload, &[]);
+        assert!(decode_history(&payload).unwrap().is_empty());
+    }
+
+    #[test]
+    fn history_encode_keeps_newest_under_caps() {
+        // more snapshots than the cap: the oldest fall off
+        let many: Vec<_> = (0..2 * MAX_HISTORY_SNAPSHOTS as u64)
+            .map(|i| hist_snap(i, i * 10, &[("a", i)]))
+            .collect();
+        let mut payload = Vec::new();
+        put_history(&mut payload, &many);
+        let back = decode_history(&payload).unwrap();
+        assert_eq!(back.len(), MAX_HISTORY_SNAPSHOTS as usize);
+        assert_eq!(
+            back.first().unwrap().tick,
+            MAX_HISTORY_SNAPSHOTS as u64
+        );
+        assert_eq!(
+            back.last().unwrap().tick,
+            2 * MAX_HISTORY_SNAPSHOTS as u64 - 1
+        );
+        // an oversized name truncates but the payload still decodes
+        let long = "n".repeat(2 * MAX_SERIES_NAME as usize);
+        let snaps = vec![hist_snap(0, 0, &[(long.as_str(), 7)])];
+        let mut payload = Vec::new();
+        put_history(&mut payload, &snaps);
+        let back = decode_history(&payload).unwrap();
+        assert_eq!(
+            back[0].series[0].0.len(),
+            MAX_SERIES_NAME as usize
+        );
+        assert_eq!(back[0].series[0].1, 7);
+    }
+
+    #[test]
+    fn history_truncation_at_every_boundary_errors_cleanly() {
+        let snaps = vec![
+            hist_snap(1, 500, &[("a_total", 5), ("b_total", 6)]),
+            hist_snap(2, 900, &[("a_total", 8)]),
+        ];
+        let mut payload = Vec::new();
+        put_history(&mut payload, &snaps);
+        for cut in 0..payload.len() {
+            assert!(
+                decode_history(&payload[..cut]).is_err(),
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn history_hostile_counts_rejected_before_allocation() {
+        // snapshot count over cap
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::OverCap("history snapshot count"))
+        ));
+        // plausible snapshot count, no bytes behind it
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 64);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::Truncated)
+        ));
+        // series count over cap inside an otherwise valid snapshot
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, u32::MAX);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::OverCap("history series count"))
+        ));
+        // lying series count
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, 1_024);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::Truncated)
+        ));
+        // name length over cap
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, 1);
+        put_u16(&mut payload, u16::MAX);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::OverCap("history series name"))
+        ));
+        // non-UTF-8 name
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, 1);
+        put_u16(&mut payload, 2);
+        payload.extend_from_slice(&[0xFF, 0xFE]);
+        put_u64(&mut payload, 0);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::BadPayload(_))
+        ));
+        // trailing bytes after a valid payload
+        let mut payload = Vec::new();
+        put_history(&mut payload, &[hist_snap(0, 0, &[])]);
+        payload.push(0);
+        assert!(matches!(
+            decode_history(&payload),
+            Err(FrameError::BadPayload(_))
+        ));
     }
 
     #[test]

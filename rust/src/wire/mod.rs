@@ -17,7 +17,7 @@
 //!   | 0      | 4    | len      | body bytes; 24 ≤ len ≤ 4 MiB        |
 //!   | 4      | 4    | magic    | `POLW`                              |
 //!   | 8      | 2    | version  | protocol version (1)                |
-//!   | 10     | 1    | op       | Predict, PredictBatch, Stats, ListModels, Ping, Shutdown, MetricsDump |
+//!   | 10     | 1    | op       | Predict, PredictBatch, Stats, ListModels, Ping, Shutdown, MetricsDump, MetricsHistory |
 //!   | 11     | 1    | status   | 0 = request/ok; error code on responses |
 //!   | 12     | 8    | req_id   | echoed in the response              |
 //!   | 20     | n    | payload  | op-specific                         |
@@ -39,7 +39,19 @@
 //!   [`WireConfig::obs`] attached, the `MetricsDump` op exports the
 //!   whole process's metrics registry in the `# pol-metrics v1` text
 //!   format (see [`crate::obs`]) — what `pol top`/`pol metrics`
-//!   scrape.
+//!   scrape — and the shared dispatch records per-phase request
+//!   timing (`pol_wire_phase_ns{phase,op}`, see [`crate::obs::span`])
+//!   for both backends from the one instrumentation point. The
+//!   `MetricsHistory` op returns the server's own bounded ring of
+//!   periodic registry snapshots (`history_every`/`history_len` in
+//!   [`WireConfig`]; see [`crate::obs::series`]), payload layout
+//!   `u32 nsnaps` then per snapshot
+//!   `u64 tick | u64 uptime_ms | u32 nseries` followed by `nseries` ×
+//!   (`u16 name_len | name | u64 value`) — every count checked against
+//!   a cap *before* any allocation. With [`WireConfig::flight_path`]
+//!   set, shutdown serializes the trace tail + snapshot history +
+//!   config digest into a versioned `.poltrace` flight record
+//!   ([`crate::obs::flight`]), readable offline by `pol trace FILE`.
 //! * [`poll`] + [`conn`] — the readiness-driven backend
 //!   ([`IoModel::Poll`]): one event loop multiplexing every
 //!   connection over nonblocking sockets, with per-connection

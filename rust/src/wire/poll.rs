@@ -218,7 +218,7 @@ impl PollServer {
         let mut shed_frame = Vec::new();
         // writing to a Vec cannot fail
         let _ = out.finish_to(&mut shed_frame);
-        let ctx = HandlerCtx::new(&shared.registry);
+        let ctx = HandlerCtx::new(&shared);
         PollServer {
             shared,
             listener,
@@ -498,7 +498,7 @@ mod tests {
     use std::sync::atomic::{AtomicBool, AtomicU64};
     use std::sync::Mutex;
 
-    use crate::obs::HistogramSnapshot;
+    use crate::obs::{HistogramSnapshot, SeriesRing};
     use crate::serve::ModelRegistry;
 
     fn test_shared(local_addr: std::net::SocketAddr) -> Arc<Shared> {
@@ -521,6 +521,9 @@ mod tests {
             per_model: Mutex::new(std::collections::BTreeMap::new()),
             stats_flush_frames: 64,
             obs: None,
+            history: Arc::new(SeriesRing::new(4)),
+            config_digest: 0,
+            flight_path: None,
         })
     }
 

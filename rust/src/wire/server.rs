@@ -50,20 +50,25 @@
 
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::LockExt;
-use crate::obs::{Exposition, HistogramSnapshot, Obs};
+use crate::obs::{
+    names, Exposition, FlightRecord, HistogramSnapshot, Obs, Phase,
+    PhaseSpans, SeriesRing, DEFAULT_SERIES_CAPACITY,
+};
 use crate::serve::registry::{ModelCache, ModelRegistry};
 use crate::serve::server::ModelStats;
 use crate::wire::frame::{
-    decode_predict_request, put_models, put_predict_response, put_stats,
-    read_frame, BatchScratch, FrameBuf, FrameError, FrameWriter, ModelEntry,
-    ModelStatsReport, Op, StatsReport, MAX_PING, STATUS_BAD_FRAME,
-    STATUS_FORBIDDEN, STATUS_OK, STATUS_SHUTTING_DOWN, STATUS_TOO_LARGE,
-    STATUS_UNKNOWN_MODEL, STATUS_UNKNOWN_OP,
+    decode_predict_request, put_history, put_models, put_predict_response,
+    put_stats, read_frame, BatchScratch, FrameBuf, FrameError, FrameWriter,
+    ModelEntry, ModelStatsReport, Op, StatsReport, MAX_HISTORY_SNAPSHOTS,
+    MAX_PING, STATUS_BAD_FRAME, STATUS_FORBIDDEN, STATUS_OK,
+    STATUS_SHUTTING_DOWN, STATUS_TOO_LARGE, STATUS_UNKNOWN_MODEL,
+    STATUS_UNKNOWN_OP,
 };
 
 /// Frames a draining handler still answers before closing its
@@ -162,6 +167,21 @@ pub struct WireConfig {
     /// folded into every `MetricsDump` response next to the wire's own
     /// counters (see [`crate::obs`] for the series table).
     pub obs: Option<Arc<Obs>>,
+    /// Cadence of the in-server metrics-history sampler: every period
+    /// a sampler thread snapshots the whole rendered registry into a
+    /// bounded [`SeriesRing`], served back by the
+    /// [`Op::MetricsHistory`] admin op (rates/trends become a
+    /// server-side fact). `None` disables sampling (the history op
+    /// then answers an empty ring).
+    pub history_every: Option<Duration>,
+    /// Snapshots the history ring retains (oldest overwritten first).
+    /// Clamped to ≥ 1.
+    pub history_len: usize,
+    /// Write a `.poltrace` flight record (trace-ring tail + last-K
+    /// history snapshots + [`WireConfig::digest`]) here when the
+    /// server shuts down — graceful or drop-on-error alike. `None`
+    /// disables the flight recorder.
+    pub flight_path: Option<PathBuf>,
 }
 
 /// Default for [`WireConfig::stats_flush_frames`].
@@ -179,7 +199,34 @@ impl Default for WireConfig {
             idle_timeout: Some(Duration::from_secs(300)),
             stats_flush_frames: DEFAULT_STATS_FLUSH_FRAMES,
             obs: None,
+            history_every: Some(Duration::from_secs(1)),
+            history_len: DEFAULT_SERIES_CAPACITY,
+            flight_path: None,
         }
+    }
+}
+
+impl WireConfig {
+    /// FNV-1a digest over the canonical text of this config — stamped
+    /// into flight records so a post-mortem knows what the server
+    /// *was* without trusting ambient state.
+    pub fn digest(&self) -> u64 {
+        let text = format!(
+            "io_model={} handlers={} max_conns={} frame_budget={} \
+             poll_ms={} allow_remote_shutdown={} idle_timeout_ms={} \
+             stats_flush_frames={} history_every_ms={} history_len={}",
+            self.io_model,
+            self.handlers,
+            self.max_conns,
+            self.frame_budget,
+            self.poll.as_millis(),
+            self.allow_remote_shutdown,
+            self.idle_timeout.map_or(0, |t| t.as_millis()),
+            self.stats_flush_frames,
+            self.history_every.map_or(0, |t| t.as_millis()),
+            self.history_len,
+        );
+        crate::hashing::fnv1a64(text.as_bytes())
     }
 }
 
@@ -209,6 +256,13 @@ pub(crate) struct Shared {
     pub(crate) per_model: Mutex<std::collections::BTreeMap<String, ModelStats>>,
     pub(crate) stats_flush_frames: u32,
     pub(crate) obs: Option<Arc<Obs>>,
+    /// The metrics-history ring the sampler fills and the
+    /// [`Op::MetricsHistory`] op serves (empty when sampling is off).
+    pub(crate) history: Arc<SeriesRing>,
+    /// [`WireConfig::digest`], stamped into flight records.
+    pub(crate) config_digest: u64,
+    /// Where the shutdown flight record goes (`None` = disabled).
+    pub(crate) flight_path: Option<PathBuf>,
 }
 
 impl Shared {
@@ -302,6 +356,8 @@ impl Backend {
 pub struct WireServer {
     shared: Arc<Shared>,
     backend: Backend,
+    sampler: Option<std::thread::JoinHandle<()>>,
+    finalized: bool,
 }
 
 impl WireServer {
@@ -335,7 +391,34 @@ impl WireServer {
             per_model: Mutex::new(std::collections::BTreeMap::new()),
             stats_flush_frames: cfg.stats_flush_frames.max(1),
             obs: cfg.obs.clone(),
+            history: Arc::new(SeriesRing::new(cfg.history_len.max(1))),
+            config_digest: cfg.digest(),
+            flight_path: cfg.flight_path.clone(),
         });
+        // the history sampler: parse our own exposition each cadence
+        // and push the raw totals into the bounded ring — rates are
+        // derived at read time, never stored
+        let mut sampler = None;
+        if let Some(period) = cfg.history_every {
+            let period = period.max(Duration::from_millis(1));
+            let s = Arc::clone(&shared);
+            sampler = Some(
+                std::thread::Builder::new()
+                    .name("wire-sampler".into())
+                    .spawn(move || {
+                        let step =
+                            Duration::from_millis(25).min(period);
+                        let mut next = Instant::now() + period;
+                        while !s.stop.load(Ordering::Acquire) {
+                            if Instant::now() >= next {
+                                next = Instant::now() + period;
+                                sample_history(&s);
+                            }
+                            std::thread::sleep(step);
+                        }
+                    })?,
+            );
+        }
         if cfg.io_model == IoModel::Poll {
             let params = crate::wire::poll::PollParams {
                 poll: cfg.poll,
@@ -357,6 +440,8 @@ impl WireServer {
             return Ok(WireServer {
                 shared,
                 backend: Backend::Poll { looper: Some(looper) },
+                sampler,
+                finalized: false,
             });
         }
         let handlers_n = cfg.handlers.max(1);
@@ -425,6 +510,8 @@ impl WireServer {
         Ok(WireServer {
             shared,
             backend: Backend::Threads { acceptor: Some(acceptor), handlers },
+            sampler,
+            finalized: false,
         })
     }
 
@@ -454,22 +541,75 @@ impl WireServer {
         }
     }
 
+    /// The metrics-history ring (what [`Op::MetricsHistory`] serves).
+    pub fn history(&self) -> Arc<SeriesRing> {
+        Arc::clone(&self.shared.history)
+    }
+
     /// Stop accepting, drain in-flight connections (each answers at
-    /// most [`DRAIN_FRAMES`] more frames), join every thread, and
-    /// report final stats.
+    /// most [`DRAIN_FRAMES`] more frames), join every thread, write
+    /// the flight record (when configured), and report final stats.
     pub fn shutdown(mut self) -> StatsReport {
+        self.finalize();
+        self.shared.stats()
+    }
+
+    /// The one stop path both [`WireServer::shutdown`] and drop run:
+    /// stop, join every thread, then write the flight record exactly
+    /// once — an errored server that merely drops still leaves a
+    /// post-mortem behind.
+    fn finalize(&mut self) {
+        if self.finalized {
+            return;
+        }
+        self.finalized = true;
         self.shared.trigger_stop();
         self.backend.join();
-        self.shared.stats()
+        if let Some(s) = self.sampler.take() {
+            let _ = s.join();
+        }
+        write_flight_record(&self.shared);
     }
 }
 
 impl Drop for WireServer {
     fn drop(&mut self) {
-        // dropping without shutdown() still stops the threads
-        self.shared.trigger_stop();
-        self.backend.join();
+        // dropping without shutdown() still stops the threads and
+        // still writes the flight record
+        self.finalize();
     }
+}
+
+/// One sampler tick: render the same exposition `MetricsDump` serves,
+/// parse it back (the render→parse inverse is test-pinned), and push
+/// the raw totals into the ring stamped with server uptime.
+fn sample_history(shared: &Shared) {
+    if let Some(series) =
+        crate::obs::parse_exposition(&render_metrics(shared))
+    {
+        let uptime_ms = shared.started.elapsed().as_millis() as u64;
+        shared.history.push(uptime_ms, series);
+    }
+}
+
+/// Serialize the flight record at shutdown: trace-ring tail, the
+/// history ring's newest snapshots, and the config digest, written
+/// atomically to [`Shared::flight_path`]. Failures are swallowed — a
+/// post-mortem writer must never turn shutdown into a crash.
+fn write_flight_record(shared: &Shared) {
+    let Some(path) = &shared.flight_path else { return };
+    let events = match &shared.obs {
+        Some(o) => o
+            .trace
+            .tail(crate::obs::trace::MAX_TRAILER_EVENTS as usize),
+        None => Vec::new(),
+    };
+    let rec = FlightRecord {
+        config_digest: shared.config_digest,
+        events,
+        snapshots: shared.history.tail(MAX_HISTORY_SNAPSHOTS as usize),
+    };
+    let _ = crate::obs::write_flight(path, &rec);
 }
 
 /// Send one frame (sealing the checksum), flush it, and account it.
@@ -542,80 +682,91 @@ pub(crate) fn flush_stats(
 fn render_metrics(shared: &Shared) -> String {
     let mut exp = Exposition::new();
     exp.point(
-        "pol_wire_bytes_in_total",
+        names::WIRE_BYTES_IN_TOTAL,
         &[],
         shared.bytes_in.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_bytes_out_total",
+        names::WIRE_BYTES_OUT_TOTAL,
         &[],
         shared.bytes_out.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_frames_in_total",
+        names::WIRE_FRAMES_IN_TOTAL,
         &[],
         shared.frames_in.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_frames_out_total",
+        names::WIRE_FRAMES_OUT_TOTAL,
         &[],
         shared.frames_out.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_decode_errors_total",
+        names::WIRE_DECODE_ERRORS_TOTAL,
         &[],
         shared.decode_errors.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_connections_total",
+        names::WIRE_CONNECTIONS_TOTAL,
         &[],
         shared.connections.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_active_connections",
+        names::WIRE_ACTIVE_CONNECTIONS,
         &[],
         shared.active.load(Ordering::Relaxed),
     );
     // event-loop series (the threads backend reports zeros for the
     // loop-only counters; conns_active is live on both)
     exp.point(
-        "pol_wire_conns_active",
+        names::WIRE_CONNS_ACTIVE,
         &[],
         shared.active.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_conns_shed",
+        names::WIRE_CONNS_SHED,
         &[],
         shared.shed.load(Ordering::Relaxed),
     );
     exp.point(
-        "pol_wire_wakeups",
+        names::WIRE_WAKEUPS,
         &[],
         shared.wakeups.load(Ordering::Relaxed),
     );
     {
         // per-wakeup frames-answered histogram; valid after any merge
         let wf = shared.wakeup_frames.lock().recover_poisoned();
-        exp.histogram("pol_wire_wakeup_frames", &[], &wf);
+        exp.histogram(names::WIRE_WAKEUP_FRAMES, &[], &wf);
     }
-    exp.point("pol_serve_registry_version", &[], shared.registry.version());
-    exp.point("pol_serve_models", &[], shared.registry.len() as u64);
+    exp.point(
+        names::SERVE_REGISTRY_VERSION,
+        &[],
+        shared.registry.version(),
+    );
+    exp.point(names::SERVE_MODELS, &[], shared.registry.len() as u64);
     {
         // merged monotonic counters; valid after any partial merge
         let per_model = shared.per_model.lock().recover_poisoned();
         for (name, m) in per_model.iter() {
             let labels = [("model", name.as_str())];
-            exp.point("pol_serve_requests_total", &labels, m.requests);
-            exp.point("pol_serve_predictions_total", &labels, m.predictions);
-            exp.point("pol_serve_staleness_max", &labels, m.max_staleness);
+            exp.point(names::SERVE_REQUESTS_TOTAL, &labels, m.requests);
+            exp.point(
+                names::SERVE_PREDICTIONS_TOTAL,
+                &labels,
+                m.predictions,
+            );
+            exp.point(names::SERVE_STALENESS_MAX, &labels, m.max_staleness);
             exp.histogram(
-                "pol_serve_latency_ns",
+                names::SERVE_LATENCY_NS,
                 &labels,
                 &HistogramSnapshot::from_latency(&m.latency),
             );
         }
     }
     if let Some(o) = &shared.obs {
+        // ring-loss visibility rides the wire render, not Obs::new()
+        // registration — the golden exposition bytes stay pinned
+        exp.point(names::TRACE_DROPPED, &[], o.trace.dropped());
         o.metrics.render_into(&mut exp);
     }
     exp.render()
@@ -630,17 +781,56 @@ pub(crate) struct HandlerCtx {
     cache: ModelCache,
     scratch: BatchScratch,
     preds: Vec<f64>,
+    /// Phase-attributed span recorder — live when [`Shared::obs`] is
+    /// attached, a no-op (zero extra clock reads) otherwise. Living
+    /// here means both backends instrument through the one dispatch
+    /// point and cannot drift.
+    spans: PhaseSpans,
 }
 
 impl HandlerCtx {
-    /// Fresh scoring state over `registry`.
-    pub(crate) fn new(registry: &ModelRegistry) -> HandlerCtx {
+    /// Fresh scoring state over `shared`'s registry, recording phase
+    /// spans iff `shared` carries an [`Obs`] handle.
+    pub(crate) fn new(shared: &Shared) -> HandlerCtx {
         HandlerCtx {
-            cache: ModelCache::new(registry),
+            cache: ModelCache::new(&shared.registry),
             scratch: BatchScratch::default(),
             preds: Vec::new(),
+            spans: PhaseSpans::from_obs(shared.obs.as_ref()),
         }
     }
+}
+
+/// The `op` label value for a phase span.
+fn op_label(op: Op) -> &'static str {
+    match op {
+        Op::Predict => "predict",
+        Op::PredictBatch => "predict_batch",
+        Op::Stats => "stats",
+        Op::ListModels => "list_models",
+        Op::Ping => "ping",
+        Op::Shutdown => "shutdown",
+        Op::MetricsDump => "metrics_dump",
+        Op::MetricsHistory => "metrics_history",
+    }
+}
+
+/// [`send_frame`] with the `write_flush` phase recorded around it
+/// (skipping the clock reads entirely when spans are disabled).
+fn send_frame_timed(
+    shared: &Shared,
+    out: &mut FrameWriter,
+    w: &mut impl Write,
+    spans: &mut PhaseSpans,
+    op: &'static str,
+) -> io::Result<()> {
+    if !spans.enabled() {
+        return send_frame(shared, out, w);
+    }
+    let t = Instant::now();
+    let sent = send_frame(shared, out, w);
+    spans.record(op, Phase::WriteFlush, t.elapsed());
+    sent
 }
 
 /// Answer one decoded frame — the single op dispatch both backends
@@ -672,9 +862,24 @@ pub(crate) fn answer_frame(
             &format!("unknown op {op}"),
         ),
         Some(kind @ (Op::Predict | Op::PredictBatch)) => {
+            let lbl = op_label(kind);
             match decode_predict_request(kind, frame.payload, &mut ctx.scratch)
             {
                 Ok(name) => {
+                    // span marks are taken only when recording is live,
+                    // so un-instrumented serving pays no extra clock
+                    // reads; recording never touches the response bytes
+                    let timed = ctx.spans.enabled();
+                    let mut mark = enqueued;
+                    if timed {
+                        let now = Instant::now();
+                        ctx.spans.record(
+                            lbl,
+                            Phase::ReadDecode,
+                            now.duration_since(mark),
+                        );
+                        mark = now;
+                    }
                     match ctx.cache.resolve(&shared.registry, name) {
                         Some((snap_reader, pscratch)) => {
                             let snap = Arc::clone(snap_reader.current());
@@ -684,6 +889,15 @@ pub(crate) fn answer_frame(
                             }
                             let staleness =
                                 snap_reader.cell().staleness_of(&snap);
+                            if timed {
+                                let now = Instant::now();
+                                ctx.spans.record(
+                                    lbl,
+                                    Phase::Predict,
+                                    now.duration_since(mark),
+                                );
+                                mark = now;
+                            }
                             out.start(op, STATUS_OK, req_id);
                             put_predict_response(
                                 out.payload(),
@@ -691,7 +905,20 @@ pub(crate) fn answer_frame(
                                 snap.version,
                                 staleness,
                             );
-                            let sent = send_frame(shared, out, w);
+                            if timed {
+                                ctx.spans.record(
+                                    lbl,
+                                    Phase::Encode,
+                                    mark.elapsed(),
+                                );
+                            }
+                            let sent = send_frame_timed(
+                                shared,
+                                out,
+                                w,
+                                &mut ctx.spans,
+                                lbl,
+                            );
                             if sent.is_ok() {
                                 // private buffer: no lock, no
                                 // allocation once the name is known
@@ -749,9 +976,13 @@ pub(crate) fn answer_frame(
             // always sees itself
             flush_stats(shared, local_stats);
             *unflushed = 0;
+            let t = ctx.spans.enabled().then(Instant::now);
             out.start(op, STATUS_OK, req_id);
             put_stats(out.payload(), &shared.stats());
-            send_frame(shared, out, w)
+            if let Some(t) = t {
+                ctx.spans.record("stats", Phase::Encode, t.elapsed());
+            }
+            send_frame_timed(shared, out, w, &mut ctx.spans, "stats")
         }
         Some(Op::MetricsDump) => {
             if !frame.payload.is_empty() {
@@ -770,13 +1001,63 @@ pub(crate) fn answer_frame(
                 // connection's numbers in first
                 flush_stats(shared, local_stats);
                 *unflushed = 0;
+                let t = ctx.spans.enabled().then(Instant::now);
                 out.start(op, STATUS_OK, req_id);
                 out.payload()
                     .extend_from_slice(render_metrics(shared).as_bytes());
-                send_frame(shared, out, w)
+                if let Some(t) = t {
+                    ctx.spans.record(
+                        "metrics_dump",
+                        Phase::Encode,
+                        t.elapsed(),
+                    );
+                }
+                send_frame_timed(
+                    shared,
+                    out,
+                    w,
+                    &mut ctx.spans,
+                    "metrics_dump",
+                )
+            }
+        }
+        Some(Op::MetricsHistory) => {
+            if !frame.payload.is_empty() {
+                shared.decode_errors.fetch_add(1, Ordering::Relaxed);
+                send_error(
+                    shared,
+                    out,
+                    w,
+                    op,
+                    STATUS_BAD_FRAME,
+                    req_id,
+                    "metrics history request carries a payload",
+                )
+            } else {
+                let t = ctx.spans.enabled().then(Instant::now);
+                out.start(op, STATUS_OK, req_id);
+                put_history(
+                    out.payload(),
+                    &shared.history.tail(MAX_HISTORY_SNAPSHOTS as usize),
+                );
+                if let Some(t) = t {
+                    ctx.spans.record(
+                        "metrics_history",
+                        Phase::Encode,
+                        t.elapsed(),
+                    );
+                }
+                send_frame_timed(
+                    shared,
+                    out,
+                    w,
+                    &mut ctx.spans,
+                    "metrics_history",
+                )
             }
         }
         Some(Op::ListModels) => {
+            let t = ctx.spans.enabled().then(Instant::now);
             let mut models = Vec::new();
             for name in shared.registry.names() {
                 let Some(cell) = shared.registry.get(&name) else {
@@ -793,7 +1074,10 @@ pub(crate) fn answer_frame(
             }
             out.start(op, STATUS_OK, req_id);
             put_models(out.payload(), &models);
-            send_frame(shared, out, w)
+            if let Some(t) = t {
+                ctx.spans.record("list_models", Phase::Encode, t.elapsed());
+            }
+            send_frame_timed(shared, out, w, &mut ctx.spans, "list_models")
         }
         Some(Op::Ping) => {
             if frame.payload.len() > MAX_PING {
@@ -810,9 +1094,13 @@ pub(crate) fn answer_frame(
                     ),
                 )
             } else {
+                let t = ctx.spans.enabled().then(Instant::now);
                 out.start(op, STATUS_OK, req_id);
                 out.payload().extend_from_slice(frame.payload);
-                send_frame(shared, out, w)
+                if let Some(t) = t {
+                    ctx.spans.record("ping", Phase::Encode, t.elapsed());
+                }
+                send_frame_timed(shared, out, w, &mut ctx.spans, "ping")
             }
         }
         Some(Op::Shutdown) => {
@@ -878,7 +1166,7 @@ fn handle_conn(
     let mut writer = BufWriter::with_capacity(1 << 16, write_half);
     let mut buf = FrameBuf::new();
     let mut out = FrameWriter::new();
-    let mut ctx = HandlerCtx::new(&shared.registry);
+    let mut ctx = HandlerCtx::new(shared);
     let mut local_stats: std::collections::HashMap<String, ModelStats> =
         std::collections::HashMap::new();
     let mut unflushed = 0u32;

@@ -931,3 +931,157 @@ fn config_file_drives_train() {
     assert!(out.status.success());
     std::fs::remove_file(&path).ok();
 }
+
+#[test]
+fn metrics_watch_without_connect_is_a_usage_error() {
+    // --watch repeats a network scrape; without --connect there is
+    // nothing to rescrape and the command must say so, not guess
+    let out = pol()
+        .args(["metrics", "--watch", "1"])
+        .output()
+        .expect("run pol metrics --watch");
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--watch"), "{err}");
+    assert!(err.contains("--connect"), "{err}");
+}
+
+#[test]
+fn trace_usage_and_missing_file_errors() {
+    // no FILE → usage error
+    let out = pol().args(["trace"]).output().expect("run pol trace");
+    assert_eq!(out.status.code(), Some(2));
+    // unknown flag → usage error
+    let out = pol()
+        .args(["trace", "--bogus"])
+        .output()
+        .expect("run pol trace");
+    assert_eq!(out.status.code(), Some(2));
+    // two FILEs → usage error
+    let out = pol()
+        .args(["trace", "a.poltrace", "b.poltrace"])
+        .output()
+        .expect("run pol trace");
+    assert_eq!(out.status.code(), Some(2));
+    // a path that does not exist → runtime error, exit 1
+    let missing = std::env::temp_dir().join("pol_cli_no_such.poltrace");
+    std::fs::remove_file(&missing).ok();
+    let out = pol()
+        .args(["trace", missing.to_str().unwrap()])
+        .output()
+        .expect("run pol trace");
+    assert_eq!(out.status.code(), Some(1));
+    // garbage bytes → decode error, exit 1, never a panic
+    let garbage = std::env::temp_dir().join("pol_cli_garbage.poltrace");
+    std::fs::write(&garbage, b"not a flight record").unwrap();
+    let out = pol()
+        .args(["trace", garbage.to_str().unwrap()])
+        .output()
+        .expect("run pol trace");
+    assert_eq!(out.status.code(), Some(1));
+    std::fs::remove_file(&garbage).ok();
+}
+
+#[test]
+fn serve_listen_observability_end_to_end() {
+    let dir = std::env::temp_dir().join("pol_cli_obs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("obs.polz");
+    let flight = dir.join("obs.poltrace");
+    std::fs::remove_file(&flight).ok();
+
+    let out = pol()
+        .args([
+            "train", "--data", "rcv", "--instances", "1500", "--rule",
+            "local", "--workers", "2", "--loss", "logistic", "--seed",
+            "11", "--checkpoint", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run pol");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    // --seconds is the safety net; the test shuts the server down with
+    // a wire Shutdown frame, which also triggers the flight recorder
+    let mut server = pol()
+        .args([
+            "serve", "--model", model.to_str().unwrap(), "--listen",
+            addr.as_str(), "--threads", "2", "--seconds", "60",
+            "--flight-record", flight.to_str().unwrap(),
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn pol serve --listen");
+
+    let mut client = None;
+    for _ in 0..200 {
+        match pol::wire::WireClient::connect(addr.as_str()) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    }
+    let mut client = client.expect("server never came up");
+
+    // traffic for the server-side sampler to rate over
+    for i in 0..32u32 {
+        let r = client.predict_for("obs", &[(i, 1.0)]).expect("predict");
+        assert!(r.preds[0].is_finite());
+    }
+
+    // `pol top --snapshot` renders ONE frame whose rates come from the
+    // server's own metrics-history ring (1s sampler cadence: poll until
+    // two snapshots exist and the whole-window rate renders)
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let mut frame = None;
+    while std::time::Instant::now() < deadline {
+        let out = pol()
+            .args(["top", "--connect", addr.as_str(), "--snapshot"])
+            .output()
+            .expect("run pol top --snapshot");
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        if out.status.success() && text.contains("frames_in_per_s=") {
+            frame = Some(text);
+            break;
+        }
+        // keep frames flowing so the window is not idle
+        let _ = client.predict_for("obs", &[(1, 1.0)]);
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    let frame =
+        frame.expect("top --snapshot never rendered a server-side rate");
+    assert!(frame.contains(&format!("pol top — {addr}")), "{frame}");
+    assert!(frame.contains("qps="), "{frame}");
+    assert!(frame.contains("requests="), "{frame}");
+
+    // a wire Shutdown ends the server; shutdown writes the flight record
+    client.shutdown_server().expect("shutdown op");
+    let out = server.wait_with_output().expect("server exit");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("flight record will be written"), "{err}");
+    assert!(flight.exists(), "flight record not written at shutdown");
+
+    // `pol trace` inspects it post-mortem: version header, the
+    // lifecycle events serve_listen recorded, and history snapshots
+    // with the same window-rate math `pol top` applies live
+    let out = pol()
+        .args(["trace", flight.to_str().unwrap()])
+        .output()
+        .expect("run pol trace");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(text.contains("flight record v1: config digest=0x"), "{text}");
+    assert!(text.contains("wire server listening"), "{text}");
+    assert!(text.contains("wire Shutdown frame"), "{text}");
+    assert!(text.contains("history ("), "{text}");
+    assert!(text.contains("frames_in over window:"), "{text}");
+
+    std::fs::remove_file(&model).ok();
+    std::fs::remove_file(&flight).ok();
+}

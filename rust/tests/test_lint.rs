@@ -234,6 +234,35 @@ fn l007_attribute_tokens_and_test_code_do_not_trigger() {
     assert!(findings("serve/mod.rs", test_only).is_empty());
 }
 
+// ---- L008: series-name literals confined to obs/names.rs --------------
+
+#[test]
+fn l008_flags_series_name_literal_outside_names() {
+    let bad = "fn f(m: &M) {\n    m.counter(\"pol_x_total\").inc();\n}\n";
+    assert_eq!(findings("wire/server.rs", bad), vec![(Rule::L008, 2, 15)]);
+}
+
+#[test]
+fn l008_names_file_is_the_one_allowed_speller() {
+    let names = "pub const X: &str = \"pol_x_total\";\n";
+    assert!(findings("obs/names.rs", names).is_empty());
+}
+
+#[test]
+fn l008_comments_and_test_code_are_exempt() {
+    let comment = "// series: \"pol_x_total\" is rendered here\nfn f() {}\n";
+    assert!(findings("wire/server.rs", comment).is_empty());
+
+    let test_only = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        let d = std::env::temp_dir().join(\"pol_t\");\n        drop(d);\n    }\n}\n";
+    assert!(findings("serve/server.rs", test_only).is_empty());
+}
+
+#[test]
+fn l008_waiver_suppresses() {
+    let waived = "fn f(m: &M) {\n    // pol-lint: allow(L008, \"fixture\")\n    m.counter(\"pol_x_total\").inc();\n}\n";
+    assert!(findings("wire/server.rs", waived).is_empty());
+}
+
 // ---- multiple findings sort stably -----------------------------------
 
 #[test]

@@ -60,6 +60,71 @@ fn golden_exposition_bytes_are_pinned() {
     assert!(series.contains(&("lat_p99".into(), 100)));
 }
 
+/// The scrape side of the contract: a malformed exposition is a clean
+/// `None`, never a panic or a half-parsed table. Every line must be
+/// `name value` with a `u64` value; the header must come first and
+/// match exactly.
+#[test]
+fn hostile_expositions_parse_to_none() {
+    use pol::obs::parse_exposition;
+    let cases: &[&str] = &[
+        "",
+        "\n",
+        "# pol-metrics v2\nup 1\n",
+        "# pol-metrics v1 extra\nup 1\n",
+        "up 1\n# pol-metrics v1\n",
+        "# pol-metrics v1\nnospace\n",
+        "# pol-metrics v1\nup one\n",
+        "# pol-metrics v1\nup -1\n",
+        "# pol-metrics v1\nup 1.5\n",
+        "# pol-metrics v1\nup 18446744073709551616\n",
+        "# pol-metrics v1\nup \n",
+        "# pol-metrics v1\n up\n",
+    ];
+    for c in cases {
+        assert!(parse_exposition(c).is_none(), "accepted {c:?}");
+    }
+}
+
+/// Header-only and blank-padded expositions are valid (a server with
+/// nothing registered yet still scrapes cleanly).
+#[test]
+fn empty_and_blank_line_expositions_parse() {
+    use pol::obs::{parse_exposition, EXPOSITION_HEADER};
+    let header_only = format!("{EXPOSITION_HEADER}\n");
+    assert_eq!(parse_exposition(&header_only), Some(Vec::new()));
+    let with_blanks = format!("{EXPOSITION_HEADER}\n\nup 1\n\n");
+    assert_eq!(
+        parse_exposition(&with_blanks),
+        Some(vec![("up".to_string(), 1)])
+    );
+}
+
+/// render → parse → render is a fixpoint: re-rendering a parsed scrape
+/// reproduces the exposition byte-for-byte, so history snapshots and
+/// flight records can round-trip a registry without drift.
+#[test]
+fn render_parse_render_is_a_fixpoint() {
+    let obs = Obs::new();
+    let m = &obs.metrics;
+    m.counter("a_total").add(7);
+    m.counter_with("req_total", &[("model", "m"), ("op", "p")]).add(3);
+    m.gauge("depth").set(9);
+    let h = m.histogram_with("lat", &[("op", "x")]);
+    h.record(4);
+    h.record(400);
+
+    let first = m.render();
+    let series =
+        pol::obs::parse_exposition(&first).expect("parse own render");
+    let mut rebuilt = format!("{}\n", pol::obs::EXPOSITION_HEADER);
+    for (name, value) in &series {
+        rebuilt.push_str(&format!("{name} {value}\n"));
+    }
+    assert_eq!(rebuilt, first, "render → parse → render drifted");
+    assert_eq!(pol::obs::parse_exposition(&rebuilt), Some(series));
+}
+
 // ---- observed-τ exactness -------------------------------------------
 
 /// The paper's delay knob, measured: a coordinator configured with

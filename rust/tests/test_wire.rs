@@ -1116,3 +1116,228 @@ fn stats_flush_interval_is_configurable_and_disconnect_flushes() {
         server.shutdown();
     }
 }
+
+// ---- metrics history, phase spans, flight record --------------------
+
+/// The `MetricsHistory` op serves the in-server sampler's ring:
+/// snapshots carry strictly increasing ticks and nondecreasing
+/// uptime, the sampled totals include the wire counters, and rates
+/// are read-time math over any two snapshots — no client scrape state.
+#[test]
+fn metrics_history_rides_the_wire_on_both_backends() {
+    for io in backends() {
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+        );
+        let server = WireServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            WireConfig {
+                io_model: io,
+                history_every: Some(std::time::Duration::from_millis(20)),
+                history_len: 16,
+                ..Default::default()
+            },
+        )
+        .expect("bind");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
+        client.predict_for("m", &[(0, 1.0)]).expect("predict");
+
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let hist = loop {
+            let h = client.metrics_history().expect("history op");
+            if h.len() >= 2 {
+                break h;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "sampler stuck at {} snapshot(s) ({io})",
+                h.len()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        };
+        for pair in hist.windows(2) {
+            assert!(pair[0].tick < pair[1].tick, "ticks must increase");
+            assert!(pair[0].uptime_ms <= pair[1].uptime_ms);
+        }
+        let newest = hist.last().expect("newest snapshot");
+        assert!(
+            newest.sum("pol_wire_frames_in_total") >= 1,
+            "sampled totals miss the wire counters ({io})"
+        );
+        let oldest = hist.first().expect("oldest snapshot");
+        if newest.uptime_ms > oldest.uptime_ms {
+            let rate = pol::obs::rate_per_sec(
+                oldest,
+                newest,
+                "pol_wire_frames_in_total",
+            );
+            assert!(rate.is_some(), "window rate must compute ({io})");
+        }
+
+        // with sampling disabled, the op answers an empty table (not
+        // an error): `pol top` can always probe for history
+        server.shutdown();
+        let server2 = WireServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            WireConfig {
+                io_model: io,
+                history_every: None,
+                ..Default::default()
+            },
+        )
+        .expect("bind without sampler");
+        let mut c2 =
+            WireClient::connect(server2.local_addr()).expect("connect");
+        assert!(c2.metrics_history().expect("empty history").is_empty());
+        server2.shutdown();
+    }
+}
+
+/// Attaching an `Obs` (which arms the request phase spans) must not
+/// change one response byte: instrumented and uninstrumented servers
+/// answer identically on both backends, both match the in-process
+/// reference, and the instrumented dump carries `pol_wire_phase_ns`
+/// series for the ops exercised.
+#[test]
+fn phase_spans_never_change_response_bytes() {
+    let ds = small_ds();
+    let tree = tree_coordinator(&ds, 2);
+    for io in backends() {
+        let cell = SnapshotCell::new(tree.snapshot());
+        let registry = ModelRegistry::with_model("m", Arc::clone(&cell));
+        let obs = pol::obs::Obs::new();
+        let plain = WireServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            WireConfig { io_model: io, ..Default::default() },
+        )
+        .expect("bind plain");
+        let timed = WireServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            WireConfig {
+                io_model: io,
+                obs: Some(Arc::clone(&obs)),
+                ..Default::default()
+            },
+        )
+        .expect("bind instrumented");
+        let mut c_plain =
+            WireClient::connect(plain.local_addr()).expect("connect plain");
+        let mut c_timed =
+            WireClient::connect(timed.local_addr()).expect("connect timed");
+
+        for inst in ds.iter().take(64) {
+            let a = c_plain.predict_for("m", &inst.features).expect("plain");
+            let b = c_timed.predict_for("m", &inst.features).expect("timed");
+            let r = reference(&cell, &inst.features);
+            assert_eq!(
+                a.preds[0].to_bits(),
+                b.preds[0].to_bits(),
+                "phase spans changed a response byte ({io})"
+            );
+            assert_eq!(b.preds[0].to_bits(), r.to_bits(), "timed≠ref ({io})");
+            assert_eq!(a.snapshot_version, b.snapshot_version);
+            assert_eq!(a.staleness, b.staleness);
+        }
+        let batch: Vec<Vec<SparseFeat>> =
+            ds.iter().take(32).map(|i| i.features.clone()).collect();
+        let a = c_plain.predict_batch_for("m", &batch).expect("plain batch");
+        let b = c_timed.predict_batch_for("m", &batch).expect("timed batch");
+        for (ya, yb) in a.preds.iter().zip(&b.preds) {
+            assert_eq!(ya.to_bits(), yb.to_bits(), "batch diverged ({io})");
+        }
+
+        // the spans actually recorded: per-op, per-phase histograms
+        let text = c_timed.metrics_dump().expect("dump");
+        for phase in ["read_decode", "predict", "encode", "write_flush"] {
+            assert!(
+                text.contains(&format!(
+                    "pol_wire_phase_ns_count{{phase=\"{phase}\",op=\"predict\"}}"
+                )),
+                "missing {phase} span ({io}):\n{text}"
+            );
+        }
+        // and the uninstrumented server recorded none
+        let plain_text = c_plain.metrics_dump().expect("plain dump");
+        assert!(
+            !plain_text.contains("pol_wire_phase_ns"),
+            "un-attached server must skip span clocks ({io})"
+        );
+        plain.shutdown();
+        timed.shutdown();
+    }
+}
+
+/// Shutdown with a configured flight path leaves a `.poltrace` behind:
+/// versioned, checksummed, holding the trace tail and the newest
+/// history snapshots, stamped with the config digest — and it decodes
+/// with the same codec `pol trace` uses.
+#[test]
+fn flight_record_written_at_shutdown_reads_back() {
+    let dir = std::env::temp_dir().join("pol_wire_flight");
+    std::fs::create_dir_all(&dir).unwrap();
+    for io in backends() {
+        let path = dir.join(format!("post_{io}.poltrace"));
+        let _ = std::fs::remove_file(&path);
+        let registry = ModelRegistry::with_model(
+            "m",
+            SnapshotCell::new(ModelSnapshot::central(vec![1.0; 8], 0, 0)),
+        );
+        let obs = pol::obs::Obs::new();
+        obs.trace.record(
+            pol::obs::TraceKind::WorkerJoin,
+            0,
+            "serving registry armed",
+        );
+        let cfg = WireConfig {
+            io_model: io,
+            obs: Some(Arc::clone(&obs)),
+            history_every: Some(std::time::Duration::from_millis(15)),
+            history_len: 8,
+            flight_path: Some(path.clone()),
+            ..Default::default()
+        };
+        let digest = cfg.digest();
+        let server =
+            WireServer::bind("127.0.0.1:0", Arc::clone(&registry), cfg)
+                .expect("bind");
+        let mut client =
+            WireClient::connect(server.local_addr()).expect("connect");
+        client.predict_for("m", &[(0, 1.0)]).expect("predict");
+        // let the sampler tick at least once
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while server.history().is_empty() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "sampler never ticked ({io})"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        drop(client);
+        server.shutdown();
+
+        let rec = pol::obs::read_flight(&path).expect("read flight record");
+        assert_eq!(rec.config_digest, digest, "config digest mismatch");
+        assert!(
+            rec.events
+                .iter()
+                .any(|e| e.detail == "serving registry armed"),
+            "trace tail missing ({io}): {:?}",
+            rec.events
+        );
+        assert!(!rec.snapshots.is_empty(), "history missing ({io})");
+        let last = rec.snapshots.last().expect("newest snapshot");
+        assert!(
+            last.sum("pol_wire_frames_in_total") >= 1,
+            "snapshots must hold sampled wire totals ({io})"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
